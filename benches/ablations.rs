@@ -1,0 +1,36 @@
+//! Bench: the §IV ablations — communication overhead (p_grad sweep),
+//! update conflicts (lock-up vs ignore), topology families, and the
+//! straggler comparison (async Alg. 2 vs sync DSGD vs server-worker in
+//! virtual time).
+
+use dasgd::experiments::{ablations, losses, straggler};
+
+fn main() {
+    let s = std::env::var("DASGD_BENCH_SCALE")
+        .ok()
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0.2);
+
+    println!("# §IV-B — communication overhead vs p_grad (scale {s})");
+    let rows = ablations::comm_overhead(s, 0).expect("comm");
+    ablations::comm_table(&rows).print();
+
+    println!("\n# §IV-C — update conflicts under distributed selection");
+    let rows = ablations::conflicts(s, 0).expect("conflicts");
+    ablations::conflict_table(&rows).print();
+
+    println!("\n# topology families");
+    let rows = ablations::topologies(s, 0).expect("topologies");
+    ablations::topology_table(&rows).print();
+
+    println!("\n# §II loss families — decentralized SVM + Lasso");
+    let rows = losses::run(s, 0).expect("losses");
+    losses::table(&rows).print();
+
+    println!("\n# stragglers — virtual-time comparison");
+    let rows = straggler::run(s, 0).expect("straggler");
+    straggler::table(&rows).print();
+    for note in straggler::check_shape(&rows) {
+        println!("  {note}");
+    }
+}

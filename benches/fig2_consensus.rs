@@ -1,0 +1,47 @@
+//! Bench: regenerate paper Fig. 2 (distance to global consensus, 30
+//! nodes, 4-regular vs 15-regular) and time the consensus machinery.
+//!
+//! `DASGD_BENCH_SCALE` (default 0.25) scales the iteration budget;
+//! 1.0 = the paper's 20k updates.
+
+use dasgd::bench::Harness;
+use dasgd::coordinator::consensus;
+use dasgd::experiments::fig2;
+use dasgd::util::rng::Xoshiro256pp;
+
+fn scale() -> f64 {
+    std::env::var("DASGD_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25)
+}
+
+fn main() {
+    let s = scale();
+    println!("# Fig. 2 — distance to global consensus (scale {s})");
+    let r = fig2::run(s, 0).expect("fig2");
+    r.table().print();
+    for note in fig2::check_shape(&r) {
+        println!("  {note}");
+    }
+    for (name, rec) in &r.series {
+        println!(
+            "  {name}: k to d<10 = {:?} (paper: ~10k at scale 1.0)",
+            rec.k_to_consensus_below(10.0)
+        );
+    }
+
+    // Microbenchmarks of the metric hot path used during the sweep.
+    let mut h = Harness::new("fig2 machinery");
+    let mut rng = Xoshiro256pp::seeded(1);
+    let params: Vec<Vec<f32>> = (0..30)
+        .map(|_| (0..500).map(|_| rng.gauss_f32(0.0, 1.0)).collect())
+        .collect();
+    h.case("consensus_distance(30x500)", || {
+        std::hint::black_box(consensus::consensus_distance(&params));
+    });
+    let g = dasgd::experiments::make_regular(30, 4);
+    h.case("feasibility_DF(30x500, 4-regular)", || {
+        std::hint::black_box(consensus::feasibility(&params, &g));
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig. 4 (final prediction error vs network
+//! size N ∈ {10..30}, degree 4 vs 10, 500 samples/node).
+//! `DASGD_BENCH_SCALE` (default 0.15) scales the per-point budget.
+
+use dasgd::experiments::fig4;
+
+fn main() {
+    let s = std::env::var("DASGD_BENCH_SCALE")
+        .ok()
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0.15);
+    println!("# Fig. 4 — final error vs network size (scale {s})");
+    let r = fig4::run(s, 0).expect("fig4");
+    r.table().print();
+    for note in fig4::check_shape(&r) {
+        println!("  {note}");
+    }
+}

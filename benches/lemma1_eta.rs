@@ -1,0 +1,29 @@
+//! Bench: the Lemma 1 table — spectral η lower bound vs measured DF
+//! contraction across a degree sweep on N = 30, plus power-iteration
+//! timing.
+
+use dasgd::bench::Harness;
+use dasgd::experiments::lemma1;
+use dasgd::graph::spectral;
+
+fn main() {
+    let s = std::env::var("DASGD_BENCH_SCALE")
+        .ok()
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0.5);
+    println!("# Lemma 1 — eta bound vs measured contraction (scale {s})");
+    let r = lemma1::run(s, 0).expect("lemma1");
+    r.table().print();
+    for note in lemma1::check_shape(&r) {
+        println!("  {note}");
+    }
+
+    let mut h = Harness::new("spectral machinery");
+    let g = dasgd::experiments::make_regular(30, 4);
+    h.case("sigma2 power-iteration (N=30, 200 iters)", || {
+        std::hint::black_box(spectral::sigma2(&g, 200));
+    });
+    h.case("averaging_matrix (N=30)", || {
+        std::hint::black_box(spectral::averaging_matrix(&g));
+    });
+}

@@ -1,0 +1,108 @@
+//! Bench: runtime hot-path microbenchmarks — the latency of every PJRT
+//! artifact call vs its rust-native equivalent, plus coordinator
+//! machinery (selection, RNG, gossip stacking). This is the §Perf
+//! measurement harness for L3.
+//!
+//! Requires `make artifacts`; PJRT cases are skipped (with a note) if
+//! the artifact set is missing.
+
+use dasgd::bench::Harness;
+use dasgd::coordinator::{CentralSelector, GeometricSelector};
+use dasgd::model::LogReg;
+use dasgd::runtime::Engine;
+use dasgd::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::seeded(3);
+
+    // ---- native math ------------------------------------------------------
+    let mut h = Harness::new("native math (L3 fallback path)");
+    let (d, c) = (50usize, 10usize);
+    let w: Vec<f32> = (0..d * c).map(|_| rng.gauss_f32(0.0, 0.2)).collect();
+    let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let mut model = LogReg::from_weights(d, c, w.clone());
+    h.case("logreg grad step (50x10, b=1) native", || {
+        std::hint::black_box(model.sgd_step(&[&x], &[3], 0.1, 1.0));
+    });
+    let rows: Vec<Vec<f32>> = (0..5)
+        .map(|_| (0..d * c).map(|_| rng.gauss_f32(0.0, 1.0)).collect())
+        .collect();
+    let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    h.case("gossip avg (5x500) native", || {
+        std::hint::black_box(dasgd::linalg::mean_of(&row_refs));
+    });
+    let (dn, cn) = (256usize, 10usize);
+    let wn: Vec<f32> = (0..dn * cn).map(|_| rng.gauss_f32(0.0, 0.2)).collect();
+    let xn: Vec<f32> = (0..dn).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let mut model_n = LogReg::from_weights(dn, cn, wn.clone());
+    h.case("logreg grad step (256x10, b=1) native", || {
+        std::hint::black_box(model_n.sgd_step(&[&xn], &[3], 0.1, 1.0));
+    });
+
+    // ---- PJRT path ----------------------------------------------------------
+    match Engine::load("artifacts") {
+        Err(e) => println!("(skipping PJRT cases: {e:#})"),
+        Ok(mut engine) => {
+            let mut h = Harness::new("PJRT artifact execution (the hot path)");
+            let mut y = vec![0.0f32; c];
+            y[3] = 1.0;
+            let lr = [0.1f32];
+            let scale = [1.0f32 / 30.0];
+            h.case("logreg_step_synth_b1 (50x10)", || {
+                std::hint::black_box(
+                    engine
+                        .execute_f32("logreg_step_synth_b1", &[&w, &x, &y, &lr, &scale])
+                        .unwrap(),
+                );
+            });
+            let mut yn = vec![0.0f32; cn];
+            yn[3] = 1.0;
+            h.case("logreg_step_notmnist_b1 (256x10)", || {
+                std::hint::black_box(
+                    engine
+                        .execute_f32("logreg_step_notmnist_b1", &[&wn, &xn, &yn, &lr, &scale])
+                        .unwrap(),
+                );
+            });
+            let p: Vec<f32> = (0..16 * 500).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut wts = vec![0.0f32; 16];
+            for v in wts.iter_mut().take(5) {
+                *v = 0.2;
+            }
+            h.case("gossip_avg_synth (16x500)", || {
+                std::hint::black_box(engine.execute_f32("gossip_avg_synth", &[&p, &wts]).unwrap());
+            });
+            let xs: Vec<f32> = (0..256 * 50).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut ys = vec![0.0f32; 256 * 10];
+            for i in 0..256 {
+                ys[i * 10 + (i % 10)] = 1.0;
+            }
+            h.case("logreg_eval_synth (256 rows)", || {
+                std::hint::black_box(
+                    engine
+                        .execute_f32("logreg_eval_synth", &[&w, &xs, &ys])
+                        .unwrap(),
+                );
+            });
+        }
+    }
+
+    // ---- coordinator machinery ---------------------------------------------
+    let mut h = Harness::new("coordinator machinery");
+    let mut central = CentralSelector::uniform(30);
+    let mut sel_rng = Xoshiro256pp::seeded(9);
+    h.case("central selection", || {
+        std::hint::black_box(central.next(&mut sel_rng));
+    });
+    let mut geo = GeometricSelector::uniform(30, 0.05, 11);
+    h.case("distributed geometric selection", || {
+        std::hint::black_box(geo.next());
+    });
+    h.case("xoshiro256++ next_u64", || {
+        std::hint::black_box(sel_rng.next_u64());
+    });
+    let g = dasgd::experiments::make_regular(30, 15);
+    h.case("closed_neighborhood (deg 15)", || {
+        std::hint::black_box(g.closed_neighborhood(7));
+    });
+}

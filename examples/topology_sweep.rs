@@ -1,0 +1,82 @@
+//! Topology sweep: how network structure drives convergence.
+//!
+//! Computes the Lemma-1 spectral quantities (σ₂ of the averaging matrix,
+//! the η lower bound, the Theorem-2 contraction constant) for a family
+//! of topologies and cross-checks them against measured consensus speed
+//! from projection-only Alg. 2 runs.
+//!
+//! ```text
+//! cargo run --release --example topology_sweep [--scale 1.0]
+//! ```
+
+use dasgd::cli::Args;
+use dasgd::coordinator::{NativeBackend, TrainConfig, Trainer};
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::graph::{complete, ring, spectral, two_clusters, Graph};
+use dasgd::metrics::Table;
+
+fn consensus_halvings(graph: Graph, iters: u64, seed: u64) -> f64 {
+    let n = graph.len();
+    let (shards, test) = synth_world(n, 10, 64, seed);
+    let cfg = TrainConfig::paper_default(n)
+        .with_p_grad(0.0) // pure consensus dynamics
+        .with_init_scale(1.0)
+        .with_seed(seed);
+    let mut t = Trainer::new(cfg, graph, shards, NativeBackend::new(50, 10));
+    let d0 = t.consensus_distance();
+    t.run(iters, iters, &test, "sweep").unwrap();
+    let d1 = t.consensus_distance();
+    (d0 / d1.max(1e-300)).log2()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let scale = args.get_f64("scale", 1.0).map_err(anyhow::Error::msg)?;
+    let n = 30;
+    let iters = ((600.0 * scale) as u64).max(150);
+
+    println!("== topology sweep: spectral bounds vs measured consensus ==");
+    println!("N = {n}, {iters} projection steps per topology\n");
+
+    let topologies: Vec<(&str, Graph)> = vec![
+        ("ring (k=2)", ring(n)),
+        ("4-regular", make_regular(n, 4)),
+        ("10-regular", make_regular(n, 10)),
+        ("15-regular", make_regular(n, 15)),
+        ("two clusters", two_clusters(n / 2)),
+        ("complete", complete(n)),
+    ];
+
+    let mut t = Table::new(&[
+        "topology",
+        "edges",
+        "diam",
+        "sigma2(A)",
+        "eta bound",
+        "measured d^k halvings",
+    ]);
+    for (name, g) in topologies {
+        let s2 = spectral::sigma2(&g, 300);
+        // Lemma 1 is stated for regular graphs; report "-" otherwise.
+        let eta = if g.is_regular().is_some() {
+            format!("{:.5}", spectral::lemma1_eta_lower_bound(&g))
+        } else {
+            "-".to_string()
+        };
+        let halvings = consensus_halvings(g.clone(), iters, 7);
+        t.row(&[
+            name.to_string(),
+            format!("{}", g.edge_count()),
+            format!("{}", g.diameter().unwrap_or(0)),
+            format!("{:.4}", s2),
+            eta,
+            format!("{:.1}", halvings),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nReading: smaller sigma2 / larger eta bound ⇒ more d^k halvings in the \
+         same budget — Lemma 1's ordering, measured."
+    );
+    Ok(())
+}

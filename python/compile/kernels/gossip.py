@@ -1,0 +1,60 @@
+"""Layer-1 Pallas kernel for the Alg. 2 projection (gossip-average) step.
+
+The projection onto B_m sets every variable in the closed neighborhood
+{m} ∪ N_m to the neighborhood mean (paper Eq. (7)). The coordinator stacks
+the flattened parameter vectors of the closed neighborhood into P[M_max, K]
+(zero rows beyond the actual neighborhood) and supplies a weight vector
+w[M_max] with w[i] = 1/(1+|N_m|) on live rows and 0 on padding, so the same
+fixed-shape artifact serves every node degree up to M_max - 1.
+
+The kernel is a weighted reduction out[k] = sum_m w[m] * P[m, k], expressed
+as a (1, M) x (M, TILE_K) MXU contraction with a BlockSpec grid over the
+parameter axis: each grid step streams one (M, TILE_K) tile of P HBM->VMEM
+while the tiny weight row stays resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _gossip_kernel(p_ref, w_ref, o_ref):
+    p = p_ref[...]                      # (M, TILE_K)
+    w = w_ref[...]                      # (1, M)
+    # (1, M) x (M, TILE_K) MXU contraction.
+    o_ref[...] = jnp.dot(w, p, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k",))
+def gossip_avg(p, w, tile_k=256):
+    """Weighted neighborhood average.
+
+    Args:
+      p: (M, K) float32 — stacked flattened neighborhood parameters
+         (zero-padded rows beyond the live neighborhood).
+      w: (1, M) float32 — averaging weights (0 on padded rows).
+      tile_k: grid tile along the parameter axis; K % tile_k == 0.
+
+    Returns:
+      (1, K) float32 — the averaged parameter vector.
+    """
+    m, k = p.shape
+    assert k % tile_k == 0, f"param dim {k} not a multiple of tile {tile_k}"
+    grid = (k // tile_k,)
+    return pl.pallas_call(
+        _gossip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, tile_k), lambda t: (0, t)),
+            pl.BlockSpec((1, m), lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_k), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((1, k), jnp.float32),
+        interpret=INTERPRET,
+    )(p, w)

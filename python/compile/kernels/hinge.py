@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel for the binary SVM (hinge-loss) SGD step.
+
+Paper §II lists the SVM loss family
+
+    f_i(beta) = (1/K_i) sum_k max(0, 1 - y_k beta^T x_k) + lambda * ||beta||^2
+
+The subgradient on a microbatch is
+
+    g = -(1/B) sum_{k: margin_k < 1} y_k x_k + 2 lambda beta
+
+and the fused kernel performs beta' = beta - lr * scale * g plus the mean
+hinge loss, all in one VMEM block (the shapes are tiny: D <= 256).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _hinge_kernel(x_ref, w_ref, y_ref, lr_ref, scale_ref, lam_ref,
+                  w_out_ref, loss_ref):
+    x = x_ref[...]          # (B, D)
+    w = w_ref[...]          # (1, D)
+    y = y_ref[...]          # (1, B), labels in {-1, +1}
+    lr = lr_ref[0, 0]
+    scale = scale_ref[0, 0]
+    lam = lam_ref[0, 0]
+
+    b = x.shape[0]
+    margin = y * jnp.dot(w, x.T, preferred_element_type=jnp.float32)  # (1, B)
+    active = (margin < 1.0).astype(jnp.float32)                       # (1, B)
+
+    loss = jnp.sum(jnp.maximum(0.0, 1.0 - margin)) / b + lam * jnp.sum(w * w)
+    loss_ref[0, 0] = loss
+
+    # g = -(1/B) (active * y) @ X + 2 lam w
+    coeff = active * y                                                # (1, B)
+    g = -jnp.dot(coeff, x, preferred_element_type=jnp.float32) / b + 2.0 * lam * w
+    w_out_ref[...] = w - lr * scale * g
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hinge_step(x, w, y, lr, scale, lam):
+    """One SVM subgradient step.
+
+    Args:
+      x: (B, D) float32 features.
+      w: (1, D) float32 weight row vector.
+      y: (1, B) float32 labels in {-1, +1}.
+      lr, scale, lam: (1, 1) float32 scalars.
+
+    Returns:
+      (w_next, loss) with shapes ((1, D), (1, 1)).
+    """
+    _, d = w.shape
+    return pl.pallas_call(
+        _hinge_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, lr, scale, lam)

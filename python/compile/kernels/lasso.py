@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel for the Lasso (L1-regularized least-squares) step.
+
+Paper §II lists the Lasso loss family
+
+    f_i(beta) = (1/2K_i) sum_k (y_k - beta^T x_k)^2 + lambda * ||beta||_1
+
+The subgradient on a microbatch is
+
+    g = (1/B) X^T (X beta - y) + lambda * sign(beta)
+
+fused with the update beta' = beta - lr * scale * g and the loss value in a
+single VMEM block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _lasso_kernel(x_ref, w_ref, y_ref, lr_ref, scale_ref, lam_ref,
+                  w_out_ref, loss_ref):
+    x = x_ref[...]          # (B, D)
+    w = w_ref[...]          # (1, D)
+    y = y_ref[...]          # (1, B)
+    lr = lr_ref[0, 0]
+    scale = scale_ref[0, 0]
+    lam = lam_ref[0, 0]
+
+    b = x.shape[0]
+    resid = jnp.dot(w, x.T, preferred_element_type=jnp.float32) - y    # (1, B)
+    loss = 0.5 * jnp.sum(resid * resid) / b + lam * jnp.sum(jnp.abs(w))
+    loss_ref[0, 0] = loss
+
+    g = jnp.dot(resid, x, preferred_element_type=jnp.float32) / b + lam * jnp.sign(w)
+    w_out_ref[...] = w - lr * scale * g
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lasso_step(x, w, y, lr, scale, lam):
+    """One Lasso subgradient step.
+
+    Args:
+      x: (B, D) float32 features.
+      w: (1, D) float32 weight row vector.
+      y: (1, B) float32 regression targets.
+      lr, scale, lam: (1, 1) float32 scalars.
+
+    Returns:
+      (w_next, loss) with shapes ((1, D), (1, 1)).
+    """
+    _, d = w.shape
+    return pl.pallas_call(
+        _lasso_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, lr, scale, lam)

@@ -1,0 +1,150 @@
+"""Layer-1 Pallas kernels for multinomial logistic regression.
+
+Two kernels:
+
+* ``logreg_step`` — the Alg. 2 gradient-step hot path. One fused kernel
+  computes logits = X @ W, a numerically-stable softmax, the cross-entropy
+  gradient G = X^T (p - y) / B, and the in-place SGD update
+  W' = W - lr * scale * G, returning the new weights and the mean CE loss.
+  Everything (W, the X tile, the (B, C) softmax block) stays resident in
+  VMEM; both matmuls are MXU-shaped contractions.
+
+* ``logreg_eval`` — the held-out-metric kernel. A BlockSpec grid tiles the
+  evaluation batch along the row axis; each grid step streams one
+  (TILE_B, D) tile of X HBM->VMEM, computes per-tile CE-loss sum and
+  misclassification count, and accumulates into (1, 1) VMEM accumulators
+  (the output block index map pins every grid step to the same block, and
+  the Pallas grid is sequential, so read-modify-write accumulation is
+  well-defined).
+
+Both kernels run with ``interpret=True`` on this image: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain HLO
+that the rust runtime executes. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _step_kernel(x_ref, w_ref, y_ref, lr_ref, scale_ref, w_out_ref, loss_ref):
+    """Fused softmax-CE gradient + SGD update, single VMEM block."""
+    x = x_ref[...]          # (B, D)
+    w = w_ref[...]          # (D, C)
+    y = y_ref[...]          # (B, C) one-hot
+    lr = lr_ref[0, 0]
+    scale = scale_ref[0, 0]
+
+    # MXU contraction 1: logits.
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)  # (B, C)
+
+    # Numerically-stable log-softmax.
+    m = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    log_p = z - lse                       # (B, C)
+    p = jnp.exp(log_p)
+
+    b = x.shape[0]
+    # Mean cross-entropy over the (micro)batch.
+    loss = -jnp.sum(y * log_p) / b
+    loss_ref[0, 0] = loss
+
+    # MXU contraction 2: gradient. G = X^T (p - y) / B.
+    g = jnp.dot(x.T, (p - y), preferred_element_type=jnp.float32) / b  # (D, C)
+
+    # `scale` carries the paper's 1/N factor from Eq. (6).
+    w_out_ref[...] = w - lr * scale * g
+
+
+@functools.partial(jax.jit, static_argnames=())
+def logreg_step(x, w, y, lr, scale):
+    """One Alg. 2 local SGD step on node-local data.
+
+    Args:
+      x: (B, D) float32 — feature rows of the sampled data.
+      w: (D, C) float32 — the node's local variable beta_i.
+      y: (B, C) float32 — one-hot labels.
+      lr: (1, 1) float32 — stepsize alpha_k.
+      scale: (1, 1) float32 — the 1/N factor of Eq. (6).
+
+    Returns:
+      (w_next, loss) with shapes ((D, C), (1, 1)).
+    """
+    d, c = w.shape
+    return pl.pallas_call(
+        _step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((d, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, lr, scale)
+
+
+def _eval_kernel(x_ref, w_ref, y_ref, loss_ref, err_ref):
+    """One grid step: CE-loss sum + error count for a (TILE_B, D) tile."""
+    t = pl.program_id(0)
+
+    x = x_ref[...]          # (TILE_B, D)
+    w = w_ref[...]          # (D, C) — same block every step
+    y = y_ref[...]          # (TILE_B, C)
+
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    log_p = z - lse
+
+    tile_loss = -jnp.sum(y * log_p)
+    pred = jnp.argmax(logits, axis=1)
+    label = jnp.argmax(y, axis=1)
+    tile_err = jnp.sum((pred != label).astype(jnp.float32))
+
+    # Sequential-grid accumulation into the pinned (1, 1) output block.
+    @pl.when(t == 0)
+    def _init():
+        loss_ref[0, 0] = tile_loss
+        err_ref[0, 0] = tile_err
+
+    @pl.when(t != 0)
+    def _acc():
+        loss_ref[0, 0] += tile_loss
+        err_ref[0, 0] += tile_err
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def logreg_eval(x, w, y, tile_b=64):
+    """Evaluate W on a held-out batch; returns (loss_sum, err_count).
+
+    The batch axis is tiled with a BlockSpec grid (HBM->VMEM streaming);
+    rows must be a multiple of ``tile_b``.
+    """
+    n, d = x.shape
+    _, c = w.shape
+    assert n % tile_b == 0, f"eval rows {n} not a multiple of tile {tile_b}"
+    grid = (n // tile_b,)
+    return pl.pallas_call(
+        _eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda t: (t, 0)),
+            pl.BlockSpec((d, c), lambda t: (0, 0)),
+            pl.BlockSpec((tile_b, c), lambda t: (t, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y)

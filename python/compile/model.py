@@ -1,0 +1,80 @@
+"""Layer-2 JAX model: the paper's data-fitting objectives, calling L1 kernels.
+
+These are the functions that get AOT-lowered to HLO text by ``aot.py`` and
+executed from the rust coordinator. Each wraps one or more Pallas kernels so
+the kernel lowers into the same HLO module; no other compute happens on the
+request path.
+
+The paper's §V experiments are multinomial logistic regression (10 classes;
+50 features synthetic, 256 features notMNIST); §II additionally motivates
+SVM and Lasso loss families, which we expose the same way.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gossip, hinge, lasso, logreg
+
+
+def logreg_sgd_step(w, x, y, lr, scale):
+    """One Alg. 2 gradient step (Eq. 6): returns (w_next, loss).
+
+    ``scale`` carries the 1/N factor; the coordinator folds any extra
+    importance weighting (non-uniform node selection) into it.
+    """
+    w_next, loss = logreg.logreg_step(x, w, y, lr, scale)
+    return w_next, loss
+
+
+def logreg_evaluate(w, x, y):
+    """Held-out metrics: returns (loss_sum, err_count) over the eval batch.
+
+    The caller divides by the row count to get mean CE loss and the
+    prediction error of Figs. 3/4/6.
+    """
+    # §Perf L1 iteration 3: tile_b = 128 (2 grid steps) instead of 64 (4).
+    # VMEM per tile: 128×256×4 = 128 KiB « 16 MiB; halving the interpret
+    # while-loop trip count cut the eval artifact 690 µs → ~400 µs. Kept
+    # at 2 steps (not 1) so the accumulate-across-grid path stays
+    # exercised end-to-end.
+    loss_sum, err_count = logreg.logreg_eval(x, w, y, tile_b=128)
+    return loss_sum, err_count
+
+
+def hinge_sgd_step(w, x, y, lr, scale, lam):
+    """One SVM subgradient step: returns (w_next, loss)."""
+    return hinge.hinge_step(x, w, y, lr, scale, lam)
+
+
+def lasso_sgd_step(w, x, y, lr, scale, lam):
+    """One Lasso subgradient step: returns (w_next, loss)."""
+    return lasso.lasso_step(x, w, y, lr, scale, lam)
+
+
+def gossip_average(p, wts, tile_k):
+    """Projection step (Eq. 7): weighted closed-neighborhood average.
+
+    ``p`` is (M_max, K) zero-padded stacked parameters, ``wts`` is (1, M_max)
+    with 1/(1+|N_m|) on live rows. Returns the (1, K) averaged vector which
+    the coordinator broadcasts back to the closed neighborhood.
+    """
+    return gossip.gossip_avg(p, wts, tile_k=tile_k)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jax helpers used by the python-side tests (not lowered to artifacts).
+# ---------------------------------------------------------------------------
+
+
+def predict(w, x):
+    """Class predictions (argmax of logits)."""
+    return jnp.argmax(x @ w, axis=1)
+
+
+def ce_loss(w, x, y):
+    """Mean cross-entropy (pure jax; used to sanity-check training)."""
+    logits = x @ w
+    log_p = jax.nn.log_softmax(logits, axis=1)
+    return -jnp.mean(jnp.sum(y * log_p, axis=1))

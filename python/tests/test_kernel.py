@@ -1,0 +1,261 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes; every Pallas kernel (interpret mode) must match
+its pure-jnp oracle in ``kernels.ref`` to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gossip, hinge, lasso, logreg, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def onehot(labels, c):
+    return np.eye(c, dtype=np.float32)[labels]
+
+
+# ---------------------------------------------------------------------------
+# logreg_step
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 16),
+    d=st.integers(2, 96),
+    c=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logreg_step_matches_ref(b, d, c, seed):
+    r = rng(seed)
+    x = r.normal(size=(b, d)).astype(np.float32)
+    w = r.normal(size=(d, c)).astype(np.float32) * 0.1
+    y = onehot(r.integers(0, c, size=b), c)
+    lr = np.full((1, 1), 0.05, np.float32)
+    scale = np.full((1, 1), 1.0 / 30.0, np.float32)
+
+    w_k, loss_k = logreg.logreg_step(x, w, y, lr, scale)
+    w_r, loss_r = ref.logreg_step_ref(x, w, y, lr, scale)
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=1e-5, atol=1e-6)
+
+
+def test_logreg_step_reduces_loss():
+    """A few steps of the kernel on separable data must reduce the loss."""
+    r = rng(0)
+    d, c, b = 20, 4, 8
+    w = np.zeros((d, c), np.float32)
+    means = r.normal(size=(c, d)).astype(np.float32) * 2.0
+    lr = np.full((1, 1), 0.5, np.float32)
+    scale = np.full((1, 1), 1.0, np.float32)
+    losses = []
+    for k in range(60):
+        labels = r.integers(0, c, size=b)
+        x = means[labels] + r.normal(size=(b, d)).astype(np.float32) * 0.3
+        y = onehot(labels, c)
+        w, loss = logreg.logreg_step(x.astype(np.float32), w, y, lr, scale)
+        w = np.asarray(w)
+        losses.append(float(loss[0, 0]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) * 0.5
+
+
+def test_logreg_step_zero_lr_is_identity():
+    r = rng(3)
+    x = r.normal(size=(1, 50)).astype(np.float32)
+    w = r.normal(size=(50, 10)).astype(np.float32)
+    y = onehot(r.integers(0, 10, size=1), 10)
+    zero = np.zeros((1, 1), np.float32)
+    one = np.ones((1, 1), np.float32)
+    w_k, _ = logreg.logreg_step(x, w, y, zero, one)
+    np.testing.assert_array_equal(np.asarray(w_k), w)
+
+
+# ---------------------------------------------------------------------------
+# logreg_eval (grid-tiled)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    tiles=st.integers(1, 4),
+    d=st.integers(2, 64),
+    c=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logreg_eval_matches_ref(tiles, d, c, seed):
+    tile_b = 16
+    n = tiles * tile_b
+    r = rng(seed)
+    x = r.normal(size=(n, d)).astype(np.float32)
+    w = r.normal(size=(d, c)).astype(np.float32) * 0.2
+    y = onehot(r.integers(0, c, size=n), c)
+
+    loss_k, err_k = logreg.logreg_eval(x, w, y, tile_b=tile_b)
+    loss_r, err_r = ref.logreg_eval_ref(x, w, y)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(err_k, err_r, rtol=0, atol=0)
+
+
+def test_logreg_eval_perfect_classifier_zero_errors():
+    c, d = 5, 5
+    n = 64
+    r = rng(1)
+    labels = r.integers(0, c, size=n)
+    x = onehot(labels, c) * 10.0
+    w = np.eye(d, c, dtype=np.float32)
+    y = onehot(labels, c)
+    _, err = logreg.logreg_eval(x, w, y, tile_b=64)
+    assert float(err[0, 0]) == 0.0
+
+
+def test_logreg_eval_rejects_ragged_batch():
+    with pytest.raises(AssertionError):
+        logreg.logreg_eval(
+            np.zeros((65, 4), np.float32),
+            np.zeros((4, 3), np.float32),
+            np.zeros((65, 3), np.float32),
+            tile_b=64,
+        )
+
+
+# ---------------------------------------------------------------------------
+# gossip_avg (grid-tiled)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    ktiles=st.integers(1, 5),
+    live=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gossip_avg_matches_ref(m, ktiles, live, seed):
+    tile_k = 32
+    k = ktiles * tile_k
+    live = min(live, m)
+    r = rng(seed)
+    p = r.normal(size=(m, k)).astype(np.float32)
+    p[live:] = 0.0
+    wts = np.zeros((1, m), np.float32)
+    wts[0, :live] = 1.0 / live
+
+    out_k = gossip.gossip_avg(p, wts, tile_k=tile_k)
+    out_r = ref.gossip_avg_ref(p, wts)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-6)
+
+
+def test_gossip_avg_uniform_rows_is_fixed_point():
+    """Averaging identical parameters returns them unchanged (consensus)."""
+    k = 256
+    row = np.linspace(-1, 1, k, dtype=np.float32)
+    p = np.tile(row, (16, 1))
+    wts = np.full((1, 16), 1.0 / 16.0, np.float32)
+    out = gossip.gossip_avg(p, wts, tile_k=64)
+    np.testing.assert_allclose(np.asarray(out)[0], row, rtol=1e-5, atol=1e-6)
+
+
+def test_gossip_avg_padding_rows_ignored():
+    """Zero-weighted padding rows must not influence the average."""
+    k = 64
+    r = rng(7)
+    p = r.normal(size=(16, k)).astype(np.float32)
+    wts = np.zeros((1, 16), np.float32)
+    wts[0, :3] = 1.0 / 3.0
+    full = np.asarray(gossip.gossip_avg(p, wts, tile_k=32))
+    p2 = p.copy()
+    p2[3:] = 1e6  # garbage in padding rows
+    padded = np.asarray(gossip.gossip_avg(p2, wts, tile_k=32))
+    np.testing.assert_allclose(full, padded, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hinge_step
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 16),
+    d=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hinge_step_matches_ref(b, d, seed):
+    r = rng(seed)
+    x = r.normal(size=(b, d)).astype(np.float32)
+    w = r.normal(size=(1, d)).astype(np.float32) * 0.1
+    y = (r.integers(0, 2, size=(1, b)) * 2 - 1).astype(np.float32)
+    lr = np.full((1, 1), 0.05, np.float32)
+    scale = np.full((1, 1), 1.0, np.float32)
+    lam = np.full((1, 1), 0.01, np.float32)
+
+    w_k, loss_k = hinge.hinge_step(x, w, y, lr, scale, lam)
+    w_r, loss_r = ref.hinge_step_ref(x, w, y, lr, scale, lam)
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=1e-5, atol=1e-6)
+
+
+def test_hinge_inactive_margin_only_regularizer():
+    """If every margin > 1 the data term vanishes: pure L2 shrinkage."""
+    d = 8
+    w = np.full((1, d), 0.5, np.float32)
+    x = w.copy() * 100.0  # margin = y * w.x >> 1 for y=+1
+    y = np.ones((1, 1), np.float32)
+    lr = np.full((1, 1), 0.1, np.float32)
+    scale = np.ones((1, 1), np.float32)
+    lam = np.full((1, 1), 0.05, np.float32)
+    w_k, _ = hinge.hinge_step(x, w, y, lr, scale, lam)
+    expect = w - 0.1 * 1.0 * (2 * 0.05 * w)
+    np.testing.assert_allclose(np.asarray(w_k), expect, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# lasso_step
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 16),
+    d=st.integers(2, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lasso_step_matches_ref(b, d, seed):
+    r = rng(seed)
+    x = r.normal(size=(b, d)).astype(np.float32)
+    w = r.normal(size=(1, d)).astype(np.float32)
+    y = r.normal(size=(1, b)).astype(np.float32)
+    lr = np.full((1, 1), 0.02, np.float32)
+    scale = np.full((1, 1), 1.0, np.float32)
+    lam = np.full((1, 1), 0.1, np.float32)
+
+    w_k, loss_k = lasso.lasso_step(x, w, y, lr, scale, lam)
+    w_r, loss_r = ref.lasso_step_ref(x, w, y, lr, scale, lam)
+    np.testing.assert_allclose(w_k, w_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(loss_k, loss_r, rtol=1e-4, atol=1e-5)
+
+
+def test_lasso_exact_fit_loss_is_regularizer_only():
+    r = rng(11)
+    d, b = 6, 4
+    w = r.normal(size=(1, d)).astype(np.float32)
+    x = r.normal(size=(b, d)).astype(np.float32)
+    y = (w @ x.T).astype(np.float32)  # exact fit: residual = 0
+    lr = np.zeros((1, 1), np.float32)
+    scale = np.ones((1, 1), np.float32)
+    lam = np.full((1, 1), 0.5, np.float32)
+    _, loss = lasso.lasso_step(x, w, y, lr, scale, lam)
+    np.testing.assert_allclose(
+        float(loss[0, 0]), 0.5 * float(np.abs(w).sum()), rtol=1e-5
+    )

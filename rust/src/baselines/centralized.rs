@@ -1,0 +1,103 @@
+//! Centralized SGD: the single-machine reference (§V-E compares Alg. 2's
+//! final error to "a centralized version of SGD").
+
+use crate::coordinator::StepSize;
+use crate::data::Dataset;
+use crate::metrics::{Record, Recorder};
+use crate::model::LogReg;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::Stopwatch;
+
+/// Plain single-variable SGD over the pooled data.
+pub struct CentralizedSgd {
+    pub model: LogReg,
+    pub stepsize: StepSize,
+    pub rng: Xoshiro256pp,
+    pub k: u64,
+}
+
+impl CentralizedSgd {
+    pub fn new(dim: usize, classes: usize, stepsize: StepSize, seed: u64) -> Self {
+        Self {
+            model: LogReg::zeros(dim, classes),
+            stepsize,
+            rng: Xoshiro256pp::seeded(seed),
+            k: 0,
+        }
+    }
+
+    /// Run `iters` single-sample SGD steps over the pooled dataset,
+    /// evaluating every `eval_every`.
+    pub fn run(
+        &mut self,
+        pool: &Dataset,
+        test: &Dataset,
+        iters: u64,
+        eval_every: u64,
+    ) -> Recorder {
+        assert!(!pool.is_empty());
+        let mut rec = Recorder::new("centralized");
+        let sw = Stopwatch::new();
+        let test_flat = test.features_flat();
+        let test_labels = test.labels();
+        let snap = |k: u64, model: &LogReg, grad_steps: u64, sw: &Stopwatch, rec: &mut Recorder| {
+            let e = model.evaluate(test_flat, test_labels);
+            rec.push(Record {
+                k,
+                time_secs: sw.elapsed_secs(),
+                consensus: 0.0, // single variable: always at consensus
+                test_loss: e.mean_loss() as f64,
+                test_err: e.error_rate() as f64,
+                grad_steps,
+                ..Default::default()
+            });
+        };
+        snap(self.k, &self.model, self.k, &sw, &mut rec);
+        let mut next = eval_every;
+        for _ in 0..iters {
+            let idx = self.rng.index(pool.len());
+            let s = pool.sample(idx);
+            let lr = self.stepsize.at(self.k);
+            self.model.sgd_step(&[s.features], &[s.label], lr, 1.0);
+            self.k += 1;
+            if self.k >= next {
+                snap(self.k, &self.model, self.k, &sw, &mut rec);
+                next += eval_every;
+            }
+        }
+        snap(self.k, &self.model, self.k, &sw, &mut rec);
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGen;
+
+    #[test]
+    fn centralized_learns_pooled_mixture() {
+        let gen = SyntheticGen::new(4, 10, 4, 2.5, 0.4, 0.3, 3);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let mut pool = Dataset::new(10, 4);
+        for i in 0..4 {
+            pool.extend(&gen.node_dataset(i, 100, &mut rng));
+        }
+        let test = gen.global_test_set(300, &mut rng);
+        let mut sgd = CentralizedSgd::new(
+            10,
+            4,
+            StepSize::Poly {
+                a: 1.0,
+                tau: 500.0,
+                pow: 0.75,
+            },
+            7,
+        );
+        let rec = sgd.run(&pool, &test, 3000, 1000);
+        let first = rec.records.first().unwrap().test_err;
+        let last = rec.last().unwrap().test_err;
+        assert!(last < first, "err {first} -> {last}");
+        assert!(last < 0.4, "final err {last}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Baseline algorithms the paper positions itself against.
+//!
+//! * [`CentralizedSgd`] — all data in one pool, one variable (the §V-E
+//!   "centralized version of SGD" whose accuracy Alg. 2 matches).
+//! * [`sync_dsgd`] — synchronous decentralized subgradient descent
+//!   (Nedić–Ozdaglar [14]): every slot, all nodes step + average with
+//!   neighbors. Needs slot synchronization — the thing the paper avoids.
+//! * [`server_worker`] — the Fig. 1(a) parameter-server strawman with a
+//!   drop-the-stragglers policy ("the late workers are simply ignored").
+//! * [`local_only`] — no communication at all: the lower bound showing
+//!   why per-node data skew demands consensus.
+//!
+//! All run on rust-native math; the straggler comparison in
+//! [`crate::sim`] wraps them with a virtual clock.
+
+mod centralized;
+mod local_only;
+mod server_worker;
+mod sync_dsgd;
+
+pub use centralized::CentralizedSgd;
+pub use local_only::local_only_errors;
+pub use server_worker::{server_worker, ServerWorkerConfig, ServerWorkerReport};
+pub use sync_dsgd::{sync_dsgd, SyncDsgdConfig, SyncDsgdReport};

@@ -1,0 +1,181 @@
+//! The Fig. 1(a) server–worker (parameter-server) baseline with the
+//! intro's straggler policy: each synchronized round, every worker
+//! computes a gradient on the current global variable; the server waits
+//! only for the fastest `1 − drop_frac` of workers ("the late workers
+//! are simply ignored, which is equivalent to introducing noise"), then
+//! averages their updates and broadcasts.
+//!
+//! Per-round virtual time (used by `crate::sim`) is the max compute time
+//! among *surviving* workers — dropping stragglers trades gradient bias
+//! for round latency, which is the paper's motivating tension.
+
+use crate::coordinator::StepSize;
+use crate::data::Dataset;
+use crate::metrics::{Record, Recorder};
+use crate::model::LogReg;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct ServerWorkerConfig {
+    pub stepsize: StepSize,
+    pub rounds: u64,
+    pub eval_every: u64,
+    /// Fraction of slowest workers dropped each round (0 = fully sync).
+    pub drop_frac: f64,
+    /// Per-worker mean compute times (heterogeneity); empty = uniform.
+    pub worker_speed: Vec<f64>,
+    pub seed: u64,
+}
+
+#[derive(Debug)]
+pub struct ServerWorkerReport {
+    pub recorder: Recorder,
+    /// Total virtual time accumulated over rounds (straggler model).
+    pub virtual_time: f64,
+    pub messages: u64,
+}
+
+/// Run the parameter-server baseline.
+pub fn server_worker(
+    shards: &[Dataset],
+    test: &Dataset,
+    cfg: &ServerWorkerConfig,
+) -> ServerWorkerReport {
+    let n = shards.len();
+    assert!(n > 0);
+    let dim = shards[0].dim();
+    let classes = shards[0].classes();
+    let mut root = Xoshiro256pp::seeded(cfg.seed);
+    let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
+    let mut straggler_rng = root.split(u64::MAX);
+    let speeds: Vec<f64> = if cfg.worker_speed.is_empty() {
+        vec![1.0; n]
+    } else {
+        assert_eq!(cfg.worker_speed.len(), n);
+        cfg.worker_speed.clone()
+    };
+
+    let mut global = LogReg::zeros(dim, classes);
+    let keep = ((n as f64) * (1.0 - cfg.drop_frac)).ceil().max(1.0) as usize;
+    let test_flat = test.features_flat();
+    let test_labels = test.labels();
+
+    let mut rec = Recorder::new("server_worker");
+    let sw = Stopwatch::new();
+    let mut virtual_time = 0.0f64;
+    let mut messages = 0u64;
+
+    let snap = |round: u64, model: &LogReg, vt: f64, messages: u64, rec: &mut Recorder, sw: &Stopwatch| {
+        let e = model.evaluate(test_flat, test_labels);
+        rec.push(Record {
+            k: round,
+            time_secs: sw.elapsed_secs(),
+            consensus: 0.0,
+            test_loss: e.mean_loss() as f64,
+            test_err: e.error_rate() as f64,
+            messages,
+            grad_steps: round * keep as u64,
+            ..Default::default()
+        });
+        let _ = vt;
+    };
+
+    snap(0, &global, 0.0, 0, &mut rec, &sw);
+    for round in 1..=cfg.rounds {
+        let lr = cfg.stepsize.at(round * keep as u64);
+        // Draw per-worker compute times; keep the fastest `keep`.
+        let mut times: Vec<(f64, usize)> = (0..n)
+            .map(|i| (speeds[i] * straggler_rng.exponential(1.0), i))
+            .collect();
+        times.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let survivors = &times[..keep];
+        virtual_time += survivors.last().unwrap().0;
+
+        // Each survivor computes a gradient at the current global W and
+        // sends it up; the server averages and broadcasts.
+        let mut delta = vec![0.0f32; dim * classes];
+        for &(_, i) in survivors {
+            let idx = rngs[i].index(shards[i].len());
+            let s = shards[i].sample(idx);
+            let mut local = global.clone();
+            local.sgd_step(&[s.features], &[s.label], lr, 1.0);
+            for (d, (lw, gw)) in delta.iter_mut().zip(local.w.iter().zip(&global.w)) {
+                *d += lw - gw;
+            }
+            messages += 2; // gradient up + broadcast down
+        }
+        for (gw, d) in global.w.iter_mut().zip(&delta) {
+            *gw += d / keep as f32;
+        }
+        if round % cfg.eval_every == 0 || round == cfg.rounds {
+            snap(round, &global, virtual_time, messages, &mut rec, &sw);
+        }
+    }
+    ServerWorkerReport {
+        recorder: rec,
+        virtual_time,
+        messages,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGen;
+
+    fn setup(n: usize) -> (Vec<Dataset>, Dataset) {
+        let gen = SyntheticGen::new(n, 10, 4, 2.5, 0.4, 0.3, 9);
+        let mut rng = Xoshiro256pp::seeded(4);
+        let shards = (0..n).map(|i| gen.node_dataset(i, 80, &mut rng)).collect();
+        let test = gen.global_test_set(300, &mut rng);
+        (shards, test)
+    }
+
+    #[test]
+    fn server_worker_learns() {
+        let (shards, test) = setup(8);
+        let cfg = ServerWorkerConfig {
+            stepsize: StepSize::Poly {
+                a: 1.0,
+                tau: 2000.0,
+                pow: 0.75,
+            },
+            rounds: 300,
+            eval_every: 100,
+            drop_frac: 0.0,
+            worker_speed: vec![],
+            seed: 1,
+        };
+        let rep = server_worker(&shards, &test, &cfg);
+        assert!(rep.recorder.last().unwrap().test_err < 0.5);
+        assert!(rep.virtual_time > 0.0);
+    }
+
+    #[test]
+    fn dropping_stragglers_cuts_round_time() {
+        let (shards, test) = setup(10);
+        let mk = |drop| {
+            let cfg = ServerWorkerConfig {
+                stepsize: StepSize::Constant(0.3),
+                rounds: 200,
+                eval_every: 200,
+                drop_frac: drop,
+                // One pathological straggler, 20x slower.
+                worker_speed: {
+                    let mut v = vec![1.0; 10];
+                    v[0] = 20.0;
+                    v
+                },
+                seed: 2,
+            };
+            server_worker(&shards, &test, &cfg).virtual_time
+        };
+        let full = mk(0.0);
+        let dropped = mk(0.2);
+        assert!(
+            dropped < full * 0.6,
+            "drop should cut time: full={full} dropped={dropped}"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! benchlib: a minimal criterion replacement (warmup + adaptive
+//! iteration count + summary statistics), since `criterion` does not
+//! resolve offline. Used by every `cargo bench` target.
+
+use crate::util::stats;
+use crate::util::Stopwatch;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_secs: f64,
+    pub median_secs: f64,
+    pub p99_secs: f64,
+    pub std_secs: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_secs
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p99 {:>12}  ±{:>10}",
+            self.name,
+            self.iters,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.median_secs),
+            fmt_secs(self.p99_secs),
+            fmt_secs(self.std_secs),
+        )
+    }
+}
+
+/// Pretty-print a duration in adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Benchmark `f`, auto-scaling the iteration count to fill
+/// `target_secs` of measurement after `warmup_secs` of warmup.
+pub fn bench(name: &str, warmup_secs: f64, target_secs: f64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup + rate estimation.
+    let sw = Stopwatch::new();
+    let mut warm_iters = 0u64;
+    while sw.elapsed_secs() < warmup_secs || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = sw.elapsed_secs() / warm_iters as f64;
+    // Sample in batches so timer overhead stays negligible for fast fns.
+    let samples_target = 50usize;
+    let batch = ((target_secs / samples_target as f64) / per_iter).ceil().max(1.0) as u64;
+    let mut samples = Vec::with_capacity(samples_target);
+    let total = Stopwatch::new();
+    let mut iters = 0u64;
+    while total.elapsed_secs() < target_secs || samples.len() < 5 {
+        let sw = Stopwatch::new();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(sw.elapsed_secs() / batch as f64);
+        iters += batch;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: stats::mean(&samples),
+        median_secs: stats::percentile(&samples, 50.0),
+        p99_secs: stats::percentile(&samples, 99.0),
+        std_secs: stats::std_dev(&samples),
+    }
+}
+
+/// Bench-target harness: prints a header and runs the cases.
+pub struct Harness {
+    title: String,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        Self {
+            title: title.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn case(&mut self, name: &str, f: impl FnMut()) -> &BenchResult {
+        let r = bench(name, 0.2, 1.0, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn quick_case(&mut self, name: &str, f: impl FnMut()) -> &BenchResult {
+        let r = bench(name, 0.05, 0.3, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps_roughly() {
+        let r = bench("sleep", 0.01, 0.15, || {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        });
+        assert!(
+            r.mean_secs > 200e-6 && r.mean_secs < 3e-3,
+            "mean={}",
+            r.mean_secs
+        );
+        assert!(r.iters >= 5);
+        assert!(r.median_secs > 0.0 && r.p99_secs >= r.median_secs);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,137 @@
+//! Hand-rolled CLI argument parser (`clap` does not resolve offline).
+//!
+//! Supports `binary <command> [--flag value] [--switch]` with typed
+//! accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag name".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{flag} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{flag} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(flag, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_str<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    /// Flags the caller never read — typo detection.
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_switches() {
+        let a = parse("fig2 extra --scale 0.5 --seed=7 --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig2"));
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("train");
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 1.0);
+        assert_eq!(a.get_str("backend", "native"), "native");
+        let bad = parse("x --scale abc");
+        assert!(bad.get_f64("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("cmd --good 1 --bad 2 --flag3");
+        let unknown = a.unknown_flags(&["good", "flag3"]);
+        assert_eq!(unknown, vec!["bad".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_switch() {
+        let a = parse("cmd --quiet --scale 2.0");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get_f64("scale", 0.0).unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,475 @@
+//! Thread-per-node asynchronous runtime — the system the paper argues
+//! for, with no global clock and no barriers.
+//!
+//! Every node runs on its own OS thread with a private RNG and an
+//! exponential inter-event clock (the continuous-time limit of §IV-A's
+//! geometric countdown; per-node rates model heterogeneous hardware).
+//! On firing, a node performs a gradient step (w.p. `p_grad`) on its own
+//! variable, or a §IV-C lock-up + Eq. (7) projection over its closed
+//! neighborhood. Lock-up is implemented with `try_lock` on the
+//! neighborhood's parameter mutexes in sorted order — non-blocking, so a
+//! busy neighborhood means *back off and redraw* (a counted conflict),
+//! never a deadlock.
+//!
+//! Gradient/projection math runs rust-native by default or through the
+//! channel-based [`ExecutorHandle`](crate::runtime::ExecutorHandle) (one
+//! PJRT engine per executor thread) when an executor is supplied.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::graph::Graph;
+use crate::metrics::{Record, Recorder};
+use crate::model::LogReg;
+use crate::runtime::ExecutorHandle;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::Stopwatch;
+
+use super::backend::PjrtArtifacts;
+use super::config::StepSize;
+use super::consensus;
+
+/// Configuration of an asynchronous run.
+#[derive(Clone, Debug)]
+pub struct AsyncConfig {
+    /// Gradient-step probability (paper: 0.5).
+    pub p_grad: f64,
+    pub stepsize: StepSize,
+    /// Mean firing rate per node, events/second.
+    pub rate_hz: f64,
+    /// Heterogeneity: node i's rate is `rate_hz · exp(N(0, spread))` —
+    /// spread 0 = homogeneous cluster, 1 ≈ mixed servers + phones.
+    pub speed_spread: f64,
+    /// Run length (wall-clock seconds).
+    pub duration_secs: f64,
+    /// Snapshot cadence for the monitor thread.
+    pub eval_every_secs: f64,
+    /// Simulated network hold time while a projection's locks are held
+    /// (models the collect/broadcast RTT of a real deployment; 0 = the
+    /// in-process memory-speed limit).
+    pub gossip_hold_secs: f64,
+    /// Fault injection: kill this many nodes after the given time — the
+    /// paper's robustness motivation (no server = no single point of
+    /// failure). Killed nodes stop updating and become unreachable to
+    /// their neighbors' gossip; the survivors keep converging.
+    pub kill_after_secs: Option<f64>,
+    pub kill_nodes: usize,
+    pub seed: u64,
+}
+
+impl AsyncConfig {
+    pub fn quick(n_nodes: usize) -> Self {
+        Self {
+            p_grad: 0.5,
+            stepsize: StepSize::paper_default(n_nodes),
+            rate_hz: 200.0,
+            speed_spread: 0.0,
+            duration_secs: 1.0,
+            eval_every_secs: 0.25,
+            gossip_hold_secs: 0.0,
+            kill_after_secs: None,
+            kill_nodes: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of an asynchronous run.
+#[derive(Debug)]
+pub struct AsyncReport {
+    /// Nodes crashed by fault injection during the run.
+    pub killed: usize,
+    pub recorder: Recorder,
+    pub updates: u64,
+    pub grad_steps: u64,
+    pub proj_steps: u64,
+    /// Projection attempts aborted because the neighborhood was locked.
+    pub conflicts: u64,
+    pub messages: u64,
+    pub updates_per_sec: f64,
+    /// Final per-node parameters.
+    pub final_params: Vec<Vec<f32>>,
+}
+
+struct Shared {
+    params: Vec<Mutex<Vec<f32>>>,
+    /// Per-node liveness: false = crashed (fault injection).
+    alive: Vec<AtomicBool>,
+    stop: AtomicBool,
+    grad_steps: AtomicU64,
+    proj_steps: AtomicU64,
+    conflicts: AtomicU64,
+    messages: AtomicU64,
+    /// Global applied-update counter (for stepsize decay).
+    k: AtomicU64,
+}
+
+/// A networked system ready to run asynchronously.
+pub struct AsyncCluster {
+    graph: Graph,
+    shards: Vec<Dataset>,
+    dim: usize,
+    classes: usize,
+    /// Optional PJRT execution (native math when `None`).
+    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+}
+
+impl AsyncCluster {
+    pub fn new(graph: Graph, shards: Vec<Dataset>) -> Self {
+        assert_eq!(graph.len(), shards.len());
+        assert!(graph.is_connected(), "consensus needs a connected graph");
+        let dim = shards[0].dim();
+        let classes = shards[0].classes();
+        Self {
+            graph,
+            shards,
+            dim,
+            classes,
+            executor: None,
+        }
+    }
+
+    /// Route gradient steps through a PJRT executor service.
+    pub fn with_executor(mut self, handle: ExecutorHandle, arts: PjrtArtifacts) -> Self {
+        self.executor = Some((handle, arts));
+        self
+    }
+
+    /// Run the cluster for `cfg.duration_secs`, snapshotting consensus +
+    /// held-out error on a monitor thread.
+    pub fn run(&self, cfg: &AsyncConfig, test: &Dataset) -> Result<AsyncReport> {
+        let n = self.graph.len();
+        let param_len = self.dim * self.classes;
+        let shared = Arc::new(Shared {
+            params: (0..n).map(|_| Mutex::new(vec![0.0f32; param_len])).collect(),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            stop: AtomicBool::new(false),
+            grad_steps: AtomicU64::new(0),
+            proj_steps: AtomicU64::new(0),
+            conflicts: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            k: AtomicU64::new(0),
+        });
+
+        let mut root = Xoshiro256pp::seeded(cfg.seed);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut rng = root.split(i as u64);
+            let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
+            let shared = Arc::clone(&shared);
+            let graph = self.graph.clone();
+            let data = self.shards[i].clone();
+            let cfg = cfg.clone();
+            let executor = self
+                .executor
+                .as_ref()
+                .map(|(h, a)| (h.clone(), a.clone()));
+            let (dim, classes) = (self.dim, self.classes);
+            handles.push(std::thread::spawn(move || {
+                node_loop(
+                    i, rate, rng, shared, graph, data, cfg, executor, dim, classes,
+                );
+            }));
+        }
+
+        // Monitor loop (runs inline on the caller's thread).
+        let test_flat = test.features_flat().to_vec();
+        let test_labels = test.labels().to_vec();
+        let mut rec = Recorder::new("async");
+        let sw = Stopwatch::new();
+        let mut killed = 0usize;
+        loop {
+            let now = sw.elapsed_secs();
+            if let Some(t_kill) = cfg.kill_after_secs {
+                if now >= t_kill && killed == 0 && cfg.kill_nodes > 0 {
+                    // Crash the first kill_nodes nodes: they stop acting
+                    // and their variables become unreachable to gossip.
+                    for i in 0..cfg.kill_nodes.min(n) {
+                        shared.alive[i].store(false, Ordering::SeqCst);
+                    }
+                    killed = cfg.kill_nodes.min(n);
+                }
+            }
+            // Metrics are computed over the *live* cohort only (a crashed
+            // node's frozen variable is no longer part of the system).
+            let params: Vec<Vec<f32>> = shared
+                .params
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| shared.alive[*i].load(Ordering::Relaxed))
+                .map(|(_, m)| m.lock().unwrap().clone())
+                .collect();
+            let mean = consensus::mean_param(&params);
+            let model = LogReg::from_weights(self.dim, self.classes, mean);
+            let eval = model.evaluate(&test_flat, &test_labels);
+            rec.push(Record {
+                k: shared.k.load(Ordering::Relaxed),
+                time_secs: now,
+                consensus: consensus::consensus_distance(&params),
+                test_loss: eval.mean_loss() as f64,
+                test_err: eval.error_rate() as f64,
+                grad_steps: shared.grad_steps.load(Ordering::Relaxed),
+                proj_steps: shared.proj_steps.load(Ordering::Relaxed),
+                messages: shared.messages.load(Ordering::Relaxed),
+                conflicts: shared.conflicts.load(Ordering::Relaxed),
+            });
+            if now >= cfg.duration_secs {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64(
+                cfg.eval_every_secs.min(cfg.duration_secs - now).max(0.01),
+            ));
+        }
+        shared.stop.store(true, Ordering::SeqCst);
+        for h in handles {
+            h.join().expect("node thread panicked");
+        }
+
+        let elapsed = sw.elapsed_secs();
+        let grad = shared.grad_steps.load(Ordering::SeqCst);
+        let proj = shared.proj_steps.load(Ordering::SeqCst);
+        let final_params = shared
+            .params
+            .iter()
+            .map(|m| m.lock().unwrap().clone())
+            .collect();
+        Ok(AsyncReport {
+            killed,
+            recorder: rec,
+            updates: grad + proj,
+            grad_steps: grad,
+            proj_steps: proj,
+            conflicts: shared.conflicts.load(Ordering::SeqCst),
+            messages: shared.messages.load(Ordering::SeqCst),
+            updates_per_sec: (grad + proj) as f64 / elapsed,
+            final_params,
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_loop(
+    id: usize,
+    rate_hz: f64,
+    mut rng: Xoshiro256pp,
+    shared: Arc<Shared>,
+    graph: Graph,
+    data: Dataset,
+    cfg: AsyncConfig,
+    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+    dim: usize,
+    classes: usize,
+) {
+    let n = graph.len();
+    let scale = 1.0 / n as f32;
+    while !shared.stop.load(Ordering::Relaxed) {
+        // Continuous-time §IV-A clock: wait Exp(rate).
+        let wait = rng.exponential(rate_hz.max(1e-9));
+        std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if !shared.alive[id].load(Ordering::Relaxed) {
+            return; // crashed (fault injection)
+        }
+        let k = shared.k.load(Ordering::Relaxed);
+        let lr = cfg.stepsize.at(k);
+        if rng.next_f64() < cfg.p_grad {
+            // Local gradient step: lock only our own variable (Eq. 6).
+            let idx = rng.index(data.len());
+            let s = data.sample(idx);
+            let mut guard = shared.params[id].lock().unwrap();
+            match &executor {
+                None => {
+                    let mut model =
+                        LogReg::from_weights(dim, classes, std::mem::take(&mut *guard));
+                    model.sgd_step(&[s.features], &[s.label], lr, scale);
+                    *guard = model.w;
+                }
+                Some((h, arts)) => {
+                    let mut y = vec![0.0f32; classes];
+                    y[s.label] = 1.0;
+                    if let Ok(outs) = h.execute_f32(
+                        &arts.step_b1,
+                        &[guard.as_slice(), s.features, &y, &[lr], &[scale]],
+                    ) {
+                        *guard = outs.into_iter().next().unwrap();
+                    }
+                }
+            }
+            drop(guard);
+            shared.grad_steps.fetch_add(1, Ordering::Relaxed);
+            shared.k.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Projection: §IV-C lock-up over the closed neighborhood —
+            // restricted to live members (a crashed neighbor is simply
+            // unreachable; the average is over whoever answers).
+            let hood: Vec<usize> = graph
+                .closed_neighborhood(id)
+                .into_iter()
+                .filter(|&j| shared.alive[j].load(Ordering::Relaxed))
+                .collect();
+            if hood.len() < 2 {
+                continue; // nobody reachable to average with
+            }
+            let mut guards = Vec::with_capacity(hood.len());
+            let mut ok = true;
+            for &j in &hood {
+                // Lock request message to each neighbor (not self).
+                if j != id {
+                    shared.messages.fetch_add(1, Ordering::Relaxed);
+                }
+                match shared.params[j].try_lock() {
+                    Ok(g) => guards.push(g),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                // A neighbor is mid-update: back off (conflict), release.
+                shared.conflicts.fetch_add(1, Ordering::Relaxed);
+                drop(guards);
+                continue;
+            }
+            // Collect + average + broadcast (Eq. 7). A real deployment
+            // holds the locks across the network round-trip.
+            if cfg.gossip_hold_secs > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(cfg.gossip_hold_secs));
+            }
+            let rows: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
+            let avg = match &executor {
+                None => crate::linalg::mean_of(&rows),
+                Some((h, arts)) if rows.len() <= arts.gossip_m => {
+                    let kk = dim * classes;
+                    let mut p = vec![0.0f32; arts.gossip_m * kk];
+                    let mut wts = vec![0.0f32; arts.gossip_m];
+                    for (r, row) in rows.iter().enumerate() {
+                        p[r * kk..(r + 1) * kk].copy_from_slice(row);
+                        wts[r] = 1.0 / rows.len() as f32;
+                    }
+                    match h.execute_f32(&arts.gossip, &[&p, &wts]) {
+                        Ok(outs) => outs.into_iter().next().unwrap(),
+                        Err(_) => crate::linalg::mean_of(&rows),
+                    }
+                }
+                Some(_) => crate::linalg::mean_of(&rows),
+            };
+            for g in guards.iter_mut() {
+                g.copy_from_slice(&avg);
+            }
+            // Broadcast messages (value back to each neighbor) + releases.
+            shared
+                .messages
+                .fetch_add(hood.len() as u64 - 1, Ordering::Relaxed);
+            drop(guards);
+            shared.proj_steps.fetch_add(1, Ordering::Relaxed);
+            shared.k.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGen;
+    use crate::graph::regular_circulant;
+
+    fn cluster(n: usize, k: usize, seed: u64) -> (AsyncCluster, Dataset) {
+        let gen = SyntheticGen::new(n, 10, 4, 2.0, 0.5, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let shards = (0..n).map(|i| gen.node_dataset(i, 60, &mut rng)).collect();
+        let test = gen.global_test_set(200, &mut rng);
+        (AsyncCluster::new(regular_circulant(n, k), shards), test)
+    }
+
+    #[test]
+    fn async_run_makes_progress_without_barriers() {
+        let (c, test) = cluster(6, 2, 1);
+        let cfg = AsyncConfig {
+            duration_secs: 1.2,
+            rate_hz: 400.0,
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 200, "updates={}", rep.updates);
+        assert!(rep.grad_steps > 0 && rep.proj_steps > 0);
+        let last = rep.recorder.last().unwrap();
+        assert!(last.test_err < 0.7, "err={}", last.test_err);
+        assert!(rep.updates_per_sec > 100.0);
+    }
+
+    #[test]
+    fn heterogeneous_rates_still_converge() {
+        let (c, test) = cluster(6, 4, 3);
+        let cfg = AsyncConfig {
+            duration_secs: 1.0,
+            rate_hz: 300.0,
+            speed_spread: 1.0, // ~3x rate disparity between nodes
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 100);
+        // Consensus must still fall (async + stragglers don't break it).
+        let first = rep.recorder.records.first().unwrap().consensus;
+        let last = rep.recorder.last().unwrap().consensus;
+        assert!(last <= first.max(1.0), "consensus {first} -> {last}");
+    }
+
+    #[test]
+    fn survives_node_failures() {
+        // The robustness claim: no server = no single point of failure.
+        // Crash 2 of 8 nodes mid-run; the survivors keep updating and
+        // still reach a useful model.
+        let (c, test) = cluster(8, 4, 9);
+        let cfg = AsyncConfig {
+            duration_secs: 1.4,
+            rate_hz: 400.0,
+            kill_after_secs: Some(0.4),
+            kill_nodes: 2,
+            ..AsyncConfig::quick(8)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert_eq!(rep.killed, 2);
+        // Updates continued well past the crash point.
+        let at_kill = rep
+            .recorder
+            .records
+            .iter()
+            .find(|r| r.time_secs >= 0.4)
+            .map(|r| r.grad_steps + r.proj_steps)
+            .unwrap_or(0);
+        assert!(
+            rep.updates > at_kill + 50,
+            "no progress after crash: {} vs {}",
+            rep.updates,
+            at_kill
+        );
+        // The surviving cohort still improves on random guessing.
+        let last = rep.recorder.last().unwrap();
+        assert!(last.test_err < 0.7, "err={}", last.test_err);
+    }
+
+    #[test]
+    fn lockup_conflicts_are_counted_under_contention() {
+        // Dense graph + high rate = lots of neighborhood contention.
+        let (c, test) = cluster(8, 6, 5);
+        let cfg = AsyncConfig {
+            duration_secs: 0.8,
+            rate_hz: 2000.0,
+            gossip_hold_secs: 0.002, // hold locks across a simulated RTT
+            ..AsyncConfig::quick(8)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(
+            rep.conflicts > 0,
+            "expected lock-up conflicts under contention"
+        );
+        assert!(rep.messages > 0);
+    }
+}

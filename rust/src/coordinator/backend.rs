@@ -1,0 +1,324 @@
+//! Compute backends for the coordinator: rust-native math or the
+//! AOT-compiled JAX/Pallas artifacts through PJRT.
+//!
+//! Both implement [`StepBackend`] with identical semantics (the
+//! integration suite asserts they agree to float tolerance), so every
+//! experiment can run on either and the figures are backend-independent.
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::model::LogReg;
+use crate::runtime::Engine;
+
+/// A held-out evaluation batch in the layouts both backends need.
+#[derive(Clone, Debug)]
+pub struct EvalBatch {
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub features: Vec<f32>,
+    pub one_hot: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl EvalBatch {
+    pub fn from_dataset(d: &Dataset) -> Self {
+        Self {
+            n: d.len(),
+            dim: d.dim(),
+            classes: d.classes(),
+            features: d.features_flat().to_vec(),
+            one_hot: d.one_hot_labels(),
+            labels: d.labels().to_vec(),
+        }
+    }
+
+    /// Resize cyclically to exactly `n` rows (the PJRT eval artifact has
+    /// a fixed 256-row shape).
+    pub fn from_dataset_resized(d: &Dataset, n: usize) -> Self {
+        Self::from_dataset(&d.resized_cyclic(n))
+    }
+}
+
+/// The compute interface the trainer drives.
+pub trait StepBackend {
+    /// One logistic-regression SGD step on flat row-major data:
+    /// `w ← w − lr·scale·∇`; returns the minibatch mean CE loss.
+    fn grad_step(
+        &mut self,
+        w: &mut Vec<f32>,
+        xs: &[f32],
+        labels: &[usize],
+        lr: f32,
+        scale: f32,
+    ) -> Result<f32>;
+
+    /// Weighted average of the stacked parameter rows (Eq. 7 projection).
+    fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>>;
+
+    /// (mean loss, error rate) of `w` on the eval batch.
+    fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)>;
+
+    /// Rows the eval batch must have (PJRT artifacts are fixed-shape).
+    fn required_eval_rows(&self) -> Option<usize> {
+        None
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Pure-rust backend (crate::model math).
+pub struct NativeBackend {
+    dim: usize,
+    classes: usize,
+}
+
+impl NativeBackend {
+    pub fn new(dim: usize, classes: usize) -> Self {
+        Self { dim, classes }
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn grad_step(
+        &mut self,
+        w: &mut Vec<f32>,
+        xs: &[f32],
+        labels: &[usize],
+        lr: f32,
+        scale: f32,
+    ) -> Result<f32> {
+        let b = labels.len();
+        assert_eq!(xs.len(), b * self.dim);
+        let mut model = LogReg::from_weights(self.dim, self.classes, std::mem::take(w));
+        let rows: Vec<&[f32]> = (0..b).map(|i| &xs[i * self.dim..(i + 1) * self.dim]).collect();
+        let loss = model.sgd_step(&rows, labels, lr, scale);
+        *w = model.w;
+        Ok(loss)
+    }
+
+    fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        Ok(crate::linalg::mean_of(rows))
+    }
+
+    fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)> {
+        let model = LogReg::from_weights(self.dim, self.classes, w.to_vec());
+        let eval = model.evaluate(&test.features, &test.labels);
+        Ok((eval.mean_loss(), eval.error_rate()))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Artifact names for one model shape.
+#[derive(Clone, Debug)]
+pub struct PjrtArtifacts {
+    pub step_b1: String,
+    pub eval: String,
+    pub gossip: String,
+    /// Max rows of the gossip artifact's stacked-parameter input.
+    pub gossip_m: usize,
+    /// Fixed row count of the eval artifact.
+    pub eval_rows: usize,
+}
+
+impl PjrtArtifacts {
+    /// The synthetic (50×10) artifact family.
+    pub fn synth() -> Self {
+        Self {
+            step_b1: "logreg_step_synth_b1".into(),
+            eval: "logreg_eval_synth".into(),
+            gossip: "gossip_avg_synth".into(),
+            gossip_m: 16,
+            eval_rows: 256,
+        }
+    }
+
+    /// The notMNIST (256×10) artifact family.
+    pub fn notmnist() -> Self {
+        Self {
+            step_b1: "logreg_step_notmnist_b1".into(),
+            eval: "logreg_eval_notmnist".into(),
+            gossip: "gossip_avg_notmnist".into(),
+            gossip_m: 16,
+            eval_rows: 256,
+        }
+    }
+}
+
+/// PJRT backend: the production path (Pallas kernels inside AOT HLO).
+pub struct PjrtBackend {
+    engine: Engine,
+    arts: PjrtArtifacts,
+    dim: usize,
+    classes: usize,
+    /// Scratch for gossip stacking (avoids per-call allocation).
+    gossip_scratch: Vec<f32>,
+    weights_scratch: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Engine, arts: PjrtArtifacts, dim: usize, classes: usize) -> Result<Self> {
+        for name in [&arts.step_b1, &arts.eval, &arts.gossip] {
+            if !engine.has(name) {
+                bail!("engine is missing artifact {name}");
+            }
+        }
+        let k = dim * classes;
+        Ok(Self {
+            engine,
+            gossip_scratch: vec![0.0; 16 * k],
+            weights_scratch: vec![0.0; 16],
+            arts,
+            dim,
+            classes,
+        })
+    }
+
+    /// Synthetic-shape backend from the default artifact dir.
+    pub fn synth_default() -> Result<Self> {
+        Self::new(Engine::load_default()?, PjrtArtifacts::synth(), 50, 10)
+    }
+
+    /// notMNIST-shape backend from the default artifact dir.
+    pub fn notmnist_default() -> Result<Self> {
+        Self::new(Engine::load_default()?, PjrtArtifacts::notmnist(), 256, 10)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn grad_step(
+        &mut self,
+        w: &mut Vec<f32>,
+        xs: &[f32],
+        labels: &[usize],
+        lr: f32,
+        scale: f32,
+    ) -> Result<f32> {
+        if labels.len() != 1 {
+            bail!("pjrt backend: only batch=1 steps are wired (got {})", labels.len());
+        }
+        assert_eq!(xs.len(), self.dim);
+        let mut y = vec![0.0f32; self.classes];
+        y[labels[0]] = 1.0;
+        let outs = self.engine.execute_f32(
+            &self.arts.step_b1,
+            &[w.as_slice(), xs, &y, &[lr], &[scale]],
+        )?;
+        let mut it = outs.into_iter();
+        *w = it.next().unwrap();
+        Ok(it.next().unwrap()[0])
+    }
+
+    fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        let m = self.arts.gossip_m;
+        if rows.len() > m {
+            // Degree exceeds the artifact's padding: fall back to native.
+            return Ok(crate::linalg::mean_of(rows));
+        }
+        let k = self.dim * self.classes;
+        self.gossip_scratch.fill(0.0);
+        self.weights_scratch.fill(0.0);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), k);
+            self.gossip_scratch[i * k..(i + 1) * k].copy_from_slice(row);
+            self.weights_scratch[i] = 1.0 / rows.len() as f32;
+        }
+        let outs = self.engine.execute_f32(
+            &self.arts.gossip,
+            &[&self.gossip_scratch, &self.weights_scratch],
+        )?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)> {
+        if test.n != self.arts.eval_rows {
+            bail!(
+                "pjrt eval artifact needs exactly {} rows, got {} — use \
+                 EvalBatch::from_dataset_resized",
+                self.arts.eval_rows,
+                test.n
+            );
+        }
+        let outs = self
+            .engine
+            .execute_f32(&self.arts.eval, &[w, &test.features, &test.one_hot])?;
+        let loss_sum = outs[0][0];
+        let errs = outs[1][0];
+        Ok((loss_sum / test.n as f32, errs / test.n as f32))
+    }
+
+    fn required_eval_rows(&self) -> Option<usize> {
+        Some(self.arts.eval_rows)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn native_grad_step_reduces_loss() {
+        let mut b = NativeBackend::new(8, 3);
+        let mut rng = Xoshiro256pp::seeded(0);
+        let mut w = vec![0.0f32; 24];
+        let means: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..8).map(|_| rng.gauss_f32(0.0, 2.0)).collect())
+            .collect();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for k in 0..200 {
+            let label = rng.index(3);
+            let x: Vec<f32> = means[label].iter().map(|v| v + rng.gauss_f32(0.0, 0.2)).collect();
+            let loss = b.grad_step(&mut w, &x, &[label], 0.5, 1.0).unwrap();
+            if k < 20 {
+                first += loss;
+            } else if k >= 180 {
+                last += loss;
+            }
+        }
+        assert!(last < first * 0.6);
+    }
+
+    #[test]
+    fn native_gossip_is_mean() {
+        let mut b = NativeBackend::new(2, 1);
+        let r1 = [1.0f32, 3.0];
+        let r2 = [3.0f32, 5.0];
+        let avg = b.gossip_avg(&[&r1, &r2]).unwrap();
+        assert_eq!(avg, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn eval_batch_layouts() {
+        let mut d = Dataset::new(2, 2);
+        d.push(&[1.0, 0.0], 0);
+        d.push(&[0.0, 1.0], 1);
+        let e = EvalBatch::from_dataset(&d);
+        assert_eq!(e.n, 2);
+        assert_eq!(e.one_hot, vec![1.0, 0.0, 0.0, 1.0]);
+        let r = EvalBatch::from_dataset_resized(&d, 5);
+        assert_eq!(r.n, 5);
+        assert_eq!(r.labels, vec![0, 1, 0, 1, 0]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Training configuration for the Alg. 2 coordinator.
+
+/// Stepsize schedule α_k (the paper requires Σα = ∞, Σα² < ∞ for the
+/// Theorem 1 guarantees; [`StepSize::Poly`] with pow ∈ (0.5, 1] satisfies
+/// it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSize {
+    /// Constant α (converges to a neighborhood only).
+    Constant(f32),
+    /// α_k = a / (1 + k/τ)^pow.
+    Poly { a: f32, tau: f32, pow: f32 },
+}
+
+impl StepSize {
+    pub fn at(&self, k: u64) -> f32 {
+        match *self {
+            StepSize::Constant(a) => a,
+            StepSize::Poly { a, tau, pow } => a / (1.0 + k as f32 / tau).powf(pow),
+        }
+    }
+
+    /// The paper-style default: effective unit step early, diminishing.
+    pub fn paper_default(n_nodes: usize) -> Self {
+        // The kernel applies lr·scale with scale = 1/N (Eq. 6), so fold N
+        // into `a` to get an O(1) effective initial step.
+        StepSize::Poly {
+            a: 1.2 * n_nodes as f32,
+            tau: 4000.0,
+            pow: 0.75,
+        }
+    }
+}
+
+/// How the acting node is chosen each slot (§IV-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectionMode {
+    /// Idealized central uniform selection (what the paper simulates).
+    Central,
+    /// Distributed geometric-countdown timers: every node draws
+    /// Geometric(p) and counts down; ties = §IV-C conflicts.
+    DistributedGeometric { p: f64 },
+}
+
+/// What to do when two adjacent nodes fire in the same slot (§IV-C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConflictPolicy {
+    /// Neighbor lock-up: later node backs off (costs lock messages).
+    LockUp,
+    /// Ignore: both updates are applied (the paper's noisy alternative).
+    Ignore,
+}
+
+/// Which layer executes the math.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backend {
+    /// Rust-native model math (baseline / cross-check).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts through PJRT (the real system).
+    Pjrt,
+}
+
+/// Full coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Probability of a gradient step vs a projection step (paper: 0.5;
+    /// §IV-B tunes it to trade communication for consensus speed).
+    pub p_grad: f64,
+    pub stepsize: StepSize,
+    pub selection: SelectionMode,
+    pub conflicts: ConflictPolicy,
+    pub backend: Backend,
+    /// Microbatch per gradient step (paper: 1).
+    pub batch: usize,
+    /// Std-dev of the random initial β_i (0 = all-zeros init; > 0 gives
+    /// the initial disagreement visible in the paper's Fig. 2).
+    pub init_scale: f32,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// The paper's Alg. 2 configuration for an N-node system.
+    pub fn paper_default(n_nodes: usize) -> Self {
+        Self {
+            p_grad: 0.5,
+            stepsize: StepSize::paper_default(n_nodes),
+            selection: SelectionMode::Central,
+            conflicts: ConflictPolicy::LockUp,
+            backend: Backend::Native,
+            batch: 1,
+            init_scale: 0.0,
+            seed: 0,
+        }
+    }
+
+    pub fn with_init_scale(mut self, s: f32) -> Self {
+        self.init_scale = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_p_grad(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.p_grad = p;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_schedule_decreases() {
+        let s = StepSize::Poly {
+            a: 1.0,
+            tau: 100.0,
+            pow: 1.0,
+        };
+        assert!((s.at(0) - 1.0).abs() < 1e-6);
+        assert!(s.at(100) < s.at(10));
+        assert!((s.at(100) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_schedule_constant() {
+        let s = StepSize::Constant(0.3);
+        assert_eq!(s.at(0), s.at(1_000_000));
+    }
+
+    #[test]
+    fn paper_default_folds_n() {
+        let s = StepSize::paper_default(30);
+        // Effective initial step = a/N ≈ 1.2.
+        assert!((s.at(0) / 30.0 - 1.2).abs() < 1e-5);
+        let cfg = TrainConfig::paper_default(30);
+        assert_eq!(cfg.p_grad, 0.5);
+        assert_eq!(cfg.batch, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn p_grad_out_of_range_panics() {
+        TrainConfig::paper_default(4).with_p_grad(1.5);
+    }
+}

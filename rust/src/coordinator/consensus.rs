@@ -1,0 +1,159 @@
+//! Consensus metrics: the paper's d^k distance and DF(β) estimates.
+
+use crate::graph::Graph;
+
+/// d^k = Σ_i ‖β_i − β̄‖ — the §V-B "distance of the variables from
+/// global consensus".
+pub fn consensus_distance(params: &[Vec<f32>]) -> f64 {
+    assert!(!params.is_empty());
+    let n = params.len();
+    let k = params[0].len();
+    let mut mean = vec![0.0f64; k];
+    for p in params {
+        assert_eq!(p.len(), k);
+        for (m, &v) in mean.iter_mut().zip(p) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    params
+        .iter()
+        .map(|p| {
+            p.iter()
+                .zip(&mean)
+                .map(|(&v, &m)| (v as f64 - m) * (v as f64 - m))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .sum()
+}
+
+/// β̄ — the node-average parameter vector (the paper evaluates
+/// prediction error at β̄, §V-C).
+pub fn mean_param(params: &[Vec<f32>]) -> Vec<f32> {
+    let rows: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    crate::linalg::mean_of(&rows)
+}
+
+/// Squared distance from the stacked variable to one constraint set
+/// B_m = {β : β_m = β_j ∀ j ∈ N_m}: ‖β − Π_{B_m}(β)‖², i.e. the
+/// within-closed-neighborhood variance times its size.
+pub fn dist_to_constraint_sq(params: &[Vec<f32>], g: &Graph, m: usize) -> f64 {
+    let hood = g.closed_neighborhood(m);
+    let k = params[0].len();
+    let mut mean = vec![0.0f64; k];
+    for &i in &hood {
+        for (acc, &v) in mean.iter_mut().zip(&params[i]) {
+            *acc += v as f64;
+        }
+    }
+    for v in &mut mean {
+        *v /= hood.len() as f64;
+    }
+    hood.iter()
+        .map(|&i| {
+            params[i]
+                .iter()
+                .zip(&mean)
+                .map(|(&v, &mu)| (v as f64 - mu) * (v as f64 - mu))
+                .sum::<f64>()
+        })
+        .sum()
+}
+
+/// DF(β) estimate used in the Theorem-2 / Lemma-1 experiments: the exact
+/// squared distance to the consensus set B = ∩B_i (for a connected graph
+/// Π_B is the global mean), plus the max per-constraint distance that
+/// appears in the linear-regularity condition.
+#[derive(Clone, Copy, Debug)]
+pub struct Feasibility {
+    /// ‖β − Π_B(β)‖² — distance to full consensus.
+    pub df_sq: f64,
+    /// max_m ‖β − Π_{B_m}(β)‖² — the regularity right-hand side.
+    pub max_constraint_sq: f64,
+}
+
+pub fn feasibility(params: &[Vec<f32>], g: &Graph) -> Feasibility {
+    let n = params.len();
+    let k = params[0].len();
+    let mut mean = vec![0.0f64; k];
+    for p in params {
+        for (m, &v) in mean.iter_mut().zip(p) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let df_sq = params
+        .iter()
+        .map(|p| {
+            p.iter()
+                .zip(&mean)
+                .map(|(&v, &m)| (v as f64 - m) * (v as f64 - m))
+                .sum::<f64>()
+        })
+        .sum();
+    let max_constraint_sq = (0..n)
+        .map(|m| dist_to_constraint_sq(params, g, m))
+        .fold(0.0f64, f64::max);
+    Feasibility {
+        df_sq,
+        max_constraint_sq,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ring;
+
+    #[test]
+    fn consensus_distance_zero_at_consensus() {
+        let p = vec![vec![1.0f32, -2.0]; 5];
+        assert!(consensus_distance(&p) < 1e-9);
+    }
+
+    #[test]
+    fn consensus_distance_known_value() {
+        // Two nodes at ±1 in 1-D: mean 0, each at distance 1 → d = 2.
+        let p = vec![vec![1.0f32], vec![-1.0f32]];
+        assert!((consensus_distance(&p) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_param_is_elementwise_mean() {
+        let p = vec![vec![1.0f32, 0.0], vec![3.0f32, 2.0]];
+        assert_eq!(mean_param(&p), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn constraint_distance_zero_when_neighborhood_agrees() {
+        let g = ring(4);
+        // Nodes 0,1,3 (closed neighborhood of 0) equal; node 2 differs.
+        let p = vec![
+            vec![1.0f32],
+            vec![1.0f32],
+            vec![9.0f32],
+            vec![1.0f32],
+        ];
+        assert!(dist_to_constraint_sq(&p, &g, 0) < 1e-12);
+        assert!(dist_to_constraint_sq(&p, &g, 1) > 1.0);
+    }
+
+    #[test]
+    fn feasibility_relations() {
+        let g = ring(6);
+        let p: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32]).collect();
+        let f = feasibility(&p, &g);
+        assert!(f.df_sq > 0.0);
+        assert!(f.max_constraint_sq > 0.0);
+        // Each constraint involves a subset ⇒ its distance ≤ DF.
+        assert!(f.max_constraint_sq <= f.df_sq + 1e-9);
+        // Linear regularity: η·DF ≤ max_constraint for some η ∈ (0,1).
+        let eta = f.max_constraint_sq / f.df_sq;
+        assert!(eta > 0.0 && eta <= 1.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's Layer-3 contribution: the fully distributed,
+//! asynchronized SGD coordinator.
+//!
+//! * [`config`] — Alg. 2 hyperparameters + §IV policy knobs.
+//! * [`backend`] — compute backends (rust-native vs PJRT artifacts).
+//! * [`selector`] — §IV-A node selection (central + distributed geometric).
+//! * [`node`] — per-node state (β_i, local shard, private RNG).
+//! * [`trainer`] — sequential-event Alg. 2 (the figures' reference).
+//! * [`async_runtime`] — thread-per-node truly asynchronous runtime with
+//!   the §IV-C neighbor lock-up protocol.
+//! * [`consensus`] — d^k / DF(β) metrics.
+
+pub mod async_runtime;
+pub mod backend;
+pub mod config;
+pub mod consensus;
+pub mod node;
+pub mod selector;
+pub mod trainer;
+
+pub use async_runtime::{AsyncCluster, AsyncConfig, AsyncReport};
+pub use backend::{EvalBatch, NativeBackend, PjrtArtifacts, PjrtBackend, StepBackend};
+pub use config::{Backend, ConflictPolicy, SelectionMode, StepSize, TrainConfig};
+pub use node::NodeState;
+pub use selector::{CentralSelector, GeometricSelector, Slot};
+pub use trainer::{Counters, Trainer};

@@ -1,0 +1,217 @@
+//! Node selection (§IV-A) and conflict handling (§IV-C).
+//!
+//! Two mechanisms:
+//!
+//! * [`CentralSelector`] — the idealized uniform (or weighted) pick the
+//!   paper's analysis assumes. One node per slot, no conflicts.
+//! * [`GeometricSelector`] — the fully distributed §IV-A design: every
+//!   node independently draws a Geometric(p) countdown and "self-selects"
+//!   on reaching zero. Several nodes can fire in the same slot; whether
+//!   adjacent firings are serialized (lock-up) or applied anyway is the
+//!   §IV-C [`ConflictPolicy`](super::config::ConflictPolicy) decision
+//!   made by the trainer.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// The outcome of one selection slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slot {
+    /// Nodes that fired this slot (central: exactly one).
+    pub fired: Vec<usize>,
+    /// Empty slots skipped to reach this firing (distributed mode).
+    pub idle_slots: u64,
+}
+
+/// Uniform or weighted central selection — requires a coordinator in
+/// practice; the paper uses it for analysis and simulation.
+#[derive(Clone, Debug)]
+pub struct CentralSelector {
+    n: usize,
+    weights: Option<Vec<f64>>,
+}
+
+impl CentralSelector {
+    pub fn uniform(n: usize) -> Self {
+        assert!(n > 0);
+        Self { n, weights: None }
+    }
+
+    /// Non-uniform selection (§IV-A notes the geometric parameters can be
+    /// tuned per node; this is the central equivalent).
+    pub fn weighted(weights: Vec<f64>) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0));
+        assert!(weights.iter().sum::<f64>() > 0.0);
+        Self {
+            n: weights.len(),
+            weights: Some(weights),
+        }
+    }
+
+    pub fn next(&mut self, rng: &mut Xoshiro256pp) -> Slot {
+        let node = match &self.weights {
+            None => rng.index(self.n),
+            Some(w) => rng.weighted_index(w),
+        };
+        Slot {
+            fired: vec![node],
+            idle_slots: 0,
+        }
+    }
+}
+
+/// Distributed geometric-countdown selection (§IV-A).
+///
+/// Every node keeps an independent countdown sampled from Geometric(p_i).
+/// Each global slot decrements all countdowns; nodes at zero fire and
+/// redraw. No controller is involved — in a real deployment each node
+/// just sleeps for its own countdown. Simultaneous firings (ties) are
+/// returned together; the §IV-C conflict policy decides what happens to
+/// adjacent ones.
+#[derive(Clone, Debug)]
+pub struct GeometricSelector {
+    /// Remaining slots until each node fires.
+    countdown: Vec<u64>,
+    /// Per-node firing probability per slot.
+    p: Vec<f64>,
+    /// Per-node RNG streams — a node only uses local randomness.
+    rngs: Vec<Xoshiro256pp>,
+}
+
+impl GeometricSelector {
+    pub fn uniform(n: usize, p: f64, seed: u64) -> Self {
+        Self::with_rates(vec![p; n], seed)
+    }
+
+    /// Per-node rates: node i fires with probability p_i each slot, so
+    /// selection frequency is proportional to p_i (the §IV-A "carefully
+    /// design the parameter ... so that the probability for different
+    /// nodes to be selected is preferred").
+    pub fn with_rates(p: Vec<f64>, seed: u64) -> Self {
+        assert!(!p.is_empty());
+        assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0));
+        let mut root = Xoshiro256pp::seeded(seed);
+        let mut rngs: Vec<Xoshiro256pp> =
+            (0..p.len()).map(|i| root.split(i as u64)).collect();
+        let countdown = p
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(&pi, rng)| rng.geometric(pi))
+            .collect();
+        Self { countdown, p, rngs }
+    }
+
+    /// Advance to the next slot in which at least one node fires.
+    pub fn next(&mut self) -> Slot {
+        // Jump directly to the minimum countdown (equivalent to ticking
+        // slot by slot, without the O(idle) cost).
+        let min = *self.countdown.iter().min().unwrap();
+        let mut fired = Vec::new();
+        for (i, c) in self.countdown.iter_mut().enumerate() {
+            *c -= min;
+            if *c == 0 {
+                fired.push(i);
+                *c = self.rngs[i].geometric(self.p[i]);
+            }
+        }
+        debug_assert!(!fired.is_empty());
+        Slot {
+            fired,
+            idle_slots: min - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn central_uniform_covers_all_nodes() {
+        let mut sel = CentralSelector::uniform(10);
+        let mut rng = Xoshiro256pp::seeded(0);
+        let mut counts = vec![0usize; 10];
+        for _ in 0..20_000 {
+            let s = sel.next(&mut rng);
+            assert_eq!(s.fired.len(), 1);
+            counts[s.fired[0]] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 2000.0).abs() < 300.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn central_weighted_prefers_heavy_nodes() {
+        let mut sel = CentralSelector::weighted(vec![1.0, 3.0]);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let mut c = [0usize; 2];
+        for _ in 0..40_000 {
+            c[sel.next(&mut rng).fired[0]] += 1;
+        }
+        let ratio = c[1] as f64 / c[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn geometric_uniform_rates_select_uniformly() {
+        let mut sel = GeometricSelector::uniform(8, 0.05, 3);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..40_000 {
+            for i in sel.next().fired {
+                counts[i] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let expect = total as f64 / 8.0;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < expect * 0.1,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometric_rates_shape_selection_frequency() {
+        let mut sel = GeometricSelector::with_rates(vec![0.02, 0.08], 5);
+        let mut counts = [0usize; 2];
+        for _ in 0..30_000 {
+            for i in sel.next().fired {
+                counts[i] += 1;
+            }
+        }
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 4.0).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn geometric_produces_ties() {
+        // With high per-slot rates, simultaneous firings must occur —
+        // that's the §IV-C conflict scenario.
+        let mut sel = GeometricSelector::uniform(20, 0.3, 7);
+        let mut ties = 0;
+        for _ in 0..2000 {
+            if sel.next().fired.len() > 1 {
+                ties += 1;
+            }
+        }
+        assert!(ties > 100, "expected frequent ties, got {ties}");
+    }
+
+    #[test]
+    fn geometric_idle_slots_accounted() {
+        // With tiny rates, firings are sparse: idle slots dominate.
+        let mut sel = GeometricSelector::uniform(2, 0.001, 11);
+        let mut idle = 0u64;
+        let mut fired = 0u64;
+        for _ in 0..200 {
+            let s = sel.next();
+            idle += s.idle_slots;
+            fired += s.fired.len() as u64;
+        }
+        // E[slots per firing] ≈ 1/(n·p) = 500.
+        let per = idle as f64 / fired as f64;
+        assert!(per > 100.0, "idle per firing = {per}");
+    }
+}

@@ -1,0 +1,376 @@
+//! The Alg. 2 trainer: sequential-event implementation with the paper's
+//! exact iteration semantics (one update per k — a gradient step on the
+//! selected node with probability p_grad, otherwise the Eq. (7)
+//! projection onto the selected node's closed neighborhood).
+//!
+//! Selection can be central (the paper's analysis model) or the §IV-A
+//! distributed geometric countdown, in which case simultaneous firings
+//! are resolved by the §IV-C conflict policy. A truly concurrent,
+//! thread-per-node implementation lives in
+//! [`async_runtime`](super::async_runtime); this sequential one is the
+//! reference for the figures because its iteration counter k matches the
+//! paper's plots exactly.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::graph::Graph;
+use crate::metrics::{Record, Recorder};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::Stopwatch;
+
+use super::backend::{EvalBatch, StepBackend};
+use super::config::{ConflictPolicy, SelectionMode, TrainConfig};
+use super::consensus;
+use super::node::NodeState;
+use super::selector::{CentralSelector, GeometricSelector, Slot};
+
+/// Cumulative counters of a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    pub grad_steps: u64,
+    pub proj_steps: u64,
+    /// Point-to-point messages: projection = collect + broadcast
+    /// (2·|N_m|), lock-up adds lock + release (2·|N_m|) when enabled.
+    pub messages: u64,
+    /// Simultaneous-firing events whose closed neighborhoods intersected.
+    pub conflicts: u64,
+    /// Updates aborted by the lock-up protocol.
+    pub aborted: u64,
+}
+
+/// The networked-system trainer.
+pub struct Trainer<B: StepBackend> {
+    pub cfg: TrainConfig,
+    pub graph: Graph,
+    pub nodes: Vec<NodeState>,
+    backend: B,
+    central: Option<CentralSelector>,
+    distributed: Option<GeometricSelector>,
+    rng: Xoshiro256pp,
+    pub counters: Counters,
+    /// Paper iteration counter: applied updates.
+    pub k: u64,
+}
+
+impl<B: StepBackend> Trainer<B> {
+    /// Build a trainer: one node per graph vertex, each holding `shards[i]`.
+    pub fn new(cfg: TrainConfig, graph: Graph, shards: Vec<Dataset>, backend: B) -> Self {
+        assert_eq!(graph.len(), shards.len(), "one shard per node");
+        assert!(graph.is_connected(), "consensus needs a connected graph");
+        let dim = shards[0].dim();
+        let classes = shards[0].classes();
+        let param_len = dim * classes;
+        let mut root = Xoshiro256pp::seeded(cfg.seed);
+        let nodes: Vec<NodeState> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut node = NodeState::new(i, param_len, d, root.split(i as u64));
+                if cfg.init_scale > 0.0 {
+                    for v in &mut node.w {
+                        *v = node.rng.gauss_f32(0.0, cfg.init_scale);
+                    }
+                }
+                node
+            })
+            .collect();
+        let n = nodes.len();
+        let (central, distributed) = match cfg.selection {
+            SelectionMode::Central => (Some(CentralSelector::uniform(n)), None),
+            SelectionMode::DistributedGeometric { p } => (
+                None,
+                Some(GeometricSelector::uniform(n, p, cfg.seed ^ 0xD15C0)),
+            ),
+        };
+        Self {
+            rng: root.split(u64::MAX),
+            cfg,
+            graph,
+            nodes,
+            backend,
+            central,
+            distributed,
+            counters: Counters::default(),
+            k: 0,
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    /// Current parameter vectors (β_1, …, β_N).
+    pub fn params(&self) -> Vec<Vec<f32>> {
+        self.nodes.iter().map(|n| n.w.clone()).collect()
+    }
+
+    /// d^k for the current state.
+    pub fn consensus_distance(&self) -> f64 {
+        consensus::consensus_distance(&self.params())
+    }
+
+    /// One gradient step on node `m` (Eq. 6): only β_m changes.
+    fn grad_update(&mut self, m: usize) -> Result<()> {
+        let lr = self.cfg.stepsize.at(self.k);
+        let scale = 1.0 / self.nodes.len() as f32;
+        let batch = self.cfg.batch;
+        let (xs, labels) = self.nodes[m].draw_batch(batch);
+        let mut w = std::mem::take(&mut self.nodes[m].w);
+        self.backend.grad_step(&mut w, &xs, &labels, lr, scale)?;
+        self.nodes[m].w = w;
+        self.nodes[m].grad_steps += 1;
+        self.counters.grad_steps += 1;
+        Ok(())
+    }
+
+    /// One projection step on node `m` (Eq. 7): the closed neighborhood
+    /// {m} ∪ N_m moves to its average. Costs 2·|N_m| messages
+    /// (collect + broadcast).
+    fn proj_update(&mut self, m: usize) -> Result<()> {
+        let hood = self.graph.closed_neighborhood(m);
+        let rows: Vec<&[f32]> = hood.iter().map(|&i| self.nodes[i].w.as_slice()).collect();
+        let avg = self.backend.gossip_avg(&rows)?;
+        for &i in &hood {
+            self.nodes[i].w.copy_from_slice(&avg);
+        }
+        self.nodes[m].proj_steps += 1;
+        self.counters.proj_steps += 1;
+        self.counters.messages += 2 * (hood.len() as u64 - 1);
+        Ok(())
+    }
+
+    /// Apply Alg. 2's action for node `m`: gradient step w.p. p_grad,
+    /// projection otherwise. Increments k (an applied update).
+    fn act(&mut self, m: usize) -> Result<()> {
+        let r = self.rng.next_f64();
+        if r < self.cfg.p_grad {
+            self.grad_update(m)?;
+        } else {
+            self.proj_update(m)?;
+        }
+        self.k += 1;
+        Ok(())
+    }
+
+    /// Resolve one selection slot into applied updates, honoring the
+    /// §IV-C conflict policy for simultaneous firings.
+    fn process_slot(&mut self, slot: Slot) -> Result<()> {
+        if slot.fired.len() == 1 {
+            return self.act(slot.fired[0]);
+        }
+        // Simultaneous firings: count pairwise conflicts.
+        let mut fired = slot.fired;
+        self.rng.shuffle(&mut fired);
+        let mut locked: Vec<usize> = Vec::new();
+        for &m in &fired {
+            let conflicts_with_locked = locked
+                .iter()
+                .any(|&l| self.graph.closed_neighborhoods_intersect(m, l));
+            if conflicts_with_locked {
+                self.counters.conflicts += 1;
+                match self.cfg.conflicts {
+                    ConflictPolicy::LockUp => {
+                        // Lock-up messages were exchanged, then m backed
+                        // off: lock + release to each neighbor.
+                        self.counters.messages += 2 * self.graph.degree(m) as u64;
+                        self.counters.aborted += 1;
+                        continue;
+                    }
+                    ConflictPolicy::Ignore => {
+                        // Applied anyway (the "noisy" alternative).
+                    }
+                }
+            } else if self.cfg.conflicts == ConflictPolicy::LockUp {
+                // Successful lock-up: lock + release round.
+                self.counters.messages += 2 * self.graph.degree(m) as u64;
+            }
+            locked.push(m);
+            self.act(m)?;
+        }
+        Ok(())
+    }
+
+    /// Run until `k ≥ iters`, evaluating β̄ every `eval_every` applied
+    /// updates (k = 0 included). Returns the recorded series.
+    pub fn run(
+        &mut self,
+        iters: u64,
+        eval_every: u64,
+        test: &Dataset,
+        name: &str,
+    ) -> Result<Recorder> {
+        let test_batch = match self.backend.required_eval_rows() {
+            Some(rows) => EvalBatch::from_dataset_resized(test, rows),
+            None => EvalBatch::from_dataset(test),
+        };
+        let mut rec = Recorder::new(name);
+        let sw = Stopwatch::new();
+        self.record(&mut rec, &test_batch, &sw)?;
+        let mut next_eval = eval_every;
+        while self.k < iters {
+            let slot = match (&mut self.central, &mut self.distributed) {
+                (Some(c), _) => c.next(&mut self.rng),
+                (_, Some(d)) => d.next(),
+                _ => unreachable!(),
+            };
+            self.process_slot(slot)?;
+            if self.k >= next_eval {
+                self.record(&mut rec, &test_batch, &sw)?;
+                next_eval += eval_every;
+            }
+        }
+        self.record(&mut rec, &test_batch, &sw)?;
+        Ok(rec)
+    }
+
+    fn record(&mut self, rec: &mut Recorder, test: &EvalBatch, sw: &Stopwatch) -> Result<()> {
+        let params = self.params();
+        let mean = consensus::mean_param(&params);
+        let (loss, err) = self.backend.evaluate(&mean, test)?;
+        rec.push(Record {
+            k: self.k,
+            time_secs: sw.elapsed_secs(),
+            consensus: consensus::consensus_distance(&params),
+            test_loss: loss as f64,
+            test_err: err as f64,
+            grad_steps: self.counters.grad_steps,
+            proj_steps: self.counters.proj_steps,
+            messages: self.counters.messages,
+            conflicts: self.counters.conflicts,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::data::SyntheticGen;
+    use crate::graph::regular_circulant;
+
+    fn small_setup(
+        n: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Graph, Vec<Dataset>, Dataset, NativeBackend) {
+        let gen = SyntheticGen::new(n, 10, 4, 2.0, 0.5, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed ^ 1);
+        let shards = (0..n).map(|i| gen.node_dataset(i, 80, &mut rng)).collect();
+        let test = gen.global_test_set(200, &mut rng);
+        (
+            regular_circulant(n, k),
+            shards,
+            test,
+            NativeBackend::new(10, 4),
+        )
+    }
+
+    #[test]
+    fn alg2_reaches_consensus_and_learns() {
+        let (g, shards, test, backend) = small_setup(8, 4, 3);
+        let cfg = TrainConfig::paper_default(8).with_seed(5);
+        let mut t = Trainer::new(cfg, g, shards, backend);
+        let rec = t.run(6000, 1000, &test, "test").unwrap();
+        let first = &rec.records[0];
+        let last = rec.last().unwrap();
+        // Consensus distance shrinks by a lot.
+        assert!(
+            last.consensus < first.consensus.max(1.0) * 0.5 || last.consensus < 1.0,
+            "consensus {} -> {}",
+            first.consensus,
+            last.consensus
+        );
+        // Better than random guessing (0.75 for 4 classes).
+        assert!(last.test_err < 0.5, "err={}", last.test_err);
+        // Both step kinds happened, roughly half/half.
+        let total = t.counters.grad_steps + t.counters.proj_steps;
+        assert_eq!(total, t.k);
+        let frac = t.counters.grad_steps as f64 / total as f64;
+        assert!((frac - 0.5).abs() < 0.1, "grad fraction {frac}");
+        // Projections exchanged messages.
+        assert!(t.counters.messages > 0);
+    }
+
+    #[test]
+    fn p_grad_one_never_projects() {
+        let (g, shards, test, backend) = small_setup(6, 2, 7);
+        let cfg = TrainConfig::paper_default(6).with_p_grad(1.0).with_seed(1);
+        let mut t = Trainer::new(cfg, g, shards, backend);
+        t.run(500, 250, &test, "t").unwrap();
+        assert_eq!(t.counters.proj_steps, 0);
+        assert_eq!(t.counters.grad_steps, 500);
+        assert_eq!(t.counters.messages, 0);
+    }
+
+    #[test]
+    fn p_grad_zero_is_pure_consensus() {
+        let (g, shards, test, backend) = small_setup(6, 2, 9);
+        let cfg = TrainConfig::paper_default(6).with_p_grad(0.0).with_seed(2);
+        let mut t = Trainer::new(cfg, g, shards, backend);
+        // Seed the nodes with distinct params, then gossip only.
+        for (i, node) in t.nodes.iter_mut().enumerate() {
+            node.w.iter_mut().for_each(|v| *v = i as f32);
+        }
+        let d0 = t.consensus_distance();
+        t.run(400, 200, &test, "t").unwrap();
+        assert_eq!(t.counters.grad_steps, 0);
+        let d1 = t.consensus_distance();
+        assert!(d1 < d0 * 1e-3, "consensus {d0} -> {d1}");
+    }
+
+    #[test]
+    fn distributed_selection_matches_central_statistics() {
+        let (g, shards, test, backend) = small_setup(8, 4, 11);
+        let cfg = TrainConfig {
+            selection: SelectionMode::DistributedGeometric { p: 0.1 },
+            ..TrainConfig::paper_default(8)
+        }
+        .with_seed(3);
+        let mut t = Trainer::new(cfg, g, shards, backend);
+        let rec = t.run(4000, 2000, &test, "t").unwrap();
+        // Conflicts occurred (p is high enough for ties on 8 nodes)...
+        assert!(t.counters.conflicts > 0, "expected ties at p=0.1");
+        // ...and training still works.
+        assert!(rec.last().unwrap().test_err < 0.55);
+        // Every node got selected.
+        assert!(t.nodes.iter().all(|n| n.grad_steps + n.proj_steps > 0));
+    }
+
+    #[test]
+    fn lockup_aborts_ignore_does_not() {
+        let mk = |policy| {
+            let (g, shards, test, backend) = small_setup(8, 4, 13);
+            let cfg = TrainConfig {
+                selection: SelectionMode::DistributedGeometric { p: 0.25 },
+                conflicts: policy,
+                ..TrainConfig::paper_default(8)
+            }
+            .with_seed(4);
+            let mut t = Trainer::new(cfg, g, shards, backend);
+            t.run(2000, 2000, &test, "t").unwrap();
+            t.counters
+        };
+        let lock = mk(ConflictPolicy::LockUp);
+        let ignore = mk(ConflictPolicy::Ignore);
+        assert!(lock.aborted > 0);
+        assert_eq!(ignore.aborted, 0);
+        assert!(ignore.conflicts > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "connected")]
+    fn disconnected_graph_rejected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        let gen = SyntheticGen::new(4, 10, 4, 2.0, 0.5, 0.3, 1);
+        let mut rng = Xoshiro256pp::seeded(2);
+        let shards = (0..4).map(|i| gen.node_dataset(i, 10, &mut rng)).collect();
+        Trainer::new(
+            TrainConfig::paper_default(4),
+            g,
+            shards,
+            NativeBackend::new(10, 4),
+        );
+    }
+}

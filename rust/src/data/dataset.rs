@@ -1,0 +1,180 @@
+//! Dataset container: flat row-major feature storage + labels.
+
+/// A borrowed view of one sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample<'a> {
+    pub features: &'a [f32],
+    pub label: usize,
+}
+
+/// In-memory classification dataset, row-major features.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    dim: usize,
+    classes: usize,
+    features: Vec<f32>,
+    labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(dim: usize, classes: usize) -> Self {
+        Self {
+            dim,
+            classes,
+            features: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(dim: usize, classes: usize, n: usize) -> Self {
+        Self {
+            dim,
+            classes,
+            features: Vec::with_capacity(n * dim),
+            labels: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn push(&mut self, features: &[f32], label: usize) {
+        assert_eq!(features.len(), self.dim, "feature dim mismatch");
+        assert!(label < self.classes, "label out of range");
+        self.features.extend_from_slice(features);
+        self.labels.push(label);
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn sample(&self, i: usize) -> Sample<'_> {
+        Sample {
+            features: &self.features[i * self.dim..(i + 1) * self.dim],
+            label: self.labels[i],
+        }
+    }
+
+    pub fn features_flat(&self) -> &[f32] {
+        &self.features
+    }
+
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+
+    /// One-hot encode labels into a flat row-major (n × classes) buffer.
+    pub fn one_hot_labels(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len() * self.classes];
+        for (i, &l) in self.labels.iter().enumerate() {
+            out[i * self.classes + l] = 1.0;
+        }
+        out
+    }
+
+    /// Copy rows `idx` into a new dataset (sharding / subsampling).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut out = Dataset::with_capacity(self.dim, self.classes, idx.len());
+        for &i in idx {
+            let s = self.sample(i);
+            out.push(s.features, s.label);
+        }
+        out
+    }
+
+    /// Append all samples of `other`.
+    pub fn extend(&mut self, other: &Dataset) {
+        assert_eq!(self.dim, other.dim);
+        assert_eq!(self.classes, other.classes);
+        self.features.extend_from_slice(&other.features);
+        self.labels.extend_from_slice(&other.labels);
+    }
+
+    /// Truncate/pad to exactly `n` rows; padding repeats rows cyclically
+    /// (used to hit the fixed 256-row eval-artifact shape).
+    pub fn resized_cyclic(&self, n: usize) -> Dataset {
+        assert!(!self.is_empty());
+        let idx: Vec<usize> = (0..n).map(|i| i % self.len()).collect();
+        self.subset(&idx)
+    }
+
+    /// Per-class counts (distribution diagnostics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &l in &self.labels {
+            counts[l] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut d = Dataset::new(2, 3);
+        d.push(&[1.0, 2.0], 0);
+        d.push(&[3.0, 4.0], 2);
+        d.push(&[5.0, 6.0], 1);
+        d
+    }
+
+    #[test]
+    fn push_and_view() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.sample(1).features, &[3.0, 4.0]);
+        assert_eq!(d.sample(1).label, 2);
+        assert_eq!(d.class_counts(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn one_hot() {
+        let d = tiny();
+        let oh = d.one_hot_labels();
+        assert_eq!(
+            oh,
+            vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 1.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn subset_and_extend() {
+        let d = tiny();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.sample(0).label, 1);
+        let mut e = d.clone();
+        e.extend(&s);
+        assert_eq!(e.len(), 5);
+    }
+
+    #[test]
+    fn resize_cyclic() {
+        let d = tiny();
+        let r = d.resized_cyclic(7);
+        assert_eq!(r.len(), 7);
+        assert_eq!(r.sample(3).label, d.sample(0).label);
+        assert_eq!(r.sample(6).label, d.sample(0).label);
+        let t = d.resized_cyclic(2);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn rejects_bad_label() {
+        let mut d = Dataset::new(2, 3);
+        d.push(&[0.0, 0.0], 3);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: datasets, the §V synthetic generator, and the
+//! notMNIST-like glyph corpus (offline substitute — see DESIGN.md §3).
+
+mod dataset;
+mod notmnist;
+mod synthetic;
+
+pub use dataset::{Dataset, Sample};
+pub use notmnist::{ascii_art, render_glyph, GlyphStyle, NotMnistGen, GLYPH_CLASSES, GLYPH_DIM, GLYPH_SIDE};
+pub use synthetic::SyntheticGen;

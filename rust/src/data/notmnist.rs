@@ -1,0 +1,343 @@
+//! notMNIST-like glyph corpus (offline substitute for the 12 GB dataset).
+//!
+//! The paper's §V-E uses notMNIST: images of the letters A–J in many
+//! fonts, 10 classes, 256 features (16×16). That download is unavailable
+//! offline, so this module synthesizes an equivalent corpus: each letter
+//! is a stroke skeleton (line segments in the unit square) rasterized at
+//! 16×16 with anti-aliasing, under per-sample affine jitter (rotation,
+//! scale, translation, slant), per-node style parameters (stroke width,
+//! slant bias — playing the role of "fonts" concentrated on nodes so
+//! node distributions differ), and pixel noise. The result exercises the
+//! identical code path (D=256, C=10 multinomial logistic regression) with
+//! comparable class overlap; see DESIGN.md §3.
+
+use super::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+pub const GLYPH_SIDE: usize = 16;
+pub const GLYPH_DIM: usize = GLYPH_SIDE * GLYPH_SIDE; // 256, as in §V-E
+pub const GLYPH_CLASSES: usize = 10; // letters A..J
+
+type Seg = ((f32, f32), (f32, f32));
+
+/// Stroke skeletons for A–J in the unit square, y growing downwards.
+fn skeleton(class: usize) -> Vec<Seg> {
+    match class {
+        // A
+        0 => vec![
+            ((0.5, 0.05), (0.1, 0.95)),
+            ((0.5, 0.05), (0.9, 0.95)),
+            ((0.25, 0.6), (0.75, 0.6)),
+        ],
+        // B
+        1 => vec![
+            ((0.2, 0.05), (0.2, 0.95)),
+            ((0.2, 0.05), (0.7, 0.15)),
+            ((0.7, 0.15), (0.7, 0.4)),
+            ((0.7, 0.4), (0.2, 0.5)),
+            ((0.2, 0.5), (0.75, 0.6)),
+            ((0.75, 0.6), (0.75, 0.85)),
+            ((0.75, 0.85), (0.2, 0.95)),
+        ],
+        // C
+        2 => vec![
+            ((0.85, 0.2), (0.5, 0.05)),
+            ((0.5, 0.05), (0.15, 0.3)),
+            ((0.15, 0.3), (0.15, 0.7)),
+            ((0.15, 0.7), (0.5, 0.95)),
+            ((0.5, 0.95), (0.85, 0.8)),
+        ],
+        // D
+        3 => vec![
+            ((0.2, 0.05), (0.2, 0.95)),
+            ((0.2, 0.05), (0.65, 0.15)),
+            ((0.65, 0.15), (0.85, 0.5)),
+            ((0.85, 0.5), (0.65, 0.85)),
+            ((0.65, 0.85), (0.2, 0.95)),
+        ],
+        // E
+        4 => vec![
+            ((0.2, 0.05), (0.2, 0.95)),
+            ((0.2, 0.05), (0.85, 0.05)),
+            ((0.2, 0.5), (0.7, 0.5)),
+            ((0.2, 0.95), (0.85, 0.95)),
+        ],
+        // F
+        5 => vec![
+            ((0.2, 0.05), (0.2, 0.95)),
+            ((0.2, 0.05), (0.85, 0.05)),
+            ((0.2, 0.5), (0.7, 0.5)),
+        ],
+        // G
+        6 => vec![
+            ((0.85, 0.2), (0.5, 0.05)),
+            ((0.5, 0.05), (0.15, 0.3)),
+            ((0.15, 0.3), (0.15, 0.7)),
+            ((0.15, 0.7), (0.5, 0.95)),
+            ((0.5, 0.95), (0.85, 0.8)),
+            ((0.85, 0.8), (0.85, 0.55)),
+            ((0.85, 0.55), (0.55, 0.55)),
+        ],
+        // H
+        7 => vec![
+            ((0.2, 0.05), (0.2, 0.95)),
+            ((0.8, 0.05), (0.8, 0.95)),
+            ((0.2, 0.5), (0.8, 0.5)),
+        ],
+        // I
+        8 => vec![
+            ((0.5, 0.05), (0.5, 0.95)),
+            ((0.3, 0.05), (0.7, 0.05)),
+            ((0.3, 0.95), (0.7, 0.95)),
+        ],
+        // J
+        9 => vec![
+            ((0.65, 0.05), (0.65, 0.75)),
+            ((0.65, 0.75), (0.45, 0.95)),
+            ((0.45, 0.95), (0.2, 0.8)),
+            ((0.4, 0.05), (0.9, 0.05)),
+        ],
+        _ => panic!("glyph class out of range"),
+    }
+}
+
+fn dist_to_seg(px: f32, py: f32, seg: &Seg) -> f32 {
+    let ((x1, y1), (x2, y2)) = *seg;
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let len_sq = dx * dx + dy * dy;
+    let t = if len_sq <= 1e-12 {
+        0.0
+    } else {
+        (((px - x1) * dx + (py - y1) * dy) / len_sq).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (x1 + t * dx, y1 + t * dy);
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+/// Affine jitter parameters for one sample.
+#[derive(Clone, Copy, Debug)]
+pub struct GlyphStyle {
+    pub rotation: f32,
+    pub scale: f32,
+    pub slant: f32,
+    pub dx: f32,
+    pub dy: f32,
+    pub thickness: f32,
+    pub noise_std: f32,
+}
+
+impl Default for GlyphStyle {
+    fn default() -> Self {
+        Self {
+            rotation: 0.0,
+            scale: 1.0,
+            slant: 0.0,
+            dx: 0.0,
+            dy: 0.0,
+            thickness: 0.055,
+            noise_std: 0.0,
+        }
+    }
+}
+
+/// Rasterize one letter (class 0..=9) with the given style into a
+/// GLYPH_DIM-length pixel vector in [0, 1] (plus optional noise).
+pub fn render_glyph(class: usize, style: &GlyphStyle, rng: &mut Xoshiro256pp) -> Vec<f32> {
+    let segs = skeleton(class);
+    let (sin, cos) = style.rotation.sin_cos();
+    let mut out = vec![0.0f32; GLYPH_DIM];
+    for row in 0..GLYPH_SIDE {
+        for col in 0..GLYPH_SIDE {
+            // Pixel center in the unit square, inverse-transformed into
+            // glyph coordinates.
+            let px = (col as f32 + 0.5) / GLYPH_SIDE as f32;
+            let py = (row as f32 + 0.5) / GLYPH_SIDE as f32;
+            // Undo translation, then rotation/scale/slant about center.
+            let (ux, uy) = (px - 0.5 - style.dx, py - 0.5 - style.dy);
+            let (rx, ry) = (ux * cos + uy * sin, -ux * sin + uy * cos);
+            let gx = rx / style.scale - style.slant * ry + 0.5;
+            let gy = ry / style.scale + 0.5;
+            let d = segs
+                .iter()
+                .map(|s| dist_to_seg(gx, gy, s))
+                .fold(f32::INFINITY, f32::min);
+            // Smooth ink falloff around the stroke (anti-aliasing).
+            let ink = 1.0 - ((d - style.thickness) / 0.03).clamp(0.0, 1.0);
+            let noise = if style.noise_std > 0.0 {
+                rng.gauss_f32(0.0, style.noise_std)
+            } else {
+                0.0
+            };
+            out[row * GLYPH_SIDE + col] = (ink + noise).clamp(0.0, 1.0);
+        }
+    }
+    out
+}
+
+/// Per-node notMNIST-like generator. Each node gets "font" biases
+/// (thickness, slant, rotation bias) and skewed class priors, so — as in
+/// §V-A — node distributions differ.
+#[derive(Clone, Debug)]
+pub struct NotMnistGen {
+    nodes: usize,
+    node_thickness: Vec<f32>,
+    node_slant: Vec<f32>,
+    node_rot_bias: Vec<f32>,
+    priors: Vec<f64>,
+    noise_std: f32,
+}
+
+impl NotMnistGen {
+    pub fn new(nodes: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let node_thickness = (0..nodes)
+            .map(|_| 0.045 + rng.next_f32() * 0.035)
+            .collect();
+        let node_slant = (0..nodes).map(|_| rng.gauss_f32(0.0, 0.18)).collect();
+        let node_rot_bias = (0..nodes).map(|_| rng.gauss_f32(0.0, 0.08)).collect();
+        let mut priors = Vec::with_capacity(nodes * GLYPH_CLASSES);
+        for _ in 0..nodes {
+            let mut p: Vec<f64> = (0..GLYPH_CLASSES).map(|_| 0.3 + rng.next_f64()).collect();
+            for _ in 0..2 {
+                let c = rng.index(GLYPH_CLASSES);
+                p[c] *= 2.5;
+            }
+            let total: f64 = p.iter().sum();
+            priors.extend(p.into_iter().map(|x| x / total));
+        }
+        Self {
+            nodes,
+            node_thickness,
+            node_slant,
+            node_rot_bias,
+            priors,
+            noise_std: 0.12,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Draw one (image, label) from node `i`'s distribution.
+    pub fn draw(&self, node: usize, rng: &mut Xoshiro256pp) -> (Vec<f32>, usize) {
+        assert!(node < self.nodes);
+        let priors = &self.priors[node * GLYPH_CLASSES..(node + 1) * GLYPH_CLASSES];
+        let class = rng.weighted_index(priors);
+        let style = GlyphStyle {
+            rotation: self.node_rot_bias[node] + rng.gauss_f32(0.0, 0.08),
+            scale: 0.82 + rng.next_f32() * 0.3,
+            slant: self.node_slant[node] + rng.gauss_f32(0.0, 0.06),
+            dx: rng.gauss_f32(0.0, 0.04),
+            dy: rng.gauss_f32(0.0, 0.04),
+            thickness: self.node_thickness[node] + rng.gauss_f32(0.0, 0.006),
+            noise_std: self.noise_std,
+        };
+        (render_glyph(class, &style, rng), class)
+    }
+
+    pub fn node_dataset(&self, node: usize, n: usize, rng: &mut Xoshiro256pp) -> Dataset {
+        let mut d = Dataset::with_capacity(GLYPH_DIM, GLYPH_CLASSES, n);
+        for _ in 0..n {
+            let (x, y) = self.draw(node, rng);
+            d.push(&x, y);
+        }
+        d
+    }
+
+    /// Global mixture test set (node chosen uniformly per sample).
+    pub fn global_test_set(&self, n: usize, rng: &mut Xoshiro256pp) -> Dataset {
+        let mut d = Dataset::with_capacity(GLYPH_DIM, GLYPH_CLASSES, n);
+        for _ in 0..n {
+            let node = rng.index(self.nodes);
+            let (x, y) = self.draw(node, rng);
+            d.push(&x, y);
+        }
+        d
+    }
+}
+
+/// ASCII-art dump of one glyph (Fig. 5 stand-in, CLI `dasgd glyphs`).
+pub fn ascii_art(pixels: &[f32]) -> String {
+    assert_eq!(pixels.len(), GLYPH_DIM);
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let mut out = String::with_capacity(GLYPH_DIM + GLYPH_SIDE);
+    for row in 0..GLYPH_SIDE {
+        for col in 0..GLYPH_SIDE {
+            let v = pixels[row * GLYPH_SIDE + col].clamp(0.0, 1.0);
+            let idx = ((v * (ramp.len() - 1) as f32).round() as usize).min(ramp.len() - 1);
+            out.push(ramp[idx] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_produces_ink_in_bounds() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        for class in 0..GLYPH_CLASSES {
+            let img = render_glyph(class, &GlyphStyle::default(), &mut rng);
+            assert_eq!(img.len(), GLYPH_DIM);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 5.0, "class {class} nearly blank: ink={ink}");
+            assert!(ink < GLYPH_DIM as f32 * 0.7, "class {class} all ink");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Clean renders of different letters must differ substantially.
+        let mut rng = Xoshiro256pp::seeded(2);
+        let imgs: Vec<Vec<f32>> = (0..GLYPH_CLASSES)
+            .map(|c| render_glyph(c, &GlyphStyle::default(), &mut rng))
+            .collect();
+        for a in 0..GLYPH_CLASSES {
+            for b in (a + 1)..GLYPH_CLASSES {
+                let d = crate::linalg::dist2_sq(&imgs[a], &imgs[b]).sqrt();
+                assert!(d > 1.0, "classes {a} and {b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let gen = NotMnistGen::new(4, 9);
+        let mut r1 = Xoshiro256pp::seeded(5);
+        let mut r2 = Xoshiro256pp::seeded(5);
+        assert_eq!(gen.draw(1, &mut r1), gen.draw(1, &mut r2));
+    }
+
+    #[test]
+    fn node_styles_differ() {
+        let gen = NotMnistGen::new(8, 11);
+        let t: Vec<f32> = gen.node_thickness.clone();
+        assert!(t.iter().any(|&x| (x - t[0]).abs() > 1e-3));
+    }
+
+    #[test]
+    fn datasets_have_declared_shape() {
+        let gen = NotMnistGen::new(3, 13);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let d = gen.node_dataset(0, 40, &mut rng);
+        assert_eq!(d.dim(), 256);
+        assert_eq!(d.classes(), 10);
+        assert_eq!(d.len(), 40);
+        let t = gen.global_test_set(64, &mut rng);
+        assert_eq!(t.len(), 64);
+    }
+
+    #[test]
+    fn ascii_art_shape() {
+        let mut rng = Xoshiro256pp::seeded(3);
+        let img = render_glyph(0, &GlyphStyle::default(), &mut rng);
+        let art = ascii_art(&img);
+        assert_eq!(art.lines().count(), GLYPH_SIDE);
+        assert!(art.lines().all(|l| l.chars().count() == GLYPH_SIDE));
+    }
+}

@@ -1,0 +1,202 @@
+//! §V-A synthetic generator: 10-class / 50-feature classification where
+//! **every node has its own distribution** — node-specific class means and
+//! skewed class priors — so "training with only one or several nodes will
+//! deviate from the global optimality" (paper §V-A), plus additive noise
+//! on generated samples (§V-C).
+
+use super::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// Generator of per-node data distributions.
+#[derive(Clone, Debug)]
+pub struct SyntheticGen {
+    dim: usize,
+    classes: usize,
+    nodes: usize,
+    /// Global class means, row-major (classes × dim).
+    global_means: Vec<f32>,
+    /// Per-node mean offsets, row-major (nodes × classes × dim).
+    node_offsets: Vec<f32>,
+    /// Per-node class priors, row-major (nodes × classes).
+    priors: Vec<f64>,
+    noise_std: f32,
+}
+
+impl SyntheticGen {
+    /// The paper's setting: `classes = 10`, `dim = 50`, with enough
+    /// class overlap + per-node skew + sample noise that the error curve
+    /// decays gradually over tens of thousands of iterations (§V-C adds
+    /// noise to the generated samples; a perfectly separable mixture
+    /// would hit zero error immediately and show none of the paper's
+    /// dynamics).
+    pub fn paper_default(nodes: usize, seed: u64) -> Self {
+        Self::new(nodes, 50, 10, 0.5, 0.7, 1.0, seed)
+    }
+
+    /// * `sep` — spread of the global class means (separability).
+    /// * `node_skew` — magnitude of node-specific mean offsets.
+    /// * `noise_std` — additive sample noise.
+    pub fn new(
+        nodes: usize,
+        dim: usize,
+        classes: usize,
+        sep: f32,
+        node_skew: f32,
+        noise_std: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let global_means: Vec<f32> = (0..classes * dim)
+            .map(|_| rng.gauss_f32(0.0, sep))
+            .collect();
+        let node_offsets: Vec<f32> = (0..nodes * classes * dim)
+            .map(|_| rng.gauss_f32(0.0, node_skew))
+            .collect();
+        // Skewed priors: each node prefers a random subset of classes.
+        let mut priors = Vec::with_capacity(nodes * classes);
+        for _ in 0..nodes {
+            let mut p: Vec<f64> = (0..classes).map(|_| 0.2 + rng.next_f64()).collect();
+            // Boost 3 favored classes by 3x.
+            for _ in 0..3 {
+                let c = rng.index(classes);
+                p[c] *= 3.0;
+            }
+            let total: f64 = p.iter().sum();
+            priors.extend(p.into_iter().map(|x| x / total));
+        }
+        Self {
+            dim,
+            classes,
+            nodes,
+            global_means,
+            node_offsets,
+            priors,
+            noise_std,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn mean_of(&self, node: usize, class: usize) -> Vec<f32> {
+        let g = &self.global_means[class * self.dim..(class + 1) * self.dim];
+        let off_base = (node * self.classes + class) * self.dim;
+        let o = &self.node_offsets[off_base..off_base + self.dim];
+        g.iter().zip(o).map(|(a, b)| a + b).collect()
+    }
+
+    /// Draw one sample from node `i`'s distribution V_i.
+    pub fn draw(&self, node: usize, rng: &mut Xoshiro256pp) -> (Vec<f32>, usize) {
+        assert!(node < self.nodes);
+        let priors = &self.priors[node * self.classes..(node + 1) * self.classes];
+        let class = rng.weighted_index(priors);
+        let mean = self.mean_of(node, class);
+        let x = mean
+            .iter()
+            .map(|m| m + rng.gauss_f32(0.0, self.noise_std))
+            .collect();
+        (x, class)
+    }
+
+    /// Generate a node-local dataset of `n` samples.
+    pub fn node_dataset(&self, node: usize, n: usize, rng: &mut Xoshiro256pp) -> Dataset {
+        let mut d = Dataset::with_capacity(self.dim, self.classes, n);
+        for _ in 0..n {
+            let (x, y) = self.draw(node, rng);
+            d.push(&x, y);
+        }
+        d
+    }
+
+    /// Global test set: the mixture (1/N) Σ_i V_i of Problem (2) — node
+    /// chosen uniformly per sample.
+    pub fn global_test_set(&self, n: usize, rng: &mut Xoshiro256pp) -> Dataset {
+        let mut d = Dataset::with_capacity(self.dim, self.classes, n);
+        for _ in 0..n {
+            let node = rng.index(self.nodes);
+            let (x, y) = self.draw(node, rng);
+            d.push(&x, y);
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_shapes() {
+        let gen = SyntheticGen::paper_default(30, 7);
+        assert_eq!(gen.dim(), 50);
+        assert_eq!(gen.classes(), 10);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let d = gen.node_dataset(3, 100, &mut rng);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.dim(), 50);
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let gen = SyntheticGen::paper_default(5, 7);
+        let mut r1 = Xoshiro256pp::seeded(3);
+        let mut r2 = Xoshiro256pp::seeded(3);
+        let (x1, y1) = gen.draw(2, &mut r1);
+        let (x2, y2) = gen.draw(2, &mut r2);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn nodes_have_different_distributions() {
+        let gen = SyntheticGen::paper_default(10, 11);
+        // Node-conditional class means differ across nodes.
+        let m0 = gen.mean_of(0, 0);
+        let m1 = gen.mean_of(1, 0);
+        let dist = crate::linalg::dist2_sq(&m0, &m1).sqrt();
+        assert!(dist > 0.5, "node means too close: {dist}");
+        // Priors are skewed: some class ≥ 2x another, and all sum to 1.
+        let mut rng = Xoshiro256pp::seeded(5);
+        let d = gen.node_dataset(0, 2000, &mut rng);
+        let counts = d.class_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 1.5, "priors not skewed: {counts:?}");
+    }
+
+    #[test]
+    fn global_test_set_mixes_nodes() {
+        let gen = SyntheticGen::paper_default(10, 13);
+        let mut rng = Xoshiro256pp::seeded(17);
+        let t = gen.global_test_set(1000, &mut rng);
+        assert_eq!(t.len(), 1000);
+        // All classes appear in the global mixture.
+        assert!(t.class_counts().iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn noise_is_applied() {
+        let gen = SyntheticGen::new(2, 8, 2, 2.0, 0.0, 0.5, 1);
+        let mut rng = Xoshiro256pp::seeded(2);
+        // Two draws of the same class differ (noise), but correlate with
+        // the class mean.
+        let mut xs = Vec::new();
+        for _ in 0..50 {
+            let (x, y) = gen.draw(0, &mut rng);
+            if y == 0 {
+                xs.push(x);
+            }
+        }
+        assert!(xs.len() > 5);
+        assert_ne!(xs[0], xs[1]);
+    }
+}

@@ -1,0 +1,229 @@
+//! §IV ablations:
+//!
+//! * **Communication overhead (§IV-B)** — sweep the gradient-step
+//!   probability p_grad: fewer projections = fewer messages but slower
+//!   consensus. The paper states the trade-off; we measure it.
+//! * **Update conflicts (§IV-C)** — distributed geometric selection at
+//!   increasing firing rates: conflict frequency, and lock-up vs
+//!   ignore-conflicts accuracy.
+//! * **Topology families** (extension) — consensus speed across ring /
+//!   random-regular / two-cluster / complete at 30 nodes.
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    ConflictPolicy, NativeBackend, SelectionMode, TrainConfig, Trainer,
+};
+use crate::graph::{self, Graph};
+use crate::metrics::Table;
+
+use super::{make_regular, scaled, synth_world};
+
+// ---------------------------------------------------------------------------
+// §IV-B: communication vs consensus
+// ---------------------------------------------------------------------------
+
+pub struct CommRow {
+    pub p_grad: f64,
+    pub messages: u64,
+    pub final_consensus: f64,
+    pub final_err: f64,
+}
+
+pub fn comm_overhead(scale: f64, seed: u64) -> Result<Vec<CommRow>> {
+    let n = 30;
+    let iters = scaled(10_000, scale, 500);
+    let mut rows = Vec::new();
+    for &p in &[0.1, 0.3, 0.5, 0.7, 0.9] {
+        let (shards, test) = synth_world(n, 200, 256, seed);
+        let cfg = TrainConfig::paper_default(n)
+            .with_p_grad(p)
+            .with_init_scale(0.5)
+            .with_seed(seed ^ (p * 100.0) as u64);
+        let mut t = Trainer::new(cfg, make_regular(n, 4), shards, NativeBackend::new(50, 10));
+        let rec = t.run(iters, iters, &test, "comm")?;
+        rows.push(CommRow {
+            p_grad: p,
+            messages: t.counters.messages,
+            final_consensus: rec.last().unwrap().consensus,
+            final_err: rec.final_err(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn comm_table(rows: &[CommRow]) -> Table {
+    let mut t = Table::new(&["p_grad", "messages", "final d^k", "final err"]);
+    for r in rows {
+        t.row(&[
+            format!("{:.1}", r.p_grad),
+            format!("{}", r.messages),
+            format!("{:.3}", r.final_consensus),
+            format!("{:.3}", r.final_err),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// §IV-C: conflicts
+// ---------------------------------------------------------------------------
+
+pub struct ConflictRow {
+    pub rate: f64,
+    pub policy: &'static str,
+    pub conflicts: u64,
+    pub aborted: u64,
+    pub messages: u64,
+    pub final_err: f64,
+}
+
+pub fn conflicts(scale: f64, seed: u64) -> Result<Vec<ConflictRow>> {
+    let n = 20;
+    let iters = scaled(6_000, scale, 400);
+    let mut rows = Vec::new();
+    for &rate in &[0.02, 0.1, 0.3] {
+        for (policy, name) in [
+            (ConflictPolicy::LockUp, "lock-up"),
+            (ConflictPolicy::Ignore, "ignore"),
+        ] {
+            let (shards, test) = synth_world(n, 200, 256, seed);
+            let cfg = TrainConfig {
+                selection: SelectionMode::DistributedGeometric { p: rate },
+                conflicts: policy,
+                ..TrainConfig::paper_default(n)
+            }
+            .with_seed(seed ^ (rate * 1000.0) as u64);
+            let mut t =
+                Trainer::new(cfg, make_regular(n, 4), shards, NativeBackend::new(50, 10));
+            let rec = t.run(iters, iters, &test, "conflict")?;
+            rows.push(ConflictRow {
+                rate,
+                policy: name,
+                conflicts: t.counters.conflicts,
+                aborted: t.counters.aborted,
+                messages: t.counters.messages,
+                final_err: rec.final_err(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn conflict_table(rows: &[ConflictRow]) -> Table {
+    let mut t = Table::new(&[
+        "fire rate",
+        "policy",
+        "conflicts",
+        "aborted",
+        "messages",
+        "final err",
+    ]);
+    for r in rows {
+        t.row(&[
+            format!("{:.2}", r.rate),
+            r.policy.into(),
+            format!("{}", r.conflicts),
+            format!("{}", r.aborted),
+            format!("{}", r.messages),
+            format!("{:.3}", r.final_err),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Topology families (extension)
+// ---------------------------------------------------------------------------
+
+pub struct TopologyRow {
+    pub name: String,
+    pub edges: usize,
+    pub diameter: usize,
+    pub final_consensus: f64,
+    pub final_err: f64,
+}
+
+pub fn topologies(scale: f64, seed: u64) -> Result<Vec<TopologyRow>> {
+    let n = 30;
+    let iters = scaled(10_000, scale, 500);
+    let mut rng = crate::util::rng::Xoshiro256pp::seeded(seed);
+    let families: Vec<(String, Graph)> = vec![
+        ("ring (2-regular)".into(), graph::ring(n)),
+        ("4-regular circulant".into(), make_regular(n, 4)),
+        (
+            "4-regular random".into(),
+            graph::random_regular(n, 4, &mut rng),
+        ),
+        ("two clusters + bridge".into(), graph::two_clusters(n / 2)),
+        ("complete".into(), graph::complete(n)),
+    ];
+    let mut rows = Vec::new();
+    for (name, g) in families {
+        let (shards, test) = synth_world(n, 200, 256, seed);
+        let cfg = TrainConfig::paper_default(n)
+            .with_init_scale(0.5)
+            .with_seed(seed ^ name.len() as u64);
+        let edges = g.edge_count();
+        let diameter = g.diameter().unwrap_or(0);
+        let mut t = Trainer::new(cfg, g, shards, NativeBackend::new(50, 10));
+        let rec = t.run(iters, iters, &test, &name)?;
+        rows.push(TopologyRow {
+            name,
+            edges,
+            diameter,
+            final_consensus: rec.last().unwrap().consensus,
+            final_err: rec.final_err(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn topology_table(rows: &[TopologyRow]) -> Table {
+    let mut t = Table::new(&["topology", "edges", "diameter", "final d^k", "final err"]);
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            format!("{}", r.edges),
+            format!("{}", r.diameter),
+            format!("{:.3}", r.final_consensus),
+            format!("{:.3}", r.final_err),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_overhead_tradeoff() {
+        let rows = comm_overhead(0.08, 3).unwrap();
+        assert_eq!(rows.len(), 5);
+        // More gradient steps (higher p_grad) ⇒ fewer messages.
+        assert!(rows.first().unwrap().messages > rows.last().unwrap().messages);
+    }
+
+    #[test]
+    fn conflict_rates_grow_with_fire_rate() {
+        let rows = conflicts(0.1, 5).unwrap();
+        let lockup: Vec<&ConflictRow> =
+            rows.iter().filter(|r| r.policy == "lock-up").collect();
+        assert!(lockup.last().unwrap().conflicts >= lockup.first().unwrap().conflicts);
+        // Ignore policy never aborts.
+        assert!(rows
+            .iter()
+            .filter(|r| r.policy == "ignore")
+            .all(|r| r.aborted == 0));
+    }
+
+    #[test]
+    fn topology_families_run() {
+        let rows = topologies(0.05, 7).unwrap();
+        assert_eq!(rows.len(), 5);
+        // Complete graph has diameter 1 and the tightest consensus.
+        let complete = rows.iter().find(|r| r.name == "complete").unwrap();
+        assert_eq!(complete.diameter, 1);
+    }
+}

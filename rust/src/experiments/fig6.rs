@@ -1,0 +1,166 @@
+//! Fig. 6 — prediction error on the notMNIST-like corpus (256 features,
+//! 10 letter classes), two 30-node systems (4-regular vs 15-regular),
+//! with the centralized-SGD reference of §V-E.
+//!
+//! Paper reading: error converges to < 0.1 — "almost the same result of
+//! a centralized version of SGD" — and both connectivities converge to
+//! the *same* value (topology affects speed, not the limit).
+
+use anyhow::Result;
+
+use crate::baselines::CentralizedSgd;
+use crate::coordinator::{StepSize, TrainConfig};
+use crate::data::{Dataset, NotMnistGen};
+use crate::metrics::{Recorder, Table};
+use crate::util::rng::Xoshiro256pp;
+
+use super::{make_regular, run_alg2, scaled};
+
+pub struct Fig6Result {
+    pub series: Vec<(String, Recorder)>,
+    pub centralized: Recorder,
+    pub iters: u64,
+}
+
+impl Fig6Result {
+    pub fn table(&self) -> Table {
+        let mut header = vec!["k".to_string()];
+        for (n, _) in &self.series {
+            header.push(format!("err ({n})"));
+        }
+        header.push("err (centralized)".into());
+        let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&hdr);
+        let rows = self.series[0].1.records.len();
+        for r in 0..rows {
+            let mut cells = vec![format!("{}", self.series[0].1.records[r].k)];
+            for (_, rec) in &self.series {
+                cells.push(format!("{:.3}", rec.records[r].test_err));
+            }
+            let c = self
+                .centralized
+                .records
+                .get(r)
+                .map(|x| format!("{:.3}", x.test_err))
+                .unwrap_or_else(|| "-".into());
+            cells.push(c);
+            t.row(&cells);
+        }
+        t
+    }
+}
+
+/// Build the notMNIST-like world: per-node shards + global test set.
+pub fn notmnist_world(
+    n: usize,
+    samples_per_node: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Vec<Dataset>, Dataset) {
+    let gen = NotMnistGen::new(n, seed);
+    let mut rng = Xoshiro256pp::seeded(seed ^ 0x9071);
+    let shards = (0..n)
+        .map(|i| gen.node_dataset(i, samples_per_node, &mut rng))
+        .collect();
+    let test = gen.global_test_set(test_n, &mut rng);
+    (shards, test)
+}
+
+/// Run Fig. 6. scale = 1.0 → 40k iterations.
+pub fn run(scale: f64, seed: u64) -> Result<Fig6Result> {
+    let n = 30;
+    let iters = scaled(40_000, scale, 800);
+    let eval_every = (iters / 16).max(1);
+    let mut series = Vec::new();
+    for k in [4usize, 15] {
+        let (shards, test) = notmnist_world(n, 400, 512, seed);
+        let cfg = TrainConfig {
+            stepsize: StepSize::Poly {
+                // Images are in [0,1] with ~40 active pixels: larger
+                // effective step than the gaussian synthetic world.
+                a: 3.0 * n as f32,
+                tau: 8000.0,
+                pow: 0.75,
+            },
+            ..TrainConfig::paper_default(n)
+        }
+        .with_seed(seed ^ (k as u64) << 4)
+        .with_backend(super::backend_from_env());
+        let rec = run_alg2(
+            &cfg,
+            make_regular(n, k),
+            shards,
+            &test,
+            iters,
+            eval_every,
+            &format!("{k}-regular"),
+        )?;
+        series.push((format!("{k}-regular"), rec));
+    }
+
+    // Centralized reference on the pooled data.
+    let (shards, test) = notmnist_world(n, 400, 512, seed);
+    let mut pool = Dataset::new(256, 10);
+    for s in &shards {
+        pool.extend(s);
+    }
+    let mut sgd = CentralizedSgd::new(
+        256,
+        10,
+        StepSize::Poly {
+            a: 3.0,
+            tau: 8000.0,
+            pow: 0.75,
+        },
+        seed ^ 0xCE17,
+    );
+    let centralized = sgd.run(&pool, &test, iters, (iters / 16).max(1));
+
+    Ok(Fig6Result {
+        series,
+        centralized,
+        iters,
+    })
+}
+
+/// Paper-shape checks.
+pub fn check_shape(r: &Fig6Result) -> Vec<String> {
+    let mut notes = Vec::new();
+    let e_sparse = r.series[0].1.final_err();
+    let e_dense = r.series[1].1.final_err();
+    let e_central = r.centralized.final_err();
+    notes.push(format!(
+        "final err: 4-regular {e_sparse:.3}, 15-regular {e_dense:.3}, centralized {e_central:.3}"
+    ));
+    if (e_sparse - e_dense).abs() < 0.08 {
+        notes.push("OK: both connectivities converge to ~the same error".into());
+    } else {
+        notes.push("MISMATCH: connectivities diverge in final error".into());
+    }
+    if e_sparse <= e_central + 0.08 && e_dense <= e_central + 0.08 {
+        notes.push("OK: decentralized ≈ centralized final error (§V-E)".into());
+    } else {
+        notes.push(format!(
+            "MISMATCH: decentralized ({:.3}/{:.3}) worse than centralized ({:.3})",
+            e_sparse, e_dense, e_central
+        ));
+    }
+    notes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_small_scale_learns_glyphs() {
+        let r = run(0.06, 5).unwrap();
+        let first = r.series[0].1.records.first().unwrap().test_err;
+        let last = r.series[0].1.final_err();
+        assert!(last < first, "err {first} -> {last}");
+        // Centralized learns too.
+        assert!(r.centralized.final_err() < first);
+        let t = r.table().render();
+        assert!(t.contains("centralized"));
+    }
+}

@@ -1,0 +1,175 @@
+//! One module per paper figure plus the §IV ablations and the straggler
+//! extension. Each experiment exposes a `run(scale)` entry returning a
+//! printable result, shared by the `cargo bench` targets and the CLI
+//! (`dasgd fig2`, …). `scale` shrinks iteration counts for quick runs
+//! (scale = 1.0 reproduces the paper's budgets).
+
+pub mod ablations;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod lemma1;
+pub mod losses;
+pub mod straggler;
+
+use crate::coordinator::{
+    Backend, EvalBatch, NativeBackend, PjrtBackend, StepBackend, TrainConfig, Trainer,
+};
+use crate::data::{Dataset, SyntheticGen};
+use crate::graph::{regular_circulant, Graph};
+use crate::metrics::Recorder;
+use crate::util::rng::Xoshiro256pp;
+
+/// Iteration budget helper: paper budget × scale, at least `min`.
+pub fn scaled(paper: u64, scale: f64, min: u64) -> u64 {
+    ((paper as f64 * scale) as u64).max(min)
+}
+
+/// A k-regular (or nearest feasible) graph on n nodes.
+///
+/// The circulant construction needs even n for odd k; when (n odd, k odd)
+/// we use k−1 — the nearest feasible regular degree — and note it.
+pub fn make_regular(n: usize, k: usize) -> Graph {
+    let k = k.min(n - 1);
+    let k = if k % 2 == 1 && n % 2 == 1 { k - 1 } else { k };
+    let k = k.max(2).min(n - 1);
+    regular_circulant(n, k)
+}
+
+/// Build the §V-A synthetic world: per-node shards + global test set.
+pub fn synth_world(
+    n: usize,
+    samples_per_node: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Vec<Dataset>, Dataset) {
+    let gen = SyntheticGen::paper_default(n, seed);
+    let mut rng = Xoshiro256pp::seeded(seed ^ 0xDA7A);
+    let shards = (0..n)
+        .map(|i| gen.node_dataset(i, samples_per_node, &mut rng))
+        .collect();
+    let test = gen.global_test_set(test_n, &mut rng);
+    (shards, test)
+}
+
+/// Which compute path an experiment runs on (native is the default for
+/// the figure sweeps; PJRT is the production path exercised by
+/// examples + benches).
+pub fn backend_from_env() -> Backend {
+    match std::env::var("DASGD_BACKEND").as_deref() {
+        Ok("pjrt") => Backend::Pjrt,
+        _ => Backend::Native,
+    }
+}
+
+/// Run Alg. 2 on a prepared world with either backend.
+pub fn run_alg2(
+    cfg: &TrainConfig,
+    graph: Graph,
+    shards: Vec<Dataset>,
+    test: &Dataset,
+    iters: u64,
+    eval_every: u64,
+    name: &str,
+) -> anyhow::Result<Recorder> {
+    let dim = shards[0].dim();
+    let classes = shards[0].classes();
+    match cfg.backend {
+        Backend::Native => {
+            let mut t = Trainer::new(
+                cfg.clone(),
+                graph,
+                shards,
+                NativeBackend::new(dim, classes),
+            );
+            t.run(iters, eval_every, test, name)
+        }
+        Backend::Pjrt => {
+            let arts = if dim == 50 {
+                crate::coordinator::PjrtArtifacts::synth()
+            } else {
+                crate::coordinator::PjrtArtifacts::notmnist()
+            };
+            let engine = crate::runtime::Engine::load_default()?;
+            let backend = PjrtBackend::new(engine, arts, dim, classes)?;
+            let mut t = Trainer::new(cfg.clone(), graph, shards, backend);
+            t.run(iters, eval_every, test, name)
+        }
+    }
+}
+
+/// Cross-check helper used by tests: run the same seeded experiment on
+/// both backends and return the two recorders.
+pub fn run_both_backends(
+    n: usize,
+    k: usize,
+    iters: u64,
+    seed: u64,
+) -> anyhow::Result<(Recorder, Recorder)> {
+    let (shards, test) = synth_world(n, 60, 256, seed);
+    let base = TrainConfig::paper_default(n).with_seed(seed);
+    let native = run_alg2(
+        &base.clone().with_backend(Backend::Native),
+        make_regular(n, k),
+        shards.clone(),
+        &test,
+        iters,
+        iters,
+        "native",
+    )?;
+    let pjrt = run_alg2(
+        &base.with_backend(Backend::Pjrt),
+        make_regular(n, k),
+        shards,
+        &test,
+        iters,
+        iters,
+        "pjrt",
+    )?;
+    Ok((native, pjrt))
+}
+
+/// Evaluate a mean parameter vector on a test set with the native model
+/// (metric helper shared by experiments).
+pub fn native_eval(w: &[f32], test: &Dataset) -> (f32, f32) {
+    let model = crate::model::LogReg::from_weights(test.dim(), test.classes(), w.to_vec());
+    let batch = EvalBatch::from_dataset(test);
+    let mut nb = NativeBackend::new(test.dim(), test.classes());
+    nb.evaluate(w, &batch).unwrap_or_else(|_| {
+        let e = model.evaluate(test.features_flat(), test.labels());
+        (e.mean_loss(), e.error_rate())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_regular_feasible_everywhere() {
+        for n in 10..=31 {
+            for k in [2, 4, 9, 10, 15] {
+                if k < n {
+                    let g = make_regular(n, k);
+                    assert!(g.is_connected(), "n={n} k={k}");
+                    assert!(g.is_regular().is_some(), "n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_budgets() {
+        assert_eq!(scaled(10_000, 1.0, 100), 10_000);
+        assert_eq!(scaled(10_000, 0.01, 500), 500);
+    }
+
+    #[test]
+    fn synth_world_shapes() {
+        let (shards, test) = synth_world(5, 20, 100, 3);
+        assert_eq!(shards.len(), 5);
+        assert_eq!(shards[0].dim(), 50);
+        assert_eq!(test.len(), 100);
+    }
+}

@@ -1,0 +1,223 @@
+//! Topology generators.
+//!
+//! The paper's experiments use k-regular graphs on 30 nodes (Figs. 2/3/6)
+//! and degree-4/degree-10 graphs with 10–30 nodes (Fig. 4). We provide the
+//! circulant construction (deterministic k-regular), random k-regular via
+//! the pairing model, and several extra families for topology ablations.
+
+use super::Graph;
+use crate::util::rng::Xoshiro256pp;
+
+/// Deterministic k-regular circulant graph: node i connects to
+/// i ± 1, ..., i ± k/2 (mod n); for odd k additionally to i + n/2.
+///
+/// Requires `k < n` and (for odd k) even `n`.
+pub fn regular_circulant(n: usize, k: usize) -> Graph {
+    assert!(n >= 2, "need at least 2 nodes");
+    assert!(k >= 1 && k < n, "degree must be in [1, n)");
+    if k % 2 == 1 {
+        assert!(n % 2 == 0, "odd-degree circulant requires even n");
+    }
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for d in 1..=(k / 2) {
+            g.add_edge(i, (i + d) % n);
+        }
+        if k % 2 == 1 {
+            g.add_edge(i, (i + n / 2) % n);
+        }
+    }
+    debug_assert_eq!(g.is_regular(), Some(k));
+    g
+}
+
+/// Random k-regular graph: start from the deterministic circulant and
+/// randomize with degree-preserving double-edge swaps (retrying any swap
+/// that would break simplicity), keeping connectivity. This always
+/// terminates, unlike naive configuration-model resampling which stalls
+/// for dense k.
+pub fn random_regular(n: usize, k: usize, rng: &mut Xoshiro256pp) -> Graph {
+    assert!(k < n, "degree must be < n");
+    assert!((n * k) % 2 == 0, "n*k must be even");
+    // Circulant needs even n for odd k; the assertion above guarantees it.
+    let g = regular_circulant(n, k);
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(g.edge_count());
+    for u in 0..n {
+        for &v in g.neighbors(u) {
+            if u < v {
+                edges.push((u, v));
+            }
+        }
+    }
+    for _ in 0..50 {
+        // Randomization sweep: ~10·|E| attempted swaps.
+        let mut adj = g.clone();
+        let mut es = edges.clone();
+        let attempts = 10 * es.len();
+        randomize_by_swaps(&mut adj, &mut es, attempts, rng);
+        if adj.is_connected() {
+            return adj;
+        }
+    }
+    // Extremely unlikely fallback: the deterministic circulant itself.
+    g
+}
+
+/// Degree-preserving double-edge swaps: pick edges (a,b), (c,d) and
+/// rewire to (a,d), (c,b) when that keeps the graph simple.
+fn randomize_by_swaps(
+    g: &mut Graph,
+    edges: &mut [(usize, usize)],
+    attempts: usize,
+    rng: &mut Xoshiro256pp,
+) {
+    let m = edges.len();
+    for _ in 0..attempts {
+        let i = rng.index(m);
+        let j = rng.index(m);
+        if i == j {
+            continue;
+        }
+        let (a, b) = edges[i];
+        let (c, d) = edges[j];
+        // Orient the second edge randomly for unbiased mixing.
+        let (c, d) = if rng.next_u64() & 1 == 0 { (c, d) } else { (d, c) };
+        if a == c || a == d || b == c || b == d {
+            continue;
+        }
+        if g.has_edge(a, d) || g.has_edge(c, b) {
+            continue;
+        }
+        g.remove_edge(a, b);
+        g.remove_edge(c, d);
+        g.add_edge(a, d);
+        g.add_edge(c, b);
+        edges[i] = (a.min(d), a.max(d));
+        edges[j] = (c.min(b), c.max(b));
+    }
+}
+
+/// Erdős–Rényi G(n, p), retried until connected.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Xoshiro256pp) -> Graph {
+    assert!((0.0..=1.0).contains(&p));
+    for _ in 0..10_000 {
+        let mut g = Graph::empty(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.next_f64() < p {
+                    g.add_edge(u, v);
+                }
+            }
+        }
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("erdos_renyi({n}, {p}): failed to sample a connected graph");
+}
+
+/// Cycle graph (2-regular).
+pub fn ring(n: usize) -> Graph {
+    regular_circulant(n, 2)
+}
+
+/// Star graph: node 0 is the hub — the paper's server-worker strawman
+/// expressed as a topology.
+pub fn star(n: usize) -> Graph {
+    assert!(n >= 2);
+    let mut g = Graph::empty(n);
+    for i in 1..n {
+        g.add_edge(0, i);
+    }
+    g
+}
+
+/// Complete graph K_n.
+pub fn complete(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v);
+        }
+    }
+    g
+}
+
+/// Two dense clusters joined by a single bridge edge — a worst-case
+/// bottleneck topology for consensus (ablation).
+pub fn two_clusters(cluster: usize) -> Graph {
+    assert!(cluster >= 2);
+    let n = cluster * 2;
+    let mut g = Graph::empty(n);
+    for u in 0..cluster {
+        for v in (u + 1)..cluster {
+            g.add_edge(u, v);
+            g.add_edge(cluster + u, cluster + v);
+        }
+    }
+    g.add_edge(cluster - 1, cluster); // the bridge
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circulant_matches_paper_settings() {
+        // The paper's topologies: 4-regular and 15-regular on 30 nodes,
+        // 2-regular and 10-regular on 30 nodes.
+        for k in [2, 4, 10, 15] {
+            let g = regular_circulant(30, k);
+            assert_eq!(g.is_regular(), Some(k), "k={k}");
+            assert!(g.is_connected(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn circulant_small_and_complete_limit() {
+        let g = regular_circulant(4, 3); // K4
+        assert_eq!(g.edge_count(), 6);
+        assert_eq!(g.is_regular(), Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "even n")]
+    fn odd_degree_odd_n_rejected() {
+        regular_circulant(5, 3);
+    }
+
+    #[test]
+    fn random_regular_is_regular_connected() {
+        let mut rng = Xoshiro256pp::seeded(0);
+        for &(n, k) in &[(10, 4), (30, 4), (30, 10), (12, 3)] {
+            let g = random_regular(n, k, &mut rng);
+            assert_eq!(g.is_regular(), Some(k), "n={n} k={k}");
+            assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let g = erdos_renyi(20, 0.3, &mut rng);
+        assert!(g.is_connected());
+        assert_eq!(g.len(), 20);
+    }
+
+    #[test]
+    fn special_families() {
+        assert_eq!(ring(6).is_regular(), Some(2));
+        let s = star(5);
+        assert_eq!(s.degree(0), 4);
+        assert_eq!(s.degree(3), 1);
+        assert!(s.is_connected());
+        let k5 = complete(5);
+        assert_eq!(k5.edge_count(), 10);
+        assert_eq!(k5.diameter(), Some(1));
+        let tc = two_clusters(4);
+        assert!(tc.is_connected());
+        assert_eq!(tc.len(), 8);
+        assert_eq!(tc.edge_count(), 2 * 6 + 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! Core undirected-graph type.
+
+use std::collections::VecDeque;
+
+/// A simple undirected graph over nodes `0..n`, stored as sorted
+/// adjacency lists. Self-loops and parallel edges are rejected.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Empty graph with `n` isolated nodes.
+    pub fn empty(n: usize) -> Self {
+        Self {
+            adj: vec![Vec::new(); n],
+        }
+    }
+
+    /// Build from an edge list (deduplicated, validated).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Self::empty(n);
+        for &(u, v) in edges {
+            g.add_edge(u, v);
+        }
+        g
+    }
+
+    /// Add an undirected edge; no-op if already present.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u < self.len() && v < self.len(), "edge out of range");
+        assert_ne!(u, v, "self-loops are not allowed");
+        if let Err(pos) = self.adj[u].binary_search(&v) {
+            self.adj[u].insert(pos, v);
+            let pos = self.adj[v].binary_search(&u).unwrap_err();
+            self.adj[v].insert(pos, u);
+        }
+    }
+
+    /// Remove an undirected edge; no-op if absent.
+    pub fn remove_edge(&mut self, u: usize, v: usize) {
+        if let Ok(pos) = self.adj[u].binary_search(&v) {
+            self.adj[u].remove(pos);
+            let pos = self.adj[v].binary_search(&u).unwrap();
+            self.adj[v].remove(pos);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Neighbors of `u` (sorted).
+    pub fn neighbors(&self, u: usize) -> &[usize] {
+        &self.adj[u]
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].binary_search(&v).is_ok()
+    }
+
+    /// The closed neighborhood {u} ∪ N(u), sorted.
+    pub fn closed_neighborhood(&self, u: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.degree(u) + 1);
+        let pos = self.adj[u].binary_search(&u).unwrap_err();
+        out.extend_from_slice(&self.adj[u][..pos]);
+        out.push(u);
+        out.extend_from_slice(&self.adj[u][pos..]);
+        out
+    }
+
+    /// True iff every node has the same degree `k` (k-regular).
+    pub fn is_regular(&self) -> Option<usize> {
+        let k = self.degree(0);
+        self.adj.iter().all(|a| a.len() == k).then_some(k)
+    }
+
+    /// BFS connectivity test. Consensus constraints only imply global
+    /// consensus on a connected graph (paper §III-A).
+    pub fn is_connected(&self) -> bool {
+        if self.len() == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.len()];
+        let mut queue = VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in self.neighbors(u) {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.len()
+    }
+
+    /// Graph diameter via all-pairs BFS (∞ ⇒ None).
+    pub fn diameter(&self) -> Option<usize> {
+        let mut best = 0;
+        for s in 0..self.len() {
+            let dist = self.bfs_distances(s);
+            for d in &dist {
+                match d {
+                    None => return None,
+                    Some(d) => best = best.max(*d),
+                }
+            }
+        }
+        Some(best)
+    }
+
+    /// Single-source BFS distances.
+    pub fn bfs_distances(&self, source: usize) -> Vec<Option<usize>> {
+        let mut dist = vec![None; self.len()];
+        dist[source] = Some(0);
+        let mut queue = VecDeque::from([source]);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u].unwrap();
+            for &v in self.neighbors(u) {
+                if dist[v].is_none() {
+                    dist[v] = Some(du + 1);
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Do `u` and `v` conflict under §IV-C (adjacent or sharing a
+    /// neighbor, i.e. their closed neighborhoods intersect)?
+    pub fn closed_neighborhoods_intersect(&self, u: usize, v: usize) -> bool {
+        if u == v || self.has_edge(u, v) {
+            return true;
+        }
+        // Sorted-list intersection of N(u) and {v} ∪ N(v).
+        let (a, b) = (self.neighbors(u), self.neighbors(v));
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        Graph::from_edges(3, &[(0, 1), (1, 2)])
+    }
+
+    #[test]
+    fn basic_structure() {
+        let g = path3();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let g = Graph::from_edges(2, &[(0, 1), (1, 0), (0, 1)]);
+        assert_eq!(g.edge_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        let mut g = Graph::empty(2);
+        g.add_edge(1, 1);
+    }
+
+    #[test]
+    fn closed_neighborhood_sorted_and_includes_self() {
+        let g = path3();
+        assert_eq!(g.closed_neighborhood(1), vec![0, 1, 2]);
+        assert_eq!(g.closed_neighborhood(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn connectivity_and_diameter() {
+        let g = path3();
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), Some(2));
+        let disconnected = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        assert!(!disconnected.is_connected());
+        assert_eq!(disconnected.diameter(), None);
+    }
+
+    #[test]
+    fn regularity() {
+        let ring = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert_eq!(ring.is_regular(), Some(2));
+        assert_eq!(path3().is_regular(), None);
+    }
+
+    #[test]
+    fn conflict_detection() {
+        // 0-1-2-3 path: 0 and 2 share neighbor 1 → conflict; 0 and 3 do not.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert!(g.closed_neighborhoods_intersect(0, 1)); // adjacent
+        assert!(g.closed_neighborhoods_intersect(0, 2)); // shared neighbor
+        assert!(!g.closed_neighborhoods_intersect(0, 3)); // disjoint
+        assert!(g.closed_neighborhoods_intersect(2, 2)); // same node
+    }
+}

@@ -1,0 +1,14 @@
+//! Undirected-graph substrate: the network topology of the paper.
+//!
+//! Provides the adjacency structure, topology generators (§V uses
+//! k-regular graphs; we add more families for ablations), BFS-based
+//! structural properties, and the spectral analysis behind Lemma 1.
+
+mod generators;
+mod graph;
+pub mod spectral;
+
+pub use generators::{
+    complete, erdos_renyi, random_regular, regular_circulant, ring, star, two_clusters,
+};
+pub use graph::Graph;

@@ -1,0 +1,193 @@
+//! Spectral analysis of the local-averaging matrix — the Lemma 1 substrate.
+//!
+//! The paper defines `A = [a_ij]` with `a_ij = 1/(1+|N_i|)` for
+//! `j ∈ {i} ∪ N_i` (row-stochastic local averaging). Lemma 1 bounds the
+//! linear-regularity constant of the consensus polytope for a k-regular
+//! graph by `η ≥ (1 − σ₂²) (k+1)/N`, where σ₂ is the second-largest
+//! singular value of A. For k-regular graphs A is symmetric (hence σ₂ =
+//! |λ₂|) and doubly stochastic, with top eigenvector 𝟙/√N.
+//!
+//! σ₂ is computed by power iteration on `A` restricted to the complement
+//! of the consensus direction (deflating the known top eigenpair), which
+//! is exact for the symmetric case and a good estimate otherwise.
+
+use super::Graph;
+use crate::linalg::Matrix;
+
+/// Build the local-averaging matrix A of the paper (§III-C).
+pub fn averaging_matrix(g: &Graph) -> Matrix {
+    let n = g.len();
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        let w = 1.0 / (1.0 + g.degree(i) as f32);
+        a[(i, i)] = w;
+        for &j in g.neighbors(i) {
+            a[(i, j)] = w;
+        }
+    }
+    a
+}
+
+/// Second-largest singular value of the averaging matrix.
+///
+/// Power iteration on `B = A^T A` with the consensus direction deflated:
+/// every iterate is re-orthogonalized against 𝟙 (the top right-singular
+/// vector for doubly-stochastic A; for non-regular graphs A is only
+/// row-stochastic and we deflate the numerically-computed top vector
+/// instead).
+pub fn sigma2(g: &Graph, iters: usize) -> f64 {
+    let a = averaging_matrix(g);
+    let n = g.len();
+    if n < 2 {
+        return 0.0;
+    }
+
+    // Top singular pair of A via power iteration on A^T A.
+    let (s1_sq, v1) = top_eig_ata(&a, None, iters);
+    let _ = s1_sq; // s1 = 1 for doubly-stochastic A; not needed below.
+
+    // Second pair: deflate v1.
+    let (s2_sq, _) = top_eig_ata(&a, Some(&v1), iters);
+    s2_sq.max(0.0).sqrt()
+}
+
+/// Largest eigenpair of A^T A, optionally deflating a known eigenvector.
+fn top_eig_ata(a: &Matrix, deflate: Option<&[f32]>, iters: usize) -> (f64, Vec<f32>) {
+    let n = a.rows();
+    // Deterministic, non-degenerate start vector.
+    let mut v: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32 * 0.7).sin()).collect();
+    if let Some(d) = deflate {
+        orthogonalize(&mut v, d);
+    }
+    normalize(&mut v);
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        // w = A^T (A v)
+        let av = a.matvec(&v);
+        let mut w = a.matvec_t(&av);
+        if let Some(d) = deflate {
+            orthogonalize(&mut w, d);
+        }
+        lambda = w.iter().zip(&v).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let norm = crate::linalg::norm2(&w);
+        if norm < 1e-30 {
+            return (0.0, v);
+        }
+        for x in &mut w {
+            *x /= norm;
+        }
+        v = w;
+    }
+    (lambda, v)
+}
+
+fn orthogonalize(v: &mut [f32], against: &[f32]) {
+    let dot = crate::linalg::dot(v, against);
+    let nrm = crate::linalg::dot(against, against);
+    if nrm > 0.0 {
+        crate::linalg::axpy(-dot / nrm, against, v);
+    }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = crate::linalg::norm2(v);
+    if n > 0.0 {
+        for x in v {
+            *x /= n;
+        }
+    }
+}
+
+/// Lemma 1 lower bound on the linear-regularity constant η for a
+/// k-regular graph: `η ≥ (1 − σ₂²)(k+1)/N`.
+pub fn lemma1_eta_lower_bound(g: &Graph) -> f64 {
+    let k = g
+        .is_regular()
+        .expect("Lemma 1 bound is stated for regular graphs");
+    let s2 = sigma2(g, 200);
+    (1.0 - s2 * s2) * (k as f64 + 1.0) / g.len() as f64
+}
+
+/// The convergence constant `C = η/N` of Theorem 2, using the Lemma 1
+/// bound for η. Larger C ⇒ faster DF contraction `(1 − C/4)`.
+pub fn theorem2_c_bound(g: &Graph) -> f64 {
+    lemma1_eta_lower_bound(g) / g.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{complete, regular_circulant, ring};
+
+    #[test]
+    fn averaging_matrix_rows_sum_to_one() {
+        let g = regular_circulant(10, 4);
+        let a = averaging_matrix(&g);
+        for i in 0..10 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn averaging_matrix_symmetric_for_regular() {
+        let g = regular_circulant(12, 4);
+        let a = averaging_matrix(&g);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((a[(i, j)] - a[(j, i)]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn complete_graph_sigma2_is_zero() {
+        // A(K_n) = (1/n) 𝟙𝟙^T: rank one, σ₂ = 0.
+        let g = complete(8);
+        let s2 = sigma2(&g, 100);
+        assert!(s2 < 1e-3, "sigma2={s2}");
+    }
+
+    #[test]
+    fn ring_sigma2_matches_closed_form() {
+        // Ring averaging A = (I + C + C^T)/3: eigenvalues
+        // (1 + 2cos(2πj/n))/3 → σ₂ = (1 + 2cos(2π/n))/3.
+        let n = 16;
+        let g = ring(n);
+        let s2 = sigma2(&g, 400);
+        let expect = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0;
+        assert!((s2 - expect).abs() < 1e-3, "s2={s2} expect={expect}");
+    }
+
+    #[test]
+    fn sigma2_decreases_with_connectivity() {
+        // Paper remark (b): denser graph ⇒ smaller σ₂ ⇒ faster convergence.
+        let s_sparse = sigma2(&regular_circulant(30, 4), 300);
+        let s_dense = sigma2(&regular_circulant(30, 14), 300);
+        assert!(
+            s_dense < s_sparse,
+            "sigma2 dense={s_dense} sparse={s_sparse}"
+        );
+    }
+
+    #[test]
+    fn lemma1_bound_ordering_matches_paper() {
+        // Larger k ⇒ larger η bound (paper Remark (a)).
+        let eta4 = lemma1_eta_lower_bound(&regular_circulant(30, 4));
+        let eta14 = lemma1_eta_lower_bound(&regular_circulant(30, 14));
+        assert!(eta14 > eta4, "eta14={eta14} eta4={eta4}");
+        // And the bound lives in (0, 1].
+        assert!(eta4 > 0.0 && eta4 <= 1.0);
+        // Smaller N ⇒ larger bound at equal k.
+        let eta_small = lemma1_eta_lower_bound(&regular_circulant(10, 4));
+        assert!(eta_small > eta4);
+    }
+
+    #[test]
+    fn theorem2_c_is_eta_over_n() {
+        let g = regular_circulant(20, 4);
+        let c = theorem2_c_bound(&g);
+        let eta = lemma1_eta_lower_bound(&g);
+        assert!((c - eta / 20.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,34 @@
+//! # dasgd — Fully Distributed and Asynchronized SGD for Networked Systems
+//!
+//! A three-layer (rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! Ying Zhang, *"Fully Distributed and Asynchronized Stochastic Gradient
+//! Descent for Networked Systems"* (2017).
+//!
+//! Layer 3 (this crate) is the coordination system: the Alg. 2 trainer
+//! (random gradient steps + random neighborhood-projection steps), the
+//! §IV distributed node-selection / lock-up protocols, a threaded
+//! asynchronous actor runtime, a discrete-event straggler simulator, and
+//! the baselines the paper positions itself against. Layers 2/1 (JAX
+//! model + Pallas kernels) are AOT-lowered to HLO text in `artifacts/`
+//! and executed through [`runtime`]; python never runs on the training
+//! path.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,79 @@
+//! Dense f32 linear algebra substrate.
+//!
+//! Powers the rust-native model math (`crate::model`), the spectral
+//! analysis of averaging matrices (`crate::graph::spectral`), and the
+//! baselines. Row-major, allocation-explicit, no BLAS: shapes in this
+//! system are tiny (≤ 256×16), so simple triple loops with row slicing
+//! are at memory-bandwidth roofline.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// y += alpha * x (vectors).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Squared Euclidean distance between two vectors.
+pub fn dist2_sq(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Scale a vector in place.
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// Element-wise mean of several equal-length vectors.
+pub fn mean_of(vectors: &[&[f32]]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let len = vectors[0].len();
+    let mut out = vec![0.0f32; len];
+    for v in vectors {
+        assert_eq!(v.len(), len);
+        axpy(1.0, v, &mut out);
+    }
+    scale(&mut out, 1.0 / vectors.len() as f32);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_ops() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(2.0, &[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-6);
+        assert!((dist2_sq(&[0.0, 0.0], &[3.0, 4.0]) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let m = mean_of(&[&a, &b]);
+        assert_eq!(m, vec![2.0, 4.0]);
+    }
+}

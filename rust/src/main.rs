@@ -1,0 +1,276 @@
+//! `dasgd` — CLI entrypoint for the Fully Distributed & Asynchronized
+//! SGD system. Every paper figure, ablation, and the live asynchronous
+//! cluster are runnable from here; `cargo bench` wraps the same
+//! experiment modules.
+
+use dasgd::cli::Args;
+use dasgd::coordinator::{AsyncCluster, AsyncConfig, PjrtArtifacts, StepSize};
+use dasgd::data::{ascii_art, render_glyph, GlyphStyle, NotMnistGen};
+use dasgd::experiments::{self, fig2, fig3, fig4, fig6, lemma1, straggler};
+use dasgd::metrics::Table;
+use dasgd::runtime::{Engine, ExecutorService};
+use dasgd::util::rng::Xoshiro256pp;
+
+const USAGE: &str = "\
+dasgd — Fully Distributed and Asynchronized SGD for Networked Systems
+
+USAGE: dasgd <command> [--scale S] [--seed N] [flags]
+
+Figure reproduction (paper §V):
+  fig2        consensus distance, 4- vs 15-regular, N=30
+  fig3        prediction error, 2- vs 10-regular, N=30
+  fig4        final error vs network size (10..30), degree 4 vs 10
+  fig6        notMNIST-like corpus, 4- vs 15-regular + centralized SGD
+  lemma1      spectral eta bound vs measured DF contraction
+  glyphs      render sample glyphs (Fig. 5 stand-in)
+
+Ablations / extensions:
+  losses      §II loss families: decentralized SVM + Lasso
+  comm        §IV-B: p_grad sweep (messages vs consensus)
+  conflicts   §IV-C: distributed selection, lock-up vs ignore
+  topology    consensus across graph families
+  straggler   async vs sync DSGD vs server-worker in virtual time
+
+System:
+  train       one Alg. 2 run (--nodes N --degree K --iters I
+              --backend native|pjrt --dataset synth|notmnist)
+  cluster     live threaded asynchronous cluster (--secs S --kill N
+              --kill-after T to crash N nodes at time T
+              --backend native|pjrt --rate HZ --spread X)
+  artifacts   verify the AOT artifact set loads + executes
+
+Common flags:
+  --scale S   fraction of the paper's iteration budget (default 1.0)
+  --seed N    RNG seed (default 0)
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_notes(notes: &[String]) {
+    for n in notes {
+        println!("  {n}");
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let scale = args.get_f64("scale", 1.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    match args.command.as_deref() {
+        Some("fig2") => {
+            let r = fig2::run(scale, seed)?;
+            println!("Fig. 2 — distance to global consensus ({} updates)", r.iters);
+            r.table().print();
+            print_notes(&fig2::check_shape(&r));
+        }
+        Some("fig3") => {
+            let r = fig3::run(scale, seed)?;
+            println!("Fig. 3 — prediction error ({} iterations)", r.iters);
+            r.table().print();
+            print_notes(&fig3::check_shape(&r));
+        }
+        Some("fig4") => {
+            let r = fig4::run(scale, seed)?;
+            println!("Fig. 4 — final error vs network size ({} iters/point)", r.iters);
+            r.table().print();
+            print_notes(&fig4::check_shape(&r));
+        }
+        Some("fig6") => {
+            let r = fig6::run(scale, seed)?;
+            println!("Fig. 6 — notMNIST-like prediction error ({} iters)", r.iters);
+            r.table().print();
+            print_notes(&fig6::check_shape(&r));
+        }
+        Some("lemma1") => {
+            let r = lemma1::run(scale, seed)?;
+            println!("Lemma 1 — spectral bound vs measured contraction (N={})", r.n);
+            r.table().print();
+            print_notes(&lemma1::check_shape(&r));
+        }
+        Some("glyphs") => {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let gen = NotMnistGen::new(4, seed);
+            println!("Clean skeletons (A, E, J) and node-styled samples (Fig. 5 stand-in):");
+            for class in [0usize, 4, 9] {
+                let img = render_glyph(class, &GlyphStyle::default(), &mut rng);
+                println!("class {class}:\n{}", ascii_art(&img));
+            }
+            for node in 0..2 {
+                let (img, label) = gen.draw(node, &mut rng);
+                println!("node {node} sample (label {label}):\n{}", ascii_art(&img));
+            }
+        }
+        Some("losses") => {
+            let rows = experiments::losses::run(scale, seed)?;
+            println!("§II loss families — decentralized SVM + Lasso (both backends)");
+            experiments::losses::table(&rows).print();
+        }
+        Some("comm") => {
+            let rows = experiments::ablations::comm_overhead(scale, seed)?;
+            println!("§IV-B — communication overhead vs p_grad");
+            experiments::ablations::comm_table(&rows).print();
+        }
+        Some("conflicts") => {
+            let rows = experiments::ablations::conflicts(scale, seed)?;
+            println!("§IV-C — update conflicts under distributed selection");
+            experiments::ablations::conflict_table(&rows).print();
+        }
+        Some("topology") => {
+            let rows = experiments::ablations::topologies(scale, seed)?;
+            println!("Topology families — consensus + error at equal budgets");
+            experiments::ablations::topology_table(&rows).print();
+        }
+        Some("straggler") => {
+            let rows = straggler::run(scale, seed)?;
+            println!("Stragglers — async vs synchronized schemes (virtual time)");
+            straggler::table(&rows).print();
+            print_notes(&straggler::check_shape(&rows));
+        }
+        Some("train") => cmd_train(args, scale, seed)?,
+        Some("cluster") => cmd_cluster(args, seed)?,
+        Some("artifacts") => {
+            let engine = Engine::load_default()?;
+            println!(
+                "loaded + compiled {} artifacts:",
+                engine.manifest().artifacts.len()
+            );
+            let mut t = Table::new(&["artifact", "inputs", "outputs"]);
+            for (name, spec) in &engine.manifest().artifacts {
+                t.row(&[
+                    name.clone(),
+                    format!("{}", spec.inputs.len()),
+                    format!("{}", spec.outputs.len()),
+                ]);
+            }
+            t.print();
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            println!("{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
+    use dasgd::coordinator::{Backend, TrainConfig};
+    let n = args.get_usize("nodes", 30).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
+    let iters = args
+        .get_u64("iters", experiments::scaled(20_000, scale, 500))
+        .map_err(anyhow::Error::msg)?;
+    let backend = match args.get_str("backend", "native") {
+        "pjrt" => Backend::Pjrt,
+        _ => Backend::Native,
+    };
+    let dataset = args.get_str("dataset", "synth");
+    let (shards, test) = match dataset {
+        "notmnist" => fig6::notmnist_world(n, 400, 512, seed),
+        _ => experiments::synth_world(n, 500, 512, seed),
+    };
+    let cfg = TrainConfig::paper_default(n)
+        .with_seed(seed)
+        .with_backend(backend);
+    let rec = experiments::run_alg2(
+        &cfg,
+        experiments::make_regular(n, degree),
+        shards,
+        &test,
+        iters,
+        (iters / 10).max(1),
+        "train",
+    )?;
+    println!(
+        "Alg. 2: N={n}, degree {degree}, {iters} updates, backend {}",
+        args.get_str("backend", "native")
+    );
+    let mut t = Table::new(&["k", "d^k", "test loss", "test err", "msgs"]);
+    for r in &rec.records {
+        t.row(&[
+            format!("{}", r.k),
+            format!("{:.3}", r.consensus),
+            format!("{:.3}", r.test_loss),
+            format!("{:.3}", r.test_err),
+            format!("{}", r.messages),
+        ]);
+    }
+    t.print();
+    if let Some(csv) = args.get("csv") {
+        rec.write_csv(csv)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let n = args.get_usize("nodes", 12).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
+    let secs = args.get_f64("secs", 3.0).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
+    let spread = args.get_f64("spread", 0.0).map_err(anyhow::Error::msg)?;
+    let (shards, test) = experiments::synth_world(n, 300, 512, seed);
+    let mut cluster = AsyncCluster::new(experiments::make_regular(n, degree), shards);
+    let _service: Option<ExecutorService>;
+    if args.get_str("backend", "native") == "pjrt" {
+        let service = ExecutorService::start("artifacts", 2)?;
+        cluster = cluster.with_executor(service.handle(), PjrtArtifacts::synth());
+        _service = Some(service);
+    } else {
+        _service = None;
+    }
+    let cfg = AsyncConfig {
+        p_grad: 0.5,
+        stepsize: StepSize::paper_default(n),
+        rate_hz: rate,
+        speed_spread: spread,
+        duration_secs: secs,
+        eval_every_secs: (secs / 8.0).max(0.1),
+        gossip_hold_secs: 0.0,
+        kill_after_secs: args.get("kill-after").map(|v| v.parse().unwrap_or(0.0)),
+        kill_nodes: args.get_usize("kill", 0).map_err(anyhow::Error::msg)?,
+        seed,
+    };
+    println!(
+        "async cluster: {n} node threads, degree {degree}, {secs}s @ {rate}/s/node (spread {spread})"
+    );
+    let rep = cluster.run(&cfg, &test)?;
+    let mut t = Table::new(&["t (s)", "k", "d^k", "test err", "conflicts"]);
+    for r in &rep.recorder.records {
+        t.row(&[
+            format!("{:.2}", r.time_secs),
+            format!("{}", r.k),
+            format!("{:.3}", r.consensus),
+            format!("{:.3}", r.test_err),
+            format!("{}", r.conflicts),
+        ]);
+    }
+    t.print();
+    println!(
+        "{} updates ({} grad, {} proj) — {:.0} updates/s, {} messages, {} lock conflicts",
+        rep.updates,
+        rep.grad_steps,
+        rep.proj_steps,
+        rep.updates_per_sec,
+        rep.messages,
+        rep.conflicts
+    );
+    Ok(())
+}

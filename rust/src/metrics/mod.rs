@@ -1,0 +1,7 @@
+//! Metrics: training time-series recording, CSV export, table printing.
+
+mod recorder;
+mod table;
+
+pub use recorder::{Record, Recorder};
+pub use table::Table;

@@ -1,0 +1,132 @@
+//! Training time-series recorder.
+
+use std::path::Path;
+
+use crate::util::csv::CsvWriter;
+
+/// One evaluation snapshot of a training run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Record {
+    /// Paper iteration counter k (applied updates).
+    pub k: u64,
+    /// Wall-clock (or virtual, for the simulator) seconds since start.
+    pub time_secs: f64,
+    /// d^k — consensus distance (§V-B).
+    pub consensus: f64,
+    /// Held-out mean CE loss at β̄.
+    pub test_loss: f64,
+    /// Held-out prediction error at β̄ (§V-C).
+    pub test_err: f64,
+    /// Cumulative gradient steps / projection steps / messages / conflicts.
+    pub grad_steps: u64,
+    pub proj_steps: u64,
+    pub messages: u64,
+    pub conflicts: u64,
+}
+
+/// A named series of [`Record`]s.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub name: String,
+    pub records: Vec<Record>,
+}
+
+impl Recorder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&Record> {
+        self.records.last()
+    }
+
+    /// Final prediction error (Fig. 4's metric).
+    pub fn final_err(&self) -> f64 {
+        self.last().map(|r| r.test_err).unwrap_or(f64::NAN)
+    }
+
+    /// First k at which consensus dropped below `threshold` (Fig. 2's
+    /// "below 10 after 10k updates" reading).
+    pub fn k_to_consensus_below(&self, threshold: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.consensus < threshold)
+            .map(|r| r.k)
+    }
+
+    /// Dump as CSV.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "k",
+                "time_secs",
+                "consensus",
+                "test_loss",
+                "test_err",
+                "grad_steps",
+                "proj_steps",
+                "messages",
+                "conflicts",
+            ],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.k as f64,
+                r.time_secs,
+                r.consensus,
+                r.test_loss,
+                r.test_err,
+                r.grad_steps as f64,
+                r.proj_steps as f64,
+                r.messages as f64,
+                r.conflicts as f64,
+            ])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(k: u64, consensus: f64, err: f64) -> Record {
+        Record {
+            k,
+            consensus,
+            test_err: err,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn thresholds_and_final() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 100.0, 0.9));
+        r.push(rec(1000, 8.0, 0.5));
+        r.push(rec(2000, 1.0, 0.3));
+        assert_eq!(r.k_to_consensus_below(10.0), Some(1000));
+        assert_eq!(r.k_to_consensus_below(0.5), None);
+        assert!((r.final_err() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_row_count() {
+        let mut r = Recorder::new("t");
+        r.push(rec(0, 1.0, 0.9));
+        r.push(rec(1, 0.5, 0.8));
+        let path = std::env::temp_dir().join("dasgd_rec_test.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3); // header + 2 rows
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,248 @@
+//! Native multinomial logistic regression: fused SGD step + evaluation.
+//!
+//! Mirrors the semantics of the Pallas `logreg_step` / `logreg_eval`
+//! kernels exactly (same stable-softmax formulation) so integration tests
+//! can assert the two paths agree to float tolerance.
+
+/// Multinomial logistic regression with row-major W (dim × classes).
+#[derive(Clone, Debug)]
+pub struct LogReg {
+    dim: usize,
+    classes: usize,
+    /// Row-major (dim × classes) weights.
+    pub w: Vec<f32>,
+}
+
+/// Evaluation result over a batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogRegEval {
+    pub loss_sum: f32,
+    pub err_count: usize,
+    pub n: usize,
+}
+
+impl LogRegEval {
+    pub fn mean_loss(&self) -> f32 {
+        self.loss_sum / self.n as f32
+    }
+
+    pub fn error_rate(&self) -> f32 {
+        self.err_count as f32 / self.n as f32
+    }
+}
+
+impl LogReg {
+    pub fn zeros(dim: usize, classes: usize) -> Self {
+        Self {
+            dim,
+            classes,
+            w: vec![0.0; dim * classes],
+        }
+    }
+
+    pub fn from_weights(dim: usize, classes: usize, w: Vec<f32>) -> Self {
+        assert_eq!(w.len(), dim * classes);
+        Self { dim, classes, w }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// logits = x @ W for one sample row.
+    fn logits(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.dim);
+        let c = self.classes;
+        let mut out = vec![0.0f32; c];
+        for (d, &xv) in x.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &self.w[d * c..(d + 1) * c];
+                for (o, wv) in out.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Stable log-softmax in place; returns (log_probs, max_index).
+    fn log_softmax(logits: &[f32]) -> (Vec<f32>, usize) {
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = i;
+            }
+        }
+        let lse = logits.iter().map(|v| (v - max).exp()).sum::<f32>().ln();
+        let lp = logits.iter().map(|v| v - max - lse).collect();
+        (lp, argmax)
+    }
+
+    /// One SGD step on a microbatch; returns the mean CE loss.
+    ///
+    /// `w ← w − lr·scale·(1/B)·Xᵀ(p − y)` — identical to the Pallas
+    /// `logreg_step` kernel; `scale` carries the paper's 1/N factor.
+    pub fn sgd_step(
+        &mut self,
+        xs: &[&[f32]],
+        labels: &[usize],
+        lr: f32,
+        scale: f32,
+    ) -> f32 {
+        assert_eq!(xs.len(), labels.len());
+        assert!(!xs.is_empty());
+        let b = xs.len() as f32;
+        let c = self.classes;
+        let step = lr * scale / b;
+        let mut loss = 0.0f32;
+        // Accumulate the full batch gradient Xᵀ(p − y) first (true
+        // minibatch semantics, matching the Pallas kernel), then apply.
+        let mut grad = vec![0.0f32; self.w.len()];
+        for (x, &label) in xs.iter().zip(labels) {
+            let logits = self.logits(x);
+            let (lp, _) = Self::log_softmax(&logits);
+            loss -= lp[label];
+            let mut delta: Vec<f32> = lp.iter().map(|v| v.exp()).collect();
+            delta[label] -= 1.0;
+            for (d, &xv) in x.iter().enumerate() {
+                if xv != 0.0 {
+                    let grow = &mut grad[d * c..(d + 1) * c];
+                    for (gv, dv) in grow.iter_mut().zip(&delta) {
+                        *gv += xv * dv;
+                    }
+                }
+            }
+        }
+        for (wv, gv) in self.w.iter_mut().zip(&grad) {
+            *wv -= step * gv;
+        }
+        loss / b
+    }
+
+    /// Evaluate loss-sum and error-count over a batch (mirrors
+    /// `logreg_eval`).
+    pub fn evaluate(&self, xs: &[f32], labels: &[usize]) -> LogRegEval {
+        assert_eq!(xs.len(), labels.len() * self.dim);
+        let mut loss_sum = 0.0f32;
+        let mut err = 0usize;
+        for (i, &label) in labels.iter().enumerate() {
+            let x = &xs[i * self.dim..(i + 1) * self.dim];
+            let logits = self.logits(x);
+            let (lp, argmax) = Self::log_softmax(&logits);
+            loss_sum -= lp[label];
+            if argmax != label {
+                err += 1;
+            }
+        }
+        LogRegEval {
+            loss_sum,
+            err_count: err,
+            n: labels.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn zero_weights_uniform_loss() {
+        let m = LogReg::zeros(4, 10);
+        let xs = vec![1.0f32; 4];
+        let eval = m.evaluate(&xs, &[3]);
+        // log(10) per sample at uniform predictions.
+        assert!((eval.mean_loss() - (10f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_separable_data() {
+        let mut rng = Xoshiro256pp::seeded(0);
+        let (dim, classes) = (12, 3);
+        let mut m = LogReg::zeros(dim, classes);
+        let means: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..dim).map(|_| rng.gauss_f32(0.0, 2.0)).collect())
+            .collect();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..300 {
+            let label = rng.index(classes);
+            let x: Vec<f32> = means[label]
+                .iter()
+                .map(|v| v + rng.gauss_f32(0.0, 0.3))
+                .collect();
+            let loss = m.sgd_step(&[&x], &[label], 0.5, 1.0);
+            if step < 20 {
+                first += loss;
+            }
+            if step >= 280 {
+                last += loss;
+            }
+        }
+        assert!(last < first * 0.5, "first={first} last={last}");
+    }
+
+    #[test]
+    fn step_matches_manual_gradient() {
+        // Single sample, small shapes: compare against hand-computed grad.
+        let mut m = LogReg::from_weights(2, 2, vec![0.1, -0.2, 0.3, 0.0]);
+        let x = [1.0f32, 2.0];
+        let logits: [f32; 2] = [
+            0.1 * 1.0 + 0.3 * 2.0, // class 0
+            -0.2 * 1.0 + 0.0 * 2.0,
+        ];
+        let max = logits[0].max(logits[1]);
+        let e0 = (logits[0] - max).exp();
+        let e1 = (logits[1] - max).exp();
+        let p = [e0 / (e0 + e1), e1 / (e0 + e1)];
+        let label = 1usize;
+        let lr = 0.1f32;
+        let mut expect = m.w.clone();
+        let delta = [p[0], p[1] - 1.0];
+        for d in 0..2 {
+            for c in 0..2 {
+                expect[d * 2 + c] -= lr * x[d] * delta[c];
+            }
+        }
+        let loss = m.sgd_step(&[&x], &[label], lr, 1.0);
+        for (got, want) in m.w.iter().zip(&expect) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        assert!((loss + p[1].ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn evaluate_counts_errors() {
+        // W = identity-ish: class = argmax of x.
+        let m = LogReg::from_weights(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let xs = vec![
+            5.0, 0.0, // pred 0
+            0.0, 5.0, // pred 1
+            5.0, 0.0, // pred 0
+        ];
+        let eval = m.evaluate(&xs, &[0, 1, 1]);
+        assert_eq!(eval.err_count, 1);
+        assert_eq!(eval.n, 3);
+        assert!((eval.error_rate() - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minibatch_averages_gradients() {
+        // Two identical samples in a batch must equal a single-sample step.
+        let x = [0.5f32, -1.0, 2.0];
+        let mut a = LogReg::zeros(3, 2);
+        let mut b = LogReg::zeros(3, 2);
+        a.sgd_step(&[&x], &[1], 0.2, 1.0);
+        b.sgd_step(&[&x, &x], &[1, 1], 0.2, 1.0);
+        for (u, v) in a.w.iter().zip(&b.w) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Rust-native model math: an independent second implementation of the
+//! paper's loss families (§II) used to (a) cross-check the HLO/Pallas
+//! path end-to-end, and (b) power the pure-rust baselines where spinning
+//! up PJRT would be overkill.
+
+mod logreg;
+mod svm_lasso;
+
+pub use logreg::{LogReg, LogRegEval};
+pub use svm_lasso::{hinge_step_native, lasso_step_native};

@@ -1,0 +1,141 @@
+//! Native SVM (hinge) and Lasso subgradient steps, mirroring the Pallas
+//! `hinge_step` / `lasso_step` kernels for cross-checking.
+
+/// One hinge-loss subgradient step over a microbatch.
+///
+/// `w ← w − lr·scale·( −(1/B) Σ_{margin<1} y_k x_k + 2λw )`; returns the
+/// regularized mean hinge loss. Labels are in {−1, +1}.
+pub fn hinge_step_native(
+    w: &mut [f32],
+    xs: &[&[f32]],
+    ys: &[f32],
+    lr: f32,
+    scale: f32,
+    lam: f32,
+) -> f32 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let b = xs.len() as f32;
+    let mut g = vec![0.0f32; w.len()];
+    let mut loss = 0.0f32;
+    for (x, &y) in xs.iter().zip(ys) {
+        assert_eq!(x.len(), w.len());
+        let margin = y * crate::linalg::dot(w, x);
+        loss += (1.0 - margin).max(0.0);
+        if margin < 1.0 {
+            crate::linalg::axpy(-y / b, x, &mut g);
+        }
+    }
+    loss /= b;
+    loss += lam * crate::linalg::dot(w, w);
+    for (wi, gi) in w.iter_mut().zip(&g) {
+        *wi -= lr * scale * (gi + 2.0 * lam * *wi);
+    }
+    loss
+}
+
+/// One Lasso subgradient step over a microbatch.
+///
+/// `w ← w − lr·scale·( (1/B) Xᵀ(Xw − y) + λ·sign(w) )`; returns the
+/// regularized mean squared loss `(1/2B)Σ r² + λ‖w‖₁`.
+pub fn lasso_step_native(
+    w: &mut [f32],
+    xs: &[&[f32]],
+    ys: &[f32],
+    lr: f32,
+    scale: f32,
+    lam: f32,
+) -> f32 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let b = xs.len() as f32;
+    let mut g = vec![0.0f32; w.len()];
+    let mut loss = 0.0f32;
+    for (x, &y) in xs.iter().zip(ys) {
+        let r = crate::linalg::dot(w, x) - y;
+        loss += 0.5 * r * r;
+        crate::linalg::axpy(r / b, x, &mut g);
+    }
+    loss /= b;
+    loss += lam * w.iter().map(|v| v.abs()).sum::<f32>();
+    for (wi, gi) in w.iter_mut().zip(&g) {
+        let sign = if *wi > 0.0 {
+            1.0
+        } else if *wi < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+        *wi -= lr * scale * (gi + lam * sign);
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn hinge_learns_linear_separator() {
+        let mut rng = Xoshiro256pp::seeded(1);
+        let dim = 8;
+        let true_w: Vec<f32> = (0..dim).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let mut w = vec![0.0f32; dim];
+        let mut errors = 0;
+        for step in 0..2000 {
+            let x: Vec<f32> = (0..dim).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let y = if crate::linalg::dot(&true_w, &x) > 0.0 { 1.0 } else { -1.0 };
+            if step >= 1500 && crate::linalg::dot(&w, &x) * y <= 0.0 {
+                errors += 1;
+            }
+            hinge_step_native(&mut w, &[&x], &[y], 0.05, 1.0, 0.001);
+        }
+        assert!(errors < 50, "late errors={errors}/500");
+    }
+
+    #[test]
+    fn hinge_inactive_margin_pure_shrinkage() {
+        let mut w = vec![0.5f32; 4];
+        let x: Vec<f32> = w.iter().map(|v| v * 100.0).collect();
+        let before = w.clone();
+        hinge_step_native(&mut w, &[&x], &[1.0], 0.1, 1.0, 0.05);
+        for (a, b) in w.iter().zip(&before) {
+            let expect = b - 0.1 * (2.0 * 0.05 * b);
+            assert!((a - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lasso_recovers_sparse_signal() {
+        let mut rng = Xoshiro256pp::seeded(2);
+        let dim = 10;
+        let mut true_w = vec![0.0f32; dim];
+        true_w[2] = 3.0;
+        true_w[7] = -2.0;
+        let mut w = vec![0.0f32; dim];
+        for _ in 0..4000 {
+            let x: Vec<f32> = (0..dim).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let y = crate::linalg::dot(&true_w, &x) + rng.gauss_f32(0.0, 0.05);
+            lasso_step_native(&mut w, &[&x], &[y], 0.01, 1.0, 0.01);
+        }
+        assert!((w[2] - 3.0).abs() < 0.3, "w[2]={}", w[2]);
+        assert!((w[7] + 2.0).abs() < 0.3, "w[7]={}", w[7]);
+        // Off-support coordinates are shrunk near zero.
+        let off: f32 = (0..dim)
+            .filter(|&i| i != 2 && i != 7)
+            .map(|i| w[i].abs())
+            .sum();
+        assert!(off / 8.0 < 0.15, "off-support mean |w|={}", off / 8.0);
+    }
+
+    #[test]
+    fn lasso_loss_value_exact_fit() {
+        let w = vec![1.0f32, -2.0];
+        let x = [3.0f32, 1.0];
+        let y = crate::linalg::dot(&w, &x);
+        let loss = lasso_step_native(&mut w.clone(), &[&x], &[y], 0.0, 1.0, 0.5);
+        assert!((loss - 0.5 * 3.0).abs() < 1e-6); // λ‖w‖₁ = 0.5·3
+        let _ = w;
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them from the coordinator hot path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so an
+//! `Engine` lives on one thread; the threaded actor runtime either uses
+//! native math per node or funnels execute requests to an engine-owning
+//! service thread via channels (see `runtime::service`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A loaded, compiled artifact set bound to one PJRT (CPU) client.
+pub struct Engine {
+    manifest: Manifest,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Pre-shaped input literals, reused across calls (§Perf: building a
+    /// Literal via `vec1` + `reshape` allocated + copied twice per input;
+    /// `copy_raw_from` into a cached literal does one memcpy, no alloc).
+    input_cache: BTreeMap<String, Vec<xla::Literal>>,
+    /// Cumulative number of `execute` calls (perf accounting).
+    pub exec_count: u64,
+}
+
+impl Engine {
+    /// Load every artifact in `dir` and compile it on a fresh CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        let mut input_cache = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let lits: Vec<xla::Literal> = spec
+                .inputs
+                .iter()
+                .map(|t| {
+                    xla::Literal::create_from_shape(xla::PrimitiveType::F32, &t.shape)
+                })
+                .collect();
+            input_cache.insert(name.clone(), lits);
+        }
+        Ok(Self {
+            manifest,
+            executables,
+            input_cache,
+            exec_count: 0,
+        })
+    }
+
+    /// Default artifact directory: `$DASGD_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("DASGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` with flat f32 input buffers (shape-checked
+    /// against the manifest); returns flat f32 outputs.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, want {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let cached = self
+            .input_cache
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("artifact {name} has no input cache"))?;
+        for ((buf, tspec), lit) in inputs.iter().zip(&spec.inputs).zip(cached.iter_mut()) {
+            if buf.len() != tspec.element_count() {
+                bail!(
+                    "{name}: input {} has {} elements, want {} (shape {:?})",
+                    tspec.name,
+                    buf.len(),
+                    tspec.element_count(),
+                    tspec.shape
+                );
+            }
+            lit.copy_raw_from(buf)
+                .map_err(|e| anyhow!("{name}: staging input {}: {e:?}", tspec.name))?;
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not compiled"))?;
+        let refs: Vec<&xla::Literal> = cached.iter().collect();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.exec_count += 1;
+        let root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{name}: empty result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: decomposing tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, want {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, tspec)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name}: output {}: {e:?}", tspec.name))?;
+                if v.len() != tspec.element_count() {
+                    bail!(
+                        "{name}: output {} has {} elements, want {}",
+                        tspec.name,
+                        v.len(),
+                        tspec.element_count()
+                    );
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Convenience: execute and return the single scalar output of a
+    /// `(1,1)`-shaped result tensor at position `idx`.
+    pub fn execute_scalar_out(
+        &mut self,
+        name: &str,
+        inputs: &[&[f32]],
+        idx: usize,
+    ) -> Result<f32> {
+        let outs = self.execute_f32(name, inputs)?;
+        outs.get(idx)
+            .and_then(|v| v.first())
+            .copied()
+            .ok_or_else(|| anyhow!("{name}: no output {idx}"))
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("artifacts", &self.executables.keys().collect::<Vec<_>>())
+            .field("exec_count", &self.exec_count)
+            .finish()
+    }
+}

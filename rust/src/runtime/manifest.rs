@@ -1,0 +1,167 @@
+//! `artifacts/manifest.json` loader: describes every AOT artifact's
+//! inputs/outputs so call sites are validated at startup, not at
+//! execute time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_list(v: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest entry missing {key:?}"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+            if dtype != "f32" {
+                bail!("tensor {name}: unsupported dtype {dtype}");
+            }
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let format = doc.get("format").and_then(Json::as_str).unwrap_or("");
+        if format != "hlo-text" {
+            bail!("unsupported manifest format {format:?} (want \"hlo-text\")");
+        }
+        let mut artifacts = BTreeMap::new();
+        for entry in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            );
+            if !file.exists() {
+                bail!("artifact file {file:?} missing — run `make artifacts`");
+            }
+            let spec = ArtifactSpec {
+                inputs: tensor_list(entry, "inputs")?,
+                outputs: tensor_list(entry, "outputs")?,
+                name: name.clone(),
+                file,
+            };
+            artifacts.insert(name, spec);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("dasgd_manifest_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","artifacts":[
+                {"name":"a","file":"a.hlo.txt",
+                 "inputs":[{"name":"w","shape":[50,10],"dtype":"f32"}],
+                 "outputs":[{"name":"o","shape":[1,1],"dtype":"f32"}]}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![50, 10]);
+        assert_eq!(a.inputs[0].element_count(), 500);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_file_and_bad_format() {
+        let dir = std::env::temp_dir().join("dasgd_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{"format":"hlo-text","artifacts":[
+                {"name":"a","file":"missing.hlo.txt","inputs":[],"outputs":[]}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, r#"{"format":"protobuf","artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Runtime layer: PJRT loading + execution of the AOT artifacts.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, wrapped as:
+//!
+//! * [`Manifest`] — validated description of `artifacts/`.
+//! * [`Engine`] — single-thread owner of compiled executables.
+//! * [`ExecutorService`] / [`ExecutorHandle`] — channel-based executor
+//!   threads for use from the multi-threaded actor runtime.
+
+mod engine;
+mod manifest;
+mod service;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use service::{ExecutorHandle, ExecutorService};

@@ -1,0 +1,126 @@
+//! Executor service: makes the (thread-bound) [`Engine`](super::Engine)
+//! usable from the multi-threaded actor runtime.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based and cannot cross
+//! threads, so the service spawns one or more worker threads, each
+//! owning a private `Engine` (its own PJRT client + compiled artifacts),
+//! all draining a shared request queue. Node actors submit flat-f32
+//! requests and block on a per-request reply channel — the same design
+//! a real deployment uses for a device executor.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::Engine;
+
+struct Request {
+    artifact: String,
+    inputs: Vec<Vec<f32>>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Cloneable handle for submitting execute requests.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Sender<Request>,
+}
+
+// `Sender` is Send but not Sync; handles are cloned per thread.
+impl ExecutorHandle {
+    /// Execute `artifact` with flat f32 inputs; blocks for the reply.
+    pub fn execute_f32(&self, artifact: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request {
+                artifact: artifact.to_string(),
+                inputs: inputs.iter().map(|b| b.to_vec()).collect(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("executor service is down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor worker dropped the reply"))?
+    }
+}
+
+/// The executor service: owns the worker threads.
+pub struct ExecutorService {
+    tx: Option<Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ExecutorService {
+    /// Spawn `workers` engine-owning threads loading artifacts from `dir`.
+    ///
+    /// Each worker compiles its own copy of the artifact set (PJRT
+    /// handles cannot be shared); compilation happens on the worker
+    /// thread before it starts serving. Errors during load surface on
+    /// the first request.
+    pub fn start(dir: impl Into<PathBuf>, workers: usize) -> Result<Self> {
+        assert!(workers >= 1);
+        let dir = dir.into();
+        let (tx, rx) = channel::<Request>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&shared_rx);
+            let dir = dir.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut engine = match Engine::load(&dir) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // Fail every request we manage to grab.
+                        loop {
+                            let req = { rx.lock().unwrap().recv() };
+                            match req {
+                                Ok(r) => {
+                                    let _ = r
+                                        .reply
+                                        .send(Err(anyhow!("engine load failed: {e:#}")));
+                                }
+                                Err(_) => return,
+                            }
+                        }
+                    }
+                };
+                loop {
+                    // Hold the lock only while dequeuing.
+                    let req = { rx.lock().unwrap().recv() };
+                    match req {
+                        Ok(r) => {
+                            let ins: Vec<&[f32]> =
+                                r.inputs.iter().map(|v| v.as_slice()).collect();
+                            let out = engine.execute_f32(&r.artifact, &ins);
+                            let _ = r.reply.send(out);
+                        }
+                        Err(_) => return, // all senders dropped: shut down
+                    }
+                }
+            }));
+        }
+        Ok(Self {
+            tx: Some(tx),
+            workers: handles,
+        })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle {
+            tx: self.tx.as_ref().expect("service running").clone(),
+        }
+    }
+}
+
+impl Drop for ExecutorService {
+    fn drop(&mut self) {
+        // Close the queue, then join workers.
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Discrete-event simulator: convergence in *virtual time* under
+//! heterogeneous node speeds — the substrate for the intro's claim that
+//! synchronized schemes lose to asynchronous ones when stragglers exist.
+//!
+//! The simulator charges every operation a virtual cost drawn from a
+//! per-node speed model and advances an event queue; no wall-clock
+//! sleeping is involved, so large straggler ratios are cheap to study.
+
+mod event_queue;
+mod speed;
+mod virtual_async;
+
+pub use event_queue::EventQueue;
+pub use speed::SpeedModel;
+pub use virtual_async::{virtual_async_run, VirtualAsyncConfig, VirtualAsyncReport};
+
+/// Virtual time accounting for one synchronous round of a barrier-based
+/// scheme: the barrier waits for the slowest participant.
+pub fn sync_round_time(compute_times: &[f64], comm_latency: f64) -> f64 {
+    compute_times
+        .iter()
+        .copied()
+        .fold(0.0f64, f64::max)
+        + comm_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_round_is_max_plus_comm() {
+        assert_eq!(sync_round_time(&[1.0, 3.0, 2.0], 0.5), 3.5);
+        assert_eq!(sync_round_time(&[], 0.5), 0.5);
+    }
+}

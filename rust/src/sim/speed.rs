@@ -1,0 +1,95 @@
+//! Per-node speed models for heterogeneous clusters.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Mean compute time per operation for every node, with per-operation
+/// jitter. Models the paper's "heterogeneous system including
+/// high-performance computing clusters and low-performance mobile
+/// devices" (§VI future work — we simulate it).
+#[derive(Clone, Debug)]
+pub struct SpeedModel {
+    /// Mean seconds per gradient step, per node.
+    means: Vec<f64>,
+}
+
+impl SpeedModel {
+    /// Homogeneous cluster: everyone at `mean` s/op.
+    pub fn homogeneous(n: usize, mean: f64) -> Self {
+        Self {
+            means: vec![mean; n],
+        }
+    }
+
+    /// Log-normal heterogeneity: node means `mean · exp(N(0, spread))`.
+    pub fn lognormal(n: usize, mean: f64, spread: f64, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        Self {
+            means: (0..n)
+                .map(|_| mean * (rng.next_gauss() * spread).exp())
+                .collect(),
+        }
+    }
+
+    /// A homogeneous cluster with `stragglers` nodes slowed by `factor`.
+    pub fn with_stragglers(n: usize, mean: f64, stragglers: usize, factor: f64) -> Self {
+        assert!(stragglers <= n);
+        let mut means = vec![mean; n];
+        for m in means.iter_mut().take(stragglers) {
+            *m *= factor;
+        }
+        Self { means }
+    }
+
+    pub fn len(&self) -> usize {
+        self.means.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.means.is_empty()
+    }
+
+    pub fn mean(&self, node: usize) -> f64 {
+        self.means[node]
+    }
+
+    /// Sample one operation's duration: Exp(1/mean_i) jitter.
+    pub fn sample(&self, node: usize, rng: &mut Xoshiro256pp) -> f64 {
+        rng.exponential(1.0 / self.means[node])
+    }
+
+    /// One synchronized-round compute draw for every node.
+    pub fn sample_all(&self, rng: &mut Xoshiro256pp) -> Vec<f64> {
+        (0..self.means.len()).map(|i| self.sample(i, rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straggler_means() {
+        let m = SpeedModel::with_stragglers(5, 1.0, 2, 10.0);
+        assert_eq!(m.mean(0), 10.0);
+        assert_eq!(m.mean(1), 10.0);
+        assert_eq!(m.mean(4), 1.0);
+    }
+
+    #[test]
+    fn samples_average_to_mean() {
+        let m = SpeedModel::homogeneous(1, 2.0);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| m.sample(0, &mut rng)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_spread_creates_heterogeneity() {
+        let m = SpeedModel::lognormal(50, 1.0, 1.0, 3);
+        let max = m.means.iter().cloned().fold(0.0f64, f64::max);
+        let min = m.means.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 3.0, "max/min = {}", max / min);
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared substrates: RNG, statistics, JSON, CSV, property testing, timing.
+//!
+//! Everything here is hand-built: the offline image resolves no external
+//! crates beyond `xla`/`anyhow`/`thiserror` (see DESIGN.md §3).
+
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with split support.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let a = sw.elapsed_secs();
+        assert!(a >= 0.004);
+        let split = sw.restart();
+        assert!(split >= a);
+        assert!(sw.elapsed_secs() < split);
+    }
+}

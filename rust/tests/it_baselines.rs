@@ -1,0 +1,149 @@
+//! Integration: the baseline algorithms and the virtual-time straggler
+//! comparison — Alg. 2's positioning claims, measured.
+
+use dasgd::baselines::{
+    local_only_errors, server_worker, sync_dsgd, CentralizedSgd, ServerWorkerConfig,
+    SyncDsgdConfig,
+};
+use dasgd::coordinator::{NativeBackend, StepSize, TrainConfig, Trainer};
+use dasgd::data::Dataset;
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::sim::{virtual_async_run, SpeedModel, VirtualAsyncConfig};
+
+fn world(n: usize, seed: u64) -> (Vec<Dataset>, Dataset) {
+    synth_world(n, 150, 400, seed)
+}
+
+#[test]
+fn alg2_approaches_centralized_accuracy() {
+    // The §V-E claim on the synthetic corpus: decentralized ≈ centralized.
+    let n = 10;
+    let (shards, test) = world(n, 51);
+
+    let mut pool = Dataset::new(50, 10);
+    for s in &shards {
+        pool.extend(s);
+    }
+    let mut central = CentralizedSgd::new(50, 10, StepSize::paper_default(1), 1);
+    let crec = central.run(&pool, &test, 6000, 6000);
+
+    let cfg = TrainConfig::paper_default(n).with_seed(51);
+    let mut t = Trainer::new(
+        cfg,
+        make_regular(n, 4),
+        shards,
+        NativeBackend::new(50, 10),
+    );
+    let arec = t.run(6000, 6000, &test, "alg2").unwrap();
+
+    let gap = arec.final_err() - crec.final_err();
+    assert!(
+        gap < 0.12,
+        "alg2 err {} vs centralized {}",
+        arec.final_err(),
+        crec.final_err()
+    );
+}
+
+#[test]
+fn alg2_beats_local_only_under_skew() {
+    let n = 10;
+    let (shards, test) = world(n, 53);
+    let (avg_err, per_node_err) =
+        local_only_errors(&shards, &test, StepSize::paper_default(1), 600, 3);
+
+    let cfg = TrainConfig::paper_default(n).with_seed(53);
+    let mut t = Trainer::new(
+        cfg,
+        make_regular(n, 4),
+        shards,
+        NativeBackend::new(50, 10),
+    );
+    let rec = t.run(6000, 6000, &test, "alg2").unwrap();
+
+    // Consensus training beats the mean isolated node on the mixture.
+    assert!(
+        rec.final_err() < per_node_err,
+        "alg2 {} vs per-node {per_node_err} (avg-of-locals {avg_err})",
+        rec.final_err()
+    );
+}
+
+#[test]
+fn sync_dsgd_and_server_worker_converge() {
+    let n = 8;
+    let (shards, test) = world(n, 57);
+    let rep = sync_dsgd(
+        &make_regular(n, 4),
+        &shards,
+        &test,
+        &SyncDsgdConfig {
+            stepsize: StepSize::Poly {
+                a: 8.0,
+                tau: 3000.0,
+                pow: 0.75,
+            },
+            rounds: 500,
+            eval_every: 250,
+            seed: 5,
+        },
+    );
+    assert!(rep.recorder.final_err() < 0.5);
+
+    let rep = server_worker(
+        &shards,
+        &test,
+        &ServerWorkerConfig {
+            stepsize: StepSize::Poly {
+                a: 1.0,
+                tau: 2000.0,
+                pow: 0.75,
+            },
+            rounds: 400,
+            eval_every: 200,
+            drop_frac: 0.25,
+            worker_speed: vec![],
+            seed: 5,
+        },
+    );
+    assert!(rep.recorder.final_err() < 0.5);
+}
+
+#[test]
+fn virtual_time_async_beats_sync_under_stragglers() {
+    // The intro's claim, quantified: same virtual horizon, one 20x
+    // straggler; async completes far more updates than sync rounds
+    // would allow.
+    let n = 8;
+    let (shards, test) = world(n, 59);
+    let g = make_regular(n, 4);
+    let speeds = SpeedModel::with_stragglers(n, 1.0, 1, 20.0);
+    let horizon = 150.0;
+
+    let cfg = VirtualAsyncConfig {
+        p_grad: 0.5,
+        stepsize: StepSize::paper_default(n),
+        horizon,
+        eval_every: horizon,
+        comm_latency: 0.05,
+        seed: 7,
+    };
+    let async_rep = virtual_async_run(&g, &shards, &test, &speeds, &cfg);
+
+    // Sync DSGD round = slowest node ≈ 20s ⇒ ~7 rounds in 150s, i.e.
+    // ~7·n updates. Async should complete ≥ 3x more.
+    let mut rng = dasgd::util::rng::Xoshiro256pp::seeded(9);
+    let mut vt = 0.0;
+    let mut rounds = 0u64;
+    while vt < horizon {
+        vt += dasgd::sim::sync_round_time(&speeds.sample_all(&mut rng), 0.05);
+        rounds += 1;
+    }
+    let sync_updates = rounds * n as u64;
+    assert!(
+        async_rep.updates > sync_updates * 3,
+        "async {} vs sync-equivalent {}",
+        async_rep.updates,
+        sync_updates
+    );
+}

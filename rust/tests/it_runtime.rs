@@ -1,0 +1,209 @@
+//! Integration: PJRT engine loads the AOT artifacts and agrees with the
+//! rust-native math — the cross-layer correctness signal.
+//!
+//! Requires `make artifacts` to have run (skips with a message if not).
+
+use dasgd::model::LogReg;
+use dasgd::runtime::Engine;
+use dasgd::util::proptest::assert_allclose;
+use dasgd::util::rng::Xoshiro256pp;
+
+fn engine_or_skip() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn onehot(label: usize, c: usize) -> Vec<f32> {
+    let mut v = vec![0.0; c];
+    v[label] = 1.0;
+    v
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(engine) = engine_or_skip() else { return };
+    for name in [
+        "logreg_step_synth_b1",
+        "logreg_step_synth_b8",
+        "logreg_step_notmnist_b1",
+        "logreg_step_notmnist_b8",
+        "logreg_eval_synth",
+        "logreg_eval_notmnist",
+        "gossip_avg_synth",
+        "gossip_avg_notmnist",
+        "hinge_step_b1",
+        "lasso_step_b1",
+    ] {
+        assert!(engine.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn logreg_step_artifact_matches_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (d, c) = (50usize, 10usize);
+    let mut rng = Xoshiro256pp::seeded(42);
+    let w: Vec<f32> = (0..d * c).map(|_| rng.gauss_f32(0.0, 0.2)).collect();
+    let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let label = 3usize;
+    let y = onehot(label, c);
+    let lr = [0.1f32];
+    let scale = [1.0f32 / 30.0];
+
+    let outs = engine
+        .execute_f32(
+            "logreg_step_synth_b1",
+            &[&w, &x, &y, &lr, &scale],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let (w_hlo, loss_hlo) = (&outs[0], outs[1][0]);
+
+    let mut native = LogReg::from_weights(d, c, w.clone());
+    let loss_native = native.sgd_step(&[&x], &[label], 0.1, 1.0 / 30.0);
+
+    assert_allclose(w_hlo, &native.w, 1e-4, 1e-6).unwrap();
+    assert!(
+        (loss_hlo - loss_native).abs() < 1e-4,
+        "loss hlo={loss_hlo} native={loss_native}"
+    );
+}
+
+#[test]
+fn logreg_eval_artifact_matches_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (d, c, n) = (50usize, 10usize, 256usize);
+    let mut rng = Xoshiro256pp::seeded(7);
+    let w: Vec<f32> = (0..d * c).map(|_| rng.gauss_f32(0.0, 0.3)).collect();
+    let mut xs = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n * c);
+    for _ in 0..n {
+        for _ in 0..d {
+            xs.push(rng.gauss_f32(0.0, 1.0));
+        }
+        let l = rng.index(c);
+        labels.push(l);
+        y.extend(onehot(l, c));
+    }
+    let outs = engine
+        .execute_f32("logreg_eval_synth", &[&w, &xs, &y])
+        .unwrap();
+    let (loss_hlo, err_hlo) = (outs[0][0], outs[1][0]);
+
+    let native = LogReg::from_weights(d, c, w);
+    let eval = native.evaluate(&xs, &labels);
+    assert!(
+        (loss_hlo - eval.loss_sum).abs() / eval.loss_sum.abs() < 1e-3,
+        "loss hlo={loss_hlo} native={}",
+        eval.loss_sum
+    );
+    assert_eq!(err_hlo as usize, eval.err_count);
+}
+
+#[test]
+fn gossip_artifact_matches_mean() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let k = 500usize; // synth: 50*10
+    let m = 16usize;
+    let live = 5usize;
+    let mut rng = Xoshiro256pp::seeded(3);
+    let mut p = vec![0.0f32; m * k];
+    for row in 0..live {
+        for j in 0..k {
+            p[row * k + j] = rng.gauss_f32(0.0, 1.0);
+        }
+    }
+    let mut wts = vec![0.0f32; m];
+    for w in wts.iter_mut().take(live) {
+        *w = 1.0 / live as f32;
+    }
+    let outs = engine.execute_f32("gossip_avg_synth", &[&p, &wts]).unwrap();
+    let avg = &outs[0];
+    // Native mean of the live rows.
+    let rows: Vec<&[f32]> = (0..live).map(|r| &p[r * k..(r + 1) * k]).collect();
+    let expect = dasgd::linalg::mean_of(&rows);
+    assert_allclose(avg, &expect, 1e-5, 1e-6).unwrap();
+}
+
+#[test]
+fn hinge_and_lasso_artifacts_match_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let d = 50usize;
+    let mut rng = Xoshiro256pp::seeded(11);
+    let w: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 0.5)).collect();
+    let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let lr = [0.05f32];
+    let scale = [1.0f32];
+    let lam = [0.01f32];
+
+    // Hinge, y = -1.
+    let y = [-1.0f32];
+    let outs = engine
+        .execute_f32("hinge_step_b1", &[&w, &x, &y, &lr, &scale, &lam])
+        .unwrap();
+    let mut wn = w.clone();
+    let loss_native =
+        dasgd::model::hinge_step_native(&mut wn, &[&x], &[-1.0], 0.05, 1.0, 0.01);
+    assert_allclose(&outs[0], &wn, 1e-4, 1e-6).unwrap();
+    assert!((outs[1][0] - loss_native).abs() < 1e-4);
+
+    // Lasso, y = 0.7.
+    let y = [0.7f32];
+    let outs = engine
+        .execute_f32("lasso_step_b1", &[&w, &x, &y, &lr, &scale, &lam])
+        .unwrap();
+    let mut wn = w.clone();
+    let loss_native =
+        dasgd::model::lasso_step_native(&mut wn, &[&x], &[0.7], 0.05, 1.0, 0.01);
+    assert_allclose(&outs[0], &wn, 1e-4, 1e-6).unwrap();
+    assert!((outs[1][0] - loss_native).abs() < 1e-4);
+}
+
+#[test]
+fn engine_rejects_bad_shapes_and_names() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    assert!(engine.execute_f32("no_such_artifact", &[]).is_err());
+    let short = vec![0.0f32; 3];
+    assert!(engine
+        .execute_f32("logreg_step_synth_b1", &[&short])
+        .is_err());
+}
+
+#[test]
+fn executor_service_roundtrip_from_threads() {
+    use dasgd::runtime::ExecutorService;
+    if Engine::load("artifacts").is_err() {
+        eprintln!("SKIP (run `make artifacts`)");
+        return;
+    }
+    let service = ExecutorService::start("artifacts", 2).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let h = service.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::seeded(100 + t);
+            let (d, c) = (50usize, 10usize);
+            let w: Vec<f32> = (0..d * c).map(|_| rng.gauss_f32(0.0, 0.1)).collect();
+            let x: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let mut y = vec![0.0f32; c];
+            y[(t as usize) % c] = 1.0;
+            let outs = h
+                .execute_f32(
+                    "logreg_step_synth_b1",
+                    &[&w, &x, &y, &[0.1f32], &[1.0f32]],
+                )
+                .unwrap();
+            assert_eq!(outs[0].len(), d * c);
+            assert!(outs[1][0].is_finite());
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}

@@ -1,0 +1,98 @@
+//! Integration: the full Alg. 2 training loop across modules — graph +
+//! data + coordinator + metrics — and the native↔PJRT backend
+//! equivalence on identical seeds.
+
+use dasgd::coordinator::{NativeBackend, TrainConfig, Trainer};
+use dasgd::experiments::{self, make_regular, synth_world};
+
+#[test]
+fn alg2_full_loop_consensus_and_accuracy() {
+    let n = 10;
+    let (shards, test) = synth_world(n, 150, 400, 17);
+    let cfg = TrainConfig::paper_default(n).with_seed(17);
+    let mut t = Trainer::new(cfg, make_regular(n, 4), shards, NativeBackend::new(50, 10));
+    let rec = t.run(8000, 2000, &test, "it").unwrap();
+    let last = rec.last().unwrap();
+    // 10 classes → random = 0.9; the paper reaches < 0.4 at 40k on 30
+    // nodes; at this scale demand clear learning.
+    assert!(last.test_err < 0.45, "err={}", last.test_err);
+    // Consensus must be tight at the end (diminishing steps).
+    assert!(last.consensus < 5.0, "d^k={}", last.consensus);
+    // Counter discipline.
+    assert_eq!(t.counters.grad_steps + t.counters.proj_steps, t.k);
+    assert_eq!(last.k, t.k);
+}
+
+#[test]
+fn eval_cadence_and_monotone_k() {
+    let n = 6;
+    let (shards, test) = synth_world(n, 60, 128, 3);
+    let cfg = TrainConfig::paper_default(n).with_seed(3);
+    let mut t = Trainer::new(cfg, make_regular(n, 2), shards, NativeBackend::new(50, 10));
+    let rec = t.run(1000, 100, &test, "cadence").unwrap();
+    // Records at k=0, then ~every 100, then final: 11-13 records.
+    assert!(rec.records.len() >= 10, "{}", rec.records.len());
+    assert!(rec.records.windows(2).all(|w| w[0].k <= w[1].k));
+    assert_eq!(rec.records.last().unwrap().k, 1000);
+}
+
+#[test]
+fn pjrt_backend_matches_native_trajectory() {
+    // Same seeds → identical node/data/selection randomness; the only
+    // difference is where the math runs. Trajectories agree to float
+    // accumulation tolerance.
+    if dasgd::runtime::Engine::load("artifacts").is_err() {
+        eprintln!("SKIP (run `make artifacts`)");
+        return;
+    }
+    let (native, pjrt) = experiments::run_both_backends(8, 4, 600, 23).unwrap();
+    let n_last = native.last().unwrap();
+    let p_last = pjrt.last().unwrap();
+    assert!(
+        (n_last.test_err - p_last.test_err).abs() < 0.06,
+        "err native={} pjrt={}",
+        n_last.test_err,
+        p_last.test_err
+    );
+    assert!(
+        (n_last.consensus - p_last.consensus).abs()
+            < 0.05 * n_last.consensus.abs().max(1.0),
+        "consensus native={} pjrt={}",
+        n_last.consensus,
+        p_last.consensus
+    );
+    assert_eq!(n_last.grad_steps, p_last.grad_steps);
+    assert_eq!(n_last.proj_steps, p_last.proj_steps);
+}
+
+#[test]
+fn distributed_selection_end_to_end() {
+    use dasgd::coordinator::SelectionMode;
+    let n = 12;
+    let (shards, test) = synth_world(n, 100, 256, 29);
+    let cfg = TrainConfig {
+        selection: SelectionMode::DistributedGeometric { p: 0.08 },
+        ..TrainConfig::paper_default(n)
+    }
+    .with_seed(29);
+    let mut t = Trainer::new(cfg, make_regular(n, 4), shards, NativeBackend::new(50, 10));
+    let rec = t.run(5000, 2500, &test, "dist").unwrap();
+    assert!(rec.final_err() < 0.5, "err={}", rec.final_err());
+    // Fully distributed selection still covers all nodes.
+    assert!(t.nodes.iter().all(|nd| nd.grad_steps + nd.proj_steps > 0));
+}
+
+#[test]
+fn csv_export_from_training() {
+    let n = 6;
+    let (shards, test) = synth_world(n, 50, 128, 31);
+    let cfg = TrainConfig::paper_default(n).with_seed(31);
+    let mut t = Trainer::new(cfg, make_regular(n, 2), shards, NativeBackend::new(50, 10));
+    let rec = t.run(300, 100, &test, "csv").unwrap();
+    let path = std::env::temp_dir().join("dasgd_it_train.csv");
+    rec.write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("k,time_secs,consensus"));
+    assert!(text.lines().count() > 3);
+    std::fs::remove_file(path).ok();
+}

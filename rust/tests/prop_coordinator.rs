@@ -1,0 +1,271 @@
+//! Property tests on coordinator invariants (in-repo harness — the
+//! `proptest` crate does not resolve offline; see `util::proptest`).
+//!
+//! Invariants checked across randomized topologies, parameters, and
+//! schedules:
+//!  * projection preserves the closed-neighborhood mean and never
+//!    increases the consensus distance;
+//!  * trainer counter discipline (k = grads + projections; message
+//!    accounting matches Σ 2·deg over projections in central mode);
+//!  * selection statistics (all indices valid, distributed rates
+//!    proportional);
+//!  * generated regular graphs are simple, regular, connected;
+//!  * spectral bound stays in (0, 1] and orders with degree.
+
+use dasgd::coordinator::{
+    consensus, NativeBackend, TrainConfig, Trainer,
+};
+use dasgd::data::{Dataset, SyntheticGen};
+use dasgd::experiments::make_regular;
+use dasgd::graph::{random_regular, spectral, Graph};
+use dasgd::util::proptest::{check, Gen};
+use dasgd::util::rng::Xoshiro256pp;
+
+fn random_params(g: &mut Gen, n: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| g.f32_vec(len, -5.0, 5.0)).collect()
+}
+
+fn random_connected_graph(g: &mut Gen, n: usize) -> Graph {
+    // Random spanning tree + extra random edges: always connected.
+    let mut graph = Graph::empty(n);
+    for v in 1..n {
+        let u = g.usize_in(0, v - 1);
+        graph.add_edge(u, v);
+    }
+    let extra = g.usize_in(0, n);
+    for _ in 0..extra {
+        let u = g.usize_in(0, n - 1);
+        let v = g.usize_in(0, n - 1);
+        if u != v {
+            graph.add_edge(u, v);
+        }
+    }
+    graph
+}
+
+#[test]
+fn projection_preserves_neighborhood_mean_and_contracts() {
+    check("projection-invariants", 60, 0xA11CE, |g| {
+        let n = g.usize_in(3, 12);
+        let len = g.usize_in(1, 20);
+        let graph = random_connected_graph(g, n);
+        let params = random_params(g, n, len);
+        let m = g.usize_in(0, n - 1);
+
+        let hood = graph.closed_neighborhood(m);
+        let rows: Vec<&[f32]> = hood.iter().map(|&i| params[i].as_slice()).collect();
+        let avg = dasgd::linalg::mean_of(&rows);
+
+        // Mean preservation: sum over the neighborhood is unchanged.
+        for j in 0..len {
+            let before: f32 = hood.iter().map(|&i| params[i][j]).sum();
+            let after = avg[j] * hood.len() as f32;
+            if (before - after).abs() > 1e-3 * before.abs().max(1.0) {
+                return Err(format!("mass not conserved at coord {j}: {before} vs {after}"));
+            }
+        }
+
+        // Consensus distance never increases under a projection.
+        let d_before = consensus::consensus_distance(&params);
+        let mut after_params = params.clone();
+        for &i in &hood {
+            after_params[i] = avg.clone();
+        }
+        let d_after = consensus::consensus_distance(&after_params);
+        if d_after > d_before + 1e-6 {
+            return Err(format!("projection increased d: {d_before} -> {d_after}"));
+        }
+
+        // DF also never increases.
+        let df_before = consensus::feasibility(&params, &graph).df_sq;
+        let df_after = consensus::feasibility(&after_params, &graph).df_sq;
+        if df_after > df_before + 1e-6 {
+            return Err(format!("projection increased DF: {df_before} -> {df_after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trainer_counter_discipline() {
+    check("trainer-counters", 12, 0xBEEF, |g| {
+        let n = g.usize_in(4, 10);
+        let degree = *g.choose(&[2usize, 4]);
+        let iters = g.usize_in(50, 400) as u64;
+        let p_grad = g.f64_in(0.0, 1.0);
+        let seed = g.rng.next_u64();
+
+        let gen = SyntheticGen::new(n, 10, 3, 2.0, 0.4, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed ^ 1);
+        let shards: Vec<Dataset> =
+            (0..n).map(|i| gen.node_dataset(i, 20, &mut rng)).collect();
+        let test = gen.global_test_set(60, &mut rng);
+
+        let cfg = TrainConfig::paper_default(n)
+            .with_p_grad(p_grad)
+            .with_seed(seed);
+        let mut t = Trainer::new(
+            cfg,
+            make_regular(n, degree),
+            shards,
+            NativeBackend::new(10, 3),
+        );
+        t.run(iters, iters, &test, "prop").map_err(|e| e.to_string())?;
+
+        if t.k != iters {
+            return Err(format!("k={} != iters={iters}", t.k));
+        }
+        if t.counters.grad_steps + t.counters.proj_steps != t.k {
+            return Err("grad+proj != k".into());
+        }
+        // Central mode: every projection on node m sends 2·deg(m)
+        // messages; degree is uniform so messages = 2·deg·projs.
+        let expect = 2 * t.graph.degree(0) as u64 * t.counters.proj_steps;
+        if t.counters.messages != expect {
+            return Err(format!(
+                "messages {} != {}",
+                t.counters.messages, expect
+            ));
+        }
+        // Per-node counts sum to totals.
+        let node_sum: u64 = t.nodes.iter().map(|nd| nd.grad_steps + nd.proj_steps).sum();
+        if node_sum != t.k {
+            return Err("per-node counts don't sum to k".into());
+        }
+        // All parameters finite.
+        if !t.params().iter().all(|w| w.iter().all(|v| v.is_finite())) {
+            return Err("non-finite parameter".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distributed_selection_stats_and_conflicts() {
+    check("selection-stats", 10, 0xCAFE, |g| {
+        use dasgd::coordinator::GeometricSelector;
+        let n = g.usize_in(3, 16);
+        let p = g.f64_in(0.01, 0.4);
+        let seed = g.rng.next_u64();
+        let mut sel = GeometricSelector::uniform(n, p, seed);
+        let mut counts = vec![0u64; n];
+        let draws = 4000;
+        for _ in 0..draws {
+            let slot = sel.next();
+            if slot.fired.is_empty() {
+                return Err("empty firing set".into());
+            }
+            for i in slot.fired {
+                if i >= n {
+                    return Err(format!("fired index {i} out of range"));
+                }
+                counts[i] += 1;
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        let expect = total as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            if (c as f64 - expect).abs() > expect * 0.5 {
+                return Err(format!("node {i} count {c} vs expected {expect:.0}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_regular_graphs_always_valid() {
+    check("random-regular", 25, 0xD00D, |g| {
+        let n = g.usize_in(6, 24);
+        let mut k = g.usize_in(2, (n - 1).min(8));
+        if (n * k) % 2 == 1 {
+            k -= 1;
+        }
+        let k = k.max(2);
+        let graph = random_regular(n, k, &mut g.rng);
+        if graph.is_regular() != Some(k) {
+            return Err(format!("not {k}-regular"));
+        }
+        if !graph.is_connected() {
+            return Err("disconnected".into());
+        }
+        // Simple: no self-loops (enforced) and degree == neighbor count.
+        for u in 0..n {
+            let nb = graph.neighbors(u);
+            if nb.windows(2).any(|w| w[0] == w[1]) {
+                return Err("duplicate neighbor".into());
+            }
+            if nb.contains(&u) {
+                return Err("self-loop".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spectral_bound_ranges_and_ordering() {
+    check("spectral-bound", 10, 0xE77A, |g| {
+        let n = 2 * g.usize_in(4, 14); // even, 8..28
+        let k1 = 2;
+        let k2 = (n / 2).min(10);
+        let g1 = make_regular(n, k1);
+        let g2 = make_regular(n, k2);
+        let e1 = spectral::lemma1_eta_lower_bound(&g1);
+        let e2 = spectral::lemma1_eta_lower_bound(&g2);
+        if !(0.0 < e1 && e1 <= 1.0 + 1e-9) {
+            return Err(format!("eta1 out of range: {e1}"));
+        }
+        if !(0.0 < e2 && e2 <= 1.0 + 1e-9) {
+            return Err(format!("eta2 out of range: {e2}"));
+        }
+        if e2 < e1 - 1e-6 {
+            return Err(format!("denser graph got smaller bound: {e2} < {e1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gossip_idempotent_at_consensus() {
+    check("gossip-idempotent", 30, 0xF00D, |g| {
+        let n = g.usize_in(3, 10);
+        let len = g.usize_in(1, 16);
+        let graph = random_connected_graph(g, n);
+        let shared = g.f32_vec(len, -3.0, 3.0);
+        let params: Vec<Vec<f32>> = (0..n).map(|_| shared.clone()).collect();
+        let m = g.usize_in(0, n - 1);
+        let hood = graph.closed_neighborhood(m);
+        let rows: Vec<&[f32]> = hood.iter().map(|&i| params[i].as_slice()).collect();
+        let avg = dasgd::linalg::mean_of(&rows);
+        dasgd::util::proptest::assert_allclose(&avg, &shared, 1e-5, 1e-6)
+    });
+}
+
+#[test]
+fn distributed_matches_central_throughput_share() {
+    // With non-uniform rates, per-node selection shares follow rates —
+    // the §IV-A "preferred probability" design, as a property.
+    check("weighted-rates", 6, 0xFEED, |g| {
+        use dasgd::coordinator::GeometricSelector;
+        let n = g.usize_in(2, 6);
+        let rates: Vec<f64> = (0..n).map(|_| g.f64_in(0.02, 0.2)).collect();
+        let mut sel = GeometricSelector::with_rates(rates.clone(), g.rng.next_u64());
+        let mut counts = vec![0f64; n];
+        for _ in 0..30_000 {
+            for i in sel.next().fired {
+                counts[i] += 1.0;
+            }
+        }
+        let total: f64 = counts.iter().sum();
+        let rate_total: f64 = rates.iter().sum();
+        for i in 0..n {
+            let got = counts[i] / total;
+            let want = rates[i] / rate_total;
+            if (got - want).abs() > want * 0.25 {
+                return Err(format!("node {i}: share {got:.3} vs rate share {want:.3}"));
+            }
+        }
+        Ok(())
+    });
+}
