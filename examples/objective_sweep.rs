@@ -1,0 +1,92 @@
+//! Objective sweep: Fig.-2-style consensus curves for all three §II
+//! loss families — logreg, hinge-SVM, and Lasso — on the *same* topology
+//! through the *same* `Trainer`/`StepBackend` code path.
+//!
+//! ```text
+//! cargo run --release --example objective_sweep [-- --scale 1.0 --seed 7]
+//! ```
+//!
+//! Each run starts from randomized per-node parameters (init_scale = 1),
+//! so d^0 is large and the table shows the Eq. (7) projections dragging
+//! every objective's network toward consensus while its metric improves.
+
+use dasgd::cli::Args;
+use dasgd::coordinator::{Objective, TrainConfig};
+use dasgd::experiments::{make_regular, run_alg2, scaled, synth_world};
+use dasgd::metrics::{Recorder, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&["scale", "seed"])
+        .and_then(|()| args.require_values(&["scale", "seed"]))
+        .map_err(anyhow::Error::msg)?;
+    let scale = args.get_f64("scale", 0.5).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+
+    let n = 12;
+    let degree = 4;
+    let iters = scaled(12_000, scale, 600);
+    let eval_every = (iters / 8).max(1);
+
+    println!("== objective sweep: one trainer, three loss families ==");
+    println!("{n} nodes, {degree}-regular graph, {iters} Alg. 2 updates each\n");
+
+    let objectives = [Objective::LogReg, Objective::hinge(), Objective::lasso()];
+    let mut series: Vec<(Objective, Recorder)> = Vec::new();
+    for obj in objectives {
+        let (shards, test) = synth_world(n, 200, 512, seed);
+        let cfg = TrainConfig::objective_default(obj, n)
+            .with_init_scale(1.0)
+            .with_seed(seed);
+        let rec = run_alg2(
+            &cfg,
+            make_regular(n, degree),
+            shards,
+            &test,
+            iters,
+            eval_every,
+            obj.name(),
+        )?;
+        series.push((obj, rec));
+    }
+
+    // Consensus curves side by side (the Fig. 2 reading, per objective).
+    let mut header = vec!["k".to_string()];
+    header.extend(series.iter().map(|(o, _)| format!("d^k ({o})")));
+    let hdr: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&hdr);
+    for r in 0..series[0].1.records.len() {
+        let mut cells = vec![format!("{}", series[0].1.records[r].k)];
+        for (_, rec) in &series {
+            cells.push(format!("{:.3}", rec.records[r].consensus));
+        }
+        t.row(&cells);
+    }
+    t.print();
+
+    println!();
+    let mut m = Table::new(&["objective", "metric", "start", "final", "d^0", "d^final"]);
+    for (obj, rec) in &series {
+        let first = rec.records.first().unwrap();
+        let last = rec.last().unwrap();
+        m.row(&[
+            obj.name().to_string(),
+            match obj {
+                Objective::Lasso { .. } => "RMSE".to_string(),
+                _ => "error rate".to_string(),
+            },
+            format!("{:.3}", first.test_err),
+            format!("{:.3}", last.test_err),
+            format!("{:.2}", first.consensus),
+            format!("{:.3}", last.consensus),
+        ]);
+    }
+    m.print();
+
+    println!(
+        "\nReading: every loss family reaches consensus (d^k ↓) and improves its \
+         metric with purely local gradient + neighborhood-projection steps — the \
+         coordinator never special-cases the objective."
+    );
+    Ok(())
+}

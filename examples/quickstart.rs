@@ -7,32 +7,43 @@
 //!
 //! Uses the rust-native backend so it runs even before `make artifacts`;
 //! pass `--backend pjrt` (after `make artifacts`) to execute the
-//! AOT-compiled Pallas kernels instead.
+//! AOT-compiled Pallas kernels instead, and `--objective hinge` or
+//! `--objective lasso` to optimize a different §II loss family through
+//! the same trainer.
 
 use dasgd::cli::Args;
-use dasgd::coordinator::{Backend, TrainConfig};
+use dasgd::coordinator::{Backend, Objective, TrainConfig};
 use dasgd::experiments::{make_regular, run_alg2, synth_world};
 use dasgd::metrics::Table;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&["backend", "objective", "iters"])
+        .and_then(|()| args.require_values(&["backend", "objective", "iters"]))
+        .map_err(anyhow::Error::msg)?;
     let backend = match args.get_str("backend", "native") {
         "pjrt" => Backend::Pjrt,
-        _ => Backend::Native,
+        "native" => Backend::Native,
+        other => anyhow::bail!("unknown backend {other:?} (choose: native, pjrt)"),
     };
+    let objective = Objective::parse(args.get_str("objective", "logreg"))
+        .ok_or_else(|| anyhow::anyhow!("unknown objective (try: logreg, hinge, lasso)"))?;
     let n = 12;
     let degree = 4;
     let iters = args.get_u64("iters", 6000).map_err(anyhow::Error::msg)?;
 
     println!("== dasgd quickstart ==");
-    println!("{n} nodes, {degree}-regular graph, {iters} Alg. 2 updates, {backend:?} backend\n");
+    println!(
+        "{n} nodes, {degree}-regular graph, {iters} Alg. 2 updates, \
+         {objective} objective, {backend:?} backend\n"
+    );
 
     // 1. A networked world: per-node data distributions + a global test set.
     let (shards, test) = synth_world(n, 300, 512, 42);
 
     // 2. The paper's Alg. 2 with default settings (p_grad = 0.5,
-    //    diminishing steps).
-    let cfg = TrainConfig::paper_default(n)
+    //    diminishing steps tuned per objective).
+    let cfg = TrainConfig::objective_default(objective, n)
         .with_seed(42)
         .with_backend(backend);
 
@@ -60,12 +71,22 @@ fn main() -> anyhow::Result<()> {
 
     let first = rec.records.first().unwrap();
     let last = rec.last().unwrap();
-    println!(
-        "\nprediction error {:.3} → {:.3} (random guess would be {:.3})",
-        first.test_err,
-        last.test_err,
-        1.0 - 1.0 / test.classes() as f64
-    );
+    match objective {
+        Objective::Lasso { .. } => println!(
+            "\nprediction RMSE {:.3} → {:.3}",
+            first.test_err, last.test_err
+        ),
+        Objective::Hinge { .. } => println!(
+            "\nbinary error {:.3} → {:.3} (random guess would be 0.500)",
+            first.test_err, last.test_err
+        ),
+        Objective::LogReg => println!(
+            "\nprediction error {:.3} → {:.3} (random guess would be {:.3})",
+            first.test_err,
+            last.test_err,
+            1.0 - 1.0 / test.classes() as f64
+        ),
+    }
     println!(
         "all with LOCAL operations only: {} gradient steps, {} neighborhood averages, {} messages",
         last.grad_steps, last.proj_steps, last.messages

@@ -1,25 +1,45 @@
 //! Centralized SGD: the single-machine reference (§V-E compares Alg. 2's
-//! final error to "a centralized version of SGD").
+//! final error to "a centralized version of SGD"). Objective-generic:
+//! the same loop optimizes any §II loss family.
 
-use crate::coordinator::StepSize;
+use crate::coordinator::{EvalBatch, StepSize};
 use crate::data::Dataset;
 use crate::metrics::{Record, Recorder};
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 
 /// Plain single-variable SGD over the pooled data.
 pub struct CentralizedSgd {
-    pub model: LogReg,
+    pub objective: Objective,
+    dim: usize,
+    classes: usize,
+    /// The single global parameter vector.
+    pub w: Vec<f32>,
     pub stepsize: StepSize,
     pub rng: Xoshiro256pp,
     pub k: u64,
 }
 
 impl CentralizedSgd {
+    /// Logistic-regression reference (the paper's §V-E baseline).
     pub fn new(dim: usize, classes: usize, stepsize: StepSize, seed: u64) -> Self {
+        Self::for_objective(Objective::LogReg, dim, classes, stepsize, seed)
+    }
+
+    /// Centralized SGD on an arbitrary §II objective.
+    pub fn for_objective(
+        objective: Objective,
+        dim: usize,
+        classes: usize,
+        stepsize: StepSize,
+        seed: u64,
+    ) -> Self {
         Self {
-            model: LogReg::zeros(dim, classes),
+            w: vec![0.0; objective.param_len(dim, classes)],
+            objective,
+            dim,
+            classes,
             stepsize,
             rng: Xoshiro256pp::seeded(seed),
             k: 0,
@@ -38,34 +58,39 @@ impl CentralizedSgd {
         assert!(!pool.is_empty());
         let mut rec = Recorder::new("centralized");
         let sw = Stopwatch::new();
-        let test_flat = test.features_flat();
-        let test_labels = test.labels();
-        let snap = |k: u64, model: &LogReg, grad_steps: u64, sw: &Stopwatch, rec: &mut Recorder| {
-            let e = model.evaluate(test_flat, test_labels);
+        let batch = EvalBatch::for_objective(self.objective, test, None);
+        // Copy for the closure: capturing `self` would pin it borrowed
+        // across the mutating training loop.
+        let obj = self.objective;
+        let snap = |k: u64, w: &[f32], grad_steps: u64, sw: &Stopwatch, rec: &mut Recorder| {
+            let (loss, err) = batch.eval(obj, w);
             rec.push(Record {
                 k,
                 time_secs: sw.elapsed_secs(),
                 consensus: 0.0, // single variable: always at consensus
-                test_loss: e.mean_loss() as f64,
-                test_err: e.error_rate() as f64,
+                test_loss: loss as f64,
+                test_err: err as f64,
                 grad_steps,
                 ..Default::default()
             });
         };
-        snap(self.k, &self.model, self.k, &sw, &mut rec);
+        snap(self.k, &self.w, self.k, &sw, &mut rec);
         let mut next = eval_every;
         for _ in 0..iters {
             let idx = self.rng.index(pool.len());
             let s = pool.sample(idx);
             let lr = self.stepsize.at(self.k);
-            self.model.sgd_step(&[s.features], &[s.label], lr, 1.0);
+            let mut w = std::mem::take(&mut self.w);
+            self.objective
+                .native_step(&mut w, s.features, &[s.label], self.dim, self.classes, lr, 1.0);
+            self.w = w;
             self.k += 1;
             if self.k >= next {
-                snap(self.k, &self.model, self.k, &sw, &mut rec);
+                snap(self.k, &self.w, self.k, &sw, &mut rec);
                 next += eval_every;
             }
         }
-        snap(self.k, &self.model, self.k, &sw, &mut rec);
+        snap(self.k, &self.w, self.k, &sw, &mut rec);
         rec
     }
 }
@@ -75,15 +100,19 @@ mod tests {
     use super::*;
     use crate::data::SyntheticGen;
 
-    #[test]
-    fn centralized_learns_pooled_mixture() {
-        let gen = SyntheticGen::new(4, 10, 4, 2.5, 0.4, 0.3, 3);
-        let mut rng = Xoshiro256pp::seeded(1);
+    fn pooled_world(n: usize, seed: u64) -> (Dataset, Dataset) {
+        let gen = SyntheticGen::new(n, 10, 4, 2.5, 0.4, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed ^ 1);
         let mut pool = Dataset::new(10, 4);
-        for i in 0..4 {
+        for i in 0..n {
             pool.extend(&gen.node_dataset(i, 100, &mut rng));
         }
-        let test = gen.global_test_set(300, &mut rng);
+        (pool, gen.global_test_set(300, &mut rng))
+    }
+
+    #[test]
+    fn centralized_learns_pooled_mixture() {
+        let (pool, test) = pooled_world(4, 3);
         let mut sgd = CentralizedSgd::new(
             10,
             4,
@@ -99,5 +128,19 @@ mod tests {
         let last = rec.last().unwrap().test_err;
         assert!(last < first, "err {first} -> {last}");
         assert!(last < 0.4, "final err {last}");
+    }
+
+    #[test]
+    fn centralized_hinge_and_lasso_improve() {
+        let (pool, test) = pooled_world(4, 9);
+        for obj in [Objective::hinge(), Objective::lasso()] {
+            let mut sgd =
+                CentralizedSgd::for_objective(obj, 10, 4, obj.default_stepsize(1), 5);
+            let rec = sgd.run(&pool, &test, 4000, 4000);
+            let first = rec.records.first().unwrap().test_err;
+            let last = rec.last().unwrap().test_err;
+            assert!(last < first, "{obj}: metric {first} -> {last}");
+            assert_eq!(sgd.w.len(), 10, "{obj} parameter shape");
+        }
     }
 }

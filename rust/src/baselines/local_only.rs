@@ -1,16 +1,20 @@
 //! Local-only lower bound: every node trains on its own shard and never
 //! communicates. Because node distributions differ (§V-A), the average
 //! of purely-local models is biased — this quantifies the gap Alg. 2's
-//! consensus closes.
+//! consensus closes. Objective-generic: the per-node loop runs any §II
+//! loss family through [`Objective::native_step`].
 
-use crate::coordinator::{consensus, StepSize};
+use crate::coordinator::{consensus, EvalBatch, StepSize};
 use crate::data::Dataset;
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 
-/// Train each node independently for `iters_per_node` steps; return
-/// (error of β̄ on the global test set, mean per-node error on it).
-pub fn local_only_errors(
+/// Train each node independently for `iters_per_node` steps of `obj`;
+/// return (error metric of β̄ on the global test set, mean per-node
+/// error metric on it). The metric is the objective's: misclassification
+/// rate for logreg/hinge, RMSE for lasso.
+pub fn local_only_errors_for(
+    obj: Objective,
     shards: &[Dataset],
     test: &Dataset,
     stepsize: StepSize,
@@ -19,27 +23,36 @@ pub fn local_only_errors(
 ) -> (f64, f64) {
     let dim = shards[0].dim();
     let classes = shards[0].classes();
+    let batch = EvalBatch::for_objective(obj, test, None);
+    let eval = |w: &[f32]| batch.eval(obj, w).1 as f64;
     let mut root = Xoshiro256pp::seeded(seed);
     let mut params = Vec::with_capacity(shards.len());
     let mut per_node_err = 0.0f64;
-    let test_flat = test.features_flat();
-    let test_labels = test.labels();
     for (i, shard) in shards.iter().enumerate() {
         let mut rng = root.split(i as u64);
-        let mut model = LogReg::zeros(dim, classes);
+        let mut w = vec![0.0f32; obj.param_len(dim, classes)];
         for k in 0..iters_per_node {
             let idx = rng.index(shard.len());
             let s = shard.sample(idx);
-            model.sgd_step(&[s.features], &[s.label], stepsize.at(k), 1.0);
+            obj.native_step(&mut w, s.features, &[s.label], dim, classes, stepsize.at(k), 1.0);
         }
-        per_node_err += model.evaluate(test_flat, test_labels).error_rate() as f64;
-        params.push(model.w);
+        per_node_err += eval(&w);
+        params.push(w);
     }
     per_node_err /= shards.len() as f64;
     let mean = consensus::mean_param(&params);
-    let avg_model = LogReg::from_weights(dim, classes, mean);
-    let avg_err = avg_model.evaluate(test_flat, test_labels).error_rate() as f64;
-    (avg_err, per_node_err)
+    (eval(&mean), per_node_err)
+}
+
+/// Logistic-regression shorthand (the paper's setting).
+pub fn local_only_errors(
+    shards: &[Dataset],
+    test: &Dataset,
+    stepsize: StepSize,
+    iters_per_node: u64,
+    seed: u64,
+) -> (f64, f64) {
+    local_only_errors_for(Objective::LogReg, shards, test, stepsize, iters_per_node, seed)
 }
 
 #[cfg(test)]
@@ -47,15 +60,18 @@ mod tests {
     use super::*;
     use crate::data::SyntheticGen;
 
-    #[test]
-    fn local_models_are_biased_on_global_mixture() {
-        let n = 8;
+    fn skewed_world(n: usize) -> (Vec<Dataset>, Dataset) {
         // Strong per-node skew: local training must underperform global.
         let gen = SyntheticGen::new(n, 10, 4, 2.0, 1.5, 0.3, 21);
         let mut rng = Xoshiro256pp::seeded(3);
-        let shards: Vec<Dataset> =
-            (0..n).map(|i| gen.node_dataset(i, 150, &mut rng)).collect();
+        let shards = (0..n).map(|i| gen.node_dataset(i, 150, &mut rng)).collect();
         let test = gen.global_test_set(400, &mut rng);
+        (shards, test)
+    }
+
+    #[test]
+    fn local_models_are_biased_on_global_mixture() {
+        let (shards, test) = skewed_world(8);
         let step = StepSize::Poly {
             a: 0.8,
             tau: 500.0,
@@ -68,5 +84,22 @@ mod tests {
         // Errors are valid rates.
         assert!((0.0..=1.0).contains(&avg_err));
         assert!((0.0..=1.0).contains(&per_node_err));
+    }
+
+    #[test]
+    fn objective_generic_local_runs() {
+        let (shards, test) = skewed_world(4);
+        for obj in [Objective::hinge(), Objective::lasso()] {
+            let (avg, per_node) = local_only_errors_for(
+                obj,
+                &shards,
+                &test,
+                obj.default_stepsize(1),
+                500,
+                7,
+            );
+            assert!(avg.is_finite() && per_node.is_finite(), "{obj}");
+            assert!(avg >= 0.0 && per_node >= 0.0, "{obj}");
+        }
     }
 }

@@ -9,16 +9,18 @@
 //! among *surviving* workers — dropping stragglers trades gradient bias
 //! for round latency, which is the paper's motivating tension.
 
-use crate::coordinator::StepSize;
+use crate::coordinator::{EvalBatch, StepSize};
 use crate::data::Dataset;
 use crate::metrics::{Record, Recorder};
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 
 #[derive(Clone, Debug)]
 pub struct ServerWorkerConfig {
     pub stepsize: StepSize,
+    /// The §II loss family the server optimizes.
+    pub objective: Objective,
     pub rounds: u64,
     pub eval_every: u64,
     /// Fraction of slowest workers dropped each round (0 = fully sync).
@@ -56,24 +58,24 @@ pub fn server_worker(
         cfg.worker_speed.clone()
     };
 
-    let mut global = LogReg::zeros(dim, classes);
+    let obj = cfg.objective;
+    let mut global = vec![0.0f32; obj.param_len(dim, classes)];
     let keep = ((n as f64) * (1.0 - cfg.drop_frac)).ceil().max(1.0) as usize;
-    let test_flat = test.features_flat();
-    let test_labels = test.labels();
+    let test_batch = EvalBatch::for_objective(obj, test, None);
 
     let mut rec = Recorder::new("server_worker");
     let sw = Stopwatch::new();
     let mut virtual_time = 0.0f64;
     let mut messages = 0u64;
 
-    let snap = |round: u64, model: &LogReg, vt: f64, messages: u64, rec: &mut Recorder, sw: &Stopwatch| {
-        let e = model.evaluate(test_flat, test_labels);
+    let snap = |round: u64, w: &[f32], vt: f64, messages: u64, rec: &mut Recorder, sw: &Stopwatch| {
+        let (loss, err) = test_batch.eval(obj, w);
         rec.push(Record {
             k: round,
             time_secs: sw.elapsed_secs(),
             consensus: 0.0,
-            test_loss: e.mean_loss() as f64,
-            test_err: e.error_rate() as f64,
+            test_loss: loss as f64,
+            test_err: err as f64,
             messages,
             grad_steps: round * keep as u64,
             ..Default::default()
@@ -94,18 +96,18 @@ pub fn server_worker(
 
         // Each survivor computes a gradient at the current global W and
         // sends it up; the server averages and broadcasts.
-        let mut delta = vec![0.0f32; dim * classes];
+        let mut delta = vec![0.0f32; global.len()];
         for &(_, i) in survivors {
             let idx = rngs[i].index(shards[i].len());
             let s = shards[i].sample(idx);
             let mut local = global.clone();
-            local.sgd_step(&[s.features], &[s.label], lr, 1.0);
-            for (d, (lw, gw)) in delta.iter_mut().zip(local.w.iter().zip(&global.w)) {
+            obj.native_step(&mut local, s.features, &[s.label], dim, classes, lr, 1.0);
+            for (d, (lw, gw)) in delta.iter_mut().zip(local.iter().zip(&global)) {
                 *d += lw - gw;
             }
             messages += 2; // gradient up + broadcast down
         }
-        for (gw, d) in global.w.iter_mut().zip(&delta) {
+        for (gw, d) in global.iter_mut().zip(&delta) {
             *gw += d / keep as f32;
         }
         if round % cfg.eval_every == 0 || round == cfg.rounds {
@@ -141,6 +143,7 @@ mod tests {
                 tau: 2000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             rounds: 300,
             eval_every: 100,
             drop_frac: 0.0,
@@ -158,6 +161,7 @@ mod tests {
         let mk = |drop| {
             let cfg = ServerWorkerConfig {
                 stepsize: StepSize::Constant(0.3),
+                objective: Objective::LogReg,
                 rounds: 200,
                 eval_every: 200,
                 drop_frac: drop,

@@ -6,17 +6,19 @@
 //! exactly what Alg. 2 removes. The virtual-time straggler comparison
 //! (`crate::sim`) charges each round the *slowest* node's compute time.
 
-use crate::coordinator::{consensus, StepSize};
+use crate::coordinator::{consensus, EvalBatch, StepSize};
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::{Record, Recorder};
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 
 #[derive(Clone, Debug)]
 pub struct SyncDsgdConfig {
     pub stepsize: StepSize,
+    /// The §II loss family every node optimizes.
+    pub objective: Objective,
     pub rounds: u64,
     pub eval_every: u64,
     pub seed: u64,
@@ -42,11 +44,11 @@ pub fn sync_dsgd(
     let n = g.len();
     let dim = shards[0].dim();
     let classes = shards[0].classes();
+    let obj = cfg.objective;
     let mut root = Xoshiro256pp::seeded(cfg.seed);
     let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
-    let mut params: Vec<Vec<f32>> = vec![vec![0.0; dim * classes]; n];
-    let test_flat = test.features_flat();
-    let test_labels = test.labels();
+    let mut params: Vec<Vec<f32>> = vec![vec![0.0; obj.param_len(dim, classes)]; n];
+    let test_batch = EvalBatch::for_objective(obj, test, None);
 
     let mut rec = Recorder::new("sync_dsgd");
     let sw = Stopwatch::new();
@@ -60,14 +62,13 @@ pub fn sync_dsgd(
                     rec: &mut Recorder,
                     sw: &Stopwatch| {
         let mean = consensus::mean_param(params);
-        let model = LogReg::from_weights(dim, classes, mean);
-        let e = model.evaluate(test_flat, test_labels);
+        let (loss, err) = test_batch.eval(obj, &mean);
         rec.push(Record {
             k: round,
             time_secs: sw.elapsed_secs(),
             consensus: consensus::consensus_distance(params),
-            test_loss: e.mean_loss() as f64,
-            test_err: e.error_rate() as f64,
+            test_loss: loss as f64,
+            test_err: err as f64,
             grad_steps,
             messages,
             ..Default::default()
@@ -81,10 +82,9 @@ pub fn sync_dsgd(
         for i in 0..n {
             let idx = rngs[i].index(shards[i].len());
             let s = shards[i].sample(idx);
-            let mut model =
-                LogReg::from_weights(dim, classes, std::mem::take(&mut params[i]));
-            model.sgd_step(&[s.features], &[s.label], lr, 1.0 / n as f32);
-            params[i] = model.w;
+            let mut w = std::mem::take(&mut params[i]);
+            obj.native_step(&mut w, s.features, &[s.label], dim, classes, lr, 1.0 / n as f32);
+            params[i] = w;
             grad_steps += 1;
         }
         // Phase 2 (synchronized): consensus averaging with matrix A.
@@ -128,6 +128,7 @@ mod tests {
                 tau: 3000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             rounds: 400,
             eval_every: 100,
             seed: 3,

@@ -92,6 +92,85 @@ impl Args {
             .cloned()
             .collect()
     }
+
+    /// Error out on any flag/switch not in `known`, suggesting the
+    /// closest known flag ("did you mean …?") when one is plausibly a
+    /// typo. Commands call this after reading their flags so that
+    /// misspellings fail loudly instead of silently using defaults.
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<(), String> {
+        let unknown = self.unknown_flags(known);
+        let Some(first) = unknown.first() else {
+            return Ok(());
+        };
+        let mut msg = format!("unknown flag --{first}");
+        if let Some(best) = closest(first, known) {
+            msg.push_str(&format!(" (did you mean --{best}?)"));
+        }
+        if unknown.len() > 1 {
+            msg.push_str(&format!(
+                "; also unknown: {}",
+                unknown[1..]
+                    .iter()
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+        msg.push_str(&format!(
+            ". Known flags: {}",
+            known
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        ));
+        Err(msg)
+    }
+
+    /// Error out when a flag that requires a value was passed bare —
+    /// `--objective` at the end of the line (or followed by another
+    /// `--flag`) parses as a switch and would otherwise silently fall
+    /// back to its default.
+    pub fn require_values(&self, value_flags: &[&str]) -> Result<(), String> {
+        match self
+            .switches
+            .iter()
+            .find(|s| value_flags.contains(&s.as_str()))
+        {
+            Some(f) => Err(format!("--{f} requires a value")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The `known` candidate closest to `flag` in edit distance, if it is
+/// close enough to look like a typo (distance ≤ 2, or ≤ 1 for very
+/// short flags).
+fn closest<'a>(flag: &str, known: &[&'a str]) -> Option<&'a str> {
+    let max_dist = if flag.len() <= 3 { 1 } else { 2 };
+    known
+        .iter()
+        .map(|&k| (levenshtein(flag, k), k))
+        .filter(|&(d, _)| d <= max_dist)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+/// Classic two-row Levenshtein distance (flags are short; O(nm) is fine).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -126,6 +205,56 @@ mod tests {
         let a = parse("cmd --good 1 --bad 2 --flag3");
         let unknown = a.unknown_flags(&["good", "flag3"]);
         assert_eq!(unknown, vec!["bad".to_string()]);
+    }
+
+    #[test]
+    fn levenshtein_distances() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("seed", "seed"), 0);
+        assert_eq!(levenshtein("sede", "seed"), 2); // transposition = 2 edits
+        assert_eq!(levenshtein("objectiv", "objective"), 1);
+    }
+
+    #[test]
+    fn reject_unknown_suggests_closest() {
+        let a = parse("train --objectve hinge --seed 3");
+        let err = a
+            .reject_unknown(&["objective", "seed", "scale"])
+            .unwrap_err();
+        assert!(err.contains("--objectve"), "{err}");
+        assert!(err.contains("did you mean --objective?"), "{err}");
+
+        // Exact flags pass.
+        let ok = parse("train --objective hinge --seed 3");
+        assert!(ok.reject_unknown(&["objective", "seed"]).is_ok());
+
+        // Distant junk gets no bogus suggestion but still errors.
+        let junk = parse("train --zzzzzz 1");
+        let err = junk.reject_unknown(&["objective", "seed"]).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("Known flags"), "{err}");
+
+        // Switches are validated too.
+        let sw = parse("cmd --verbos");
+        let err = sw.reject_unknown(&["verbose"]).unwrap_err();
+        assert!(err.contains("did you mean --verbose?"), "{err}");
+    }
+
+    #[test]
+    fn require_values_catches_bare_value_flags() {
+        // Value forgotten at end of line → parsed as a switch.
+        let a = parse("train --objective");
+        let err = a.require_values(&["objective", "seed"]).unwrap_err();
+        assert!(err.contains("--objective requires a value"), "{err}");
+        // Value forgotten before another flag.
+        let b = parse("train --objective --seed 3");
+        assert!(b.require_values(&["objective", "seed"]).is_err());
+        // Properly valued flags pass.
+        let ok = parse("train --objective hinge --seed 3");
+        assert!(ok.require_values(&["objective", "seed"]).is_ok());
+        // Genuine boolean switches are unaffected when not listed.
+        let sw = parse("cmd --verbose");
+        assert!(sw.require_values(&["seed"]).is_ok());
     }
 
     #[test]

@@ -19,17 +19,17 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::{Record, Recorder};
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::runtime::ExecutorHandle;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 
-use super::backend::PjrtArtifacts;
+use super::backend::{EvalBatch, PjrtArtifacts};
 use super::config::StepSize;
 use super::consensus;
 
@@ -114,6 +114,8 @@ pub struct AsyncCluster {
     shards: Vec<Dataset>,
     dim: usize,
     classes: usize,
+    /// The loss family every node optimizes (logreg by default).
+    objective: Objective,
     /// Optional PJRT execution (native math when `None`).
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
 }
@@ -129,11 +131,20 @@ impl AsyncCluster {
             shards,
             dim,
             classes,
+            objective: Objective::LogReg,
             executor: None,
         }
     }
 
-    /// Route gradient steps through a PJRT executor service.
+    /// Optimize a different §II objective (hinge-SVM, lasso).
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Route gradient steps through a PJRT executor service. The
+    /// artifact set must match the cluster's objective; checked at
+    /// [`AsyncCluster::run`] so builder call order doesn't matter.
     pub fn with_executor(mut self, handle: ExecutorHandle, arts: PjrtArtifacts) -> Self {
         self.executor = Some((handle, arts));
         self
@@ -142,8 +153,20 @@ impl AsyncCluster {
     /// Run the cluster for `cfg.duration_secs`, snapshotting consensus +
     /// held-out error on a monitor thread.
     pub fn run(&self, cfg: &AsyncConfig, test: &Dataset) -> Result<AsyncReport> {
+        // Compare families by name, not PartialEq: λ is a runtime input
+        // staged per call, so artifacts are λ-agnostic and a custom
+        // regularization strength must not abort the cluster.
+        if let Some((_, arts)) = &self.executor {
+            if arts.objective.name() != self.objective.name() {
+                bail!(
+                    "executor artifacts are for objective {}, but the cluster optimizes {}",
+                    arts.objective.name(),
+                    self.objective.name()
+                );
+            }
+        }
         let n = self.graph.len();
-        let param_len = self.dim * self.classes;
+        let param_len = self.objective.param_len(self.dim, self.classes);
         let shared = Arc::new(Shared {
             params: (0..n).map(|_| Mutex::new(vec![0.0f32; param_len])).collect(),
             alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
@@ -169,16 +192,16 @@ impl AsyncCluster {
                 .as_ref()
                 .map(|(h, a)| (h.clone(), a.clone()));
             let (dim, classes) = (self.dim, self.classes);
+            let objective = self.objective;
             handles.push(std::thread::spawn(move || {
                 node_loop(
-                    i, rate, rng, shared, graph, data, cfg, executor, dim, classes,
+                    i, rate, rng, shared, graph, data, cfg, executor, objective, dim, classes,
                 );
             }));
         }
 
         // Monitor loop (runs inline on the caller's thread).
-        let test_flat = test.features_flat().to_vec();
-        let test_labels = test.labels().to_vec();
+        let test_batch = EvalBatch::for_objective(self.objective, test, None);
         let mut rec = Recorder::new("async");
         let sw = Stopwatch::new();
         let mut killed = 0usize;
@@ -204,14 +227,13 @@ impl AsyncCluster {
                 .map(|(_, m)| m.lock().unwrap().clone())
                 .collect();
             let mean = consensus::mean_param(&params);
-            let model = LogReg::from_weights(self.dim, self.classes, mean);
-            let eval = model.evaluate(&test_flat, &test_labels);
+            let (loss, err) = test_batch.eval(self.objective, &mean);
             rec.push(Record {
                 k: shared.k.load(Ordering::Relaxed),
                 time_secs: now,
                 consensus: consensus::consensus_distance(&params),
-                test_loss: eval.mean_loss() as f64,
-                test_err: eval.error_rate() as f64,
+                test_loss: loss as f64,
+                test_err: err as f64,
                 grad_steps: shared.grad_steps.load(Ordering::Relaxed),
                 proj_steps: shared.proj_steps.load(Ordering::Relaxed),
                 messages: shared.messages.load(Ordering::Relaxed),
@@ -261,6 +283,7 @@ fn node_loop(
     data: Dataset,
     cfg: AsyncConfig,
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+    objective: Objective,
     dim: usize,
     classes: usize,
 ) {
@@ -285,18 +308,15 @@ fn node_loop(
             let mut guard = shared.params[id].lock().unwrap();
             match &executor {
                 None => {
-                    let mut model =
-                        LogReg::from_weights(dim, classes, std::mem::take(&mut *guard));
-                    model.sgd_step(&[s.features], &[s.label], lr, scale);
-                    *guard = model.w;
+                    let mut w = std::mem::take(&mut *guard);
+                    objective.native_step(&mut w, s.features, &[s.label], dim, classes, lr, scale);
+                    *guard = w;
                 }
                 Some((h, arts)) => {
-                    let mut y = vec![0.0f32; classes];
-                    y[s.label] = 1.0;
-                    if let Ok(outs) = h.execute_f32(
-                        &arts.step_b1,
-                        &[guard.as_slice(), s.features, &y, &[lr], &[scale]],
-                    ) {
+                    let staged = objective.step_inputs(s.label, classes, lr, scale);
+                    if let Ok(outs) =
+                        h.execute_f32(&arts.step_b1, &staged.buffers(&guard, s.features))
+                    {
                         *guard = outs.into_iter().next().unwrap();
                     }
                 }
@@ -343,22 +363,24 @@ fn node_loop(
                 std::thread::sleep(Duration::from_secs_f64(cfg.gossip_hold_secs));
             }
             let rows: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
-            let avg = match &executor {
-                None => crate::linalg::mean_of(&rows),
-                Some((h, arts)) if rows.len() <= arts.gossip_m => {
-                    let kk = dim * classes;
-                    let mut p = vec![0.0f32; arts.gossip_m * kk];
-                    let mut wts = vec![0.0f32; arts.gossip_m];
+            let gossip_artifact = executor
+                .as_ref()
+                .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts.gossip_m)));
+            let avg = match gossip_artifact {
+                Some((h, gossip, m)) if rows.len() <= m => {
+                    let kk = objective.param_len(dim, classes);
+                    let mut p = vec![0.0f32; m * kk];
+                    let mut wts = vec![0.0f32; m];
                     for (r, row) in rows.iter().enumerate() {
                         p[r * kk..(r + 1) * kk].copy_from_slice(row);
                         wts[r] = 1.0 / rows.len() as f32;
                     }
-                    match h.execute_f32(&arts.gossip, &[&p, &wts]) {
+                    match h.execute_f32(gossip, &[&p, &wts]) {
                         Ok(outs) => outs.into_iter().next().unwrap(),
                         Err(_) => crate::linalg::mean_of(&rows),
                     }
                 }
-                Some(_) => crate::linalg::mean_of(&rows),
+                _ => crate::linalg::mean_of(&rows),
             };
             for g in guards.iter_mut() {
                 g.copy_from_slice(&avg);
@@ -453,6 +475,32 @@ mod tests {
         // The surviving cohort still improves on random guessing.
         let last = rep.recorder.last().unwrap();
         assert!(last.test_err < 0.7, "err={}", last.test_err);
+    }
+
+    #[test]
+    fn async_cluster_runs_hinge_objective() {
+        // Same thread-per-node runtime, (dim)-shaped SVM parameters.
+        let (c, test) = cluster(6, 2, 13);
+        let c = c.with_objective(Objective::hinge());
+        let cfg = AsyncConfig {
+            duration_secs: 0.8,
+            rate_hz: 400.0,
+            stepsize: Objective::hinge().default_stepsize(6),
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 100, "updates={}", rep.updates);
+        // Hinge parameter is (dim) = 10, not (dim × classes).
+        assert!(rep.final_params.iter().all(|w| w.len() == 10));
+        assert!(rep
+            .final_params
+            .iter()
+            .all(|w| w.iter().all(|v| v.is_finite())));
+        // The model moved off the all-zeros init.
+        assert!(rep
+            .final_params
+            .iter()
+            .any(|w| w.iter().any(|v| *v != 0.0)));
     }
 
     #[test]

@@ -4,11 +4,20 @@
 //! Both implement [`StepBackend`] with identical semantics (the
 //! integration suite asserts they agree to float tolerance), so every
 //! experiment can run on either and the figures are backend-independent.
+//!
+//! Since the objective redesign, neither backend hardwires a loss:
+//! [`StepBackend::grad_step`] and [`StepBackend::evaluate`] dispatch on
+//! the backend's [`Objective`] (logreg / hinge-SVM / lasso), the
+//! objective owns the parameter shape and label encoding, and
+//! [`PjrtArtifacts::for_objective`] maps each objective to its compiled
+//! kernel set. Pieces a given objective has no compiled artifact for
+//! (hinge/lasso eval and gossip) fall back to the native math — the
+//! semantics are identical either way.
 
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::runtime::Engine;
 
 /// A held-out evaluation batch in the layouts both backends need.
@@ -20,31 +29,91 @@ pub struct EvalBatch {
     pub features: Vec<f32>,
     pub one_hot: Vec<f32>,
     pub labels: Vec<usize>,
+    /// Per-sample scalar targets in the objective's encoding (empty for
+    /// batches built without an objective; logreg never reads them).
+    pub targets: Vec<f32>,
 }
 
 impl EvalBatch {
-    pub fn from_dataset(d: &Dataset) -> Self {
-        Self {
-            n: d.len(),
-            dim: d.dim(),
-            classes: d.classes(),
-            features: d.features_flat().to_vec(),
-            one_hot: d.one_hot_labels(),
-            labels: d.labels().to_vec(),
+    /// Build the flat buffers for rows `0..n` of `d`, indexing
+    /// cyclically, in one pass (no intermediate `Dataset` copy). The
+    /// one-hot matrix is only materialized when asked for — it exists
+    /// solely for the logreg PJRT eval artifact.
+    fn build(d: &Dataset, n: usize, with_one_hot: bool) -> Self {
+        assert!(!d.is_empty());
+        let (dim, classes) = (d.dim(), d.classes());
+        let mut features = Vec::with_capacity(n * dim);
+        let mut one_hot = if with_one_hot {
+            vec![0.0f32; n * classes]
+        } else {
+            Vec::new()
+        };
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = d.sample(i % d.len());
+            features.extend_from_slice(s.features);
+            if with_one_hot {
+                one_hot[i * classes + s.label] = 1.0;
+            }
+            labels.push(s.label);
         }
+        Self {
+            n,
+            dim,
+            classes,
+            features,
+            one_hot,
+            labels,
+            targets: Vec::new(),
+        }
+    }
+
+    pub fn from_dataset(d: &Dataset) -> Self {
+        Self::build(d, d.len(), true)
     }
 
     /// Resize cyclically to exactly `n` rows (the PJRT eval artifact has
     /// a fixed 256-row shape).
     pub fn from_dataset_resized(d: &Dataset, n: usize) -> Self {
-        Self::from_dataset(&d.resized_cyclic(n))
+        Self::build(d, n, true)
+    }
+
+    /// Batch with targets encoded for `obj`, optionally resized to the
+    /// backend's required row count.
+    pub fn for_objective(obj: Objective, d: &Dataset, rows: Option<usize>) -> Self {
+        let mut b = Self::build(
+            d,
+            rows.unwrap_or_else(|| d.len()),
+            matches!(obj, Objective::LogReg),
+        );
+        b.targets = obj.encode_targets(&b.labels, b.classes);
+        b
+    }
+
+    /// Evaluate `w` on this batch with `obj`'s native math: returns
+    /// `(loss, err)` — the shared metric path for monitors and
+    /// baselines (the batch already knows its own shape).
+    pub fn eval(&self, obj: Objective, w: &[f32]) -> (f32, f32) {
+        obj.native_eval(
+            w,
+            self.dim,
+            self.classes,
+            &self.features,
+            &self.labels,
+            &self.targets,
+        )
     }
 }
 
 /// The compute interface the trainer drives.
 pub trait StepBackend {
-    /// One logistic-regression SGD step on flat row-major data:
-    /// `w ← w − lr·scale·∇`; returns the minibatch mean CE loss.
+    /// The loss family this backend computes.
+    fn objective(&self) -> Objective;
+
+    /// One SGD/subgradient step of the backend's objective on flat
+    /// row-major data: `w ← w − lr·scale·∇`; returns the minibatch mean
+    /// loss. `labels` are dataset class labels — the objective applies
+    /// its own encoding (one-hot / ±1 / centered regression target).
     fn grad_step(
         &mut self,
         w: &mut Vec<f32>,
@@ -57,12 +126,19 @@ pub trait StepBackend {
     /// Weighted average of the stacked parameter rows (Eq. 7 projection).
     fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>>;
 
-    /// (mean loss, error rate) of `w` on the eval batch.
+    /// (mean loss, error metric) of `w` on the eval batch. The error
+    /// column is objective-defined: misclassification rate for
+    /// logreg/hinge, RMSE for lasso.
     fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)>;
 
     /// Rows the eval batch must have (PJRT artifacts are fixed-shape).
     fn required_eval_rows(&self) -> Option<usize> {
         None
+    }
+
+    /// Build the eval batch this backend needs for `test`.
+    fn eval_batch(&self, test: &Dataset) -> EvalBatch {
+        EvalBatch::for_objective(self.objective(), test, self.required_eval_rows())
     }
 
     fn name(&self) -> &'static str;
@@ -72,19 +148,34 @@ pub trait StepBackend {
 // Native backend
 // ---------------------------------------------------------------------------
 
-/// Pure-rust backend (crate::model math).
+/// Pure-rust backend (crate::model math), generic over the objective.
 pub struct NativeBackend {
     dim: usize,
     classes: usize,
+    objective: Objective,
 }
 
 impl NativeBackend {
+    /// Logistic-regression backend (the paper's default).
     pub fn new(dim: usize, classes: usize) -> Self {
-        Self { dim, classes }
+        Self::for_objective(Objective::LogReg, dim, classes)
+    }
+
+    /// Backend for an arbitrary §II objective.
+    pub fn for_objective(objective: Objective, dim: usize, classes: usize) -> Self {
+        Self {
+            dim,
+            classes,
+            objective,
+        }
     }
 }
 
 impl StepBackend for NativeBackend {
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+
     fn grad_step(
         &mut self,
         w: &mut Vec<f32>,
@@ -93,13 +184,9 @@ impl StepBackend for NativeBackend {
         lr: f32,
         scale: f32,
     ) -> Result<f32> {
-        let b = labels.len();
-        assert_eq!(xs.len(), b * self.dim);
-        let mut model = LogReg::from_weights(self.dim, self.classes, std::mem::take(w));
-        let rows: Vec<&[f32]> = (0..b).map(|i| &xs[i * self.dim..(i + 1) * self.dim]).collect();
-        let loss = model.sgd_step(&rows, labels, lr, scale);
-        *w = model.w;
-        Ok(loss)
+        Ok(self
+            .objective
+            .native_step(w, xs, labels, self.dim, self.classes, lr, scale))
     }
 
     fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>> {
@@ -107,9 +194,7 @@ impl StepBackend for NativeBackend {
     }
 
     fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)> {
-        let model = LogReg::from_weights(self.dim, self.classes, w.to_vec());
-        let eval = model.evaluate(&test.features, &test.labels);
-        Ok((eval.mean_loss(), eval.error_rate()))
+        Ok(test.eval(self.objective, w))
     }
 
     fn name(&self) -> &'static str {
@@ -121,39 +206,54 @@ impl StepBackend for NativeBackend {
 // PJRT backend
 // ---------------------------------------------------------------------------
 
-/// Artifact names for one model shape.
+/// Artifact names for one (objective, shape-family) pair.
+///
+/// `eval` / `gossip` are `None` for the objectives without a compiled
+/// artifact of that kind (hinge/lasso); the backend then computes that
+/// piece natively with identical semantics.
 #[derive(Clone, Debug)]
 pub struct PjrtArtifacts {
+    pub objective: Objective,
     pub step_b1: String,
-    pub eval: String,
-    pub gossip: String,
+    pub eval: Option<String>,
+    pub gossip: Option<String>,
     /// Max rows of the gossip artifact's stacked-parameter input.
     pub gossip_m: usize,
     /// Fixed row count of the eval artifact.
-    pub eval_rows: usize,
+    pub eval_rows: Option<usize>,
 }
 
 impl PjrtArtifacts {
-    /// The synthetic (50×10) artifact family.
-    pub fn synth() -> Self {
+    /// Artifact set for `obj` in shape family `family` (`"synth"` = 50
+    /// features, `"notmnist"` = 256; hinge/lasso exist for synth only).
+    pub fn for_objective(obj: Objective, family: &str) -> Self {
+        let eval = obj.pjrt_eval_artifact(family);
         Self {
-            step_b1: "logreg_step_synth_b1".into(),
-            eval: "logreg_eval_synth".into(),
-            gossip: "gossip_avg_synth".into(),
+            eval_rows: eval.as_ref().map(|_| 256),
+            step_b1: obj.pjrt_step_artifact(family),
+            gossip: obj.pjrt_gossip_artifact(family),
             gossip_m: 16,
-            eval_rows: 256,
+            eval,
+            objective: obj,
         }
     }
 
-    /// The notMNIST (256×10) artifact family.
+    /// The logreg synthetic (50×10) artifact family.
+    pub fn synth() -> Self {
+        Self::for_objective(Objective::LogReg, "synth")
+    }
+
+    /// The logreg notMNIST (256×10) artifact family.
     pub fn notmnist() -> Self {
-        Self {
-            step_b1: "logreg_step_notmnist_b1".into(),
-            eval: "logreg_eval_notmnist".into(),
-            gossip: "gossip_avg_notmnist".into(),
-            gossip_m: 16,
-            eval_rows: 256,
-        }
+        Self::for_objective(Objective::LogReg, "notmnist")
+    }
+
+    /// Artifact names that must exist in the engine manifest.
+    pub fn required(&self) -> Vec<&str> {
+        let mut names = vec![self.step_b1.as_str()];
+        names.extend(self.eval.as_deref());
+        names.extend(self.gossip.as_deref());
+        names
     }
 }
 
@@ -170,28 +270,38 @@ pub struct PjrtBackend {
 
 impl PjrtBackend {
     pub fn new(engine: Engine, arts: PjrtArtifacts, dim: usize, classes: usize) -> Result<Self> {
-        for name in [&arts.step_b1, &arts.eval, &arts.gossip] {
+        // The hinge/lasso step kernels are compiled for the (1, 50)
+        // synthetic shape only — fail up front rather than deep inside
+        // input staging on the first step.
+        if arts.objective != Objective::LogReg && dim != 50 {
+            bail!(
+                "{} PJRT kernels are compiled for the 50-feature synth family only \
+                 (got dim {dim}); use the native backend for this shape",
+                arts.objective.name()
+            );
+        }
+        for name in arts.required() {
             if !engine.has(name) {
                 bail!("engine is missing artifact {name}");
             }
         }
-        let k = dim * classes;
+        let k = arts.objective.param_len(dim, classes);
         Ok(Self {
             engine,
-            gossip_scratch: vec![0.0; 16 * k],
-            weights_scratch: vec![0.0; 16],
+            gossip_scratch: vec![0.0; arts.gossip_m * k],
+            weights_scratch: vec![0.0; arts.gossip_m],
             arts,
             dim,
             classes,
         })
     }
 
-    /// Synthetic-shape backend from the default artifact dir.
+    /// Synthetic-shape logreg backend from the default artifact dir.
     pub fn synth_default() -> Result<Self> {
         Self::new(Engine::load_default()?, PjrtArtifacts::synth(), 50, 10)
     }
 
-    /// notMNIST-shape backend from the default artifact dir.
+    /// notMNIST-shape logreg backend from the default artifact dir.
     pub fn notmnist_default() -> Result<Self> {
         Self::new(Engine::load_default()?, PjrtArtifacts::notmnist(), 256, 10)
     }
@@ -202,6 +312,10 @@ impl PjrtBackend {
 }
 
 impl StepBackend for PjrtBackend {
+    fn objective(&self) -> Objective {
+        self.arts.objective
+    }
+
     fn grad_step(
         &mut self,
         w: &mut Vec<f32>,
@@ -214,24 +328,29 @@ impl StepBackend for PjrtBackend {
             bail!("pjrt backend: only batch=1 steps are wired (got {})", labels.len());
         }
         assert_eq!(xs.len(), self.dim);
-        let mut y = vec![0.0f32; self.classes];
-        y[labels[0]] = 1.0;
-        let outs = self.engine.execute_f32(
-            &self.arts.step_b1,
-            &[w.as_slice(), xs, &y, &[lr], &[scale]],
-        )?;
+        let staged = self
+            .arts
+            .objective
+            .step_inputs(labels[0], self.classes, lr, scale);
+        let outs = self
+            .engine
+            .execute_f32(&self.arts.step_b1, &staged.buffers(w, xs))?;
         let mut it = outs.into_iter();
         *w = it.next().unwrap();
         Ok(it.next().unwrap()[0])
     }
 
     fn gossip_avg(&mut self, rows: &[&[f32]]) -> Result<Vec<f32>> {
+        let Some(gossip) = self.arts.gossip.as_deref() else {
+            // No compiled gossip for this objective's parameter shape.
+            return Ok(crate::linalg::mean_of(rows));
+        };
         let m = self.arts.gossip_m;
         if rows.len() > m {
             // Degree exceeds the artifact's padding: fall back to native.
             return Ok(crate::linalg::mean_of(rows));
         }
-        let k = self.dim * self.classes;
+        let k = self.arts.objective.param_len(self.dim, self.classes);
         self.gossip_scratch.fill(0.0);
         self.weights_scratch.fill(0.0);
         for (i, row) in rows.iter().enumerate() {
@@ -239,32 +358,35 @@ impl StepBackend for PjrtBackend {
             self.gossip_scratch[i * k..(i + 1) * k].copy_from_slice(row);
             self.weights_scratch[i] = 1.0 / rows.len() as f32;
         }
-        let outs = self.engine.execute_f32(
-            &self.arts.gossip,
-            &[&self.gossip_scratch, &self.weights_scratch],
-        )?;
+        let outs = self
+            .engine
+            .execute_f32(gossip, &[&self.gossip_scratch, &self.weights_scratch])?;
         Ok(outs.into_iter().next().unwrap())
     }
 
     fn evaluate(&mut self, w: &[f32], test: &EvalBatch) -> Result<(f32, f32)> {
-        if test.n != self.arts.eval_rows {
+        let Some(eval) = self.arts.eval.as_deref() else {
+            // No compiled eval for this objective: native metrics.
+            return Ok(test.eval(self.arts.objective, w));
+        };
+        let rows = self.arts.eval_rows.expect("eval artifact has fixed rows");
+        if test.n != rows {
             bail!(
-                "pjrt eval artifact needs exactly {} rows, got {} — use \
+                "pjrt eval artifact needs exactly {rows} rows, got {} — use \
                  EvalBatch::from_dataset_resized",
-                self.arts.eval_rows,
                 test.n
             );
         }
         let outs = self
             .engine
-            .execute_f32(&self.arts.eval, &[w, &test.features, &test.one_hot])?;
+            .execute_f32(eval, &[w, &test.features, &test.one_hot])?;
         let loss_sum = outs[0][0];
         let errs = outs[1][0];
         Ok((loss_sum / test.n as f32, errs / test.n as f32))
     }
 
     fn required_eval_rows(&self) -> Option<usize> {
-        Some(self.arts.eval_rows)
+        self.arts.eval_rows
     }
 
     fn name(&self) -> &'static str {
@@ -301,6 +423,31 @@ mod tests {
     }
 
     #[test]
+    fn hinge_backend_learns_split() {
+        // 2 classes → encoded ±1; a linear separator must emerge through
+        // the same grad_step interface the trainer drives.
+        let obj = Objective::hinge();
+        let mut b = NativeBackend::for_objective(obj, 8, 2);
+        let mut rng = Xoshiro256pp::seeded(4);
+        let true_w: Vec<f32> = (0..8).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+        let mut w = vec![0.0f32; 8];
+        let mut late_errs = 0;
+        for step in 0..1500 {
+            let x: Vec<f32> = (0..8).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            let label = usize::from(crate::linalg::dot(&true_w, &x) <= 0.0);
+            if step >= 1200 {
+                let y = obj.encode_label(label, 2);
+                if (crate::linalg::dot(&w, &x) > 0.0) != (y > 0.0) {
+                    late_errs += 1;
+                }
+            }
+            b.grad_step(&mut w, &x, &[label], 0.1, 1.0).unwrap();
+        }
+        assert!(late_errs < 40, "late errors {late_errs}/300");
+        assert_eq!(w.len(), 8, "hinge parameter stays (dim)");
+    }
+
+    #[test]
     fn native_gossip_is_mean() {
         let mut b = NativeBackend::new(2, 1);
         let r1 = [1.0f32, 3.0];
@@ -320,5 +467,25 @@ mod tests {
         let r = EvalBatch::from_dataset_resized(&d, 5);
         assert_eq!(r.n, 5);
         assert_eq!(r.labels, vec![0, 1, 0, 1, 0]);
+        // Direct flat construction matches the old two-pass layout.
+        assert_eq!(r.features, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(
+            r.one_hot,
+            vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn eval_batch_objective_targets() {
+        let mut d = Dataset::new(2, 2);
+        d.push(&[1.0, 0.0], 0);
+        d.push(&[0.0, 1.0], 1);
+        let h = EvalBatch::for_objective(Objective::hinge(), &d, Some(3));
+        assert_eq!(h.targets, vec![1.0, -1.0, 1.0]);
+        let l = EvalBatch::for_objective(Objective::lasso(), &d, None);
+        assert_eq!(l.targets, vec![-0.5, 0.5]);
+        // Backends hand out a matching batch builder.
+        let nb = NativeBackend::for_objective(Objective::hinge(), 2, 2);
+        assert_eq!(nb.eval_batch(&d).targets, vec![1.0, -1.0]);
     }
 }

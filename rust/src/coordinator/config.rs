@@ -1,5 +1,7 @@
 //! Training configuration for the Alg. 2 coordinator.
 
+use crate::objective::Objective;
+
 /// Stepsize schedule α_k (the paper requires Σα = ∞, Σα² < ∞ for the
 /// Theorem 1 guarantees; [`StepSize::Poly`] with pow ∈ (0.5, 1] satisfies
 /// it).
@@ -69,6 +71,10 @@ pub struct TrainConfig {
     pub selection: SelectionMode,
     pub conflicts: ConflictPolicy,
     pub backend: Backend,
+    /// The §II loss family the system optimizes. Used when constructing
+    /// backends (e.g. [`crate::experiments::run_alg2`]); the trainer
+    /// itself reads the objective off the backend it is given.
+    pub objective: Objective,
     /// Microbatch per gradient step (paper: 1).
     pub batch: usize,
     /// Std-dev of the random initial β_i (0 = all-zeros init; > 0 gives
@@ -78,14 +84,21 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    /// The paper's Alg. 2 configuration for an N-node system.
+    /// The paper's Alg. 2 configuration for an N-node system (logreg).
     pub fn paper_default(n_nodes: usize) -> Self {
+        Self::objective_default(Objective::LogReg, n_nodes)
+    }
+
+    /// Alg. 2 configuration for an arbitrary objective: same selection /
+    /// conflict policy, with the objective's stable stepsize schedule.
+    pub fn objective_default(objective: Objective, n_nodes: usize) -> Self {
         Self {
             p_grad: 0.5,
-            stepsize: StepSize::paper_default(n_nodes),
+            stepsize: objective.default_stepsize(n_nodes),
             selection: SelectionMode::Central,
             conflicts: ConflictPolicy::LockUp,
             backend: Backend::Native,
+            objective,
             batch: 1,
             init_scale: 0.0,
             seed: 0,
@@ -110,6 +123,14 @@ impl TrainConfig {
     pub fn with_p_grad(mut self, p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p));
         self.p_grad = p;
+        self
+    }
+
+    /// Swap the objective, keeping every other knob as configured.
+    /// (Use [`TrainConfig::objective_default`] to also get the
+    /// objective's stable stepsize.)
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
         self
     }
 }
@@ -144,6 +165,21 @@ mod tests {
         let cfg = TrainConfig::paper_default(30);
         assert_eq!(cfg.p_grad, 0.5);
         assert_eq!(cfg.batch, 1);
+        assert_eq!(cfg.objective, Objective::LogReg);
+    }
+
+    #[test]
+    fn objective_default_uses_objective_stepsize() {
+        let cfg = TrainConfig::objective_default(Objective::lasso(), 12);
+        assert_eq!(cfg.objective, Objective::lasso());
+        assert_eq!(cfg.stepsize, Objective::lasso().default_stepsize(12));
+        // paper_default is exactly the logreg objective default.
+        assert_eq!(
+            TrainConfig::paper_default(12).stepsize,
+            Objective::LogReg.default_stepsize(12)
+        );
+        let swapped = TrainConfig::paper_default(12).with_objective(Objective::hinge());
+        assert_eq!(swapped.objective, Objective::hinge());
     }
 
     #[test]

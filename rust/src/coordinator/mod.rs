@@ -2,7 +2,8 @@
 //! asynchronized SGD coordinator.
 //!
 //! * [`config`] — Alg. 2 hyperparameters + §IV policy knobs.
-//! * [`backend`] — compute backends (rust-native vs PJRT artifacts).
+//! * [`backend`] — compute backends (rust-native vs PJRT artifacts),
+//!   generic over the §II [`Objective`](crate::objective::Objective).
 //! * [`selector`] — §IV-A node selection (central + distributed geometric).
 //! * [`node`] — per-node state (β_i, local shard, private RNG).
 //! * [`trainer`] — sequential-event Alg. 2 (the figures' reference).
@@ -21,6 +22,7 @@ pub mod trainer;
 pub use async_runtime::{AsyncCluster, AsyncConfig, AsyncReport};
 pub use backend::{EvalBatch, NativeBackend, PjrtArtifacts, PjrtBackend, StepBackend};
 pub use config::{Backend, ConflictPolicy, SelectionMode, StepSize, TrainConfig};
+pub use crate::objective::Objective;
 pub use node::NodeState;
 pub use selector::{CentralSelector, GeometricSelector, Slot};
 pub use trainer::{Counters, Trainer};

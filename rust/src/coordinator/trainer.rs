@@ -55,12 +55,14 @@ pub struct Trainer<B: StepBackend> {
 
 impl<B: StepBackend> Trainer<B> {
     /// Build a trainer: one node per graph vertex, each holding `shards[i]`.
+    /// The backend's [`Objective`](crate::objective::Objective) decides
+    /// the per-node parameter shape and step/eval semantics.
     pub fn new(cfg: TrainConfig, graph: Graph, shards: Vec<Dataset>, backend: B) -> Self {
         assert_eq!(graph.len(), shards.len(), "one shard per node");
         assert!(graph.is_connected(), "consensus needs a connected graph");
         let dim = shards[0].dim();
         let classes = shards[0].classes();
-        let param_len = dim * classes;
+        let param_len = backend.objective().param_len(dim, classes);
         let mut root = Xoshiro256pp::seeded(cfg.seed);
         let nodes: Vec<NodeState> = shards
             .into_iter()
@@ -200,10 +202,7 @@ impl<B: StepBackend> Trainer<B> {
         test: &Dataset,
         name: &str,
     ) -> Result<Recorder> {
-        let test_batch = match self.backend.required_eval_rows() {
-            Some(rows) => EvalBatch::from_dataset_resized(test, rows),
-            None => EvalBatch::from_dataset(test),
-        };
+        let test_batch = self.backend.eval_batch(test);
         let mut rec = Recorder::new(name);
         let sw = Stopwatch::new();
         self.record(&mut rec, &test_batch, &sw)?;

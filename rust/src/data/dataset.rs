@@ -100,14 +100,6 @@ impl Dataset {
         self.labels.extend_from_slice(&other.labels);
     }
 
-    /// Truncate/pad to exactly `n` rows; padding repeats rows cyclically
-    /// (used to hit the fixed 256-row eval-artifact shape).
-    pub fn resized_cyclic(&self, n: usize) -> Dataset {
-        assert!(!self.is_empty());
-        let idx: Vec<usize> = (0..n).map(|i| i % self.len()).collect();
-        self.subset(&idx)
-    }
-
     /// Per-class counts (distribution diagnostics).
     pub fn class_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.classes];
@@ -158,17 +150,6 @@ mod tests {
         let mut e = d.clone();
         e.extend(&s);
         assert_eq!(e.len(), 5);
-    }
-
-    #[test]
-    fn resize_cyclic() {
-        let d = tiny();
-        let r = d.resized_cyclic(7);
-        assert_eq!(r.len(), 7);
-        assert_eq!(r.sample(3).label, d.sample(0).label);
-        assert_eq!(r.sample(6).label, d.sample(0).label);
-        let t = d.resized_cyclic(2);
-        assert_eq!(t.len(), 2);
     }
 
     #[test]

@@ -63,7 +63,9 @@ pub fn backend_from_env() -> Backend {
     }
 }
 
-/// Run Alg. 2 on a prepared world with either backend.
+/// Run Alg. 2 on a prepared world with either backend, optimizing
+/// `cfg.objective` (the backend is constructed for that loss family —
+/// the trainer code path is identical for all of them).
 pub fn run_alg2(
     cfg: &TrainConfig,
     graph: Graph,
@@ -81,16 +83,14 @@ pub fn run_alg2(
                 cfg.clone(),
                 graph,
                 shards,
-                NativeBackend::new(dim, classes),
+                NativeBackend::for_objective(cfg.objective, dim, classes),
             );
             t.run(iters, eval_every, test, name)
         }
         Backend::Pjrt => {
-            let arts = if dim == 50 {
-                crate::coordinator::PjrtArtifacts::synth()
-            } else {
-                crate::coordinator::PjrtArtifacts::notmnist()
-            };
+            let family = if dim == 50 { "synth" } else { "notmnist" };
+            let arts =
+                crate::coordinator::PjrtArtifacts::for_objective(cfg.objective, family);
             let engine = crate::runtime::Engine::load_default()?;
             let backend = PjrtBackend::new(engine, arts, dim, classes)?;
             let mut t = Trainer::new(cfg.clone(), graph, shards, backend);
@@ -130,16 +130,13 @@ pub fn run_both_backends(
     Ok((native, pjrt))
 }
 
-/// Evaluate a mean parameter vector on a test set with the native model
-/// (metric helper shared by experiments).
-pub fn native_eval(w: &[f32], test: &Dataset) -> (f32, f32) {
-    let model = crate::model::LogReg::from_weights(test.dim(), test.classes(), w.to_vec());
-    let batch = EvalBatch::from_dataset(test);
-    let mut nb = NativeBackend::new(test.dim(), test.classes());
-    nb.evaluate(w, &batch).unwrap_or_else(|_| {
-        let e = model.evaluate(test.features_flat(), test.labels());
-        (e.mean_loss(), e.error_rate())
-    })
+/// Evaluate a mean parameter vector on a test set with the native math
+/// of `obj` (metric helper shared by experiments and examples).
+pub fn native_eval(obj: crate::objective::Objective, w: &[f32], test: &Dataset) -> (f32, f32) {
+    let batch = EvalBatch::for_objective(obj, test, None);
+    let mut nb = NativeBackend::for_objective(obj, test.dim(), test.classes());
+    nb.evaluate(w, &batch)
+        .expect("native evaluation is infallible")
 }
 
 #[cfg(test)]

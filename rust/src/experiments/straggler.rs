@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::baselines::{server_worker, sync_dsgd, ServerWorkerConfig, SyncDsgdConfig};
 use crate::coordinator::StepSize;
 use crate::metrics::Table;
+use crate::objective::Objective;
 use crate::sim::{sync_round_time, virtual_async_run, SpeedModel, VirtualAsyncConfig};
 use crate::util::rng::Xoshiro256pp;
 
@@ -41,6 +42,7 @@ pub fn run(scale: f64, seed: u64) -> Result<Vec<StragglerRow>> {
                 tau: 4000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             horizon,
             eval_every: horizon / 4.0,
             comm_latency: 0.05,
@@ -68,6 +70,7 @@ pub fn run(scale: f64, seed: u64) -> Result<Vec<StragglerRow>> {
                 tau: 3000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             rounds,
             eval_every: rounds.max(1),
             seed,
@@ -101,6 +104,7 @@ pub fn run(scale: f64, seed: u64) -> Result<Vec<StragglerRow>> {
                 tau: 3000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             rounds,
             eval_every: rounds.max(1),
             drop_frac: 0.1,

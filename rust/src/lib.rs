@@ -26,6 +26,7 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod objective;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -4,7 +4,7 @@
 //! experiment modules.
 
 use dasgd::cli::Args;
-use dasgd::coordinator::{AsyncCluster, AsyncConfig, PjrtArtifacts, StepSize};
+use dasgd::coordinator::{AsyncCluster, AsyncConfig, Objective, PjrtArtifacts, StepSize};
 use dasgd::data::{ascii_art, render_glyph, GlyphStyle, NotMnistGen};
 use dasgd::experiments::{self, fig2, fig3, fig4, fig6, lemma1, straggler};
 use dasgd::metrics::Table;
@@ -25,7 +25,8 @@ Figure reproduction (paper §V):
   glyphs      render sample glyphs (Fig. 5 stand-in)
 
 Ablations / extensions:
-  losses      §II loss families: decentralized SVM + Lasso
+  losses      §II loss families: decentralized SVM + Lasso through the
+              same trainer as logreg, on both backends
   comm        §IV-B: p_grad sweep (messages vs consensus)
   conflicts   §IV-C: distributed selection, lock-up vs ignore
   topology    consensus across graph families
@@ -33,7 +34,9 @@ Ablations / extensions:
 
 System:
   train       one Alg. 2 run (--nodes N --degree K --iters I
-              --backend native|pjrt --dataset synth|notmnist)
+              --objective logreg|hinge|lasso
+              --backend native|pjrt --dataset synth|notmnist
+              --csv PATH to dump the series)
   cluster     live threaded asynchronous cluster (--secs S --kill N
               --kill-after T to crash N nodes at time T
               --backend native|pjrt --rate HZ --spread X)
@@ -42,7 +45,21 @@ System:
 Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
   --seed N    RNG seed (default 0)
+
+Unknown flags are rejected with a did-you-mean suggestion.
 ";
+
+/// Flags every command accepts.
+const COMMON_FLAGS: &[&str] = &["scale", "seed"];
+
+/// Validate the command line against the command's known flags. Every
+/// dasgd flag takes a value, so a bare `--flag` is also an error.
+fn check_flags(args: &Args, extra: &[&str]) -> anyhow::Result<()> {
+    let mut known: Vec<&str> = COMMON_FLAGS.to_vec();
+    known.extend_from_slice(extra);
+    args.reject_unknown(&known).map_err(anyhow::Error::msg)?;
+    args.require_values(&known).map_err(anyhow::Error::msg)
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -68,9 +85,41 @@ fn print_notes(notes: &[String]) {
     }
 }
 
+/// Per-command flag vocabulary (beyond [`COMMON_FLAGS`]); `None` means
+/// the command itself is unknown.
+fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    Some(match cmd {
+        "fig2" | "fig3" | "fig4" | "fig6" | "lemma1" | "glyphs" | "losses" | "comm"
+        | "conflicts" | "topology" | "straggler" | "artifacts" => &[],
+        "train" => &[
+            "nodes",
+            "degree",
+            "iters",
+            "backend",
+            "dataset",
+            "objective",
+            "csv",
+        ],
+        "cluster" => &[
+            "nodes",
+            "degree",
+            "secs",
+            "rate",
+            "spread",
+            "kill",
+            "kill-after",
+            "backend",
+        ],
+        _ => return None,
+    })
+}
+
 fn run(args: &Args) -> anyhow::Result<()> {
     let scale = args.get_f64("scale", 1.0).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    if let Some(extra) = args.command.as_deref().and_then(extra_flags) {
+        check_flags(args, extra)?;
+    }
     match args.command.as_deref() {
         Some("fig2") => {
             let r = fig2::run(scale, seed)?;
@@ -179,14 +228,23 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let backend = match args.get_str("backend", "native") {
         "pjrt" => Backend::Pjrt,
-        _ => Backend::Native,
+        "native" => Backend::Native,
+        other => anyhow::bail!("unknown backend {other:?} (choose one of: native, pjrt)"),
+    };
+    let objective_name = args.get_str("objective", "logreg");
+    let Some(objective) = Objective::parse(objective_name) else {
+        anyhow::bail!(
+            "unknown objective {objective_name:?} (choose one of: {})",
+            Objective::NAMES.join(", ")
+        );
     };
     let dataset = args.get_str("dataset", "synth");
     let (shards, test) = match dataset {
         "notmnist" => fig6::notmnist_world(n, 400, 512, seed),
-        _ => experiments::synth_world(n, 500, 512, seed),
+        "synth" => experiments::synth_world(n, 500, 512, seed),
+        other => anyhow::bail!("unknown dataset {other:?} (choose one of: synth, notmnist)"),
     };
-    let cfg = TrainConfig::paper_default(n)
+    let cfg = TrainConfig::objective_default(objective, n)
         .with_seed(seed)
         .with_backend(backend);
     let rec = experiments::run_alg2(
@@ -199,9 +257,18 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         "train",
     )?;
     println!(
-        "Alg. 2: N={n}, degree {degree}, {iters} updates, backend {}",
+        "Alg. 2: N={n}, degree {degree}, {iters} updates, objective {objective}, backend {}",
         args.get_str("backend", "native")
     );
+    if objective != Objective::LogReg {
+        println!(
+            "  (the err column is the {objective} metric: {})",
+            match objective {
+                Objective::Hinge { .. } => "binary misclassification rate",
+                _ => "prediction RMSE",
+            }
+        );
+    }
     let mut t = Table::new(&["k", "d^k", "test loss", "test err", "msgs"]);
     for r in &rec.records {
         t.row(&[
@@ -226,10 +293,14 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
     let secs = args.get_f64("secs", 3.0).map_err(anyhow::Error::msg)?;
     let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
     let spread = args.get_f64("spread", 0.0).map_err(anyhow::Error::msg)?;
+    let backend_name = args.get_str("backend", "native");
+    if !matches!(backend_name, "native" | "pjrt") {
+        anyhow::bail!("unknown backend {backend_name:?} (choose one of: native, pjrt)");
+    }
     let (shards, test) = experiments::synth_world(n, 300, 512, seed);
     let mut cluster = AsyncCluster::new(experiments::make_regular(n, degree), shards);
     let _service: Option<ExecutorService>;
-    if args.get_str("backend", "native") == "pjrt" {
+    if backend_name == "pjrt" {
         let service = ExecutorService::start("artifacts", 2)?;
         cluster = cluster.with_executor(service.handle(), PjrtArtifacts::synth());
         _service = Some(service);

@@ -1,7 +1,8 @@
 //! Rust-native model math: an independent second implementation of the
-//! paper's loss families (§II) used to (a) cross-check the HLO/Pallas
-//! path end-to-end, and (b) power the pure-rust baselines where spinning
-//! up PJRT would be overkill.
+//! paper's loss families (§II). It (a) cross-checks the HLO/Pallas path
+//! end-to-end, and (b) is the native-backend compute path behind
+//! [`crate::objective::Objective`] — every loss the system trains
+//! (logreg, hinge-SVM, lasso) dispatches here when PJRT is not in play.
 
 mod logreg;
 mod svm_lasso;

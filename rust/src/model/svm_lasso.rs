@@ -1,5 +1,10 @@
 //! Native SVM (hinge) and Lasso subgradient steps, mirroring the Pallas
-//! `hinge_step` / `lasso_step` kernels for cross-checking.
+//! `hinge_step` / `lasso_step` kernels exactly.
+//!
+//! These are first-class production math (the native-backend step path
+//! for [`crate::objective::Objective::Hinge`] / `Lasso`), not just
+//! cross-checks: golden-vector tests in `tests/it_objectives.rs` pin
+//! them to the kernels' outputs.
 
 /// One hinge-loss subgradient step over a microbatch.
 ///

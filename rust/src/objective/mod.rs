@@ -1,0 +1,474 @@
+//! First-class training objectives — the §II loss families as one
+//! pluggable abstraction.
+//!
+//! The paper poses a *general* data-fitting problem over a networked
+//! system; §II instantiates it with three convex loss families:
+//! multinomial logistic regression, the binary SVM (hinge loss), and the
+//! Lasso. [`Objective`] owns everything that differs between them —
+//! parameter shape, label encoding, gradient-step semantics, evaluation
+//! metrics, stable stepsizes, and PJRT artifact names — so the trainer,
+//! the async runtime, the simulator, and every baseline run the *same*
+//! select→step/project loop for all three (no per-objective forks).
+//!
+//! Classification datasets ([`crate::data::Dataset`]) carry integer class
+//! labels; each objective defines its own reduction:
+//!
+//! * **LogReg** — labels used as-is (multi-class).
+//! * **Hinge** — binary one-vs-rest split down the middle of the class
+//!   range: `y = +1` if `label < classes/2`, else `−1` (balanced on the
+//!   paper's 10-class synthetic mixture).
+//! * **Lasso** — regression on the centered class index:
+//!   `y = label − (classes−1)/2`.
+//!
+//! Adding a loss = adding a variant here plus a Pallas kernel under
+//! `python/compile/kernels/` (see `docs/objectives.md`).
+
+use crate::model::{hinge_step_native, lasso_step_native, LogReg};
+
+/// Default regularization strength for the regularized families.
+pub const DEFAULT_LAM: f32 = 1e-3;
+
+/// One of the paper's §II loss families.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Multinomial logistic regression: W is row-major (dim × classes),
+    /// mean cross-entropy loss, error = misclassification rate.
+    LogReg,
+    /// Binary SVM: `f(w) = (1/K)Σ max(0, 1 − y w·x) + λ‖w‖²`, w is
+    /// (dim), error = sign-misclassification rate.
+    Hinge {
+        /// L2 regularization strength λ.
+        lam: f32,
+    },
+    /// Lasso: `f(w) = (1/2K)Σ (w·x − y)² + λ‖w‖₁`, w is (dim),
+    /// "error" column = RMSE of the prediction.
+    Lasso {
+        /// L1 regularization strength λ.
+        lam: f32,
+    },
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective::LogReg
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl Objective {
+    /// Hinge SVM with the default λ.
+    pub fn hinge() -> Self {
+        Objective::Hinge { lam: DEFAULT_LAM }
+    }
+
+    /// Lasso with the default λ.
+    pub fn lasso() -> Self {
+        Objective::Lasso { lam: DEFAULT_LAM }
+    }
+
+    /// All CLI-selectable names (used for usage strings / did-you-mean).
+    pub const NAMES: [&'static str; 3] = ["logreg", "hinge", "lasso"];
+
+    /// Parse a CLI name (`logreg`, `hinge`/`svm`, `lasso`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "logreg" => Some(Objective::LogReg),
+            "hinge" | "svm" => Some(Objective::hinge()),
+            "lasso" => Some(Objective::lasso()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::LogReg => "logreg",
+            Objective::Hinge { .. } => "hinge",
+            Objective::Lasso { .. } => "lasso",
+        }
+    }
+
+    /// Regularization strength, for the families that carry one (the
+    /// PJRT step artifacts for those take λ as a trailing input).
+    pub fn lam(&self) -> Option<f32> {
+        match *self {
+            Objective::LogReg => None,
+            Objective::Hinge { lam } | Objective::Lasso { lam } => Some(lam),
+        }
+    }
+
+    /// Length of the flat per-node parameter vector β_i.
+    pub fn param_len(&self, dim: usize, classes: usize) -> usize {
+        match self {
+            Objective::LogReg => dim * classes,
+            Objective::Hinge { .. } | Objective::Lasso { .. } => dim,
+        }
+    }
+
+    /// Scalar target for one class label (hinge: ±1, lasso: centered
+    /// class index). LogReg consumes labels directly and never calls this
+    /// on its hot path; it returns the raw label for completeness.
+    pub fn encode_label(&self, label: usize, classes: usize) -> f32 {
+        match self {
+            Objective::LogReg => label as f32,
+            Objective::Hinge { .. } => {
+                if 2 * label < classes {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            Objective::Lasso { .. } => label as f32 - (classes as f32 - 1.0) / 2.0,
+        }
+    }
+
+    /// Encode a label slice into per-sample scalar targets.
+    pub fn encode_targets(&self, labels: &[usize], classes: usize) -> Vec<f32> {
+        labels
+            .iter()
+            .map(|&l| self.encode_label(l, classes))
+            .collect()
+    }
+
+    /// The `y` input of the PJRT step artifact for a single sample:
+    /// one-hot row for logreg, a 1-element encoded target otherwise.
+    pub fn step_target(&self, label: usize, classes: usize) -> Vec<f32> {
+        match self {
+            Objective::LogReg => {
+                let mut y = vec![0.0f32; classes];
+                y[label] = 1.0;
+                y
+            }
+            _ => vec![self.encode_label(label, classes)],
+        }
+    }
+
+    /// Stage the non-tensor inputs of a batch-1 PJRT step call for one
+    /// sample. The artifact input protocol — `[w, x, y, lr, scale]` plus
+    /// a trailing `lam` for the regularized families — lives here so the
+    /// trainer backend and the async runtime cannot drift apart.
+    pub fn step_inputs(&self, label: usize, classes: usize, lr: f32, scale: f32) -> StepInputs {
+        StepInputs {
+            y: self.step_target(label, classes),
+            lr: [lr],
+            scale: [scale],
+            lam: self.lam().map(|l| [l]),
+        }
+    }
+
+    /// One SGD/subgradient step on a flat row-major microbatch:
+    /// `w ← w − lr·scale·∇f` in-place; returns the minibatch mean loss
+    /// (regularized for hinge/lasso). Mirrors the Pallas step kernels
+    /// exactly — the golden-vector suite pins this equivalence.
+    #[allow(clippy::too_many_arguments)]
+    pub fn native_step(
+        &self,
+        w: &mut Vec<f32>,
+        xs: &[f32],
+        labels: &[usize],
+        dim: usize,
+        classes: usize,
+        lr: f32,
+        scale: f32,
+    ) -> f32 {
+        let b = labels.len();
+        assert_eq!(xs.len(), b * dim, "flat batch shape mismatch");
+        assert_eq!(
+            w.len(),
+            self.param_len(dim, classes),
+            "parameter length mismatch for {}",
+            self.name()
+        );
+        let rows: Vec<&[f32]> = (0..b).map(|i| &xs[i * dim..(i + 1) * dim]).collect();
+        match *self {
+            Objective::LogReg => {
+                let mut model = LogReg::from_weights(dim, classes, std::mem::take(w));
+                let loss = model.sgd_step(&rows, labels, lr, scale);
+                *w = model.w;
+                loss
+            }
+            Objective::Hinge { lam } => {
+                let ys = self.encode_targets(labels, classes);
+                hinge_step_native(w, &rows, &ys, lr, scale, lam)
+            }
+            Objective::Lasso { lam } => {
+                let ys = self.encode_targets(labels, classes);
+                lasso_step_native(w, &rows, &ys, lr, scale, lam)
+            }
+        }
+    }
+
+    /// Evaluate `w` on a held-out flat batch: returns `(loss, err)`.
+    ///
+    /// `loss` is the objective's mean (regularized) loss; `err` is the
+    /// objective's headline metric — misclassification rate for logreg
+    /// and hinge, prediction RMSE for lasso. `targets` must hold the
+    /// [`Objective::encode_targets`] encoding for hinge/lasso and may be
+    /// empty for logreg.
+    pub fn native_eval(
+        &self,
+        w: &[f32],
+        dim: usize,
+        classes: usize,
+        features: &[f32],
+        labels: &[usize],
+        targets: &[f32],
+    ) -> (f32, f32) {
+        let n = labels.len();
+        assert!(n > 0, "empty eval batch");
+        assert_eq!(features.len(), n * dim);
+        match *self {
+            Objective::LogReg => {
+                let model = LogReg::from_weights(dim, classes, w.to_vec());
+                let e = model.evaluate(features, labels);
+                (e.mean_loss(), e.error_rate())
+            }
+            Objective::Hinge { lam } => {
+                assert_eq!(targets.len(), n, "hinge eval needs encoded targets");
+                let mut loss = 0.0f32;
+                let mut errs = 0usize;
+                for (i, &y) in targets.iter().enumerate() {
+                    let x = &features[i * dim..(i + 1) * dim];
+                    let pred = crate::linalg::dot(w, x);
+                    loss += (1.0 - y * pred).max(0.0);
+                    if (pred > 0.0) != (y > 0.0) {
+                        errs += 1;
+                    }
+                }
+                loss = loss / n as f32 + lam * crate::linalg::dot(w, w);
+                (loss, errs as f32 / n as f32)
+            }
+            Objective::Lasso { lam } => {
+                assert_eq!(targets.len(), n, "lasso eval needs encoded targets");
+                let mut sq = 0.0f32;
+                for (i, &y) in targets.iter().enumerate() {
+                    let x = &features[i * dim..(i + 1) * dim];
+                    let r = crate::linalg::dot(w, x) - y;
+                    sq += r * r;
+                }
+                let mse = sq / n as f32;
+                let l1: f32 = w.iter().map(|v| v.abs()).sum();
+                (0.5 * mse + lam * l1, mse.sqrt())
+            }
+        }
+    }
+
+    /// A stable diminishing stepsize for an N-node system.
+    ///
+    /// The kernel applies `lr·scale` with `scale = 1/N` (Eq. 6), so `a`
+    /// folds N in to give an O(1) effective initial step. Hinge
+    /// subgradients are bounded (‖g‖ ≲ ‖x‖), logreg's are softmax-bounded;
+    /// the Lasso data term is quadratic with curvature λ_max(E[xxᵀ]) ≈
+    /// Σ_d E[x_d²] (≈ 90 on the 50-feature synthetic world), so its
+    /// stable effective step must sit well below 2/λ_max.
+    pub fn default_stepsize(&self, n_nodes: usize) -> crate::coordinator::StepSize {
+        use crate::coordinator::StepSize;
+        let n = n_nodes as f32;
+        match self {
+            Objective::LogReg => StepSize::Poly {
+                a: 1.2 * n,
+                tau: 4000.0,
+                pow: 0.75,
+            },
+            Objective::Hinge { .. } => StepSize::Poly {
+                a: 0.4 * n,
+                tau: 2000.0,
+                pow: 0.75,
+            },
+            Objective::Lasso { .. } => StepSize::Poly {
+                a: 0.02 * n,
+                tau: 2000.0,
+                pow: 0.75,
+            },
+        }
+    }
+
+    /// Name of the batch-1 PJRT step artifact for this objective.
+    ///
+    /// `family` is the artifact shape family tag (`"synth"` for 50
+    /// features, `"notmnist"` for 256). The hinge/lasso kernels are
+    /// compiled for the 50-feature synthetic shape only.
+    pub fn pjrt_step_artifact(&self, family: &str) -> String {
+        match self {
+            Objective::LogReg => format!("logreg_step_{family}_b1"),
+            Objective::Hinge { .. } => "hinge_step_b1".to_string(),
+            Objective::Lasso { .. } => "lasso_step_b1".to_string(),
+        }
+    }
+
+    /// Name of the fixed-shape PJRT eval artifact, when one is compiled
+    /// (only logreg has one; hinge/lasso evaluate natively).
+    pub fn pjrt_eval_artifact(&self, family: &str) -> Option<String> {
+        match self {
+            Objective::LogReg => Some(format!("logreg_eval_{family}")),
+            _ => None,
+        }
+    }
+
+    /// Name of the stacked-parameter gossip artifact, when its shape
+    /// matches this objective's parameter length (the compiled gossip
+    /// stacks are (16, dim·classes); hinge/lasso parameters are (dim),
+    /// so they average natively).
+    pub fn pjrt_gossip_artifact(&self, family: &str) -> Option<String> {
+        match self {
+            Objective::LogReg => Some(format!("gossip_avg_{family}")),
+            _ => None,
+        }
+    }
+}
+
+/// Staged scalar/target inputs for a batch-1 PJRT step call (see
+/// [`Objective::step_inputs`]). Owns the buffers so the borrow of the
+/// parameter/feature slices stays with the caller.
+pub struct StepInputs {
+    y: Vec<f32>,
+    lr: [f32; 1],
+    scale: [f32; 1],
+    lam: Option<[f32; 1]>,
+}
+
+impl StepInputs {
+    /// Assemble the full artifact input list around `w` and `x`.
+    pub fn buffers<'a>(&'a self, w: &'a [f32], x: &'a [f32]) -> Vec<&'a [f32]> {
+        let mut inputs: Vec<&[f32]> = vec![w, x, &self.y, &self.lr, &self.scale];
+        if let Some(lam) = &self.lam {
+            inputs.push(lam);
+        }
+        inputs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_inputs_protocol() {
+        // LogReg: 5 inputs, one-hot y, no lam.
+        let s = Objective::LogReg.step_inputs(2, 4, 0.1, 0.5);
+        let w = [0.0f32; 8];
+        let x = [0.0f32; 2];
+        let bufs = s.buffers(&w, &x);
+        assert_eq!(bufs.len(), 5);
+        assert_eq!(bufs[2], &[0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(bufs[3], &[0.1]);
+        // Regularized families: 6 inputs with trailing lam.
+        let s = Objective::hinge().step_inputs(3, 4, 0.1, 0.5);
+        let bufs = s.buffers(&w, &x);
+        assert_eq!(bufs.len(), 6);
+        assert_eq!(bufs[2], &[-1.0]);
+        assert_eq!(bufs[5], &[DEFAULT_LAM]);
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(Objective::parse("logreg"), Some(Objective::LogReg));
+        assert_eq!(Objective::parse("svm"), Some(Objective::hinge()));
+        assert_eq!(Objective::parse("lasso"), Some(Objective::lasso()));
+        assert_eq!(Objective::parse("ridge"), None);
+        for name in Objective::NAMES {
+            assert_eq!(Objective::parse(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn param_shapes() {
+        assert_eq!(Objective::LogReg.param_len(50, 10), 500);
+        assert_eq!(Objective::hinge().param_len(50, 10), 50);
+        assert_eq!(Objective::lasso().param_len(50, 10), 50);
+    }
+
+    #[test]
+    fn label_encodings() {
+        let h = Objective::hinge();
+        // 10 classes: 0..4 → +1, 5..9 → −1 (balanced one-vs-rest split).
+        assert_eq!(h.encode_label(0, 10), 1.0);
+        assert_eq!(h.encode_label(4, 10), 1.0);
+        assert_eq!(h.encode_label(5, 10), -1.0);
+        assert_eq!(h.encode_label(9, 10), -1.0);
+        let l = Objective::lasso();
+        // Centered class index: mean-zero targets.
+        assert_eq!(l.encode_label(0, 10), -4.5);
+        assert_eq!(l.encode_label(9, 10), 4.5);
+        let sum: f32 = (0..10).map(|c| l.encode_label(c, 10)).sum();
+        assert!(sum.abs() < 1e-6);
+        // One-hot step target for logreg.
+        assert_eq!(Objective::LogReg.step_target(2, 4), vec![0.0, 0.0, 1.0, 0.0]);
+        assert_eq!(h.step_target(7, 10), vec![-1.0]);
+    }
+
+    #[test]
+    fn native_step_matches_raw_functions() {
+        let dim = 6;
+        let xs: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        let labels = [1usize];
+        for (obj, classes) in [(Objective::hinge(), 2), (Objective::lasso(), 4)] {
+            let mut w_obj = vec![0.1f32; dim];
+            let mut w_raw = w_obj.clone();
+            let loss_obj = obj.native_step(&mut w_obj, &xs, &labels, dim, classes, 0.3, 0.5);
+            let y = obj.encode_label(labels[0], classes);
+            let loss_raw = match obj {
+                Objective::Hinge { lam } => {
+                    hinge_step_native(&mut w_raw, &[&xs], &[y], 0.3, 0.5, lam)
+                }
+                Objective::Lasso { lam } => {
+                    lasso_step_native(&mut w_raw, &[&xs], &[y], 0.3, 0.5, lam)
+                }
+                Objective::LogReg => unreachable!(),
+            };
+            assert_eq!(w_obj, w_raw, "{obj}");
+            assert_eq!(loss_obj, loss_raw, "{obj}");
+        }
+    }
+
+    #[test]
+    fn native_eval_zero_weights() {
+        // w = 0: hinge loss = 1 (margin 0), lasso RMSE = rms(targets).
+        let dim = 3;
+        let features = vec![1.0f32; 2 * dim];
+        let labels = [0usize, 1];
+        let h = Objective::hinge();
+        let ht = h.encode_targets(&labels, 2);
+        let (hl, he) = h.native_eval(&[0.0; 3], dim, 2, &features, &labels, &ht);
+        assert!((hl - 1.0).abs() < 1e-6);
+        // pred = 0 → predicted −1 → the +1 sample is wrong, the −1 right.
+        assert!((he - 0.5).abs() < 1e-6);
+        let l = Objective::lasso();
+        let lt = l.encode_targets(&labels, 2); // [−0.5, +0.5]
+        let (_, rmse) = l.native_eval(&[0.0; 3], dim, 2, &features, &labels, &lt);
+        assert!((rmse - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stepsizes_decrease_and_scale_with_n() {
+        for obj in [Objective::LogReg, Objective::hinge(), Objective::lasso()] {
+            let s = obj.default_stepsize(30);
+            assert!(s.at(10_000) < s.at(0), "{obj}");
+            let s1 = obj.default_stepsize(1);
+            // a folds N: 30-node initial step is 30x the 1-node one.
+            assert!((s.at(0) / s1.at(0) - 30.0).abs() < 1e-3);
+        }
+        // Lasso's effective step respects the curvature bound.
+        let lasso = Objective::lasso().default_stepsize(30);
+        assert!(lasso.at(0) / 30.0 < 0.03);
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(
+            Objective::LogReg.pjrt_step_artifact("synth"),
+            "logreg_step_synth_b1"
+        );
+        assert_eq!(Objective::hinge().pjrt_step_artifact("synth"), "hinge_step_b1");
+        assert_eq!(
+            Objective::LogReg.pjrt_eval_artifact("notmnist").as_deref(),
+            Some("logreg_eval_notmnist")
+        );
+        assert_eq!(Objective::lasso().pjrt_eval_artifact("synth"), None);
+        assert_eq!(Objective::lasso().pjrt_gossip_artifact("synth"), None);
+    }
+}

@@ -5,7 +5,12 @@
 //! `Engine` lives on one thread; the threaded actor runtime either uses
 //! native math per node or funnels execute requests to an engine-owning
 //! service thread via channels (see `runtime::service`).
+//!
+//! The `xla` crate is an optional dependency (feature `pjrt`): images
+//! without it still build, and `Engine::load` fails cleanly so every
+//! caller takes its native fallback path.
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -14,6 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use super::manifest::{ArtifactSpec, Manifest};
 
 /// A loaded, compiled artifact set bound to one PJRT (CPU) client.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     manifest: Manifest,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
@@ -25,6 +31,7 @@ pub struct Engine {
     pub exec_count: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load every artifact in `dir` and compile it on a fresh CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -64,11 +71,9 @@ impl Engine {
         })
     }
 
-    /// Default artifact directory: `$DASGD_ARTIFACTS` or `artifacts/`
-    /// relative to the workspace root.
+    /// Load from [`super::default_artifact_dir`].
     pub fn load_default() -> Result<Self> {
-        let dir = std::env::var("DASGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load(dir)
+        Self::load(super::default_artifact_dir())
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -174,11 +179,77 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Engine")
             .field("artifacts", &self.executables.keys().collect::<Vec<_>>())
             .field("exec_count", &self.exec_count)
             .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stub engine (feature `pjrt` disabled): same API, loading always fails.
+// ---------------------------------------------------------------------------
+
+/// Stub engine compiled when the `xla` dependency is unavailable.
+///
+/// [`Engine::load`] validates the manifest (so configuration errors still
+/// surface) and then refuses to run, which routes every caller onto its
+/// rust-native fallback path.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Engine {
+    manifest: Manifest,
+    /// Cumulative number of `execute` calls (always 0 on the stub).
+    pub exec_count: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Validate the manifest, then report that PJRT execution is
+    /// unavailable in this build.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = Manifest::load(dir)?;
+        bail!("dasgd was built without the `pjrt` feature — PJRT execution unavailable (rebuild with `--features pjrt`)")
+    }
+
+    /// Load from [`super::default_artifact_dir`].
+    pub fn load_default() -> Result<Self> {
+        Self::load(super::default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Unreachable in practice (`load` never returns a stub instance),
+    /// but kept signature-compatible with the real engine.
+    pub fn execute_f32(&mut self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("{name}: PJRT execution unavailable (built without the `pjrt` feature)")
+    }
+
+    /// Convenience: execute and return the single scalar output of a
+    /// `(1,1)`-shaped result tensor at position `idx`.
+    pub fn execute_scalar_out(
+        &mut self,
+        name: &str,
+        inputs: &[&[f32]],
+        idx: usize,
+    ) -> Result<f32> {
+        let outs = self.execute_f32(name, inputs)?;
+        outs.get(idx)
+            .and_then(|v| v.first())
+            .copied()
+            .ok_or_else(|| anyhow!("{name}: no output {idx}"))
     }
 }

@@ -15,3 +15,10 @@ mod service;
 pub use engine::Engine;
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
 pub use service::{ExecutorHandle, ExecutorService};
+
+/// Default artifact directory: `$DASGD_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root. Single source of truth for
+/// [`Engine::load_default`] and availability probes.
+pub fn default_artifact_dir() -> String {
+    std::env::var("DASGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}

@@ -3,11 +3,11 @@
 //! No barriers means a slow node only slows *its own* updates — the
 //! claim this simulator quantifies against the synchronous baselines.
 
-use crate::coordinator::{consensus, StepSize};
+use crate::coordinator::{consensus, EvalBatch, StepSize};
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::{Record, Recorder};
-use crate::model::LogReg;
+use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 
 use super::{EventQueue, SpeedModel};
@@ -16,6 +16,8 @@ use super::{EventQueue, SpeedModel};
 pub struct VirtualAsyncConfig {
     pub p_grad: f64,
     pub stepsize: StepSize,
+    /// The §II loss family every node optimizes.
+    pub objective: Objective,
     /// Virtual seconds to simulate.
     pub horizon: f64,
     /// Evaluation cadence in virtual seconds.
@@ -48,9 +50,10 @@ pub fn virtual_async_run(
     assert_eq!(speeds.len(), n);
     let dim = shards[0].dim();
     let classes = shards[0].classes();
+    let obj = cfg.objective;
     let mut root = Xoshiro256pp::seeded(cfg.seed);
     let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
-    let mut params: Vec<Vec<f32>> = vec![vec![0.0; dim * classes]; n];
+    let mut params: Vec<Vec<f32>> = vec![vec![0.0; obj.param_len(dim, classes)]; n];
 
     let mut queue = EventQueue::new();
     for i in 0..n {
@@ -58,8 +61,7 @@ pub fn virtual_async_run(
         queue.push(dt, i);
     }
 
-    let test_flat = test.features_flat();
-    let test_labels = test.labels();
+    let test_batch = EvalBatch::for_objective(obj, test, None);
     let mut rec = Recorder::new("virtual_async");
     let mut k = 0u64;
     let mut grad_steps = 0u64;
@@ -75,14 +77,13 @@ pub fn virtual_async_run(
                 messages: u64,
                 rec: &mut Recorder| {
         let mean = consensus::mean_param(params);
-        let model = LogReg::from_weights(dim, classes, mean);
-        let e = model.evaluate(test_flat, test_labels);
+        let (loss, err) = test_batch.eval(obj, &mean);
         rec.push(Record {
             k,
             time_secs: t,
             consensus: consensus::consensus_distance(params),
-            test_loss: e.mean_loss() as f64,
-            test_err: e.error_rate() as f64,
+            test_loss: loss as f64,
+            test_err: err as f64,
             grad_steps,
             proj_steps,
             messages,
@@ -104,10 +105,9 @@ pub fn virtual_async_run(
             // Local gradient step.
             let idx = rngs[i].index(shards[i].len());
             let s = shards[i].sample(idx);
-            let mut model =
-                LogReg::from_weights(dim, classes, std::mem::take(&mut params[i]));
-            model.sgd_step(&[s.features], &[s.label], lr, 1.0 / n as f32);
-            params[i] = model.w;
+            let mut w = std::mem::take(&mut params[i]);
+            obj.native_step(&mut w, s.features, &[s.label], dim, classes, lr, 1.0 / n as f32);
+            params[i] = w;
             grad_steps += 1;
         } else {
             // Projection: collect + average + broadcast.
@@ -164,6 +164,7 @@ mod tests {
                 tau: 4000.0,
                 pow: 0.75,
             },
+            objective: Objective::LogReg,
             horizon: 300.0,
             eval_every: 100.0,
             comm_latency: 0.05,
@@ -190,6 +191,28 @@ mod tests {
         assert_eq!(
             a.recorder.last().unwrap().test_err,
             b.recorder.last().unwrap().test_err
+        );
+    }
+
+    #[test]
+    fn virtual_async_runs_lasso_objective() {
+        let (g, shards, test) = setup(6);
+        let speeds = SpeedModel::homogeneous(6, 1.0);
+        let cfg = VirtualAsyncConfig {
+            objective: Objective::lasso(),
+            stepsize: Objective::lasso().default_stepsize(6),
+            ..quick_cfg()
+        };
+        let rep = virtual_async_run(&g, &shards, &test, &speeds, &cfg);
+        assert!(rep.updates > 500);
+        let first = rep.recorder.records.first().unwrap();
+        let last = rep.recorder.last().unwrap();
+        // RMSE column must improve from the w = 0 baseline.
+        assert!(
+            last.test_err < first.test_err,
+            "rmse {} -> {}",
+            first.test_err,
+            last.test_err
         );
     }
 

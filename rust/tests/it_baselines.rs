@@ -83,6 +83,7 @@ fn sync_dsgd_and_server_worker_converge() {
                 tau: 3000.0,
                 pow: 0.75,
             },
+            objective: dasgd::objective::Objective::LogReg,
             rounds: 500,
             eval_every: 250,
             seed: 5,
@@ -99,6 +100,7 @@ fn sync_dsgd_and_server_worker_converge() {
                 tau: 2000.0,
                 pow: 0.75,
             },
+            objective: dasgd::objective::Objective::LogReg,
             rounds: 400,
             eval_every: 200,
             drop_frac: 0.25,
@@ -123,6 +125,7 @@ fn virtual_time_async_beats_sync_under_stragglers() {
     let cfg = VirtualAsyncConfig {
         p_grad: 0.5,
         stepsize: StepSize::paper_default(n),
+        objective: dasgd::objective::Objective::LogReg,
         horizon,
         eval_every: horizon,
         comm_latency: 0.05,

@@ -1,0 +1,125 @@
+//! Integration: objective parity and generality.
+//!
+//! * Golden-vector tests pin `hinge_step_native` / `lasso_step_native`
+//!   to the Pallas reference kernels' semantics: the constants below
+//!   were produced by running `python/compile/kernels/{hinge,lasso}.py`
+//!   (`hinge_step` / `lasso_step`, interpret mode) on these exact
+//!   inputs. If either side drifts, this suite fails.
+//! * Backend-parity tests assert the `Objective`-dispatched
+//!   `StepBackend::grad_step` equals the raw kernels under the label
+//!   encoding.
+//! * Trainer smoke tests prove each objective runs through the *same*
+//!   `Trainer`/`StepBackend` path with a decreasing consensus residual.
+
+use dasgd::coordinator::{NativeBackend, StepBackend, TrainConfig, Trainer};
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::model::{hinge_step_native, lasso_step_native};
+use dasgd::objective::Objective;
+use dasgd::util::proptest::assert_allclose;
+
+#[test]
+fn golden_hinge_step_matches_pallas_kernel() {
+    // B = 2, D = 4, both margins active; lr 0.2, scale 0.5, λ 0.01.
+    let mut w = vec![0.5f32, -0.25, 0.1, 0.0];
+    let x1 = [1.0f32, 2.0, -1.0, 0.5];
+    let x2 = [0.2f32, -0.3, 0.4, 1.0];
+    let loss = hinge_step_native(&mut w, &[&x1, &x2], &[1.0, -1.0], 0.2, 0.5, 0.01);
+    // Golden outputs from the Pallas hinge_step kernel.
+    assert_allclose(&w, &[0.539, -0.1345, 0.0298, -0.025], 1e-6, 1e-6).unwrap();
+    assert!((loss - 1.160725).abs() < 1e-5, "loss {loss}");
+}
+
+#[test]
+fn golden_hinge_inactive_margin_matches_pallas_kernel() {
+    // Margin ≫ 1: the data term vanishes; only 2λw shrinkage remains.
+    let mut w = vec![0.5f32; 4];
+    let x = [10.0f32; 4];
+    let loss = hinge_step_native(&mut w, &[&x], &[1.0], 0.1, 1.0, 0.05);
+    assert_allclose(&w, &[0.495; 4], 1e-6, 1e-6).unwrap();
+    assert!((loss - 0.05).abs() < 1e-6, "loss {loss}"); // λ‖w‖² only
+}
+
+#[test]
+fn golden_lasso_step_matches_pallas_kernel() {
+    // B = 2, D = 4; note w[3] = 0 exercises sign(0) = 0; lr 0.1, λ 0.05.
+    let mut w = vec![1.0f32, -2.0, 0.5, 0.0];
+    let x1 = [3.0f32, 1.0, 0.0, 2.0];
+    let x2 = [0.5f32, 0.5, 0.5, 0.5];
+    let loss = lasso_step_native(&mut w, &[&x1, &x2], &[2.0, 0.0], 0.1, 1.0, 0.05);
+    // Golden outputs from the Pallas lasso_step kernel.
+    assert_allclose(&w, &[1.15125, -1.93875, 0.50125, 0.10625], 1e-6, 1e-6).unwrap();
+    assert!((loss - 0.440625).abs() < 1e-5, "loss {loss}");
+}
+
+#[test]
+fn backend_grad_step_equals_raw_kernels_under_encoding() {
+    let (dim, classes) = (6usize, 4usize);
+    let xs: Vec<f32> = (0..dim).map(|i| ((i * 7 + 3) as f32 * 0.21).cos()).collect();
+    for obj in [Objective::hinge(), Objective::lasso()] {
+        for label in 0..classes {
+            let mut backend = NativeBackend::for_objective(obj, dim, classes);
+            let mut w_b = vec![0.2f32; dim];
+            let mut w_raw = w_b.clone();
+            let loss_b = backend.grad_step(&mut w_b, &xs, &[label], 0.15, 0.25).unwrap();
+            let y = obj.encode_label(label, classes);
+            let loss_raw = match obj {
+                Objective::Hinge { lam } => {
+                    hinge_step_native(&mut w_raw, &[&xs], &[y], 0.15, 0.25, lam)
+                }
+                Objective::Lasso { lam } => {
+                    lasso_step_native(&mut w_raw, &[&xs], &[y], 0.15, 0.25, lam)
+                }
+                Objective::LogReg => unreachable!(),
+            };
+            assert_eq!(w_b, w_raw, "{obj} label {label}");
+            assert_eq!(loss_b, loss_raw, "{obj} label {label}");
+        }
+    }
+}
+
+/// One Alg. 2 run per objective through the identical trainer path.
+fn smoke(obj: Objective, seed: u64) -> (f64, f64, f64, f64) {
+    let n = 8;
+    let (shards, test) = synth_world(n, 100, 256, seed);
+    let cfg = TrainConfig::objective_default(obj, n)
+        .with_init_scale(1.0)
+        .with_seed(seed);
+    let mut t = Trainer::new(
+        cfg,
+        make_regular(n, 4),
+        shards,
+        NativeBackend::for_objective(obj, 50, 10),
+    );
+    let rec = t.run(2000, 2000, &test, obj.name()).unwrap();
+    // Parameter shape follows the objective.
+    for w in t.params() {
+        assert_eq!(w.len(), obj.param_len(50, 10), "{obj}");
+        assert!(w.iter().all(|v| v.is_finite()), "{obj}");
+    }
+    // Both step kinds ran, through the one shared code path.
+    assert!(t.counters.grad_steps > 0 && t.counters.proj_steps > 0);
+    let first = rec.records.first().unwrap();
+    let last = rec.last().unwrap();
+    (first.consensus, last.consensus, first.test_err, last.test_err)
+}
+
+#[test]
+fn trainer_smoke_logreg_consensus_decreases() {
+    let (d0, d1, e0, e1) = smoke(Objective::LogReg, 11);
+    assert!(d1 < d0 * 0.5, "consensus {d0} -> {d1}");
+    assert!(e1 <= e0, "err {e0} -> {e1}");
+}
+
+#[test]
+fn trainer_smoke_hinge_consensus_decreases() {
+    let (d0, d1, e0, e1) = smoke(Objective::hinge(), 13);
+    assert!(d1 < d0 * 0.5, "consensus {d0} -> {d1}");
+    assert!(e1 <= e0 + 0.05, "binary err {e0} -> {e1}");
+}
+
+#[test]
+fn trainer_smoke_lasso_consensus_decreases() {
+    let (d0, d1, e0, e1) = smoke(Objective::lasso(), 17);
+    assert!(d1 < d0 * 0.5, "consensus {d0} -> {d1}");
+    assert!(e1 < e0, "rmse {e0} -> {e1}");
+}

@@ -1,0 +1,164 @@
+//! Offline shim for the `anyhow` crate: the image this repo builds on
+//! resolves no external registry crates, so the workspace vendors the
+//! small API subset dasgd actually uses — `Error`, `Result`,
+//! `anyhow!`/`bail!`, `Error::msg`, and the `Context` extension trait
+//! (`context`/`with_context` on `Result` and `Option`).
+//!
+//! Semantics match the real crate closely enough to swap back: `{:#}`
+//! renders the context chain in one line ("outer: inner"), `{:?}` renders
+//! it multi-line with a "Caused by" section, and any `std::error::Error`
+//! converts via `?`.
+
+use std::fmt;
+
+/// Dynamic error: a message plus an optional chain of causes.
+pub struct Error {
+    /// Most recent context first (like anyhow's chain).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated, one line.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on any std error. (Error itself intentionally does not implement
+// std::error::Error, exactly like the real anyhow, so this blanket impl
+// cannot overlap with `From<Error> for Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (subset of anyhow's `Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!(fmt, args...)` — build an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(fmt, args...)` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).wrap("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn inner() -> Result<()> {
+            bail!("bad value {}", 7);
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.root_message(), "bad value 7");
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: gone");
+
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+}
