@@ -6,11 +6,97 @@
 //! Requires `make artifacts`; PJRT cases are skipped (with a note) if
 //! the artifact set is missing.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
 use dasgd::bench::Harness;
 use dasgd::coordinator::{CentralSelector, GeometricSelector};
 use dasgd::model::LogReg;
+use dasgd::node_logic::neighborhood_average;
 use dasgd::runtime::Engine;
+use dasgd::transport::{
+    ChannelNet, ProjectionOutcome, SharedMem, SimNet, SimNetConfig, Transport,
+};
 use dasgd::util::rng::Xoshiro256pp;
+
+/// One projection round (collect + average + broadcast) over the closed
+/// neighborhood {4, 5, 6} of the middle node of a ring-10, on `t`.
+fn projection_round(t: &dyn Transport) -> ProjectionOutcome {
+    t.try_project(5, &[4, 5, 6], Duration::ZERO, &mut |rows| {
+        neighborhood_average(rows)
+    })
+}
+
+/// Transport micro-bench: the same ring-10 projection round on every
+/// substrate; appends results to the harness and returns (name, mean s)
+/// rows for BENCH_transport.json.
+fn bench_transports(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+
+    let shared = SharedMem::new(10, param_len);
+    let r = h.case("projection round ring-10 SharedMem", || {
+        assert!(matches!(
+            projection_round(&shared),
+            ProjectionOutcome::Applied { .. }
+        ));
+    });
+    rows.push(("shared_mem".to_string(), r.mean_secs));
+
+    // Channel needs the two peers' mailboxes pumped from other threads.
+    let channel = Arc::new(ChannelNet::with_default_timeout(10, param_len));
+    let stop = Arc::new(AtomicBool::new(false));
+    let pumps: Vec<_> = [4usize, 6]
+        .iter()
+        .map(|&j| {
+            let net = Arc::clone(&channel);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    net.poll(j);
+                    std::hint::spin_loop();
+                }
+            })
+        })
+        .collect();
+    let r = h.case("projection round ring-10 Channel", || {
+        assert!(matches!(
+            projection_round(channel.as_ref()),
+            ProjectionOutcome::Applied { .. }
+        ));
+    });
+    rows.push(("channel".to_string(), r.mean_secs));
+    stop.store(true, Ordering::Relaxed);
+    for p in pumps {
+        let _ = p.join();
+    }
+
+    let simnet = SimNet::new(10, param_len, SimNetConfig::ideal(0.005));
+    let r = h.case("projection round ring-10 SimNet", || {
+        assert!(matches!(
+            projection_round(&simnet),
+            ProjectionOutcome::Applied { .. }
+        ));
+        let _ = simnet.take_last_comm();
+    });
+    rows.push(("simnet".to_string(), r.mean_secs));
+    rows
+}
+
+fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
+    let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
+    body.push_str("  \"topology\": \"ring-10, closed neighborhood of 3\",\n");
+    body.push_str(&format!("  \"param_len\": {param_len},\n  \"mean_secs\": {{\n"));
+    for (i, (name, mean)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        body.push_str(&format!("    \"{name}\": {mean:e}{comma}\n"));
+    }
+    body.push_str("  }\n}\n");
+    match std::fs::write("BENCH_transport.json", &body) {
+        Ok(()) => println!("\nwrote BENCH_transport.json"),
+        Err(e) => println!("\n(could not write BENCH_transport.json: {e})"),
+    }
+}
 
 fn main() {
     let mut rng = Xoshiro256pp::seeded(3);
@@ -86,6 +172,11 @@ fn main() {
             });
         }
     }
+
+    // ---- transport substrates ----------------------------------------------
+    let mut h = Harness::new("transport substrates (ring-10 projection round)");
+    let transport_rows = bench_transports(&mut h, 500);
+    write_transport_baseline(&transport_rows, 500);
 
     // ---- coordinator machinery ---------------------------------------------
     let mut h = Harness::new("coordinator machinery");

@@ -10,6 +10,7 @@ use dasgd::cli::Args;
 use dasgd::coordinator::{AsyncCluster, AsyncConfig, StepSize};
 use dasgd::experiments::{make_regular, synth_world};
 use dasgd::metrics::Table;
+use dasgd::transport::TransportKind;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
@@ -17,12 +18,15 @@ fn main() -> anyhow::Result<()> {
     let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
     let secs = args.get_f64("secs", 3.0).map_err(anyhow::Error::msg)?;
     let spread = args.get_f64("spread", 0.8).map_err(anyhow::Error::msg)?;
+    let transport = TransportKind::parse(args.get_str("transport", "shared"))
+        .ok_or_else(|| anyhow::anyhow!("--transport wants shared|channel"))?;
 
     println!("== asynchronous cluster ==");
     println!(
         "{n} node threads, {degree}-regular, {secs}s, speed spread {spread} \
-         (≈{:.0}x rate disparity)\n",
-        (2.0 * spread).exp()
+         (≈{:.0}x rate disparity), transport {}\n",
+        (2.0 * spread).exp(),
+        transport.name()
     );
 
     let (shards, test) = synth_world(n, 300, 512, 11);
@@ -37,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         gossip_hold_secs: 0.0,
         kill_after_secs: None,
         kill_nodes: 0,
+        transport,
         seed: 11,
     };
     let rep = cluster.run(&cfg, &test)?;

@@ -127,6 +127,7 @@ fn main() -> anyhow::Result<()> {
         gossip_hold_secs: 0.0,
         kill_after_secs: None,
         kill_nodes: 0,
+        transport: dasgd::transport::TransportKind::SharedMem,
         seed: 7,
     };
     let rep = cluster.run(&acfg, &test)?;

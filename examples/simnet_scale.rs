@@ -1,0 +1,99 @@
+//! The 10,000-node quickstart: Alg. 2 on a 3-regular graph over a lossy
+//! network (nonzero per-edge latency, 1% message drop), simulated in
+//! virtual time by the sharded event-driven driver.
+//!
+//! ```text
+//! cargo run --release --example simnet_scale
+//! cargo run --release --example simnet_scale -- --nodes 10000 --drop-prob 0.01
+//! ```
+//!
+//! At this scale snapshots use the incremental aggregates: the
+//! consensus column is the L2 residual `sqrt(Σ‖β_i − β̄‖²)` (zero
+//! exactly at consensus), not the paper's d^k sum of norms.
+
+use dasgd::cli::Args;
+use dasgd::coordinator::Objective;
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::metrics::Table;
+use dasgd::sim::{simnet_run, SimConfig, SpeedModel};
+use dasgd::transport::{LatencyModel, SimNetConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("nodes", 10_000).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 3).map_err(anyhow::Error::msg)?;
+    let horizon = args.get_f64("horizon", 40.0).map_err(anyhow::Error::msg)?;
+    let drop_prob = args.get_f64("drop-prob", 0.01).map_err(anyhow::Error::msg)?;
+    let latency_ms = args.get_f64("latency-ms", 5.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+
+    println!("== simnet at scale ==");
+    println!(
+        "{n} nodes, {degree}-regular, horizon {horizon} virtual s, \
+         per-edge latency ≤{latency_ms}ms, drop {:.1}%\n",
+        drop_prob * 100.0
+    );
+
+    // Small shards keep the world generation fast; the interesting cost
+    // is the event loop, not the data.
+    let (shards, test) = synth_world(n, 20, 512, seed);
+    let g = make_regular(n, degree);
+    let speeds = SpeedModel::homogeneous(n, 1.0);
+    let objective = Objective::LogReg;
+    let cfg = SimConfig {
+        p_grad: 0.5,
+        stepsize: objective.default_stepsize(n),
+        objective,
+        horizon,
+        eval_every: horizon / 8.0,
+        net: SimNetConfig {
+            latency: LatencyModel {
+                min_secs: latency_ms / 2000.0,
+                max_secs: latency_ms / 1000.0,
+                jitter_secs: 0.0,
+            },
+            drop_prob,
+            partitions: vec![],
+            seed,
+        },
+        seed,
+    };
+    let wall = std::time::Instant::now();
+    let rep = simnet_run(&g, &shards, &test, &speeds, &cfg);
+    let wall = wall.elapsed().as_secs_f64();
+
+    // Small runs scan exactly (d^k); above EXACT_SCAN_MAX the column is
+    // the incremental L2 residual.
+    let consensus_col = if n <= dasgd::sim::EXACT_SCAN_MAX {
+        "d^k"
+    } else {
+        "L2 resid"
+    };
+    let mut t = Table::new(&["t (virt s)", "k", consensus_col, "test err"]);
+    for r in &rep.recorder.records {
+        t.row(&[
+            format!("{:.1}", r.time_secs),
+            format!("{}", r.k),
+            format!("{:.3}", r.consensus),
+            format!("{:.3}", r.test_err),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n{} updates ({} grad, {} proj), {} messages, {} dropped legs — \
+         {n} nodes simulated in {wall:.2}s wall",
+        rep.updates, rep.grad_steps, rep.proj_steps, rep.messages, rep.drops
+    );
+    // All-zero init means the residual starts at 0, rises as gradient
+    // steps disagree, then falls as gossip wins: peak → last is the
+    // decreasing-consensus signal.
+    let peak = rep
+        .recorder
+        .records
+        .iter()
+        .map(|r| r.consensus)
+        .fold(0.0f64, f64::max);
+    let last = rep.recorder.last().unwrap().consensus;
+    println!("consensus residual peak {peak:.3} → final {last:.3} (falling = gossip wins at scale)");
+    Ok(())
+}

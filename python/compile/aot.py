@@ -101,6 +101,40 @@ def registry():
             )
         )
 
+    # Hinge/lasso eval + (1, 50) gossip artifacts: the (dim)-shaped
+    # families run their held-out metrics and Eq. (7) averaging on
+    # compiled kernels too (256 eval rows like logreg; gossip stack
+    # M_max = 16 over the flat 50-float parameter).
+    arts.append(
+        dict(
+            name="hinge_eval",
+            fn=model.hinge_evaluate,
+            ins=[spec(1, 50), spec(256, 50), spec(1, 256), spec(1, 1)],
+            input_names=["w", "x", "y", "lam"],
+            output_names=["loss_sum", "err_count"],
+            outs=[spec(1, 1), spec(1, 1)],
+        )
+    )
+    arts.append(
+        dict(
+            name="lasso_eval",
+            fn=model.lasso_evaluate,
+            ins=[spec(1, 50), spec(256, 50), spec(1, 256), spec(1, 1)],
+            input_names=["w", "x", "y", "lam"],
+            output_names=["loss_sum", "sq_sum"],
+            outs=[spec(1, 1), spec(1, 1)],
+        )
+    )
+    arts.append(
+        dict(
+            name="gossip_avg_dim50",
+            fn=lambda p, wts: model.gossip_average(p, wts, 50),
+            ins=[spec(16, 50), spec(1, 16)],
+            input_names=["p", "wts"],
+            output_names=["avg"],
+            outs=[spec(1, 50)],
+        )
+    )
     for b in (1, 8):
         arts.append(
             dict(

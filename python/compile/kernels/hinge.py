@@ -67,3 +67,44 @@ def hinge_step(x, w, y, lr, scale, lam):
         ),
         interpret=INTERPRET,
     )(x, w, y, lr, scale, lam)
+
+
+def _hinge_eval_kernel(x_ref, w_ref, y_ref, lam_ref, loss_ref, err_ref):
+    x = x_ref[...]          # (B, D)
+    w = w_ref[...]          # (1, D)
+    y = y_ref[...]          # (1, B), labels in {-1, +1}
+    lam = lam_ref[0, 0]
+
+    b = x.shape[0]
+    pred = jnp.dot(w, x.T, preferred_element_type=jnp.float32)        # (1, B)
+    margin = y * pred
+    # loss_sum = sum hinge + B * lam * ||w||^2, so loss_sum / B is the
+    # regularized mean loss the rust-native eval reports.
+    loss_ref[0, 0] = (jnp.sum(jnp.maximum(0.0, 1.0 - margin))
+                      + b * lam * jnp.sum(w * w))
+    # Sign-misclassification count (pred == 0 predicts the -1 class,
+    # matching the native tie-break).
+    err_ref[0, 0] = jnp.sum(((pred > 0.0) != (y > 0.0)).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hinge_eval(x, w, y, lam):
+    """Held-out SVM metrics over a fixed eval batch.
+
+    Args:
+      x: (B, D) float32 features.
+      w: (1, D) float32 weight row vector.
+      y: (1, B) float32 labels in {-1, +1}.
+      lam: (1, 1) float32 L2 strength.
+
+    Returns:
+      (loss_sum, err_count) with shapes ((1, 1), (1, 1)).
+    """
+    return pl.pallas_call(
+        _hinge_eval_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, lam)

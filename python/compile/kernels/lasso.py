@@ -63,3 +63,42 @@ def lasso_step(x, w, y, lr, scale, lam):
         ),
         interpret=INTERPRET,
     )(x, w, y, lr, scale, lam)
+
+
+def _lasso_eval_kernel(x_ref, w_ref, y_ref, lam_ref, loss_ref, sq_ref):
+    x = x_ref[...]          # (B, D)
+    w = w_ref[...]          # (1, D)
+    y = y_ref[...]          # (1, B)
+    lam = lam_ref[0, 0]
+
+    b = x.shape[0]
+    resid = jnp.dot(w, x.T, preferred_element_type=jnp.float32) - y   # (1, B)
+    sq = resid * resid
+    # loss_sum = 0.5 * sum r^2 + B * lam * ||w||_1, so loss_sum / B is
+    # the regularized mean loss the rust-native eval reports; sq_sum / B
+    # is the MSE whose sqrt is the RMSE column.
+    loss_ref[0, 0] = 0.5 * jnp.sum(sq) + b * lam * jnp.sum(jnp.abs(w))
+    sq_ref[0, 0] = jnp.sum(sq)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lasso_eval(x, w, y, lam):
+    """Held-out Lasso metrics over a fixed eval batch.
+
+    Args:
+      x: (B, D) float32 features.
+      w: (1, D) float32 weight row vector.
+      y: (1, B) float32 regression targets.
+      lam: (1, 1) float32 L1 strength.
+
+    Returns:
+      (loss_sum, sq_sum) with shapes ((1, 1), (1, 1)).
+    """
+    return pl.pallas_call(
+        _lasso_eval_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, w, y, lam)

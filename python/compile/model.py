@@ -53,6 +53,24 @@ def lasso_sgd_step(w, x, y, lr, scale, lam):
     return lasso.lasso_step(x, w, y, lr, scale, lam)
 
 
+def hinge_evaluate(w, x, y, lam):
+    """Held-out SVM metrics: returns (loss_sum, err_count).
+
+    ``loss_sum`` folds the L2 term (``B * lam * ||w||^2``) so the caller
+    recovers the regularized mean loss by dividing by the row count.
+    """
+    return hinge.hinge_eval(x, w, y, lam)
+
+
+def lasso_evaluate(w, x, y, lam):
+    """Held-out Lasso metrics: returns (loss_sum, sq_sum).
+
+    ``sq_sum / B`` is the MSE; its sqrt is the RMSE column the rust
+    side reports.
+    """
+    return lasso.lasso_eval(x, w, y, lam)
+
+
 def gossip_average(p, wts, tile_k):
     """Projection step (Eq. 7): weighted closed-neighborhood average.
 

@@ -2,9 +2,10 @@
 //! final error to "a centralized version of SGD"). Objective-generic:
 //! the same loop optimizes any §II loss family.
 
-use crate::coordinator::{EvalBatch, StepSize};
+use crate::coordinator::StepSize;
 use crate::data::Dataset;
-use crate::metrics::{Record, Recorder};
+use crate::metrics::Recorder;
+use crate::node_logic::{self, Counts, Probe};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -58,39 +59,38 @@ impl CentralizedSgd {
         assert!(!pool.is_empty());
         let mut rec = Recorder::new("centralized");
         let sw = Stopwatch::new();
-        let batch = EvalBatch::for_objective(self.objective, test, None);
-        // Copy for the closure: capturing `self` would pin it borrowed
-        // across the mutating training loop.
-        let obj = self.objective;
-        let snap = |k: u64, w: &[f32], grad_steps: u64, sw: &Stopwatch, rec: &mut Recorder| {
-            let (loss, err) = batch.eval(obj, w);
-            rec.push(Record {
-                k,
-                time_secs: sw.elapsed_secs(),
-                consensus: 0.0, // single variable: always at consensus
-                test_loss: loss as f64,
-                test_err: err as f64,
-                grad_steps,
-                ..Default::default()
-            });
+        let probe = Probe::new(self.objective, test);
+        let snap = |k: u64, w: &[f32], sw: &Stopwatch, rec: &mut Recorder| {
+            let counts = Counts {
+                grad_steps: k,
+                ..Counts::default()
+            };
+            // Single variable: always at consensus (distance 0).
+            rec.push(probe.snapshot_at(k, sw.elapsed_secs(), w, 0.0, &counts));
         };
-        snap(self.k, &self.w, self.k, &sw, &mut rec);
+        snap(self.k, &self.w, &sw, &mut rec);
         let mut next = eval_every;
         for _ in 0..iters {
-            let idx = self.rng.index(pool.len());
-            let s = pool.sample(idx);
             let lr = self.stepsize.at(self.k);
             let mut w = std::mem::take(&mut self.w);
-            self.objective
-                .native_step(&mut w, s.features, &[s.label], self.dim, self.classes, lr, 1.0);
+            node_logic::sgd_step(
+                self.objective,
+                &mut w,
+                pool,
+                &mut self.rng,
+                self.dim,
+                self.classes,
+                lr,
+                1.0,
+            );
             self.w = w;
             self.k += 1;
             if self.k >= next {
-                snap(self.k, &self.w, self.k, &sw, &mut rec);
+                snap(self.k, &self.w, &sw, &mut rec);
                 next += eval_every;
             }
         }
-        snap(self.k, &self.w, self.k, &sw, &mut rec);
+        snap(self.k, &self.w, &sw, &mut rec);
         rec
     }
 }

@@ -2,10 +2,12 @@
 //! communicates. Because node distributions differ (§V-A), the average
 //! of purely-local models is biased — this quantifies the gap Alg. 2's
 //! consensus closes. Objective-generic: the per-node loop runs any §II
-//! loss family through [`Objective::native_step`].
+//! loss family through the canonical
+//! [`node_logic::sgd_step`](crate::node_logic::sgd_step).
 
 use crate::coordinator::{consensus, EvalBatch, StepSize};
 use crate::data::Dataset;
+use crate::node_logic;
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 
@@ -32,9 +34,7 @@ pub fn local_only_errors_for(
         let mut rng = root.split(i as u64);
         let mut w = vec![0.0f32; obj.param_len(dim, classes)];
         for k in 0..iters_per_node {
-            let idx = rng.index(shard.len());
-            let s = shard.sample(idx);
-            obj.native_step(&mut w, s.features, &[s.label], dim, classes, stepsize.at(k), 1.0);
+            node_logic::sgd_step(obj, &mut w, shard, &mut rng, dim, classes, stepsize.at(k), 1.0);
         }
         per_node_err += eval(&w);
         params.push(w);

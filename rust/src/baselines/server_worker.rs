@@ -9,9 +9,10 @@
 //! among *surviving* workers — dropping stragglers trades gradient bias
 //! for round latency, which is the paper's motivating tension.
 
-use crate::coordinator::{EvalBatch, StepSize};
+use crate::coordinator::StepSize;
 use crate::data::Dataset;
-use crate::metrics::{Record, Recorder};
+use crate::metrics::Recorder;
+use crate::node_logic::{self, Counts, Probe};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -61,29 +62,24 @@ pub fn server_worker(
     let obj = cfg.objective;
     let mut global = vec![0.0f32; obj.param_len(dim, classes)];
     let keep = ((n as f64) * (1.0 - cfg.drop_frac)).ceil().max(1.0) as usize;
-    let test_batch = EvalBatch::for_objective(obj, test, None);
+    let probe = Probe::new(obj, test);
 
     let mut rec = Recorder::new("server_worker");
     let sw = Stopwatch::new();
     let mut virtual_time = 0.0f64;
     let mut messages = 0u64;
 
-    let snap = |round: u64, w: &[f32], vt: f64, messages: u64, rec: &mut Recorder, sw: &Stopwatch| {
-        let (loss, err) = test_batch.eval(obj, w);
-        rec.push(Record {
-            k: round,
-            time_secs: sw.elapsed_secs(),
-            consensus: 0.0,
-            test_loss: loss as f64,
-            test_err: err as f64,
-            messages,
+    let snap = |round: u64, w: &[f32], messages: u64, rec: &mut Recorder, sw: &Stopwatch| {
+        let counts = Counts {
             grad_steps: round * keep as u64,
-            ..Default::default()
-        });
-        let _ = vt;
+            messages,
+            ..Counts::default()
+        };
+        // Single global variable: consensus distance is identically 0.
+        rec.push(probe.snapshot_at(round, sw.elapsed_secs(), w, 0.0, &counts));
     };
 
-    snap(0, &global, 0.0, 0, &mut rec, &sw);
+    snap(0, &global, 0, &mut rec, &sw);
     for round in 1..=cfg.rounds {
         let lr = cfg.stepsize.at(round * keep as u64);
         // Draw per-worker compute times; keep the fastest `keep`.
@@ -95,13 +91,21 @@ pub fn server_worker(
         virtual_time += survivors.last().unwrap().0;
 
         // Each survivor computes a gradient at the current global W and
-        // sends it up; the server averages and broadcasts.
+        // sends it up; the server averages and broadcasts. The step is
+        // the canonical Eq. (6) update at scale 1 on a copy of W.
         let mut delta = vec![0.0f32; global.len()];
         for &(_, i) in survivors {
-            let idx = rngs[i].index(shards[i].len());
-            let s = shards[i].sample(idx);
             let mut local = global.clone();
-            obj.native_step(&mut local, s.features, &[s.label], dim, classes, lr, 1.0);
+            node_logic::sgd_step(
+                obj,
+                &mut local,
+                &shards[i],
+                &mut rngs[i],
+                dim,
+                classes,
+                lr,
+                1.0,
+            );
             for (d, (lw, gw)) in delta.iter_mut().zip(local.iter().zip(&global)) {
                 *d += lw - gw;
             }
@@ -111,7 +115,7 @@ pub fn server_worker(
             *gw += d / keep as f32;
         }
         if round % cfg.eval_every == 0 || round == cfg.rounds {
-            snap(round, &global, virtual_time, messages, &mut rec, &sw);
+            snap(round, &global, messages, &mut rec, &sw);
         }
     }
     ServerWorkerReport {

@@ -6,10 +6,11 @@
 //! exactly what Alg. 2 removes. The virtual-time straggler comparison
 //! (`crate::sim`) charges each round the *slowest* node's compute time.
 
-use crate::coordinator::{consensus, EvalBatch, StepSize};
+use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::graph::Graph;
-use crate::metrics::{Record, Recorder};
+use crate::metrics::Recorder;
+use crate::node_logic::{self, Counts, Probe};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -48,62 +49,49 @@ pub fn sync_dsgd(
     let mut root = Xoshiro256pp::seeded(cfg.seed);
     let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
     let mut params: Vec<Vec<f32>> = vec![vec![0.0; obj.param_len(dim, classes)]; n];
-    let test_batch = EvalBatch::for_objective(obj, test, None);
+    let probe = Probe::new(obj, test);
 
     let mut rec = Recorder::new("sync_dsgd");
     let sw = Stopwatch::new();
-    let mut messages = 0u64;
-    let mut grad_steps = 0u64;
+    let mut counts = Counts::default();
 
-    let snap = |round: u64,
-                    params: &[Vec<f32>],
-                    messages: u64,
-                    grad_steps: u64,
-                    rec: &mut Recorder,
-                    sw: &Stopwatch| {
-        let mean = consensus::mean_param(params);
-        let (loss, err) = test_batch.eval(obj, &mean);
-        rec.push(Record {
-            k: round,
-            time_secs: sw.elapsed_secs(),
-            consensus: consensus::consensus_distance(params),
-            test_loss: loss as f64,
-            test_err: err as f64,
-            grad_steps,
-            messages,
-            ..Default::default()
-        });
-    };
-
-    snap(0, &params, 0, 0, &mut rec, &sw);
+    rec.push(probe.snapshot(0, sw.elapsed_secs(), &params, &counts));
     for round in 1..=cfg.rounds {
         let lr = cfg.stepsize.at(round * n as u64); // comparable per-sample decay
-        // Phase 1 (synchronized): every node takes one local SGD step.
+        // Phase 1 (synchronized): every node takes one local SGD step
+        // (the same canonical Eq. (6) step every engine runs).
         for i in 0..n {
-            let idx = rngs[i].index(shards[i].len());
-            let s = shards[i].sample(idx);
             let mut w = std::mem::take(&mut params[i]);
-            obj.native_step(&mut w, s.features, &[s.label], dim, classes, lr, 1.0 / n as f32);
+            node_logic::sgd_step(
+                obj,
+                &mut w,
+                &shards[i],
+                &mut rngs[i],
+                dim,
+                classes,
+                lr,
+                1.0 / n as f32,
+            );
             params[i] = w;
-            grad_steps += 1;
+            counts.grad_steps += 1;
         }
         // Phase 2 (synchronized): consensus averaging with matrix A.
         let mut next: Vec<Vec<f32>> = Vec::with_capacity(n);
         for i in 0..n {
             let hood = g.closed_neighborhood(i);
             let rows: Vec<&[f32]> = hood.iter().map(|&j| params[j].as_slice()).collect();
-            next.push(crate::linalg::mean_of(&rows));
-            messages += g.degree(i) as u64; // receive one vector per neighbor
+            next.push(node_logic::neighborhood_average(&rows));
+            counts.messages += g.degree(i) as u64; // receive one vector per neighbor
         }
         params = next;
         if round % cfg.eval_every == 0 || round == cfg.rounds {
-            snap(round, &params, messages, grad_steps, &mut rec, &sw);
+            rec.push(probe.snapshot(round, sw.elapsed_secs(), &params, &counts));
         }
     }
     SyncDsgdReport {
         recorder: rec,
-        messages,
-        grad_steps,
+        messages: counts.messages,
+        grad_steps: counts.grad_steps,
     }
 }
 

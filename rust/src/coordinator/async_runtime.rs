@@ -1,37 +1,51 @@
 //! Thread-per-node asynchronous runtime — the system the paper argues
 //! for, with no global clock and no barriers.
 //!
-//! Every node runs on its own OS thread with a private RNG and an
-//! exponential inter-event clock (the continuous-time limit of §IV-A's
-//! geometric countdown; per-node rates model heterogeneous hardware).
-//! On firing, a node performs a gradient step (w.p. `p_grad`) on its own
-//! variable, or a §IV-C lock-up + Eq. (7) projection over its closed
-//! neighborhood. Lock-up is implemented with `try_lock` on the
-//! neighborhood's parameter mutexes in sorted order — non-blocking, so a
-//! busy neighborhood means *back off and redraw* (a counted conflict),
-//! never a deadlock.
+//! Every node runs on its own OS thread driving one
+//! [`NodeLogic`](crate::node_logic::NodeLogic) (private RNG, exponential
+//! inter-event clock — the continuous-time limit of §IV-A's geometric
+//! countdown; per-node rates model heterogeneous hardware) over a
+//! pluggable [`Transport`]:
+//!
+//! * [`TransportKind::SharedMem`] — sorted try-lock mutexes, the
+//!   historical in-process substrate (behavior preserved bit-for-bit
+//!   where seeds allow);
+//! * [`TransportKind::Channel`] — message-passing collect/broadcast,
+//!   the shape of a real deployment.
+//!
+//! On firing, a node performs a gradient step (w.p. `p_grad`) on its
+//! own variable, or a §IV-C lock-up + Eq. (7) projection over its
+//! closed neighborhood. A busy neighborhood means *back off and redraw*
+//! (a counted conflict), never a deadlock. Messages are counted in the
+//! canonical [`crate::node_logic`] convention: `2·(h−1)` per applied
+//! projection, nothing for aborts.
 //!
 //! Gradient/projection math runs rust-native by default or through the
 //! channel-based [`ExecutorHandle`](crate::runtime::ExecutorHandle) (one
 //! PJRT engine per executor thread) when an executor is supplied.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
 use crate::graph::Graph;
-use crate::metrics::{Record, Recorder};
+use crate::metrics::Recorder;
+use crate::node_logic::{
+    neighborhood_average, projection_messages, Action, Counts, NodeLogic, Probe,
+};
 use crate::objective::Objective;
 use crate::runtime::ExecutorHandle;
+use crate::transport::{
+    ChannelNet, ProjectionOutcome, SharedMem, Transport, TransportKind,
+};
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 
-use super::backend::{EvalBatch, PjrtArtifacts};
+use super::backend::PjrtArtifacts;
 use super::config::StepSize;
-use super::consensus;
 
 /// Configuration of an asynchronous run.
 #[derive(Clone, Debug)]
@@ -58,6 +72,8 @@ pub struct AsyncConfig {
     /// their neighbors' gossip; the survivors keep converging.
     pub kill_after_secs: Option<f64>,
     pub kill_nodes: usize,
+    /// Which communication substrate the node threads run on.
+    pub transport: TransportKind,
     pub seed: u64,
 }
 
@@ -73,6 +89,7 @@ impl AsyncConfig {
             gossip_hold_secs: 0.0,
             kill_after_secs: None,
             kill_nodes: 0,
+            transport: TransportKind::SharedMem,
             seed: 0,
         }
     }
@@ -87,7 +104,7 @@ pub struct AsyncReport {
     pub updates: u64,
     pub grad_steps: u64,
     pub proj_steps: u64,
-    /// Projection attempts aborted because the neighborhood was locked.
+    /// Projection attempts aborted because the neighborhood was busy.
     pub conflicts: u64,
     pub messages: u64,
     pub updates_per_sec: f64,
@@ -95,8 +112,9 @@ pub struct AsyncReport {
     pub final_params: Vec<Vec<f32>>,
 }
 
+/// Cross-thread run state: liveness, stop flag, and the shared counters
+/// (parameters live in the [`Transport`]).
 struct Shared {
-    params: Vec<Mutex<Vec<f32>>>,
     /// Per-node liveness: false = crashed (fault injection).
     alive: Vec<AtomicBool>,
     stop: AtomicBool,
@@ -106,6 +124,17 @@ struct Shared {
     messages: AtomicU64,
     /// Global applied-update counter (for stepsize decay).
     k: AtomicU64,
+}
+
+impl Shared {
+    fn counts(&self) -> Counts {
+        Counts {
+            grad_steps: self.grad_steps.load(Ordering::Relaxed),
+            proj_steps: self.proj_steps.load(Ordering::Relaxed),
+            messages: self.messages.load(Ordering::Relaxed),
+            conflicts: self.conflicts.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// A networked system ready to run asynchronously.
@@ -167,8 +196,16 @@ impl AsyncCluster {
         }
         let n = self.graph.len();
         let param_len = self.objective.param_len(self.dim, self.classes);
+        let transport: Arc<dyn Transport> = match cfg.transport {
+            TransportKind::SharedMem => Arc::new(SharedMem::new(n, param_len)),
+            TransportKind::Channel => Arc::new(ChannelNet::with_round_budget(
+                n,
+                param_len,
+                Duration::from_millis(100),
+                Duration::from_secs_f64(cfg.gossip_hold_secs.max(0.0)),
+            )),
+        };
         let shared = Arc::new(Shared {
-            params: (0..n).map(|_| Mutex::new(vec![0.0f32; param_len])).collect(),
             alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
             stop: AtomicBool::new(false),
             grad_steps: AtomicU64::new(0),
@@ -183,25 +220,26 @@ impl AsyncCluster {
         for i in 0..n {
             let mut rng = root.split(i as u64);
             let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
+            let logic =
+                NodeLogic::new(i, self.objective, cfg.p_grad, self.shards[i].clone(), n, rng);
             let shared = Arc::clone(&shared);
+            let transport = Arc::clone(&transport);
             let graph = self.graph.clone();
-            let data = self.shards[i].clone();
             let cfg = cfg.clone();
             let executor = self
                 .executor
                 .as_ref()
                 .map(|(h, a)| (h.clone(), a.clone()));
             let (dim, classes) = (self.dim, self.classes);
-            let objective = self.objective;
             handles.push(std::thread::spawn(move || {
                 node_loop(
-                    i, rate, rng, shared, graph, data, cfg, executor, objective, dim, classes,
+                    logic, rate, shared, transport, graph, cfg, executor, dim, classes,
                 );
             }));
         }
 
         // Monitor loop (runs inline on the caller's thread).
-        let test_batch = EvalBatch::for_objective(self.objective, test, None);
+        let probe = Probe::new(self.objective, test);
         let mut rec = Recorder::new("async");
         let sw = Stopwatch::new();
         let mut killed = 0usize;
@@ -219,26 +257,19 @@ impl AsyncCluster {
             }
             // Metrics are computed over the *live* cohort only (a crashed
             // node's frozen variable is no longer part of the system).
-            let params: Vec<Vec<f32>> = shared
-                .params
-                .iter()
+            let params: Vec<Vec<f32>> = transport
+                .snapshot()
+                .into_iter()
                 .enumerate()
                 .filter(|(i, _)| shared.alive[*i].load(Ordering::Relaxed))
-                .map(|(_, m)| m.lock().unwrap().clone())
+                .map(|(_, w)| w)
                 .collect();
-            let mean = consensus::mean_param(&params);
-            let (loss, err) = test_batch.eval(self.objective, &mean);
-            rec.push(Record {
-                k: shared.k.load(Ordering::Relaxed),
-                time_secs: now,
-                consensus: consensus::consensus_distance(&params),
-                test_loss: loss as f64,
-                test_err: err as f64,
-                grad_steps: shared.grad_steps.load(Ordering::Relaxed),
-                proj_steps: shared.proj_steps.load(Ordering::Relaxed),
-                messages: shared.messages.load(Ordering::Relaxed),
-                conflicts: shared.conflicts.load(Ordering::Relaxed),
-            });
+            rec.push(probe.snapshot(
+                shared.k.load(Ordering::Relaxed),
+                now,
+                &params,
+                &shared.counts(),
+            ));
             if now >= cfg.duration_secs {
                 break;
             }
@@ -254,11 +285,6 @@ impl AsyncCluster {
         let elapsed = sw.elapsed_secs();
         let grad = shared.grad_steps.load(Ordering::SeqCst);
         let proj = shared.proj_steps.load(Ordering::SeqCst);
-        let final_params = shared
-            .params
-            .iter()
-            .map(|m| m.lock().unwrap().clone())
-            .collect();
         Ok(AsyncReport {
             killed,
             recorder: rec,
@@ -268,130 +294,113 @@ impl AsyncCluster {
             conflicts: shared.conflicts.load(Ordering::SeqCst),
             messages: shared.messages.load(Ordering::SeqCst),
             updates_per_sec: (grad + proj) as f64 / elapsed,
-            final_params,
+            final_params: transport.snapshot(),
         })
     }
 }
 
+/// One node's thread: fire on the exponential clock, act through the
+/// transport, count in the canonical convention.
 #[allow(clippy::too_many_arguments)]
 fn node_loop(
-    id: usize,
+    mut logic: NodeLogic,
     rate_hz: f64,
-    mut rng: Xoshiro256pp,
     shared: Arc<Shared>,
+    transport: Arc<dyn Transport>,
     graph: Graph,
-    data: Dataset,
     cfg: AsyncConfig,
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
-    objective: Objective,
     dim: usize,
     classes: usize,
 ) {
-    let n = graph.len();
-    let scale = 1.0 / n as f32;
+    let id = logic.id;
+    let objective = logic.objective();
+    let scale = logic.grad_scale();
+    let hold = Duration::from_secs_f64(cfg.gossip_hold_secs.max(0.0));
     while !shared.stop.load(Ordering::Relaxed) {
         // Continuous-time §IV-A clock: wait Exp(rate).
-        let wait = rng.exponential(rate_hz.max(1e-9));
+        let wait = logic.wait_secs(rate_hz);
         std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+        transport.poll(id);
         if shared.stop.load(Ordering::Relaxed) {
             return;
         }
         if !shared.alive[id].load(Ordering::Relaxed) {
             return; // crashed (fault injection)
         }
+        if transport.busy(id) {
+            continue; // captured by a neighbor's in-flight projection
+        }
         let k = shared.k.load(Ordering::Relaxed);
         let lr = cfg.stepsize.at(k);
-        if rng.next_f64() < cfg.p_grad {
-            // Local gradient step: lock only our own variable (Eq. 6).
-            let idx = rng.index(data.len());
-            let s = data.sample(idx);
-            let mut guard = shared.params[id].lock().unwrap();
-            match &executor {
-                None => {
-                    let mut w = std::mem::take(&mut *guard);
-                    objective.native_step(&mut w, s.features, &[s.label], dim, classes, lr, scale);
-                    *guard = w;
-                }
-                Some((h, arts)) => {
-                    let staged = objective.step_inputs(s.label, classes, lr, scale);
-                    if let Ok(outs) =
-                        h.execute_f32(&arts.step_b1, &staged.buffers(&guard, s.features))
-                    {
-                        *guard = outs.into_iter().next().unwrap();
+        match logic.draw_action() {
+            Action::Grad => {
+                // Local gradient step: only our own variable (Eq. 6).
+                match &executor {
+                    None => transport.update_own(id, &mut |w| {
+                        logic.native_grad_step(w, lr);
+                    }),
+                    Some((h, arts)) => {
+                        let idx = logic.draw_index();
+                        let label = logic.data().sample(idx).label;
+                        let staged = objective.step_inputs(label, classes, lr, scale);
+                        transport.update_own(id, &mut |w| {
+                            let x = logic.data().sample(idx).features;
+                            if let Ok(outs) =
+                                h.execute_f32(&arts.step_b1, &staged.buffers(w.as_slice(), x))
+                            {
+                                *w = outs.into_iter().next().unwrap();
+                            }
+                        });
                     }
                 }
+                shared.grad_steps.fetch_add(1, Ordering::Relaxed);
+                shared.k.fetch_add(1, Ordering::Relaxed);
             }
-            drop(guard);
-            shared.grad_steps.fetch_add(1, Ordering::Relaxed);
-            shared.k.fetch_add(1, Ordering::Relaxed);
-        } else {
-            // Projection: §IV-C lock-up over the closed neighborhood —
-            // restricted to live members (a crashed neighbor is simply
-            // unreachable; the average is over whoever answers).
-            let hood: Vec<usize> = graph
-                .closed_neighborhood(id)
-                .into_iter()
-                .filter(|&j| shared.alive[j].load(Ordering::Relaxed))
-                .collect();
-            if hood.len() < 2 {
-                continue; // nobody reachable to average with
-            }
-            let mut guards = Vec::with_capacity(hood.len());
-            let mut ok = true;
-            for &j in &hood {
-                // Lock request message to each neighbor (not self).
-                if j != id {
-                    shared.messages.fetch_add(1, Ordering::Relaxed);
+            Action::Project => {
+                // Projection: §IV-C lock-up over the closed neighborhood
+                // — restricted to live members (a crashed neighbor is
+                // simply unreachable; the average is over whoever
+                // answers).
+                let hood: Vec<usize> = graph
+                    .closed_neighborhood(id)
+                    .into_iter()
+                    .filter(|&j| shared.alive[j].load(Ordering::Relaxed))
+                    .collect();
+                if hood.len() < 2 {
+                    continue; // nobody reachable to average with
                 }
-                match shared.params[j].try_lock() {
-                    Ok(g) => guards.push(g),
-                    Err(_) => {
-                        ok = false;
-                        break;
+                let gossip = executor
+                    .as_ref()
+                    .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts)));
+                let outcome = transport.try_project(id, &hood, hold, &mut |rows| {
+                    // Compiled Eq. (7) when the artifact's padding fits,
+                    // native averaging otherwise (identical semantics).
+                    let staged = gossip.and_then(|(h, artifact, arts)| {
+                        let k = objective.param_len(dim, classes);
+                        arts.stage_gossip(rows, k)
+                            .and_then(|(p, wts)| h.execute_f32(artifact, &[&p, &wts]).ok())
+                    });
+                    match staged {
+                        Some(outs) => outs.into_iter().next().unwrap(),
+                        None => neighborhood_average(rows),
                     }
+                });
+                match outcome {
+                    ProjectionOutcome::Applied { participants } => {
+                        shared
+                            .messages
+                            .fetch_add(projection_messages(participants), Ordering::Relaxed);
+                        shared.proj_steps.fetch_add(1, Ordering::Relaxed);
+                        shared.k.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ProjectionOutcome::Conflict => {
+                        // A member is mid-update: back off and redraw.
+                        shared.conflicts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ProjectionOutcome::Isolated => {}
                 }
             }
-            if !ok {
-                // A neighbor is mid-update: back off (conflict), release.
-                shared.conflicts.fetch_add(1, Ordering::Relaxed);
-                drop(guards);
-                continue;
-            }
-            // Collect + average + broadcast (Eq. 7). A real deployment
-            // holds the locks across the network round-trip.
-            if cfg.gossip_hold_secs > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(cfg.gossip_hold_secs));
-            }
-            let rows: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
-            let gossip_artifact = executor
-                .as_ref()
-                .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts.gossip_m)));
-            let avg = match gossip_artifact {
-                Some((h, gossip, m)) if rows.len() <= m => {
-                    let kk = objective.param_len(dim, classes);
-                    let mut p = vec![0.0f32; m * kk];
-                    let mut wts = vec![0.0f32; m];
-                    for (r, row) in rows.iter().enumerate() {
-                        p[r * kk..(r + 1) * kk].copy_from_slice(row);
-                        wts[r] = 1.0 / rows.len() as f32;
-                    }
-                    match h.execute_f32(gossip, &[&p, &wts]) {
-                        Ok(outs) => outs.into_iter().next().unwrap(),
-                        Err(_) => crate::linalg::mean_of(&rows),
-                    }
-                }
-                _ => crate::linalg::mean_of(&rows),
-            };
-            for g in guards.iter_mut() {
-                g.copy_from_slice(&avg);
-            }
-            // Broadcast messages (value back to each neighbor) + releases.
-            shared
-                .messages
-                .fetch_add(hood.len() as u64 - 1, Ordering::Relaxed);
-            drop(guards);
-            shared.proj_steps.fetch_add(1, Ordering::Relaxed);
-            shared.k.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -519,5 +528,30 @@ mod tests {
             "expected lock-up conflicts under contention"
         );
         assert!(rep.messages > 0);
+    }
+
+    #[test]
+    fn channel_transport_reaches_the_same_kind_of_model() {
+        // The message-passing substrate: slower rounds (protocol + poll
+        // cadence) but the same algorithm; the run must apply updates,
+        // complete projections, and keep every vector finite.
+        let (c, test) = cluster(6, 2, 21);
+        let cfg = AsyncConfig {
+            duration_secs: 1.5,
+            rate_hz: 400.0,
+            transport: TransportKind::Channel,
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 50, "updates={}", rep.updates);
+        assert!(rep.grad_steps > 0);
+        assert!(
+            rep.proj_steps > 0,
+            "no projection round completed over the channel transport"
+        );
+        assert!(rep
+            .final_params
+            .iter()
+            .all(|w| w.iter().all(|v| v.is_finite())));
     }
 }

@@ -10,9 +10,11 @@
 //! the backend's [`Objective`] (logreg / hinge-SVM / lasso), the
 //! objective owns the parameter shape and label encoding, and
 //! [`PjrtArtifacts::for_objective`] maps each objective to its compiled
-//! kernel set. Pieces a given objective has no compiled artifact for
-//! (hinge/lasso eval and gossip) fall back to the native math — the
-//! semantics are identical either way.
+//! kernel set — step, eval, and gossip artifacts exist for all three
+//! families (hinge/lasso in their (1, 50) synthetic shape), so the PJRT
+//! backend runs every piece on compiled kernels. The native fallback
+//! remains only for shapes no artifact covers (e.g. a gossip stack
+//! wider than the compiled padding).
 
 use anyhow::{bail, Result};
 
@@ -208,9 +210,9 @@ impl StepBackend for NativeBackend {
 
 /// Artifact names for one (objective, shape-family) pair.
 ///
-/// `eval` / `gossip` are `None` for the objectives without a compiled
-/// artifact of that kind (hinge/lasso); the backend then computes that
-/// piece natively with identical semantics.
+/// `eval` / `gossip` are `Option` so a future family without a compiled
+/// artifact of that kind degrades to native math with identical
+/// semantics; all three current objectives compile both.
 #[derive(Clone, Debug)]
 pub struct PjrtArtifacts {
     pub objective: Objective,
@@ -255,6 +257,26 @@ impl PjrtArtifacts {
         names.extend(self.gossip.as_deref());
         names
     }
+
+    /// Stage `rows` for the gossip artifact: the zero-padded
+    /// `(gossip_m, k)` parameter stack plus uniform averaging weights.
+    /// `None` when the neighborhood exceeds the compiled padding (the
+    /// caller averages natively). The single staging implementation for
+    /// both the sequential backend and the threaded executor path.
+    pub fn stage_gossip(&self, rows: &[&[f32]], k: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let m = self.gossip_m;
+        if rows.len() > m {
+            return None;
+        }
+        let mut p = vec![0.0f32; m * k];
+        let mut wts = vec![0.0f32; m];
+        for (r, row) in rows.iter().enumerate() {
+            debug_assert_eq!(row.len(), k);
+            p[r * k..(r + 1) * k].copy_from_slice(row);
+            wts[r] = 1.0 / rows.len() as f32;
+        }
+        Some((p, wts))
+    }
 }
 
 /// PJRT backend: the production path (Pallas kernels inside AOT HLO).
@@ -263,9 +285,6 @@ pub struct PjrtBackend {
     arts: PjrtArtifacts,
     dim: usize,
     classes: usize,
-    /// Scratch for gossip stacking (avoids per-call allocation).
-    gossip_scratch: Vec<f32>,
-    weights_scratch: Vec<f32>,
 }
 
 impl PjrtBackend {
@@ -285,11 +304,8 @@ impl PjrtBackend {
                 bail!("engine is missing artifact {name}");
             }
         }
-        let k = arts.objective.param_len(dim, classes);
         Ok(Self {
             engine,
-            gossip_scratch: vec![0.0; arts.gossip_m * k],
-            weights_scratch: vec![0.0; arts.gossip_m],
             arts,
             dim,
             classes,
@@ -345,22 +361,12 @@ impl StepBackend for PjrtBackend {
             // No compiled gossip for this objective's parameter shape.
             return Ok(crate::linalg::mean_of(rows));
         };
-        let m = self.arts.gossip_m;
-        if rows.len() > m {
+        let k = self.arts.objective.param_len(self.dim, self.classes);
+        let Some((p, wts)) = self.arts.stage_gossip(rows, k) else {
             // Degree exceeds the artifact's padding: fall back to native.
             return Ok(crate::linalg::mean_of(rows));
-        }
-        let k = self.arts.objective.param_len(self.dim, self.classes);
-        self.gossip_scratch.fill(0.0);
-        self.weights_scratch.fill(0.0);
-        for (i, row) in rows.iter().enumerate() {
-            assert_eq!(row.len(), k);
-            self.gossip_scratch[i * k..(i + 1) * k].copy_from_slice(row);
-            self.weights_scratch[i] = 1.0 / rows.len() as f32;
-        }
-        let outs = self
-            .engine
-            .execute_f32(gossip, &[&self.gossip_scratch, &self.weights_scratch])?;
+        };
+        let outs = self.engine.execute_f32(gossip, &[&p, &wts])?;
         Ok(outs.into_iter().next().unwrap())
     }
 
@@ -377,12 +383,28 @@ impl StepBackend for PjrtBackend {
                 test.n
             );
         }
-        let outs = self
-            .engine
-            .execute_f32(eval, &[w, &test.features, &test.one_hot])?;
-        let loss_sum = outs[0][0];
-        let errs = outs[1][0];
-        Ok((loss_sum / test.n as f32, errs / test.n as f32))
+        // Input protocol per family: logreg takes one-hot labels;
+        // hinge/lasso take the encoded scalar targets plus λ (staged at
+        // call time, so artifacts stay λ-agnostic).
+        let obj = self.arts.objective;
+        let outs = match obj {
+            Objective::LogReg => self
+                .engine
+                .execute_f32(eval, &[w, &test.features, &test.one_hot])?,
+            Objective::Hinge { lam } | Objective::Lasso { lam } => {
+                if test.targets.len() != test.n {
+                    bail!(
+                        "{} eval needs encoded targets — build the batch with \
+                         EvalBatch::for_objective",
+                        obj.name()
+                    );
+                }
+                let lam = [lam];
+                self.engine
+                    .execute_f32(eval, &[w, &test.features, &test.targets, &lam])?
+            }
+        };
+        Ok(obj.pjrt_eval_outputs(outs[0][0], outs[1][0], test.n))
     }
 
     fn required_eval_rows(&self) -> Option<usize> {

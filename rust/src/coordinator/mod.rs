@@ -7,8 +7,10 @@
 //! * [`selector`] — §IV-A node selection (central + distributed geometric).
 //! * [`node`] — per-node state (β_i, local shard, private RNG).
 //! * [`trainer`] — sequential-event Alg. 2 (the figures' reference).
-//! * [`async_runtime`] — thread-per-node truly asynchronous runtime with
-//!   the §IV-C neighbor lock-up protocol.
+//! * [`async_runtime`] — thread-per-node truly asynchronous runtime:
+//!   one [`NodeLogic`](crate::node_logic::NodeLogic) per thread over a
+//!   pluggable [`Transport`](crate::transport::Transport) (shared
+//!   memory or message passing).
 //! * [`consensus`] — d^k / DF(β) metrics.
 
 pub mod async_runtime;

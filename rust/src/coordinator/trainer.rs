@@ -30,8 +30,9 @@ use super::selector::{CentralSelector, GeometricSelector, Slot};
 pub struct Counters {
     pub grad_steps: u64,
     pub proj_steps: u64,
-    /// Point-to-point messages: projection = collect + broadcast
-    /// (2·|N_m|), lock-up adds lock + release (2·|N_m|) when enabled.
+    /// Data-plane messages in the canonical [`crate::node_logic`]
+    /// convention: 2·|N_m| (collect + broadcast) per applied
+    /// projection; lock-up control traffic is not counted.
     pub messages: u64,
     /// Simultaneous-firing events whose closed neighborhoods intersected.
     pub conflicts: u64,
@@ -138,7 +139,7 @@ impl<B: StepBackend> Trainer<B> {
         }
         self.nodes[m].proj_steps += 1;
         self.counters.proj_steps += 1;
-        self.counters.messages += 2 * (hood.len() as u64 - 1);
+        self.counters.messages += crate::node_logic::projection_messages(hood.len());
         Ok(())
     }
 
@@ -173,9 +174,9 @@ impl<B: StepBackend> Trainer<B> {
                 self.counters.conflicts += 1;
                 match self.cfg.conflicts {
                     ConflictPolicy::LockUp => {
-                        // Lock-up messages were exchanged, then m backed
-                        // off: lock + release to each neighbor.
-                        self.counters.messages += 2 * self.graph.degree(m) as u64;
+                        // m backed off; lock-up control traffic is not
+                        // data-plane and is not counted as messages
+                        // (the canonical `node_logic` convention).
                         self.counters.aborted += 1;
                         continue;
                     }
@@ -183,9 +184,6 @@ impl<B: StepBackend> Trainer<B> {
                         // Applied anyway (the "noisy" alternative).
                     }
                 }
-            } else if self.cfg.conflicts == ConflictPolicy::LockUp {
-                // Successful lock-up: lock + release round.
-                self.counters.messages += 2 * self.graph.degree(m) as u64;
             }
             locked.push(m);
             self.act(m)?;

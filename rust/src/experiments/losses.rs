@@ -76,7 +76,15 @@ pub fn run(scale: f64, seed: u64) -> Result<Vec<LossRow>> {
     // stale artifact dir skips cleanly instead of failing mid-run.
     let pjrt_ready = cfg!(feature = "pjrt")
         && Manifest::load(crate::runtime::default_artifact_dir())
-            .map(|m| m.get("hinge_step_b1").is_ok() && m.get("lasso_step_b1").is_ok())
+            .map(|m| {
+                // The full hinge/lasso kernel set: steps plus the
+                // (1, 50)-shape eval + gossip artifacts the backend
+                // now requires (regenerate stale dirs with
+                // `make artifacts`).
+                ["hinge_step_b1", "lasso_step_b1", "hinge_eval", "lasso_eval", "gossip_avg_dim50"]
+                    .iter()
+                    .all(|a| m.get(a).is_ok())
+            })
             .unwrap_or(false);
     if pjrt_ready {
         for obj in [Objective::hinge(), Objective::lasso()] {

@@ -8,7 +8,10 @@
 //! (random gradient steps + random neighborhood-projection steps), the
 //! §IV distributed node-selection / lock-up protocols, a threaded
 //! asynchronous actor runtime, a discrete-event straggler simulator, and
-//! the baselines the paper positions itself against. Layers 2/1 (JAX
+//! the baselines the paper positions itself against. The per-node
+//! algorithm lives once, in [`node_logic`], and runs over pluggable
+//! [`transport`] substrates (shared memory, message passing, or the
+//! delay/drop/partition-aware virtual-time network). Layers 2/1 (JAX
 //! model + Pallas kernels) are AOT-lowered to HLO text in `artifacts/`
 //! and executed through [`runtime`]; python never runs on the training
 //! path.
@@ -26,9 +29,11 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod node_logic;
 pub mod objective;
 pub mod runtime;
 pub mod sim;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result alias.

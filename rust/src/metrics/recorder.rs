@@ -11,7 +11,11 @@ pub struct Record {
     pub k: u64,
     /// Wall-clock (or virtual, for the simulator) seconds since start.
     pub time_secs: f64,
-    /// d^k — consensus distance (§V-B).
+    /// Consensus distance: the paper's d^k = Σ‖β_i − β̄‖ (§V-B) for
+    /// engines that scan all parameters; simulations above
+    /// [`crate::sim::EXACT_SCAN_MAX`] nodes record the incremental L2
+    /// residual `sqrt(Σ‖β_i − β̄‖²)` instead (zero exactly at
+    /// consensus; see `node_logic::ConsensusTracker`).
     pub consensus: f64,
     /// Held-out mean CE loss at β̄.
     pub test_loss: f64,

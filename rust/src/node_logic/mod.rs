@@ -1,0 +1,470 @@
+//! Engine-agnostic Alg. 2 per-node logic — the single place the paper's
+//! update math lives.
+//!
+//! Every execution engine (the thread-per-node wall-clock runtime, the
+//! virtual-time [`crate::sim`] driver, and the baselines' gossip paths)
+//! used to carry its own copy of the gradient/projection step. That
+//! forked the algorithm's semantics across engines; this module is the
+//! one canonical implementation they all consume:
+//!
+//! * [`NodeLogic`] — the per-node state machine: exponential firing
+//!   clock, the grad-vs-projection draw, sample selection, and the
+//!   Eq. (6) gradient step, all on the node's private RNG stream.
+//! * [`sgd_step`] / [`neighborhood_average`] — the raw Eq. (6)/(7)
+//!   update math for callers that manage their own per-node RNGs
+//!   (the synchronous baselines).
+//! * [`Probe`] / [`Counts`] — the shared evaluate-and-snapshot path
+//!   every engine records through.
+//! * [`ConsensusTracker`] — incremental O(dim) mean + consensus
+//!   residual for simulations too large to scan per snapshot.
+//!
+//! # Message accounting (the canonical convention)
+//!
+//! Engines historically disagreed: the wall-clock runtime charged one
+//! message per lock *acquisition attempt* (so an aborted lock-up still
+//! counted traffic), while the virtual-time simulator charged
+//! collect + broadcast per applied projection. The convention every
+//! engine now reports, via [`projection_messages`]:
+//!
+//! * an **applied projection** over a closed neighborhood with `h`
+//!   participating members costs `2·(h − 1)` point-to-point messages —
+//!   the initiator collects one parameter vector from each of its
+//!   `h − 1` participating neighbors and broadcasts the average back;
+//! * an **aborted lock-up** contributes **zero** to `messages` — it is
+//!   reported separately as a `conflict` (control-plane lock traffic is
+//!   not data-plane vector transfer);
+//! * **gradient steps** are purely local and cost nothing.
+
+use crate::coordinator::backend::EvalBatch;
+use crate::data::Dataset;
+use crate::metrics::Record;
+use crate::objective::Objective;
+use crate::util::rng::Xoshiro256pp;
+
+/// Point-to-point messages charged for one applied Eq. (7) projection
+/// over `participants` closed-neighborhood members (collect +
+/// broadcast; see the module docs for the full convention).
+#[inline]
+pub fn projection_messages(participants: usize) -> u64 {
+    debug_assert!(participants >= 1);
+    2 * (participants as u64 - 1)
+}
+
+/// One Eq. (6) local gradient step: draw a uniform sample from `data`
+/// on `rng`, then apply `objective`'s subgradient update
+/// `w ← w − lr·scale·∇f` in place. Returns the sample loss.
+///
+/// This is the only gradient-step call site the engines and baselines
+/// use; the RNG call order (one `index` draw, then the step) is part of
+/// the contract so seeded runs stay reproducible across refactors.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_step(
+    objective: Objective,
+    w: &mut Vec<f32>,
+    data: &Dataset,
+    rng: &mut Xoshiro256pp,
+    dim: usize,
+    classes: usize,
+    lr: f32,
+    scale: f32,
+) -> f32 {
+    let idx = rng.index(data.len());
+    let s = data.sample(idx);
+    objective.native_step(w, s.features, &[s.label], dim, classes, lr, scale)
+}
+
+/// The Eq. (7) projection onto B_m: the closed neighborhood moves to
+/// its unweighted average. The single place the projection math lives.
+pub fn neighborhood_average(rows: &[&[f32]]) -> Vec<f32> {
+    crate::linalg::mean_of(rows)
+}
+
+/// What a firing node decided to do this event (Alg. 2 line 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Gradient step on the node's own variable (w.p. `p_grad`).
+    Grad,
+    /// Eq. (7) projection over the closed neighborhood.
+    Project,
+}
+
+/// The per-node Alg. 2 state machine: everything a node decides locally
+/// — when it fires, what it does, which sample it draws, how its
+/// variable moves — with *communication* left to a
+/// [`Transport`](crate::transport::Transport) or driver.
+///
+/// Owns the node's data shard and private RNG stream, so engines stay
+/// bit-for-bit reproducible: all randomness a node consumes flows
+/// through this struct in a fixed call order.
+#[derive(Clone, Debug)]
+pub struct NodeLogic {
+    pub id: usize,
+    objective: Objective,
+    p_grad: f64,
+    data: Dataset,
+    dim: usize,
+    classes: usize,
+    /// Eq. (6) gradient scale (1/N).
+    scale: f32,
+    /// The node's private randomness (firing clock, action draw,
+    /// sample selection).
+    pub rng: Xoshiro256pp,
+}
+
+impl NodeLogic {
+    pub fn new(
+        id: usize,
+        objective: Objective,
+        p_grad: f64,
+        data: Dataset,
+        n_nodes: usize,
+        rng: Xoshiro256pp,
+    ) -> Self {
+        assert!(!data.is_empty(), "node {id} has no local data");
+        assert!((0.0..=1.0).contains(&p_grad));
+        let dim = data.dim();
+        let classes = data.classes();
+        Self {
+            id,
+            objective,
+            p_grad,
+            data,
+            dim,
+            classes,
+            scale: 1.0 / n_nodes as f32,
+            rng,
+        }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Length of this node's flat parameter vector β_i.
+    pub fn param_len(&self) -> usize {
+        self.objective.param_len(self.dim, self.classes)
+    }
+
+    /// Continuous-time §IV-A clock: seconds until this node's next
+    /// firing at `rate_hz` events/second.
+    pub fn wait_secs(&mut self, rate_hz: f64) -> f64 {
+        self.rng.exponential(rate_hz.max(1e-9))
+    }
+
+    /// Alg. 2 line 3: gradient step w.p. `p_grad`, else projection.
+    pub fn draw_action(&mut self) -> Action {
+        if self.rng.next_f64() < self.p_grad {
+            Action::Grad
+        } else {
+            Action::Project
+        }
+    }
+
+    /// Draw the index of this event's training sample (the PJRT path
+    /// stages inputs itself and needs the draw separated from the step).
+    pub fn draw_index(&mut self) -> usize {
+        self.rng.index(self.data.len())
+    }
+
+    /// One native Eq. (6) gradient step on `w` (draws the sample
+    /// internally — same RNG order as [`sgd_step`]).
+    pub fn native_grad_step(&mut self, w: &mut Vec<f32>, lr: f32) -> f32 {
+        sgd_step(
+            self.objective,
+            w,
+            &self.data,
+            &mut self.rng,
+            self.dim,
+            self.classes,
+            lr,
+            self.scale,
+        )
+    }
+
+    /// The Eq. (6) scale factor (1/N) this node applies.
+    pub fn grad_scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+/// Cumulative per-engine counters in the canonical accounting
+/// convention (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub grad_steps: u64,
+    pub proj_steps: u64,
+    /// Data-plane messages: `2·(h−1)` per applied projection.
+    pub messages: u64,
+    /// Aborted lock-ups / simultaneous-firing collisions.
+    pub conflicts: u64,
+}
+
+impl Counts {
+    /// Applied updates (the paper's iteration counter k).
+    pub fn updates(&self) -> u64 {
+        self.grad_steps + self.proj_steps
+    }
+}
+
+/// The shared evaluate-and-snapshot path: owns the held-out
+/// [`EvalBatch`] in the objective's encoding and turns engine state
+/// into [`Record`]s, so no engine carries its own eval/snapshot code.
+#[derive(Clone, Debug)]
+pub struct Probe {
+    objective: Objective,
+    batch: EvalBatch,
+}
+
+impl Probe {
+    pub fn new(objective: Objective, test: &Dataset) -> Self {
+        Self {
+            objective,
+            batch: EvalBatch::for_objective(objective, test, None),
+        }
+    }
+
+    /// `(loss, err)` of `w` on the held-out batch (native math).
+    pub fn eval(&self, w: &[f32]) -> (f32, f32) {
+        self.batch.eval(self.objective, w)
+    }
+
+    /// Full-scan snapshot: exact d^k consensus + metrics at β̄.
+    pub fn snapshot(&self, k: u64, time_secs: f64, params: &[Vec<f32>], c: &Counts) -> Record {
+        let mean = crate::coordinator::consensus::mean_param(params);
+        let consensus = crate::coordinator::consensus::consensus_distance(params);
+        self.snapshot_at(k, time_secs, &mean, consensus, c)
+    }
+
+    /// Snapshot at a precomputed mean / consensus value (the
+    /// incremental path for simulations too large to scan).
+    pub fn snapshot_at(
+        &self,
+        k: u64,
+        time_secs: f64,
+        mean: &[f32],
+        consensus: f64,
+        c: &Counts,
+    ) -> Record {
+        let (loss, err) = self.eval(mean);
+        Record {
+            k,
+            time_secs,
+            consensus,
+            test_loss: loss as f64,
+            test_err: err as f64,
+            grad_steps: c.grad_steps,
+            proj_steps: c.proj_steps,
+            messages: c.messages,
+            conflicts: c.conflicts,
+        }
+    }
+}
+
+/// Incremental consensus aggregates: maintains S = Σ_i β_i and
+/// Q = Σ_i ‖β_i‖² under point updates, so a snapshot costs O(dim)
+/// instead of O(n·dim).
+///
+/// The residual reported is the L2 (Frobenius) consensus residual
+/// `sqrt(Σ_i ‖β_i − β̄‖²) = sqrt(Q − ‖S‖²/n)` — a lower bound on the
+/// paper's d^k = Σ_i ‖β_i − β̄‖ (they agree at 0, i.e. at consensus).
+/// Engines that can afford a full scan report exact d^k; the 10k-node
+/// simulator reports this residual and documents it.
+#[derive(Clone, Debug)]
+pub struct ConsensusTracker {
+    n: usize,
+    sum: Vec<f64>,
+    sumsq: f64,
+}
+
+impl ConsensusTracker {
+    /// Tracker for `n` nodes all starting at the zero vector.
+    pub fn new(n: usize, param_len: usize) -> Self {
+        assert!(n > 0);
+        Self {
+            n,
+            sum: vec![0.0; param_len],
+            sumsq: 0.0,
+        }
+    }
+
+    /// Add one node's contribution (call after its variable changes).
+    pub fn add(&mut self, w: &[f32]) {
+        debug_assert_eq!(w.len(), self.sum.len());
+        let mut q = 0.0f64;
+        for (s, &v) in self.sum.iter_mut().zip(w) {
+            let v = v as f64;
+            *s += v;
+            q += v * v;
+        }
+        self.sumsq += q;
+    }
+
+    /// Remove one node's contribution (call before its variable
+    /// changes). Exact inverse of [`ConsensusTracker::add`] in f64.
+    pub fn sub(&mut self, w: &[f32]) {
+        debug_assert_eq!(w.len(), self.sum.len());
+        let mut q = 0.0f64;
+        for (s, &v) in self.sum.iter_mut().zip(w) {
+            let v = v as f64;
+            *s -= v;
+            q += v * v;
+        }
+        self.sumsq -= q;
+    }
+
+    /// β̄ = S/n.
+    pub fn mean(&self) -> Vec<f32> {
+        let n = self.n as f64;
+        self.sum.iter().map(|&s| (s / n) as f32).collect()
+    }
+
+    /// The L2 consensus residual `sqrt(max(0, Q − ‖S‖²/n))`.
+    pub fn residual(&self) -> f64 {
+        let norm_sq: f64 = self.sum.iter().map(|&s| s * s).sum();
+        (self.sumsq - norm_sq / self.n as f64).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGen;
+
+    fn shard(seed: u64) -> Dataset {
+        let gen = SyntheticGen::new(4, 10, 4, 2.0, 0.5, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed);
+        gen.node_dataset(0, 40, &mut rng)
+    }
+
+    #[test]
+    fn accounting_convention() {
+        // Closed neighborhood of 5 (self + 4): collect 4 + broadcast 4.
+        assert_eq!(projection_messages(5), 8);
+        assert_eq!(projection_messages(1), 0);
+    }
+
+    #[test]
+    fn sgd_step_matches_manual_rng_order() {
+        // The contract: exactly one index draw, then the objective step.
+        let data = shard(3);
+        let obj = Objective::LogReg;
+        let (dim, classes) = (data.dim(), data.classes());
+        let mut w1 = vec![0.0f32; obj.param_len(dim, classes)];
+        let mut w2 = w1.clone();
+        let mut r1 = Xoshiro256pp::seeded(7);
+        let mut r2 = Xoshiro256pp::seeded(7);
+        let l1 = sgd_step(obj, &mut w1, &data, &mut r1, dim, classes, 0.3, 0.5);
+        let idx = r2.index(data.len());
+        let s = data.sample(idx);
+        let l2 = obj.native_step(&mut w2, s.features, &[s.label], dim, classes, 0.3, 0.5);
+        assert_eq!(w1, w2);
+        assert_eq!(l1, l2);
+        // Both RNGs advanced identically.
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn node_logic_draws_follow_p_grad() {
+        let mut logic = NodeLogic::new(
+            0,
+            Objective::LogReg,
+            0.7,
+            shard(5),
+            8,
+            Xoshiro256pp::seeded(11),
+        );
+        let grads = (0..4000)
+            .filter(|_| logic.draw_action() == Action::Grad)
+            .count();
+        let frac = grads as f64 / 4000.0;
+        assert!((frac - 0.7).abs() < 0.05, "grad fraction {frac}");
+        assert!((logic.grad_scale() - 1.0 / 8.0).abs() < 1e-7);
+        assert_eq!(logic.param_len(), 10 * 4);
+    }
+
+    #[test]
+    fn native_grad_step_moves_weights() {
+        let mut logic = NodeLogic::new(
+            0,
+            Objective::LogReg,
+            0.5,
+            shard(9),
+            4,
+            Xoshiro256pp::seeded(2),
+        );
+        let mut w = vec![0.0f32; logic.param_len()];
+        let loss = logic.native_grad_step(&mut w, 1.0);
+        assert!(loss > 0.0);
+        assert!(w.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn tracker_matches_full_scan() {
+        let params: Vec<Vec<f32>> = vec![
+            vec![1.0, 2.0],
+            vec![-1.0, 0.5],
+            vec![3.0, -2.0],
+        ];
+        let mut t = ConsensusTracker::new(3, 2);
+        for p in &params {
+            t.add(p);
+        }
+        // Mean matches.
+        let mean = crate::coordinator::consensus::mean_param(&params);
+        for (a, b) in t.mean().iter().zip(&mean) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // Residual = sqrt(Σ‖β_i − β̄‖²), computed by hand.
+        let expect: f64 = params
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .zip(&mean)
+                    .map(|(&v, &m)| (v as f64 - m as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!((t.residual() - expect).abs() < 1e-9);
+        // sub is the exact inverse of add.
+        let mut t2 = t.clone();
+        t2.sub(&params[1]);
+        t2.add(&params[1]);
+        assert!((t2.residual() - t.residual()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_zero_at_consensus() {
+        let mut t = ConsensusTracker::new(4, 3);
+        for _ in 0..4 {
+            t.add(&[2.0, -1.0, 0.5]);
+        }
+        assert!(t.residual() < 1e-9);
+    }
+
+    #[test]
+    fn probe_snapshot_fields() {
+        let gen = SyntheticGen::new(2, 10, 4, 2.0, 0.5, 0.3, 1);
+        let mut rng = Xoshiro256pp::seeded(1);
+        let test = gen.global_test_set(50, &mut rng);
+        let probe = Probe::new(Objective::LogReg, &test);
+        let params = vec![vec![0.0f32; 40]; 3];
+        let c = Counts {
+            grad_steps: 5,
+            proj_steps: 2,
+            messages: 8,
+            conflicts: 1,
+        };
+        let r = probe.snapshot(7, 1.5, &params, &c);
+        assert_eq!(r.k, 7);
+        assert_eq!(r.grad_steps, 5);
+        assert_eq!(r.messages, 8);
+        assert!(r.consensus < 1e-9); // all-equal params
+        assert!(r.test_err > 0.0 && r.test_err <= 1.0);
+        assert_eq!(c.updates(), 7);
+    }
+}

@@ -300,23 +300,42 @@ impl Objective {
         }
     }
 
-    /// Name of the fixed-shape PJRT eval artifact, when one is compiled
-    /// (only logreg has one; hinge/lasso evaluate natively).
+    /// Name of the fixed-shape PJRT eval artifact. Every family has one:
+    /// logreg per shape family, hinge/lasso in their single compiled
+    /// shape (256 rows × 50 features, parameters (1, 50)).
     pub fn pjrt_eval_artifact(&self, family: &str) -> Option<String> {
         match self {
             Objective::LogReg => Some(format!("logreg_eval_{family}")),
-            _ => None,
+            Objective::Hinge { .. } => Some("hinge_eval".to_string()),
+            Objective::Lasso { .. } => Some("lasso_eval".to_string()),
         }
     }
 
-    /// Name of the stacked-parameter gossip artifact, when its shape
-    /// matches this objective's parameter length (the compiled gossip
-    /// stacks are (16, dim·classes); hinge/lasso parameters are (dim),
-    /// so they average natively).
+    /// Name of the stacked-parameter gossip artifact matching this
+    /// objective's parameter length: (16, dim·classes) stacks for
+    /// logreg, the (16, 50) stack for the (dim)-shaped hinge/lasso
+    /// parameters.
     pub fn pjrt_gossip_artifact(&self, family: &str) -> Option<String> {
         match self {
             Objective::LogReg => Some(format!("gossip_avg_{family}")),
-            _ => None,
+            Objective::Hinge { .. } | Objective::Lasso { .. } => {
+                Some("gossip_avg_dim50".to_string())
+            }
+        }
+    }
+
+    /// Turn the two scalar outputs of this objective's eval artifact
+    /// into the `(loss, err)` pair [`Objective::native_eval`] reports.
+    ///
+    /// Every eval artifact returns `(loss_sum, err_sum)` over its fixed
+    /// `n` rows; the error reduction is objective-defined — a count of
+    /// misclassifications for logreg/hinge (mean = error rate), a sum
+    /// of squared residuals for lasso (mean → RMSE).
+    pub fn pjrt_eval_outputs(&self, loss_sum: f32, err_sum: f32, n: usize) -> (f32, f32) {
+        let n = n as f32;
+        match self {
+            Objective::LogReg | Objective::Hinge { .. } => (loss_sum / n, err_sum / n),
+            Objective::Lasso { .. } => (loss_sum / n, (err_sum / n).sqrt()),
         }
     }
 }
@@ -468,7 +487,27 @@ mod tests {
             Objective::LogReg.pjrt_eval_artifact("notmnist").as_deref(),
             Some("logreg_eval_notmnist")
         );
-        assert_eq!(Objective::lasso().pjrt_eval_artifact("synth"), None);
-        assert_eq!(Objective::lasso().pjrt_gossip_artifact("synth"), None);
+        assert_eq!(
+            Objective::lasso().pjrt_eval_artifact("synth").as_deref(),
+            Some("lasso_eval")
+        );
+        assert_eq!(
+            Objective::hinge().pjrt_eval_artifact("synth").as_deref(),
+            Some("hinge_eval")
+        );
+        assert_eq!(
+            Objective::lasso().pjrt_gossip_artifact("synth").as_deref(),
+            Some("gossip_avg_dim50")
+        );
+    }
+
+    #[test]
+    fn pjrt_eval_output_reduction() {
+        // logreg/hinge: (mean loss, error rate); lasso: (mean loss, RMSE).
+        let (l, e) = Objective::hinge().pjrt_eval_outputs(128.0, 64.0, 256);
+        assert!((l - 0.5).abs() < 1e-6);
+        assert!((e - 0.25).abs() < 1e-6);
+        let (_, rmse) = Objective::lasso().pjrt_eval_outputs(10.0, 4.0, 4);
+        assert!((rmse - 1.0).abs() < 1e-6);
     }
 }

@@ -5,12 +5,19 @@
 //! The simulator charges every operation a virtual cost drawn from a
 //! per-node speed model and advances an event queue; no wall-clock
 //! sleeping is involved, so large straggler ratios are cheap to study.
+//!
+//! The engine is the event-driven [`simnet_run`] driver over a
+//! [`SimNet`](crate::transport::SimNet) substrate (per-edge latency,
+//! drops, partitions, 10k-node scale); [`virtual_async_run`] is its
+//! ideal-network preset.
 
+mod driver;
 mod event_queue;
 mod speed;
 mod virtual_async;
 
-pub use event_queue::EventQueue;
+pub use driver::{simnet_run, SimConfig, SimReport, EXACT_SCAN_MAX};
+pub use event_queue::{EventQueue, ShardedEventQueue};
 pub use speed::SpeedModel;
 pub use virtual_async::{virtual_async_run, VirtualAsyncConfig, VirtualAsyncReport};
 

@@ -2,15 +2,23 @@
 //! process whose firing interval is its (heterogeneous) compute time.
 //! No barriers means a slow node only slows *its own* updates — the
 //! claim this simulator quantifies against the synchronous baselines.
+//!
+//! Since the transport refactor this is a thin preset over the
+//! event-driven [`simnet_run`](super::simnet_run) driver: an ideal
+//! [`SimNet`](crate::transport::SimNet) (fixed one-way latency, no
+//! drops, no partitions) consuming the same
+//! [`NodeLogic`](crate::node_logic::NodeLogic) as every other engine.
+//! Use [`SimConfig`](super::SimConfig) directly for lossy/partitioned
+//! networks and 10k-node scale.
 
-use crate::coordinator::{consensus, EvalBatch, StepSize};
+use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::graph::Graph;
-use crate::metrics::{Record, Recorder};
+use crate::metrics::Recorder;
 use crate::objective::Objective;
-use crate::util::rng::Xoshiro256pp;
+use crate::transport::SimNetConfig;
 
-use super::{EventQueue, SpeedModel};
+use super::{simnet_run, SimConfig, SpeedModel};
 
 #[derive(Clone, Debug)]
 pub struct VirtualAsyncConfig {
@@ -37,7 +45,7 @@ pub struct VirtualAsyncReport {
     pub messages: u64,
 }
 
-/// Simulate Alg. 2 in virtual time over `speeds`.
+/// Simulate Alg. 2 in virtual time over `speeds` on an ideal network.
 pub fn virtual_async_run(
     g: &Graph,
     shards: &[Dataset],
@@ -45,100 +53,22 @@ pub fn virtual_async_run(
     speeds: &SpeedModel,
     cfg: &VirtualAsyncConfig,
 ) -> VirtualAsyncReport {
-    let n = g.len();
-    assert_eq!(shards.len(), n);
-    assert_eq!(speeds.len(), n);
-    let dim = shards[0].dim();
-    let classes = shards[0].classes();
-    let obj = cfg.objective;
-    let mut root = Xoshiro256pp::seeded(cfg.seed);
-    let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
-    let mut params: Vec<Vec<f32>> = vec![vec![0.0; obj.param_len(dim, classes)]; n];
-
-    let mut queue = EventQueue::new();
-    for i in 0..n {
-        let dt = speeds.sample(i, &mut rngs[i]);
-        queue.push(dt, i);
-    }
-
-    let test_batch = EvalBatch::for_objective(obj, test, None);
-    let mut rec = Recorder::new("virtual_async");
-    let mut k = 0u64;
-    let mut grad_steps = 0u64;
-    let mut proj_steps = 0u64;
-    let mut messages = 0u64;
-    let mut next_eval = 0.0f64;
-
-    let snap = |t: f64,
-                k: u64,
-                params: &[Vec<f32>],
-                grad_steps: u64,
-                proj_steps: u64,
-                messages: u64,
-                rec: &mut Recorder| {
-        let mean = consensus::mean_param(params);
-        let (loss, err) = test_batch.eval(obj, &mean);
-        rec.push(Record {
-            k,
-            time_secs: t,
-            consensus: consensus::consensus_distance(params),
-            test_loss: loss as f64,
-            test_err: err as f64,
-            grad_steps,
-            proj_steps,
-            messages,
-            ..Default::default()
-        });
+    let sim = SimConfig {
+        p_grad: cfg.p_grad,
+        stepsize: cfg.stepsize,
+        objective: cfg.objective,
+        horizon: cfg.horizon,
+        eval_every: cfg.eval_every,
+        net: SimNetConfig::ideal(cfg.comm_latency),
+        seed: cfg.seed,
     };
-
-    while let Some((t, i)) = queue.pop() {
-        if t > cfg.horizon {
-            break;
-        }
-        while t >= next_eval {
-            snap(next_eval, k, &params, grad_steps, proj_steps, messages, &mut rec);
-            next_eval += cfg.eval_every;
-        }
-        let lr = cfg.stepsize.at(k);
-        let mut op_time = speeds.sample(i, &mut rngs[i]);
-        if rngs[i].next_f64() < cfg.p_grad {
-            // Local gradient step.
-            let idx = rngs[i].index(shards[i].len());
-            let s = shards[i].sample(idx);
-            let mut w = std::mem::take(&mut params[i]);
-            obj.native_step(&mut w, s.features, &[s.label], dim, classes, lr, 1.0 / n as f32);
-            params[i] = w;
-            grad_steps += 1;
-        } else {
-            // Projection: collect + average + broadcast.
-            let hood = g.closed_neighborhood(i);
-            let rows: Vec<&[f32]> = hood.iter().map(|&j| params[j].as_slice()).collect();
-            let avg = crate::linalg::mean_of(&rows);
-            for &j in &hood {
-                params[j].copy_from_slice(&avg);
-            }
-            messages += 2 * (hood.len() as u64 - 1);
-            op_time += 2.0 * cfg.comm_latency;
-            proj_steps += 1;
-        }
-        k += 1;
-        queue.push(t + op_time, i);
-    }
-    snap(
-        cfg.horizon,
-        k,
-        &params,
-        grad_steps,
-        proj_steps,
-        messages,
-        &mut rec,
-    );
+    let rep = simnet_run(g, shards, test, speeds, &sim);
     VirtualAsyncReport {
-        recorder: rec,
-        updates: k,
-        grad_steps,
-        proj_steps,
-        messages,
+        recorder: rep.recorder,
+        updates: rep.updates,
+        grad_steps: rep.grad_steps,
+        proj_steps: rep.proj_steps,
+        messages: rep.messages,
     }
 }
 
@@ -147,6 +77,7 @@ mod tests {
     use super::*;
     use crate::data::SyntheticGen;
     use crate::graph::regular_circulant;
+    use crate::util::rng::Xoshiro256pp;
 
     fn setup(n: usize) -> (Graph, Vec<Dataset>, Dataset) {
         let gen = SyntheticGen::new(n, 10, 4, 2.5, 0.4, 0.3, 31);

@@ -1,0 +1,448 @@
+//! Message-passing substrate: per-node mailboxes, no shared parameter
+//! memory — the shape of a real deployment.
+//!
+//! A projection is a token-stamped protocol round:
+//!
+//! ```text
+//! initiator                 each closed-neighborhood member
+//! ---------                 --------------------------------
+//! Collect{token}  ───────▶  free?  ──yes──▶ lock to token, Params{w}
+//!                                 ──no───▶ Busy{token}
+//! (all Params)    ───────▶  Apply{token, avg}   (unlock, adopt avg)
+//! (any Busy/timeout) ────▶  Release{token}      (unlock, keep w)
+//! ```
+//!
+//! The Busy reply is the §IV-C lock-up expressed as messages: a member
+//! that is itself initiating (or already captured by another round)
+//! refuses, and the initiator backs off — a counted conflict. Every
+//! wait is deadline-bounded and initiators keep serving their own
+//! mailbox while waiting, so no two rounds can block each other:
+//! the protocol is abort-based, like the sorted try-lock it mirrors.
+//!
+//! A member is *captured* between `Params` and `Apply`/`Release`; the
+//! node loop checks [`Transport::busy`] before acting so a captured
+//! variable is not updated mid-round. Captures are *leased*: if the
+//! initiator dies before its `Apply`/`Release` arrives (so neither
+//! ever will), the member drops the capture after a multiple of the
+//! round timeout instead of staying pinned for the rest of the run. (The residual race — a gradient
+//! step slipping in just as the capture lands — is resolved by the
+//! `Apply` overwrite, the same "late update ignored" semantics a real
+//! asynchronous deployment exhibits.)
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{ProjectionOutcome, Transport};
+
+enum Msg {
+    Collect { from: usize, token: u64 },
+    Params { from: usize, token: u64, w: Vec<f32> },
+    Busy { token: u64 },
+    Apply { from: usize, token: u64, w: Vec<f32> },
+    Release { from: usize, token: u64 },
+}
+
+struct Slot {
+    w: Vec<f32>,
+    /// `Some((initiator, token))` while captured by an in-flight round.
+    locked_by: Option<(usize, u64)>,
+    /// When the capture was granted — captures expire after a lease so
+    /// a dead initiator can never pin a member forever.
+    locked_at: Option<Instant>,
+    /// True while this node is itself running a collect round.
+    initiating: bool,
+}
+
+/// Reply state of an in-flight collect round.
+struct Round {
+    token: u64,
+    replies: Vec<(usize, Vec<f32>)>,
+    busy: bool,
+}
+
+/// Mailbox-based message-passing transport.
+pub struct ChannelNet {
+    slots: Vec<Mutex<Slot>>,
+    inboxes: Vec<Mutex<VecDeque<Msg>>>,
+    next_token: AtomicU64,
+    /// Deadline for one collect round (covers a peer's longest sleep
+    /// between mailbox polls).
+    timeout: Duration,
+    /// Member-side capture lease: a granted lock self-expires after
+    /// this long, so a crashed initiator (whose Release will never
+    /// arrive) cannot pin a member for the rest of the run. Must
+    /// comfortably exceed `timeout` plus any projection hold time.
+    lease: Duration,
+}
+
+impl ChannelNet {
+    /// `n` nodes at the zero vector; `timeout` bounds one collect round.
+    /// The capture lease assumes no projection hold — use
+    /// [`ChannelNet::with_round_budget`] when rounds sleep across a
+    /// modeled RTT.
+    pub fn new(n: usize, param_len: usize, timeout: Duration) -> Self {
+        Self::with_round_budget(n, param_len, timeout, Duration::ZERO)
+    }
+
+    /// Like [`ChannelNet::new`], but sizes the capture lease to cover
+    /// rounds that hold their captures across `hold` (the modeled
+    /// collect/broadcast RTT): a member must not expire a capture while
+    /// a healthy initiator is still mid-round.
+    pub fn with_round_budget(
+        n: usize,
+        param_len: usize,
+        timeout: Duration,
+        hold: Duration,
+    ) -> Self {
+        Self {
+            slots: (0..n)
+                .map(|_| {
+                    Mutex::new(Slot {
+                        w: vec![0.0f32; param_len],
+                        locked_by: None,
+                        locked_at: None,
+                        initiating: false,
+                    })
+                })
+                .collect(),
+            inboxes: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            next_token: AtomicU64::new(1),
+            timeout,
+            lease: timeout
+                .saturating_mul(4)
+                .max(Duration::from_millis(20))
+                .saturating_add(hold.saturating_mul(2)),
+        }
+    }
+
+    /// Drop a capture whose lease ran out (dead initiator). A late
+    /// `Apply` for the expired token is ignored by the token check —
+    /// the member simply keeps its value, the usual abort semantics.
+    fn expire_stale_capture(&self, id: usize) {
+        let mut slot = self.slots[id].lock().unwrap();
+        if slot.locked_by.is_some()
+            && slot
+                .locked_at
+                .map(|t| t.elapsed() > self.lease)
+                .unwrap_or(false)
+        {
+            slot.locked_by = None;
+            slot.locked_at = None;
+        }
+    }
+
+    /// Default round deadline: comfortably above the node loop's 50 ms
+    /// maximum inter-poll sleep.
+    pub fn with_default_timeout(n: usize, param_len: usize) -> Self {
+        Self::new(n, param_len, Duration::from_millis(100))
+    }
+
+    fn send(&self, to: usize, msg: Msg) {
+        self.inboxes[to].lock().unwrap().push_back(msg);
+    }
+
+    fn recv(&self, id: usize) -> Option<Msg> {
+        self.inboxes[id].lock().unwrap().pop_front()
+    }
+
+    /// Process one inbound message for `id`. `round` is the in-flight
+    /// collect state when `id` is currently initiating.
+    fn handle(&self, id: usize, msg: Msg, round: &mut Option<&mut Round>) {
+        match msg {
+            Msg::Collect { from, token } => {
+                let reply = {
+                    let mut slot = self.slots[id].lock().unwrap();
+                    if slot.initiating || slot.locked_by.is_some() {
+                        None
+                    } else {
+                        slot.locked_by = Some((from, token));
+                        slot.locked_at = Some(Instant::now());
+                        Some(slot.w.clone())
+                    }
+                };
+                match reply {
+                    Some(w) => self.send(from, Msg::Params { from: id, token, w }),
+                    None => self.send(from, Msg::Busy { token }),
+                }
+            }
+            Msg::Params { from, token, w } => match round {
+                Some(r) if r.token == token => r.replies.push((from, w)),
+                // Stale reply (we already gave up on that round): the
+                // sender is still captured by our dead token — free it.
+                _ => self.send(from, Msg::Release { from: id, token }),
+            },
+            Msg::Busy { token } => {
+                if let Some(r) = round {
+                    if r.token == token {
+                        r.busy = true;
+                    }
+                }
+            }
+            Msg::Apply { from, token, w } => {
+                let mut slot = self.slots[id].lock().unwrap();
+                if slot.locked_by == Some((from, token)) {
+                    slot.w = w;
+                    slot.locked_by = None;
+                    slot.locked_at = None;
+                }
+            }
+            Msg::Release { from, token } => {
+                let mut slot = self.slots[id].lock().unwrap();
+                if slot.locked_by == Some((from, token)) {
+                    slot.locked_by = None;
+                    slot.locked_at = None;
+                }
+            }
+        }
+    }
+
+    fn drain(&self, id: usize, mut round: Option<&mut Round>) {
+        while let Some(msg) = self.recv(id) {
+            self.handle(id, msg, &mut round);
+        }
+    }
+}
+
+impl Transport for ChannelNet {
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>)) {
+        let mut slot = self.slots[id].lock().unwrap();
+        f(&mut slot.w);
+    }
+
+    fn busy(&self, id: usize) -> bool {
+        self.expire_stale_capture(id);
+        self.slots[id].lock().unwrap().locked_by.is_some()
+    }
+
+    fn poll(&self, id: usize) {
+        self.expire_stale_capture(id);
+        self.drain(id, None);
+    }
+
+    fn try_project(
+        &self,
+        id: usize,
+        hood: &[usize],
+        hold: Duration,
+        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+    ) -> ProjectionOutcome {
+        debug_assert!(hood.contains(&id));
+        if hood.len() < 2 {
+            return ProjectionOutcome::Isolated;
+        }
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        // Mark ourselves initiating (refusing inbound Collects) and take
+        // our own row. If we are already captured, this round loses.
+        let own = {
+            let mut slot = self.slots[id].lock().unwrap();
+            if slot.locked_by.is_some() {
+                return ProjectionOutcome::Conflict;
+            }
+            slot.initiating = true;
+            slot.w.clone()
+        };
+        let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
+        for &j in &peers {
+            self.send(j, Msg::Collect { from: id, token });
+        }
+        let mut round = Round {
+            token,
+            replies: Vec::with_capacity(peers.len()),
+            busy: false,
+        };
+        let deadline = Instant::now() + self.timeout;
+        while round.replies.len() < peers.len() && !round.busy {
+            self.drain(id, Some(&mut round));
+            if round.replies.len() >= peers.len() || round.busy {
+                break;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let complete = round.replies.len() == peers.len() && !round.busy;
+        if !complete {
+            // Abort: free everyone who granted us their variable.
+            for (from, _) in &round.replies {
+                self.send(*from, Msg::Release { from: id, token });
+            }
+            self.slots[id].lock().unwrap().initiating = false;
+            return ProjectionOutcome::Conflict;
+        }
+        // Hold across the modeled RTT, like a real round in flight.
+        if hold > Duration::ZERO {
+            std::thread::sleep(hold);
+        }
+        // Average in hood order (self row in place of `id`).
+        let rows: Vec<&[f32]> = hood
+            .iter()
+            .map(|&j| {
+                if j == id {
+                    own.as_slice()
+                } else {
+                    round
+                        .replies
+                        .iter()
+                        .find(|(from, _)| *from == j)
+                        .map(|(_, w)| w.as_slice())
+                        .expect("complete round has every peer's reply")
+                }
+            })
+            .collect();
+        let mean = avg(&rows);
+        for &j in &peers {
+            self.send(
+                j,
+                Msg::Apply {
+                    from: id,
+                    token,
+                    w: mean.clone(),
+                },
+            );
+        }
+        let mut slot = self.slots[id].lock().unwrap();
+        slot.w = mean;
+        slot.initiating = false;
+        ProjectionOutcome::Applied {
+            participants: hood.len(),
+        }
+    }
+
+    fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.slots
+            .iter()
+            .map(|s| s.lock().unwrap().w.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node_logic::neighborhood_average;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    /// Spawn poll pumps for `ids` so a single test thread can drive
+    /// projections (peers must answer Collect requests).
+    fn with_pumps<R>(
+        net: &Arc<ChannelNet>,
+        ids: &[usize],
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps: Vec<_> = ids
+            .iter()
+            .map(|&j| {
+                let net = Arc::clone(net);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        net.poll(j);
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                })
+            })
+            .collect();
+        let out = f();
+        stop.store(true, Ordering::Relaxed);
+        for p in pumps {
+            p.join().unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn collect_average_apply_roundtrip() {
+        let net = Arc::new(ChannelNet::with_default_timeout(3, 2));
+        net.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
+        net.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
+        let out = with_pumps(&net, &[0, 2], || {
+            net.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
+                neighborhood_average(rows)
+            })
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+        // Peers adopt the average once they poll their Apply.
+        net.poll(0);
+        net.poll(2);
+        for w in net.snapshot() {
+            assert_eq!(w, vec![1.0, 2.0]);
+        }
+        assert!(!net.busy(0) && !net.busy(2));
+    }
+
+    #[test]
+    fn unresponsive_peer_times_out_as_conflict() {
+        // Node 1 never polls: the round must abort, not hang.
+        let net = ChannelNet::new(2, 1, Duration::from_millis(5));
+        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Conflict);
+        // The initiator is free again afterwards.
+        assert!(!net.busy(0));
+    }
+
+    #[test]
+    fn captured_member_refuses_second_round() {
+        let net = Arc::new(ChannelNet::new(3, 1, Duration::from_millis(5)));
+        // Capture node 1 by hand: deliver a Collect and let it grant.
+        net.send(1, Msg::Collect { from: 2, token: 99 });
+        net.poll(1);
+        assert!(net.busy(1));
+        // A projection over {0, 1} must now abort with Busy.
+        let out = with_pumps(&net, &[1], || {
+            net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
+                neighborhood_average(rows)
+            })
+        });
+        assert_eq!(out, ProjectionOutcome::Conflict);
+        // Releasing token 99 frees the member.
+        net.send(1, Msg::Release { from: 2, token: 99 });
+        net.poll(1);
+        assert!(!net.busy(1));
+    }
+
+    #[test]
+    fn capture_lease_expires_when_initiator_dies() {
+        // A Collect is granted, then the initiator vanishes: neither
+        // Apply nor Release will ever arrive. The lease must free the
+        // member on its own next poll.
+        let net = ChannelNet::new(2, 1, Duration::from_millis(1));
+        net.send(1, Msg::Collect { from: 0, token: 42 });
+        net.poll(1);
+        assert!(net.busy(1));
+        std::thread::sleep(net.lease + Duration::from_millis(5));
+        assert!(!net.busy(1), "lease should expire a dead capture");
+        // A late Apply for the expired token is ignored.
+        net.send(1, Msg::Apply { from: 0, token: 42, w: vec![9.0] });
+        net.poll(1);
+        assert_eq!(net.snapshot()[1], vec![0.0]);
+    }
+
+    #[test]
+    fn stale_params_reply_gets_released() {
+        let net = ChannelNet::new(2, 1, Duration::from_millis(1));
+        // Round times out (peer silent)...
+        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Conflict);
+        // ...then the peer wakes up, grants the stale Collect, and is
+        // captured by a dead token.
+        net.poll(1);
+        assert!(net.busy(1));
+        // The initiator's next poll sees the stale Params and frees it.
+        net.poll(0);
+        net.poll(1);
+        assert!(!net.busy(1));
+    }
+}

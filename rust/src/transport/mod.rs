@@ -1,0 +1,135 @@
+//! Communication substrates for the networked system.
+//!
+//! Alg. 2 needs exactly two communication primitives: update your own
+//! variable (Eq. 6) and atomically average your closed neighborhood
+//! (Eq. 7 behind the §IV-C lock-up). [`Transport`] abstracts them so
+//! one [`NodeLogic`](crate::node_logic::NodeLogic) definition runs on
+//! interchangeable substrates:
+//!
+//! * [`SharedMem`] — per-node `Mutex<Vec<f32>>` with sorted try-lock
+//!   lock-up: the in-process wall-clock substrate the threaded runtime
+//!   has always used (behavior preserved bit-for-bit where seeds allow).
+//! * [`ChannelNet`] — message-passing collect/broadcast over per-node
+//!   mailboxes: the shape of a real deployment (no shared parameter
+//!   memory; a projection is a token-stamped collect → average → apply
+//!   protocol with busy/abort replies standing in for the lock-up).
+//! * [`SimNet`] — the virtual-time substrate for the discrete-event
+//!   driver: configurable per-edge latency distributions, message drop
+//!   probability, and partition schedules, with incremental parameter
+//!   materialization and O(dim) consensus aggregates so 10,000+ node
+//!   systems simulate in seconds.
+
+mod channel;
+mod shared_mem;
+mod simnet;
+
+pub use channel::ChannelNet;
+pub use shared_mem::SharedMem;
+pub use simnet::{LatencyModel, PartitionWindow, SimNet, SimNetConfig};
+
+/// Outcome of one §IV-C lock-up + Eq. (7) projection attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionOutcome {
+    /// The average was applied over `participants` closed-neighborhood
+    /// members (initiator included).
+    Applied { participants: usize },
+    /// The neighborhood was busy (or unreachable mid-protocol): the
+    /// initiator backed off. A counted conflict; no data-plane messages.
+    Conflict,
+    /// Fewer than 2 members were reachable — nothing to average with.
+    Isolated,
+}
+
+/// A communication substrate the Alg. 2 engines drive.
+///
+/// Implementations must be safe to call from many node threads at once
+/// (the wall-clock runtime) and from a single-threaded event driver
+/// (the simulator).
+pub trait Transport: Send + Sync {
+    /// Number of nodes.
+    fn len(&self) -> usize;
+
+    /// True when no nodes exist (trait hygiene; engines never build
+    /// empty systems).
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Apply `f` to node `id`'s own parameter vector (an Eq. (6)
+    /// gradient step). Never blocks on other nodes' variables.
+    fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>));
+
+    /// Attempt an atomic Eq. (7) projection over `hood` (the sorted
+    /// closed neighborhood of `id`, liveness-filtered by the caller).
+    /// On success the substrate gathers the members' vectors, passes
+    /// them to `avg`, holds the gathered state for `hold` (a modeled
+    /// network round-trip, wall-clock substrates only), and writes the
+    /// average back to every member.
+    fn try_project(
+        &self,
+        id: usize,
+        hood: &[usize],
+        hold: std::time::Duration,
+        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+    ) -> ProjectionOutcome;
+
+    /// True while node `id` is captured by a neighbor's in-flight
+    /// projection and must not update its variable (message-passing
+    /// substrates; shared memory resolves this with the lock itself).
+    fn busy(&self, _id: usize) -> bool {
+        false
+    }
+
+    /// Service node `id`'s inbound protocol traffic (no-op for
+    /// substrates without mailboxes). Wall-clock node loops call this
+    /// every iteration.
+    fn poll(&self, _id: usize) {}
+
+    /// Monitor-side copy of every node's current parameters.
+    fn snapshot(&self) -> Vec<Vec<f32>>;
+}
+
+/// Which substrate the wall-clock threaded runtime runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process shared memory (sorted try-lock mutexes).
+    #[default]
+    SharedMem,
+    /// Message-passing mailboxes (collect/broadcast protocol).
+    Channel,
+}
+
+impl TransportKind {
+    /// CLI names.
+    pub const NAMES: [&'static str; 2] = ["shared", "channel"];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "shared" | "shared-mem" | "sharedmem" => Some(TransportKind::SharedMem),
+            "channel" | "channels" => Some(TransportKind::Channel),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::SharedMem => "shared",
+            TransportKind::Channel => "channel",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parse() {
+        assert_eq!(TransportKind::parse("shared"), Some(TransportKind::SharedMem));
+        assert_eq!(TransportKind::parse("channel"), Some(TransportKind::Channel));
+        assert_eq!(TransportKind::parse("udp"), None);
+        for n in TransportKind::NAMES {
+            assert_eq!(TransportKind::parse(n).unwrap().name(), n);
+        }
+    }
+}

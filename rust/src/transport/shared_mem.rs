@@ -1,0 +1,125 @@
+//! Shared-memory substrate: per-node `Mutex<Vec<f32>>` with the §IV-C
+//! lock-up implemented as sorted try-lock acquisition.
+//!
+//! This is the substrate the threaded wall-clock runtime has always
+//! used, extracted behind [`Transport`]. Locks are acquired in sorted
+//! node order and only with `try_lock` — non-blocking, so a busy
+//! neighborhood means *back off and redraw* (a counted conflict), never
+//! a deadlock. The sorted order additionally makes even a blocking
+//! acquisition deadlock-free (no cycle in the wait-for graph can form
+//! when every initiator acquires in a global total order); the property
+//! suite pins that argument.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{ProjectionOutcome, Transport};
+
+/// In-process shared-memory parameter store.
+pub struct SharedMem {
+    params: Vec<Mutex<Vec<f32>>>,
+}
+
+impl SharedMem {
+    /// `n` nodes, each starting at the zero vector of `param_len`.
+    pub fn new(n: usize, param_len: usize) -> Self {
+        Self {
+            params: (0..n).map(|_| Mutex::new(vec![0.0f32; param_len])).collect(),
+        }
+    }
+}
+
+impl Transport for SharedMem {
+    fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>)) {
+        let mut guard = self.params[id].lock().unwrap();
+        f(&mut guard);
+    }
+
+    fn try_project(
+        &self,
+        id: usize,
+        hood: &[usize],
+        hold: Duration,
+        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+    ) -> ProjectionOutcome {
+        debug_assert!(hood.contains(&id));
+        debug_assert!(hood.windows(2).all(|w| w[0] < w[1]), "hood must be sorted");
+        if hood.len() < 2 {
+            return ProjectionOutcome::Isolated;
+        }
+        // §IV-C lock-up: sorted try-lock over the closed neighborhood.
+        let mut guards = Vec::with_capacity(hood.len());
+        for &j in hood {
+            match self.params[j].try_lock() {
+                Ok(g) => guards.push(g),
+                Err(_) => {
+                    // A member is mid-update: release and back off.
+                    drop(guards);
+                    return ProjectionOutcome::Conflict;
+                }
+            }
+        }
+        // Collect + average + broadcast (Eq. 7). A real deployment holds
+        // the locks across the network round-trip.
+        if hold > Duration::ZERO {
+            std::thread::sleep(hold);
+        }
+        let rows: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
+        let mean = avg(&rows);
+        for g in guards.iter_mut() {
+            g.copy_from_slice(&mean);
+        }
+        ProjectionOutcome::Applied {
+            participants: hood.len(),
+        }
+    }
+
+    fn snapshot(&self) -> Vec<Vec<f32>> {
+        self.params.iter().map(|m| m.lock().unwrap().clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node_logic::neighborhood_average;
+
+    #[test]
+    fn update_and_project_roundtrip() {
+        let t = SharedMem::new(3, 2);
+        t.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
+        t.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
+        let out = t.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+        let snap = t.snapshot();
+        for w in &snap {
+            assert_eq!(w, &vec![1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn busy_member_aborts_projection() {
+        let t = SharedMem::new(2, 1);
+        // Hold node 1's lock from "another update".
+        let _held = t.params[1].lock().unwrap();
+        let out = t.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Conflict);
+    }
+
+    #[test]
+    fn singleton_hood_is_isolated() {
+        let t = SharedMem::new(2, 1);
+        let out = t.try_project(0, &[0], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Isolated);
+    }
+}

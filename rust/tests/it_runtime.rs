@@ -36,8 +36,11 @@ fn manifest_lists_all_expected_artifacts() {
         "logreg_eval_notmnist",
         "gossip_avg_synth",
         "gossip_avg_notmnist",
+        "gossip_avg_dim50",
         "hinge_step_b1",
+        "hinge_eval",
         "lasso_step_b1",
+        "lasso_eval",
     ] {
         assert!(engine.has(name), "missing artifact {name}");
     }
@@ -163,6 +166,59 @@ fn hinge_and_lasso_artifacts_match_native() {
         dasgd::model::lasso_step_native(&mut wn, &[&x], &[0.7], 0.05, 1.0, 0.01);
     assert_allclose(&outs[0], &wn, 1e-4, 1e-6).unwrap();
     assert!((outs[1][0] - loss_native).abs() < 1e-4);
+}
+
+#[test]
+fn hinge_lasso_eval_artifacts_match_native() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (d, n) = (50usize, 256usize);
+    let mut rng = Xoshiro256pp::seeded(23);
+    let w: Vec<f32> = (0..d).map(|_| rng.gauss_f32(0.0, 0.5)).collect();
+    let xs: Vec<f32> = (0..n * d).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+    let labels: Vec<usize> = (0..n).map(|_| rng.index(10)).collect();
+    let lam = 0.01f32;
+
+    for obj in [
+        dasgd::objective::Objective::Hinge { lam },
+        dasgd::objective::Objective::Lasso { lam },
+    ] {
+        let targets = obj.encode_targets(&labels, 10);
+        let name = obj.pjrt_eval_artifact("synth").unwrap();
+        let outs = engine
+            .execute_f32(&name, &[&w, &xs, &targets, &[lam]])
+            .unwrap();
+        let (loss, err) = obj.pjrt_eval_outputs(outs[0][0], outs[1][0], n);
+        let (nl, ne) = obj.native_eval(&w, d, 10, &xs, &labels, &targets);
+        assert!(
+            (loss - nl).abs() < 1e-3 * nl.abs().max(1.0),
+            "{obj}: loss hlo={loss} native={nl}"
+        );
+        assert!(
+            (err - ne).abs() < 1e-4,
+            "{obj}: err hlo={err} native={ne}"
+        );
+    }
+}
+
+#[test]
+fn gossip_dim50_artifact_matches_mean() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let (k, m, live) = (50usize, 16usize, 4usize);
+    let mut rng = Xoshiro256pp::seeded(31);
+    let mut p = vec![0.0f32; m * k];
+    for row in 0..live {
+        for j in 0..k {
+            p[row * k + j] = rng.gauss_f32(0.0, 1.0);
+        }
+    }
+    let mut wts = vec![0.0f32; m];
+    for w in wts.iter_mut().take(live) {
+        *w = 1.0 / live as f32;
+    }
+    let outs = engine.execute_f32("gossip_avg_dim50", &[&p, &wts]).unwrap();
+    let rows: Vec<&[f32]> = (0..live).map(|r| &p[r * k..(r + 1) * k]).collect();
+    let expect = dasgd::node_logic::neighborhood_average(&rows);
+    assert_allclose(&outs[0], &expect, 1e-5, 1e-6).unwrap();
 }
 
 #[test]

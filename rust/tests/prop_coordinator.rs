@@ -243,6 +243,77 @@ fn gossip_idempotent_at_consensus() {
 }
 
 #[test]
+fn sorted_lockup_order_never_deadlocks() {
+    // The §IV-C lock-up acquires the closed neighborhood's locks in
+    // sorted node order. The runtime uses try-lock (abort on busy), but
+    // the sorted order makes even *blocking* acquisition deadlock-free:
+    // every initiator acquires along a single global total order, so the
+    // wait-for graph cannot contain a cycle. Simulate any set of
+    // simultaneous initiators with blocking semantics and assert the
+    // system always drains.
+    check("sorted-lockup-deadlock-free", 50, 0x10CC, |g| {
+        let n = g.usize_in(4, 24);
+        let graph = random_connected_graph(g, n);
+        let mut initiators: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+        if initiators.is_empty() {
+            initiators.push(g.usize_in(0, n - 1));
+        }
+        let hoods: Vec<Vec<usize>> = initiators
+            .iter()
+            .map(|&m| graph.closed_neighborhood(m))
+            .collect();
+        // owner[lock] = which initiator currently holds it.
+        let mut owner: Vec<Option<usize>> = vec![None; n];
+        // next[i] = how far initiator i has acquired along its sorted hood.
+        let mut next = vec![0usize; initiators.len()];
+        let mut done = vec![false; initiators.len()];
+        let mut remaining = initiators.len();
+        while remaining > 0 {
+            let mut progressed = false;
+            for i in 0..initiators.len() {
+                if done[i] {
+                    continue;
+                }
+                while next[i] < hoods[i].len() {
+                    let lock = hoods[i][next[i]];
+                    match owner[lock] {
+                        None => {
+                            owner[lock] = Some(i);
+                            next[i] += 1;
+                            progressed = true;
+                        }
+                        Some(o) if o == i => next[i] += 1,
+                        Some(_) => break, // blocked: wait for the holder
+                    }
+                }
+                if next[i] == hoods[i].len() {
+                    // Full neighborhood held: project, then release all.
+                    for &l in &hoods[i] {
+                        if owner[l] == Some(i) {
+                            owner[l] = None;
+                        }
+                    }
+                    done[i] = true;
+                    remaining -= 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return Err(format!(
+                    "deadlock: {remaining} initiators stuck in a wait-for cycle \
+                     (initiators {initiators:?})"
+                ));
+            }
+        }
+        // Every lock was released.
+        if owner.iter().any(Option::is_some) {
+            return Err("locks leaked after all initiators finished".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn distributed_matches_central_throughput_share() {
     // With non-uniform rates, per-node selection shares follow rates —
     // the §IV-A "preferred probability" design, as a property.
