@@ -13,6 +13,8 @@ use std::time::Duration;
 use dasgd::bench::Harness;
 use dasgd::coordinator::{CentralSelector, GeometricSelector};
 use dasgd::model::LogReg;
+use dasgd::net::wire::{self, WireMsg};
+use dasgd::net::{ShardMap, SocketConfig, SocketNet};
 use dasgd::node_logic::neighborhood_average;
 use dasgd::runtime::Engine;
 use dasgd::transport::{
@@ -80,12 +82,77 @@ fn bench_transports(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
         let _ = simnet.take_last_comm();
     });
     rows.push(("simnet".to_string(), r.mean_secs));
+
+    // SocketNet: the same round where one leg (node 4) crosses a real
+    // loopback TCP connection between two shard processes-worth of
+    // state (ranks 0 and 1 in this process).
+    let map = ShardMap::new(10, 2);
+    let a = SocketNet::bind(0, map, param_len, "127.0.0.1:0", SocketConfig::default())
+        .expect("bind rank 0");
+    let b = SocketNet::bind(1, map, param_len, "127.0.0.1:0", SocketConfig::default())
+        .expect("bind rank 1");
+    let peers = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+    a.connect_peers(&peers);
+    b.connect_peers(&peers);
+    assert!(a.wait_connected(Duration::from_secs(5)));
+    assert!(b.wait_connected(Duration::from_secs(5)));
+    let stop = Arc::new(AtomicBool::new(false));
+    let pumps: Vec<_> = [(a.clone(), 4usize), (b.clone(), 6usize)]
+        .into_iter()
+        .map(|(net, j)| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    net.poll(j);
+                    std::hint::spin_loop();
+                }
+            })
+        })
+        .collect();
+    let r = h.case("projection round ring-10 SocketNet loopback", || {
+        assert!(matches!(
+            projection_round(&b),
+            ProjectionOutcome::Applied { .. }
+        ));
+    });
+    rows.push(("socket_loopback".to_string(), r.mean_secs));
+    stop.store(true, Ordering::Relaxed);
+    for p in pumps {
+        let _ = p.join();
+    }
+    a.shutdown();
+    b.shutdown();
+    rows
+}
+
+/// Wire-codec micro-bench: encode/decode of a projection reply carrying
+/// a `param_len`-dim vector (the deployment's dominant frame).
+fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
+    let msg = WireMsg::ApplyAverage {
+        from: 5,
+        to: 4,
+        token: 99,
+        w: (0..param_len).map(|i| i as f32 * 0.25).collect(),
+    };
+    let mut rows = Vec::new();
+    let r = h.case("wire encode (ApplyAverage, 500 dims)", || {
+        std::hint::black_box(wire::encode(&msg));
+    });
+    rows.push(("wire_encode".to_string(), r.mean_secs));
+    let frame = wire::encode(&msg);
+    let r = h.case("wire decode (ApplyAverage, 500 dims)", || {
+        std::hint::black_box(wire::decode(&frame).unwrap().unwrap());
+    });
+    rows.push(("wire_decode".to_string(), r.mean_secs));
     rows
 }
 
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
-    body.push_str("  \"topology\": \"ring-10, closed neighborhood of 3\",\n");
+    body.push_str(
+        "  \"topology\": \"ring-10, closed neighborhood of 3; wire_* rows are \
+         codec-only on a 500-dim ApplyAverage frame\",\n",
+    );
     body.push_str(&format!("  \"param_len\": {param_len},\n  \"mean_secs\": {{\n"));
     for (i, (name, mean)) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };
@@ -175,7 +242,9 @@ fn main() {
 
     // ---- transport substrates ----------------------------------------------
     let mut h = Harness::new("transport substrates (ring-10 projection round)");
-    let transport_rows = bench_transports(&mut h, 500);
+    let mut transport_rows = bench_transports(&mut h, 500);
+    let mut h = Harness::new("wire codec (SocketNet frames)");
+    transport_rows.extend(bench_wire(&mut h, 500));
     write_transport_baseline(&transport_rows, 500);
 
     // ---- coordinator machinery ---------------------------------------------

@@ -18,8 +18,9 @@ fn main() -> anyhow::Result<()> {
     let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
     let secs = args.get_f64("secs", 3.0).map_err(anyhow::Error::msg)?;
     let spread = args.get_f64("spread", 0.8).map_err(anyhow::Error::msg)?;
-    let transport = TransportKind::parse(args.get_str("transport", "shared"))
-        .ok_or_else(|| anyhow::anyhow!("--transport wants shared|channel"))?;
+    let transport = TransportKind::parse(args.get_str("transport", "shared")).ok_or_else(|| {
+        anyhow::anyhow!("--transport wants shared|channel (socket runs via `dasgd launch`)")
+    })?;
 
     println!("== asynchronous cluster ==");
     println!(

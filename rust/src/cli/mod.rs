@@ -143,6 +143,15 @@ impl Args {
     }
 }
 
+/// "Did you mean …?" helper for flag *values* (`--transport chanel`),
+/// not just flag names: the `known` candidate closest to `input` in
+/// edit distance, if it plausibly is a typo. Commands use this to
+/// decorate unknown-value errors the same way [`Args::reject_unknown`]
+/// decorates unknown flags.
+pub fn did_you_mean<'a>(input: &str, known: &[&'a str]) -> Option<&'a str> {
+    closest(input, known)
+}
+
 /// The `known` candidate closest to `flag` in edit distance, if it is
 /// close enough to look like a typo (distance ≤ 2, or ≤ 1 for very
 /// short flags).
@@ -238,6 +247,14 @@ mod tests {
         let sw = parse("cmd --verbos");
         let err = sw.reject_unknown(&["verbose"]).unwrap_err();
         assert!(err.contains("did you mean --verbose?"), "{err}");
+    }
+
+    #[test]
+    fn did_you_mean_values() {
+        let kinds = ["shared", "channel", "socket"];
+        assert_eq!(did_you_mean("chanel", &kinds), Some("channel"));
+        assert_eq!(did_you_mean("socke", &kinds), Some("socket"));
+        assert_eq!(did_you_mean("zmq", &kinds), None);
     }
 
     #[test]

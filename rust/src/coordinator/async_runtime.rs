@@ -11,7 +11,11 @@
 //!   historical in-process substrate (behavior preserved bit-for-bit
 //!   where seeds allow);
 //! * [`TransportKind::Channel`] — message-passing collect/broadcast,
-//!   the shape of a real deployment.
+//!   the shape of a real deployment;
+//! * [`TransportKind::Socket`] — the real deployment: constructed by
+//!   `dasgd worker` / `dasgd launch` (see [`crate::net`]), where each
+//!   process drives one shard of nodes via [`spawn_shard`] over a
+//!   [`SocketNet`](crate::net::SocketNet).
 //!
 //! On firing, a node performs a gradient step (w.p. `p_grad`) on its
 //! own variable, or a §IV-C lock-up + Eq. (7) projection over its
@@ -122,11 +126,25 @@ struct Shared {
     proj_steps: AtomicU64,
     conflicts: AtomicU64,
     messages: AtomicU64,
-    /// Global applied-update counter (for stepsize decay).
+    /// Applied-update counter across this process's node threads (for
+    /// stepsize decay; in a multi-process deployment each worker decays
+    /// on its local counter).
     k: AtomicU64,
 }
 
 impl Shared {
+    fn new(n: usize) -> Self {
+        Self {
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            stop: AtomicBool::new(false),
+            grad_steps: AtomicU64::new(0),
+            proj_steps: AtomicU64::new(0),
+            conflicts: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            k: AtomicU64::new(0),
+        }
+    }
+
     fn counts(&self) -> Counts {
         Counts {
             grad_steps: self.grad_steps.load(Ordering::Relaxed),
@@ -135,6 +153,106 @@ impl Shared {
             conflicts: self.conflicts.load(Ordering::Relaxed),
         }
     }
+}
+
+/// A running set of node threads driving one *shard* of the system —
+/// every node for the in-process engines, one worker's block for the
+/// multi-process [`SocketNet`](crate::net::SocketNet) deployment.
+/// Obtained from [`spawn_shard`]; stop with [`ShardRun::stop`] +
+/// [`ShardRun::join`].
+pub struct ShardRun {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardRun {
+    /// Cumulative counters in the canonical convention.
+    pub fn counts(&self) -> Counts {
+        self.shared.counts()
+    }
+
+    /// Applied updates so far (this shard's stepsize clock).
+    pub fn k(&self) -> u64 {
+        self.shared.k.load(Ordering::Relaxed)
+    }
+
+    /// Fault injection: crash node `id` (it stops acting and becomes
+    /// unreachable to its neighbors' gossip).
+    pub fn kill(&self, id: usize) {
+        self.shared.alive[id].store(false, Ordering::SeqCst);
+    }
+
+    pub fn alive(&self, id: usize) -> bool {
+        self.shared.alive[id].load(Ordering::Relaxed)
+    }
+
+    /// Ask every node thread to stop after its current iteration.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the node threads ([`ShardRun::stop`] first, or this
+    /// blocks until something else stops them).
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().expect("node thread panicked");
+        }
+    }
+
+    /// Stop, wait for every node thread, and return the final counters
+    /// (read *after* the join, so no late increment is missed).
+    pub fn stop_and_join(self) -> Counts {
+        self.stop();
+        let shared = Arc::clone(&self.shared);
+        self.join();
+        shared.counts()
+    }
+}
+
+/// The RNG stream node `i` consumes. Derived from the run seed and the
+/// node id alone — independent of spawn order — so every worker of a
+/// sharded deployment reproduces exactly the per-node streams a
+/// single-process run with the same seed would use.
+fn node_rng(seed: u64, i: usize) -> Xoshiro256pp {
+    Xoshiro256pp::seeded(seed).split(i as u64)
+}
+
+/// Spawn one thread per node in `owned`, each driving a [`NodeLogic`]
+/// over `transport`. The engine-construction primitive behind
+/// [`AsyncCluster::run`] (owned = all nodes) and the multi-process
+/// worker (`dasgd worker`; owned = the worker's shard block).
+#[allow(clippy::too_many_arguments)]
+pub fn spawn_shard(
+    graph: &Graph,
+    shards: &[Dataset],
+    objective: Objective,
+    cfg: &AsyncConfig,
+    transport: Arc<dyn Transport>,
+    owned: std::ops::Range<usize>,
+    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+) -> ShardRun {
+    let n = graph.len();
+    assert_eq!(shards.len(), n, "one data shard per node");
+    assert!(owned.end <= n);
+    let (dim, classes) = (shards[0].dim(), shards[0].classes());
+    let shared = Arc::new(Shared::new(n));
+    let mut handles = Vec::with_capacity(owned.len());
+    for i in owned {
+        let mut rng = node_rng(cfg.seed, i);
+        let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
+        let logic = NodeLogic::new(i, objective, cfg.p_grad, shards[i].clone(), n, rng);
+        let shared = Arc::clone(&shared);
+        let transport = Arc::clone(&transport);
+        let graph = graph.clone();
+        let cfg = cfg.clone();
+        let executor = executor.as_ref().map(|(h, a)| (h.clone(), a.clone()));
+        handles.push(std::thread::spawn(move || {
+            node_loop(
+                logic, rate, shared, transport, graph, cfg, executor, dim, classes,
+            );
+        }));
+    }
+    ShardRun { shared, handles }
 }
 
 /// A networked system ready to run asynchronously.
@@ -204,39 +322,22 @@ impl AsyncCluster {
                 Duration::from_millis(100),
                 Duration::from_secs_f64(cfg.gossip_hold_secs.max(0.0)),
             )),
+            TransportKind::Socket => bail!(
+                "transport 'socket' is the multi-process deployment and cannot be \
+                 constructed inside a single-process cluster run; use \
+                 `dasgd launch --workers K` (or `dasgd worker` per process) — \
+                 see docs/deployment.md"
+            ),
         };
-        let shared = Arc::new(Shared {
-            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
-            stop: AtomicBool::new(false),
-            grad_steps: AtomicU64::new(0),
-            proj_steps: AtomicU64::new(0),
-            conflicts: AtomicU64::new(0),
-            messages: AtomicU64::new(0),
-            k: AtomicU64::new(0),
-        });
-
-        let mut root = Xoshiro256pp::seeded(cfg.seed);
-        let mut handles = Vec::with_capacity(n);
-        for i in 0..n {
-            let mut rng = root.split(i as u64);
-            let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
-            let logic =
-                NodeLogic::new(i, self.objective, cfg.p_grad, self.shards[i].clone(), n, rng);
-            let shared = Arc::clone(&shared);
-            let transport = Arc::clone(&transport);
-            let graph = self.graph.clone();
-            let cfg = cfg.clone();
-            let executor = self
-                .executor
-                .as_ref()
-                .map(|(h, a)| (h.clone(), a.clone()));
-            let (dim, classes) = (self.dim, self.classes);
-            handles.push(std::thread::spawn(move || {
-                node_loop(
-                    logic, rate, shared, transport, graph, cfg, executor, dim, classes,
-                );
-            }));
-        }
+        let run = spawn_shard(
+            &self.graph,
+            &self.shards,
+            self.objective,
+            cfg,
+            Arc::clone(&transport),
+            0..n,
+            self.executor.as_ref().map(|(h, a)| (h.clone(), a.clone())),
+        );
 
         // Monitor loop (runs inline on the caller's thread).
         let probe = Probe::new(self.objective, test);
@@ -250,7 +351,7 @@ impl AsyncCluster {
                     // Crash the first kill_nodes nodes: they stop acting
                     // and their variables become unreachable to gossip.
                     for i in 0..cfg.kill_nodes.min(n) {
-                        shared.alive[i].store(false, Ordering::SeqCst);
+                        run.kill(i);
                     }
                     killed = cfg.kill_nodes.min(n);
                 }
@@ -261,15 +362,10 @@ impl AsyncCluster {
                 .snapshot()
                 .into_iter()
                 .enumerate()
-                .filter(|(i, _)| shared.alive[*i].load(Ordering::Relaxed))
+                .filter(|(i, _)| run.alive(*i))
                 .map(|(_, w)| w)
                 .collect();
-            rec.push(probe.snapshot(
-                shared.k.load(Ordering::Relaxed),
-                now,
-                &params,
-                &shared.counts(),
-            ));
+            rec.push(probe.snapshot(run.k(), now, &params, &run.counts()));
             if now >= cfg.duration_secs {
                 break;
             }
@@ -277,23 +373,17 @@ impl AsyncCluster {
                 cfg.eval_every_secs.min(cfg.duration_secs - now).max(0.01),
             ));
         }
-        shared.stop.store(true, Ordering::SeqCst);
-        for h in handles {
-            h.join().expect("node thread panicked");
-        }
-
+        let counts = run.stop_and_join();
         let elapsed = sw.elapsed_secs();
-        let grad = shared.grad_steps.load(Ordering::SeqCst);
-        let proj = shared.proj_steps.load(Ordering::SeqCst);
         Ok(AsyncReport {
             killed,
             recorder: rec,
-            updates: grad + proj,
-            grad_steps: grad,
-            proj_steps: proj,
-            conflicts: shared.conflicts.load(Ordering::SeqCst),
-            messages: shared.messages.load(Ordering::SeqCst),
-            updates_per_sec: (grad + proj) as f64 / elapsed,
+            updates: counts.updates(),
+            grad_steps: counts.grad_steps,
+            proj_steps: counts.proj_steps,
+            conflicts: counts.conflicts,
+            messages: counts.messages,
+            updates_per_sec: counts.updates() as f64 / elapsed,
             final_params: transport.snapshot(),
         })
     }
@@ -361,11 +451,13 @@ fn node_loop(
                 // Projection: §IV-C lock-up over the closed neighborhood
                 // — restricted to live members (a crashed neighbor is
                 // simply unreachable; the average is over whoever
-                // answers).
+                // answers). Liveness has two layers: fault-injected
+                // kills in this process, and — for the multi-process
+                // SocketNet — whole peer workers whose link is down.
                 let hood: Vec<usize> = graph
                     .closed_neighborhood(id)
                     .into_iter()
-                    .filter(|&j| shared.alive[j].load(Ordering::Relaxed))
+                    .filter(|&j| shared.alive[j].load(Ordering::Relaxed) && transport.reachable(j))
                     .collect();
                 if hood.len() < 2 {
                     continue; // nobody reachable to average with

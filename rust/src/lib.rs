@@ -10,8 +10,9 @@
 //! asynchronous actor runtime, a discrete-event straggler simulator, and
 //! the baselines the paper positions itself against. The per-node
 //! algorithm lives once, in [`node_logic`], and runs over pluggable
-//! [`transport`] substrates (shared memory, message passing, or the
-//! delay/drop/partition-aware virtual-time network). Layers 2/1 (JAX
+//! [`transport`] substrates (shared memory, message passing, the
+//! delay/drop/partition-aware virtual-time network, or [`net`]'s
+//! multi-process TCP deployment). Layers 2/1 (JAX
 //! model + Pallas kernels) are AOT-lowered to HLO text in `artifacts/`
 //! and executed through [`runtime`]; python never runs on the training
 //! path.
@@ -29,6 +30,7 @@ pub mod graph;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod node_logic;
 pub mod objective;
 pub mod runtime;

@@ -3,11 +3,12 @@
 //! cluster are runnable from here; `cargo bench` wraps the same
 //! experiment modules.
 
-use dasgd::cli::Args;
+use dasgd::cli::{self, Args};
 use dasgd::coordinator::{AsyncCluster, AsyncConfig, Objective, PjrtArtifacts, StepSize};
 use dasgd::data::{ascii_art, render_glyph, GlyphStyle, NotMnistGen};
 use dasgd::experiments::{self, fig2, fig3, fig4, fig6, lemma1, straggler};
 use dasgd::metrics::Table;
+use dasgd::net::{run_launch, run_worker, LaunchConfig, WorkerConfig};
 use dasgd::runtime::{Engine, ExecutorService};
 use dasgd::sim::{simnet_run, SimConfig, SpeedModel};
 use dasgd::transport::{LatencyModel, PartitionWindow, SimNetConfig, TransportKind};
@@ -42,18 +43,26 @@ System:
   cluster     live threaded asynchronous cluster (--secs S --kill N
               --kill-after T to crash N nodes at time T
               --backend native|pjrt --rate HZ --spread X
-              --transport shared|channel)
+              --transport shared|channel|socket)
   sim         delay/drop-aware virtual-time simulation, 10k+ nodes
               (--nodes N --degree K --horizon S --latency-ms L
               --jitter-ms J --drop-prob P --objective logreg|hinge|lasso
               --partition T0:T1:CUT --samples M --straggle X)
+  launch      multi-process deployment on this machine: spawn K worker
+              processes + monitor them (--workers K --nodes N --degree D
+              --horizon U applied updates --secs S cap --rate HZ
+              --objective ... --csv PATH)
+  worker      one deployment worker process (--rank R
+              --peers host:port,host:port,... --nodes N --degree D
+              --secs S --rate HZ --objective ...); `launch` spawns these
   artifacts   verify the AOT artifact set loads + executes
 
 Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
   --seed N    RNG seed (default 0)
 
-Unknown flags are rejected with a did-you-mean suggestion.
+Unknown flags and unknown flag values are rejected with a did-you-mean
+suggestion.
 ";
 
 /// Flags every command accepts.
@@ -66,6 +75,26 @@ fn check_flags(args: &Args, extra: &[&str]) -> anyhow::Result<()> {
     known.extend_from_slice(extra);
     args.reject_unknown(&known).map_err(anyhow::Error::msg)?;
     args.require_values(&known).map_err(anyhow::Error::msg)
+}
+
+/// Error for a flag whose *value* is outside its vocabulary, with the
+/// same did-you-mean treatment unknown flags get (`--transport chanel`
+/// → "did you mean \"channel\"?").
+fn unknown_value(flag: &str, got: &str, known: &[&str]) -> anyhow::Error {
+    let mut msg = format!(
+        "unknown {flag} {got:?} (choose one of: {})",
+        known.join(", ")
+    );
+    if let Some(best) = cli::did_you_mean(got, known) {
+        msg.push_str(&format!(" — did you mean {best:?}?"));
+    }
+    anyhow::Error::msg(msg)
+}
+
+/// Parse `--objective`, rejecting unknown names with a suggestion.
+fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
+    let name = args.get_str("objective", "logreg");
+    Objective::parse(name).ok_or_else(|| unknown_value("objective", name, &Objective::NAMES))
 }
 
 fn main() {
@@ -131,6 +160,26 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "samples",
             "straggle",
             "csv",
+        ],
+        "launch" => &[
+            "workers",
+            "nodes",
+            "degree",
+            "horizon",
+            "secs",
+            "eval-every",
+            "rate",
+            "objective",
+            "csv",
+        ],
+        "worker" => &[
+            "rank",
+            "peers",
+            "nodes",
+            "degree",
+            "secs",
+            "rate",
+            "objective",
         ],
         _ => return None,
     })
@@ -215,6 +264,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("train") => cmd_train(args, scale, seed)?,
         Some("cluster") => cmd_cluster(args, seed)?,
         Some("sim") => cmd_sim(args, scale, seed)?,
+        Some("launch") => cmd_launch(args, seed)?,
+        Some("worker") => cmd_worker(args, seed)?,
         Some("artifacts") => {
             let engine = Engine::load_default()?;
             println!(
@@ -252,20 +303,14 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     let backend = match args.get_str("backend", "native") {
         "pjrt" => Backend::Pjrt,
         "native" => Backend::Native,
-        other => anyhow::bail!("unknown backend {other:?} (choose one of: native, pjrt)"),
+        other => return Err(unknown_value("backend", other, &["native", "pjrt"])),
     };
-    let objective_name = args.get_str("objective", "logreg");
-    let Some(objective) = Objective::parse(objective_name) else {
-        anyhow::bail!(
-            "unknown objective {objective_name:?} (choose one of: {})",
-            Objective::NAMES.join(", ")
-        );
-    };
+    let objective = parse_objective(args)?;
     let dataset = args.get_str("dataset", "synth");
     let (shards, test) = match dataset {
         "notmnist" => fig6::notmnist_world(n, 400, 512, seed),
         "synth" => experiments::synth_world(n, 500, 512, seed),
-        other => anyhow::bail!("unknown dataset {other:?} (choose one of: synth, notmnist)"),
+        other => return Err(unknown_value("dataset", other, &["synth", "notmnist"])),
     };
     let cfg = TrainConfig::objective_default(objective, n)
         .with_seed(seed)
@@ -318,14 +363,15 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
     let spread = args.get_f64("spread", 0.0).map_err(anyhow::Error::msg)?;
     let backend_name = args.get_str("backend", "native");
     if !matches!(backend_name, "native" | "pjrt") {
-        anyhow::bail!("unknown backend {backend_name:?} (choose one of: native, pjrt)");
+        return Err(unknown_value("backend", backend_name, &["native", "pjrt"]));
     }
     let transport_name = args.get_str("transport", "shared");
     let Some(transport) = TransportKind::parse(transport_name) else {
-        anyhow::bail!(
-            "unknown transport {transport_name:?} (choose one of: {})",
-            TransportKind::NAMES.join(", ")
-        );
+        return Err(unknown_value(
+            "transport",
+            transport_name,
+            &TransportKind::NAMES,
+        ));
     };
     let (shards, test) = experiments::synth_world(n, 300, 512, seed);
     let mut cluster = AsyncCluster::new(experiments::make_regular(n, degree), shards);
@@ -404,13 +450,7 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     }
     let samples = args.get_usize("samples", 60).map_err(anyhow::Error::msg)?;
     let straggle = args.get_f64("straggle", 1.0).map_err(anyhow::Error::msg)?;
-    let objective_name = args.get_str("objective", "logreg");
-    let Some(objective) = Objective::parse(objective_name) else {
-        anyhow::bail!(
-            "unknown objective {objective_name:?} (choose one of: {})",
-            Objective::NAMES.join(", ")
-        );
-    };
+    let objective = parse_objective(args)?;
     // --partition T0:T1:CUT — sever edges across {<CUT} | {>=CUT} for
     // virtual time [T0, T1).
     let partitions = match args.get("partition") {
@@ -486,5 +526,99 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         rep.recorder.write_csv(csv)?;
         println!("wrote {csv}");
     }
+    Ok(())
+}
+
+/// Multi-process deployment on this machine: spawn K workers from this
+/// binary, monitor their shards to the update horizon, print the same
+/// table the in-process cluster prints.
+fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+    let nodes = args.get_usize("nodes", 8).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 2).map_err(anyhow::Error::msg)?;
+    let horizon = args.get_u64("horizon", 2000).map_err(anyhow::Error::msg)?;
+    let secs = args.get_f64("secs", 30.0).map_err(anyhow::Error::msg)?;
+    let eval_every = args
+        .get_f64("eval-every", 0.25)
+        .map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
+    let objective = parse_objective(args)?;
+    let cfg = LaunchConfig {
+        workers,
+        nodes,
+        degree,
+        horizon_updates: horizon,
+        secs_cap: secs,
+        eval_every_secs: eval_every,
+        rate_hz: rate,
+        objective,
+        seed,
+        binary: None,
+    };
+    println!(
+        "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \
+         horizon {horizon} updates, objective {objective}"
+    );
+    let rep = run_launch(&cfg)?;
+    let mut t = Table::new(&["t (s)", "k", "d^k", "test err", "conflicts"]);
+    for r in &rep.recorder.records {
+        t.row(&[
+            format!("{:.2}", r.time_secs),
+            format!("{}", r.k),
+            format!("{:.3}", r.consensus),
+            format!("{:.3}", r.test_err),
+            format!("{}", r.conflicts),
+        ]);
+    }
+    t.print();
+    println!(
+        "{} updates ({} grad, {} proj), {} messages, {} conflicts — \
+         {}/{} workers live at shutdown, {:.2}s wall",
+        rep.counts.updates(),
+        rep.counts.grad_steps,
+        rep.counts.proj_steps,
+        rep.counts.messages,
+        rep.counts.conflicts,
+        rep.live_workers,
+        workers,
+        rep.elapsed_secs
+    );
+    if let Some(csv) = args.get("csv") {
+        rep.recorder.write_csv(csv)?;
+        println!("wrote {csv}");
+    }
+    if !rep.reached_horizon {
+        anyhow::bail!(
+            "run hit the {secs}s wall-clock cap at {} of {horizon} updates — \
+             the deployment stalled",
+            rep.counts.updates()
+        );
+    }
+    Ok(())
+}
+
+/// One deployment worker process (normally spawned by `launch`; run it
+/// by hand with an explicit `--peers` list to span machines).
+fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let rank = args.get_u64("rank", 0).map_err(anyhow::Error::msg)? as u32;
+    let Some(peers_raw) = args.get("peers") else {
+        anyhow::bail!("worker needs --peers host:port,host:port,... (one per rank)");
+    };
+    let peers: Vec<String> = peers_raw
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let cfg = WorkerConfig {
+        rank,
+        peers,
+        nodes: args.get_usize("nodes", 8).map_err(anyhow::Error::msg)?,
+        degree: args.get_usize("degree", 2).map_err(anyhow::Error::msg)?,
+        secs: args.get_f64("secs", 30.0).map_err(anyhow::Error::msg)?,
+        rate_hz: args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?,
+        objective: parse_objective(args)?,
+        seed,
+    };
+    run_worker(&cfg)?;
     Ok(())
 }

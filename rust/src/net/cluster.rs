@@ -1,0 +1,608 @@
+//! Worker and launcher entrypoints for multi-process deployments.
+//!
+//! A deployment is K *worker* processes (`dasgd worker --rank R
+//! --peers a0,a1,...`), each owning one [`ShardMap`] block of nodes and
+//! driving it with the same [`spawn_shard`] engine the in-process
+//! cluster uses — just over a [`SocketNet`] instead of a local
+//! substrate. Workers rendezvous by address list: every rank binds its
+//! own entry of `--peers` and dials every lower rank.
+//!
+//! The *launcher* (`dasgd launch --workers K`) covers the
+//! single-machine case: it reserves K loopback ports, spawns the
+//! workers from the running binary, then plays *monitor* — it polls
+//! every worker's shard over a control connection
+//! (`SnapshotRequest`/`SnapshotReply`), aggregates parameters and
+//! counters, and feeds the same [`Probe`]/[`Recorder`] path every other
+//! engine records through, so consensus/error metrics and CSV output
+//! are unchanged across process boundaries. The run ends when the
+//! aggregate applied-update count reaches `--horizon` (or the
+//! wall-clock cap), at which point the monitor broadcasts `Shutdown`.
+//!
+//! Failure semantics: a worker that dies mid-run simply drops out of
+//! monitor aggregation (metrics continue over the live cohort, exactly
+//! like fault-injected kills in-process), and its peers' liveness
+//! filtering degrades its nodes' projections to `Conflict`/`Isolated`
+//! — survivors never hang.
+
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{spawn_shard, AsyncConfig};
+use crate::experiments::{make_regular, synth_world};
+use crate::metrics::Recorder;
+use crate::node_logic::{Counts, Probe};
+use crate::objective::Objective;
+use crate::transport::{Transport, TransportKind};
+use crate::util::Stopwatch;
+
+use super::socket::{ShardMap, SocketConfig, SocketNet};
+use super::wire::{self, WireMsg, MONITOR_RANK};
+
+/// Samples per node in the deployment's synthetic world (matches the
+/// in-process `cluster` command, so cross-mode runs are comparable).
+const SAMPLES_PER_NODE: usize = 300;
+const TEST_SAMPLES: usize = 512;
+
+/// How many nodes' parameter vectors one `SnapshotReply` frame carries:
+/// sized so a frame stays ~4 MiB, far under the wire codec's 16 MiB
+/// cap even for large shards (the monitor reassembles chunks — it
+/// knows each rank's shard size from the same `ShardMap`).
+fn snapshot_chunk_nodes(param_len: usize) -> usize {
+    let bytes_per_node = param_len * 4 + 8;
+    ((4 << 20) / bytes_per_node.max(1)).max(1)
+}
+
+/// Read one frame from a control connection without assuming frame
+/// boundaries align with read timeouts: bytes accumulate in `buf`
+/// across calls, so a frame split by a timeout resumes instead of
+/// desyncing the stream. Returns `Ok(None)` when nothing complete
+/// arrived by `deadline` (a transient stall, not an error).
+fn read_control_frame(
+    conn: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    deadline: Instant,
+) -> Result<Option<WireMsg>, wire::WireError> {
+    loop {
+        if let Some((msg, used)) = wire::decode(buf)? {
+            buf.drain(..used);
+            return Ok(Some(msg));
+        }
+        if Instant::now() >= deadline {
+            return Ok(None);
+        }
+        let mut tmp = [0u8; 4096];
+        match conn.read(&mut tmp) {
+            Ok(0) => {
+                return Err(wire::WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "control connection closed",
+                )))
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => return Err(wire::WireError::Io(e)),
+        }
+    }
+}
+
+/// How a deployment's shared world is derived. Every worker rebuilds
+/// the identical graph + data shards from `(nodes, degree, seed)` —
+/// nothing is shipped over the wire but parameters. (The monitor never
+/// needs the training shards; it draws only a held-out test set, see
+/// [`run_launch`].)
+fn worker_world(
+    nodes: usize,
+    degree: usize,
+    seed: u64,
+) -> (crate::graph::Graph, Vec<crate::data::Dataset>) {
+    let (shards, _test) = synth_world(nodes, SAMPLES_PER_NODE, TEST_SAMPLES, seed);
+    (make_regular(nodes, degree), shards)
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// One worker process's configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub rank: u32,
+    /// Every rank's `host:port`, rank-ordered; ours is bound, lower
+    /// ranks are dialed.
+    pub peers: Vec<String>,
+    pub nodes: usize,
+    pub degree: usize,
+    /// Wall-clock cap: exit even if no `Shutdown` ever arrives (a dead
+    /// monitor must not leave worker processes behind).
+    pub secs: f64,
+    pub rate_hz: f64,
+    pub objective: Objective,
+    pub seed: u64,
+}
+
+/// What a finished worker reports.
+#[derive(Debug)]
+pub struct WorkerSummary {
+    pub counts: Counts,
+    /// True when the monitor ended the run (vs the wall-clock cap).
+    pub shutdown_by_monitor: bool,
+}
+
+/// Run one worker to completion: bind, rendezvous, drive the owned
+/// shard, serve monitor snapshots, exit on `Shutdown` or the cap.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
+    let workers = cfg.peers.len();
+    if workers == 0 {
+        bail!("--peers must list every worker's host:port");
+    }
+    if cfg.rank as usize >= workers {
+        bail!("--rank {} out of range for {} peers", cfg.rank, workers);
+    }
+    if workers > cfg.nodes {
+        bail!("more workers ({workers}) than nodes ({})", cfg.nodes);
+    }
+    let (graph, shards) = worker_world(cfg.nodes, cfg.degree, cfg.seed);
+    let objective = cfg.objective;
+    let (dim, classes) = (shards[0].dim(), shards[0].classes());
+    let param_len = objective.param_len(dim, classes);
+
+    let shard_map = ShardMap::new(cfg.nodes, workers);
+    let net = SocketNet::bind(
+        cfg.rank,
+        shard_map,
+        param_len,
+        &cfg.peers[cfg.rank as usize],
+        SocketConfig::default(),
+    )
+    .with_context(|| format!("binding {}", cfg.peers[cfg.rank as usize]))?;
+    let owned = net.local_nodes();
+    println!(
+        "dasgd-worker rank={} listening on {} (nodes {}..{} of {})",
+        cfg.rank,
+        net.local_addr(),
+        owned.start,
+        owned.end,
+        cfg.nodes
+    );
+    let _ = std::io::stdout().flush();
+    net.connect_peers(&cfg.peers);
+    if !net.wait_connected(Duration::from_secs(10)) {
+        eprintln!(
+            "dasgd-worker rank={}: not all peers reachable after 10s; \
+             continuing degraded (their nodes are filtered from neighborhoods)",
+            cfg.rank
+        );
+    }
+
+    let acfg = AsyncConfig {
+        p_grad: 0.5,
+        stepsize: objective.default_stepsize(cfg.nodes),
+        rate_hz: cfg.rate_hz,
+        speed_spread: 0.0,
+        duration_secs: cfg.secs,
+        eval_every_secs: cfg.secs,
+        gossip_hold_secs: 0.0,
+        kill_after_secs: None,
+        kill_nodes: 0,
+        transport: TransportKind::Socket,
+        seed: cfg.seed,
+    };
+    let transport: Arc<dyn Transport> = Arc::new(net.clone());
+    let run = spawn_shard(
+        &graph,
+        &shards,
+        objective,
+        &acfg,
+        transport,
+        owned.clone(),
+        None,
+    );
+
+    // Serve the control plane until Shutdown or the wall-clock cap.
+    let deadline = Instant::now() + Duration::from_secs_f64(cfg.secs.max(0.1));
+    let mut controls: Vec<(TcpStream, Vec<u8>)> = Vec::new();
+    let mut shutdown_by_monitor = false;
+    'serve: while Instant::now() < deadline {
+        while let Some(conn) = net.take_control() {
+            let _ = conn.set_read_timeout(Some(Duration::from_millis(25)));
+            let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
+            controls.push((conn, Vec::new()));
+        }
+        if controls.is_empty() {
+            std::thread::sleep(Duration::from_millis(25));
+            continue;
+        }
+        let mut dropped = Vec::new();
+        for (ci, (conn, buf)) in controls.iter_mut().enumerate() {
+            let frame_deadline = Instant::now() + Duration::from_millis(25);
+            match read_control_frame(conn, buf, frame_deadline) {
+                Ok(Some(WireMsg::SnapshotRequest)) => {
+                    // Chunked so a large shard never exceeds the frame
+                    // cap; the monitor reassembles (it knows our shard
+                    // size). Counters ride on every chunk — the last
+                    // one read wins, and they only grow.
+                    let c = run.counts();
+                    let counts = [c.grad_steps, c.proj_steps, c.messages, c.conflicts];
+                    let all: Vec<(u32, Vec<f32>)> = net
+                        .local_params()
+                        .into_iter()
+                        .map(|(id, w)| (id as u32, w))
+                        .collect();
+                    for chunk in all.chunks(snapshot_chunk_nodes(param_len)) {
+                        let reply = WireMsg::SnapshotReply {
+                            rank: cfg.rank,
+                            counts,
+                            params: chunk.to_vec(),
+                        };
+                        if wire::write_frame(conn, &reply).is_err() {
+                            dropped.push(ci);
+                            break;
+                        }
+                    }
+                }
+                Ok(Some(WireMsg::Shutdown)) => {
+                    shutdown_by_monitor = true;
+                    break 'serve;
+                }
+                Ok(Some(_)) => {} // not meaningful on a control connection
+                Ok(None) => {}    // nothing complete yet
+                Err(_) => dropped.push(ci),
+            }
+        }
+        for ci in dropped.into_iter().rev() {
+            controls.remove(ci);
+        }
+    }
+
+    let counts = run.stop_and_join();
+    net.shutdown();
+    println!(
+        "dasgd-worker rank={} done: {} updates ({} grad, {} proj), {} messages, {} conflicts",
+        cfg.rank,
+        counts.updates(),
+        counts.grad_steps,
+        counts.proj_steps,
+        counts.messages,
+        counts.conflicts
+    );
+    Ok(WorkerSummary {
+        counts,
+        shutdown_by_monitor,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Launcher / monitor
+// ---------------------------------------------------------------------------
+
+/// Single-machine deployment configuration.
+#[derive(Clone, Debug)]
+pub struct LaunchConfig {
+    pub workers: usize,
+    pub nodes: usize,
+    pub degree: usize,
+    /// Stop once the aggregate applied-update count reaches this.
+    pub horizon_updates: u64,
+    /// Wall-clock safety cap for the whole run.
+    pub secs_cap: f64,
+    pub eval_every_secs: f64,
+    pub rate_hz: f64,
+    pub objective: Objective,
+    pub seed: u64,
+    /// The worker binary. `None` = this executable (the CLI case);
+    /// tests point it at the built `dasgd` binary.
+    pub binary: Option<std::path::PathBuf>,
+}
+
+impl LaunchConfig {
+    pub fn quick(workers: usize, nodes: usize) -> Self {
+        Self {
+            workers,
+            nodes,
+            degree: 2,
+            horizon_updates: 2000,
+            secs_cap: 30.0,
+            eval_every_secs: 0.25,
+            rate_hz: 300.0,
+            objective: Objective::LogReg,
+            seed: 0,
+            binary: None,
+        }
+    }
+}
+
+/// Outcome of a launched deployment.
+#[derive(Debug)]
+pub struct LaunchReport {
+    pub recorder: Recorder,
+    pub counts: Counts,
+    /// Workers still answering snapshots at the end.
+    pub live_workers: usize,
+    pub elapsed_secs: f64,
+    /// True when the run ended by reaching `horizon_updates`; false
+    /// means the wall-clock cap expired first (a stalled deployment —
+    /// the CLI exits nonzero on it so CI smoke runs can fail).
+    pub reached_horizon: bool,
+}
+
+/// Reserve a free loopback port by binding port 0 and noting the
+/// assignment. The tiny window between drop and the worker's bind is a
+/// documented single-machine trade-off (docs/deployment.md).
+fn reserve_port() -> Result<u16> {
+    let l = TcpListener::bind("127.0.0.1:0").context("reserving a loopback port")?;
+    Ok(l.local_addr()?.port())
+}
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Spawn `cfg.workers` local worker processes, monitor them to the
+/// horizon, shut them down, and return the aggregated run record.
+pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
+    if cfg.workers == 0 {
+        bail!("--workers must be at least 1");
+    }
+    if cfg.workers > cfg.nodes {
+        bail!("more workers ({}) than nodes ({})", cfg.workers, cfg.nodes);
+    }
+    let peers: Vec<String> = (0..cfg.workers)
+        .map(|_| reserve_port().map(|p| format!("127.0.0.1:{p}")))
+        .collect::<Result<_>>()?;
+    let binary = match &cfg.binary {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("locating this executable")?,
+    };
+    // Workers outlive the monitor's cap slightly so a slow shutdown
+    // never races their own wall-clock exit.
+    let worker_secs = cfg.secs_cap + 10.0;
+    let mut children: Vec<Child> = Vec::with_capacity(cfg.workers);
+    for rank in 0..cfg.workers {
+        let child = Command::new(&binary)
+            .args([
+                "worker",
+                "--rank",
+                &rank.to_string(),
+                "--peers",
+                &peers.join(","),
+                "--nodes",
+                &cfg.nodes.to_string(),
+                "--degree",
+                &cfg.degree.to_string(),
+                "--secs",
+                &format!("{worker_secs}"),
+                "--rate",
+                &format!("{}", cfg.rate_hz),
+                "--objective",
+                cfg.objective.name(),
+                "--seed",
+                &cfg.seed.to_string(),
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn();
+        match child {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(anyhow!("spawning worker {rank}: {e}"));
+            }
+        }
+    }
+
+    // Monitor control connections (retry while workers come up).
+    let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(cfg.workers);
+    for (rank, addr) in peers.iter().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let conn = loop {
+            if let Ok(mut s) = TcpStream::connect(addr) {
+                let _ = s.set_nodelay(true);
+                // Short socket timeout: read_control_frame's own frame
+                // deadline governs how long a round waits.
+                let _ = s.set_read_timeout(Some(Duration::from_millis(250)));
+                let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
+                if wire::write_frame(&mut s, &WireMsg::Hello { rank: MONITOR_RANK }).is_ok() {
+                    break Some(s);
+                }
+            }
+            if Instant::now() >= deadline {
+                break None;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        if conn.is_none() {
+            kill_all(&mut children);
+            bail!("worker {rank} at {addr} never accepted the monitor connection");
+        }
+        conns.push(conn);
+    }
+
+    // The monitor's evaluation set. It never needs the training shards
+    // (workers rebuild those themselves), so draw only a held-out test
+    // set from the seed-derived generator on an independent stream.
+    let gen = crate::data::SyntheticGen::paper_default(cfg.nodes, cfg.seed);
+    let mut test_rng = crate::util::rng::Xoshiro256pp::seeded(cfg.seed ^ 0x7E57_5E7);
+    let test = gen.global_test_set(TEST_SAMPLES, &mut test_rng);
+    let probe = Probe::new(cfg.objective, &test);
+    let shard_map = ShardMap::new(cfg.nodes, cfg.workers);
+    let mut rec = Recorder::new("socket");
+    let sw = Stopwatch::new();
+    let mut bufs: Vec<Vec<u8>> = (0..cfg.workers).map(|_| Vec::new()).collect();
+    // A worker misses a round on a transient stall; only repeated
+    // silence evicts it from the cohort. Five 2s-deadline rounds also
+    // cover a worker still inside its 10s peer-rendezvous wait (it
+    // serves control only after that).
+    let mut strikes = vec![0u32; cfg.workers];
+    const MAX_STRIKES: u32 = 5;
+    // Each rank's last-known cumulative counters. Summing these keeps
+    // the aggregate monotonic when a worker misses a round (or dies —
+    // its applied updates still happened).
+    let mut last_known = vec![[0u64; 4]; cfg.workers];
+    let (counts, reached_horizon) = loop {
+        let now = sw.elapsed_secs();
+        // Collect every live worker's shard (chunked SnapshotReply
+        // frames; each rank's expected node count comes from the
+        // ShardMap both sides share).
+        let mut params: Vec<(u32, Vec<f32>)> = Vec::with_capacity(cfg.nodes);
+        for (rank, conn_slot) in conns.iter_mut().enumerate() {
+            let Some(conn) = conn_slot else { continue };
+            let buf = &mut bufs[rank];
+            // Drain complete frames left over from a timed-out round
+            // so stale chunks don't blend into this one (a partial
+            // frame's bytes stay and resume cleanly).
+            while let Ok(Some(_)) = read_control_frame(conn, buf, Instant::now()) {}
+            // Reassemble by node id (a stale chunk from a previously
+            // timed-out round may still arrive first; newest value for
+            // an id wins, and completion counts distinct ids).
+            let block = shard_map.range(rank as u32);
+            let expected = block.len();
+            let mut shard: Vec<Option<Vec<f32>>> = vec![None; expected];
+            let mut got = 0usize;
+            let mut last_counts = None;
+            let ok = wire::write_frame(conn, &WireMsg::SnapshotRequest).is_ok() && {
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match read_control_frame(conn, buf, deadline) {
+                        Ok(Some(WireMsg::SnapshotReply {
+                            counts,
+                            params: chunk,
+                            ..
+                        })) => {
+                            last_counts = Some(counts);
+                            for (id, w) in chunk {
+                                let id = id as usize;
+                                if block.contains(&id) {
+                                    let slot = &mut shard[id - block.start];
+                                    if slot.is_none() {
+                                        got += 1;
+                                    }
+                                    *slot = Some(w);
+                                }
+                            }
+                            if got >= expected {
+                                break true;
+                            }
+                        }
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => break false,
+                    }
+                }
+            };
+            if ok {
+                strikes[rank] = 0;
+                last_known[rank] = last_counts.expect("ok round has counts");
+                params.extend(
+                    shard
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, w)| ((block.start + i) as u32, w.expect("complete shard"))),
+                );
+            } else {
+                strikes[rank] += 1;
+                if strikes[rank] >= MAX_STRIKES {
+                    // Dead worker: out of the cohort; survivors carry on.
+                    *conn_slot = None;
+                }
+            }
+        }
+        if conns.iter().flatten().count() == 0 {
+            kill_all(&mut children);
+            bail!("every worker died before the horizon");
+        }
+        let mut total = Counts::default();
+        for [g, p, m, c] in &last_known {
+            total.grad_steps += g;
+            total.proj_steps += p;
+            total.messages += m;
+            total.conflicts += c;
+        }
+        params.sort_by_key(|(id, _)| *id);
+        let cohort: Vec<Vec<f32>> = params.into_iter().map(|(_, w)| w).collect();
+        if !cohort.is_empty() {
+            rec.push(probe.snapshot(total.updates(), now, &cohort, &total));
+        }
+        if total.updates() >= cfg.horizon_updates {
+            break (total, true);
+        }
+        if now >= cfg.secs_cap {
+            break (total, false);
+        }
+        std::thread::sleep(Duration::from_secs_f64(cfg.eval_every_secs.max(0.01)));
+    };
+
+    // End the run: broadcast Shutdown, then reap.
+    for conn in conns.iter_mut().flatten() {
+        let _ = wire::write_frame(conn, &WireMsg::Shutdown);
+    }
+    let reap_deadline = Instant::now() + Duration::from_secs(10);
+    for c in children.iter_mut() {
+        loop {
+            match c.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < reap_deadline => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                _ => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    break;
+                }
+            }
+        }
+    }
+    Ok(LaunchReport {
+        recorder: rec,
+        counts,
+        live_workers: conns.iter().flatten().count(),
+        elapsed_secs: sw.elapsed_secs(),
+        reached_horizon,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_config_rejects_bad_shapes() {
+        let mut cfg = LaunchConfig::quick(0, 8);
+        assert!(run_launch(&cfg).is_err());
+        cfg.workers = 9;
+        cfg.nodes = 8;
+        assert!(run_launch(&cfg).is_err());
+    }
+
+    #[test]
+    fn worker_config_rejects_bad_shapes() {
+        let base = WorkerConfig {
+            rank: 0,
+            peers: vec![],
+            nodes: 8,
+            degree: 2,
+            secs: 0.1,
+            rate_hz: 100.0,
+            objective: Objective::LogReg,
+            seed: 0,
+        };
+        assert!(run_worker(&base).is_err(), "empty peers must fail");
+        let mut bad_rank = base.clone();
+        bad_rank.peers = vec!["127.0.0.1:1".into()];
+        bad_rank.rank = 1;
+        assert!(run_worker(&bad_rank).is_err(), "rank beyond peers must fail");
+        let mut too_many = base;
+        too_many.peers = (0..9).map(|i| format!("127.0.0.1:{}", 1 + i)).collect();
+        assert!(run_worker(&too_many).is_err(), "9 workers for 8 nodes must fail");
+    }
+}

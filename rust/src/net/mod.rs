@@ -1,0 +1,34 @@
+//! SocketNet: the multi-process deployment layer.
+//!
+//! The paper's system is *fully distributed* — no central controller,
+//! no slot synchronization — but until this subsystem every engine in
+//! the repo ran inside one OS process. `net` carries the Alg. 2
+//! projection protocol over real sockets, in three layers:
+//!
+//! * [`wire`] — a versioned, length-prefixed binary codec for the
+//!   ChannelNet message set (`CollectRequest` / `CollectReply` / `Busy`
+//!   / `Abort` / `ApplyAverage`) plus the control plane (`Hello` /
+//!   `Heartbeat` / `SnapshotRequest` / `SnapshotReply` / `Shutdown`).
+//!   Decoding is total: malformed frames error, never panic.
+//! * [`socket`] — [`SocketNet`], a [`Transport`](crate::transport::Transport)
+//!   where each worker process owns a [`ShardMap`] block of nodes.
+//!   Intra-shard traffic short-circuits through in-process mailboxes;
+//!   cross-shard traffic flows over persistent TCP connections with
+//!   reconnect and heartbeat-based liveness. A dead peer degrades to
+//!   `Conflict`/`Isolated` — the leased-capture guarantee survives the
+//!   network.
+//! * [`cluster`] — the rendezvous layer: `dasgd worker --rank R
+//!   --peers ...` runs one shard; `dasgd launch --workers K` spawns a
+//!   single-machine deployment and plays monitor, aggregating worker
+//!   snapshots into the same `Probe`/`Recorder` metrics path (and CSV
+//!   output) every in-process engine uses.
+//!
+//! See docs/deployment.md for the quickstart and failure semantics.
+
+pub mod cluster;
+pub mod socket;
+pub mod wire;
+
+pub use cluster::{run_launch, run_worker, LaunchConfig, LaunchReport, WorkerConfig, WorkerSummary};
+pub use socket::{ShardMap, SocketConfig, SocketNet};
+pub use wire::{WireError, WireMsg, MONITOR_RANK, WIRE_VERSION};

@@ -1,0 +1,1019 @@
+//! `SocketNet` — the ChannelNet collect/broadcast protocol carried over
+//! real TCP connections, for multi-process deployments.
+//!
+//! Each worker process owns a contiguous shard of nodes (a
+//! [`ShardMap`] block). Traffic between two nodes of the same shard
+//! short-circuits through in-process mailboxes — byte-for-byte the
+//! ChannelNet path, no serialization. Traffic that crosses a shard
+//! boundary is framed by [`wire`](super::wire) and flows over one
+//! persistent TCP connection per worker pair (the higher rank dials,
+//! the lower rank accepts; the dialer owns reconnect).
+//!
+//! Liveness is leased everywhere, so a dead process degrades, never
+//! deadlocks:
+//!
+//! * every initiator wait is deadline-bounded (a silent peer times the
+//!   round out into a `Conflict`);
+//! * member-side captures expire on the ChannelNet lease, so a crashed
+//!   remote initiator cannot pin a member;
+//! * peers exchange heartbeats; a link silent past the liveness window
+//!   is marked dead and [`Transport::reachable`] turns false for every
+//!   node it owns, letting engines filter neighborhoods *before*
+//!   initiating (a dead peer costs `Conflict`/`Isolated`, not a
+//!   timeout per round).
+
+use std::collections::VecDeque;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::transport::{ProjectionOutcome, Transport};
+
+use super::wire::{self, WireMsg, MONITOR_RANK};
+
+/// Contiguous block partition of nodes `0..n` over `workers` ranks.
+/// Rank `i` owns a block of `n/workers` nodes (the first `n % workers`
+/// ranks own one extra).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    n: usize,
+    workers: usize,
+}
+
+impl ShardMap {
+    pub fn new(n: usize, workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one worker");
+        assert!(workers <= n, "more workers ({workers}) than nodes ({n})");
+        Self { n, workers }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Which rank owns `node`.
+    pub fn owner(&self, node: usize) -> u32 {
+        debug_assert!(node < self.n);
+        let q = self.n / self.workers;
+        let r = self.n % self.workers;
+        let fat = r * (q + 1); // nodes covered by the r larger shards
+        if node < fat {
+            (node / (q + 1)) as u32
+        } else {
+            (r + (node - fat) / q) as u32
+        }
+    }
+
+    /// The node block rank `rank` owns.
+    pub fn range(&self, rank: u32) -> Range<usize> {
+        let rank = rank as usize;
+        assert!(rank < self.workers);
+        let q = self.n / self.workers;
+        let r = self.n % self.workers;
+        let start = rank * q + rank.min(r);
+        let len = q + usize::from(rank < r);
+        start..start + len
+    }
+}
+
+/// Timing knobs for the socket substrate.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketConfig {
+    /// Deadline for one collect round (covers a peer's longest
+    /// inter-poll sleep plus a loopback round trip).
+    pub timeout: Duration,
+    /// Modeled projection hold the capture lease must survive (mirror
+    /// of `ChannelNet::with_round_budget`).
+    pub hold_budget: Duration,
+    /// Heartbeat send cadence between worker peers.
+    pub heartbeat: Duration,
+    /// A link silent for longer than this is dead.
+    pub liveness: Duration,
+    /// Redial cadence for a dead link (dialer side only).
+    pub reconnect: Duration,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        Self {
+            timeout: Duration::from_millis(150),
+            hold_budget: Duration::ZERO,
+            heartbeat: Duration::from_millis(200),
+            liveness: Duration::from_millis(1000),
+            reconnect: Duration::from_millis(200),
+        }
+    }
+}
+
+/// Mailbox messages — the ChannelNet protocol vocabulary. Identical
+/// semantics whether a leg traveled in-process or over a wire frame.
+enum NodeMsg {
+    Collect { from: usize, token: u64 },
+    Params { from: usize, token: u64, w: Vec<f32> },
+    Busy { token: u64 },
+    Apply { from: usize, token: u64, w: Vec<f32> },
+    Release { from: usize, token: u64 },
+}
+
+/// One owned node's parameter slot (same state machine as ChannelNet).
+struct Slot {
+    w: Vec<f32>,
+    locked_by: Option<(usize, u64)>,
+    locked_at: Option<Instant>,
+    initiating: bool,
+}
+
+/// Reply state of an in-flight collect round.
+struct Round {
+    token: u64,
+    replies: Vec<(usize, Vec<f32>)>,
+    busy: bool,
+}
+
+/// One peer rank's connection state.
+struct Link {
+    /// Dial address (set by [`SocketNet::connect_peers`]; the accept
+    /// side can run without one).
+    addr: Mutex<Option<String>>,
+    /// Write half of the live connection. `None` while down.
+    writer: Mutex<Option<TcpStream>>,
+    alive: AtomicBool,
+    last_seen: Mutex<Instant>,
+}
+
+impl Link {
+    fn new() -> Self {
+        Self {
+            addr: Mutex::new(None),
+            writer: Mutex::new(None),
+            alive: AtomicBool::new(false),
+            last_seen: Mutex::new(Instant::now()),
+        }
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        if let Some(s) = self.writer.lock().unwrap().take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn install(&self, stream: TcpStream) {
+        *self.last_seen.lock().unwrap() = Instant::now();
+        // Drop any stale socket before installing the fresh one.
+        if let Some(old) = self.writer.lock().unwrap().replace(stream) {
+            let _ = old.shutdown(Shutdown::Both);
+        }
+        self.alive.store(true, Ordering::SeqCst);
+    }
+
+    fn touch(&self) {
+        *self.last_seen.lock().unwrap() = Instant::now();
+    }
+}
+
+struct Inner {
+    rank: u32,
+    shard: ShardMap,
+    cfg: SocketConfig,
+    /// Member-side capture lease (ChannelNet sizing: survives a healthy
+    /// round's timeout + hold, frees a dead initiator's capture after).
+    lease: Duration,
+    /// First node of the owned block (slot/inbox index offset).
+    base: usize,
+    /// Flat parameter length — inbound vectors of any other length are
+    /// dropped at dispatch (a corrupt frame must not poison a slot).
+    param_len: usize,
+    slots: Vec<Mutex<Slot>>,
+    inboxes: Vec<Mutex<VecDeque<NodeMsg>>>,
+    next_token: AtomicU64,
+    /// Indexed by rank; `None` at our own rank.
+    links: Vec<Option<Link>>,
+    local_addr: SocketAddr,
+    /// Monitor (launcher) connections handed to the worker main loop.
+    control: Mutex<VecDeque<TcpStream>>,
+    hb_seq: AtomicU64,
+    stop: AtomicBool,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// The multi-process TCP transport. Cheap to clone (an `Arc` handle);
+/// call [`SocketNet::shutdown`] once per deployment to stop the
+/// background threads.
+#[derive(Clone)]
+pub struct SocketNet {
+    inner: Arc<Inner>,
+}
+
+impl SocketNet {
+    /// Bind `listen` (use port 0 for an OS-assigned port), start the
+    /// accept + heartbeat threads, and return the handle. Peers connect
+    /// later via [`SocketNet::connect_peers`] / inbound dials.
+    pub fn bind(
+        rank: u32,
+        shard: ShardMap,
+        param_len: usize,
+        listen: &str,
+        cfg: SocketConfig,
+    ) -> std::io::Result<Self> {
+        assert!((rank as usize) < shard.workers(), "rank out of range");
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let owned = shard.range(rank);
+        let inner = Arc::new(Inner {
+            rank,
+            shard,
+            cfg,
+            lease: cfg
+                .timeout
+                .saturating_mul(4)
+                .max(Duration::from_millis(20))
+                .saturating_add(cfg.hold_budget.saturating_mul(2)),
+            base: owned.start,
+            param_len,
+            slots: owned
+                .clone()
+                .map(|_| {
+                    Mutex::new(Slot {
+                        w: vec![0.0f32; param_len],
+                        locked_by: None,
+                        locked_at: None,
+                        initiating: false,
+                    })
+                })
+                .collect(),
+            inboxes: owned.map(|_| Mutex::new(VecDeque::new())).collect(),
+            next_token: AtomicU64::new(1),
+            links: (0..shard.workers() as u32)
+                .map(|r| (r != rank).then(Link::new))
+                .collect(),
+            local_addr,
+            control: Mutex::new(VecDeque::new()),
+            hb_seq: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            threads: Mutex::new(Vec::new()),
+        });
+        spawn_tracked(&inner, {
+            let inner = Arc::clone(&inner);
+            move || accept_loop(inner, listener)
+        });
+        spawn_tracked(&inner, {
+            let inner = Arc::clone(&inner);
+            move || heartbeat_loop(inner)
+        });
+        Ok(Self { inner })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr
+    }
+
+    /// Our rank's node block.
+    pub fn local_nodes(&self) -> Range<usize> {
+        self.inner.shard.range(self.inner.rank)
+    }
+
+    /// Record every rank's dial address and start dialer threads for
+    /// the ranks we are responsible for reaching (every rank below
+    /// ours — "higher dials lower", so exactly one side of each pair
+    /// owns reconnect). `peers[r]` is rank r's address; our own entry
+    /// is ignored.
+    pub fn connect_peers(&self, peers: &[String]) {
+        assert_eq!(peers.len(), self.inner.shard.workers());
+        for (r, addr) in peers.iter().enumerate() {
+            let r = r as u32;
+            if r == self.inner.rank {
+                continue;
+            }
+            if let Some(link) = &self.inner.links[r as usize] {
+                *link.addr.lock().unwrap() = Some(addr.clone());
+            }
+            if r < self.inner.rank {
+                spawn_tracked(&self.inner, {
+                    let inner = Arc::clone(&self.inner);
+                    move || dial_loop(inner, r)
+                });
+            }
+        }
+    }
+
+    /// Wait until every peer link is up, or `deadline` passes. Returns
+    /// whether the deployment is fully connected.
+    pub fn wait_connected(&self, deadline: Duration) -> bool {
+        let until = Instant::now() + deadline;
+        loop {
+            let all_up = self
+                .inner
+                .links
+                .iter()
+                .flatten()
+                .all(|l| l.alive.load(Ordering::SeqCst));
+            if all_up {
+                return true;
+            }
+            if Instant::now() >= until {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Is the link to `rank` currently up?
+    pub fn peer_alive(&self, rank: u32) -> bool {
+        self.inner.links[rank as usize]
+            .as_ref()
+            .map(|l| l.alive.load(Ordering::SeqCst))
+            .unwrap_or(true)
+    }
+
+    /// Every owned node's `(id, params)` — the worker's shard of a
+    /// monitor snapshot.
+    pub fn local_params(&self) -> Vec<(usize, Vec<f32>)> {
+        self.local_nodes()
+            .map(|id| {
+                (
+                    id,
+                    self.inner.slots[id - self.inner.base].lock().unwrap().w.clone(),
+                )
+            })
+            .collect()
+    }
+
+    /// Next monitor control connection accepted by the listener, if any
+    /// (worker main loops poll this).
+    pub fn take_control(&self) -> Option<TcpStream> {
+        self.inner.control.lock().unwrap().pop_front()
+    }
+
+    /// Stop background threads and close every connection. Idempotent.
+    pub fn shutdown(&self) {
+        let inner = &self.inner;
+        inner.stop.store(true, Ordering::SeqCst);
+        for link in inner.links.iter().flatten() {
+            link.mark_dead();
+        }
+        for s in inner.control.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Readers exit on their closed sockets; loops exit on `stop`.
+        // New reader handles cannot appear after the accept loop exits,
+        // so drain-until-empty terminates.
+        loop {
+            let handles: Vec<_> = inner.threads.lock().unwrap().drain(..).collect();
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn spawn_tracked(inner: &Arc<Inner>, f: impl FnOnce() + Send + 'static) {
+    let handle = std::thread::spawn(f);
+    inner.threads.lock().unwrap().push(handle);
+}
+
+/// Configure a fresh connection: low-latency small frames, bounded
+/// writes so a wedged peer surfaces as an error instead of a block.
+fn tune(stream: &TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+}
+
+// ---------------------------------------------------------------------------
+// Background threads
+// ---------------------------------------------------------------------------
+
+fn accept_loop(inner: Arc<Inner>, listener: TcpListener) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => handshake_inbound(&inner, stream),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// First frame on an inbound connection must be `Hello`; route the
+/// stream to a peer link or the control queue accordingly.
+fn handshake_inbound(inner: &Arc<Inner>, stream: TcpStream) {
+    tune(&stream);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    let hello = wire::read_frame(&mut reader);
+    let _ = stream.set_read_timeout(None);
+    match hello {
+        Ok(WireMsg::Hello { rank }) if rank == MONITOR_RANK => {
+            inner.control.lock().unwrap().push_back(stream);
+        }
+        Ok(WireMsg::Hello { rank }) if (rank as usize) < inner.links.len() => {
+            if let Some(link) = &inner.links[rank as usize] {
+                link.install(stream);
+                spawn_tracked(inner, {
+                    let inner = Arc::clone(inner);
+                    move || reader_loop(inner, rank, reader)
+                });
+            }
+        }
+        _ => {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Dialer for one lower-ranked peer: (re)connect whenever the link is
+/// down, send `Hello`, install the stream, spawn its reader.
+fn dial_loop(inner: Arc<Inner>, rank: u32) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        let link = inner.links[rank as usize].as_ref().expect("peer link");
+        if link.alive.load(Ordering::SeqCst) {
+            std::thread::sleep(inner.cfg.reconnect);
+            continue;
+        }
+        let Some(addr) = link.addr.lock().unwrap().clone() else {
+            std::thread::sleep(inner.cfg.reconnect);
+            continue;
+        };
+        // Bounded dial: a black-holed host (no RST) must not pin this
+        // thread for the OS SYN timeout — shutdown() joins us.
+        let Some(target) = std::net::ToSocketAddrs::to_socket_addrs(addr.as_str())
+            .ok()
+            .and_then(|mut a| a.next())
+        else {
+            std::thread::sleep(inner.cfg.reconnect);
+            continue;
+        };
+        match TcpStream::connect_timeout(&target, Duration::from_secs(2)) {
+            Ok(stream) => {
+                tune(&stream);
+                let hello = WireMsg::Hello { rank: inner.rank };
+                let ok = {
+                    let mut s = &stream;
+                    wire::write_frame(&mut s, &hello).is_ok()
+                };
+                if let (true, Ok(reader)) = (ok, stream.try_clone()) {
+                    link.install(stream);
+                    spawn_tracked(&inner, {
+                        let inner = Arc::clone(&inner);
+                        move || reader_loop(inner, rank, reader)
+                    });
+                } else {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+            Err(_) => std::thread::sleep(inner.cfg.reconnect),
+        }
+    }
+}
+
+/// Drain one peer connection, dispatching protocol frames into local
+/// node mailboxes. Exits when the socket dies (the link is then marked
+/// dead; reconnect is the dialer's job).
+fn reader_loop(inner: Arc<Inner>, rank: u32, mut stream: TcpStream) {
+    loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match wire::read_frame(&mut stream) {
+            Ok(msg) => {
+                if let Some(link) = &inner.links[rank as usize] {
+                    link.touch();
+                }
+                dispatch(&inner, msg);
+            }
+            Err(_) => {
+                if let Some(link) = &inner.links[rank as usize] {
+                    // Only kill the link if this socket is still the
+                    // installed one (a reconnect may have replaced it).
+                    // The (local, peer) address pair identifies a
+                    // socket on both the dial side (distinct local
+                    // ephemeral port) and the accept side (distinct
+                    // peer ephemeral port).
+                    if link.alive.load(Ordering::SeqCst) {
+                        let installed = link
+                            .writer
+                            .lock()
+                            .unwrap()
+                            .as_ref()
+                            .map(|w| (w.local_addr().ok(), w.peer_addr().ok()))
+                            == Some((stream.local_addr().ok(), stream.peer_addr().ok()));
+                        if installed {
+                            link.mark_dead();
+                        }
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Inbound wire frame → local mailbox message. Node ids are validated
+/// here — `to` must be ours, `from` must exist — so a corrupt or
+/// malicious frame is dropped instead of panicking a later reply's
+/// routing.
+fn dispatch(inner: &Inner, msg: WireMsg) {
+    let n = inner.shard.nodes();
+    let push = |from: u32, to: u32, m: NodeMsg| {
+        let (from, to) = (from as usize, to as usize);
+        if from < n && to < n && inner.shard.owner(to) == inner.rank {
+            inner.inboxes[to - inner.base].lock().unwrap().push_back(m);
+        }
+    };
+    match msg {
+        WireMsg::CollectRequest { from, to, token } => push(
+            from,
+            to,
+            NodeMsg::Collect {
+                from: from as usize,
+                token,
+            },
+        ),
+        WireMsg::CollectReply { from, to, token, w } => {
+            if w.len() == inner.param_len {
+                push(
+                    from,
+                    to,
+                    NodeMsg::Params {
+                        from: from as usize,
+                        token,
+                        w,
+                    },
+                );
+            }
+        }
+        WireMsg::Busy { from, to, token } => push(from, to, NodeMsg::Busy { token }),
+        WireMsg::Abort { from, to, token } => push(
+            from,
+            to,
+            NodeMsg::Release {
+                from: from as usize,
+                token,
+            },
+        ),
+        WireMsg::ApplyAverage { from, to, token, w } => {
+            if w.len() == inner.param_len {
+                push(
+                    from,
+                    to,
+                    NodeMsg::Apply {
+                        from: from as usize,
+                        token,
+                        w,
+                    },
+                );
+            }
+        }
+        // Heartbeats already touched the link; control frames are not
+        // valid on peer links.
+        WireMsg::Heartbeat { .. }
+        | WireMsg::Hello { .. }
+        | WireMsg::SnapshotRequest
+        | WireMsg::SnapshotReply { .. }
+        | WireMsg::Shutdown => {}
+    }
+}
+
+/// Send heartbeats and expire silent links.
+fn heartbeat_loop(inner: Arc<Inner>) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(inner.cfg.heartbeat);
+        let seq = inner.hb_seq.fetch_add(1, Ordering::Relaxed);
+        for (r, link) in inner.links.iter().enumerate() {
+            let Some(link) = link else { continue };
+            if !link.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            if link.last_seen.lock().unwrap().elapsed() > inner.cfg.liveness {
+                link.mark_dead();
+                continue;
+            }
+            send_wire(
+                &inner,
+                r as u32,
+                &WireMsg::Heartbeat {
+                    rank: inner.rank,
+                    seq,
+                },
+            );
+        }
+    }
+}
+
+/// Write one frame to a peer rank; a failed write kills the link (the
+/// message is lost — the protocol's deadlines absorb loss as Conflict).
+fn send_wire(inner: &Inner, rank: u32, msg: &WireMsg) {
+    let Some(link) = &inner.links[rank as usize] else {
+        return;
+    };
+    let mut writer = link.writer.lock().unwrap();
+    let Some(stream) = writer.as_mut() else {
+        return;
+    };
+    if wire::write_frame(stream, msg).is_err() {
+        if let Some(s) = writer.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        link.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The protocol (ChannelNet semantics, routed local-or-wire).
+//
+// This is transport/channel.rs's member/initiator state machine with
+// routing swapped from local deques to wire frames — protocol changes
+// there must land here too (and vice versa).
+// ---------------------------------------------------------------------------
+
+impl Inner {
+    fn is_local(&self, node: usize) -> bool {
+        self.shard.owner(node) == self.rank
+    }
+
+    fn slot(&self, node: usize) -> &Mutex<Slot> {
+        debug_assert!(self.is_local(node), "node {node} is not owned here");
+        &self.slots[node - self.base]
+    }
+
+    /// Route a protocol message to `to`: local mailbox or wire frame.
+    fn send(&self, from: usize, to: usize, msg: NodeMsg) {
+        if self.is_local(to) {
+            self.inboxes[to - self.base].lock().unwrap().push_back(msg);
+            return;
+        }
+        let (f, t) = (from as u32, to as u32);
+        let frame = match msg {
+            NodeMsg::Collect { token, .. } => WireMsg::CollectRequest { from: f, to: t, token },
+            NodeMsg::Params { token, w, .. } => WireMsg::CollectReply {
+                from: f,
+                to: t,
+                token,
+                w,
+            },
+            NodeMsg::Busy { token } => WireMsg::Busy { from: f, to: t, token },
+            NodeMsg::Apply { token, w, .. } => WireMsg::ApplyAverage {
+                from: f,
+                to: t,
+                token,
+                w,
+            },
+            NodeMsg::Release { token, .. } => WireMsg::Abort { from: f, to: t, token },
+        };
+        send_wire(self, self.shard.owner(to), &frame);
+    }
+
+    fn recv(&self, id: usize) -> Option<NodeMsg> {
+        self.inboxes[id - self.base].lock().unwrap().pop_front()
+    }
+
+    fn expire_stale_capture(&self, id: usize) {
+        let mut slot = self.slot(id).lock().unwrap();
+        if slot.locked_by.is_some()
+            && slot
+                .locked_at
+                .map(|t| t.elapsed() > self.lease)
+                .unwrap_or(false)
+        {
+            slot.locked_by = None;
+            slot.locked_at = None;
+        }
+    }
+
+    /// Process one inbound message for `id` — the ChannelNet state
+    /// machine verbatim, with replies routed local-or-wire.
+    fn handle(&self, id: usize, msg: NodeMsg, round: &mut Option<&mut Round>) {
+        match msg {
+            NodeMsg::Collect { from, token } => {
+                let reply = {
+                    let mut slot = self.slot(id).lock().unwrap();
+                    if slot.initiating || slot.locked_by.is_some() {
+                        None
+                    } else {
+                        slot.locked_by = Some((from, token));
+                        slot.locked_at = Some(Instant::now());
+                        Some(slot.w.clone())
+                    }
+                };
+                match reply {
+                    Some(w) => self.send(id, from, NodeMsg::Params { from: id, token, w }),
+                    None => self.send(id, from, NodeMsg::Busy { token }),
+                }
+            }
+            NodeMsg::Params { from, token, w } => match round {
+                Some(r) if r.token == token => r.replies.push((from, w)),
+                // Stale reply: the member is captured by our dead
+                // round's token — free it.
+                _ => self.send(id, from, NodeMsg::Release { from: id, token }),
+            },
+            NodeMsg::Busy { token } => {
+                if let Some(r) = round {
+                    if r.token == token {
+                        r.busy = true;
+                    }
+                }
+            }
+            NodeMsg::Apply { from, token, w } => {
+                let mut slot = self.slot(id).lock().unwrap();
+                if slot.locked_by == Some((from, token)) {
+                    slot.w = w;
+                    slot.locked_by = None;
+                    slot.locked_at = None;
+                }
+            }
+            NodeMsg::Release { from, token } => {
+                let mut slot = self.slot(id).lock().unwrap();
+                if slot.locked_by == Some((from, token)) {
+                    slot.locked_by = None;
+                    slot.locked_at = None;
+                }
+            }
+        }
+    }
+
+    fn drain(&self, id: usize, mut round: Option<&mut Round>) {
+        while let Some(msg) = self.recv(id) {
+            self.handle(id, msg, &mut round);
+        }
+    }
+}
+
+impl Transport for SocketNet {
+    fn len(&self) -> usize {
+        self.inner.shard.nodes()
+    }
+
+    fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>)) {
+        let mut slot = self.inner.slot(id).lock().unwrap();
+        f(&mut slot.w);
+    }
+
+    fn busy(&self, id: usize) -> bool {
+        self.inner.expire_stale_capture(id);
+        self.inner.slot(id).lock().unwrap().locked_by.is_some()
+    }
+
+    fn poll(&self, id: usize) {
+        self.inner.expire_stale_capture(id);
+        self.inner.drain(id, None);
+    }
+
+    fn reachable(&self, id: usize) -> bool {
+        let owner = self.inner.shard.owner(id);
+        owner == self.inner.rank
+            || self.inner.links[owner as usize]
+                .as_ref()
+                .map(|l| l.alive.load(Ordering::SeqCst))
+                .unwrap_or(false)
+    }
+
+    fn try_project(
+        &self,
+        id: usize,
+        hood: &[usize],
+        hold: Duration,
+        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+    ) -> ProjectionOutcome {
+        let inner = &*self.inner;
+        debug_assert!(hood.contains(&id));
+        debug_assert!(inner.is_local(id), "only the owner initiates for {id}");
+        if hood.len() < 2 {
+            return ProjectionOutcome::Isolated;
+        }
+        let token = inner.next_token.fetch_add(1, Ordering::Relaxed);
+        let own = {
+            let mut slot = inner.slot(id).lock().unwrap();
+            if slot.locked_by.is_some() {
+                return ProjectionOutcome::Conflict;
+            }
+            slot.initiating = true;
+            slot.w.clone()
+        };
+        let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
+        for &j in &peers {
+            inner.send(id, j, NodeMsg::Collect { from: id, token });
+        }
+        let mut round = Round {
+            token,
+            replies: Vec::with_capacity(peers.len()),
+            busy: false,
+        };
+        let deadline = Instant::now() + inner.cfg.timeout;
+        while round.replies.len() < peers.len() && !round.busy {
+            inner.drain(id, Some(&mut round));
+            if round.replies.len() >= peers.len() || round.busy {
+                break;
+            }
+            if Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let complete = round.replies.len() == peers.len() && !round.busy;
+        if !complete {
+            for (from, _) in &round.replies {
+                inner.send(id, *from, NodeMsg::Release { from: id, token });
+            }
+            inner.slot(id).lock().unwrap().initiating = false;
+            return ProjectionOutcome::Conflict;
+        }
+        if hold > Duration::ZERO {
+            std::thread::sleep(hold);
+        }
+        let rows: Vec<&[f32]> = hood
+            .iter()
+            .map(|&j| {
+                if j == id {
+                    own.as_slice()
+                } else {
+                    round
+                        .replies
+                        .iter()
+                        .find(|(from, _)| *from == j)
+                        .map(|(_, w)| w.as_slice())
+                        .expect("complete round has every peer's reply")
+                }
+            })
+            .collect();
+        let mean = avg(&rows);
+        for &j in &peers {
+            inner.send(
+                id,
+                j,
+                NodeMsg::Apply {
+                    from: id,
+                    token,
+                    w: mean.clone(),
+                },
+            );
+        }
+        let mut slot = inner.slot(id).lock().unwrap();
+        slot.w = mean;
+        slot.initiating = false;
+        ProjectionOutcome::Applied {
+            participants: hood.len(),
+        }
+    }
+
+    /// Owned nodes report real parameters; nodes of other shards are
+    /// empty vectors (a worker cannot see them — monitor-side snapshot
+    /// aggregation in [`crate::net::cluster`] composes the shards).
+    fn snapshot(&self) -> Vec<Vec<f32>> {
+        (0..self.inner.shard.nodes())
+            .map(|id| {
+                if self.inner.is_local(id) {
+                    self.inner.slot(id).lock().unwrap().w.clone()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node_logic::neighborhood_average;
+
+    fn fast_cfg() -> SocketConfig {
+        SocketConfig {
+            timeout: Duration::from_millis(200),
+            heartbeat: Duration::from_millis(40),
+            liveness: Duration::from_millis(250),
+            reconnect: Duration::from_millis(40),
+            ..SocketConfig::default()
+        }
+    }
+
+    /// Two ranks over loopback TCP, nodes 0..4 split 2+2.
+    fn pair(param_len: usize) -> (SocketNet, SocketNet) {
+        let shard = ShardMap::new(4, 2);
+        let a = SocketNet::bind(0, shard, param_len, "127.0.0.1:0", fast_cfg()).unwrap();
+        let b = SocketNet::bind(1, shard, param_len, "127.0.0.1:0", fast_cfg()).unwrap();
+        let peers = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+        a.connect_peers(&peers);
+        b.connect_peers(&peers);
+        assert!(a.wait_connected(Duration::from_secs(5)), "a never connected");
+        assert!(b.wait_connected(Duration::from_secs(5)), "b never connected");
+        (a, b)
+    }
+
+    fn pump(net: &SocketNet, ids: Vec<usize>, stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+        let net = net.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                for &j in &ids {
+                    net.poll(j);
+                }
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        })
+    }
+
+    #[test]
+    fn shard_map_blocks_cover_all_nodes() {
+        for (n, workers) in [(4, 2), (8, 3), (10, 4), (7, 7), (5, 1)] {
+            let s = ShardMap::new(n, workers);
+            let mut seen = vec![false; n];
+            for r in 0..workers as u32 {
+                for node in s.range(r) {
+                    assert_eq!(s.owner(node), r, "n={n} w={workers} node={node}");
+                    assert!(!seen[node]);
+                    seen[node] = true;
+                }
+            }
+            assert!(seen.iter().all(|&v| v), "n={n} w={workers}");
+        }
+    }
+
+    #[test]
+    fn cross_shard_projection_round_trips_over_tcp() {
+        let (a, b) = pair(2);
+        // World: node 1 (rank 0) initiates over {0, 1, 2}; node 2 lives
+        // on rank 1, across the wire.
+        a.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
+        b.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps = vec![pump(&a, vec![0], stop.clone()), pump(&b, vec![2, 3], stop.clone())];
+        let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+        // Wait for the Apply to land on rank 1's node 2.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let w2 = b.local_params()[0].1.clone();
+            if w2 == vec![1.0, 2.0] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "Apply never landed: {w2:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(a.local_params()[0].1, vec![1.0, 2.0]);
+        assert_eq!(a.local_params()[1].1, vec![1.0, 2.0]);
+        stop.store(true, Ordering::Relaxed);
+        for p in pumps {
+            p.join().unwrap();
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn dead_peer_times_out_as_conflict_and_goes_unreachable() {
+        let (a, b) = pair(1);
+        assert!(a.reachable(2));
+        // Kill rank 1 without ceremony (a crashed worker).
+        b.shutdown();
+        // A round over the dead peer's node must abort, not hang.
+        let t0 = Instant::now();
+        let out = a.try_project(1, &[1, 2], Duration::ZERO, &mut |rows| {
+            neighborhood_average(rows)
+        });
+        assert_eq!(out, ProjectionOutcome::Conflict);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "round must be deadline-bounded"
+        );
+        // Liveness marks the peer's nodes unreachable soon after.
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while a.reachable(2) {
+            assert!(Instant::now() < deadline, "peer never went unreachable");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(a.reachable(0), "own nodes stay reachable");
+        a.shutdown();
+    }
+
+    #[test]
+    fn reconnect_restores_the_link() {
+        let (a, b) = pair(1);
+        // Drop rank 1's view of the link; the dialer (rank 1) must
+        // re-establish it.
+        if let Some(link) = &b.inner.links[0] {
+            link.mark_dead();
+        }
+        assert!(
+            b.wait_connected(Duration::from_secs(5)),
+            "dialer should reconnect a dropped link"
+        );
+        a.shutdown();
+        b.shutdown();
+    }
+}

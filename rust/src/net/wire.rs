@@ -1,0 +1,543 @@
+//! Length-prefixed binary wire codec for the SocketNet deployment.
+//!
+//! One frame on the wire is
+//!
+//! ```text
+//! [len: u32 LE] [version: u8] [tag: u8] [body ...]
+//! ```
+//!
+//! where `len` counts everything after the length prefix. The message
+//! set is the ChannelNet projection protocol (`CollectRequest` /
+//! `CollectReply` / `Busy` / `Abort` / `ApplyAverage`) plus the control
+//! plane (`Hello` / `Heartbeat` / `SnapshotRequest` / `SnapshotReply` /
+//! `Shutdown`). All integers are little-endian; `f32` vectors are raw
+//! LE bit patterns (NaN-safe round trips).
+//!
+//! Decoding is total: malformed input — truncated bodies, unknown
+//! versions or tags, length prefixes that would allocate more than
+//! [`MAX_FRAME_LEN`], trailing garbage — returns a [`WireError`], never
+//! panics and never allocates proportionally to attacker-controlled
+//! lengths beyond the frame cap.
+
+use std::io::{Read, Write};
+
+/// Codec version stamped into every frame. Bump on any layout change;
+/// decoders reject mismatches outright (a deployment never mixes
+/// versions — workers are all spawned from the same binary).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's payload (version + tag + body). A frame
+/// carries at most one parameter vector per node of a snapshot shard;
+/// 16 MiB is orders of magnitude above anything the system produces and
+/// small enough that a garbage length prefix cannot balloon memory.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+/// The rank [`Hello`](WireMsg::Hello) uses to identify the monitor
+/// (launcher) control connection rather than a worker peer.
+pub const MONITOR_RANK: u32 = u32::MAX;
+
+/// Everything that crosses a SocketNet TCP connection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// First frame on every connection: who is dialing. Worker ranks
+    /// are `0..workers`; [`MONITOR_RANK`] marks the launcher's control
+    /// connection.
+    Hello { rank: u32 },
+    /// Periodic liveness beacon between worker peers.
+    Heartbeat { rank: u32, seq: u64 },
+    /// Initiator `from` asks member `to` to join projection round
+    /// `token` (ChannelNet `Collect` over the wire).
+    CollectRequest { from: u32, to: u32, token: u64 },
+    /// Member `from` grants the round and ships its parameter vector
+    /// (ChannelNet `Params`).
+    CollectReply {
+        from: u32,
+        to: u32,
+        token: u64,
+        w: Vec<f32>,
+    },
+    /// Member `from` refuses: it is captured or itself initiating — the
+    /// §IV-C lock-up expressed as a message.
+    Busy { from: u32, to: u32, token: u64 },
+    /// Initiator `from` aborts round `token`: member `to` drops its
+    /// capture and keeps its value (ChannelNet `Release`).
+    Abort { from: u32, to: u32, token: u64 },
+    /// Initiator `from` completes round `token`: member `to` adopts the
+    /// neighborhood average `w` and unlocks (ChannelNet `Apply`).
+    ApplyAverage {
+        from: u32,
+        to: u32,
+        token: u64,
+        w: Vec<f32>,
+    },
+    /// Monitor → worker: report your shard.
+    SnapshotRequest,
+    /// Worker → monitor: cumulative counters in the canonical
+    /// convention (`grad_steps`, `proj_steps`, `messages`, `conflicts`)
+    /// plus every owned node's current parameter vector.
+    SnapshotReply {
+        rank: u32,
+        counts: [u64; 4],
+        params: Vec<(u32, Vec<f32>)>,
+    },
+    /// Monitor → worker: stop node threads and exit cleanly.
+    Shutdown,
+}
+
+impl WireMsg {
+    fn tag(&self) -> u8 {
+        match self {
+            WireMsg::Hello { .. } => 0,
+            WireMsg::Heartbeat { .. } => 1,
+            WireMsg::CollectRequest { .. } => 2,
+            WireMsg::CollectReply { .. } => 3,
+            WireMsg::Busy { .. } => 4,
+            WireMsg::Abort { .. } => 5,
+            WireMsg::ApplyAverage { .. } => 6,
+            WireMsg::SnapshotRequest => 7,
+            WireMsg::SnapshotReply { .. } => 8,
+            WireMsg::Shutdown => 9,
+        }
+    }
+}
+
+/// Why a frame failed to decode (or a stream failed to deliver one).
+#[derive(Debug)]
+pub enum WireError {
+    /// Stream-level failure (includes EOF mid-frame).
+    Io(std::io::Error),
+    /// The body ended before the fields it promises.
+    Truncated,
+    /// Version byte we do not speak.
+    Version { got: u8 },
+    /// Tag byte outside the message set.
+    UnknownTag { got: u8 },
+    /// Length prefix beyond [`MAX_FRAME_LEN`] (or an element count the
+    /// remaining bytes cannot possibly hold).
+    Oversize { len: usize },
+    /// Bytes left over after the last field — the frame lied about its
+    /// own layout.
+    Trailing { extra: usize },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::Truncated => write!(f, "frame body truncated"),
+            WireError::Version { got } => {
+                write!(f, "wire version {got} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
+            WireError::Oversize { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap")
+            }
+            WireError::Trailing { extra } => {
+                write!(f, "{extra} trailing bytes after the last field")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, w: &[f32]) {
+    put_u32(buf, w.len() as u32);
+    for &v in w {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize one message into a complete frame (length prefix included).
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let mut body = Vec::with_capacity(32);
+    body.push(WIRE_VERSION);
+    body.push(msg.tag());
+    match msg {
+        WireMsg::Hello { rank } => put_u32(&mut body, *rank),
+        WireMsg::Heartbeat { rank, seq } => {
+            put_u32(&mut body, *rank);
+            put_u64(&mut body, *seq);
+        }
+        WireMsg::CollectRequest { from, to, token }
+        | WireMsg::Busy { from, to, token }
+        | WireMsg::Abort { from, to, token } => {
+            put_u32(&mut body, *from);
+            put_u32(&mut body, *to);
+            put_u64(&mut body, *token);
+        }
+        WireMsg::CollectReply { from, to, token, w }
+        | WireMsg::ApplyAverage { from, to, token, w } => {
+            put_u32(&mut body, *from);
+            put_u32(&mut body, *to);
+            put_u64(&mut body, *token);
+            put_f32s(&mut body, w);
+        }
+        WireMsg::SnapshotRequest | WireMsg::Shutdown => {}
+        WireMsg::SnapshotReply {
+            rank,
+            counts,
+            params,
+        } => {
+            put_u32(&mut body, *rank);
+            for &c in counts {
+                put_u64(&mut body, c);
+            }
+            put_u32(&mut body, params.len() as u32);
+            for (node, w) in params {
+                put_u32(&mut body, *node);
+                put_f32s(&mut body, w);
+            }
+        }
+    }
+    debug_assert!(body.len() <= MAX_FRAME_LEN);
+    let mut frame = Vec::with_capacity(4 + body.len());
+    put_u32(&mut frame, body.len() as u32);
+    frame.extend_from_slice(&body);
+    frame
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A length-prefixed f32 vector. The count is validated against the
+    /// bytes actually remaining before any allocation, so a garbage
+    /// count cannot balloon memory.
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let count = self.u32()? as usize;
+        if count.checked_mul(4).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(WireError::Oversize { len: count });
+        }
+        let bytes = self.take(count * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        match self.remaining() {
+            0 => Ok(()),
+            extra => Err(WireError::Trailing { extra }),
+        }
+    }
+}
+
+/// Decode one frame *body* (the bytes after the length prefix).
+pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
+    let mut c = Cursor::new(body);
+    let version = c.u8()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::Version { got: version });
+    }
+    let tag = c.u8()?;
+    let msg = match tag {
+        0 => WireMsg::Hello { rank: c.u32()? },
+        1 => WireMsg::Heartbeat {
+            rank: c.u32()?,
+            seq: c.u64()?,
+        },
+        2 => WireMsg::CollectRequest {
+            from: c.u32()?,
+            to: c.u32()?,
+            token: c.u64()?,
+        },
+        3 => WireMsg::CollectReply {
+            from: c.u32()?,
+            to: c.u32()?,
+            token: c.u64()?,
+            w: c.f32s()?,
+        },
+        4 => WireMsg::Busy {
+            from: c.u32()?,
+            to: c.u32()?,
+            token: c.u64()?,
+        },
+        5 => WireMsg::Abort {
+            from: c.u32()?,
+            to: c.u32()?,
+            token: c.u64()?,
+        },
+        6 => WireMsg::ApplyAverage {
+            from: c.u32()?,
+            to: c.u32()?,
+            token: c.u64()?,
+            w: c.f32s()?,
+        },
+        7 => WireMsg::SnapshotRequest,
+        8 => {
+            let rank = c.u32()?;
+            let mut counts = [0u64; 4];
+            for slot in &mut counts {
+                *slot = c.u64()?;
+            }
+            let n = c.u32()? as usize;
+            // Each entry needs at least a node id + an (empty) vector
+            // count: 8 bytes. Reject counts the body cannot hold.
+            if n.checked_mul(8).map(|b| b > c.remaining()).unwrap_or(true) {
+                return Err(WireError::Oversize { len: n });
+            }
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.u32()?;
+                params.push((node, c.f32s()?));
+            }
+            WireMsg::SnapshotReply {
+                rank,
+                counts,
+                params,
+            }
+        }
+        9 => WireMsg::Shutdown,
+        got => return Err(WireError::UnknownTag { got }),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Decode from a growing byte buffer (e.g. accumulated TCP reads).
+/// Returns `Ok(None)` when `buf` holds only a prefix of a frame (read
+/// more and retry), `Ok(Some((msg, consumed)))` on success, and an
+/// error for malformed input.
+pub fn decode(buf: &[u8]) -> Result<Option<(WireMsg, usize)>, WireError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversize { len });
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let msg = decode_body(&buf[4..4 + len])?;
+    Ok(Some((msg, 4 + len)))
+}
+
+/// Write one frame to a blocking stream.
+pub fn write_frame(w: &mut impl Write, msg: &WireMsg) -> Result<(), WireError> {
+    w.write_all(&encode(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly one frame from a blocking stream. EOF or a timeout
+/// mid-frame surfaces as [`WireError::Io`].
+pub fn read_frame(r: &mut impl Read) -> Result<WireMsg, WireError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversize { len });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_body(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: WireMsg) {
+        let frame = encode(&msg);
+        let (back, consumed) = decode(&frame).unwrap().expect("complete frame");
+        assert_eq!(consumed, frame.len());
+        assert_eq!(back, msg);
+        // The streaming reader agrees.
+        let mut cursor = std::io::Cursor::new(frame);
+        assert_eq!(read_frame(&mut cursor).unwrap(), msg);
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        roundtrip(WireMsg::Hello { rank: 3 });
+        roundtrip(WireMsg::Hello { rank: MONITOR_RANK });
+        roundtrip(WireMsg::Heartbeat { rank: 0, seq: u64::MAX });
+        roundtrip(WireMsg::CollectRequest {
+            from: 7,
+            to: 12,
+            token: 99,
+        });
+        roundtrip(WireMsg::CollectReply {
+            from: 12,
+            to: 7,
+            token: 99,
+            w: vec![1.0, -2.5, 0.0],
+        });
+        roundtrip(WireMsg::CollectReply {
+            from: 0,
+            to: 1,
+            token: 0,
+            w: vec![],
+        });
+        roundtrip(WireMsg::Busy {
+            from: 2,
+            to: 3,
+            token: 5,
+        });
+        roundtrip(WireMsg::Abort {
+            from: 4,
+            to: 5,
+            token: 6,
+        });
+        roundtrip(WireMsg::ApplyAverage {
+            from: 1,
+            to: 2,
+            token: 3,
+            w: vec![0.25; 200],
+        });
+        roundtrip(WireMsg::SnapshotRequest);
+        roundtrip(WireMsg::SnapshotReply {
+            rank: 1,
+            counts: [10, 20, 30, 40],
+            params: vec![(4, vec![1.5, 2.5]), (5, vec![])],
+        });
+        roundtrip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn nan_and_infinity_survive_by_bits() {
+        let w = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+        let frame = encode(&WireMsg::CollectReply {
+            from: 0,
+            to: 1,
+            token: 2,
+            w: w.clone(),
+        });
+        let (back, _) = decode(&frame).unwrap().unwrap();
+        let WireMsg::CollectReply { w: got, .. } = back else {
+            panic!("wrong variant");
+        };
+        let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn incomplete_prefixes_ask_for_more() {
+        let frame = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 });
+        for cut in 0..frame.len() {
+            assert!(
+                decode(&frame[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes should be incomplete, not an error"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_frames_error_not_panic() {
+        // Wrong version.
+        let mut frame = encode(&WireMsg::Shutdown);
+        frame[4] = WIRE_VERSION + 1;
+        assert!(matches!(
+            decode(&frame),
+            Err(WireError::Version { .. })
+        ));
+        // Unknown tag.
+        let mut frame = encode(&WireMsg::Shutdown);
+        frame[5] = 200;
+        assert!(matches!(decode(&frame), Err(WireError::UnknownTag { got: 200 })));
+        // Body shorter than the fields it promises.
+        let good = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 });
+        let mut lying = good.clone();
+        lying[0..4].copy_from_slice(&((good.len() as u32) - 4 - 3).to_le_bytes());
+        assert!(matches!(
+            decode(&lying[..lying.len() - 3]),
+            Err(WireError::Truncated)
+        ));
+        // Trailing garbage inside the declared frame length.
+        let mut padded = encode(&WireMsg::Shutdown);
+        padded.extend_from_slice(&[0xAA, 0xBB]);
+        padded[0..4].copy_from_slice(&4u32.to_le_bytes()); // version+tag+2 junk
+        assert!(matches!(decode(&padded), Err(WireError::Trailing { extra: 2 })));
+        // Oversize length prefix refuses before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        huge.extend_from_slice(&[WIRE_VERSION, 0]);
+        assert!(matches!(decode(&huge), Err(WireError::Oversize { .. })));
+        // Vector count larger than the remaining bytes.
+        let mut body = vec![WIRE_VERSION, 3]; // CollectReply
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&2u64.to_le_bytes());
+        body.extend_from_slice(&(1_000_000u32).to_le_bytes()); // count, no data
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Oversize { .. })));
+    }
+
+    #[test]
+    fn two_frames_in_one_buffer_decode_in_order() {
+        let mut buf = encode(&WireMsg::Hello { rank: 9 });
+        buf.extend_from_slice(&encode(&WireMsg::SnapshotRequest));
+        let (first, used) = decode(&buf).unwrap().unwrap();
+        assert_eq!(first, WireMsg::Hello { rank: 9 });
+        let (second, used2) = decode(&buf[used..]).unwrap().unwrap();
+        assert_eq!(second, WireMsg::SnapshotRequest);
+        assert_eq!(used + used2, buf.len());
+    }
+}

@@ -19,6 +19,11 @@
 //! mailbox while waiting, so no two rounds can block each other:
 //! the protocol is abort-based, like the sorted try-lock it mirrors.
 //!
+//! [`SocketNet`](crate::net::SocketNet) carries this exact member /
+//! initiator state machine across processes (`rust/src/net/socket.rs`,
+//! with routing swapped from local deques to wire frames) — keep the
+//! two in sync when touching protocol semantics.
+//!
 //! A member is *captured* between `Params` and `Apply`/`Release`; the
 //! node loop checks [`Transport::busy`] before acting so a captured
 //! variable is not updated mid-round. Captures are *leased*: if the

@@ -18,6 +18,11 @@
 //!   probability, and partition schedules, with incremental parameter
 //!   materialization and O(dim) consensus aggregates so 10,000+ node
 //!   systems simulate in seconds.
+//! * [`SocketNet`](crate::net::SocketNet) — the multi-process
+//!   deployment substrate (`rust/src/net/`): each worker process owns a
+//!   shard of nodes, intra-shard traffic short-circuits through local
+//!   mailboxes, and cross-shard traffic carries the same
+//!   collect/broadcast protocol over persistent TCP connections.
 
 mod channel;
 mod shared_mem;
@@ -80,6 +85,16 @@ pub trait Transport: Send + Sync {
         false
     }
 
+    /// True when node `id` is currently reachable through this
+    /// substrate. In-process substrates always answer true; the
+    /// multi-process [`SocketNet`](crate::net::SocketNet) answers false
+    /// for nodes owned by a worker whose link is down, so engines can
+    /// liveness-filter neighborhoods before initiating a round (a dead
+    /// peer degrades to `Conflict`/`Isolated`, never a hang).
+    fn reachable(&self, _id: usize) -> bool {
+        true
+    }
+
     /// Service node `id`'s inbound protocol traffic (no-op for
     /// substrates without mailboxes). Wall-clock node loops call this
     /// every iteration.
@@ -97,16 +112,22 @@ pub enum TransportKind {
     SharedMem,
     /// Message-passing mailboxes (collect/broadcast protocol).
     Channel,
+    /// Multi-process TCP deployment: the ChannelNet protocol over real
+    /// sockets. Runs via `dasgd launch` / `dasgd worker`
+    /// (see `rust/src/net/`); a single-process `cluster` run cannot
+    /// construct it.
+    Socket,
 }
 
 impl TransportKind {
     /// CLI names.
-    pub const NAMES: [&'static str; 2] = ["shared", "channel"];
+    pub const NAMES: [&'static str; 3] = ["shared", "channel", "socket"];
 
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "shared" | "shared-mem" | "sharedmem" => Some(TransportKind::SharedMem),
             "channel" | "channels" => Some(TransportKind::Channel),
+            "socket" | "sockets" | "tcp" => Some(TransportKind::Socket),
             _ => None,
         }
     }
@@ -115,6 +136,7 @@ impl TransportKind {
         match self {
             TransportKind::SharedMem => "shared",
             TransportKind::Channel => "channel",
+            TransportKind::Socket => "socket",
         }
     }
 }
@@ -127,6 +149,8 @@ mod tests {
     fn transport_kind_parse() {
         assert_eq!(TransportKind::parse("shared"), Some(TransportKind::SharedMem));
         assert_eq!(TransportKind::parse("channel"), Some(TransportKind::Channel));
+        assert_eq!(TransportKind::parse("socket"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Socket));
         assert_eq!(TransportKind::parse("udp"), None);
         for n in TransportKind::NAMES {
             assert_eq!(TransportKind::parse(n).unwrap().name(), n);

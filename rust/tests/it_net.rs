@@ -1,0 +1,262 @@
+//! Integration: the multi-process SocketNet deployment.
+//!
+//! * In-process pair — two `SocketNet` shards over loopback TCP drive
+//!   the same `spawn_shard` engine the workers use and reach the
+//!   consensus tolerance of the in-process channel transport.
+//! * Real processes — `dasgd launch --workers 2` (spawned from the
+//!   built binary) reaches the same tolerance with matching seeds, and
+//!   killing one worker mid-run leaves the survivor making progress
+//!   (projections degrade to Conflict/Isolated, no hang).
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dasgd::coordinator::{consensus, spawn_shard, AsyncCluster, AsyncConfig};
+use dasgd::experiments::{make_regular, synth_world};
+use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
+use dasgd::net::{LaunchConfig, ShardMap, SocketConfig, SocketNet};
+use dasgd::objective::Objective;
+use dasgd::transport::{Transport, TransportKind};
+
+/// Consensus tolerance shared by every engine comparison on the fixed
+/// ring world below (`it_transport.rs` uses 5.0 for shared-vs-simnet;
+/// the message-passing substrates complete fewer projection rounds per
+/// second — protocol waits + poll cadence — so they get a more generous
+/// common bound).
+const TOL: f64 = 10.0;
+const SEED: u64 = 42;
+const NODES: usize = 8;
+
+fn dasgd_bin() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_dasgd"))
+}
+
+/// The in-process reference: the channel transport on the same world.
+fn channel_consensus() -> (f64, u64) {
+    let (shards, test) = synth_world(NODES, 300, 512, SEED);
+    let cluster = AsyncCluster::new(make_regular(NODES, 2), shards);
+    let cfg = AsyncConfig {
+        duration_secs: 2.0,
+        rate_hz: 300.0,
+        transport: TransportKind::Channel,
+        seed: SEED,
+        ..AsyncConfig::quick(NODES)
+    };
+    let rep = cluster.run(&cfg, &test).unwrap();
+    (consensus::consensus_distance(&rep.final_params), rep.updates)
+}
+
+#[test]
+fn socket_pair_matches_channel_consensus_tolerance_in_process() {
+    // Two SocketNet shards over real loopback TCP, one spawn_shard
+    // engine each — the worker path without process boundaries.
+    let (shards, _test) = synth_world(NODES, 300, 512, SEED);
+    let graph = make_regular(NODES, 2); // fixed ring
+    let param_len = Objective::LogReg.param_len(shards[0].dim(), shards[0].classes());
+    let map = ShardMap::new(NODES, 2);
+    let cfg_net = SocketConfig::default();
+    let a = SocketNet::bind(0, map, param_len, "127.0.0.1:0", cfg_net).unwrap();
+    let b = SocketNet::bind(1, map, param_len, "127.0.0.1:0", cfg_net).unwrap();
+    let peers = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+    a.connect_peers(&peers);
+    b.connect_peers(&peers);
+    assert!(a.wait_connected(Duration::from_secs(5)));
+    assert!(b.wait_connected(Duration::from_secs(5)));
+
+    let cfg = AsyncConfig {
+        rate_hz: 300.0,
+        seed: SEED,
+        transport: TransportKind::Socket,
+        ..AsyncConfig::quick(NODES)
+    };
+    let run_a = spawn_shard(
+        &graph,
+        &shards,
+        Objective::LogReg,
+        &cfg,
+        Arc::new(a.clone()) as Arc<dyn Transport>,
+        a.local_nodes(),
+        None,
+    );
+    let run_b = spawn_shard(
+        &graph,
+        &shards,
+        Objective::LogReg,
+        &cfg,
+        Arc::new(b.clone()) as Arc<dyn Transport>,
+        b.local_nodes(),
+        None,
+    );
+    std::thread::sleep(Duration::from_secs(2));
+    let ca = run_a.stop_and_join();
+    let cb = run_b.stop_and_join();
+
+    let mut params: Vec<(usize, Vec<f32>)> = a.local_params();
+    params.extend(b.local_params());
+    params.sort_by_key(|(id, _)| *id);
+    let cohort: Vec<Vec<f32>> = params.into_iter().map(|(_, w)| w).collect();
+    assert_eq!(cohort.len(), NODES);
+    let d_socket = consensus::consensus_distance(&cohort);
+    a.shutdown();
+    b.shutdown();
+
+    let (d_channel, channel_updates) = channel_consensus();
+    assert!(ca.updates() + cb.updates() > 100, "socket updates too few");
+    assert!(channel_updates > 100, "channel updates too few");
+    assert!(
+        ca.proj_steps + cb.proj_steps > 0,
+        "no projection completed across the wire"
+    );
+    assert!(
+        d_socket < TOL,
+        "socket consensus {d_socket} ≥ {TOL} (channel reached {d_channel})"
+    );
+    assert!(d_channel < TOL, "channel consensus {d_channel} ≥ {TOL}");
+    assert!(cohort.iter().all(|w| w.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn launch_two_workers_reaches_channel_tolerance() {
+    // The full CLI path: `dasgd launch` semantics driven through
+    // run_launch with the built binary as the worker image.
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        horizon_updates: 1500,
+        secs_cap: 25.0,
+        seed: SEED,
+        ..LaunchConfig::quick(2, NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("launch failed");
+    assert_eq!(rep.live_workers, 2, "both workers must stay live");
+    assert!(rep.reached_horizon, "run must end at the horizon, not the cap");
+    assert!(
+        rep.counts.updates() >= 1500,
+        "stopped before the horizon: {} updates",
+        rep.counts.updates()
+    );
+    assert!(rep.counts.proj_steps > 0, "no cross-process projections");
+    let last = rep.recorder.last().expect("monitor recorded snapshots");
+    let (d_channel, _) = channel_consensus();
+    assert!(
+        last.consensus < TOL,
+        "launch consensus {} ≥ {TOL} (channel reached {d_channel})",
+        last.consensus
+    );
+    assert!(d_channel < TOL);
+    assert!(last.test_err.is_finite() && last.test_err < 0.9);
+}
+
+/// Snapshot one worker over a monitor control connection.
+fn snapshot(conn: &mut TcpStream) -> Option<(u64, Vec<(u32, Vec<f32>)>)> {
+    wire::write_frame(conn, &WireMsg::SnapshotRequest).ok()?;
+    match wire::read_frame(conn).ok()? {
+        WireMsg::SnapshotReply { counts, params, .. } => Some((counts[0] + counts[1], params)),
+        _ => None,
+    }
+}
+
+#[test]
+fn killing_one_worker_leaves_the_survivor_live() {
+    // Two REAL worker processes; rank 1 is killed without ceremony.
+    // The survivor must keep applying updates (its cross-shard
+    // projections degrade to conflicts) and still answer snapshots.
+    let peers: Vec<String> = (0..2)
+        .map(|_| {
+            let port = TcpListener::bind("127.0.0.1:0")
+                .unwrap()
+                .local_addr()
+                .unwrap()
+                .port();
+            format!("127.0.0.1:{port}")
+        })
+        .collect();
+    let bin = dasgd_bin();
+    let mut children: Vec<_> = (0..2)
+        .map(|rank| {
+            Command::new(&bin)
+                .args([
+                    "worker",
+                    "--rank",
+                    &rank.to_string(),
+                    "--peers",
+                    &peers.join(","),
+                    "--nodes",
+                    &NODES.to_string(),
+                    "--degree",
+                    "2",
+                    "--secs",
+                    "20",
+                    "--rate",
+                    "300",
+                    "--seed",
+                    "7",
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+
+    // Monitor-connect to the survivor (rank 0).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut conn = loop {
+        if let Ok(mut s) = TcpStream::connect(&peers[0]) {
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            if wire::write_frame(&mut s, &WireMsg::Hello { rank: MONITOR_RANK }).is_ok() {
+                break s;
+            }
+        }
+        assert!(Instant::now() < deadline, "worker 0 never accepted");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+
+    // Wait until the deployment is actually making progress.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let before_kill = loop {
+        if let Some((k, params)) = snapshot(&mut conn) {
+            // The worker reports exactly its own shard (nodes 0..4).
+            assert!(params.iter().all(|(id, _)| *id < 4));
+            if k > 50 {
+                break k;
+            }
+        }
+        assert!(Instant::now() < deadline, "worker 0 never made progress");
+        std::thread::sleep(Duration::from_millis(100));
+    };
+
+    children[1].kill().expect("kill worker 1");
+    let _ = children[1].wait();
+
+    // The survivor keeps updating after the peer is gone — and answers
+    // within a bounded time (no wedged projection rounds).
+    std::thread::sleep(Duration::from_secs(1));
+    let k1 = snapshot(&mut conn).expect("survivor must answer").0;
+    std::thread::sleep(Duration::from_secs(1));
+    let k2 = snapshot(&mut conn).expect("survivor must answer").0;
+    assert!(
+        k2 > k1 && k1 >= before_kill,
+        "survivor stalled after peer death: {before_kill} → {k1} → {k2}"
+    );
+
+    // Graceful shutdown still works on the survivor.
+    wire::write_frame(&mut conn, &WireMsg::Shutdown).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match children[0].try_wait().unwrap() {
+            Some(status) => {
+                assert!(status.success(), "survivor exited with {status}");
+                break;
+            }
+            None => {
+                if Instant::now() >= deadline {
+                    let _ = children[0].kill();
+                    panic!("survivor never exited after Shutdown");
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}

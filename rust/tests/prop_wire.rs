@@ -1,0 +1,131 @@
+//! Property tests for the SocketNet wire codec: arbitrary messages
+//! round-trip exactly, and arbitrary bytes — garbage, bit flips,
+//! truncations — decode to a clean error or "need more", never a panic
+//! and never a huge allocation.
+
+use dasgd::net::wire::{decode, encode, read_frame, WireMsg};
+use dasgd::util::proptest::{check, Gen};
+
+/// One arbitrary message (finite payloads so `PartialEq` is exact;
+/// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
+fn arb_msg(g: &mut Gen) -> WireMsg {
+    let w_len = g.usize_in(0, g.size * 64);
+    match g.usize_in(0, 9) {
+        0 => WireMsg::Hello {
+            rank: g.usize_in(0, 1 << 20) as u32,
+        },
+        1 => WireMsg::Heartbeat {
+            rank: g.usize_in(0, 64) as u32,
+            seq: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        2 => WireMsg::CollectRequest {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        3 => WireMsg::CollectReply {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+            w: g.f32_vec(w_len, -1e6, 1e6),
+        },
+        4 => WireMsg::Busy {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        5 => WireMsg::Abort {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        6 => WireMsg::ApplyAverage {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+            w: g.f32_vec(w_len, -1e6, 1e6),
+        },
+        7 => WireMsg::SnapshotRequest,
+        8 => {
+            let shard = g.usize_in(0, 8);
+            WireMsg::SnapshotReply {
+                rank: g.usize_in(0, 64) as u32,
+                counts: [
+                    g.usize_in(0, 1 << 30) as u64,
+                    g.usize_in(0, 1 << 30) as u64,
+                    g.usize_in(0, 1 << 30) as u64,
+                    g.usize_in(0, 1 << 30) as u64,
+                ],
+                params: (0..shard)
+                    .map(|i| {
+                        let len = g.usize_in(0, 64);
+                        (i as u32, g.f32_vec(len, -100.0, 100.0))
+                    })
+                    .collect(),
+            }
+        }
+        _ => WireMsg::Shutdown,
+    }
+}
+
+#[test]
+fn arbitrary_messages_round_trip() {
+    check("wire-roundtrip", 300, 0xC0DEC, |g| {
+        let msg = arb_msg(g);
+        let frame = encode(&msg);
+        let (back, consumed) = decode(&frame)
+            .map_err(|e| format!("decode of own encoding failed: {e}"))?
+            .ok_or("own encoding reported incomplete")?;
+        if consumed != frame.len() {
+            return Err(format!("consumed {consumed} of {} bytes", frame.len()));
+        }
+        if back != msg {
+            return Err(format!("round trip changed the message: {msg:?} → {back:?}"));
+        }
+        // The blocking stream reader agrees with the buffer decoder.
+        let mut cursor = std::io::Cursor::new(&frame);
+        match read_frame(&mut cursor) {
+            Ok(m) if m == msg => Ok(()),
+            Ok(m) => Err(format!("stream read disagreed: {m:?}")),
+            Err(e) => Err(format!("stream read failed: {e}")),
+        }
+    });
+}
+
+#[test]
+fn truncated_frames_ask_for_more_never_panic() {
+    check("wire-truncation", 200, 0x7A11, |g| {
+        let msg = arb_msg(g);
+        let frame = encode(&msg);
+        let cut = g.usize_in(0, frame.len().saturating_sub(1));
+        match decode(&frame[..cut]) {
+            Ok(None) => Ok(()),
+            Ok(Some(_)) => Err(format!(
+                "a {cut}-byte prefix of a {}-byte frame decoded as complete",
+                frame.len()
+            )),
+            Err(e) => Err(format!("prefix decode must ask for more, got error: {e}")),
+        }
+    });
+}
+
+#[test]
+fn garbage_and_bit_flips_error_never_panic() {
+    check("wire-garbage", 500, 0xBAD, |g| {
+        // Arbitrary bytes: any Result is fine, panics/aborts are not.
+        let len = g.usize_in(0, 256);
+        let garbage: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let _ = decode(&garbage);
+        // A valid frame with one flipped byte must also decode totally.
+        let frame = encode(&arb_msg(g));
+        let mut bent = frame.clone();
+        let at = g.usize_in(0, bent.len() - 1);
+        bent[at] ^= 1 << g.usize_in(0, 7);
+        let _ = decode(&bent);
+        // And the stream reader survives garbage too (EOF mid-frame is
+        // an Io error, not a hang or panic).
+        let mut cursor = std::io::Cursor::new(&garbage);
+        let _ = read_frame(&mut cursor);
+        Ok(())
+    });
+}
