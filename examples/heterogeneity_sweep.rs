@@ -1,0 +1,44 @@
+//! Heterogeneity sweep: the same 24-node asynchronous system under
+//! workloads of rising per-node skew — label-skew Dirichlet α from
+//! near-IID down to pathological, quantity skew, covariate shift, and
+//! a mixed hinge/Lasso cohort.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneity_sweep
+//! cargo run --release --example heterogeneity_sweep -- --scale 1.0 --seed 7
+//! ```
+//!
+//! Each row is one `WorkloadPlan` driven through the event-driven
+//! SimNet engine at an identical virtual-time budget; only the data
+//! assignment (and, in the last row, the per-node objective) changes.
+
+use dasgd::cli::Args;
+use dasgd::experiments::heterogeneity;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let scale = args.get_f64("scale", 0.5).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&["scale", "seed"])
+        .map_err(anyhow::Error::msg)?;
+
+    println!("== heterogeneous per-node workloads ==");
+    println!(
+        "24 nodes, 4-regular, identical virtual-time budget per row \
+         (scale {scale}, seed {seed});\nsmaller Dirichlet α = stronger label \
+         skew. The mixed row alternates hinge and lasso objectives\nper node \
+         and reports the node-weighted per-family metric.\n"
+    );
+    let rows = heterogeneity::run(scale, seed)?;
+    heterogeneity::table(&rows).print();
+    for note in heterogeneity::check_shape(&rows) {
+        println!("  {note}");
+    }
+    println!(
+        "\nSame sweep via the CLI: `dasgd heterogeneity`, or one point with\n\
+         `dasgd sim --plan dirichlet --dirichlet-alpha 0.1` — and the \
+         multi-process path:\n`dasgd launch --workers 2 --plan mixed \
+         --dirichlet-alpha 0.1` (shards ship over TCP)."
+    );
+    Ok(())
+}

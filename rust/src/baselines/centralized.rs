@@ -28,6 +28,34 @@ impl CentralizedSgd {
         Self::for_objective(Objective::LogReg, dim, classes, stepsize, seed)
     }
 
+    /// The centralized reference for a [`WorkloadPlan`]: one variable,
+    /// all shards pooled into a single dataset (returned alongside).
+    /// Requires a single loss family — one pooled variable cannot
+    /// optimize two objectives at once, so mixed plans have no
+    /// centralized counterpart.
+    pub fn from_plan(
+        plan: &crate::workload::WorkloadPlan,
+        stepsize: StepSize,
+        seed: u64,
+    ) -> (Self, Dataset) {
+        assert!(
+            !plan.is_mixed(),
+            "a mixed-objective plan has no single centralized reference"
+        );
+        let mut pool = Dataset::new(plan.dim(), plan.classes());
+        for i in 0..plan.len() {
+            pool.extend(plan.shard(i));
+        }
+        let sgd = Self::for_objective(
+            plan.objective(0),
+            plan.dim(),
+            plan.classes(),
+            stepsize,
+            seed,
+        );
+        (sgd, pool)
+    }
+
     /// Centralized SGD on an arbitrary §II objective.
     pub fn for_objective(
         objective: Objective,
@@ -128,6 +156,26 @@ mod tests {
         let last = rec.last().unwrap().test_err;
         assert!(last < first, "err {first} -> {last}");
         assert!(last < 0.4, "final err {last}");
+    }
+
+    #[test]
+    fn from_plan_pools_every_shard() {
+        use crate::workload::PlanSpec;
+        let (plan, test) =
+            PlanSpec::Dirichlet { alpha: 0.3 }.build(Objective::LogReg, 4, 50, 100, 11);
+        let (mut sgd, pool) = CentralizedSgd::from_plan(&plan, StepSize::paper_default(1), 3);
+        assert_eq!(pool.len(), 4 * 50);
+        assert_eq!(sgd.w.len(), 50 * 10);
+        let rec = sgd.run(&pool, &test, 500, 500);
+        assert!(rec.last().unwrap().test_err.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "no single centralized reference")]
+    fn from_plan_rejects_mixed_objectives() {
+        use crate::workload::PlanSpec;
+        let (plan, _) = PlanSpec::Mixed { alpha: 0.5 }.build(Objective::LogReg, 4, 30, 10, 1);
+        let _ = CentralizedSgd::from_plan(&plan, StepSize::paper_default(1), 3);
     }
 
     #[test]

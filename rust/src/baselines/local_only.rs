@@ -5,16 +5,18 @@
 //! loss family through the canonical
 //! [`node_logic::sgd_step`](crate::node_logic::sgd_step).
 
-use crate::coordinator::{consensus, EvalBatch, StepSize};
+use crate::coordinator::{consensus, StepSize};
 use crate::data::Dataset;
-use crate::node_logic;
+use crate::node_logic::{self, Probe};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
+use crate::workload::WorkloadPlan;
 
 /// Train each node independently for `iters_per_node` steps of `obj`;
 /// return (error metric of β̄ on the global test set, mean per-node
 /// error metric on it). The metric is the objective's: misclassification
-/// rate for logreg/hinge, RMSE for lasso.
+/// rate for logreg/hinge, RMSE for lasso. (A thin wrapper over
+/// [`local_only_errors_plan`].)
 pub fn local_only_errors_for(
     obj: Objective,
     shards: &[Dataset],
@@ -23,25 +25,62 @@ pub fn local_only_errors_for(
     iters_per_node: u64,
     seed: u64,
 ) -> (f64, f64) {
-    let dim = shards[0].dim();
-    let classes = shards[0].classes();
-    let batch = EvalBatch::for_objective(obj, test, None);
-    let eval = |w: &[f32]| batch.eval(obj, w).1 as f64;
-    let mut root = Xoshiro256pp::seeded(seed);
-    let mut params = Vec::with_capacity(shards.len());
-    let mut per_node_err = 0.0f64;
-    for (i, shard) in shards.iter().enumerate() {
-        let mut rng = root.split(i as u64);
-        let mut w = vec![0.0f32; obj.param_len(dim, classes)];
-        for k in 0..iters_per_node {
-            node_logic::sgd_step(obj, &mut w, shard, &mut rng, dim, classes, stepsize.at(k), 1.0);
+    let plan = WorkloadPlan::homogeneous(obj, shards.to_vec());
+    local_only_errors_plan(&plan, test, stepsize, iters_per_node, seed)
+}
+
+/// Local-only lower bound with per-node construction from a
+/// [`WorkloadPlan`]: each node trains *its own* objective on *its own*
+/// shard. A node's error is measured under its own family; the mean
+/// model's error follows the mixed-cohort convention
+/// ([`Probe::mixed`]).
+pub fn local_only_errors_plan(
+    plan: &WorkloadPlan,
+    test: &Dataset,
+    stepsize: StepSize,
+    iters_per_node: u64,
+    seed: u64,
+) -> (f64, f64) {
+    let dim = plan.dim();
+    let classes = plan.classes();
+    let probe = Probe::mixed(&plan.objectives(), test);
+    // One single-objective probe per distinct objective, λ included
+    // (per-node metrics are measured under the node's own loss).
+    let mut family_probes: Vec<(Objective, Probe)> = Vec::new();
+    for o in plan.objectives() {
+        if !family_probes.iter().any(|(e, _)| *e == o) {
+            family_probes.push((o, Probe::new(o, test)));
         }
-        per_node_err += eval(&w);
+    }
+    let mut root = Xoshiro256pp::seeded(seed);
+    let mut params = Vec::with_capacity(plan.len());
+    let mut per_node_err = 0.0f64;
+    for i in 0..plan.len() {
+        let obj = plan.objective(i);
+        let mut rng = root.split(i as u64);
+        let mut w = vec![0.0f32; plan.param_len()];
+        for k in 0..iters_per_node {
+            node_logic::sgd_step(
+                obj,
+                &mut w,
+                plan.shard(i),
+                &mut rng,
+                dim,
+                classes,
+                stepsize.at(k),
+                1.0,
+            );
+        }
+        let fam = family_probes
+            .iter()
+            .find(|(o, _)| *o == obj)
+            .expect("every node's objective has a probe");
+        per_node_err += fam.1.eval(&w).1 as f64;
         params.push(w);
     }
-    per_node_err /= shards.len() as f64;
+    per_node_err /= plan.len() as f64;
     let mean = consensus::mean_param(&params);
-    (eval(&mean), per_node_err)
+    (probe.eval(&mean).1 as f64, per_node_err)
 }
 
 /// Logistic-regression shorthand (the paper's setting).

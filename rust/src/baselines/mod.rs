@@ -19,6 +19,6 @@ mod server_worker;
 mod sync_dsgd;
 
 pub use centralized::CentralizedSgd;
-pub use local_only::{local_only_errors, local_only_errors_for};
-pub use server_worker::{server_worker, ServerWorkerConfig, ServerWorkerReport};
-pub use sync_dsgd::{sync_dsgd, SyncDsgdConfig, SyncDsgdReport};
+pub use local_only::{local_only_errors, local_only_errors_for, local_only_errors_plan};
+pub use server_worker::{server_worker, server_worker_plan, ServerWorkerConfig, ServerWorkerReport};
+pub use sync_dsgd::{sync_dsgd, sync_dsgd_plan, SyncDsgdConfig, SyncDsgdReport};

@@ -16,6 +16,7 @@ use crate::node_logic::{self, Counts, Probe};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
+use crate::workload::WorkloadPlan;
 
 #[derive(Clone, Debug)]
 pub struct ServerWorkerConfig {
@@ -39,16 +40,31 @@ pub struct ServerWorkerReport {
     pub messages: u64,
 }
 
-/// Run the parameter-server baseline.
+/// Run the parameter-server baseline with one objective on every
+/// worker (a thin wrapper over [`server_worker_plan`]).
 pub fn server_worker(
     shards: &[Dataset],
     test: &Dataset,
     cfg: &ServerWorkerConfig,
 ) -> ServerWorkerReport {
-    let n = shards.len();
+    let plan = WorkloadPlan::homogeneous(cfg.objective, shards.to_vec());
+    server_worker_plan(&plan, test, cfg)
+}
+
+/// Parameter-server baseline with per-worker construction from a
+/// [`WorkloadPlan`]: each surviving worker computes the gradient of
+/// *its own* loss family at the current global variable (families must
+/// share the parameter space — the plan guarantees it). `cfg.objective`
+/// is superseded by the plan.
+pub fn server_worker_plan(
+    plan: &WorkloadPlan,
+    test: &Dataset,
+    cfg: &ServerWorkerConfig,
+) -> ServerWorkerReport {
+    let n = plan.len();
     assert!(n > 0);
-    let dim = shards[0].dim();
-    let classes = shards[0].classes();
+    let dim = plan.dim();
+    let classes = plan.classes();
     let mut root = Xoshiro256pp::seeded(cfg.seed);
     let mut rngs: Vec<Xoshiro256pp> = (0..n).map(|i| root.split(i as u64)).collect();
     let mut straggler_rng = root.split(u64::MAX);
@@ -59,10 +75,9 @@ pub fn server_worker(
         cfg.worker_speed.clone()
     };
 
-    let obj = cfg.objective;
-    let mut global = vec![0.0f32; obj.param_len(dim, classes)];
+    let mut global = vec![0.0f32; plan.param_len()];
     let keep = ((n as f64) * (1.0 - cfg.drop_frac)).ceil().max(1.0) as usize;
-    let probe = Probe::new(obj, test);
+    let probe = Probe::mixed(&plan.objectives(), test);
 
     let mut rec = Recorder::new("server_worker");
     let sw = Stopwatch::new();
@@ -97,9 +112,9 @@ pub fn server_worker(
         for &(_, i) in survivors {
             let mut local = global.clone();
             node_logic::sgd_step(
-                obj,
+                plan.objective(i),
                 &mut local,
-                &shards[i],
+                plan.shard(i),
                 &mut rngs[i],
                 dim,
                 classes,

@@ -47,6 +47,7 @@ use crate::transport::{
 };
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
+use crate::workload::WorkloadPlan;
 
 use super::backend::PjrtArtifacts;
 use super::config::StepSize;
@@ -218,29 +219,40 @@ fn node_rng(seed: u64, i: usize) -> Xoshiro256pp {
 }
 
 /// Spawn one thread per node in `owned`, each driving a [`NodeLogic`]
-/// over `transport`. The engine-construction primitive behind
+/// built from its [`WorkloadPlan`] assignment (objective + shard) over
+/// `transport`. The engine-construction primitive behind
 /// [`AsyncCluster::run`] (owned = all nodes) and the multi-process
 /// worker (`dasgd worker`; owned = the worker's shard block).
-#[allow(clippy::too_many_arguments)]
+///
+/// Homogeneous plans use `cfg.stepsize` everywhere; mixed plans give
+/// each node its own family's default schedule (one hinge-stable step
+/// would overshoot the Lasso curvature bound — see
+/// docs/heterogeneity.md).
 pub fn spawn_shard(
     graph: &Graph,
-    shards: &[Dataset],
-    objective: Objective,
+    plan: &WorkloadPlan,
     cfg: &AsyncConfig,
     transport: Arc<dyn Transport>,
     owned: std::ops::Range<usize>,
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
 ) -> ShardRun {
     let n = graph.len();
-    assert_eq!(shards.len(), n, "one data shard per node");
+    assert_eq!(plan.len(), n, "one workload assignment per node");
     assert!(owned.end <= n);
-    let (dim, classes) = (shards[0].dim(), shards[0].classes());
+    let (dim, classes) = (plan.dim(), plan.classes());
+    let mixed = plan.is_mixed();
     let shared = Arc::new(Shared::new(n));
     let mut handles = Vec::with_capacity(owned.len());
     for i in owned {
         let mut rng = node_rng(cfg.seed, i);
         let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
-        let logic = NodeLogic::new(i, objective, cfg.p_grad, shards[i].clone(), n, rng);
+        let a = plan.node(i);
+        let logic = NodeLogic::new(i, a.objective, cfg.p_grad, a.shard.clone(), n, rng);
+        let stepsize = if mixed {
+            a.objective.default_stepsize(n)
+        } else {
+            cfg.stepsize
+        };
         let shared = Arc::clone(&shared);
         let transport = Arc::clone(&transport);
         let graph = graph.clone();
@@ -248,7 +260,7 @@ pub fn spawn_shard(
         let executor = executor.as_ref().map(|(h, a)| (h.clone(), a.clone()));
         handles.push(std::thread::spawn(move || {
             node_loop(
-                logic, rate, shared, transport, graph, cfg, executor, dim, classes,
+                logic, rate, stepsize, shared, transport, graph, cfg, executor, dim, classes,
             );
         }));
     }
@@ -258,34 +270,34 @@ pub fn spawn_shard(
 /// A networked system ready to run asynchronously.
 pub struct AsyncCluster {
     graph: Graph,
-    shards: Vec<Dataset>,
-    dim: usize,
-    classes: usize,
-    /// The loss family every node optimizes (logreg by default).
-    objective: Objective,
+    /// Per-node workload (objective + shard); logreg-homogeneous for
+    /// the [`AsyncCluster::new`] constructor.
+    plan: WorkloadPlan,
     /// Optional PJRT execution (native math when `None`).
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
 }
 
 impl AsyncCluster {
     pub fn new(graph: Graph, shards: Vec<Dataset>) -> Self {
-        assert_eq!(graph.len(), shards.len());
+        Self::from_plan(graph, WorkloadPlan::homogeneous(Objective::LogReg, shards))
+    }
+
+    /// A cluster over an explicit per-node workload (heterogeneous
+    /// objectives and/or non-IID shards).
+    pub fn from_plan(graph: Graph, plan: WorkloadPlan) -> Self {
+        assert_eq!(graph.len(), plan.len());
         assert!(graph.is_connected(), "consensus needs a connected graph");
-        let dim = shards[0].dim();
-        let classes = shards[0].classes();
         Self {
             graph,
-            shards,
-            dim,
-            classes,
-            objective: Objective::LogReg,
+            plan,
             executor: None,
         }
     }
 
-    /// Optimize a different §II objective (hinge-SVM, lasso).
+    /// Optimize a different §II objective (hinge-SVM, lasso) on every
+    /// node.
     pub fn with_objective(mut self, objective: Objective) -> Self {
-        self.objective = objective;
+        self.plan = self.plan.with_uniform_objective(objective);
         self
     }
 
@@ -304,16 +316,22 @@ impl AsyncCluster {
         // staged per call, so artifacts are λ-agnostic and a custom
         // regularization strength must not abort the cluster.
         if let Some((_, arts)) = &self.executor {
-            if arts.objective.name() != self.objective.name() {
+            if self.plan.is_mixed() {
+                bail!(
+                    "PJRT executor artifacts are compiled per loss family; \
+                     a mixed-objective plan must run on the native backend"
+                );
+            }
+            if arts.objective.name() != self.plan.objective(0).name() {
                 bail!(
                     "executor artifacts are for objective {}, but the cluster optimizes {}",
                     arts.objective.name(),
-                    self.objective.name()
+                    self.plan.objective(0).name()
                 );
             }
         }
         let n = self.graph.len();
-        let param_len = self.objective.param_len(self.dim, self.classes);
+        let param_len = self.plan.param_len();
         let transport: Arc<dyn Transport> = match cfg.transport {
             TransportKind::SharedMem => Arc::new(SharedMem::new(n, param_len)),
             TransportKind::Channel => Arc::new(ChannelNet::with_round_budget(
@@ -331,8 +349,7 @@ impl AsyncCluster {
         };
         let run = spawn_shard(
             &self.graph,
-            &self.shards,
-            self.objective,
+            &self.plan,
             cfg,
             Arc::clone(&transport),
             0..n,
@@ -340,7 +357,7 @@ impl AsyncCluster {
         );
 
         // Monitor loop (runs inline on the caller's thread).
-        let probe = Probe::new(self.objective, test);
+        let probe = Probe::mixed(&self.plan.objectives(), test);
         let mut rec = Recorder::new("async");
         let sw = Stopwatch::new();
         let mut killed = 0usize;
@@ -390,11 +407,14 @@ impl AsyncCluster {
 }
 
 /// One node's thread: fire on the exponential clock, act through the
-/// transport, count in the canonical convention.
+/// transport, count in the canonical convention. `stepsize` is this
+/// node's schedule (per-family for mixed plans, `cfg.stepsize`
+/// otherwise).
 #[allow(clippy::too_many_arguments)]
 fn node_loop(
     mut logic: NodeLogic,
     rate_hz: f64,
+    stepsize: StepSize,
     shared: Arc<Shared>,
     transport: Arc<dyn Transport>,
     graph: Graph,
@@ -422,7 +442,7 @@ fn node_loop(
             continue; // captured by a neighbor's in-flight projection
         }
         let k = shared.k.load(Ordering::Relaxed);
-        let lr = cfg.stepsize.at(k);
+        let lr = stepsize.at(k);
         match logic.draw_action() {
             Action::Grad => {
                 // Local gradient step: only our own variable (Eq. 6).
@@ -602,6 +622,32 @@ mod tests {
             .final_params
             .iter()
             .any(|w| w.iter().any(|v| *v != 0.0)));
+    }
+
+    #[test]
+    fn mixed_objective_plan_runs_heterogeneous_nodes() {
+        // Hinge and lasso nodes share the (dim)-shaped parameter space
+        // and gossip across family boundaries.
+        use crate::workload::PlanSpec;
+        let (plan, test) =
+            PlanSpec::Mixed { alpha: 0.5 }.build(Objective::LogReg, 6, 60, 200, 17);
+        let c = AsyncCluster::from_plan(regular_circulant(6, 2), plan);
+        let cfg = AsyncConfig {
+            duration_secs: 1.0,
+            rate_hz: 400.0,
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 100, "updates={}", rep.updates);
+        assert!(rep.proj_steps > 0, "no cross-family projection applied");
+        // (dim)-shaped parameters, all finite.
+        assert!(rep.final_params.iter().all(|w| w.len() == 50));
+        assert!(rep
+            .final_params
+            .iter()
+            .all(|w| w.iter().all(|v| v.is_finite())));
+        let last = rep.recorder.last().unwrap();
+        assert!(last.test_loss.is_finite() && last.test_err.is_finite());
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig6;
+pub mod heterogeneity;
 pub mod lemma1;
 pub mod losses;
 pub mod straggler;

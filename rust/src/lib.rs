@@ -37,6 +37,7 @@ pub mod runtime;
 pub mod sim;
 pub mod transport;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

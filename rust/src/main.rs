@@ -6,13 +6,14 @@
 use dasgd::cli::{self, Args};
 use dasgd::coordinator::{AsyncCluster, AsyncConfig, Objective, PjrtArtifacts, StepSize};
 use dasgd::data::{ascii_art, render_glyph, GlyphStyle, NotMnistGen};
-use dasgd::experiments::{self, fig2, fig3, fig4, fig6, lemma1, straggler};
+use dasgd::experiments::{self, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
 use dasgd::metrics::Table;
-use dasgd::net::{run_launch, run_worker, LaunchConfig, WorkerConfig};
+use dasgd::net::{run_launch, run_worker, LaunchConfig, WorkerConfig, WorkerPlanSource};
 use dasgd::runtime::{Engine, ExecutorService};
-use dasgd::sim::{simnet_run, SimConfig, SpeedModel};
+use dasgd::sim::{simnet_run_plan, SimConfig, SpeedModel};
 use dasgd::transport::{LatencyModel, PartitionWindow, SimNetConfig, TransportKind};
 use dasgd::util::rng::Xoshiro256pp;
+use dasgd::workload::PlanSpec;
 
 const USAGE: &str = "\
 dasgd — Fully Distributed and Asynchronized SGD for Networked Systems
@@ -34,6 +35,8 @@ Ablations / extensions:
   conflicts   §IV-C: distributed selection, lock-up vs ignore
   topology    consensus across graph families
   straggler   async vs sync DSGD vs server-worker in virtual time
+  heterogeneity  consensus/error vs per-node skew: Dirichlet label-skew
+              sweep, quantity skew, feature shift, mixed hinge+lasso
 
 System:
   train       one Alg. 2 run (--nodes N --degree K --iters I
@@ -43,19 +46,29 @@ System:
   cluster     live threaded asynchronous cluster (--secs S --kill N
               --kill-after T to crash N nodes at time T
               --backend native|pjrt --rate HZ --spread X
-              --transport shared|channel|socket)
+              --transport shared|channel|socket --plan P --dirichlet-alpha A)
   sim         delay/drop-aware virtual-time simulation, 10k+ nodes
               (--nodes N --degree K --horizon S --latency-ms L
               --jitter-ms J --drop-prob P --objective logreg|hinge|lasso
-              --partition T0:T1:CUT --samples M --straggle X)
+              --partition T0:T1:CUT --samples M --straggle X
+              --plan P --dirichlet-alpha A)
   launch      multi-process deployment on this machine: spawn K worker
-              processes + monitor them (--workers K --nodes N --degree D
-              --horizon U applied updates --secs S cap --rate HZ
-              --objective ... --csv PATH)
+              processes, ship each its workload shards over TCP, monitor
+              them (--workers K --nodes N --degree D --horizon U applied
+              updates --secs S cap --rate HZ --objective ...
+              --plan P --dirichlet-alpha A --csv PATH)
   worker      one deployment worker process (--rank R
               --peers host:port,host:port,... --nodes N --degree D
-              --secs S --rate HZ --objective ...); `launch` spawns these
+              --secs S --rate HZ --objective ... --plan P|wire
+              --param-len L with wire); `launch` spawns these
   artifacts   verify the AOT artifact set loads + executes
+
+Workload plans (--plan): synth (default, the §V-A per-node world),
+dirichlet (label-skew split of a pooled world), quantity (skewed shard
+sizes), feature-shift (per-node covariate shift), mixed (dirichlet +
+alternating hinge/lasso objectives). --dirichlet-alpha A is the skew
+knob (Dirichlet α, or σ for feature-shift; default 0.5). See
+docs/heterogeneity.md.
 
 Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
@@ -97,6 +110,19 @@ fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
     Objective::parse(name).ok_or_else(|| unknown_value("objective", name, &Objective::NAMES))
 }
 
+/// Parse `--plan` + `--dirichlet-alpha` into a workload recipe,
+/// rejecting unknown names with a suggestion.
+fn parse_plan(args: &Args) -> anyhow::Result<PlanSpec> {
+    let alpha = args
+        .get_f64("dirichlet-alpha", PlanSpec::DEFAULT_ALPHA)
+        .map_err(anyhow::Error::msg)?;
+    if alpha.is_nan() || alpha <= 0.0 {
+        anyhow::bail!("--dirichlet-alpha must be > 0, got {alpha}");
+    }
+    let name = args.get_str("plan", "synth");
+    PlanSpec::parse(name, alpha).ok_or_else(|| unknown_value("plan", name, &PlanSpec::NAMES))
+}
+
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -126,7 +152,7 @@ fn print_notes(notes: &[String]) {
 fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
     Some(match cmd {
         "fig2" | "fig3" | "fig4" | "fig6" | "lemma1" | "glyphs" | "losses" | "comm"
-        | "conflicts" | "topology" | "straggler" | "artifacts" => &[],
+        | "conflicts" | "topology" | "straggler" | "heterogeneity" | "artifacts" => &[],
         "train" => &[
             "nodes",
             "degree",
@@ -146,6 +172,8 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "kill-after",
             "backend",
             "transport",
+            "plan",
+            "dirichlet-alpha",
         ],
         "sim" => &[
             "nodes",
@@ -159,6 +187,8 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "objective",
             "samples",
             "straggle",
+            "plan",
+            "dirichlet-alpha",
             "csv",
         ],
         "launch" => &[
@@ -170,6 +200,8 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "eval-every",
             "rate",
             "objective",
+            "plan",
+            "dirichlet-alpha",
             "csv",
         ],
         "worker" => &[
@@ -180,6 +212,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "secs",
             "rate",
             "objective",
+            "plan",
+            "dirichlet-alpha",
+            "param-len",
         ],
         _ => return None,
     })
@@ -260,6 +295,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("Stragglers — async vs synchronized schemes (virtual time)");
             straggler::table(&rows).print();
             print_notes(&straggler::check_shape(&rows));
+        }
+        Some("heterogeneity") => {
+            let rows = heterogeneity::run(scale, seed)?;
+            println!("Heterogeneous workloads — consensus/error vs per-node skew");
+            heterogeneity::table(&rows).print();
+            print_notes(&heterogeneity::check_shape(&rows));
         }
         Some("train") => cmd_train(args, scale, seed)?,
         Some("cluster") => cmd_cluster(args, seed)?,
@@ -373,8 +414,9 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
             &TransportKind::NAMES,
         ));
     };
-    let (shards, test) = experiments::synth_world(n, 300, 512, seed);
-    let mut cluster = AsyncCluster::new(experiments::make_regular(n, degree), shards);
+    let plan_spec = parse_plan(args)?;
+    let (plan, test) = plan_spec.build(Objective::LogReg, n, 300, 512, seed);
+    let mut cluster = AsyncCluster::from_plan(experiments::make_regular(n, degree), plan);
     let _service: Option<ExecutorService>;
     if backend_name == "pjrt" {
         let service = ExecutorService::start("artifacts", 2)?;
@@ -398,8 +440,9 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
     };
     println!(
         "async cluster: {n} node threads, degree {degree}, {secs}s @ {rate}/s/node \
-         (spread {spread}, transport {})",
-        transport.name()
+         (spread {spread}, transport {}, plan {})",
+        transport.name(),
+        plan_spec.name()
     );
     let rep = cluster.run(&cfg, &test)?;
     let mut t = Table::new(&["t (s)", "k", "d^k", "test err", "conflicts"]);
@@ -468,7 +511,8 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         }
     };
 
-    let (shards, test) = experiments::synth_world(n, samples, 512, seed);
+    let plan_spec = parse_plan(args)?;
+    let (plan, test) = plan_spec.build(objective, n, samples, 512, seed);
     let g = experiments::make_regular(n, degree);
     let speeds = if straggle > 1.0 {
         SpeedModel::with_stragglers(n, 1.0, (n / 10).max(1), straggle)
@@ -495,11 +539,12 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     };
     println!(
         "simnet: {n} nodes, degree {degree}, horizon {horizon}s, latency ≤{latency_ms}ms \
-         (+Exp jitter {jitter_ms}ms), drop {:.1}%, objective {objective}",
-        drop_prob * 100.0
+         (+Exp jitter {jitter_ms}ms), drop {:.1}%, objective {objective}, plan {}",
+        drop_prob * 100.0,
+        plan_spec.name()
     );
     let wall = std::time::Instant::now();
-    let rep = simnet_run(&g, &shards, &test, &speeds, &cfg);
+    let rep = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
     let wall = wall.elapsed().as_secs_f64();
     let consensus_col = if n <= dasgd::sim::EXACT_SCAN_MAX {
         "d^k"
@@ -543,6 +588,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
     let objective = parse_objective(args)?;
+    let plan = parse_plan(args)?;
     let cfg = LaunchConfig {
         workers,
         nodes,
@@ -552,12 +598,15 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         eval_every_secs: eval_every,
         rate_hz: rate,
         objective,
+        plan,
         seed,
         binary: None,
     };
     println!(
         "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \
-         horizon {horizon} updates, objective {objective}"
+         horizon {horizon} updates, objective {objective}, plan {} \
+         (shards ship over the wire)",
+        plan.name()
     );
     let rep = run_launch(&cfg)?;
     let mut t = Table::new(&["t (s)", "k", "d^k", "test err", "conflicts"]);
@@ -609,6 +658,28 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
+    // A worker either derives its plan locally from a recipe (identical
+    // on every machine given the seed) or — `--plan wire` — receives it
+    // from the launch monitor, which then must also say `--param-len`
+    // so the engine can bind before the data arrives.
+    let plan_name = args.get_str("plan", "synth");
+    let plan = if plan_name == "wire" {
+        let param_len = args.get_usize("param-len", 0).map_err(anyhow::Error::msg)?;
+        if param_len == 0 {
+            anyhow::bail!("--plan wire needs --param-len L (the launcher supplies it)");
+        }
+        WorkerPlanSource::Wire { param_len }
+    } else {
+        let alpha = args
+            .get_f64("dirichlet-alpha", PlanSpec::DEFAULT_ALPHA)
+            .map_err(anyhow::Error::msg)?;
+        let mut known: Vec<&str> = PlanSpec::NAMES.to_vec();
+        known.push("wire");
+        let Some(spec) = PlanSpec::parse(plan_name, alpha) else {
+            return Err(unknown_value("plan", plan_name, &known));
+        };
+        WorkerPlanSource::Local(spec)
+    };
     let cfg = WorkerConfig {
         rank,
         peers,
@@ -617,6 +688,7 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         secs: args.get_f64("secs", 30.0).map_err(anyhow::Error::msg)?,
         rate_hz: args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?,
         objective: parse_objective(args)?,
+        plan,
         seed,
     };
     run_worker(&cfg)?;

@@ -7,16 +7,26 @@
 //! substrate. Workers rendezvous by address list: every rank binds its
 //! own entry of `--peers` and dials every lower rank.
 //!
-//! The *launcher* (`dasgd launch --workers K`) covers the
-//! single-machine case: it reserves K loopback ports, spawns the
-//! workers from the running binary, then plays *monitor* — it polls
-//! every worker's shard over a control connection
+//! Workloads are [`WorkloadPlan`]s. The *launcher* (`dasgd launch
+//! --workers K [--plan P --dirichlet-alpha A]`) builds the plan once
+//! and **ships each worker its owned assignments over the wire**
+//! (`PlanAssign`/`PlanStart` frames on the control connection): real
+//! non-IID shards and per-node objectives travel to the processes that
+//! train on them — workers spawned with `--plan wire` never regenerate
+//! the global world. Only the topology is re-derived from
+//! `(nodes, degree)`, which is deterministic and cheap. A standalone
+//! worker (spanning machines, no launcher) instead derives its plan
+//! locally from `--plan <spec>`: the builders are bit-deterministic in
+//! `(spec, nodes, seed)`, so every rank reconstructs identical shards.
+//!
+//! After shipping, the launcher plays *monitor* — it polls every
+//! worker's shard over the control connection
 //! (`SnapshotRequest`/`SnapshotReply`), aggregates parameters and
 //! counters, and feeds the same [`Probe`]/[`Recorder`] path every other
-//! engine records through, so consensus/error metrics and CSV output
-//! are unchanged across process boundaries. The run ends when the
-//! aggregate applied-update count reaches `--horizon` (or the
-//! wall-clock cap), at which point the monitor broadcasts `Shutdown`.
+//! engine records through (mixed-objective cohorts evaluate under the
+//! [`Probe::mixed`] convention). The run ends when the aggregate
+//! applied-update count reaches `--horizon` (or the wall-clock cap), at
+//! which point the monitor broadcasts `Shutdown`.
 //!
 //! Failure semantics: a worker that dies mid-run simply drops out of
 //! monitor aggregation (metrics continue over the live cohort, exactly
@@ -33,12 +43,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{spawn_shard, AsyncConfig};
-use crate::experiments::{make_regular, synth_world};
+use crate::experiments::make_regular;
 use crate::metrics::Recorder;
 use crate::node_logic::{Counts, Probe};
 use crate::objective::Objective;
 use crate::transport::{Transport, TransportKind};
 use crate::util::Stopwatch;
+use crate::workload::{objective_code, objective_from_code, NodeAssignment, PlanSpec, WorkloadPlan};
 
 use super::socket::{ShardMap, SocketConfig, SocketNet};
 use super::wire::{self, WireMsg, MONITOR_RANK};
@@ -94,23 +105,95 @@ fn read_control_frame(
     }
 }
 
-/// How a deployment's shared world is derived. Every worker rebuilds
-/// the identical graph + data shards from `(nodes, degree, seed)` —
-/// nothing is shipped over the wire but parameters. (The monitor never
-/// needs the training shards; it draws only a held-out test set, see
-/// [`run_launch`].)
-fn worker_world(
-    nodes: usize,
-    degree: usize,
-    seed: u64,
-) -> (crate::graph::Graph, Vec<crate::data::Dataset>) {
-    let (shards, _test) = synth_world(nodes, SAMPLES_PER_NODE, TEST_SAMPLES, seed);
-    (make_regular(nodes, degree), shards)
+// ---------------------------------------------------------------------------
+// Plan ⇄ wire
+// ---------------------------------------------------------------------------
+
+/// Encode node `id`'s assignment as a `PlanAssign` control frame.
+/// Errors when the shard cannot fit the codec's frame cap (one frame
+/// per node keeps reassembly trivial; a 16 MiB shard is ~80k rows of
+/// the 50-feature world).
+pub fn plan_assign_msg(id: usize, a: &NodeAssignment) -> Result<WireMsg> {
+    let rows = a.shard.len();
+    let dim = a.shard.dim();
+    let approx_len = 32 + rows * 4 + rows * dim * 4;
+    if approx_len > wire::MAX_FRAME_LEN {
+        bail!(
+            "node {id}'s shard ({rows} rows × {dim} features) exceeds the \
+             {}-byte wire frame cap",
+            wire::MAX_FRAME_LEN
+        );
+    }
+    let (obj_code, lam) = objective_code(a.objective);
+    Ok(WireMsg::PlanAssign {
+        node: id as u32,
+        obj_code,
+        lam,
+        dim: dim as u32,
+        classes: a.shard.classes() as u32,
+        labels: a.shard.labels().iter().map(|&l| l as u32).collect(),
+        features: a.shard.features_flat().to_vec(),
+    })
+}
+
+/// Decode a `PlanAssign` frame back into `(node, assignment)`,
+/// validating everything a hostile or corrupt frame could lie about
+/// (shape mismatches, out-of-range labels, unknown objective codes).
+pub fn assignment_from_msg(msg: &WireMsg) -> Result<(usize, NodeAssignment)> {
+    let WireMsg::PlanAssign {
+        node,
+        obj_code,
+        lam,
+        dim,
+        classes,
+        labels,
+        features,
+    } = msg
+    else {
+        bail!("not a PlanAssign frame");
+    };
+    let (dim, classes) = (*dim as usize, *classes as usize);
+    if dim == 0 || classes == 0 {
+        bail!("plan frame with zero dim/classes");
+    }
+    let Some(objective) = objective_from_code(*obj_code, *lam) else {
+        bail!("unknown objective code {obj_code}");
+    };
+    if features.len() != labels.len() * dim {
+        bail!(
+            "plan frame shape lies: {} labels × {dim} features ≠ {} values",
+            labels.len(),
+            features.len()
+        );
+    }
+    let mut shard = crate::data::Dataset::with_capacity(dim, classes, labels.len());
+    for (i, &label) in labels.iter().enumerate() {
+        let label = label as usize;
+        if label >= classes {
+            bail!("plan frame label {label} out of range for {classes} classes");
+        }
+        shard.push(&features[i * dim..(i + 1) * dim], label);
+    }
+    Ok((*node as usize, NodeAssignment { objective, shard }))
 }
 
 // ---------------------------------------------------------------------------
 // Worker
 // ---------------------------------------------------------------------------
+
+/// Where a worker's workload comes from.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkerPlanSource {
+    /// Derive the plan locally from a deterministic recipe — every
+    /// rank rebuilds identical shards from `(spec, nodes, seed)`. The
+    /// standalone multi-machine mode.
+    Local(PlanSpec),
+    /// Receive the plan from the launch monitor over the control
+    /// connection (`PlanAssign`/`PlanStart`). The engine binds before
+    /// the data arrives, so the parameter length must be given up
+    /// front (`--param-len`; the launcher computes it from the plan).
+    Wire { param_len: usize },
+}
 
 /// One worker process's configuration.
 #[derive(Clone, Debug)]
@@ -125,7 +208,11 @@ pub struct WorkerConfig {
     /// monitor must not leave worker processes behind).
     pub secs: f64,
     pub rate_hz: f64,
+    /// The uniform loss family for local plan specs (and the stepsize
+    /// base); per-node objectives of a shipped or mixed plan supersede
+    /// it.
     pub objective: Objective,
+    pub plan: WorkerPlanSource,
     pub seed: u64,
 }
 
@@ -137,8 +224,77 @@ pub struct WorkerSummary {
     pub shutdown_by_monitor: bool,
 }
 
-/// Run one worker to completion: bind, rendezvous, drive the owned
-/// shard, serve monitor snapshots, exit on `Shutdown` or the cap.
+/// Wait for the launch monitor's control connection and drain its
+/// `PlanAssign` stream up to `PlanStart`. Returns the worker's partial
+/// plan plus the control connection (and its read buffer) so the serve
+/// loop continues on the very same stream.
+fn receive_wire_plan(
+    net: &SocketNet,
+    nodes: usize,
+    param_len: usize,
+    deadline: Instant,
+) -> Result<(WorkloadPlan, TcpStream, Vec<u8>)> {
+    let mut conn = loop {
+        if let Some(c) = net.take_control() {
+            break c;
+        }
+        if Instant::now() >= deadline {
+            bail!("no monitor connected to ship the workload plan");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
+    let mut buf = Vec::new();
+    let mut assigned: Vec<(usize, NodeAssignment)> = Vec::new();
+    let global_mixed = loop {
+        let frame_deadline = Instant::now() + Duration::from_millis(250);
+        match read_control_frame(&mut conn, &mut buf, frame_deadline) {
+            Ok(Some(msg @ WireMsg::PlanAssign { .. })) => {
+                assigned.push(assignment_from_msg(&msg)?);
+            }
+            Ok(Some(WireMsg::PlanStart {
+                nodes: n_total,
+                assigned: count,
+                mixed,
+            })) => {
+                if n_total as usize != nodes {
+                    bail!("plan is for {n_total} nodes, this deployment has {nodes}");
+                }
+                if count as usize != assigned.len() {
+                    bail!(
+                        "monitor announced {count} assignments, {} arrived",
+                        assigned.len()
+                    );
+                }
+                break mixed;
+            }
+            Ok(Some(_)) => {} // nothing else is meaningful pre-start
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    bail!("workload plan never completed before the deadline");
+                }
+            }
+            Err(e) => return Err(anyhow!("control stream failed mid-plan: {e}")),
+        }
+    };
+    let Some((_, first)) = assigned.first() else {
+        bail!("monitor started the run without shipping any assignment");
+    };
+    let (dim, classes) = (first.shard.dim(), first.shard.classes());
+    let plan = WorkloadPlan::from_partial(nodes, dim, classes, assigned, global_mixed)?;
+    if plan.param_len() != param_len {
+        bail!(
+            "shipped plan's parameter length {} does not match --param-len {param_len}",
+            plan.param_len()
+        );
+    }
+    Ok((plan, conn, buf))
+}
+
+/// Run one worker to completion: bind, rendezvous, obtain the workload
+/// plan (local recipe or shipped over the wire), drive the owned shard,
+/// serve monitor snapshots, exit on `Shutdown` or the cap.
 pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     let workers = cfg.peers.len();
     if workers == 0 {
@@ -150,10 +306,24 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     if workers > cfg.nodes {
         bail!("more workers ({workers}) than nodes ({})", cfg.nodes);
     }
-    let (graph, shards) = worker_world(cfg.nodes, cfg.degree, cfg.seed);
+    let graph = make_regular(cfg.nodes, cfg.degree);
     let objective = cfg.objective;
-    let (dim, classes) = (shards[0].dim(), shards[0].classes());
-    let param_len = objective.param_len(dim, classes);
+    // A locally-derived plan exists before the engine binds; a shipped
+    // one arrives after (its parameter length came on the CLI).
+    let (local_plan, param_len) = match cfg.plan {
+        WorkerPlanSource::Local(spec) => {
+            let (plan, _test) =
+                spec.build(objective, cfg.nodes, SAMPLES_PER_NODE, TEST_SAMPLES, cfg.seed);
+            let param_len = plan.param_len();
+            (Some(plan), param_len)
+        }
+        WorkerPlanSource::Wire { param_len } => {
+            if param_len == 0 {
+                bail!("--plan wire needs --param-len (the launcher supplies it)");
+            }
+            (None, param_len)
+        }
+    };
 
     let shard_map = ShardMap::new(cfg.nodes, workers);
     let net = SocketNet::bind(
@@ -183,6 +353,23 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         );
     }
 
+    let deadline = Instant::now() + Duration::from_secs_f64(cfg.secs.max(0.1));
+    let mut controls: Vec<(TcpStream, Vec<u8>)> = Vec::new();
+    let plan = match local_plan {
+        Some(plan) => plan,
+        None => {
+            let (plan, conn, buf) = receive_wire_plan(&net, cfg.nodes, param_len, deadline)
+                .with_context(|| format!("rank {} receiving the workload plan", cfg.rank))?;
+            controls.push((conn, buf));
+            plan
+        }
+    };
+    for id in owned.clone() {
+        if plan.shard(id).is_empty() {
+            bail!("owned node {id} has no data in the plan");
+        }
+    }
+
     let acfg = AsyncConfig {
         p_grad: 0.5,
         stepsize: objective.default_stepsize(cfg.nodes),
@@ -197,19 +384,9 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         seed: cfg.seed,
     };
     let transport: Arc<dyn Transport> = Arc::new(net.clone());
-    let run = spawn_shard(
-        &graph,
-        &shards,
-        objective,
-        &acfg,
-        transport,
-        owned.clone(),
-        None,
-    );
+    let run = spawn_shard(&graph, &plan, &acfg, transport, owned.clone(), None);
 
     // Serve the control plane until Shutdown or the wall-clock cap.
-    let deadline = Instant::now() + Duration::from_secs_f64(cfg.secs.max(0.1));
-    let mut controls: Vec<(TcpStream, Vec<u8>)> = Vec::new();
     let mut shutdown_by_monitor = false;
     'serve: while Instant::now() < deadline {
         while let Some(conn) = net.take_control() {
@@ -296,7 +473,11 @@ pub struct LaunchConfig {
     pub secs_cap: f64,
     pub eval_every_secs: f64,
     pub rate_hz: f64,
+    /// The uniform loss family (superseded per node by `mixed` plans).
     pub objective: Objective,
+    /// The workload recipe; the launcher builds it once and ships each
+    /// worker its owned shards over the wire.
+    pub plan: PlanSpec,
     pub seed: u64,
     /// The worker binary. `None` = this executable (the CLI case);
     /// tests point it at the built `dasgd` binary.
@@ -314,6 +495,7 @@ impl LaunchConfig {
             eval_every_secs: 0.25,
             rate_hz: 300.0,
             objective: Objective::LogReg,
+            plan: PlanSpec::Synth,
             seed: 0,
             binary: None,
         }
@@ -349,8 +531,9 @@ fn kill_all(children: &mut [Child]) {
     }
 }
 
-/// Spawn `cfg.workers` local worker processes, monitor them to the
-/// horizon, shut them down, and return the aggregated run record.
+/// Spawn `cfg.workers` local worker processes, ship each its slice of
+/// the workload plan, monitor them to the horizon, shut them down, and
+/// return the aggregated run record.
 pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     if cfg.workers == 0 {
         bail!("--workers must be at least 1");
@@ -358,6 +541,17 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     if cfg.workers > cfg.nodes {
         bail!("more workers ({}) than nodes ({})", cfg.workers, cfg.nodes);
     }
+    // The whole deployment's workload, built exactly once. Workers get
+    // their assignments over the wire — never regenerated from seed.
+    let (plan, test) = cfg.plan.build(
+        cfg.objective,
+        cfg.nodes,
+        SAMPLES_PER_NODE,
+        TEST_SAMPLES,
+        cfg.seed,
+    );
+    let param_len = plan.param_len();
+    let shard_map = ShardMap::new(cfg.nodes, cfg.workers);
     let peers: Vec<String> = (0..cfg.workers)
         .map(|_| reserve_port().map(|p| format!("127.0.0.1:{p}")))
         .collect::<Result<_>>()?;
@@ -387,6 +581,10 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 &format!("{}", cfg.rate_hz),
                 "--objective",
                 cfg.objective.name(),
+                "--plan",
+                "wire",
+                "--param-len",
+                &param_len.to_string(),
                 "--seed",
                 &cfg.seed.to_string(),
             ])
@@ -429,14 +627,48 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         conns.push(conn);
     }
 
-    // The monitor's evaluation set. It never needs the training shards
-    // (workers rebuild those themselves), so draw only a held-out test
-    // set from the seed-derived generator on an independent stream.
-    let gen = crate::data::SyntheticGen::paper_default(cfg.nodes, cfg.seed);
-    let mut test_rng = crate::util::rng::Xoshiro256pp::seeded(cfg.seed ^ 0x7E57_5E7);
-    let test = gen.global_test_set(TEST_SAMPLES, &mut test_rng);
-    let probe = Probe::new(cfg.objective, &test);
-    let shard_map = ShardMap::new(cfg.nodes, cfg.workers);
+    // Ship each rank its owned block of the plan. The write timeout is
+    // generous here: a whole shard block crosses the socket, and a
+    // worker still inside peer rendezvous drains it a few seconds
+    // later.
+    for (rank, conn_slot) in conns.iter_mut().enumerate() {
+        let conn = conn_slot.as_mut().expect("all connected above");
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
+        let block = shard_map.range(rank as u32);
+        let mut ok = true;
+        for id in block.clone() {
+            let msg = match plan_assign_msg(id, plan.node(id)) {
+                Ok(msg) => msg,
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(e);
+                }
+            };
+            if wire::write_frame(conn, &msg).is_err() {
+                ok = false;
+                break;
+            }
+        }
+        ok = ok
+            && wire::write_frame(
+                conn,
+                &WireMsg::PlanStart {
+                    nodes: cfg.nodes as u32,
+                    assigned: block.len() as u32,
+                    mixed: plan.is_mixed(),
+                },
+            )
+            .is_ok();
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
+        if !ok {
+            kill_all(&mut children);
+            bail!("worker {rank} dropped the control connection during plan shipping");
+        }
+    }
+
+    // The monitor's evaluation set came from the plan build; mixed
+    // cohorts evaluate under the weighted per-family convention.
+    let probe = Probe::mixed(&plan.objectives(), &test);
     let mut rec = Recorder::new("socket");
     let sw = Stopwatch::new();
     let mut bufs: Vec<Vec<u8>> = (0..cfg.workers).map(|_| Vec::new()).collect();
@@ -594,6 +826,7 @@ mod tests {
             secs: 0.1,
             rate_hz: 100.0,
             objective: Objective::LogReg,
+            plan: WorkerPlanSource::Local(PlanSpec::Synth),
             seed: 0,
         };
         assert!(run_worker(&base).is_err(), "empty peers must fail");
@@ -601,8 +834,69 @@ mod tests {
         bad_rank.peers = vec!["127.0.0.1:1".into()];
         bad_rank.rank = 1;
         assert!(run_worker(&bad_rank).is_err(), "rank beyond peers must fail");
-        let mut too_many = base;
+        let mut too_many = base.clone();
         too_many.peers = (0..9).map(|i| format!("127.0.0.1:{}", 1 + i)).collect();
+        assert!(too_many.peers.len() > too_many.nodes);
         assert!(run_worker(&too_many).is_err(), "9 workers for 8 nodes must fail");
+        // Wire mode without a parameter length cannot bind an engine.
+        let mut no_len = base;
+        no_len.peers = vec!["127.0.0.1:0".into()];
+        no_len.plan = WorkerPlanSource::Wire { param_len: 0 };
+        assert!(run_worker(&no_len).is_err(), "wire plan needs --param-len");
+    }
+
+    #[test]
+    fn plan_assignments_round_trip_the_wire_codec() {
+        let (plan, _) =
+            PlanSpec::Mixed { alpha: 0.3 }.build(Objective::LogReg, 4, 40, 16, 77);
+        for id in 0..plan.len() {
+            let msg = plan_assign_msg(id, plan.node(id)).unwrap();
+            let frame = wire::encode(&msg);
+            let (back, _) = wire::decode(&frame).unwrap().expect("complete frame");
+            let (rid, a) = assignment_from_msg(&back).unwrap();
+            assert_eq!(rid, id);
+            assert_eq!(a.objective.name(), plan.objective(id).name());
+            assert_eq!(a.shard.labels(), plan.shard(id).labels());
+            assert_eq!(a.shard.features_flat(), plan.shard(id).features_flat());
+        }
+    }
+
+    #[test]
+    fn corrupt_plan_frames_error_not_panic() {
+        // Shape lie: 2 labels but features for 1 row.
+        let msg = WireMsg::PlanAssign {
+            node: 0,
+            obj_code: 1,
+            lam: 0.0,
+            dim: 3,
+            classes: 2,
+            labels: vec![0, 1],
+            features: vec![0.0; 3],
+        };
+        assert!(assignment_from_msg(&msg).is_err());
+        // Label out of range.
+        let msg = WireMsg::PlanAssign {
+            node: 0,
+            obj_code: 1,
+            lam: 0.0,
+            dim: 1,
+            classes: 2,
+            labels: vec![5],
+            features: vec![0.0],
+        };
+        assert!(assignment_from_msg(&msg).is_err());
+        // Unknown objective code.
+        let msg = WireMsg::PlanAssign {
+            node: 0,
+            obj_code: 42,
+            lam: 0.0,
+            dim: 1,
+            classes: 2,
+            labels: vec![0],
+            features: vec![0.0],
+        };
+        assert!(assignment_from_msg(&msg).is_err());
+        // Not a plan frame at all.
+        assert!(assignment_from_msg(&WireMsg::Shutdown).is_err());
     }
 }

@@ -19,9 +19,13 @@
 //!   network.
 //! * [`cluster`] — the rendezvous layer: `dasgd worker --rank R
 //!   --peers ...` runs one shard; `dasgd launch --workers K` spawns a
-//!   single-machine deployment and plays monitor, aggregating worker
-//!   snapshots into the same `Probe`/`Recorder` metrics path (and CSV
-//!   output) every in-process engine uses.
+//!   single-machine deployment, ships each worker its
+//!   [`WorkloadPlan`](crate::workload::WorkloadPlan) assignments over
+//!   the wire (`PlanAssign`/`PlanStart` — real non-IID shards and
+//!   per-node objectives, never regenerated from the seed), and plays
+//!   monitor, aggregating worker snapshots into the same
+//!   `Probe`/`Recorder` metrics path (and CSV output) every in-process
+//!   engine uses.
 //!
 //! See docs/deployment.md for the quickstart and failure semantics.
 
@@ -29,6 +33,9 @@ pub mod cluster;
 pub mod socket;
 pub mod wire;
 
-pub use cluster::{run_launch, run_worker, LaunchConfig, LaunchReport, WorkerConfig, WorkerSummary};
+pub use cluster::{
+    assignment_from_msg, plan_assign_msg, run_launch, run_worker, LaunchConfig, LaunchReport,
+    WorkerConfig, WorkerPlanSource, WorkerSummary,
+};
 pub use socket::{ShardMap, SocketConfig, SocketNet};
 pub use wire::{WireError, WireMsg, MONITOR_RANK, WIRE_VERSION};

@@ -10,8 +10,10 @@
 //! set is the ChannelNet projection protocol (`CollectRequest` /
 //! `CollectReply` / `Busy` / `Abort` / `ApplyAverage`) plus the control
 //! plane (`Hello` / `Heartbeat` / `SnapshotRequest` / `SnapshotReply` /
-//! `Shutdown`). All integers are little-endian; `f32` vectors are raw
-//! LE bit patterns (NaN-safe round trips).
+//! `Shutdown`) and the workload-plan shipping frames (`PlanAssign` /
+//! `PlanStart` — real data shards travel to workers, see
+//! docs/heterogeneity.md). All integers are little-endian; `f32`
+//! vectors are raw LE bit patterns (NaN-safe round trips).
 //!
 //! Decoding is total: malformed input — truncated bodies, unknown
 //! versions or tags, length prefixes that would allocate more than
@@ -24,7 +26,10 @@ use std::io::{Read, Write};
 /// Codec version stamped into every frame. Bump on any layout change;
 /// decoders reject mismatches outright (a deployment never mixes
 /// versions — workers are all spawned from the same binary).
-pub const WIRE_VERSION: u8 = 1;
+///
+/// v2 added the workload-plan control frames
+/// ([`PlanAssign`](WireMsg::PlanAssign) / [`PlanStart`](WireMsg::PlanStart)).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on one frame's payload (version + tag + body). A frame
 /// carries at most one parameter vector per node of a snapshot shard;
@@ -82,6 +87,30 @@ pub enum WireMsg {
     },
     /// Monitor → worker: stop node threads and exit cleanly.
     Shutdown,
+    /// Monitor → worker: one node's workload assignment — its §II
+    /// objective (as a `(code, λ)` pair, see
+    /// [`crate::workload::objective_code`]) plus its *actual* data
+    /// shard, so workers never regenerate the global world from the
+    /// seed. `features` is row-major `labels.len() × dim`.
+    PlanAssign {
+        node: u32,
+        obj_code: u8,
+        lam: f32,
+        dim: u32,
+        classes: u32,
+        labels: Vec<u32>,
+        features: Vec<f32>,
+    },
+    /// Monitor → worker: the plan is fully shipped (`assigned` frames
+    /// for a `nodes`-node deployment); start driving the shard.
+    /// `mixed` is the deployment-wide loss-family verdict — a worker's
+    /// own slice can look homogeneous even when the system is mixed,
+    /// and the per-family stepsize policy hangs on it.
+    PlanStart {
+        nodes: u32,
+        assigned: u32,
+        mixed: bool,
+    },
 }
 
 impl WireMsg {
@@ -97,6 +126,8 @@ impl WireMsg {
             WireMsg::SnapshotRequest => 7,
             WireMsg::SnapshotReply { .. } => 8,
             WireMsg::Shutdown => 9,
+            WireMsg::PlanAssign { .. } => 10,
+            WireMsg::PlanStart { .. } => 11,
         }
     }
 }
@@ -166,10 +197,21 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
 fn put_f32s(buf: &mut Vec<u8>, w: &[f32]) {
     put_u32(buf, w.len() as u32);
     for &v in w {
         buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
@@ -213,6 +255,32 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
                 put_u32(&mut body, *node);
                 put_f32s(&mut body, w);
             }
+        }
+        WireMsg::PlanAssign {
+            node,
+            obj_code,
+            lam,
+            dim,
+            classes,
+            labels,
+            features,
+        } => {
+            put_u32(&mut body, *node);
+            body.push(*obj_code);
+            put_f32(&mut body, *lam);
+            put_u32(&mut body, *dim);
+            put_u32(&mut body, *classes);
+            put_u32s(&mut body, labels);
+            put_f32s(&mut body, features);
+        }
+        WireMsg::PlanStart {
+            nodes,
+            assigned,
+            mixed,
+        } => {
+            put_u32(&mut body, *nodes);
+            put_u32(&mut body, *assigned);
+            body.push(u8::from(*mixed));
         }
     }
     debug_assert!(body.len() <= MAX_FRAME_LEN);
@@ -260,6 +328,24 @@ impl<'a> Cursor<'a> {
 
     fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length-prefixed u32 vector, count-validated before allocation
+    /// (same discipline as [`Cursor::f32s`]).
+    fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let count = self.u32()? as usize;
+        if count.checked_mul(4).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(WireError::Oversize { len: count });
+        }
+        let bytes = self.take(count * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
     }
 
     /// A length-prefixed f32 vector. The count is validated against the
@@ -351,6 +437,20 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             }
         }
         9 => WireMsg::Shutdown,
+        10 => WireMsg::PlanAssign {
+            node: c.u32()?,
+            obj_code: c.u8()?,
+            lam: c.f32()?,
+            dim: c.u32()?,
+            classes: c.u32()?,
+            labels: c.u32s()?,
+            features: c.f32s()?,
+        },
+        11 => WireMsg::PlanStart {
+            nodes: c.u32()?,
+            assigned: c.u32()?,
+            mixed: c.u8()? != 0,
+        },
         got => return Err(WireError::UnknownTag { got }),
     };
     c.done()?;
@@ -456,6 +556,50 @@ mod tests {
             params: vec![(4, vec![1.5, 2.5]), (5, vec![])],
         });
         roundtrip(WireMsg::Shutdown);
+        roundtrip(WireMsg::PlanAssign {
+            node: 6,
+            obj_code: 2,
+            lam: 1e-3,
+            dim: 3,
+            classes: 4,
+            labels: vec![0, 3, 1],
+            features: vec![0.5; 9],
+        });
+        roundtrip(WireMsg::PlanAssign {
+            node: 0,
+            obj_code: 0,
+            lam: 0.0,
+            dim: 50,
+            classes: 10,
+            labels: vec![],
+            features: vec![],
+        });
+        roundtrip(WireMsg::PlanStart {
+            nodes: 8,
+            assigned: 4,
+            mixed: true,
+        });
+        roundtrip(WireMsg::PlanStart {
+            nodes: 2,
+            assigned: 1,
+            mixed: false,
+        });
+    }
+
+    #[test]
+    fn plan_assign_label_count_is_bounded() {
+        // A lying label count must refuse before allocating.
+        let mut body = vec![WIRE_VERSION, 10]; // PlanAssign
+        body.extend_from_slice(&0u32.to_le_bytes()); // node
+        body.push(1); // obj_code
+        body.extend_from_slice(&0.0f32.to_le_bytes()); // lam
+        body.extend_from_slice(&3u32.to_le_bytes()); // dim
+        body.extend_from_slice(&2u32.to_le_bytes()); // classes
+        body.extend_from_slice(&(500_000u32).to_le_bytes()); // labels count, no data
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Oversize { .. })));
     }
 
     #[test]

@@ -211,25 +211,57 @@ impl Counts {
 }
 
 /// The shared evaluate-and-snapshot path: owns the held-out
-/// [`EvalBatch`] in the objective's encoding and turns engine state
+/// [`EvalBatch`] in each objective's encoding and turns engine state
 /// into [`Record`]s, so no engine carries its own eval/snapshot code.
+///
+/// A probe is usually homogeneous ([`Probe::new`]); heterogeneous
+/// workloads where nodes disagree on loss family use [`Probe::mixed`],
+/// which evaluates the mean parameter under every family present and
+/// reports the node-count-weighted average of the per-family metrics
+/// (the convention documented in docs/heterogeneity.md — consensus
+/// needs no rule, it lives in the shared parameter space).
 #[derive(Clone, Debug)]
 pub struct Probe {
-    objective: Objective,
-    batch: EvalBatch,
+    /// One entry per distinct loss family: `(family, weight, batch)`,
+    /// weights summing to 1.
+    parts: Vec<(Objective, f32, EvalBatch)>,
 }
 
 impl Probe {
     pub fn new(objective: Objective, test: &Dataset) -> Self {
-        Self {
-            objective,
-            batch: EvalBatch::for_objective(objective, test, None),
-        }
+        Self::mixed(&[objective], test)
     }
 
-    /// `(loss, err)` of `w` on the held-out batch (native math).
+    /// Probe for a (possibly mixed) cohort: `objectives` lists every
+    /// node's family in node order; duplicates weight their family.
+    /// Grouping is by exact objective (λ included) — two Lasso cohorts
+    /// with different regularization evaluate under their own losses.
+    pub fn mixed(objectives: &[Objective], test: &Dataset) -> Self {
+        assert!(!objectives.is_empty(), "a probe needs at least one objective");
+        let mut parts: Vec<(Objective, f32, EvalBatch)> = Vec::new();
+        for &o in objectives {
+            match parts.iter_mut().find(|(e, _, _)| *e == o) {
+                Some((_, w, _)) => *w += 1.0,
+                None => parts.push((o, 1.0, EvalBatch::for_objective(o, test, None))),
+            }
+        }
+        let total: f32 = parts.iter().map(|(_, w, _)| w).sum();
+        for (_, w, _) in &mut parts {
+            *w /= total;
+        }
+        Self { parts }
+    }
+
+    /// `(loss, err)` of `w` on the held-out batch (native math) — the
+    /// weighted per-family average for mixed cohorts.
     pub fn eval(&self, w: &[f32]) -> (f32, f32) {
-        self.batch.eval(self.objective, w)
+        let (mut loss, mut err) = (0.0f32, 0.0f32);
+        for (obj, weight, batch) in &self.parts {
+            let (l, e) = batch.eval(*obj, w);
+            loss += weight * l;
+            err += weight * e;
+        }
+        (loss, err)
     }
 
     /// Full-scan snapshot: exact d^k consensus + metrics at β̄.
@@ -444,6 +476,34 @@ mod tests {
             t.add(&[2.0, -1.0, 0.5]);
         }
         assert!(t.residual() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_probe_is_weighted_family_average() {
+        let gen = SyntheticGen::new(2, 6, 4, 2.0, 0.5, 0.3, 3);
+        let mut rng = Xoshiro256pp::seeded(4);
+        let test = gen.global_test_set(80, &mut rng);
+        let w = vec![0.05f32; 6];
+        let hinge = Probe::new(Objective::hinge(), &test);
+        let lasso = Probe::new(Objective::lasso(), &test);
+        let (hl, he) = hinge.eval(&w);
+        let (ll, le) = lasso.eval(&w);
+        // 3 hinge nodes + 1 lasso node → 0.75/0.25 weights.
+        let mixed = Probe::mixed(
+            &[
+                Objective::hinge(),
+                Objective::hinge(),
+                Objective::lasso(),
+                Objective::hinge(),
+            ],
+            &test,
+        );
+        let (ml, me) = mixed.eval(&w);
+        assert!((ml - (0.75 * hl + 0.25 * ll)).abs() < 1e-5);
+        assert!((me - (0.75 * he + 0.25 * le)).abs() < 1e-5);
+        // The homogeneous case is unchanged by the generalization.
+        let (l1, e1) = Probe::mixed(&[Objective::hinge()], &test).eval(&w);
+        assert_eq!((l1, e1), (hl, he));
     }
 
     #[test]

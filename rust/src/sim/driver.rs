@@ -32,6 +32,7 @@ use crate::node_logic::{neighborhood_average, Action, Counts, NodeLogic, Probe};
 use crate::objective::Objective;
 use crate::transport::{ProjectionOutcome, SimNet, SimNetConfig, Transport};
 use crate::util::rng::Xoshiro256pp;
+use crate::workload::WorkloadPlan;
 
 use super::{ShardedEventQueue, SpeedModel};
 
@@ -71,7 +72,9 @@ pub struct SimReport {
     pub final_params: Vec<Vec<f32>>,
 }
 
-/// Run Alg. 2 under the event-driven driver on a [`SimNet`] substrate.
+/// Run Alg. 2 under the event-driven driver on a [`SimNet`] substrate
+/// with one objective and one shard per node (the homogeneous preset —
+/// a thin wrapper over [`simnet_run_plan`]).
 pub fn simnet_run(
     g: &Graph,
     shards: &[Dataset],
@@ -79,26 +82,52 @@ pub fn simnet_run(
     speeds: &SpeedModel,
     cfg: &SimConfig,
 ) -> SimReport {
+    let plan = WorkloadPlan::homogeneous(cfg.objective, shards.to_vec());
+    simnet_run_plan(g, &plan, test, speeds, cfg)
+}
+
+/// Run Alg. 2 under the event-driven driver, constructing every node
+/// from its [`WorkloadPlan`] assignment (per-node objective + shard).
+/// `cfg.objective` is superseded by the plan; homogeneous plans use
+/// `cfg.stepsize`, mixed plans give each node its own family's default
+/// schedule (see docs/heterogeneity.md).
+pub fn simnet_run_plan(
+    g: &Graph,
+    plan: &WorkloadPlan,
+    test: &Dataset,
+    speeds: &SpeedModel,
+    cfg: &SimConfig,
+) -> SimReport {
     let n = g.len();
-    assert_eq!(shards.len(), n);
+    assert_eq!(plan.len(), n);
     assert_eq!(speeds.len(), n);
     // A non-positive cadence would pin `next_eval` and snapshot forever.
     assert!(
         cfg.eval_every > 0.0 && cfg.horizon.is_finite(),
         "eval_every must be > 0 and horizon finite"
     );
-    let obj = cfg.objective;
-    let param_len = obj.param_len(shards[0].dim(), shards[0].classes());
+    let param_len = plan.param_len();
+    let mixed = plan.is_mixed();
 
     let mut root = Xoshiro256pp::seeded(cfg.seed);
-    let mut logics: Vec<NodeLogic> = shards
-        .iter()
-        .enumerate()
-        .map(|(i, d)| NodeLogic::new(i, obj, cfg.p_grad, d.clone(), n, root.split(i as u64)))
+    let mut logics: Vec<NodeLogic> = (0..n)
+        .map(|i| {
+            let a = plan.node(i);
+            NodeLogic::new(i, a.objective, cfg.p_grad, a.shard.clone(), n, root.split(i as u64))
+        })
+        .collect();
+    let steps: Vec<StepSize> = (0..n)
+        .map(|i| {
+            if mixed {
+                plan.objective(i).default_stepsize(n)
+            } else {
+                cfg.stepsize
+            }
+        })
         .collect();
     let hoods: Vec<Vec<usize>> = (0..n).map(|i| g.closed_neighborhood(i)).collect();
     let net = SimNet::new(n, param_len, cfg.net.clone());
-    let probe = Probe::new(obj, test);
+    let probe = Probe::mixed(&plan.objectives(), test);
 
     let mut queue = ShardedEventQueue::for_nodes(n);
     for (i, logic) in logics.iter_mut().enumerate() {
@@ -133,7 +162,7 @@ pub fn simnet_run(
             next_eval += cfg.eval_every;
         }
         net.set_now(t);
-        let lr = cfg.stepsize.at(k);
+        let lr = steps[i].at(k);
         let logic = &mut logics[i];
         let mut op_time = speeds.sample(i, &mut logic.rng);
         match logic.draw_action() {

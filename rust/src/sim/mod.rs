@@ -16,7 +16,7 @@ mod event_queue;
 mod speed;
 mod virtual_async;
 
-pub use driver::{simnet_run, SimConfig, SimReport, EXACT_SCAN_MAX};
+pub use driver::{simnet_run, simnet_run_plan, SimConfig, SimReport, EXACT_SCAN_MAX};
 pub use event_queue::{EventQueue, ShardedEventQueue};
 pub use speed::SpeedModel;
 pub use virtual_async::{virtual_async_run, VirtualAsyncConfig, VirtualAsyncReport};

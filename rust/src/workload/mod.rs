@@ -1,0 +1,854 @@
+//! Workload assignment: *who* optimizes *what*, on *which* data.
+//!
+//! The paper sells Alg. 2 for "a very large and heterogeneous system",
+//! yet until this subsystem every engine constructed identical nodes:
+//! one global objective and IID-by-construction synthetic shards
+//! rebuilt from the seed wherever a process needed them. A
+//! [`WorkloadPlan`] makes heterogeneity first-class — it maps each node
+//! to a [`NodeAssignment`] (a §II objective plus a data shard) and is
+//! the single world-construction input of every engine
+//! ([`spawn_shard`](crate::coordinator::spawn_shard), the
+//! [`SimNet`](crate::transport::SimNet) driver, and the baselines'
+//! plan variants).
+//!
+//! # Non-IID partitioners
+//!
+//! A plan's data can come from the historical §V-A per-node generator
+//! ([`PlanSpec::Synth`]) or from a *global* base dataset split by one
+//! of three skew families (the standard federated-heterogeneity
+//! recipes; see Bedi et al., arXiv:1707.05816, and R-FAST,
+//! arXiv:2307.11617 for the optimization setting they model):
+//!
+//! * **label skew** ([`partition_label_skew`]) — per class, node
+//!   proportions are drawn from `Dirichlet(α)`; small α concentrates a
+//!   class on few nodes (α → ∞ recovers IID);
+//! * **quantity skew** ([`partition_quantity_skew`]) — shard *sizes*
+//!   are `Dirichlet(α)`-distributed while content stays IID;
+//! * **feature shift** ([`feature_shift`]) — IID rows, but each node
+//!   observes them through its own additive per-feature offset
+//!   (covariate shift).
+//!
+//! Every partitioner assigns **each base row to exactly one node** and
+//! leaves no node empty (pinned by the property tests in
+//! `rust/tests/it_workload.rs`). Partitioners are generic over the base
+//! [`Dataset`] — synthetic, notMNIST, or anything else.
+//!
+//! # Mixed objectives
+//!
+//! Nodes may disagree on loss family as long as they agree on the
+//! *parameter space*: Eq. (7) averages neighbors' flat vectors, so a
+//! plan asserts all assignments share `param_len`. Hinge and Lasso are
+//! both `(dim)`-shaped and mix freely ([`PlanSpec::Mixed`]); LogReg's
+//! `(dim × classes)` matrix cannot mix with them. Evaluation of a mixed
+//! cohort follows one convention, implemented by
+//! [`Probe::mixed`](crate::node_logic::Probe::mixed): the mean
+//! parameter is evaluated under every family present and the reported
+//! `(loss, err)` is the node-count-weighted average of the per-family
+//! metrics (consensus needs no rule — it lives in the shared parameter
+//! space). Mixed plans also give each node its own family's default
+//! stepsize; a single global schedule that is stable for hinge would
+//! overstep the Lasso curvature bound.
+//!
+//! Plans built from `(spec, nodes, seed)` are bit-deterministic, and
+//! assignments serialize through the wire codec
+//! ([`WireMsg::PlanAssign`](crate::net::wire::WireMsg)) so `dasgd
+//! launch` ships real shards to worker processes instead of having
+//! them regenerate the world. See docs/heterogeneity.md.
+
+use crate::data::Dataset;
+use crate::objective::Objective;
+use crate::util::rng::Xoshiro256pp;
+
+/// One node's workload: the loss family it optimizes and the local
+/// data shard it draws gradients from.
+#[derive(Clone, Debug)]
+pub struct NodeAssignment {
+    pub objective: Objective,
+    pub shard: Dataset,
+}
+
+/// The full system workload: one [`NodeAssignment`] per node, validated
+/// so that every engine can rely on a single flat parameter length and
+/// one `(dim, classes)` data shape.
+#[derive(Clone, Debug)]
+pub struct WorkloadPlan {
+    nodes: Vec<NodeAssignment>,
+    dim: usize,
+    classes: usize,
+    param_len: usize,
+    /// Whether the *deployment-wide* plan mixes loss families. Usually
+    /// derived from `nodes`; a worker's partial view can carry the
+    /// authoritative value shipped by the launcher (its own slice may
+    /// look homogeneous even when the system is mixed).
+    mixed: bool,
+}
+
+impl WorkloadPlan {
+    /// Validate and wrap per-node assignments. Panics when shards
+    /// disagree on `(dim, classes)`, when objectives disagree on
+    /// parameter length (LogReg cannot mix with hinge/Lasso), or when
+    /// no node has any data.
+    pub fn new(nodes: Vec<NodeAssignment>) -> Self {
+        assert!(!nodes.is_empty(), "a plan needs at least one node");
+        let shape = nodes
+            .iter()
+            .find(|a| !a.shard.is_empty())
+            .map(|a| (a.shard.dim(), a.shard.classes()))
+            .expect("a plan needs at least one non-empty shard");
+        Self::with_shape(nodes, shape.0, shape.1)
+    }
+
+    /// [`WorkloadPlan::new`] with an explicit data shape, so plans with
+    /// placeholder (empty) shards — a worker's view of nodes it does
+    /// not own — validate against the deployment's real shape.
+    pub fn with_shape(nodes: Vec<NodeAssignment>, dim: usize, classes: usize) -> Self {
+        assert!(!nodes.is_empty(), "a plan needs at least one node");
+        let param_len = nodes[0].objective.param_len(dim, classes);
+        for (i, a) in nodes.iter().enumerate() {
+            if !a.shard.is_empty() {
+                assert_eq!(
+                    (a.shard.dim(), a.shard.classes()),
+                    (dim, classes),
+                    "node {i}'s shard disagrees on the data shape"
+                );
+            }
+            assert_eq!(
+                a.objective.param_len(dim, classes),
+                param_len,
+                "node {i} optimizes {} whose parameter length differs from node 0's {} \
+                 — gossip averages flat vectors, so a plan cannot mix logreg with \
+                 the (dim)-shaped families",
+                a.objective,
+                nodes[0].objective
+            );
+        }
+        let mixed = census(&nodes).len() > 1;
+        Self {
+            nodes,
+            dim,
+            classes,
+            param_len,
+            mixed,
+        }
+    }
+
+    /// The homogeneous special case every legacy entry point builds:
+    /// one objective, one shard per node.
+    pub fn homogeneous(objective: Objective, shards: Vec<Dataset>) -> Self {
+        Self::new(
+            shards
+                .into_iter()
+                .map(|shard| NodeAssignment { objective, shard })
+                .collect(),
+        )
+    }
+
+    /// A worker's partial view: assignments for the nodes it was
+    /// shipped, placeholders (empty shards, the first real objective)
+    /// everywhere else. Errors instead of panicking — the input crossed
+    /// a process boundary.
+    ///
+    /// `global_mixed` is the launcher's authoritative verdict on
+    /// whether the *whole* deployment mixes loss families (shipped in
+    /// `PlanStart`): a worker owning a single node of a mixed plan
+    /// would otherwise see a homogeneous slice and drop the per-family
+    /// stepsize policy its node relies on.
+    pub fn from_partial(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        assigned: Vec<(usize, NodeAssignment)>,
+        global_mixed: bool,
+    ) -> anyhow::Result<Self> {
+        let Some(fill) = assigned.first().map(|(_, a)| a.objective) else {
+            anyhow::bail!("a partial plan needs at least one assignment");
+        };
+        let mut slots: Vec<Option<NodeAssignment>> = (0..n).map(|_| None).collect();
+        for (id, a) in assigned {
+            if id >= n {
+                anyhow::bail!("assignment for node {id} outside 0..{n}");
+            }
+            if (a.shard.dim(), a.shard.classes()) != (dim, classes) {
+                anyhow::bail!(
+                    "node {id}'s shipped shard is {}x{} (expected {dim}x{classes})",
+                    a.shard.dim(),
+                    a.shard.classes()
+                );
+            }
+            if a.objective.param_len(dim, classes) != fill.param_len(dim, classes) {
+                anyhow::bail!("node {id}'s objective disagrees on parameter length");
+            }
+            if slots[id].replace(a).is_some() {
+                anyhow::bail!("node {id} assigned twice");
+            }
+        }
+        let nodes = slots
+            .into_iter()
+            .map(|s| {
+                s.unwrap_or_else(|| NodeAssignment {
+                    objective: fill,
+                    shard: Dataset::new(dim, classes),
+                })
+            })
+            .collect();
+        let mut plan = Self::with_shape(nodes, dim, classes);
+        plan.mixed = plan.mixed || global_mixed;
+        Ok(plan)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// The flat parameter length every node's β_i shares.
+    pub fn param_len(&self) -> usize {
+        self.param_len
+    }
+
+    pub fn node(&self, i: usize) -> &NodeAssignment {
+        &self.nodes[i]
+    }
+
+    pub fn objective(&self, i: usize) -> Objective {
+        self.nodes[i].objective
+    }
+
+    pub fn shard(&self, i: usize) -> &Dataset {
+        &self.nodes[i].shard
+    }
+
+    /// Every node's objective, in node order (the input of
+    /// [`Probe::mixed`](crate::node_logic::Probe::mixed)).
+    pub fn objectives(&self) -> Vec<Objective> {
+        self.nodes.iter().map(|a| a.objective).collect()
+    }
+
+    /// Loss-family census: one entry per distinct family, with its node
+    /// count, in first-appearance order.
+    pub fn families(&self) -> Vec<(Objective, usize)> {
+        census(&self.nodes)
+    }
+
+    /// Do nodes disagree on loss family? For a worker's partial plan
+    /// this reflects the *deployment-wide* answer (see
+    /// [`WorkloadPlan::from_partial`]), not just the local slice.
+    pub fn is_mixed(&self) -> bool {
+        self.mixed
+    }
+
+    /// The same plan with every node switched to `objective`
+    /// (re-validated — the parameter length may change).
+    pub fn with_uniform_objective(self, objective: Objective) -> Self {
+        let (dim, classes) = (self.dim, self.classes);
+        Self::with_shape(
+            self.nodes
+                .into_iter()
+                .map(|a| NodeAssignment {
+                    objective,
+                    shard: a.shard,
+                })
+                .collect(),
+            dim,
+            classes,
+        )
+    }
+}
+
+/// Family census over raw assignments (grouped by family *name*; λ
+/// does not split a family — it changes the loss value, not the
+/// parameter shape or stepsize class).
+fn census(nodes: &[NodeAssignment]) -> Vec<(Objective, usize)> {
+    let mut out: Vec<(Objective, usize)> = Vec::new();
+    for a in nodes {
+        match out.iter_mut().find(|(o, _)| o.name() == a.objective.name()) {
+            Some((_, c)) => *c += 1,
+            None => out.push((a.objective, 1)),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Dirichlet sampling
+// ---------------------------------------------------------------------------
+
+/// One Gamma(shape, 1) draw (Marsaglia–Tsang, with the α < 1 boost).
+fn gamma(rng: &mut Xoshiro256pp, shape: f64) -> f64 {
+    debug_assert!(shape > 0.0);
+    if shape < 1.0 {
+        // Boost: G(α) = G(α+1) · U^{1/α}.
+        let u = positive_uniform(rng);
+        return gamma(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.next_gauss();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = positive_uniform(rng);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+fn positive_uniform(rng: &mut Xoshiro256pp) -> f64 {
+    loop {
+        let u = rng.next_f64();
+        if u > 0.0 {
+            return u;
+        }
+    }
+}
+
+/// One `Dirichlet(α, …, α)` draw over `k` parts. Tiny α can underflow
+/// every Gamma draw to zero; that degenerate case collapses to a
+/// one-hot (the distribution's own α → 0 limit).
+pub fn dirichlet(rng: &mut Xoshiro256pp, alpha: f64, k: usize) -> Vec<f64> {
+    assert!(k > 0 && alpha > 0.0);
+    let draws: Vec<f64> = (0..k).map(|_| gamma(rng, alpha)).collect();
+    let total: f64 = draws.iter().sum();
+    if total <= 0.0 || !total.is_finite() {
+        let mut one_hot = vec![0.0; k];
+        one_hot[rng.index(k)] = 1.0;
+        return one_hot;
+    }
+    draws.into_iter().map(|g| g / total).collect()
+}
+
+/// Split `total` items over parts proportionally to `props` (largest
+/// remainder, ties by index), so counts sum to exactly `total`.
+fn apportion(total: usize, props: &[f64]) -> Vec<usize> {
+    let mut counts: Vec<usize> = props.iter().map(|p| (p * total as f64) as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    let mut order: Vec<usize> = (0..props.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = props[a] * total as f64 - counts[a] as f64;
+        let fb = props[b] * total as f64 - counts[b] as f64;
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for i in 0..total.saturating_sub(assigned) {
+        counts[order[i % order.len()]] += 1;
+    }
+    counts
+}
+
+/// Move one row out of the largest part into every empty part, so no
+/// node ends up with nothing to train on. Requires `rows ≥ parts`.
+fn rebalance_nonempty(parts: &mut [Vec<usize>]) {
+    for empty in 0..parts.len() {
+        if !parts[empty].is_empty() {
+            continue;
+        }
+        let donor = (0..parts.len())
+            .max_by_key(|&i| parts[i].len())
+            .expect("at least one part");
+        assert!(parts[donor].len() > 1, "fewer rows than nodes");
+        let row = parts[donor].pop().expect("donor has rows");
+        parts[empty].push(row);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partitioners (each base row lands on exactly one node)
+// ---------------------------------------------------------------------------
+
+/// IID reference: shuffled round-robin split of `rows` over `nodes`.
+pub fn partition_iid(rows: usize, nodes: usize, rng: &mut Xoshiro256pp) -> Vec<Vec<usize>> {
+    assert!(nodes > 0 && rows >= nodes, "need at least one row per node");
+    let mut idx: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::new(); nodes];
+    for (pos, i) in idx.into_iter().enumerate() {
+        out[pos % nodes].push(i);
+    }
+    out
+}
+
+/// Label skew: for each class, node proportions are `Dirichlet(α)`;
+/// small α gives each class to few nodes.
+pub fn partition_label_skew(
+    labels: &[usize],
+    classes: usize,
+    nodes: usize,
+    alpha: f64,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<usize>> {
+    assert!(nodes > 0 && labels.len() >= nodes, "need at least one row per node");
+    let mut out = vec![Vec::new(); nodes];
+    for class in 0..classes {
+        let mut rows_c: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l == class)
+            .map(|(i, _)| i)
+            .collect();
+        if rows_c.is_empty() {
+            continue;
+        }
+        rng.shuffle(&mut rows_c);
+        let props = dirichlet(rng, alpha, nodes);
+        let counts = apportion(rows_c.len(), &props);
+        let mut it = rows_c.into_iter();
+        for (node, &count) in counts.iter().enumerate() {
+            out[node].extend(it.by_ref().take(count));
+        }
+    }
+    rebalance_nonempty(&mut out);
+    out
+}
+
+/// Quantity skew: shard sizes are `Dirichlet(α)`-proportioned, content
+/// stays IID (shuffled before slicing).
+pub fn partition_quantity_skew(
+    rows: usize,
+    nodes: usize,
+    alpha: f64,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<usize>> {
+    assert!(nodes > 0 && rows >= nodes, "need at least one row per node");
+    let mut idx: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut idx);
+    let props = dirichlet(rng, alpha, nodes);
+    let counts = apportion(rows, &props);
+    let mut out = vec![Vec::new(); nodes];
+    let mut it = idx.into_iter();
+    for (node, &count) in counts.iter().enumerate() {
+        out[node].extend(it.by_ref().take(count));
+    }
+    rebalance_nonempty(&mut out);
+    out
+}
+
+/// Covariate shift: a copy of `shard` where every row is seen through
+/// the node's own additive per-feature offset `N(0, σ)` (labels and
+/// row identity untouched).
+pub fn feature_shift(shard: &Dataset, sigma: f32, rng: &mut Xoshiro256pp) -> Dataset {
+    let dim = shard.dim();
+    let offset: Vec<f32> = (0..dim).map(|_| rng.gauss_f32(0.0, sigma)).collect();
+    let mut out = Dataset::with_capacity(dim, shard.classes(), shard.len());
+    let mut row = vec![0.0f32; dim];
+    for i in 0..shard.len() {
+        let s = shard.sample(i);
+        for (d, v) in row.iter_mut().enumerate() {
+            *v = s.features[d] + offset[d];
+        }
+        out.push(&row, s.label);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Plan recipes
+// ---------------------------------------------------------------------------
+
+/// A named workload recipe — the CLI's `--plan` vocabulary. The skew
+/// knob (`--dirichlet-alpha`) is the Dirichlet α for
+/// `dirichlet`/`quantity`/`mixed` and the offset σ for `feature-shift`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlanSpec {
+    /// The historical §V-A world: every node draws from its own
+    /// generator distribution, one global objective.
+    Synth,
+    /// Label-skew Dirichlet split of a pooled global dataset.
+    Dirichlet { alpha: f64 },
+    /// Quantity-skew split (unequal shard sizes, IID content).
+    Quantity { alpha: f64 },
+    /// IID split + per-node additive feature offsets of scale σ.
+    FeatureShift { sigma: f64 },
+    /// Label-skew Dirichlet split *and* a hinge/Lasso objective mix
+    /// (alternating by node parity; both are `(dim)`-shaped).
+    Mixed { alpha: f64 },
+}
+
+impl PlanSpec {
+    /// CLI-selectable names (usage strings / did-you-mean).
+    pub const NAMES: [&'static str; 5] =
+        ["synth", "dirichlet", "quantity", "feature-shift", "mixed"];
+
+    /// Default skew knob (α, or σ for `feature-shift`).
+    pub const DEFAULT_ALPHA: f64 = 0.5;
+
+    /// Parse a CLI name with its skew knob.
+    pub fn parse(name: &str, alpha: f64) -> Option<Self> {
+        match name {
+            "synth" => Some(PlanSpec::Synth),
+            "dirichlet" => Some(PlanSpec::Dirichlet { alpha }),
+            "quantity" => Some(PlanSpec::Quantity { alpha }),
+            "feature-shift" => Some(PlanSpec::FeatureShift { sigma: alpha }),
+            "mixed" => Some(PlanSpec::Mixed { alpha }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanSpec::Synth => "synth",
+            PlanSpec::Dirichlet { .. } => "dirichlet",
+            PlanSpec::Quantity { .. } => "quantity",
+            PlanSpec::FeatureShift { .. } => "feature-shift",
+            PlanSpec::Mixed { .. } => "mixed",
+        }
+    }
+
+    /// The objective node `i` gets under this recipe (`mixed`
+    /// alternates hinge/Lasso; everything else is uniform).
+    pub fn node_objective(&self, base: Objective, i: usize) -> Objective {
+        match self {
+            PlanSpec::Mixed { .. } => {
+                if i % 2 == 0 {
+                    Objective::hinge()
+                } else {
+                    Objective::lasso()
+                }
+            }
+            _ => base,
+        }
+    }
+
+    /// Partition an arbitrary base dataset into a plan (synthetic,
+    /// notMNIST, or any other [`Dataset`]). Deterministic in
+    /// `(self, base, nodes, seed)`. Not meaningful for
+    /// [`PlanSpec::Synth`], which generates per-node worlds instead of
+    /// splitting a pool — it falls back to an IID split here.
+    pub fn build_over(
+        &self,
+        base: &Dataset,
+        objective: Objective,
+        nodes: usize,
+        seed: u64,
+    ) -> WorkloadPlan {
+        let mut rng = Xoshiro256pp::seeded(seed ^ 0x5EC7_10);
+        let parts = match *self {
+            PlanSpec::Synth | PlanSpec::FeatureShift { .. } => {
+                partition_iid(base.len(), nodes, &mut rng)
+            }
+            PlanSpec::Dirichlet { alpha } | PlanSpec::Mixed { alpha } => {
+                partition_label_skew(base.labels(), base.classes(), nodes, alpha, &mut rng)
+            }
+            PlanSpec::Quantity { alpha } => {
+                partition_quantity_skew(base.len(), nodes, alpha, &mut rng)
+            }
+        };
+        let assignments = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, idx)| {
+                let mut shard = base.subset(&idx);
+                if let PlanSpec::FeatureShift { sigma } = *self {
+                    shard = feature_shift(&shard, sigma as f32, &mut rng);
+                }
+                NodeAssignment {
+                    objective: self.node_objective(objective, i),
+                    shard,
+                }
+            })
+            .collect();
+        WorkloadPlan::new(assignments)
+    }
+
+    /// Build the full synthetic-world plan plus its held-out global
+    /// test set. [`PlanSpec::Synth`] reproduces
+    /// [`synth_world`](crate::experiments::synth_world) exactly (so
+    /// legacy seeded runs keep their shards); the skew recipes pool
+    /// `nodes × samples_per_node` draws of the global mixture and
+    /// partition that pool.
+    pub fn build(
+        &self,
+        objective: Objective,
+        nodes: usize,
+        samples_per_node: usize,
+        test_n: usize,
+        seed: u64,
+    ) -> (WorkloadPlan, Dataset) {
+        use crate::data::SyntheticGen;
+        if let PlanSpec::Synth = self {
+            let (shards, test) =
+                crate::experiments::synth_world(nodes, samples_per_node, test_n, seed);
+            return (WorkloadPlan::homogeneous(objective, shards), test);
+        }
+        let gen = SyntheticGen::paper_default(nodes, seed);
+        let mut rng = Xoshiro256pp::seeded(seed ^ 0xBA5E);
+        let base = gen.global_test_set(nodes * samples_per_node, &mut rng);
+        let test = gen.global_test_set(test_n, &mut rng);
+        (self.build_over(&base, objective, nodes, seed), test)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codes (PlanAssign frames carry objectives as a (code, λ) pair)
+// ---------------------------------------------------------------------------
+
+/// Serialize an objective for a `PlanAssign` frame. λ is 0 for the
+/// unregularized family.
+pub fn objective_code(o: Objective) -> (u8, f32) {
+    match o {
+        Objective::LogReg => (0, 0.0),
+        Objective::Hinge { lam } => (1, lam),
+        Objective::Lasso { lam } => (2, lam),
+    }
+}
+
+/// Inverse of [`objective_code`]; `None` for codes this build does not
+/// speak (total — wire input is untrusted).
+pub fn objective_from_code(code: u8, lam: f32) -> Option<Objective> {
+    match code {
+        0 => Some(Objective::LogReg),
+        1 => Some(Objective::Hinge { lam }),
+        2 => Some(Objective::Lasso { lam }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(rows: usize, classes: usize, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        let mut d = Dataset::with_capacity(4, classes, rows);
+        for _ in 0..rows {
+            let x: Vec<f32> = (0..4).map(|_| rng.gauss_f32(0.0, 1.0)).collect();
+            d.push(&x, rng.index(classes));
+        }
+        d
+    }
+
+    fn assert_exact_cover(parts: &[Vec<usize>], rows: usize) {
+        let mut seen = vec![false; rows];
+        for part in parts {
+            assert!(!part.is_empty(), "empty shard");
+            for &i in part {
+                assert!(!seen[i], "row {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "rows left unassigned");
+    }
+
+    #[test]
+    fn partitioners_cover_exactly_once() {
+        let d = base(97, 5, 3);
+        let mut rng = Xoshiro256pp::seeded(7);
+        assert_exact_cover(&partition_iid(97, 6, &mut rng), 97);
+        assert_exact_cover(
+            &partition_label_skew(d.labels(), 5, 6, 0.2, &mut rng),
+            97,
+        );
+        assert_exact_cover(&partition_quantity_skew(97, 6, 0.3, &mut rng), 97);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Xoshiro256pp::seeded(5);
+        for &alpha in &[0.01, 0.5, 5.0] {
+            let p = dirichlet(&mut rng, alpha, 8);
+            assert_eq!(p.len(), 8);
+            assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "alpha {alpha}: sum {s}");
+        }
+    }
+
+    #[test]
+    fn small_alpha_concentrates_mass() {
+        let mut rng = Xoshiro256pp::seeded(11);
+        let avg_max = |alpha: f64, rng: &mut Xoshiro256pp| -> f64 {
+            (0..50)
+                .map(|_| {
+                    dirichlet(rng, alpha, 10)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                })
+                .sum::<f64>()
+                / 50.0
+        };
+        let sharp = avg_max(0.05, &mut rng);
+        let flat = avg_max(50.0, &mut rng);
+        assert!(sharp > flat + 0.3, "sharp {sharp} vs flat {flat}");
+    }
+
+    #[test]
+    fn apportion_is_exact() {
+        for (total, props) in [
+            (10usize, vec![0.5, 0.5]),
+            (7, vec![0.9, 0.05, 0.05]),
+            (0, vec![1.0]),
+            (13, vec![0.33, 0.33, 0.34]),
+        ] {
+            let counts = apportion(total, &props);
+            assert_eq!(counts.iter().sum::<usize>(), total, "{props:?}");
+        }
+    }
+
+    #[test]
+    fn feature_shift_moves_features_keeps_labels() {
+        let d = base(20, 3, 9);
+        let mut rng = Xoshiro256pp::seeded(2);
+        let shifted = feature_shift(&d, 1.0, &mut rng);
+        assert_eq!(shifted.len(), d.len());
+        assert_eq!(shifted.labels(), d.labels());
+        assert_ne!(shifted.features_flat(), d.features_flat());
+        // The shift is a constant per feature: differences are constant
+        // across rows.
+        let delta0: Vec<f32> = (0..4)
+            .map(|k| shifted.sample(0).features[k] - d.sample(0).features[k])
+            .collect();
+        let delta7: Vec<f32> = (0..4)
+            .map(|k| shifted.sample(7).features[k] - d.sample(7).features[k])
+            .collect();
+        for (a, b) in delta0.iter().zip(&delta7) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn plan_shape_and_census() {
+        let (plan, test) = PlanSpec::Mixed { alpha: 0.5 }.build(Objective::LogReg, 6, 30, 64, 1);
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan.dim(), 50);
+        assert_eq!(plan.param_len(), 50); // hinge/lasso are (dim)-shaped
+        assert!(plan.is_mixed());
+        let fams = plan.families();
+        assert_eq!(fams.len(), 2);
+        assert_eq!(fams.iter().map(|(_, c)| c).sum::<usize>(), 6);
+        assert_eq!(test.len(), 64);
+        // Mixed ignores the base objective (logreg cannot join).
+        assert!(plan.objectives().iter().all(|o| o.name() != "logreg"));
+    }
+
+    #[test]
+    fn synth_spec_matches_legacy_world() {
+        let (plan, _) = PlanSpec::Synth.build(Objective::LogReg, 4, 25, 16, 9);
+        let (shards, _) = crate::experiments::synth_world(4, 25, 16, 9);
+        for i in 0..4 {
+            assert_eq!(plan.shard(i).labels(), shards[i].labels());
+            assert_eq!(plan.shard(i).features_flat(), shards[i].features_flat());
+        }
+        assert!(!plan.is_mixed());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot mix logreg")]
+    fn logreg_cannot_mix_with_dim_shaped_families() {
+        let d = base(10, 4, 1);
+        WorkloadPlan::new(vec![
+            NodeAssignment {
+                objective: Objective::LogReg,
+                shard: d.subset(&[0, 1, 2]),
+            },
+            NodeAssignment {
+                objective: Objective::hinge(),
+                shard: d.subset(&[3, 4, 5]),
+            },
+        ]);
+    }
+
+    #[test]
+    fn partial_plans_fill_placeholders() {
+        let d = base(12, 4, 2);
+        let assigned = vec![
+            (
+                1,
+                NodeAssignment {
+                    objective: Objective::hinge(),
+                    shard: d.subset(&[0, 1]),
+                },
+            ),
+            (
+                2,
+                NodeAssignment {
+                    objective: Objective::lasso(),
+                    shard: d.subset(&[2, 3]),
+                },
+            ),
+        ];
+        let plan = WorkloadPlan::from_partial(4, 4, 4, assigned, true).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert!(plan.shard(0).is_empty());
+        assert_eq!(plan.shard(1).len(), 2);
+        assert_eq!(plan.param_len(), 4);
+        assert!(plan.is_mixed());
+        // Errors, not panics, on bad input.
+        assert!(WorkloadPlan::from_partial(4, 4, 4, vec![], false).is_err());
+        let dup = vec![
+            (
+                0,
+                NodeAssignment {
+                    objective: Objective::hinge(),
+                    shard: d.subset(&[0]),
+                },
+            ),
+            (
+                0,
+                NodeAssignment {
+                    objective: Objective::hinge(),
+                    shard: d.subset(&[1]),
+                },
+            ),
+        ];
+        assert!(WorkloadPlan::from_partial(4, 4, 4, dup, false).is_err());
+    }
+
+    #[test]
+    fn partial_plan_inherits_the_deployments_mixed_verdict() {
+        // A single-node slice of a mixed deployment looks homogeneous
+        // locally; the launcher's PlanStart verdict must win so the
+        // per-family stepsize policy survives sharding.
+        let d = base(8, 4, 7);
+        let one = |mixed: bool| {
+            WorkloadPlan::from_partial(
+                4,
+                4,
+                4,
+                vec![(
+                    2,
+                    NodeAssignment {
+                        objective: Objective::lasso(),
+                        shard: d.subset(&[0, 1]),
+                    },
+                )],
+                mixed,
+            )
+            .unwrap()
+        };
+        assert!(one(true).is_mixed());
+        assert!(!one(false).is_mixed());
+    }
+
+    #[test]
+    fn objective_codes_round_trip() {
+        for o in [Objective::LogReg, Objective::hinge(), Objective::lasso()] {
+            let (code, lam) = objective_code(o);
+            assert_eq!(objective_from_code(code, lam), Some(o));
+        }
+        assert_eq!(objective_from_code(9, 0.0), None);
+    }
+
+    #[test]
+    fn spec_parse_names() {
+        for name in PlanSpec::NAMES {
+            assert_eq!(PlanSpec::parse(name, 0.5).unwrap().name(), name);
+        }
+        assert_eq!(PlanSpec::parse("wire", 0.5), None);
+        assert_eq!(
+            PlanSpec::parse("dirichlet", 0.1),
+            Some(PlanSpec::Dirichlet { alpha: 0.1 })
+        );
+    }
+}

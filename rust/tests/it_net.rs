@@ -19,6 +19,7 @@ use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
 use dasgd::net::{LaunchConfig, ShardMap, SocketConfig, SocketNet};
 use dasgd::objective::Objective;
 use dasgd::transport::{Transport, TransportKind};
+use dasgd::workload::{PlanSpec, WorkloadPlan};
 
 /// Consensus tolerance shared by every engine comparison on the fixed
 /// ring world below (`it_transport.rs` uses 5.0 for shared-vs-simnet;
@@ -71,10 +72,10 @@ fn socket_pair_matches_channel_consensus_tolerance_in_process() {
         transport: TransportKind::Socket,
         ..AsyncConfig::quick(NODES)
     };
+    let plan = WorkloadPlan::homogeneous(Objective::LogReg, shards);
     let run_a = spawn_shard(
         &graph,
-        &shards,
-        Objective::LogReg,
+        &plan,
         &cfg,
         Arc::new(a.clone()) as Arc<dyn Transport>,
         a.local_nodes(),
@@ -82,8 +83,7 @@ fn socket_pair_matches_channel_consensus_tolerance_in_process() {
     );
     let run_b = spawn_shard(
         &graph,
-        &shards,
-        Objective::LogReg,
+        &plan,
         &cfg,
         Arc::new(b.clone()) as Arc<dyn Transport>,
         b.local_nodes(),
@@ -146,6 +146,51 @@ fn launch_two_workers_reaches_channel_tolerance() {
     );
     assert!(d_channel < TOL);
     assert!(last.test_err.is_finite() && last.test_err < 0.9);
+}
+
+#[test]
+fn launch_mixed_plan_ships_non_iid_shards_over_the_wire() {
+    // The heterogeneity acceptance path: a 2-worker deployment with a
+    // label-skew Dirichlet split (α = 0.1) and a hinge/lasso objective
+    // mix. Workers are spawned with `--plan wire`, so every shard they
+    // train on crossed the control connection — nothing is regenerated
+    // from the seed — and the run must still reach its horizon.
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        plan: PlanSpec::Mixed { alpha: 0.1 },
+        horizon_updates: 800,
+        secs_cap: 25.0,
+        seed: SEED,
+        ..LaunchConfig::quick(2, NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("heterogeneous launch failed");
+    assert_eq!(rep.live_workers, 2, "both workers must stay live");
+    assert!(rep.reached_horizon, "heterogeneous run stalled before the horizon");
+    assert!(rep.counts.updates() >= 800);
+    assert!(rep.counts.proj_steps > 0, "no cross-process projections");
+    let last = rep.recorder.last().expect("monitor recorded snapshots");
+    assert!(last.consensus.is_finite());
+    assert!(last.test_loss.is_finite() && last.test_err.is_finite());
+    // The shipped shards really are non-IID: with α = 0.1 the plan's
+    // label distribution differs sharply across nodes.
+    let (plan, _) = PlanSpec::Mixed { alpha: 0.1 }.build(
+        Objective::LogReg,
+        NODES,
+        300,
+        16,
+        SEED,
+    );
+    let max_frac = |counts: Vec<usize>| {
+        let total: usize = counts.iter().sum();
+        *counts.iter().max().unwrap() as f64 / total.max(1) as f64
+    };
+    let most_skewed = (0..NODES)
+        .map(|i| max_frac(plan.shard(i).class_counts()))
+        .fold(0.0f64, f64::max);
+    assert!(
+        most_skewed > 0.5,
+        "α=0.1 should concentrate labels, max fraction {most_skewed}"
+    );
 }
 
 /// Snapshot one worker over a monitor control connection.

@@ -1,0 +1,270 @@
+//! Integration: the workload-assignment subsystem.
+//!
+//! * Determinism — a plan built from `(spec, nodes, seed)` is
+//!   bit-identical across builds *and* across a wire round trip of its
+//!   assignments (what `dasgd launch` ships to workers).
+//! * Coverage — property test that every partitioner assigns each base
+//!   row to exactly one node and leaves no node empty, for synthetic
+//!   and notMNIST-shaped data alike.
+//! * Skew — small Dirichlet α produces measurably non-IID shards.
+//! * End-to-end — a mixed hinge/lasso plan drives the event-driven
+//!   engine to a finite, consensus-reaching state.
+
+use dasgd::data::{Dataset, NotMnistGen};
+use dasgd::experiments::make_regular;
+use dasgd::net::{assignment_from_msg, plan_assign_msg};
+use dasgd::net::wire;
+use dasgd::objective::Objective;
+use dasgd::sim::{simnet_run_plan, SimConfig, SpeedModel};
+use dasgd::transport::SimNetConfig;
+use dasgd::util::proptest::{check, Gen};
+use dasgd::util::rng::Xoshiro256pp;
+use dasgd::workload::{
+    partition_iid, partition_label_skew, partition_quantity_skew, PlanSpec, WorkloadPlan,
+};
+
+fn assert_plans_equal(a: &WorkloadPlan, b: &WorkloadPlan) {
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert_eq!(a.objective(i).name(), b.objective(i).name(), "node {i}");
+        assert_eq!(a.shard(i).labels(), b.shard(i).labels(), "node {i}");
+        assert_eq!(
+            a.shard(i).features_flat(),
+            b.shard(i).features_flat(),
+            "node {i}"
+        );
+    }
+}
+
+#[test]
+fn plans_are_deterministic_in_spec_nodes_seed() {
+    for spec in [
+        PlanSpec::Synth,
+        PlanSpec::Dirichlet { alpha: 0.1 },
+        PlanSpec::Quantity { alpha: 0.4 },
+        PlanSpec::FeatureShift { sigma: 0.7 },
+        PlanSpec::Mixed { alpha: 0.1 },
+    ] {
+        let (p1, t1) = spec.build(Objective::LogReg, 8, 60, 128, 42);
+        let (p2, t2) = spec.build(Objective::LogReg, 8, 60, 128, 42);
+        assert_plans_equal(&p1, &p2);
+        assert_eq!(t1.labels(), t2.labels(), "{spec:?} test set");
+        // A different seed gives a different world.
+        let (p3, _) = spec.build(Objective::LogReg, 8, 60, 128, 43);
+        let same = (0..8).all(|i| p1.shard(i).labels() == p3.shard(i).labels());
+        assert!(!same, "{spec:?}: seed 42 and 43 built identical plans");
+    }
+}
+
+#[test]
+fn plan_survives_a_wire_round_trip_bit_for_bit() {
+    // The exact path `dasgd launch` uses: every assignment is encoded
+    // as a PlanAssign frame, decoded on the far side, and reassembled
+    // into the worker's partial plan. Data must survive by bits.
+    let (plan, _) = PlanSpec::Mixed { alpha: 0.1 }.build(Objective::LogReg, 6, 50, 32, 7);
+    let mut shipped = Vec::new();
+    for id in 0..plan.len() {
+        let frame = wire::encode(&plan_assign_msg(id, plan.node(id)).unwrap());
+        let (msg, used) = wire::decode(&frame).unwrap().expect("complete frame");
+        assert_eq!(used, frame.len());
+        shipped.push(assignment_from_msg(&msg).unwrap());
+    }
+    let rebuilt = WorkloadPlan::from_partial(
+        plan.len(),
+        plan.dim(),
+        plan.classes(),
+        shipped,
+        plan.is_mixed(),
+    )
+    .unwrap();
+    assert_plans_equal(&plan, &rebuilt);
+    assert_eq!(rebuilt.param_len(), plan.param_len());
+    assert!(rebuilt.is_mixed());
+}
+
+/// Exactly-once coverage with no empty shard — the partitioner
+/// contract.
+fn assert_exact_cover(parts: &[Vec<usize>], rows: usize) -> Result<(), String> {
+    let mut seen = vec![false; rows];
+    for (node, part) in parts.iter().enumerate() {
+        if part.is_empty() {
+            return Err(format!("node {node} got no rows"));
+        }
+        for &i in part {
+            if i >= rows {
+                return Err(format!("row {i} out of range"));
+            }
+            if seen[i] {
+                return Err(format!("row {i} assigned twice"));
+            }
+            seen[i] = true;
+        }
+    }
+    match seen.iter().position(|&v| !v) {
+        Some(i) => Err(format!("row {i} never assigned")),
+        None => Ok(()),
+    }
+}
+
+#[test]
+fn prop_partitioners_cover_every_row_exactly_once() {
+    check("partition-coverage", 120, 0x5EED, |g: &mut Gen| {
+        let nodes = g.usize_in(1, 12);
+        let rows = g.usize_in(nodes.max(2), nodes * 40);
+        let classes = g.usize_in(2, 10);
+        let alpha = g.f64_in(0.02, 5.0);
+        let labels: Vec<usize> = (0..rows).map(|_| g.rng.index(classes)).collect();
+        let mut rng = Xoshiro256pp::seeded(g.rng.next_u64());
+        assert_exact_cover(&partition_iid(rows, nodes, &mut rng), rows)
+            .map_err(|e| format!("iid: {e}"))?;
+        assert_exact_cover(
+            &partition_label_skew(&labels, classes, nodes, alpha, &mut rng),
+            rows,
+        )
+        .map_err(|e| format!("label-skew α={alpha}: {e}"))?;
+        assert_exact_cover(&partition_quantity_skew(rows, nodes, alpha, &mut rng), rows)
+            .map_err(|e| format!("quantity α={alpha}: {e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn partitioners_work_over_notmnist_data() {
+    // The partitioners are generic over the base dataset: the same
+    // recipes split the 256-feature glyph corpus.
+    let gen = NotMnistGen::new(4, 11);
+    let mut rng = Xoshiro256pp::seeded(11);
+    let base = gen.global_test_set(120, &mut rng);
+    let plan = PlanSpec::Dirichlet { alpha: 0.2 }.build_over(&base, Objective::LogReg, 5, 11);
+    assert_eq!(plan.len(), 5);
+    assert_eq!(plan.dim(), base.dim());
+    let total: usize = (0..5).map(|i| plan.shard(i).len()).sum();
+    assert_eq!(total, base.len(), "every glyph row lands on exactly one node");
+    assert!((0..5).all(|i| !plan.shard(i).is_empty()));
+    assert_eq!(plan.param_len(), base.dim() * base.classes());
+}
+
+#[test]
+fn small_alpha_is_measurably_non_iid() {
+    let max_class_frac = |plan: &WorkloadPlan| {
+        (0..plan.len())
+            .map(|i| {
+                let counts = plan.shard(i).class_counts();
+                let total: usize = counts.iter().sum();
+                *counts.iter().max().unwrap() as f64 / total.max(1) as f64
+            })
+            .fold(0.0f64, f64::max)
+    };
+    let (skewed, _) = PlanSpec::Dirichlet { alpha: 0.05 }.build(Objective::LogReg, 12, 60, 16, 5);
+    let (iid, _) = PlanSpec::Dirichlet { alpha: 200.0 }.build(Objective::LogReg, 12, 60, 16, 5);
+    let s = max_class_frac(&skewed);
+    let f = max_class_frac(&iid);
+    assert!(
+        s > f + 0.15,
+        "α=0.05 should concentrate labels well beyond α=200: {s:.3} vs {f:.3}"
+    );
+}
+
+#[test]
+fn quantity_skew_spreads_shard_sizes() {
+    let (plan, _) = PlanSpec::Quantity { alpha: 0.1 }.build(Objective::LogReg, 10, 50, 16, 9);
+    let sizes: Vec<usize> = (0..10).map(|i| plan.shard(i).len()).collect();
+    let max = *sizes.iter().max().unwrap();
+    let min = *sizes.iter().min().unwrap();
+    assert!(min >= 1, "no node may be starved: {sizes:?}");
+    assert!(
+        max >= min * 3,
+        "α=0.1 should spread sizes at least 3x: {sizes:?}"
+    );
+    assert_eq!(sizes.iter().sum::<usize>(), 500);
+}
+
+#[test]
+fn mixed_plan_drives_the_event_engine_to_consensus() {
+    let n = 8;
+    let (plan, test) = PlanSpec::Mixed { alpha: 0.5 }.build(Objective::LogReg, n, 60, 256, 21);
+    let g = make_regular(n, 4);
+    let speeds = SpeedModel::homogeneous(n, 1.0);
+    let cfg = SimConfig {
+        p_grad: 0.5,
+        stepsize: Objective::lasso().default_stepsize(n), // superseded per node
+        objective: Objective::LogReg,
+        horizon: 200.0,
+        eval_every: 50.0,
+        net: SimNetConfig::ideal(0.002),
+        seed: 21,
+    };
+    let rep = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
+    assert!(rep.updates > 800, "updates={}", rep.updates);
+    assert!(rep.proj_steps > 0, "no projections between mixed families");
+    let last = rep.recorder.last().unwrap();
+    assert!(last.test_loss.is_finite() && last.test_err.is_finite());
+    // Gossip keeps the mixed cohort bounded: d^k stays within the same
+    // order as one stepsize-scale deviation per node, not diverging.
+    assert!(
+        last.consensus.is_finite() && last.consensus < 100.0,
+        "mixed-cohort consensus diverged: {}",
+        last.consensus
+    );
+    assert!(rep
+        .final_params
+        .iter()
+        .all(|w| w.len() == 50 && w.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn homogeneous_wrapper_matches_plan_path_exactly() {
+    // simnet_run(shards) and simnet_run_plan(homogeneous plan) are the
+    // same computation — seeded runs must agree bit-for-bit.
+    let n = 6;
+    let (shards, test) = dasgd::experiments::synth_world(n, 40, 128, 13);
+    let g = make_regular(n, 2);
+    let speeds = SpeedModel::homogeneous(n, 1.0);
+    let cfg = SimConfig {
+        p_grad: 0.5,
+        stepsize: Objective::LogReg.default_stepsize(n),
+        objective: Objective::LogReg,
+        horizon: 60.0,
+        eval_every: 20.0,
+        net: SimNetConfig::ideal(0.001),
+        seed: 13,
+    };
+    let a = dasgd::sim::simnet_run(&g, &shards, &test, &speeds, &cfg);
+    let plan = WorkloadPlan::homogeneous(Objective::LogReg, shards);
+    let b = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
+    assert_eq!(a.updates, b.updates);
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(
+        a.recorder.last().unwrap().test_err,
+        b.recorder.last().unwrap().test_err
+    );
+}
+
+#[test]
+fn feature_shift_plan_keeps_label_marginals() {
+    let (shifted, _) =
+        PlanSpec::FeatureShift { sigma: 1.0 }.build(Objective::LogReg, 6, 40, 16, 31);
+    let (plain, _) = PlanSpec::Dirichlet { alpha: 1e6 }.build(Objective::LogReg, 6, 40, 16, 31);
+    // Covariate shift: features move, the overall label pool does not.
+    let pool = |p: &WorkloadPlan| {
+        let mut all: Vec<usize> = (0..p.len()).flat_map(|i| p.shard(i).labels().to_vec()).collect();
+        all.sort_unstable();
+        all
+    };
+    assert_eq!(pool(&shifted), pool(&plain));
+    // And per-node feature means genuinely differ under the shift.
+    let mean0: f32 = shifted.shard(0).features_flat().iter().sum::<f32>()
+        / shifted.shard(0).features_flat().len() as f32;
+    let mean1: f32 = shifted.shard(1).features_flat().iter().sum::<f32>()
+        / shifted.shard(1).features_flat().len() as f32;
+    assert!((mean0 - mean1).abs() > 1e-3, "shift did nothing: {mean0} vs {mean1}");
+}
+
+#[test]
+fn empty_dataset_helpers_reject_bad_shapes() {
+    // WorkloadPlan::homogeneous refuses an all-empty world.
+    let result = std::panic::catch_unwind(|| {
+        WorkloadPlan::homogeneous(Objective::LogReg, vec![Dataset::new(3, 2)])
+    });
+    assert!(result.is_err(), "all-empty plan must be rejected");
+}

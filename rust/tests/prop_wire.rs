@@ -10,7 +10,7 @@ use dasgd::util::proptest::{check, Gen};
 /// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
 fn arb_msg(g: &mut Gen) -> WireMsg {
     let w_len = g.usize_in(0, g.size * 64);
-    match g.usize_in(0, 9) {
+    match g.usize_in(0, 11) {
         0 => WireMsg::Hello {
             rank: g.usize_in(0, 1 << 20) as u32,
         },
@@ -64,7 +64,25 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
                     .collect(),
             }
         }
-        _ => WireMsg::Shutdown,
+        9 => WireMsg::Shutdown,
+        10 => {
+            let dim = g.usize_in(1, 8);
+            let rows = g.usize_in(0, g.size * 8);
+            WireMsg::PlanAssign {
+                node: g.usize_in(0, 10_000) as u32,
+                obj_code: g.usize_in(0, 3) as u8,
+                lam: g.f32_vec(1, 0.0, 1.0)[0],
+                dim: dim as u32,
+                classes: g.usize_in(1, 12) as u32,
+                labels: (0..rows).map(|_| g.usize_in(0, 11) as u32).collect(),
+                features: g.f32_vec(rows * dim, -100.0, 100.0),
+            }
+        }
+        _ => WireMsg::PlanStart {
+            nodes: g.usize_in(0, 100_000) as u32,
+            assigned: g.usize_in(0, 100_000) as u32,
+            mixed: g.bool(),
+        },
     }
 }
 
