@@ -126,7 +126,9 @@ fn bench_transports(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
 }
 
 /// Wire-codec micro-bench: encode/decode of a projection reply carrying
-/// a `param_len`-dim vector (the deployment's dominant frame).
+/// a `param_len`-dim vector (the deployment's dominant frame), plus the
+/// chunk envelope on a shard-sized `PlanAssign` (the `launch` shipping
+/// path for quantity-skewed worlds).
 fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
     let msg = WireMsg::ApplyAverage {
         from: 5,
@@ -136,22 +138,48 @@ fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
     };
     let mut rows = Vec::new();
     let r = h.case("wire encode (ApplyAverage, 500 dims)", || {
-        std::hint::black_box(wire::encode(&msg));
+        std::hint::black_box(wire::encode(&msg).unwrap());
     });
     rows.push(("wire_encode".to_string(), r.mean_secs));
-    let frame = wire::encode(&msg);
+    let frame = wire::encode(&msg).unwrap();
     let r = h.case("wire decode (ApplyAverage, 500 dims)", || {
         std::hint::black_box(wire::decode(&frame).unwrap().unwrap());
     });
     rows.push(("wire_decode".to_string(), r.mean_secs));
+
+    // Chunked logical messages: a ~20 MiB PlanAssign (100k rows × 50
+    // features) split into the ChunkBegin/Data/End envelope and
+    // reassembled — the whole-shard cost a launch pays per node.
+    let rows_n = 100_000usize;
+    let big = WireMsg::PlanAssign {
+        node: 0,
+        obj_code: 0,
+        lam: 0.0,
+        dim: 50,
+        classes: 10,
+        labels: (0..rows_n as u32).map(|i| i % 10).collect(),
+        features: (0..rows_n * 50).map(|i| i as f32 * 0.125).collect(),
+    };
+    let r = h.case("wire chunk encode (20 MiB PlanAssign)", || {
+        std::hint::black_box(wire::encode_message(&big).unwrap());
+    });
+    rows.push(("wire_chunk_encode".to_string(), r.mean_secs));
+    let stream = wire::encode_message(&big).unwrap().concat();
+    let r = h.case("wire chunk reassemble (20 MiB PlanAssign)", || {
+        let mut asm = wire::ChunkAssembler::new();
+        let mut cursor = std::io::Cursor::new(&stream);
+        std::hint::black_box(wire::read_message(&mut cursor, &mut asm).unwrap());
+    });
+    rows.push(("wire_chunk_reassemble".to_string(), r.mean_secs));
     rows
 }
 
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
-        "  \"topology\": \"ring-10, closed neighborhood of 3; wire_* rows are \
-         codec-only on a 500-dim ApplyAverage frame\",\n",
+        "  \"topology\": \"ring-10, closed neighborhood of 3; wire_encode/decode are \
+         codec-only on a 500-dim ApplyAverage frame; wire_chunk_* are the chunk \
+         envelope on a 20 MiB PlanAssign\",\n",
     );
     body.push_str(&format!("  \"param_len\": {param_len},\n  \"mean_secs\": {{\n"));
     for (i, (name, mean)) in rows.iter().enumerate() {

@@ -56,19 +56,22 @@ System:
               processes, ship each its workload shards over TCP, monitor
               them (--workers K --nodes N --degree D --horizon U applied
               updates --secs S cap --rate HZ --objective ...
-              --plan P --dirichlet-alpha A --csv PATH)
+              --plan P --dirichlet-alpha A --samples M per node
+              --csv PATH); shards of any size ship — past the 16 MiB
+              frame cap they ride the chunked wire envelope
   worker      one deployment worker process (--rank R
               --peers host:port,host:port,... --nodes N --degree D
               --secs S --rate HZ --objective ... --plan P|wire
-              --param-len L with wire); `launch` spawns these
+              --samples M --param-len L with wire); `launch` spawns these
   artifacts   verify the AOT artifact set loads + executes
 
 Workload plans (--plan): synth (default, the §V-A per-node world),
 dirichlet (label-skew split of a pooled world), quantity (skewed shard
 sizes), feature-shift (per-node covariate shift), mixed (dirichlet +
-alternating hinge/lasso objectives). --dirichlet-alpha A is the skew
-knob (Dirichlet α, or σ for feature-shift; default 0.5). See
-docs/heterogeneity.md.
+alternating hinge/lasso objectives). --dirichlet-alpha A is the
+Dirichlet skew knob (default 0.5, must be > 0); feature-shift's offset
+scale has its own flag, --shift-sigma S (when omitted, α doubles as σ —
+the legacy fallback). See docs/heterogeneity.md.
 
 Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
@@ -110,17 +113,71 @@ fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
     Objective::parse(name).ok_or_else(|| unknown_value("objective", name, &Objective::NAMES))
 }
 
-/// Parse `--plan` + `--dirichlet-alpha` into a workload recipe,
-/// rejecting unknown names with a suggestion.
-fn parse_plan(args: &Args) -> anyhow::Result<PlanSpec> {
+/// Validate the skew knobs against the chosen plan name: α must be a
+/// drawable Dirichlet parameter, and the dedicated `--shift-sigma`
+/// knob is rejected (not silently ignored) on any plan without a σ.
+/// Shared by every verb that takes `--plan`, including the worker's
+/// `wire` mode — flags must not change meaning by verb.
+fn validate_skew_knobs(args: &Args, plan_name: &str) -> anyhow::Result<(f64, Option<f64>)> {
     let alpha = args
         .get_f64("dirichlet-alpha", PlanSpec::DEFAULT_ALPHA)
         .map_err(anyhow::Error::msg)?;
-    if alpha.is_nan() || alpha <= 0.0 {
-        anyhow::bail!("--dirichlet-alpha must be > 0, got {alpha}");
+    if !alpha.is_finite() || alpha <= 0.0 {
+        anyhow::bail!(
+            "--dirichlet-alpha must be a positive α, got {alpha} — α → 0 is the one-hot \
+             skew limit, which the Dirichlet sampler cannot draw; did you mean a small \
+             positive value like 0.01 (extreme skew) or 100 (near-IID)?"
+        );
     }
+    let sigma = match args.get("shift-sigma") {
+        None => None,
+        Some(_) => {
+            let s = args.get_f64("shift-sigma", 0.0).map_err(anyhow::Error::msg)?;
+            if !s.is_finite() || s < 0.0 {
+                anyhow::bail!("--shift-sigma must be a finite offset scale ≥ 0, got {s}");
+            }
+            if plan_name != "feature-shift" {
+                anyhow::bail!(
+                    "--shift-sigma only applies to --plan feature-shift (got --plan {plan_name}); \
+                     the Dirichlet recipes take --dirichlet-alpha"
+                );
+            }
+            Some(s)
+        }
+    };
+    Ok((alpha, sigma))
+}
+
+/// Parse `--plan` + `--dirichlet-alpha` + `--shift-sigma` into a
+/// workload recipe, rejecting unknown names and out-of-domain knobs
+/// with a suggestion. `also` extends the name vocabulary listed in
+/// errors (the worker verb additionally speaks `wire`).
+fn parse_plan_with(args: &Args, also: &[&str]) -> anyhow::Result<PlanSpec> {
     let name = args.get_str("plan", "synth");
-    PlanSpec::parse(name, alpha).ok_or_else(|| unknown_value("plan", name, &PlanSpec::NAMES))
+    let (alpha, sigma) = validate_skew_knobs(args, name)?;
+    let mut known: Vec<&str> = PlanSpec::NAMES.to_vec();
+    known.extend_from_slice(also);
+    PlanSpec::parse_spec(name, alpha, sigma)
+        .ok_or_else(|| unknown_value("plan", name, &known))
+}
+
+/// [`parse_plan_with`] for the commands whose `--plan` vocabulary is
+/// exactly the recipe names.
+fn parse_plan(args: &Args) -> anyhow::Result<PlanSpec> {
+    parse_plan_with(args, &[])
+}
+
+/// Parse `--samples` (rows per node in the built world). Zero would
+/// panic the partitioners' need-a-row-per-node asserts far from the
+/// flag that caused it — refuse at the CLI instead.
+fn parse_samples(args: &Args, default: usize) -> anyhow::Result<usize> {
+    let samples = args
+        .get_usize("samples", default)
+        .map_err(anyhow::Error::msg)?;
+    if samples == 0 {
+        anyhow::bail!("--samples must be ≥ 1 (every node needs at least one data row)");
+    }
+    Ok(samples)
 }
 
 fn main() {
@@ -174,6 +231,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "transport",
             "plan",
             "dirichlet-alpha",
+            "shift-sigma",
         ],
         "sim" => &[
             "nodes",
@@ -189,6 +247,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "straggle",
             "plan",
             "dirichlet-alpha",
+            "shift-sigma",
             "csv",
         ],
         "launch" => &[
@@ -202,6 +261,8 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "objective",
             "plan",
             "dirichlet-alpha",
+            "shift-sigma",
+            "samples",
             "csv",
         ],
         "worker" => &[
@@ -214,6 +275,8 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "objective",
             "plan",
             "dirichlet-alpha",
+            "shift-sigma",
+            "samples",
             "param-len",
         ],
         _ => return None,
@@ -491,7 +554,7 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     if !(0.0..=1.0).contains(&drop_prob) {
         anyhow::bail!("--drop-prob must be in [0, 1], got {drop_prob}");
     }
-    let samples = args.get_usize("samples", 60).map_err(anyhow::Error::msg)?;
+    let samples = parse_samples(args, 60)?;
     let straggle = args.get_f64("straggle", 1.0).map_err(anyhow::Error::msg)?;
     let objective = parse_objective(args)?;
     // --partition T0:T1:CUT — sever edges across {<CUT} | {>=CUT} for
@@ -589,6 +652,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
     let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
     let objective = parse_objective(args)?;
     let plan = parse_plan(args)?;
+    let samples = parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?;
     let cfg = LaunchConfig {
         workers,
         nodes,
@@ -599,6 +663,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         rate_hz: rate,
         objective,
         plan,
+        samples_per_node: samples,
         seed,
         binary: None,
     };
@@ -662,23 +727,22 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
     // on every machine given the seed) or — `--plan wire` — receives it
     // from the launch monitor, which then must also say `--param-len`
     // so the engine can bind before the data arrives.
-    let plan_name = args.get_str("plan", "synth");
-    let plan = if plan_name == "wire" {
+    let plan = if args.get_str("plan", "synth") == "wire" {
+        // The shipped plan carries its own skew, but the knobs are
+        // still validated — a typo'd --shift-sigma or --dirichlet-alpha
+        // must not be silently dropped just because the plan is wired.
+        validate_skew_knobs(args, "wire")?;
         let param_len = args.get_usize("param-len", 0).map_err(anyhow::Error::msg)?;
         if param_len == 0 {
             anyhow::bail!("--plan wire needs --param-len L (the launcher supplies it)");
         }
         WorkerPlanSource::Wire { param_len }
     } else {
-        let alpha = args
-            .get_f64("dirichlet-alpha", PlanSpec::DEFAULT_ALPHA)
-            .map_err(anyhow::Error::msg)?;
-        let mut known: Vec<&str> = PlanSpec::NAMES.to_vec();
-        known.push("wire");
-        let Some(spec) = PlanSpec::parse(plan_name, alpha) else {
-            return Err(unknown_value("plan", plan_name, &known));
-        };
-        WorkerPlanSource::Local(spec)
+        // The shared parser validates the skew knobs exactly as
+        // `launch`/`sim`/`cluster` do — a standalone `worker
+        // --dirichlet-alpha 0` fails here with guidance instead of
+        // panicking inside the Dirichlet sampler.
+        WorkerPlanSource::Local(parse_plan_with(args, &["wire"])?)
     };
     let cfg = WorkerConfig {
         rank,
@@ -689,6 +753,7 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         rate_hz: args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?,
         objective: parse_objective(args)?,
         plan,
+        samples_per_node: parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?,
         seed,
     };
     run_worker(&cfg)?;

@@ -13,11 +13,16 @@
 //! (`PlanAssign`/`PlanStart` frames on the control connection): real
 //! non-IID shards and per-node objectives travel to the processes that
 //! train on them — workers spawned with `--plan wire` never regenerate
-//! the global world. Only the topology is re-derived from
-//! `(nodes, degree)`, which is deterministic and cheap. A standalone
-//! worker (spanning machines, no launcher) instead derives its plan
-//! locally from `--plan <spec>`: the builders are bit-deterministic in
-//! `(spec, nodes, seed)`, so every rank reconstructs identical shards.
+//! the global world. Shards of any size ship: a `PlanAssign` whose
+//! shard outgrows the 16 MiB frame cap rides the wire codec's chunk
+//! envelope (`ChunkBegin`/`ChunkData`/`ChunkEnd`), and `PlanStart`
+//! carries a checksum over everything shipped, so a worker that starts
+//! certifies it received the plan bit-for-bit. Only the topology is
+//! re-derived from `(nodes, degree)`, which is deterministic and
+//! cheap. A standalone worker (spanning machines, no launcher) instead
+//! derives its plan locally from `--plan <spec>`: the builders are
+//! bit-deterministic in `(spec, nodes, seed)`, so every rank
+//! reconstructs identical shards.
 //!
 //! After shipping, the launcher plays *monitor* — it polls every
 //! worker's shard over the control connection
@@ -54,54 +59,76 @@ use crate::workload::{objective_code, objective_from_code, NodeAssignment, PlanS
 use super::socket::{ShardMap, SocketConfig, SocketNet};
 use super::wire::{self, WireMsg, MONITOR_RANK};
 
-/// Samples per node in the deployment's synthetic world (matches the
-/// in-process `cluster` command, so cross-mode runs are comparable).
-const SAMPLES_PER_NODE: usize = 300;
+/// Default samples per node in a deployment's synthetic world (matches
+/// the in-process `cluster` command, so cross-mode runs are
+/// comparable). Override with `--samples` / the config fields — large
+/// values are how quantity-skewed plans grow shards past the wire's
+/// frame cap.
+pub const SAMPLES_PER_NODE: usize = 300;
 const TEST_SAMPLES: usize = 512;
 
-/// How many nodes' parameter vectors one `SnapshotReply` frame carries:
-/// sized so a frame stays ~4 MiB, far under the wire codec's 16 MiB
-/// cap even for large shards (the monitor reassembles chunks — it
-/// knows each rank's shard size from the same `ShardMap`).
-fn snapshot_chunk_nodes(param_len: usize) -> usize {
-    let bytes_per_node = param_len * 4 + 8;
-    ((4 << 20) / bytes_per_node.max(1)).max(1)
+/// One control-plane connection: the TCP stream plus the read buffer
+/// and chunk-reassembly staging that make *logical* messages resumable.
+/// A frame split across a read timeout resumes on the next call, and a
+/// chunked message (a large `PlanAssign` or `SnapshotReply`) staged
+/// across several calls completes when its envelope does — neither ever
+/// desyncs the stream.
+struct ControlConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    assembler: wire::ChunkAssembler,
 }
 
-/// Read one frame from a control connection without assuming frame
-/// boundaries align with read timeouts: bytes accumulate in `buf`
-/// across calls, so a frame split by a timeout resumes instead of
-/// desyncing the stream. Returns `Ok(None)` when nothing complete
-/// arrived by `deadline` (a transient stall, not an error).
-fn read_control_frame(
-    conn: &mut TcpStream,
-    buf: &mut Vec<u8>,
-    deadline: Instant,
-) -> Result<Option<WireMsg>, wire::WireError> {
-    loop {
-        if let Some((msg, used)) = wire::decode(buf)? {
-            buf.drain(..used);
-            return Ok(Some(msg));
+impl ControlConn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            buf: Vec::new(),
+            assembler: wire::ChunkAssembler::new(),
         }
-        if Instant::now() >= deadline {
-            return Ok(None);
-        }
-        let mut tmp = [0u8; 4096];
-        match conn.read(&mut tmp) {
-            Ok(0) => {
-                return Err(wire::WireError::Io(std::io::Error::new(
-                    std::io::ErrorKind::UnexpectedEof,
-                    "control connection closed",
-                )))
+    }
+
+    fn set_write_timeout(&self, dur: Duration) {
+        let _ = self.stream.set_write_timeout(Some(dur));
+    }
+
+    /// Read one logical message. Returns `Ok(None)` when nothing
+    /// complete arrived by `deadline` (a transient stall, not an
+    /// error); buffered bytes and chunk staging persist across calls.
+    fn read_msg(&mut self, deadline: Instant) -> Result<Option<WireMsg>, wire::WireError> {
+        loop {
+            // Drain frames already buffered before touching the socket.
+            while let Some((frame_msg, used)) = wire::decode(&self.buf)? {
+                self.buf.drain(..used);
+                if let Some(msg) = self.assembler.accept(frame_msg)? {
+                    return Ok(Some(msg));
+                }
             }
-            Ok(n) => buf.extend_from_slice(&tmp[..n]),
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) => {}
-            Err(e) => return Err(wire::WireError::Io(e)),
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            let mut tmp = [0u8; 65536];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(wire::WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "control connection closed",
+                    )))
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => return Err(wire::WireError::Io(e)),
+            }
         }
+    }
+
+    /// Write one logical message (chunked past the frame cap).
+    fn write_msg(&mut self, msg: &WireMsg) -> Result<(), wire::WireError> {
+        wire::write_message(&mut self.stream, msg)
     }
 }
 
@@ -109,31 +136,20 @@ fn read_control_frame(
 // Plan ⇄ wire
 // ---------------------------------------------------------------------------
 
-/// Encode node `id`'s assignment as a `PlanAssign` control frame.
-/// Errors when the shard cannot fit the codec's frame cap (one frame
-/// per node keeps reassembly trivial; a 16 MiB shard is ~80k rows of
-/// the 50-feature world).
-pub fn plan_assign_msg(id: usize, a: &NodeAssignment) -> Result<WireMsg> {
-    let rows = a.shard.len();
-    let dim = a.shard.dim();
-    let approx_len = 32 + rows * 4 + rows * dim * 4;
-    if approx_len > wire::MAX_FRAME_LEN {
-        bail!(
-            "node {id}'s shard ({rows} rows × {dim} features) exceeds the \
-             {}-byte wire frame cap",
-            wire::MAX_FRAME_LEN
-        );
-    }
+/// Encode node `id`'s assignment as a `PlanAssign` control message.
+/// Total for any shard size: the wire layer's chunk envelope carries
+/// what a single frame cannot (pre-v3 this hard-errored past 16 MiB).
+pub fn plan_assign_msg(id: usize, a: &NodeAssignment) -> WireMsg {
     let (obj_code, lam) = objective_code(a.objective);
-    Ok(WireMsg::PlanAssign {
+    WireMsg::PlanAssign {
         node: id as u32,
         obj_code,
         lam,
-        dim: dim as u32,
+        dim: a.shard.dim() as u32,
         classes: a.shard.classes() as u32,
         labels: a.shard.labels().iter().map(|&l| l as u32).collect(),
         features: a.shard.features_flat().to_vec(),
-    })
+    }
 }
 
 /// Decode a `PlanAssign` frame back into `(node, assignment)`,
@@ -213,6 +229,9 @@ pub struct WorkerConfig {
     /// it.
     pub objective: Objective,
     pub plan: WorkerPlanSource,
+    /// Samples per node for locally-derived plans (ignored for
+    /// `--plan wire`, where the launcher decides).
+    pub samples_per_node: usize,
     pub seed: u64,
 }
 
@@ -226,15 +245,17 @@ pub struct WorkerSummary {
 
 /// Wait for the launch monitor's control connection and drain its
 /// `PlanAssign` stream up to `PlanStart`. Returns the worker's partial
-/// plan plus the control connection (and its read buffer) so the serve
-/// loop continues on the very same stream.
+/// plan plus the control connection so the serve loop continues on the
+/// very same stream. The `PlanStart` checksum is verified against what
+/// actually arrived — a corrupted shipment refuses to start instead of
+/// training on wrong bits.
 fn receive_wire_plan(
     net: &SocketNet,
     nodes: usize,
     param_len: usize,
     deadline: Instant,
-) -> Result<(WorkloadPlan, TcpStream, Vec<u8>)> {
-    let mut conn = loop {
+) -> Result<(WorkloadPlan, ControlConn)> {
+    let conn = loop {
         if let Some(c) = net.take_control() {
             break c;
         }
@@ -245,18 +266,26 @@ fn receive_wire_plan(
     };
     let _ = conn.set_read_timeout(Some(Duration::from_millis(50)));
     let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
-    let mut buf = Vec::new();
+    let mut conn = ControlConn::new(conn);
     let mut assigned: Vec<(usize, NodeAssignment)> = Vec::new();
-    let global_mixed = loop {
+    let mut received_sum = wire::Fnv64::new();
+    let (global_mixed, want_checksum) = loop {
         let frame_deadline = Instant::now() + Duration::from_millis(250);
-        match read_control_frame(&mut conn, &mut buf, frame_deadline) {
+        match conn.read_msg(frame_deadline) {
             Ok(Some(msg @ WireMsg::PlanAssign { .. })) => {
+                // Fold the canonical per-message checksum of what we
+                // actually decoded — bit-identical shipping makes this
+                // land on the launcher's PlanStart value.
+                let sum = wire::message_checksum(&msg)
+                    .map_err(|e| anyhow!("re-encoding a received assignment: {e}"))?;
+                received_sum.update(&sum.to_le_bytes());
                 assigned.push(assignment_from_msg(&msg)?);
             }
             Ok(Some(WireMsg::PlanStart {
                 nodes: n_total,
                 assigned: count,
                 mixed,
+                checksum,
             })) => {
                 if n_total as usize != nodes {
                     bail!("plan is for {n_total} nodes, this deployment has {nodes}");
@@ -267,7 +296,7 @@ fn receive_wire_plan(
                         assigned.len()
                     );
                 }
-                break mixed;
+                break (mixed, checksum);
             }
             Ok(Some(_)) => {} // nothing else is meaningful pre-start
             Ok(None) => {
@@ -278,6 +307,13 @@ fn receive_wire_plan(
             Err(e) => return Err(anyhow!("control stream failed mid-plan: {e}")),
         }
     };
+    if received_sum.finish() != want_checksum {
+        bail!(
+            "shipped plan failed its integrity checksum (got {:#x}, monitor sent {want_checksum:#x}) \
+             — refusing to train on corrupted shards",
+            received_sum.finish()
+        );
+    }
     let Some((_, first)) = assigned.first() else {
         bail!("monitor started the run without shipping any assignment");
     };
@@ -289,7 +325,7 @@ fn receive_wire_plan(
             plan.param_len()
         );
     }
-    Ok((plan, conn, buf))
+    Ok((plan, conn))
 }
 
 /// Run one worker to completion: bind, rendezvous, obtain the workload
@@ -312,8 +348,13 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     // one arrives after (its parameter length came on the CLI).
     let (local_plan, param_len) = match cfg.plan {
         WorkerPlanSource::Local(spec) => {
-            let (plan, _test) =
-                spec.build(objective, cfg.nodes, SAMPLES_PER_NODE, TEST_SAMPLES, cfg.seed);
+            let (plan, _test) = spec.build(
+                objective,
+                cfg.nodes,
+                cfg.samples_per_node,
+                TEST_SAMPLES,
+                cfg.seed,
+            );
             let param_len = plan.param_len();
             (Some(plan), param_len)
         }
@@ -354,13 +395,13 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     }
 
     let deadline = Instant::now() + Duration::from_secs_f64(cfg.secs.max(0.1));
-    let mut controls: Vec<(TcpStream, Vec<u8>)> = Vec::new();
+    let mut controls: Vec<ControlConn> = Vec::new();
     let plan = match local_plan {
         Some(plan) => plan,
         None => {
-            let (plan, conn, buf) = receive_wire_plan(&net, cfg.nodes, param_len, deadline)
+            let (plan, conn) = receive_wire_plan(&net, cfg.nodes, param_len, deadline)
                 .with_context(|| format!("rank {} receiving the workload plan", cfg.rank))?;
-            controls.push((conn, buf));
+            controls.push(conn);
             plan
         }
     };
@@ -392,38 +433,33 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         while let Some(conn) = net.take_control() {
             let _ = conn.set_read_timeout(Some(Duration::from_millis(25)));
             let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
-            controls.push((conn, Vec::new()));
+            controls.push(ControlConn::new(conn));
         }
         if controls.is_empty() {
             std::thread::sleep(Duration::from_millis(25));
             continue;
         }
         let mut dropped = Vec::new();
-        for (ci, (conn, buf)) in controls.iter_mut().enumerate() {
+        for (ci, conn) in controls.iter_mut().enumerate() {
             let frame_deadline = Instant::now() + Duration::from_millis(25);
-            match read_control_frame(conn, buf, frame_deadline) {
+            match conn.read_msg(frame_deadline) {
                 Ok(Some(WireMsg::SnapshotRequest)) => {
-                    // Chunked so a large shard never exceeds the frame
-                    // cap; the monitor reassembles (it knows our shard
-                    // size). Counters ride on every chunk — the last
-                    // one read wins, and they only grow.
+                    // One logical reply with the whole shard; the wire
+                    // layer's chunk envelope carries it when it
+                    // outgrows a frame (the monitor reassembles
+                    // transparently through its own ControlConn).
                     let c = run.counts();
-                    let counts = [c.grad_steps, c.proj_steps, c.messages, c.conflicts];
-                    let all: Vec<(u32, Vec<f32>)> = net
-                        .local_params()
-                        .into_iter()
-                        .map(|(id, w)| (id as u32, w))
-                        .collect();
-                    for chunk in all.chunks(snapshot_chunk_nodes(param_len)) {
-                        let reply = WireMsg::SnapshotReply {
-                            rank: cfg.rank,
-                            counts,
-                            params: chunk.to_vec(),
-                        };
-                        if wire::write_frame(conn, &reply).is_err() {
-                            dropped.push(ci);
-                            break;
-                        }
+                    let reply = WireMsg::SnapshotReply {
+                        rank: cfg.rank,
+                        counts: [c.grad_steps, c.proj_steps, c.messages, c.conflicts],
+                        params: net
+                            .local_params()
+                            .into_iter()
+                            .map(|(id, w)| (id as u32, w))
+                            .collect(),
+                    };
+                    if conn.write_msg(&reply).is_err() {
+                        dropped.push(ci);
                     }
                 }
                 Ok(Some(WireMsg::Shutdown)) => {
@@ -478,6 +514,9 @@ pub struct LaunchConfig {
     /// The workload recipe; the launcher builds it once and ships each
     /// worker its owned shards over the wire.
     pub plan: PlanSpec,
+    /// Samples per node in the built world — the lever that (with a
+    /// skewed plan) pushes single shards past the wire frame cap.
+    pub samples_per_node: usize,
     pub seed: u64,
     /// The worker binary. `None` = this executable (the CLI case);
     /// tests point it at the built `dasgd` binary.
@@ -496,6 +535,7 @@ impl LaunchConfig {
             rate_hz: 300.0,
             objective: Objective::LogReg,
             plan: PlanSpec::Synth,
+            samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
             binary: None,
         }
@@ -546,7 +586,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let (plan, test) = cfg.plan.build(
         cfg.objective,
         cfg.nodes,
-        SAMPLES_PER_NODE,
+        cfg.samples_per_node,
         TEST_SAMPLES,
         cfg.seed,
     );
@@ -601,18 +641,18 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     }
 
     // Monitor control connections (retry while workers come up).
-    let mut conns: Vec<Option<TcpStream>> = Vec::with_capacity(cfg.workers);
+    let mut conns: Vec<Option<ControlConn>> = Vec::with_capacity(cfg.workers);
     for (rank, addr) in peers.iter().enumerate() {
         let deadline = Instant::now() + Duration::from_secs(10);
         let conn = loop {
             if let Ok(mut s) = TcpStream::connect(addr) {
                 let _ = s.set_nodelay(true);
-                // Short socket timeout: read_control_frame's own frame
-                // deadline governs how long a round waits.
+                // Short socket timeout: read_msg's own deadline governs
+                // how long a round waits.
                 let _ = s.set_read_timeout(Some(Duration::from_millis(250)));
                 let _ = s.set_write_timeout(Some(Duration::from_secs(1)));
                 if wire::write_frame(&mut s, &WireMsg::Hello { rank: MONITOR_RANK }).is_ok() {
-                    break Some(s);
+                    break Some(ControlConn::new(s));
                 }
             }
             if Instant::now() >= deadline {
@@ -627,42 +667,53 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         conns.push(conn);
     }
 
-    // Ship each rank its owned block of the plan. The write timeout is
-    // generous here: a whole shard block crosses the socket, and a
-    // worker still inside peer rendezvous drains it a few seconds
-    // later.
+    // Ship each rank its owned block of the plan — chunked by the wire
+    // layer wherever a shard outgrows a frame. The write timeout is
+    // generous here: whole shard blocks cross the socket, and a worker
+    // still inside peer rendezvous drains them a few seconds later.
+    // PlanStart carries the fold of every shipped assignment's
+    // checksum; the worker refuses to start unless its own fold over
+    // what arrived matches (bit-for-bit delivery, certified).
     for (rank, conn_slot) in conns.iter_mut().enumerate() {
         let conn = conn_slot.as_mut().expect("all connected above");
-        let _ = conn.set_write_timeout(Some(Duration::from_secs(30)));
+        conn.set_write_timeout(Duration::from_secs(60));
         let block = shard_map.range(rank as u32);
-        let mut ok = true;
+        let mut shipped_sum = wire::Fnv64::new();
+        // Keep the concrete WireError: an encode-side refusal (a shard
+        // past the 1 GiB logical-message cap) must read as what it is,
+        // not as a dropped connection.
+        let mut shipped: Result<(), wire::WireError> = Ok(());
         for id in block.clone() {
-            let msg = match plan_assign_msg(id, plan.node(id)) {
-                Ok(msg) => msg,
+            let msg = plan_assign_msg(id, plan.node(id));
+            // message_checksum re-encodes the body write_msg encodes
+            // again (and the worker re-encodes once to verify). That
+            // extra pass is deliberate: both ends hash one canonical
+            // layout owned by the codec, instead of this module
+            // hand-rolling a second byte path that could drift.
+            match wire::message_checksum(&msg) {
+                Ok(sum) => shipped_sum.update(&sum.to_le_bytes()),
                 Err(e) => {
                     kill_all(&mut children);
-                    return Err(e);
+                    return Err(anyhow!("encoding node {id}'s assignment: {e}"));
                 }
-            };
-            if wire::write_frame(conn, &msg).is_err() {
-                ok = false;
+            }
+            if let Err(e) = conn.write_msg(&msg) {
+                shipped = Err(e);
                 break;
             }
         }
-        ok = ok
-            && wire::write_frame(
-                conn,
-                &WireMsg::PlanStart {
-                    nodes: cfg.nodes as u32,
-                    assigned: block.len() as u32,
-                    mixed: plan.is_mixed(),
-                },
-            )
-            .is_ok();
-        let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
-        if !ok {
+        if shipped.is_ok() {
+            shipped = conn.write_msg(&WireMsg::PlanStart {
+                nodes: cfg.nodes as u32,
+                assigned: block.len() as u32,
+                mixed: plan.is_mixed(),
+                checksum: shipped_sum.finish(),
+            });
+        }
+        conn.set_write_timeout(Duration::from_secs(1));
+        if let Err(e) = shipped {
             kill_all(&mut children);
-            bail!("worker {rank} dropped the control connection during plan shipping");
+            bail!("shipping the plan to worker {rank} failed: {e}");
         }
     }
 
@@ -671,7 +722,6 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let probe = Probe::mixed(&plan.objectives(), &test);
     let mut rec = Recorder::new("socket");
     let sw = Stopwatch::new();
-    let mut bufs: Vec<Vec<u8>> = (0..cfg.workers).map(|_| Vec::new()).collect();
     // A worker misses a round on a transient stall; only repeated
     // silence evicts it from the cohort. Five 2s-deadline rounds also
     // cover a worker still inside its 10s peer-rendezvous wait (it
@@ -684,46 +734,35 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let mut last_known = vec![[0u64; 4]; cfg.workers];
     let (counts, reached_horizon) = loop {
         let now = sw.elapsed_secs();
-        // Collect every live worker's shard (chunked SnapshotReply
-        // frames; each rank's expected node count comes from the
-        // ShardMap both sides share).
+        // Collect every live worker's shard: one logical SnapshotReply
+        // per rank (the wire layer reassembles chunked replies).
         let mut params: Vec<(u32, Vec<f32>)> = Vec::with_capacity(cfg.nodes);
         for (rank, conn_slot) in conns.iter_mut().enumerate() {
             let Some(conn) = conn_slot else { continue };
-            let buf = &mut bufs[rank];
-            // Drain complete frames left over from a timed-out round
-            // so stale chunks don't blend into this one (a partial
-            // frame's bytes stay and resume cleanly).
-            while let Ok(Some(_)) = read_control_frame(conn, buf, Instant::now()) {}
-            // Reassemble by node id (a stale chunk from a previously
-            // timed-out round may still arrive first; newest value for
-            // an id wins, and completion counts distinct ids).
+            // Discard stale replies completed after a previous round
+            // timed out, so they don't answer this round's request (a
+            // partially-read logical message stays staged and resumes).
+            while let Ok(Some(_)) = conn.read_msg(Instant::now()) {}
             let block = shard_map.range(rank as u32);
             let expected = block.len();
-            let mut shard: Vec<Option<Vec<f32>>> = vec![None; expected];
-            let mut got = 0usize;
-            let mut last_counts = None;
-            let ok = wire::write_frame(conn, &WireMsg::SnapshotRequest).is_ok() && {
+            let mut reply = None;
+            let ok = conn.write_msg(&WireMsg::SnapshotRequest).is_ok() && {
                 let deadline = Instant::now() + Duration::from_secs(2);
                 loop {
-                    match read_control_frame(conn, buf, deadline) {
+                    match conn.read_msg(deadline) {
                         Ok(Some(WireMsg::SnapshotReply {
                             counts,
-                            params: chunk,
+                            params: shard,
                             ..
                         })) => {
-                            last_counts = Some(counts);
-                            for (id, w) in chunk {
-                                let id = id as usize;
-                                if block.contains(&id) {
-                                    let slot = &mut shard[id - block.start];
-                                    if slot.is_none() {
-                                        got += 1;
-                                    }
-                                    *slot = Some(w);
-                                }
-                            }
-                            if got >= expected {
+                            // A reply must cover exactly the rank's
+                            // block; anything else is corrupt (or a
+                            // stale fragment) — keep listening until
+                            // the deadline.
+                            if shard.len() == expected
+                                && shard.iter().all(|(id, _)| block.contains(&(*id as usize)))
+                            {
+                                reply = Some((counts, shard));
                                 break true;
                             }
                         }
@@ -732,15 +771,10 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     }
                 }
             };
-            if ok {
+            if let (true, Some((counts, shard))) = (ok, reply) {
                 strikes[rank] = 0;
-                last_known[rank] = last_counts.expect("ok round has counts");
-                params.extend(
-                    shard
-                        .into_iter()
-                        .enumerate()
-                        .map(|(i, w)| ((block.start + i) as u32, w.expect("complete shard"))),
-                );
+                last_known[rank] = counts;
+                params.extend(shard);
             } else {
                 strikes[rank] += 1;
                 if strikes[rank] >= MAX_STRIKES {
@@ -776,7 +810,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
 
     // End the run: broadcast Shutdown, then reap.
     for conn in conns.iter_mut().flatten() {
-        let _ = wire::write_frame(conn, &WireMsg::Shutdown);
+        let _ = conn.write_msg(&WireMsg::Shutdown);
     }
     let reap_deadline = Instant::now() + Duration::from_secs(10);
     for c in children.iter_mut() {
@@ -827,6 +861,7 @@ mod tests {
             rate_hz: 100.0,
             objective: Objective::LogReg,
             plan: WorkerPlanSource::Local(PlanSpec::Synth),
+            samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
         };
         assert!(run_worker(&base).is_err(), "empty peers must fail");
@@ -850,8 +885,8 @@ mod tests {
         let (plan, _) =
             PlanSpec::Mixed { alpha: 0.3 }.build(Objective::LogReg, 4, 40, 16, 77);
         for id in 0..plan.len() {
-            let msg = plan_assign_msg(id, plan.node(id)).unwrap();
-            let frame = wire::encode(&msg);
+            let msg = plan_assign_msg(id, plan.node(id));
+            let frame = wire::encode(&msg).unwrap();
             let (back, _) = wire::decode(&frame).unwrap().expect("complete frame");
             let (rid, a) = assignment_from_msg(&back).unwrap();
             assert_eq!(rid, id);

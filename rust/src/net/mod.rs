@@ -8,8 +8,11 @@
 //! * [`wire`] — a versioned, length-prefixed binary codec for the
 //!   ChannelNet message set (`CollectRequest` / `CollectReply` / `Busy`
 //!   / `Abort` / `ApplyAverage`) plus the control plane (`Hello` /
-//!   `Heartbeat` / `SnapshotRequest` / `SnapshotReply` / `Shutdown`).
-//!   Decoding is total: malformed frames error, never panic.
+//!   `Heartbeat` / `SnapshotRequest` / `SnapshotReply` / `Shutdown`)
+//!   and a generic chunk envelope (`ChunkBegin` / `ChunkData` /
+//!   `ChunkEnd`) that carries any logical message past the 16 MiB
+//!   frame cap. Encoding and decoding are both total: overlong or
+//!   malformed input errors, never panics or truncates.
 //! * [`socket`] — [`SocketNet`], a [`Transport`](crate::transport::Transport)
 //!   where each worker process owns a [`ShardMap`] block of nodes.
 //!   Intra-shard traffic short-circuits through in-process mailboxes;
@@ -35,7 +38,7 @@ pub mod wire;
 
 pub use cluster::{
     assignment_from_msg, plan_assign_msg, run_launch, run_worker, LaunchConfig, LaunchReport,
-    WorkerConfig, WorkerPlanSource, WorkerSummary,
+    WorkerConfig, WorkerPlanSource, WorkerSummary, SAMPLES_PER_NODE,
 };
 pub use socket::{ShardMap, SocketConfig, SocketNet};
 pub use wire::{WireError, WireMsg, MONITOR_RANK, WIRE_VERSION};

@@ -430,6 +430,12 @@ fn handshake_inbound(inner: &Arc<Inner>, stream: TcpStream) {
                 });
             }
         }
+        // A peer from an older/newer build: refuse with a message a
+        // human can act on, instead of silently dropping garbage.
+        Err(e @ wire::WireError::Version { .. }) => {
+            eprintln!("dasgd-worker rank={}: rejected inbound connection — {e}", inner.rank);
+            let _ = stream.shutdown(Shutdown::Both);
+        }
         _ => {
             let _ = stream.shutdown(Shutdown::Both);
         }
@@ -482,21 +488,30 @@ fn dial_loop(inner: Arc<Inner>, rank: u32) {
 }
 
 /// Drain one peer connection, dispatching protocol frames into local
-/// node mailboxes. Exits when the socket dies (the link is then marked
-/// dead; reconnect is the dialer's job).
+/// node mailboxes. Frames pass through a per-peer [`ChunkAssembler`],
+/// so a logical message larger than one frame (a huge parameter
+/// vector) reassembles transparently. Exits when the socket dies or
+/// the chunk stream is violated (the link is then marked dead;
+/// reconnect is the dialer's job).
 fn reader_loop(inner: Arc<Inner>, rank: u32, mut stream: TcpStream) {
+    let mut asm = wire::ChunkAssembler::new();
     loop {
         if inner.stop.load(Ordering::SeqCst) {
             return;
         }
-        match wire::read_frame(&mut stream) {
-            Ok(msg) => {
+        match wire::read_frame(&mut stream).and_then(|frame| asm.accept(frame)) {
+            Ok(completed) => {
                 if let Some(link) = &inner.links[rank as usize] {
                     link.touch();
                 }
-                dispatch(&inner, msg);
+                if let Some(msg) = completed {
+                    dispatch(&inner, msg);
+                }
             }
-            Err(_) => {
+            Err(e) => {
+                if matches!(e, wire::WireError::Version { .. }) {
+                    eprintln!("dasgd-worker rank={}: peer link {rank} dropped — {e}", inner.rank);
+                }
                 if let Some(link) = &inner.links[rank as usize] {
                     // Only kill the link if this socket is still the
                     // installed one (a reconnect may have replaced it).
@@ -579,13 +594,21 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
                 );
             }
         }
-        // Heartbeats already touched the link; control frames are not
-        // valid on peer links.
+        // Heartbeats already touched the link. Control frames
+        // (snapshots, plan shipping, shutdown) are not valid on peer
+        // links, and chunk frames never reach dispatch — the reader's
+        // assembler consumed them (and a chunked *inner* chunk frame is
+        // an assembler error).
         WireMsg::Heartbeat { .. }
         | WireMsg::Hello { .. }
         | WireMsg::SnapshotRequest
         | WireMsg::SnapshotReply { .. }
-        | WireMsg::Shutdown => {}
+        | WireMsg::Shutdown
+        | WireMsg::PlanAssign { .. }
+        | WireMsg::PlanStart { .. }
+        | WireMsg::ChunkBegin { .. }
+        | WireMsg::ChunkData { .. }
+        | WireMsg::ChunkEnd { .. } => {}
     }
 }
 
@@ -615,8 +638,9 @@ fn heartbeat_loop(inner: Arc<Inner>) {
     }
 }
 
-/// Write one frame to a peer rank; a failed write kills the link (the
-/// message is lost — the protocol's deadlines absorb loss as Conflict).
+/// Write one logical message to a peer rank (chunked past the frame
+/// cap); a failed write kills the link (the message is lost — the
+/// protocol's deadlines absorb loss as Conflict).
 fn send_wire(inner: &Inner, rank: u32, msg: &WireMsg) {
     let Some(link) = &inner.links[rank as usize] else {
         return;
@@ -625,7 +649,7 @@ fn send_wire(inner: &Inner, rank: u32, msg: &WireMsg) {
     let Some(stream) = writer.as_mut() else {
         return;
     };
-    if wire::write_frame(stream, msg).is_err() {
+    if wire::write_message(stream, msg).is_err() {
         if let Some(s) = writer.take() {
             let _ = s.shutdown(Shutdown::Both);
         }
@@ -999,6 +1023,26 @@ mod tests {
         }
         assert!(a.reachable(0), "own nodes stay reachable");
         a.shutdown();
+    }
+
+    #[test]
+    fn older_wire_version_peer_is_refused_cleanly() {
+        // A v2 peer dialing a v3 worker: the handshake decode fails
+        // with a Version error and the connection is closed — the v2
+        // side sees a clean EOF (its own decoder rejects v3 frames
+        // symmetrically), never protocol garbage.
+        let net = SocketNet::bind(0, ShardMap::new(2, 1), 4, "127.0.0.1:0", fast_cfg()).unwrap();
+        let mut s = TcpStream::connect(net.local_addr()).unwrap();
+        // A version-2 Hello frame: [len=6][version=2][tag=0][rank u32].
+        let mut frame = 6u32.to_le_bytes().to_vec();
+        frame.extend_from_slice(&[2u8, 0u8]);
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        std::io::Write::write_all(&mut s, &frame).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 16];
+        let n = std::io::Read::read(&mut s, &mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "a v2 connection must be closed, not answered");
+        net.shutdown();
     }
 
     #[test]

@@ -10,16 +10,35 @@
 //! set is the ChannelNet projection protocol (`CollectRequest` /
 //! `CollectReply` / `Busy` / `Abort` / `ApplyAverage`) plus the control
 //! plane (`Hello` / `Heartbeat` / `SnapshotRequest` / `SnapshotReply` /
-//! `Shutdown`) and the workload-plan shipping frames (`PlanAssign` /
+//! `Shutdown`), the workload-plan shipping frames (`PlanAssign` /
 //! `PlanStart` — real data shards travel to workers, see
-//! docs/heterogeneity.md). All integers are little-endian; `f32`
+//! docs/heterogeneity.md), and the chunk envelope (`ChunkBegin` /
+//! `ChunkData` / `ChunkEnd`). All integers are little-endian; `f32`
 //! vectors are raw LE bit patterns (NaN-safe round trips).
 //!
-//! Decoding is total: malformed input — truncated bodies, unknown
-//! versions or tags, length prefixes that would allocate more than
-//! [`MAX_FRAME_LEN`], trailing garbage — returns a [`WireError`], never
-//! panics and never allocates proportionally to attacker-controlled
-//! lengths beyond the frame cap.
+//! # Logical messages vs frames
+//!
+//! A *frame* is capped at [`MAX_FRAME_LEN`] so a garbage length prefix
+//! can never balloon memory. A *logical message* may be far larger (a
+//! quantity-skewed data shard easily is): [`encode_message`] splits any
+//! message whose body exceeds the frame cap into an ordered
+//! `ChunkBegin{total_bytes, chunk_count}` / `ChunkData`⋯ /
+//! `ChunkEnd{checksum}` envelope, and the receiving side's
+//! [`ChunkAssembler`] reassembles it with bounded staging (at most
+//! [`MAX_MESSAGE_LEN`] bytes, allocated only as real bytes arrive).
+//! Messages that fit one frame pass through the assembler untouched, so
+//! every connection can simply route *all* inbound frames through one
+//! per-peer assembler.
+//!
+//! Decoding is total at both layers: malformed input — truncated
+//! bodies, unknown versions or tags, length prefixes beyond the caps,
+//! trailing garbage, interleaved or short chunk streams, checksum
+//! mismatches — returns a [`WireError`], never panics and never
+//! desyncs silently (the caller drops the connection on error).
+//!
+//! Encoding is total too: element counts are converted with
+//! `u32::try_from` and a body that cannot fit its framing returns
+//! [`WireError::Oversize`] instead of silently truncating a length.
 
 use std::io::{Read, Write};
 
@@ -29,13 +48,26 @@ use std::io::{Read, Write};
 ///
 /// v2 added the workload-plan control frames
 /// ([`PlanAssign`](WireMsg::PlanAssign) / [`PlanStart`](WireMsg::PlanStart)).
-pub const WIRE_VERSION: u8 = 2;
+/// v3 added the chunk envelope ([`ChunkBegin`](WireMsg::ChunkBegin) /
+/// [`ChunkData`](WireMsg::ChunkData) / [`ChunkEnd`](WireMsg::ChunkEnd))
+/// and the plan-integrity checksum on `PlanStart`.
+pub const WIRE_VERSION: u8 = 3;
 
-/// Upper bound on one frame's payload (version + tag + body). A frame
-/// carries at most one parameter vector per node of a snapshot shard;
-/// 16 MiB is orders of magnitude above anything the system produces and
-/// small enough that a garbage length prefix cannot balloon memory.
+/// Upper bound on one frame's payload (version + tag + body). Small
+/// enough that a garbage length prefix cannot balloon memory; logical
+/// messages larger than this ride the chunk envelope.
 pub const MAX_FRAME_LEN: usize = 1 << 24;
+
+/// Payload bytes carried by one [`ChunkData`](WireMsg::ChunkData)
+/// frame. Well under [`MAX_FRAME_LEN`] so chunk frames themselves never
+/// need chunking, and small enough that per-frame write timeouts stay
+/// meaningful on slow links.
+pub const CHUNK_PAYLOAD: usize = 1 << 22;
+
+/// Upper bound on one *logical* message (the chunk reassembly cap).
+/// 1 GiB: orders of magnitude above any realistic shard while still
+/// bounding what a hostile `ChunkBegin` can make a peer stage.
+pub const MAX_MESSAGE_LEN: usize = 1 << 30;
 
 /// The rank [`Hello`](WireMsg::Hello) uses to identify the monitor
 /// (launcher) control connection rather than a worker peer.
@@ -79,7 +111,9 @@ pub enum WireMsg {
     SnapshotRequest,
     /// Worker → monitor: cumulative counters in the canonical
     /// convention (`grad_steps`, `proj_steps`, `messages`, `conflicts`)
-    /// plus every owned node's current parameter vector.
+    /// plus every owned node's current parameter vector. One logical
+    /// message per request — the chunk envelope carries it when the
+    /// shard outgrows a frame.
     SnapshotReply {
         rank: u32,
         counts: [u64; 4],
@@ -91,7 +125,8 @@ pub enum WireMsg {
     /// objective (as a `(code, λ)` pair, see
     /// [`crate::workload::objective_code`]) plus its *actual* data
     /// shard, so workers never regenerate the global world from the
-    /// seed. `features` is row-major `labels.len() × dim`.
+    /// seed. `features` is row-major `labels.len() × dim`. Ships
+    /// chunked whenever the shard outgrows [`MAX_FRAME_LEN`].
     PlanAssign {
         node: u32,
         obj_code: u8,
@@ -105,12 +140,25 @@ pub enum WireMsg {
     /// for a `nodes`-node deployment); start driving the shard.
     /// `mixed` is the deployment-wide loss-family verdict — a worker's
     /// own slice can look homogeneous even when the system is mixed,
-    /// and the per-family stepsize policy hangs on it.
+    /// and the per-family stepsize policy hangs on it. `checksum` is
+    /// the FNV-1a fold of every shipped assignment's
+    /// [`message_checksum`] in ship order: the worker recomputes it
+    /// over what actually arrived and refuses to start on a mismatch,
+    /// so a run that starts certifies bit-identical delivery.
     PlanStart {
         nodes: u32,
         assigned: u32,
         mixed: bool,
+        checksum: u64,
     },
+    /// Chunk envelope: the next `chunk_count` [`ChunkData`] frames
+    /// carry `total_bytes` bytes of one encoded logical message body.
+    ChunkBegin { total_bytes: u64, chunk_count: u32 },
+    /// One ordered slice of the in-flight chunked message.
+    ChunkData { bytes: Vec<u8> },
+    /// End of the chunked message; `checksum` is [`fnv1a64`] over the
+    /// reassembled body.
+    ChunkEnd { checksum: u64 },
 }
 
 impl WireMsg {
@@ -128,7 +176,17 @@ impl WireMsg {
             WireMsg::Shutdown => 9,
             WireMsg::PlanAssign { .. } => 10,
             WireMsg::PlanStart { .. } => 11,
+            WireMsg::ChunkBegin { .. } => 12,
+            WireMsg::ChunkData { .. } => 13,
+            WireMsg::ChunkEnd { .. } => 14,
         }
+    }
+
+    fn is_chunk_frame(&self) -> bool {
+        matches!(
+            self,
+            WireMsg::ChunkBegin { .. } | WireMsg::ChunkData { .. } | WireMsg::ChunkEnd { .. }
+        )
     }
 }
 
@@ -143,12 +201,19 @@ pub enum WireError {
     Version { got: u8 },
     /// Tag byte outside the message set.
     UnknownTag { got: u8 },
-    /// Length prefix beyond [`MAX_FRAME_LEN`] (or an element count the
-    /// remaining bytes cannot possibly hold).
+    /// A length beyond the caps — a frame prefix past [`MAX_FRAME_LEN`],
+    /// an element count the remaining bytes cannot hold, a chunked
+    /// message past [`MAX_MESSAGE_LEN`], or (encode side) a vector too
+    /// long for its `u32` length prefix.
     Oversize { len: usize },
     /// Bytes left over after the last field — the frame lied about its
     /// own layout.
     Trailing { extra: usize },
+    /// The chunk envelope was violated: data without a begin, a second
+    /// begin mid-message, a non-chunk frame interleaved into a chunked
+    /// message, counts/bytes that disagree with the announcement, or a
+    /// checksum mismatch.
+    Chunk { reason: &'static str },
 }
 
 impl std::fmt::Display for WireError {
@@ -157,15 +222,24 @@ impl std::fmt::Display for WireError {
             WireError::Io(e) => write!(f, "wire i/o: {e}"),
             WireError::Truncated => write!(f, "frame body truncated"),
             WireError::Version { got } => {
-                write!(f, "wire version {got} (this build speaks {WIRE_VERSION})")
+                write!(
+                    f,
+                    "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
+                     upgrade the older end (pre-v3 peers cannot speak the chunked protocol)"
+                )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
             WireError::Oversize { len } => {
-                write!(f, "frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap")
+                write!(
+                    f,
+                    "length {len} exceeds the wire caps ({MAX_FRAME_LEN}-byte frames, \
+                     {MAX_MESSAGE_LEN}-byte messages)"
+                )
             }
             WireError::Trailing { extra } => {
                 write!(f, "{extra} trailing bytes after the last field")
             }
+            WireError::Chunk { reason } => write!(f, "chunk stream violation: {reason}"),
         }
     }
 }
@@ -185,6 +259,50 @@ impl From<std::io::Error> for WireError {
     }
 }
 
+fn chunk_err(reason: &'static str) -> WireError {
+    WireError::Chunk { reason }
+}
+
+/// FNV-1a 64-bit over a byte slice — the chunk/plan integrity checksum.
+/// Not cryptographic; it catches corruption and mis-assembly, not
+/// adversaries (the deployment trusts its own processes).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental [`fnv1a64`] — fold many byte runs into one checksum.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self {
+            state: 0xcbf2_9ce4_8422_2325,
+        }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= u64::from(b);
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Encoding
 // ---------------------------------------------------------------------------
@@ -201,22 +319,40 @@ fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32s(buf: &mut Vec<u8>, w: &[f32]) {
-    put_u32(buf, w.len() as u32);
+/// Element-count prefix, total: a count past `u32` refuses instead of
+/// silently truncating (the old `as u32` cast).
+fn put_len(buf: &mut Vec<u8>, len: usize) -> Result<(), WireError> {
+    let n = u32::try_from(len).map_err(|_| WireError::Oversize { len })?;
+    put_u32(buf, n);
+    Ok(())
+}
+
+fn put_f32s(buf: &mut Vec<u8>, w: &[f32]) -> Result<(), WireError> {
+    put_len(buf, w.len())?;
     for &v in w {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+    Ok(())
 }
 
-fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
-    put_u32(buf, v.len() as u32);
+fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) -> Result<(), WireError> {
+    put_len(buf, v.len())?;
     for &x in v {
         buf.extend_from_slice(&x.to_le_bytes());
     }
+    Ok(())
 }
 
-/// Serialize one message into a complete frame (length prefix included).
-pub fn encode(msg: &WireMsg) -> Vec<u8> {
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) -> Result<(), WireError> {
+    put_len(buf, b.len())?;
+    buf.extend_from_slice(b);
+    Ok(())
+}
+
+/// Serialize one message *body* (version + tag + fields, no length
+/// prefix). Bodies are not frame-capped — [`encode`] enforces the cap,
+/// [`encode_message`] chunks past it.
+fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
     let mut body = Vec::with_capacity(32);
     body.push(WIRE_VERSION);
     body.push(msg.tag());
@@ -238,7 +374,7 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             put_u32(&mut body, *from);
             put_u32(&mut body, *to);
             put_u64(&mut body, *token);
-            put_f32s(&mut body, w);
+            put_f32s(&mut body, w)?;
         }
         WireMsg::SnapshotRequest | WireMsg::Shutdown => {}
         WireMsg::SnapshotReply {
@@ -250,10 +386,10 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             for &c in counts {
                 put_u64(&mut body, c);
             }
-            put_u32(&mut body, params.len() as u32);
+            put_len(&mut body, params.len())?;
             for (node, w) in params {
                 put_u32(&mut body, *node);
-                put_f32s(&mut body, w);
+                put_f32s(&mut body, w)?;
             }
         }
         WireMsg::PlanAssign {
@@ -270,24 +406,104 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             put_f32(&mut body, *lam);
             put_u32(&mut body, *dim);
             put_u32(&mut body, *classes);
-            put_u32s(&mut body, labels);
-            put_f32s(&mut body, features);
+            put_u32s(&mut body, labels)?;
+            put_f32s(&mut body, features)?;
         }
         WireMsg::PlanStart {
             nodes,
             assigned,
             mixed,
+            checksum,
         } => {
             put_u32(&mut body, *nodes);
             put_u32(&mut body, *assigned);
             body.push(u8::from(*mixed));
+            put_u64(&mut body, *checksum);
         }
+        WireMsg::ChunkBegin {
+            total_bytes,
+            chunk_count,
+        } => {
+            put_u64(&mut body, *total_bytes);
+            put_u32(&mut body, *chunk_count);
+        }
+        WireMsg::ChunkData { bytes } => put_bytes(&mut body, bytes)?,
+        WireMsg::ChunkEnd { checksum } => put_u64(&mut body, *checksum),
     }
-    debug_assert!(body.len() <= MAX_FRAME_LEN);
+    Ok(body)
+}
+
+/// Wrap an encoded body in its length prefix.
+fn frame_body(body: Vec<u8>) -> Result<Vec<u8>, WireError> {
+    if body.len() > MAX_FRAME_LEN {
+        return Err(WireError::Oversize { len: body.len() });
+    }
     let mut frame = Vec::with_capacity(4 + body.len());
     put_u32(&mut frame, body.len() as u32);
     frame.extend_from_slice(&body);
-    frame
+    Ok(frame)
+}
+
+/// Serialize one message into a complete single frame (length prefix
+/// included). Total: a message whose body exceeds [`MAX_FRAME_LEN`]
+/// (or whose element counts overflow their `u32` prefixes) returns
+/// [`WireError::Oversize`] — use [`encode_message`] for messages that
+/// may need the chunk envelope.
+pub fn encode(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
+    frame_body(encode_body(msg)?)
+}
+
+/// Drive `sink` with each frame of `msg`'s logical encoding, in order:
+/// one plain frame when the body fits [`MAX_FRAME_LEN`], otherwise the
+/// `ChunkBegin` / `ChunkData`⋯ / `ChunkEnd` envelope. The single place
+/// the envelope is emitted — [`encode_message`] collects, and
+/// [`write_message`] streams (one frame live at a time, so a near-cap
+/// message never doubles in memory).
+fn for_each_frame(
+    msg: &WireMsg,
+    sink: &mut dyn FnMut(Vec<u8>) -> Result<(), WireError>,
+) -> Result<(), WireError> {
+    let body = encode_body(msg)?;
+    if body.len() <= MAX_FRAME_LEN {
+        return sink(frame_body(body)?);
+    }
+    if msg.is_chunk_frame() {
+        return Err(chunk_err("chunk frames cannot themselves be chunked"));
+    }
+    if body.len() > MAX_MESSAGE_LEN {
+        return Err(WireError::Oversize { len: body.len() });
+    }
+    let checksum = fnv1a64(&body);
+    let chunk_count = body.len().div_ceil(CHUNK_PAYLOAD);
+    sink(encode(&WireMsg::ChunkBegin {
+        total_bytes: body.len() as u64,
+        chunk_count: chunk_count as u32,
+    })?)?;
+    for part in body.chunks(CHUNK_PAYLOAD) {
+        sink(encode(&WireMsg::ChunkData {
+            bytes: part.to_vec(),
+        })?)?;
+    }
+    sink(encode(&WireMsg::ChunkEnd { checksum })?)
+}
+
+/// Serialize one logical message into the frame sequence that carries
+/// it (see [`for_each_frame`]; prefer [`write_message`] on a stream —
+/// it does not materialize the whole sequence).
+pub fn encode_message(msg: &WireMsg) -> Result<Vec<Vec<u8>>, WireError> {
+    let mut frames = Vec::new();
+    for_each_frame(msg, &mut |frame| {
+        frames.push(frame);
+        Ok(())
+    })?;
+    Ok(frames)
+}
+
+/// The canonical checksum of one logical message ([`fnv1a64`] over its
+/// encoded body) — what `ChunkEnd` carries for that message, and the
+/// unit the `PlanStart` plan checksum folds over.
+pub fn message_checksum(msg: &WireMsg) -> Result<u64, WireError> {
+    Ok(fnv1a64(&encode_body(msg)?))
 }
 
 // ---------------------------------------------------------------------------
@@ -332,6 +548,16 @@ impl<'a> Cursor<'a> {
 
     fn f32(&mut self) -> Result<f32, WireError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A length-prefixed raw byte run, count-validated against the
+    /// bytes actually remaining before any allocation.
+    fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let count = self.u32()? as usize;
+        if count > self.remaining() {
+            return Err(WireError::Oversize { len: count });
+        }
+        self.take(count)
     }
 
     /// A length-prefixed u32 vector, count-validated before allocation
@@ -450,7 +676,16 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             nodes: c.u32()?,
             assigned: c.u32()?,
             mixed: c.u8()? != 0,
+            checksum: c.u64()?,
         },
+        12 => WireMsg::ChunkBegin {
+            total_bytes: c.u64()?,
+            chunk_count: c.u32()?,
+        },
+        13 => WireMsg::ChunkData {
+            bytes: c.bytes()?.to_vec(),
+        },
+        14 => WireMsg::ChunkEnd { checksum: c.u64()? },
         got => return Err(WireError::UnknownTag { got }),
     };
     c.done()?;
@@ -476,9 +711,137 @@ pub fn decode(buf: &[u8]) -> Result<Option<(WireMsg, usize)>, WireError> {
     Ok(Some((msg, 4 + len)))
 }
 
-/// Write one frame to a blocking stream.
+// ---------------------------------------------------------------------------
+// Chunk reassembly
+// ---------------------------------------------------------------------------
+
+struct Staging {
+    total: usize,
+    chunk_count: u32,
+    seen: u32,
+    bytes: Vec<u8>,
+}
+
+/// Per-connection reassembly state for chunked logical messages.
+///
+/// Feed it *every* decoded frame from one connection, in order:
+/// non-chunk frames pass straight through (`Ok(Some(msg))`), chunk
+/// frames stage (`Ok(None)`) until the envelope completes and the inner
+/// message decodes. Any envelope violation returns a
+/// [`WireError::Chunk`] and clears the staging — the caller must treat
+/// that connection as broken (the stream can no longer be trusted to
+/// frame correctly), which is exactly what every SocketNet read path
+/// does with a wire error.
+///
+/// Memory is bounded: at most [`MAX_MESSAGE_LEN`] staged bytes per
+/// assembler, allocated only as real bytes arrive (a hostile
+/// `ChunkBegin` announcing a huge total reserves nothing).
+#[derive(Default)]
+pub struct ChunkAssembler {
+    staging: Option<Staging>,
+}
+
+impl ChunkAssembler {
+    pub fn new() -> Self {
+        Self { staging: None }
+    }
+
+    /// Is a chunked message currently mid-reassembly? (A stream that
+    /// ends here was truncated.)
+    pub fn in_progress(&self) -> bool {
+        self.staging.is_some()
+    }
+
+    /// Accept the next decoded frame from the connection.
+    pub fn accept(&mut self, msg: WireMsg) -> Result<Option<WireMsg>, WireError> {
+        match msg {
+            WireMsg::ChunkBegin {
+                total_bytes,
+                chunk_count,
+            } => {
+                if self.staging.take().is_some() {
+                    return Err(chunk_err(
+                        "ChunkBegin while another chunked message is in flight",
+                    ));
+                }
+                let total = usize::try_from(total_bytes)
+                    .ok()
+                    .filter(|&t| t <= MAX_MESSAGE_LEN)
+                    .ok_or_else(|| WireError::Oversize {
+                        len: total_bytes.min(usize::MAX as u64) as usize,
+                    })?;
+                if chunk_count == 0 || chunk_count as usize != total.div_ceil(CHUNK_PAYLOAD) {
+                    return Err(chunk_err("chunk count disagrees with the announced total"));
+                }
+                self.staging = Some(Staging {
+                    total,
+                    chunk_count,
+                    seen: 0,
+                    bytes: Vec::new(),
+                });
+                Ok(None)
+            }
+            WireMsg::ChunkData { bytes } => {
+                let Some(st) = &mut self.staging else {
+                    return Err(chunk_err("ChunkData without a ChunkBegin"));
+                };
+                if st.seen >= st.chunk_count || st.bytes.len() + bytes.len() > st.total {
+                    self.staging = None;
+                    return Err(chunk_err("more chunk data than announced"));
+                }
+                st.bytes.extend_from_slice(&bytes);
+                st.seen += 1;
+                Ok(None)
+            }
+            WireMsg::ChunkEnd { checksum } => {
+                let Some(st) = self.staging.take() else {
+                    return Err(chunk_err("ChunkEnd without a ChunkBegin"));
+                };
+                if st.seen != st.chunk_count || st.bytes.len() != st.total {
+                    return Err(chunk_err("chunked message ended before its announced bytes"));
+                }
+                if fnv1a64(&st.bytes) != checksum {
+                    return Err(chunk_err("chunk checksum mismatch"));
+                }
+                let inner = decode_body(&st.bytes)?;
+                if inner.is_chunk_frame() {
+                    return Err(chunk_err("a chunked message cannot itself be a chunk frame"));
+                }
+                Ok(Some(inner))
+            }
+            other => {
+                if self.staging.take().is_some() {
+                    return Err(chunk_err(
+                        "non-chunk frame interleaved into a chunked message",
+                    ));
+                }
+                Ok(Some(other))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking-stream helpers
+// ---------------------------------------------------------------------------
+
+/// Write one single-frame message to a blocking stream. Errors (instead
+/// of truncating) when the message needs chunking — use
+/// [`write_message`] on any path that can carry large payloads.
 pub fn write_frame(w: &mut impl Write, msg: &WireMsg) -> Result<(), WireError> {
-    w.write_all(&encode(msg))?;
+    w.write_all(&encode(msg)?)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one logical message to a blocking stream, chunking as needed.
+/// Frames stream out one at a time — peak memory stays at the message
+/// body plus one chunk, not the body plus its whole framed copy.
+pub fn write_message(w: &mut impl Write, msg: &WireMsg) -> Result<(), WireError> {
+    for_each_frame(msg, &mut |frame| {
+        w.write_all(&frame)?;
+        Ok(())
+    })?;
     w.flush()?;
     Ok(())
 }
@@ -497,18 +860,34 @@ pub fn read_frame(r: &mut impl Read) -> Result<WireMsg, WireError> {
     decode_body(&body)
 }
 
+/// Read exactly one *logical* message from a blocking stream, running
+/// every frame through `asm` (chunk envelopes reassemble; a stream that
+/// ends mid-envelope surfaces the underlying [`WireError::Io`]).
+pub fn read_message(r: &mut impl Read, asm: &mut ChunkAssembler) -> Result<WireMsg, WireError> {
+    loop {
+        if let Some(msg) = asm.accept(read_frame(r)?)? {
+            return Ok(msg);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn roundtrip(msg: WireMsg) {
-        let frame = encode(&msg);
+        let frame = encode(&msg).unwrap();
         let (back, consumed) = decode(&frame).unwrap().expect("complete frame");
         assert_eq!(consumed, frame.len());
         assert_eq!(back, msg);
         // The streaming reader agrees.
-        let mut cursor = std::io::Cursor::new(frame);
+        let mut cursor = std::io::Cursor::new(&frame);
         assert_eq!(read_frame(&mut cursor).unwrap(), msg);
+        // And the logical-message path is byte-identical for frames
+        // that fit the cap.
+        if !msg.is_chunk_frame() {
+            assert_eq!(encode_message(&msg).unwrap(), vec![frame]);
+        }
     }
 
     #[test]
@@ -578,12 +957,22 @@ mod tests {
             nodes: 8,
             assigned: 4,
             mixed: true,
+            checksum: 0xDEAD_BEEF_u64,
         });
         roundtrip(WireMsg::PlanStart {
             nodes: 2,
             assigned: 1,
             mixed: false,
+            checksum: 0,
         });
+        roundtrip(WireMsg::ChunkBegin {
+            total_bytes: 123_456_789,
+            chunk_count: 30,
+        });
+        roundtrip(WireMsg::ChunkData {
+            bytes: vec![7, 8, 9, 0xFF],
+        });
+        roundtrip(WireMsg::ChunkEnd { checksum: u64::MAX });
     }
 
     #[test]
@@ -610,7 +999,8 @@ mod tests {
             to: 1,
             token: 2,
             w: w.clone(),
-        });
+        })
+        .unwrap();
         let (back, _) = decode(&frame).unwrap().unwrap();
         let WireMsg::CollectReply { w: got, .. } = back else {
             panic!("wrong variant");
@@ -622,7 +1012,7 @@ mod tests {
 
     #[test]
     fn incomplete_prefixes_ask_for_more() {
-        let frame = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 });
+        let frame = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 }).unwrap();
         for cut in 0..frame.len() {
             assert!(
                 decode(&frame[..cut]).unwrap().is_none(),
@@ -633,19 +1023,21 @@ mod tests {
 
     #[test]
     fn malformed_frames_error_not_panic() {
-        // Wrong version.
-        let mut frame = encode(&WireMsg::Shutdown);
-        frame[4] = WIRE_VERSION + 1;
-        assert!(matches!(
-            decode(&frame),
-            Err(WireError::Version { .. })
-        ));
+        // Wrong version — and the error names the upgrade path.
+        let mut frame = encode(&WireMsg::Shutdown).unwrap();
+        frame[4] = 2;
+        match decode(&frame) {
+            Err(e @ WireError::Version { got: 2 }) => {
+                assert!(e.to_string().contains("upgrade"), "{e}");
+            }
+            other => panic!("expected a version error, got {other:?}"),
+        }
         // Unknown tag.
-        let mut frame = encode(&WireMsg::Shutdown);
+        let mut frame = encode(&WireMsg::Shutdown).unwrap();
         frame[5] = 200;
         assert!(matches!(decode(&frame), Err(WireError::UnknownTag { got: 200 })));
         // Body shorter than the fields it promises.
-        let good = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 });
+        let good = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 }).unwrap();
         let mut lying = good.clone();
         lying[0..4].copy_from_slice(&((good.len() as u32) - 4 - 3).to_le_bytes());
         assert!(matches!(
@@ -653,7 +1045,7 @@ mod tests {
             Err(WireError::Truncated)
         ));
         // Trailing garbage inside the declared frame length.
-        let mut padded = encode(&WireMsg::Shutdown);
+        let mut padded = encode(&WireMsg::Shutdown).unwrap();
         padded.extend_from_slice(&[0xAA, 0xBB]);
         padded[0..4].copy_from_slice(&4u32.to_le_bytes()); // version+tag+2 junk
         assert!(matches!(decode(&padded), Err(WireError::Trailing { extra: 2 })));
@@ -676,12 +1068,228 @@ mod tests {
 
     #[test]
     fn two_frames_in_one_buffer_decode_in_order() {
-        let mut buf = encode(&WireMsg::Hello { rank: 9 });
-        buf.extend_from_slice(&encode(&WireMsg::SnapshotRequest));
+        let mut buf = encode(&WireMsg::Hello { rank: 9 }).unwrap();
+        buf.extend_from_slice(&encode(&WireMsg::SnapshotRequest).unwrap());
         let (first, used) = decode(&buf).unwrap().unwrap();
         assert_eq!(first, WireMsg::Hello { rank: 9 });
         let (second, used2) = decode(&buf[used..]).unwrap().unwrap();
         assert_eq!(second, WireMsg::SnapshotRequest);
         assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn oversize_body_errors_on_encode_and_chunks_on_encode_message() {
+        // ~20 MiB of features: past the frame cap, within the message cap.
+        let msg = WireMsg::PlanAssign {
+            node: 1,
+            obj_code: 0,
+            lam: 0.0,
+            dim: 50,
+            classes: 10,
+            labels: vec![0; 100_000],
+            features: vec![0.5; 100_000 * 50],
+        };
+        assert!(matches!(encode(&msg), Err(WireError::Oversize { .. })));
+        let frames = encode_message(&msg).unwrap();
+        assert!(frames.len() > 3, "expected an envelope, got {} frames", frames.len());
+        for f in &frames {
+            assert!(f.len() <= 4 + MAX_FRAME_LEN);
+        }
+        // Reassembly restores the exact message.
+        let mut asm = ChunkAssembler::new();
+        let mut out = None;
+        for f in &frames {
+            let (frame_msg, used) = decode(f).unwrap().expect("complete frame");
+            assert_eq!(used, f.len());
+            if let Some(m) = asm.accept(frame_msg).unwrap() {
+                out = Some(m);
+            }
+        }
+        assert!(!asm.in_progress());
+        assert_eq!(out.expect("assembled message"), msg);
+    }
+
+    /// A hand-rolled single-chunk envelope around `msg` (small payloads
+    /// welcome — `encode_message` only chunks past the frame cap, but
+    /// the assembler accepts any well-formed envelope).
+    fn envelope(msg: &WireMsg) -> (Vec<u8>, Vec<WireMsg>) {
+        let frame = encode(msg).unwrap();
+        let body = frame[4..].to_vec();
+        let frames = vec![
+            WireMsg::ChunkBegin {
+                total_bytes: body.len() as u64,
+                chunk_count: 1,
+            },
+            WireMsg::ChunkData {
+                bytes: body.clone(),
+            },
+            WireMsg::ChunkEnd {
+                checksum: fnv1a64(&body),
+            },
+        ];
+        (body, frames)
+    }
+
+    #[test]
+    fn assembler_accepts_a_well_formed_envelope() {
+        let msg = WireMsg::Heartbeat { rank: 4, seq: 77 };
+        let (_, frames) = envelope(&msg);
+        let mut asm = ChunkAssembler::new();
+        assert!(asm.accept(frames[0].clone()).unwrap().is_none());
+        assert!(asm.in_progress());
+        assert!(asm.accept(frames[1].clone()).unwrap().is_none());
+        assert_eq!(asm.accept(frames[2].clone()).unwrap(), Some(msg));
+        assert!(!asm.in_progress());
+        // Checksums agree with the canonical per-message checksum.
+        let WireMsg::ChunkEnd { checksum } = &frames[2] else { unreachable!() };
+        assert_eq!(
+            *checksum,
+            message_checksum(&WireMsg::Heartbeat { rank: 4, seq: 77 }).unwrap()
+        );
+    }
+
+    #[test]
+    fn chunk_stream_violations_error_not_panic() {
+        let msg = WireMsg::Heartbeat { rank: 1, seq: 2 };
+        let (body, frames) = envelope(&msg);
+
+        // Data without a begin.
+        let mut asm = ChunkAssembler::new();
+        assert!(matches!(
+            asm.accept(frames[1].clone()),
+            Err(WireError::Chunk { .. })
+        ));
+        // End without a begin.
+        assert!(matches!(
+            asm.accept(frames[2].clone()),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // A second begin mid-message.
+        let mut asm = ChunkAssembler::new();
+        asm.accept(frames[0].clone()).unwrap();
+        assert!(matches!(
+            asm.accept(frames[0].clone()),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // A non-chunk frame interleaved into the envelope.
+        let mut asm = ChunkAssembler::new();
+        asm.accept(frames[0].clone()).unwrap();
+        assert!(matches!(
+            asm.accept(WireMsg::SnapshotRequest),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // Ending before the announced bytes arrived.
+        let mut asm = ChunkAssembler::new();
+        asm.accept(WireMsg::ChunkBegin {
+            total_bytes: (body.len() + 4) as u64,
+            chunk_count: 1,
+        })
+        .unwrap();
+        asm.accept(frames[1].clone()).unwrap();
+        assert!(matches!(
+            asm.accept(frames[2].clone()),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // Checksum mismatch.
+        let mut asm = ChunkAssembler::new();
+        asm.accept(frames[0].clone()).unwrap();
+        asm.accept(frames[1].clone()).unwrap();
+        assert!(matches!(
+            asm.accept(WireMsg::ChunkEnd {
+                checksum: fnv1a64(&body) ^ 1
+            }),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // Chunk count disagreeing with the total.
+        let mut asm = ChunkAssembler::new();
+        assert!(matches!(
+            asm.accept(WireMsg::ChunkBegin {
+                total_bytes: body.len() as u64,
+                chunk_count: 2,
+            }),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // An announced total beyond the message cap refuses up front.
+        let mut asm = ChunkAssembler::new();
+        assert!(matches!(
+            asm.accept(WireMsg::ChunkBegin {
+                total_bytes: (MAX_MESSAGE_LEN as u64) + 1,
+                chunk_count: u32::MAX,
+            }),
+            Err(WireError::Oversize { .. })
+        ));
+
+        // An envelope whose inner message is itself a chunk frame.
+        let end_frame = encode(&WireMsg::ChunkEnd { checksum: 0 }).unwrap();
+        let inner = end_frame[4..].to_vec();
+        let mut asm = ChunkAssembler::new();
+        asm.accept(WireMsg::ChunkBegin {
+            total_bytes: inner.len() as u64,
+            chunk_count: 1,
+        })
+        .unwrap();
+        asm.accept(WireMsg::ChunkData {
+            bytes: inner.clone(),
+        })
+        .unwrap();
+        assert!(matches!(
+            asm.accept(WireMsg::ChunkEnd {
+                checksum: fnv1a64(&inner)
+            }),
+            Err(WireError::Chunk { .. })
+        ));
+
+        // After any error the assembler is clean again.
+        assert!(!asm.in_progress());
+        let (_, ok_frames) = envelope(&msg);
+        let mut last = None;
+        for f in ok_frames {
+            if let Some(m) = asm.accept(f).unwrap() {
+                last = Some(m);
+            }
+        }
+        assert_eq!(last, Some(msg));
+    }
+
+    #[test]
+    fn write_message_and_read_message_agree_across_sizes() {
+        let small = WireMsg::CollectReply {
+            from: 1,
+            to: 2,
+            token: 3,
+            w: vec![0.5; 16],
+        };
+        let big = WireMsg::SnapshotReply {
+            rank: 0,
+            counts: [1, 2, 3, 4],
+            params: (0..12u32).map(|i| (i, vec![i as f32; 400_000])).collect(),
+        };
+        for msg in [small, big] {
+            let mut buf = Vec::new();
+            write_message(&mut buf, &msg).unwrap();
+            let mut cursor = std::io::Cursor::new(&buf);
+            let mut asm = ChunkAssembler::new();
+            assert_eq!(read_message(&mut cursor, &mut asm).unwrap(), msg);
+            assert_eq!(cursor.position() as usize, buf.len());
+        }
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        // Incremental = one-shot.
+        let mut h = Fnv64::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a64(b"foobar"));
     }
 }

@@ -459,7 +459,9 @@ pub fn feature_shift(shard: &Dataset, sigma: f32, rng: &mut Xoshiro256pp) -> Dat
 
 /// A named workload recipe — the CLI's `--plan` vocabulary. The skew
 /// knob (`--dirichlet-alpha`) is the Dirichlet α for
-/// `dirichlet`/`quantity`/`mixed` and the offset σ for `feature-shift`.
+/// `dirichlet`/`quantity`/`mixed`; `feature-shift` takes its offset σ
+/// from the dedicated `--shift-sigma` flag (with `--dirichlet-alpha`
+/// as the documented legacy fallback — see [`PlanSpec::parse_spec`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PlanSpec {
     /// The historical §V-A world: every node draws from its own
@@ -484,16 +486,28 @@ impl PlanSpec {
     /// Default skew knob (α, or σ for `feature-shift`).
     pub const DEFAULT_ALPHA: f64 = 0.5;
 
-    /// Parse a CLI name with its skew knob.
-    pub fn parse(name: &str, alpha: f64) -> Option<Self> {
+    /// Parse a CLI name with both skew knobs. `sigma` is the dedicated
+    /// feature-shift offset scale (`--shift-sigma`); when `None` the
+    /// historical fallback applies and `alpha` doubles as σ — kept so
+    /// pre-flag invocations (`--plan feature-shift --dirichlet-alpha
+    /// 1.0`) reproduce their old worlds bit-for-bit.
+    pub fn parse_spec(name: &str, alpha: f64, sigma: Option<f64>) -> Option<Self> {
         match name {
             "synth" => Some(PlanSpec::Synth),
             "dirichlet" => Some(PlanSpec::Dirichlet { alpha }),
             "quantity" => Some(PlanSpec::Quantity { alpha }),
-            "feature-shift" => Some(PlanSpec::FeatureShift { sigma: alpha }),
+            "feature-shift" => Some(PlanSpec::FeatureShift {
+                sigma: sigma.unwrap_or(alpha),
+            }),
             "mixed" => Some(PlanSpec::Mixed { alpha }),
             _ => None,
         }
+    }
+
+    /// Parse a CLI name with the single legacy skew knob (α, doubling
+    /// as σ for `feature-shift`).
+    pub fn parse(name: &str, alpha: f64) -> Option<Self> {
+        Self::parse_spec(name, alpha, None)
     }
 
     pub fn name(&self) -> &'static str {
@@ -850,5 +864,57 @@ mod tests {
             PlanSpec::parse("dirichlet", 0.1),
             Some(PlanSpec::Dirichlet { alpha: 0.1 })
         );
+    }
+
+    #[test]
+    fn shift_sigma_is_its_own_knob_with_a_legacy_fallback() {
+        // A dedicated σ wins for feature-shift…
+        assert_eq!(
+            PlanSpec::parse_spec("feature-shift", 0.5, Some(2.0)),
+            Some(PlanSpec::FeatureShift { sigma: 2.0 })
+        );
+        // …the fallback reproduces the pre-flag behavior (α doubles as σ)…
+        assert_eq!(
+            PlanSpec::parse_spec("feature-shift", 0.5, None),
+            Some(PlanSpec::FeatureShift { sigma: 0.5 })
+        );
+        // …and σ never leaks into the Dirichlet recipes.
+        assert_eq!(
+            PlanSpec::parse_spec("dirichlet", 0.5, Some(2.0)),
+            Some(PlanSpec::Dirichlet { alpha: 0.5 })
+        );
+    }
+
+    #[test]
+    fn gamma_matches_its_moments_across_the_boost_boundary() {
+        // Marsaglia–Tsang applies for α ≥ 1; below it the sampler uses
+        // the boost G(α) = G(α+1) · U^{1/α}. A wrong boost exponent
+        // (U^α, the classic transcription slip) shifts E[G] far beyond
+        // the Monte-Carlo error at this sample count, so pinning the
+        // mean — and the second moment, which a compensating error in
+        // the α+1 draw could fake — audits the whole α < 1 branch.
+        let mut rng = Xoshiro256pp::seeded(13);
+        let n = 40_000;
+        for &alpha in &[0.15f64, 0.5, 0.95, 1.0, 2.5] {
+            let draws: Vec<f64> = (0..n).map(|_| gamma(&mut rng, alpha)).collect();
+            let mean = draws.iter().sum::<f64>() / n as f64;
+            // Var[G(α,1)] = α ⇒ sd of the sample mean is sqrt(α/n);
+            // 6σ keeps the false-failure odds negligible.
+            let tol = 6.0 * (alpha / n as f64).sqrt();
+            assert!(
+                (mean - alpha).abs() < tol,
+                "alpha {alpha}: mean {mean} vs expected {alpha} (tol {tol})"
+            );
+            // E[G²] = α(α+1); Var[G²] = E[G⁴] − E[G²]² with
+            // E[G⁴] = α(α+1)(α+2)(α+3).
+            let m2 = draws.iter().map(|g| g * g).sum::<f64>() / n as f64;
+            let want_m2 = alpha * (alpha + 1.0);
+            let var_m2 = alpha * (alpha + 1.0) * (alpha + 2.0) * (alpha + 3.0) - want_m2 * want_m2;
+            let tol2 = 6.0 * (var_m2 / n as f64).sqrt();
+            assert!(
+                (m2 - want_m2).abs() < tol2,
+                "alpha {alpha}: E[G²] {m2} vs expected {want_m2} (tol {tol2})"
+            );
+        }
     }
 }

@@ -16,7 +16,9 @@ use std::time::{Duration, Instant};
 use dasgd::coordinator::{consensus, spawn_shard, AsyncCluster, AsyncConfig};
 use dasgd::experiments::{make_regular, synth_world};
 use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
-use dasgd::net::{LaunchConfig, ShardMap, SocketConfig, SocketNet};
+use dasgd::net::{
+    assignment_from_msg, plan_assign_msg, LaunchConfig, ShardMap, SocketConfig, SocketNet,
+};
 use dasgd::objective::Objective;
 use dasgd::transport::{Transport, TransportKind};
 use dasgd::workload::{PlanSpec, WorkloadPlan};
@@ -191,6 +193,70 @@ fn launch_mixed_plan_ships_non_iid_shards_over_the_wire() {
         most_skewed > 0.5,
         "α=0.1 should concentrate labels, max fraction {most_skewed}"
     );
+}
+
+#[test]
+fn launch_ships_quantity_skewed_shards_past_the_frame_cap() {
+    // The 16 MiB wire-cap regression: a quantity-skew plan (α = 0.05)
+    // over a pool large enough that the biggest shard is *guaranteed*
+    // past the frame cap (the max share of a Dirichlet split is ≥ 1/k,
+    // so ≥ 85k of the 340k pooled rows — ≈ 17.3 MB encoded at 50
+    // features). Pre-chunking, `dasgd launch` hard-errored here before
+    // any worker started.
+    const SAMPLES: usize = 85_000;
+    const SKEW_NODES: usize = 4;
+    let spec = PlanSpec::Quantity { alpha: 0.05 };
+    let (plan, _) = spec.build(Objective::LogReg, SKEW_NODES, SAMPLES, 16, SEED);
+    let big = (0..SKEW_NODES)
+        .max_by_key(|&i| plan.shard(i).len())
+        .unwrap();
+    let msg = plan_assign_msg(big, plan.node(big));
+    assert!(
+        matches!(wire::encode(&msg), Err(wire::WireError::Oversize { .. })),
+        "the largest shard must exceed one frame for this test to bite"
+    );
+    // The chunk envelope round-trips that shard bit-for-bit in-process.
+    let frames = wire::encode_message(&msg).unwrap();
+    assert!(frames.len() > 3, "expected a chunk envelope");
+    let bytes = frames.concat();
+    let mut asm = wire::ChunkAssembler::new();
+    let mut cursor = std::io::Cursor::new(&bytes);
+    let back = wire::read_message(&mut cursor, &mut asm).expect("reassembly failed");
+    assert_eq!(cursor.position() as usize, bytes.len());
+    let (rid, a) = assignment_from_msg(&back).unwrap();
+    assert_eq!(rid, big);
+    assert_eq!(a.shard.labels(), plan.shard(big).labels());
+    let want: Vec<u32> = plan
+        .shard(big)
+        .features_flat()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    let got: Vec<u32> = a.shard.features_flat().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(want, got, "feature bits changed crossing the chunked codec");
+
+    // End-to-end: the same plan ships to two real worker processes and
+    // the run reaches its horizon. PlanStart carries a checksum folded
+    // over every shipped assignment and a worker refuses to start on a
+    // mismatch — so reaching the horizon certifies the workers trained
+    // on bit-identical copies of the in-process plan above (the
+    // builders are deterministic in (spec, nodes, samples, seed)).
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        plan: spec,
+        samples_per_node: SAMPLES,
+        horizon_updates: 300,
+        secs_cap: 90.0,
+        seed: SEED,
+        ..LaunchConfig::quick(2, SKEW_NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("giant-shard launch failed");
+    assert_eq!(rep.live_workers, 2, "both workers must stay live");
+    assert!(rep.reached_horizon, "giant-shard deployment stalled");
+    assert!(rep.counts.updates() >= 300);
+    let last = rep.recorder.last().expect("monitor recorded snapshots");
+    assert!(last.consensus.is_finite());
+    assert!(last.test_err.is_finite());
 }
 
 /// Snapshot one worker over a monitor control connection.

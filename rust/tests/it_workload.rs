@@ -64,7 +64,7 @@ fn plan_survives_a_wire_round_trip_bit_for_bit() {
     let (plan, _) = PlanSpec::Mixed { alpha: 0.1 }.build(Objective::LogReg, 6, 50, 32, 7);
     let mut shipped = Vec::new();
     for id in 0..plan.len() {
-        let frame = wire::encode(&plan_assign_msg(id, plan.node(id)).unwrap());
+        let frame = wire::encode(&plan_assign_msg(id, plan.node(id))).unwrap();
         let (msg, used) = wire::decode(&frame).unwrap().expect("complete frame");
         assert_eq!(used, frame.len());
         shipped.push(assignment_from_msg(&msg).unwrap());

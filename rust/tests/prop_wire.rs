@@ -1,16 +1,23 @@
 //! Property tests for the SocketNet wire codec: arbitrary messages
-//! round-trip exactly, and arbitrary bytes — garbage, bit flips,
-//! truncations — decode to a clean error or "need more", never a panic
-//! and never a huge allocation.
+//! round-trip exactly (single-frame and chunked), arbitrary bytes —
+//! garbage, bit flips, truncations — decode to a clean error or "need
+//! more", never a panic and never a huge allocation, and the chunk
+//! envelope rejects interleaved/short/corrupt streams totally.
 
-use dasgd::net::wire::{decode, encode, read_frame, WireMsg};
+use dasgd::net::wire::{
+    self, decode, encode, encode_message, fnv1a64, read_frame, ChunkAssembler, WireError, WireMsg,
+    MAX_FRAME_LEN,
+};
+use dasgd::net::{assignment_from_msg, plan_assign_msg};
+use dasgd::objective::Objective;
 use dasgd::util::proptest::{check, Gen};
+use dasgd::workload::{PlanSpec, WorkloadPlan};
 
 /// One arbitrary message (finite payloads so `PartialEq` is exact;
 /// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
 fn arb_msg(g: &mut Gen) -> WireMsg {
     let w_len = g.usize_in(0, g.size * 64);
-    match g.usize_in(0, 11) {
+    match g.usize_in(0, 14) {
         0 => WireMsg::Hello {
             rank: g.usize_in(0, 1 << 20) as u32,
         },
@@ -78,10 +85,21 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
                 features: g.f32_vec(rows * dim, -100.0, 100.0),
             }
         }
-        _ => WireMsg::PlanStart {
+        11 => WireMsg::PlanStart {
             nodes: g.usize_in(0, 100_000) as u32,
             assigned: g.usize_in(0, 100_000) as u32,
             mixed: g.bool(),
+            checksum: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        12 => WireMsg::ChunkBegin {
+            total_bytes: g.usize_in(0, 1 << 28) as u64,
+            chunk_count: g.usize_in(0, 1 << 10) as u32,
+        },
+        13 => WireMsg::ChunkData {
+            bytes: (0..g.usize_in(0, 256)).map(|_| g.usize_in(0, 255) as u8).collect(),
+        },
+        _ => WireMsg::ChunkEnd {
+            checksum: g.usize_in(0, usize::MAX / 2) as u64,
         },
     }
 }
@@ -90,7 +108,7 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
 fn arbitrary_messages_round_trip() {
     check("wire-roundtrip", 300, 0xC0DEC, |g| {
         let msg = arb_msg(g);
-        let frame = encode(&msg);
+        let frame = encode(&msg).map_err(|e| format!("encode failed: {e}"))?;
         let (back, consumed) = decode(&frame)
             .map_err(|e| format!("decode of own encoding failed: {e}"))?
             .ok_or("own encoding reported incomplete")?;
@@ -114,7 +132,7 @@ fn arbitrary_messages_round_trip() {
 fn truncated_frames_ask_for_more_never_panic() {
     check("wire-truncation", 200, 0x7A11, |g| {
         let msg = arb_msg(g);
-        let frame = encode(&msg);
+        let frame = encode(&msg).map_err(|e| format!("encode failed: {e}"))?;
         let cut = g.usize_in(0, frame.len().saturating_sub(1));
         match decode(&frame[..cut]) {
             Ok(None) => Ok(()),
@@ -134,16 +152,236 @@ fn garbage_and_bit_flips_error_never_panic() {
         let len = g.usize_in(0, 256);
         let garbage: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
         let _ = decode(&garbage);
-        // A valid frame with one flipped byte must also decode totally.
-        let frame = encode(&arb_msg(g));
+        // A valid frame with one flipped byte must also decode totally
+        // — and so must feeding the (possibly bent) result through a
+        // chunk assembler.
+        let frame = encode(&arb_msg(g)).map_err(|e| format!("encode failed: {e}"))?;
         let mut bent = frame.clone();
         let at = g.usize_in(0, bent.len() - 1);
         bent[at] ^= 1 << g.usize_in(0, 7);
-        let _ = decode(&bent);
+        if let Ok(Some((msg, _))) = decode(&bent) {
+            let mut asm = ChunkAssembler::new();
+            let _ = asm.accept(msg);
+        }
         // And the stream reader survives garbage too (EOF mid-frame is
         // an Io error, not a hang or panic).
         let mut cursor = std::io::Cursor::new(&garbage);
         let _ = read_frame(&mut cursor);
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// Chunked logical messages
+// ---------------------------------------------------------------------------
+
+/// Push every frame of `frames` through a fresh assembler; exactly one
+/// logical message must come out, with nothing left in flight.
+fn reassemble(frames: &[Vec<u8>]) -> Result<WireMsg, String> {
+    let mut asm = ChunkAssembler::new();
+    let mut out = None;
+    for f in frames {
+        let (msg, used) = decode(f)
+            .map_err(|e| format!("frame decode failed: {e}"))?
+            .ok_or("frame incomplete")?;
+        if used != f.len() {
+            return Err(format!("frame used {used} of {} bytes", f.len()));
+        }
+        if let Some(m) = asm
+            .accept(msg)
+            .map_err(|e| format!("assembler rejected a valid stream: {e}"))?
+        {
+            if out.is_some() {
+                return Err("two messages out of one stream".into());
+            }
+            out = Some(m);
+        }
+    }
+    if asm.in_progress() {
+        return Err("assembler still in progress after the full stream".into());
+    }
+    out.ok_or_else(|| "no message assembled".into())
+}
+
+/// Every assignment of `plan` must survive encode_message → reassemble
+/// → assignment_from_msg with bit-identical labels and feature bits.
+fn assert_plan_ships_bit_for_bit(plan: &WorkloadPlan) -> Result<(), String> {
+    for id in 0..plan.len() {
+        let msg = plan_assign_msg(id, plan.node(id));
+        let frames = encode_message(&msg).map_err(|e| format!("encode_message: {e}"))?;
+        let back = reassemble(&frames)?;
+        if back != msg {
+            return Err(format!("node {id}: reassembled message differs"));
+        }
+        let (rid, a) = assignment_from_msg(&back).map_err(|e| format!("decode: {e}"))?;
+        if rid != id {
+            return Err(format!("node id changed: {id} → {rid}"));
+        }
+        if a.shard.labels() != plan.shard(id).labels() {
+            return Err(format!("node {id}: labels changed"));
+        }
+        let want: Vec<u32> = plan
+            .shard(id)
+            .features_flat()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let got: Vec<u32> = a.shard.features_flat().iter().map(|v| v.to_bits()).collect();
+        if want != got {
+            return Err(format!("node {id}: feature bits changed"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn workload_plans_round_trip_the_chunked_path_at_any_size() {
+    check("wire-chunked-plan", 20, 0x51AB, |g| {
+        let nodes = g.usize_in(2, 5);
+        let spec = *g.choose(&[
+            PlanSpec::Synth,
+            PlanSpec::Dirichlet { alpha: 0.3 },
+            PlanSpec::Quantity { alpha: 0.15 },
+            PlanSpec::FeatureShift { sigma: 0.8 },
+            PlanSpec::Mixed { alpha: 0.3 },
+        ]);
+        let samples = g.usize_in(2, 400);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let (plan, _) = spec.build(Objective::LogReg, nodes, samples, 8, seed);
+        assert_plan_ships_bit_for_bit(&plan)
+    });
+}
+
+#[test]
+fn shard_past_the_frame_cap_round_trips_bit_for_bit() {
+    // 90k rows × 50 features ≈ 18.4 MB encoded — beyond MAX_FRAME_LEN,
+    // so this is the chunk envelope's real regime. Features are a
+    // deterministic (finite) bit pattern, compared by bits.
+    let rows = 90_000usize;
+    let dim = 50usize;
+    let features: Vec<f32> = (0..rows * dim)
+        .map(|i| (i as f32).mul_add(0.25, -1e6))
+        .collect();
+    let labels: Vec<u32> = (0..rows as u32).map(|i| i % 10).collect();
+    let msg = WireMsg::PlanAssign {
+        node: 3,
+        obj_code: 0,
+        lam: 0.0,
+        dim: dim as u32,
+        classes: 10,
+        labels,
+        features,
+    };
+    // Single-frame encoding refuses (this is where the pre-chunking
+    // launcher crashed)…
+    assert!(matches!(encode(&msg), Err(WireError::Oversize { .. })));
+    // …and the chunked path carries it exactly.
+    let frames = encode_message(&msg).unwrap();
+    assert!(frames.len() > 3, "expected an envelope, got {}", frames.len());
+    for f in &frames {
+        assert!(f.len() <= 4 + MAX_FRAME_LEN, "oversized frame in the envelope");
+    }
+    assert_eq!(reassemble(&frames).unwrap(), msg);
+}
+
+#[test]
+fn chunk_streams_with_injected_faults_error_never_panic() {
+    check("wire-chunk-faults", 100, 0xFA017, |g| {
+        // A small hand-rolled envelope (the assembler accepts any
+        // well-formed one; encode_message only *emits* them past the
+        // frame cap).
+        let inner = WireMsg::Heartbeat {
+            rank: g.usize_in(0, 64) as u32,
+            seq: g.usize_in(0, 1 << 30) as u64,
+        };
+        let inner_frame = encode(&inner).map_err(|e| format!("encode: {e}"))?;
+        let body = inner_frame[4..].to_vec();
+        let envelope = [
+            WireMsg::ChunkBegin {
+                total_bytes: body.len() as u64,
+                chunk_count: 1,
+            },
+            WireMsg::ChunkData { bytes: body.clone() },
+            WireMsg::ChunkEnd {
+                checksum: fnv1a64(&body),
+            },
+        ];
+        // The clean stream reassembles.
+        let mut asm = ChunkAssembler::new();
+        let mut got = None;
+        for m in envelope.iter().cloned() {
+            if let Some(m) = asm.accept(m).map_err(|e| format!("clean stream: {e}"))? {
+                got = Some(m);
+            }
+        }
+        if got != Some(inner.clone()) {
+            return Err("clean envelope did not reassemble".into());
+        }
+        // Truncation: stop after a random proper prefix — no message,
+        // and the assembler reports the message still in flight.
+        let cut = g.usize_in(1, envelope.len() - 1);
+        let mut asm = ChunkAssembler::new();
+        for m in envelope.iter().take(cut).cloned() {
+            if asm.accept(m).map_err(|e| format!("prefix: {e}"))?.is_some() {
+                return Err("truncated stream produced a message".into());
+            }
+        }
+        if !asm.in_progress() {
+            return Err("truncated stream not reported in-progress".into());
+        }
+        // Interleaving: a random non-chunk frame injected mid-envelope
+        // must error (and leave the assembler clean for reuse).
+        let mut asm = ChunkAssembler::new();
+        asm.accept(envelope[0].clone()).map_err(|e| format!("begin: {e}"))?;
+        let intruder = match g.usize_in(0, 2) {
+            0 => WireMsg::SnapshotRequest,
+            1 => WireMsg::Shutdown,
+            _ => WireMsg::Hello { rank: 1 },
+        };
+        if !matches!(asm.accept(intruder), Err(WireError::Chunk { .. })) {
+            return Err("interleaved frame was not rejected".into());
+        }
+        // Corruption: flip one bit of the data payload — the checksum
+        // must catch it at ChunkEnd.
+        let mut bent = body.clone();
+        let at = g.usize_in(0, bent.len() - 1);
+        bent[at] ^= 1 << g.usize_in(0, 7);
+        let mut asm = ChunkAssembler::new();
+        asm.accept(envelope[0].clone()).map_err(|e| format!("begin: {e}"))?;
+        asm.accept(WireMsg::ChunkData { bytes: bent })
+            .map_err(|e| format!("data: {e}"))?;
+        match asm.accept(envelope[2].clone()) {
+            Err(WireError::Chunk { .. }) => Ok(()),
+            other => Err(format!("corrupted payload not caught: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn write_message_over_a_stream_is_what_read_message_reads() {
+    // The blocking-stream pair used by the control plane, across the
+    // single-frame and chunked regimes in one stream.
+    let small = WireMsg::Hello { rank: 1 };
+    let big = WireMsg::PlanAssign {
+        node: 0,
+        obj_code: 1,
+        lam: 0.01,
+        dim: 50,
+        classes: 10,
+        labels: vec![1; 100_000],
+        features: vec![1.5; 100_000 * 50],
+    };
+    let mut buf = Vec::new();
+    wire::write_message(&mut buf, &small).unwrap();
+    wire::write_message(&mut buf, &big).unwrap();
+    wire::write_message(&mut buf, &WireMsg::Shutdown).unwrap();
+    let mut cursor = std::io::Cursor::new(&buf);
+    let mut asm = ChunkAssembler::new();
+    assert_eq!(wire::read_message(&mut cursor, &mut asm).unwrap(), small);
+    assert_eq!(wire::read_message(&mut cursor, &mut asm).unwrap(), big);
+    assert_eq!(
+        wire::read_message(&mut cursor, &mut asm).unwrap(),
+        WireMsg::Shutdown
+    );
+    assert_eq!(cursor.position() as usize, buf.len());
 }
