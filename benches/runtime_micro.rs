@@ -174,12 +174,72 @@ fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
     rows
 }
 
+/// Streaming data-plane micro-bench: the per-shard cost of the block
+/// pipeline (carve → validate → fold → staging push → drain), and the
+/// latency from the first block landing in a fresh [`BlockBuffer`] to a
+/// node-side receiver holding trainable rows — the "first step" lead
+/// the streaming plane buys over ship-whole-shard.
+fn bench_stream(h: &mut Harness) -> Vec<(String, f64)> {
+    use dasgd::data::stream::{BlockBuffer, RowBlock, StreamProgress, DEFAULT_BLOCK_ROWS};
+    use dasgd::data::Dataset;
+
+    let (dim, classes, rows_n) = (50usize, 10usize, 20_000usize);
+    let mut shard = Dataset::with_capacity(dim, classes, rows_n);
+    let mut rng = Xoshiro256pp::seeded(17);
+    let mut row = vec![0.0f32; dim];
+    for i in 0..rows_n {
+        for v in row.iter_mut() {
+            *v = rng.gauss_f32(0.0, 1.0);
+        }
+        shard.push(&row, i % classes);
+    }
+    let shard_bytes = (rows_n * (dim + 1) * 4) as f64;
+    let blocks = RowBlock::carve(0, &shard, DEFAULT_BLOCK_ROWS);
+
+    let mut out = Vec::new();
+    let r = h.case("shard stream (20k rows: carve+fold+stage+drain)", || {
+        let carved = RowBlock::carve(0, &shard, DEFAULT_BLOCK_ROWS);
+        let buffer = BlockBuffer::new(1, u64::MAX);
+        let receiver = buffer.receiver(0);
+        let mut progress = StreamProgress::default();
+        let mut rebuilt = Dataset::with_capacity(dim, classes, rows_n);
+        for b in carved {
+            b.validate(dim, classes).unwrap();
+            progress.fold(&b).unwrap();
+            buffer.push(b).unwrap();
+            receiver.drain_into(&mut rebuilt);
+        }
+        assert_eq!(rebuilt.len(), rows_n);
+        std::hint::black_box(progress.checksum());
+    });
+    println!(
+        "  shard_stream_throughput ≈ {:.0} MiB/s",
+        shard_bytes / r.mean_secs / (1024.0 * 1024.0)
+    );
+    out.push(("shard_stream_throughput".to_string(), r.mean_secs));
+
+    let first = blocks[0].clone();
+    let r = h.case("stream first-step latency (one block: stage+drain)", || {
+        let buffer = BlockBuffer::new(1, u64::MAX);
+        let receiver = buffer.receiver(0);
+        let mut staged = Dataset::with_capacity(dim, classes, DEFAULT_BLOCK_ROWS);
+        buffer.push(first.clone()).unwrap();
+        receiver.drain_into(&mut staged);
+        assert!(staged.len() > 0);
+        std::hint::black_box(staged.len());
+    });
+    out.push(("stream_first_step_latency".to_string(), r.mean_secs));
+    out
+}
+
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
         "  \"topology\": \"ring-10, closed neighborhood of 3; wire_encode/decode are \
          codec-only on a 500-dim ApplyAverage frame; wire_chunk_* are the chunk \
-         envelope on a 20 MiB PlanAssign\",\n",
+         envelope on a 20 MiB PlanAssign; shard_stream_throughput is the block \
+         pipeline (carve+fold+stage+drain) over a 20k-row shard and \
+         stream_first_step_latency is one staged block reaching a node\",\n",
     );
     body.push_str(&format!("  \"param_len\": {param_len},\n  \"mean_secs\": {{\n"));
     for (i, (name, mean)) in rows.iter().enumerate() {
@@ -273,6 +333,8 @@ fn main() {
     let mut transport_rows = bench_transports(&mut h, 500);
     let mut h = Harness::new("wire codec (SocketNet frames)");
     transport_rows.extend(bench_wire(&mut h, 500));
+    let mut h = Harness::new("streaming shard data plane");
+    transport_rows.extend(bench_stream(&mut h));
     write_transport_baseline(&transport_rows, 500);
 
     // ---- coordinator machinery ---------------------------------------------

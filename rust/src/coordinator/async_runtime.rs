@@ -34,6 +34,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::data::stream::BlockBuffer;
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::Recorder;
@@ -236,6 +237,24 @@ pub fn spawn_shard(
     owned: std::ops::Range<usize>,
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
 ) -> ShardRun {
+    spawn_shard_with_feeds(graph, plan, cfg, transport, owned, executor, None)
+}
+
+/// [`spawn_shard`] for streamed plans: when `feeds` is given, each
+/// owned node's [`NodeLogic`] starts with an *empty* shard fed by that
+/// node's [`BlockBuffer`] receiver — the node steps as soon as its
+/// first `ShardBlock` lands instead of waiting for the whole shard
+/// (the plan's assignments then carry metadata only). `None` is the
+/// historical fully-shipped path, bit-for-bit unchanged.
+pub fn spawn_shard_with_feeds(
+    graph: &Graph,
+    plan: &WorkloadPlan,
+    cfg: &AsyncConfig,
+    transport: Arc<dyn Transport>,
+    owned: std::ops::Range<usize>,
+    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+    feeds: Option<&Arc<BlockBuffer>>,
+) -> ShardRun {
     let n = graph.len();
     assert_eq!(plan.len(), n, "one workload assignment per node");
     assert!(owned.end <= n);
@@ -247,7 +266,19 @@ pub fn spawn_shard(
         let mut rng = node_rng(cfg.seed, i);
         let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
         let a = plan.node(i);
-        let logic = NodeLogic::new(i, a.objective, cfg.p_grad, a.shard.clone(), n, rng);
+        let logic = match feeds {
+            Some(buffer) => NodeLogic::streaming(
+                i,
+                a.objective,
+                cfg.p_grad,
+                buffer.receiver(i),
+                dim,
+                classes,
+                n,
+                rng,
+            ),
+            None => NodeLogic::new(i, a.objective, cfg.p_grad, a.shard.clone(), n, rng),
+        };
         let stepsize = if mixed {
             a.objective.default_stepsize(n)
         } else {
@@ -445,6 +476,12 @@ fn node_loop(
         let lr = stepsize.at(k);
         match logic.draw_action() {
             Action::Grad => {
+                // A streaming shard whose first block is still in
+                // flight cannot step yet: skip and redraw (the node can
+                // still join neighbors' projections meanwhile).
+                if !logic.has_data() {
+                    continue;
+                }
                 // Local gradient step: only our own variable (Eq. 6).
                 match &executor {
                     None => transport.update_own(id, &mut |w| {

@@ -21,7 +21,9 @@ pub mod node;
 pub mod selector;
 pub mod trainer;
 
-pub use async_runtime::{spawn_shard, AsyncCluster, AsyncConfig, AsyncReport, ShardRun};
+pub use async_runtime::{
+    spawn_shard, spawn_shard_with_feeds, AsyncCluster, AsyncConfig, AsyncReport, ShardRun,
+};
 pub use backend::{EvalBatch, NativeBackend, PjrtArtifacts, PjrtBackend, StepBackend};
 pub use config::{Backend, ConflictPolicy, SelectionMode, StepSize, TrainConfig};
 pub use crate::objective::Objective;

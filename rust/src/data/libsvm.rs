@@ -1,0 +1,382 @@
+//! `libsvm`-format sparse dataset loader (the RCV1 / covtype / news20
+//! family): one sample per line,
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! with 1-based, strictly ascending indices. Parsing is total — a
+//! malformed, truncated, NaN, or duplicate-index line returns a
+//! line-numbered error, never a panic — and the loader validates
+//! optional expected row/dim counts so a truncated download fails
+//! loudly instead of training on a partial corpus. Rows densify into
+//! the repo-wide [`Dataset`] (row-major f32), and an on-disk cache
+//! (`<path>.cache`, checksummed against the source bytes) skips the
+//! text parse on reload. Labels are remapped to `0..classes` by sorted
+//! distinct value, so `-1/+1` SVM files and `1..k` multiclass files
+//! both load unchanged.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::Dataset;
+use crate::net::wire::fnv1a64;
+
+/// Loader knobs for [`load_libsvm`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LibsvmOptions {
+    /// Require the corpus to have exactly this feature dimension
+    /// (errors otherwise); `None` infers the max seen index.
+    pub expect_dim: Option<usize>,
+    /// Require exactly this many data rows (truncation guard).
+    pub expect_rows: Option<usize>,
+    /// Write/reuse the `<path>.cache` binary next to the source file.
+    pub cache: bool,
+}
+
+/// Parse libsvm-format text into a dense [`Dataset`]. Total: every
+/// malformed input returns a line-numbered error. Blank lines and
+/// `#` comment lines are skipped.
+pub fn parse_libsvm(text: &str, expect_dim: Option<usize>) -> Result<Dataset, String> {
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut max_index = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut tokens = line.split_whitespace();
+        let label_tok = tokens.next().expect("non-empty line has a first token");
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|e| format!("line {lineno}: label {label_tok:?}: {e}"))?;
+        if !label.is_finite() || label.fract() != 0.0 || label.abs() > 1e15 {
+            return Err(format!(
+                "line {lineno}: label {label_tok:?} is not an integral class value"
+            ));
+        }
+        let mut pairs: Vec<(usize, f32)> = Vec::new();
+        let mut last_index = 0usize;
+        for tok in tokens {
+            let Some((idx_s, val_s)) = tok.split_once(':') else {
+                return Err(format!(
+                    "line {lineno}: feature {tok:?} is not <index>:<value>"
+                ));
+            };
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|e| format!("line {lineno}: index {idx_s:?}: {e}"))?;
+            if idx == 0 {
+                return Err(format!(
+                    "line {lineno}: index 0 (libsvm indices are 1-based)"
+                ));
+            }
+            if idx <= last_index {
+                return Err(format!(
+                    "line {lineno}: index {idx} after {last_index} — indices must be \
+                     strictly ascending (duplicate or out-of-order feature)"
+                ));
+            }
+            let val: f32 = val_s
+                .parse()
+                .map_err(|e| format!("line {lineno}: value {val_s:?}: {e}"))?;
+            if !val.is_finite() {
+                return Err(format!("line {lineno}: value {val_s:?} is not finite"));
+            }
+            last_index = idx;
+            pairs.push((idx, val));
+        }
+        max_index = max_index.max(last_index);
+        raw_labels.push(label as i64);
+        rows.push(pairs);
+    }
+    if rows.is_empty() {
+        return Err("no data rows (only blanks/comments)".to_string());
+    }
+    let dim = match expect_dim {
+        Some(d) if max_index > d => {
+            return Err(format!(
+                "feature index {max_index} exceeds the expected dimension {d}"
+            ));
+        }
+        Some(d) => d,
+        None => max_index,
+    };
+    if dim == 0 {
+        return Err("every row is empty — the corpus has no features".to_string());
+    }
+    // Remap labels to 0..classes by sorted distinct value (-1/+1 → 0/1).
+    let mut distinct: Vec<i64> = raw_labels.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let classes = distinct.len().max(2);
+    let mut data = Dataset::with_capacity(dim, classes, rows.len());
+    let mut dense = vec![0.0f32; dim];
+    for (pairs, raw) in rows.iter().zip(&raw_labels) {
+        dense.iter_mut().for_each(|v| *v = 0.0);
+        for &(idx, val) in pairs {
+            dense[idx - 1] = val;
+        }
+        let label = distinct.binary_search(raw).expect("label seen in pass 1");
+        data.push(&dense, label);
+    }
+    Ok(data)
+}
+
+const CACHE_MAGIC: &[u8; 8] = b"DSLSVC01";
+
+fn cache_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".cache");
+    PathBuf::from(s)
+}
+
+fn encode_cache(source_sum: u64, data: &Dataset) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        8 + 8 + 24 + data.labels().len() * 4 + data.features_flat().len() * 4 + 8,
+    );
+    buf.extend_from_slice(CACHE_MAGIC);
+    buf.extend_from_slice(&source_sum.to_le_bytes());
+    buf.extend_from_slice(&(data.dim() as u64).to_le_bytes());
+    buf.extend_from_slice(&(data.classes() as u64).to_le_bytes());
+    buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for &l in data.labels() {
+        buf.extend_from_slice(&(l as u32).to_le_bytes());
+    }
+    for &f in data.features_flat() {
+        buf.extend_from_slice(&f.to_le_bytes());
+    }
+    let payload_sum = fnv1a64(&buf[16..]);
+    buf.extend_from_slice(&payload_sum.to_le_bytes());
+    buf
+}
+
+fn decode_cache(bytes: &[u8], source_sum: u64) -> Option<Dataset> {
+    if bytes.len() < 48 || &bytes[..8] != CACHE_MAGIC {
+        return None;
+    }
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    if u64_at(8) != source_sum {
+        return None; // stale: the source file changed
+    }
+    let payload = &bytes[16..bytes.len() - 8];
+    if u64_at(bytes.len() - 8) != fnv1a64(payload) {
+        return None;
+    }
+    let dim = u64_at(16) as usize;
+    let classes = u64_at(24) as usize;
+    let rows = u64_at(32) as usize;
+    let need = rows
+        .checked_mul(4)
+        .and_then(|l| rows.checked_mul(dim)?.checked_mul(4)?.checked_add(l))
+        .and_then(|p| p.checked_add(48));
+    if dim == 0 || classes == 0 || need != Some(bytes.len()) {
+        return None;
+    }
+    let mut data = Dataset::with_capacity(dim, classes, rows);
+    let labels = &bytes[40..40 + rows * 4];
+    let feats = &bytes[40 + rows * 4..bytes.len() - 8];
+    for i in 0..rows {
+        let label =
+            u32::from_le_bytes(labels[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+        if label >= classes {
+            return None;
+        }
+        let row: Vec<f32> = feats[i * dim * 4..(i + 1) * dim * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        data.push(&row, label);
+    }
+    Some(data)
+}
+
+/// Load a libsvm-format file from disk. A missing file errors with the
+/// resolved path and the dataset name (not a bare io error); a parse
+/// error carries its line number; `expect_rows`/`expect_dim` mismatches
+/// refuse the corpus. With `opts.cache`, a validated `<path>.cache`
+/// skips the text parse (cache write failures are ignored — the parse
+/// already succeeded).
+pub fn load_libsvm(path: impl AsRef<Path>, opts: LibsvmOptions) -> crate::Result<Dataset> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| {
+        let resolved = std::fs::canonicalize(path).unwrap_or_else(|_| {
+            std::env::current_dir()
+                .map(|d| d.join(path))
+                .unwrap_or_else(|_| path.to_path_buf())
+        });
+        anyhow::anyhow!(
+            "libsvm dataset {:?}: cannot read {} — {e}",
+            path.display().to_string(),
+            resolved.display()
+        )
+    })?;
+    let source_sum = fnv1a64(&bytes);
+    let cache = cache_path(path);
+    let data = if opts.cache {
+        std::fs::read(&cache)
+            .ok()
+            .and_then(|c| decode_cache(&c, source_sum))
+    } else {
+        None
+    };
+    let (data, from_cache) = match data {
+        Some(d) => (d, true),
+        None => {
+            let text = String::from_utf8_lossy(&bytes);
+            let d = parse_libsvm(&text, opts.expect_dim)
+                .map_err(|e| anyhow::anyhow!("libsvm dataset {}: {e}", path.display()))?;
+            (d, false)
+        }
+    };
+    if let Some(want) = opts.expect_rows {
+        if data.len() != want {
+            anyhow::bail!(
+                "libsvm dataset {}: expected {want} rows, found {} — truncated or \
+                 wrong file?",
+                path.display(),
+                data.len()
+            );
+        }
+    }
+    if let Some(want) = opts.expect_dim {
+        if data.dim() != want {
+            anyhow::bail!(
+                "libsvm dataset {}: expected dimension {want}, found {}",
+                path.display(),
+                data.dim()
+            );
+        }
+    }
+    if opts.cache && !from_cache {
+        // Best-effort: a read-only directory must not fail the load.
+        let _ = std::fs::write(&cache, encode_cache(source_sum, &data));
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "\
+# a comment
++1 1:0.5 3:1.5
+-1 2:-2.0
+
++1 1:1.0 2:1.0 3:1.0
+";
+
+    #[test]
+    fn parses_svm_style_labels_and_sparse_rows() {
+        let d = parse_libsvm(TINY, None).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.classes(), 2);
+        // -1 sorts before +1 → -1 is class 0.
+        assert_eq!(d.labels(), &[1, 0, 1]);
+        assert_eq!(d.sample(0).features, &[0.5, 0.0, 1.5]);
+        assert_eq!(d.sample(1).features, &[0.0, -2.0, 0.0]);
+    }
+
+    #[test]
+    fn multiclass_labels_remap_dense() {
+        let d = parse_libsvm("3 1:1\n7 1:2\n3 1:3\n1 1:4\n", None).unwrap();
+        assert_eq!(d.classes(), 3);
+        assert_eq!(d.labels(), &[1, 2, 1, 0]);
+    }
+
+    #[test]
+    fn single_class_corpus_still_has_two_classes() {
+        // A degenerate one-label file must not produce classes=1 (the
+        // objective layer assumes ≥ 2).
+        let d = parse_libsvm("1 1:0.5\n1 2:0.5\n", None).unwrap();
+        assert_eq!(d.classes(), 2);
+        assert_eq!(d.labels(), &[0, 0]);
+    }
+
+    #[test]
+    fn malformed_lines_error_with_line_numbers() {
+        for (bad, needle) in [
+            ("1 2:abc\n", "line 1"),
+            ("1 1:0.5\nx 1:0.5\n", "line 2"),
+            ("1.5 1:0.5\n", "integral"),
+            ("nan 1:0.5\n", "label"),
+            ("1 1:NaN\n", "finite"),
+            ("1 1:inf\n", "finite"),
+            ("1 0:0.5\n", "1-based"),
+            ("1 2:0.5 2:0.7\n", "ascending"),
+            ("1 3:0.5 2:0.7\n", "ascending"),
+            ("1 nodim\n", "<index>:<value>"),
+            ("", "no data rows"),
+            ("# only a comment\n", "no data rows"),
+        ] {
+            let err = parse_libsvm(bad, None).unwrap_err();
+            assert!(err.contains(needle), "{bad:?} → {err}");
+        }
+    }
+
+    #[test]
+    fn expected_dim_pads_and_bounds() {
+        let d = parse_libsvm("1 1:1\n2 1:2\n", Some(5)).unwrap();
+        assert_eq!(d.dim(), 5);
+        assert_eq!(d.sample(0).features, &[1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(parse_libsvm("1 9:1\n", Some(5)).unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn load_round_trips_through_the_cache() {
+        let dir = std::env::temp_dir().join(format!("dasgd-libsvm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.svm");
+        std::fs::write(&path, TINY).unwrap();
+        let opts = LibsvmOptions {
+            cache: true,
+            ..Default::default()
+        };
+        let fresh = load_libsvm(&path, opts).unwrap();
+        assert!(cache_path(&path).exists(), "cache file written");
+        let cached = load_libsvm(&path, opts).unwrap();
+        assert_eq!(fresh.labels(), cached.labels());
+        assert_eq!(fresh.features_flat(), cached.features_flat());
+        // A changed source invalidates the cache (no stale reuse).
+        std::fs::write(&path, "1 1:9\n2 1:8\n").unwrap();
+        let reparsed = load_libsvm(&path, opts).unwrap();
+        assert_eq!(reparsed.len(), 2);
+        assert_eq!(reparsed.sample(0).features, &[9.0]);
+        // A corrupt cache is ignored, not trusted.
+        std::fs::write(cache_path(&path), b"garbage").unwrap();
+        let survived = load_libsvm(&path, opts).unwrap();
+        assert_eq!(survived.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_names_the_path_and_dataset() {
+        let err = load_libsvm("/definitely/not/here.svm", LibsvmOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("libsvm dataset"), "{err}");
+        assert!(err.contains("/definitely/not/here.svm"), "{err}");
+    }
+
+    #[test]
+    fn row_count_guard_catches_truncation() {
+        let dir = std::env::temp_dir().join(format!("dasgd-libsvm-rows-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.svm");
+        std::fs::write(&path, TINY).unwrap();
+        let err = load_libsvm(
+            &path,
+            LibsvmOptions {
+                expect_rows: Some(10),
+                ..Default::default()
+            },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("expected 10 rows"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,10 +1,15 @@
-//! Data substrate: datasets, the §V synthetic generator, and the
-//! notMNIST-like glyph corpus (offline substitute — see DESIGN.md §3).
+//! Data substrate: datasets, the §V synthetic generator, the
+//! notMNIST-like glyph corpus (offline substitute — see DESIGN.md §3),
+//! the libsvm sparse-format loader for real corpora, and the streaming
+//! row-block data plane (see docs/data.md).
 
 mod dataset;
+mod libsvm;
 mod notmnist;
+pub mod stream;
 mod synthetic;
 
 pub use dataset::{Dataset, Sample};
+pub use libsvm::{load_libsvm, parse_libsvm, LibsvmOptions};
 pub use notmnist::{ascii_art, render_glyph, GlyphStyle, NotMnistGen, GLYPH_CLASSES, GLYPH_DIM, GLYPH_SIDE};
 pub use synthetic::SyntheticGen;

@@ -1,0 +1,618 @@
+//! Streaming shard data plane: fixed-budget row blocks + a
+//! memory-bounded staging buffer with backpressure credits.
+//!
+//! `dasgd launch` used to ship each node's shard as one logical
+//! `PlanAssign` message, so a worker's whole assignment had to fit its
+//! RAM (and the 1 GiB chunk-staging cap) before a single step could
+//! run. This module is the alternative data plane:
+//!
+//! * [`RowBlock`] — a self-describing slice of one node's shard
+//!   (`rows × dim` dense f32 rows + labels, an `encoding` byte, and a
+//!   per-block FNV-1a checksum). [`RowBlock::carve`] splits a
+//!   [`Dataset`] into blocks of at most `block_rows` rows; blocks ship
+//!   as `ShardBlock` wire frames in `seq` order and a final
+//!   `ShardComplete` carries the whole-shard checksum
+//!   ([`fold_payloads`] over every block in order).
+//! * [`BlockBuffer`] — the worker-side staging area, shared between the
+//!   control-plane serve loop (producer) and the node threads
+//!   (consumers). Total staged payload is bounded by a byte budget
+//!   (`--staging-mb`); [`BlockBuffer::take_freed`] reports consumed
+//!   bytes so the worker can return `ShardCredit` flow-control frames,
+//!   and the launcher stops sending when its credit window closes.
+//! * [`ShardReceiver`] — one node's view of the buffer: the streaming
+//!   sampler handle [`NodeLogic`](crate::node_logic::NodeLogic) drains
+//!   rows from, stepping as soon as the first block lands instead of
+//!   waiting for the whole shard.
+//!
+//! See docs/data.md for the block format and the backpressure protocol.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::Dataset;
+use crate::net::wire::{fnv1a64, Fnv64};
+
+/// The only block encoding so far: dense row-major `f32` features with
+/// one `u32` label per row. The byte exists so a sparse CSR encoding
+/// can join without a wire version bump.
+pub const ENCODING_DENSE_F32: u8 = 0;
+
+/// Default rows per [`RowBlock`] (`--stream-block-rows`). At the
+/// 50-feature synthetic world this is ~800 KiB of payload per block —
+/// small enough that even a few-MiB staging budget holds several
+/// blocks in flight.
+pub const DEFAULT_BLOCK_ROWS: usize = 4096;
+
+/// One self-describing slice of a node's shard.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowBlock {
+    pub node: usize,
+    /// 0-based position in the node's stream (in-order per node).
+    pub seq: u32,
+    pub encoding: u8,
+    pub dim: usize,
+    pub classes: usize,
+    /// One label per row, each `< classes`.
+    pub labels: Vec<u32>,
+    /// Row-major `labels.len() × dim`.
+    pub features: Vec<f32>,
+    /// [`payload_checksum`] over this block's labels + features.
+    pub checksum: u64,
+}
+
+impl RowBlock {
+    /// Split `data` (node `node`'s shard) into blocks of at most
+    /// `block_rows` rows, checksummed and numbered in order. An empty
+    /// shard carves to no blocks.
+    pub fn carve(node: usize, data: &Dataset, block_rows: usize) -> Vec<RowBlock> {
+        assert!(block_rows > 0, "block_rows must be ≥ 1");
+        let mut blocks = Vec::with_capacity(data.len().div_ceil(block_rows));
+        for (seq, start) in (0..data.len()).step_by(block_rows).enumerate() {
+            let end = (start + block_rows).min(data.len());
+            let labels: Vec<u32> = data.labels()[start..end]
+                .iter()
+                .map(|&l| l as u32)
+                .collect();
+            let features = data.features_flat()[start * data.dim()..end * data.dim()].to_vec();
+            let checksum = payload_checksum(&labels, &features);
+            blocks.push(RowBlock {
+                node,
+                seq: seq as u32,
+                encoding: ENCODING_DENSE_F32,
+                dim: data.dim(),
+                classes: data.classes(),
+                labels,
+                features,
+                checksum,
+            });
+        }
+        blocks
+    }
+
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Staged bytes this block accounts for (label + feature payload;
+    /// the fixed header is noise next to it).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.labels.len() * 4 + self.features.len() * 4) as u64
+    }
+
+    /// The block's payload as the canonical checksum byte stream
+    /// (labels' LE bytes, then features' LE bit patterns).
+    pub fn payload_le_bytes(&self) -> Vec<u8> {
+        let mut bytes = Vec::with_capacity(self.payload_bytes() as usize);
+        for &l in &self.labels {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        for &f in &self.features {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        bytes
+    }
+
+    /// Recompute and compare the per-block checksum, plus the shape
+    /// invariants a hostile frame could violate. Returns a description
+    /// of the first violation.
+    pub fn validate(&self, dim: usize, classes: usize) -> Result<(), String> {
+        if self.encoding != ENCODING_DENSE_F32 {
+            return Err(format!("unknown block encoding {}", self.encoding));
+        }
+        if self.dim != dim || self.classes != classes {
+            return Err(format!(
+                "block shape {}×{} disagrees with the plan's {dim}×{classes}",
+                self.dim, self.classes
+            ));
+        }
+        if self.features.len() != self.labels.len() * dim {
+            return Err(format!(
+                "{} features for {} rows of dim {dim}",
+                self.features.len(),
+                self.labels.len()
+            ));
+        }
+        if let Some(&bad) = self.labels.iter().find(|&&l| l as usize >= classes) {
+            return Err(format!("label {bad} out of range for {classes} classes"));
+        }
+        let got = payload_checksum(&self.labels, &self.features);
+        if got != self.checksum {
+            return Err(format!(
+                "block checksum mismatch (announced {:#x}, computed {got:#x})",
+                self.checksum
+            ));
+        }
+        Ok(())
+    }
+
+    /// Append this block's rows to a dataset of the same shape.
+    pub fn append_to(&self, data: &mut Dataset) {
+        for (i, &label) in self.labels.iter().enumerate() {
+            data.push(
+                &self.features[i * self.dim..(i + 1) * self.dim],
+                label as usize,
+            );
+        }
+    }
+}
+
+/// FNV-1a over a block payload: the labels' LE bytes followed by the
+/// features' LE bit patterns (NaN-safe — bit patterns, not values).
+pub fn payload_checksum(labels: &[u32], features: &[f32]) -> u64 {
+    let mut h = Fnv64::new();
+    fold_payload(&mut h, labels, features);
+    h.finish()
+}
+
+fn fold_payload(h: &mut Fnv64, labels: &[u32], features: &[f32]) {
+    for &l in labels {
+        h.update(&l.to_le_bytes());
+    }
+    for &f in features {
+        h.update(&f.to_le_bytes());
+    }
+}
+
+/// The whole-shard checksum `ShardComplete` announces: one [`Fnv64`]
+/// folded over every block's payload bytes in `seq` order. Equal to
+/// [`fnv1a64`] of the concatenated payloads — which for a shard carved
+/// by [`RowBlock::carve`] is exactly the shard's own rows, so the
+/// receiver's fold certifies the reassembled shard bit-identical.
+pub fn fold_payloads(blocks: &[RowBlock]) -> u64 {
+    let mut h = Fnv64::new();
+    for b in blocks {
+        fold_payload(&mut h, &b.labels, &b.features);
+    }
+    h.finish()
+}
+
+/// Per-node reassembly progress a producer tracks while feeding blocks
+/// in: next expected `seq`, the running payload fold, and the row
+/// count. Compared against `ShardComplete` on arrival.
+#[derive(Clone, Debug, Default)]
+pub struct StreamProgress {
+    pub next_seq: u32,
+    pub rows: u64,
+    hash: Option<Fnv64>,
+}
+
+impl StreamProgress {
+    /// Fold one validated in-order block. Errors (without folding) on a
+    /// sequence gap, duplicate, or reorder.
+    pub fn fold(&mut self, block: &RowBlock) -> Result<(), String> {
+        if block.seq != self.next_seq {
+            return Err(format!(
+                "block seq {} for node {} (expected {})",
+                block.seq, block.node, self.next_seq
+            ));
+        }
+        let mut h = self.hash.take().unwrap_or_default();
+        fold_payload(&mut h, &block.labels, &block.features);
+        self.hash = Some(h);
+        self.next_seq += 1;
+        self.rows += block.rows() as u64;
+        Ok(())
+    }
+
+    /// The running whole-shard checksum ([`fnv1a64`]`(b"")` when no
+    /// block has arrived — matching [`fold_payloads`] of `&[]`).
+    pub fn checksum(&self) -> u64 {
+        self.hash.unwrap_or_default().finish()
+    }
+
+    /// Check the stream's announced totals against what actually
+    /// arrived.
+    pub fn verify_complete(
+        &self,
+        block_count: u32,
+        total_rows: u64,
+        checksum: u64,
+    ) -> Result<(), String> {
+        if self.next_seq != block_count {
+            return Err(format!(
+                "stream announced {block_count} blocks, {} arrived",
+                self.next_seq
+            ));
+        }
+        if self.rows != total_rows {
+            return Err(format!(
+                "stream announced {total_rows} rows, {} arrived",
+                self.rows
+            ));
+        }
+        let got = self.checksum();
+        if got != checksum {
+            return Err(format!(
+                "shard checksum mismatch (announced {checksum:#x}, computed {got:#x})"
+            ));
+        }
+        Ok(())
+    }
+}
+
+struct BufferInner {
+    /// Per-node staged blocks, drained by that node's thread.
+    queues: Vec<VecDeque<RowBlock>>,
+    complete: Vec<bool>,
+    staged: u64,
+    /// High-water mark of `staged` over the buffer's lifetime.
+    max_staged: u64,
+    /// Bytes consumed since the last [`BlockBuffer::take_freed`] —
+    /// the worker returns these as `ShardCredit`.
+    freed: u64,
+    stopped: bool,
+}
+
+/// Memory-bounded staging between the control-plane serve loop and the
+/// node threads. One per worker; budget = `--staging-mb`.
+pub struct BlockBuffer {
+    inner: Mutex<BufferInner>,
+    arrived: Condvar,
+    budget: u64,
+}
+
+impl BlockBuffer {
+    pub fn new(n_nodes: usize, budget_bytes: u64) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(BufferInner {
+                queues: (0..n_nodes).map(|_| VecDeque::new()).collect(),
+                complete: vec![false; n_nodes],
+                staged: 0,
+                max_staged: 0,
+                freed: 0,
+                stopped: false,
+            }),
+            arrived: Condvar::new(),
+            budget: budget_bytes,
+        })
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Stage one block. Errors when the block would push staged payload
+    /// past the budget — under a well-behaved sender the credit window
+    /// prevents this, so an overrun means a flow-control violation, not
+    /// a condition to wait out.
+    pub fn push(&self, block: RowBlock) -> Result<(), String> {
+        let bytes = block.payload_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        if inner.staged + bytes > self.budget {
+            return Err(format!(
+                "staging {bytes} more bytes would exceed the {}-byte budget \
+                 ({} already staged) — the sender ignored the credit window; \
+                 raise --staging-mb or lower --stream-block-rows",
+                self.budget, inner.staged
+            ));
+        }
+        if block.node >= inner.queues.len() {
+            return Err(format!("block for unknown node {}", block.node));
+        }
+        inner.staged += bytes;
+        inner.max_staged = inner.max_staged.max(inner.staged);
+        let node = block.node;
+        inner.queues[node].push_back(block);
+        drop(inner);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// Drain everything staged for `node` (non-blocking). Frees budget
+    /// and accrues credit for the drained bytes.
+    pub fn take(&self, node: usize) -> Vec<RowBlock> {
+        let mut inner = self.inner.lock().unwrap();
+        let blocks: Vec<RowBlock> = inner.queues[node].drain(..).collect();
+        let bytes: u64 = blocks.iter().map(|b| b.payload_bytes()).sum();
+        inner.staged -= bytes;
+        inner.freed += bytes;
+        blocks
+    }
+
+    /// Block (bounded by `timeout`) until `node` has a staged block,
+    /// its stream completed, or the buffer stopped. Returns whether a
+    /// block is available now.
+    pub fn wait_for_block(&self, node: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queues[node].is_empty() {
+                return true;
+            }
+            if inner.stopped || inner.complete[node] {
+                return false;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (guard, res) = self.arrived.wait_timeout(inner, left).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.queues[node].is_empty() {
+                return false;
+            }
+        }
+    }
+
+    /// Mark `node`'s stream complete (its `ShardComplete` validated).
+    pub fn mark_complete(&self, node: usize) {
+        self.inner.lock().unwrap().complete[node] = true;
+        self.arrived.notify_all();
+    }
+
+    pub fn is_complete(&self, node: usize) -> bool {
+        self.inner.lock().unwrap().complete[node]
+    }
+
+    /// Wake every waiter permanently (worker shutdown).
+    pub fn stop(&self) {
+        self.inner.lock().unwrap().stopped = true;
+        self.arrived.notify_all();
+    }
+
+    /// Consume the credit accumulator: bytes drained since the last
+    /// call, to be returned to the sender as `ShardCredit`.
+    pub fn take_freed(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        std::mem::take(&mut inner.freed)
+    }
+
+    pub fn staged_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().staged
+    }
+
+    /// Lifetime high-water mark of staged payload — what the acceptance
+    /// test asserts stays within the budget.
+    pub fn max_staged(&self) -> u64 {
+        self.inner.lock().unwrap().max_staged
+    }
+
+    /// A per-node consumer handle over this buffer.
+    pub fn receiver(self: &Arc<Self>, node: usize) -> ShardReceiver {
+        ShardReceiver {
+            buffer: Arc::clone(self),
+            node,
+        }
+    }
+}
+
+/// One node's streaming sampler feed: drains that node's staged blocks
+/// into its local [`Dataset`] as they land.
+#[derive(Clone)]
+pub struct ShardReceiver {
+    buffer: Arc<BlockBuffer>,
+    node: usize,
+}
+
+impl std::fmt::Debug for ShardReceiver {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardReceiver")
+            .field("node", &self.node)
+            .field("complete", &self.buffer.is_complete(self.node))
+            .finish()
+    }
+}
+
+impl ShardReceiver {
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Append every staged block's rows to `data` (non-blocking).
+    /// Returns the number of rows appended.
+    pub fn drain_into(&self, data: &mut Dataset) -> usize {
+        let mut rows = 0;
+        for block in self.buffer.take(self.node) {
+            rows += block.rows();
+            block.append_to(data);
+        }
+        rows
+    }
+
+    /// Bounded wait for the next block (false = nothing arrived and the
+    /// stream is complete, stopped, or the timeout passed).
+    pub fn wait_for_block(&self, timeout: Duration) -> bool {
+        self.buffer.wait_for_block(self.node, timeout)
+    }
+
+    /// The stream delivered its final block and validated.
+    pub fn is_complete(&self) -> bool {
+        self.buffer.is_complete(self.node)
+    }
+}
+
+/// Self-check: [`fold_payloads`] over a full carve equals [`fnv1a64`]
+/// over the shard's own label+feature bytes — the identity the
+/// end-to-end checksum certification rests on.
+pub fn shard_checksum(data: &Dataset) -> u64 {
+    let labels: Vec<u32> = data.labels().iter().map(|&l| l as u32).collect();
+    let mut bytes = Vec::with_capacity(labels.len() * 4 + data.features_flat().len() * 4);
+    for &l in &labels {
+        bytes.extend_from_slice(&l.to_le_bytes());
+    }
+    for &f in data.features_flat() {
+        bytes.extend_from_slice(&f.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(rows: usize, dim: usize, classes: usize, seed: u64) -> Dataset {
+        let mut d = Dataset::with_capacity(dim, classes, rows);
+        let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        for i in 0..rows {
+            let feats: Vec<f32> = (0..dim)
+                .map(|j| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((x >> 33) as f32 / (1u64 << 31) as f32) - 1.0 + j as f32 * 1e-3
+                })
+                .collect();
+            d.push(&feats, i % classes);
+        }
+        d
+    }
+
+    #[test]
+    fn carve_covers_every_row_in_order() {
+        let d = shard(1000, 7, 3, 1);
+        let blocks = RowBlock::carve(4, &d, 128);
+        assert_eq!(blocks.len(), 8); // ceil(1000/128)
+        let mut rebuilt = Dataset::new(7, 3);
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(b.seq as usize, i);
+            assert_eq!(b.node, 4);
+            b.validate(7, 3).unwrap();
+            b.append_to(&mut rebuilt);
+        }
+        assert_eq!(rebuilt.labels(), d.labels());
+        assert_eq!(rebuilt.features_flat(), d.features_flat());
+        // Whole-shard fold equals the shard's own byte checksum.
+        assert_eq!(fold_payloads(&blocks), shard_checksum(&d));
+    }
+
+    #[test]
+    fn carve_of_empty_shard_is_empty() {
+        let d = Dataset::new(5, 2);
+        assert!(RowBlock::carve(0, &d, 64).is_empty());
+        assert_eq!(fold_payloads(&[]), fnv1a64(b""));
+        assert_eq!(shard_checksum(&d), fnv1a64(b""));
+    }
+
+    #[test]
+    fn validate_catches_every_corruption() {
+        let d = shard(50, 4, 2, 3);
+        let b = &RowBlock::carve(0, &d, 64)[0];
+        b.validate(4, 2).unwrap();
+        // Wrong shape vs plan.
+        assert!(b.validate(5, 2).is_err());
+        assert!(b.validate(4, 3).is_err());
+        // Flipped feature bit.
+        let mut bad = b.clone();
+        bad.features[7] += 1.0;
+        assert!(bad.validate(4, 2).unwrap_err().contains("checksum"));
+        // Corrupt label (out of range).
+        let mut bad = b.clone();
+        bad.labels[0] = 9;
+        assert!(bad.validate(4, 2).unwrap_err().contains("label"));
+        // Truncated features.
+        let mut bad = b.clone();
+        bad.features.pop();
+        assert!(bad.validate(4, 2).is_err());
+        // Unknown encoding.
+        let mut bad = b.clone();
+        bad.encoding = 7;
+        assert!(bad.validate(4, 2).unwrap_err().contains("encoding"));
+    }
+
+    #[test]
+    fn progress_rejects_gaps_duplicates_and_reorders() {
+        let d = shard(300, 3, 2, 5);
+        let blocks = RowBlock::carve(1, &d, 100);
+        let mut p = StreamProgress::default();
+        p.fold(&blocks[0]).unwrap();
+        // Duplicate.
+        assert!(p.fold(&blocks[0]).is_err());
+        // Gap.
+        assert!(p.fold(&blocks[2]).is_err());
+        p.fold(&blocks[1]).unwrap();
+        p.fold(&blocks[2]).unwrap();
+        p.verify_complete(3, 300, fold_payloads(&blocks)).unwrap();
+        // Lying totals are caught.
+        assert!(p.verify_complete(2, 300, fold_payloads(&blocks)).is_err());
+        assert!(p.verify_complete(3, 299, fold_payloads(&blocks)).is_err());
+        assert!(p
+            .verify_complete(3, 300, fold_payloads(&blocks) ^ 1)
+            .is_err());
+    }
+
+    #[test]
+    fn buffer_enforces_its_budget_and_credits_drains() {
+        let d = shard(256, 4, 2, 7);
+        let blocks = RowBlock::carve(0, &d, 64); // 4 blocks, 64·(4+16) B each
+        let per_block = blocks[0].payload_bytes();
+        let buf = BlockBuffer::new(1, per_block * 2);
+        buf.push(blocks[0].clone()).unwrap();
+        buf.push(blocks[1].clone()).unwrap();
+        assert_eq!(buf.staged_bytes(), per_block * 2);
+        // A third block overflows the budget and names the flag.
+        let err = buf.push(blocks[2].clone()).unwrap_err();
+        assert!(err.contains("--staging-mb"), "{err}");
+        // Draining frees budget and accrues credit.
+        let taken = buf.take(0);
+        assert_eq!(taken.len(), 2);
+        assert_eq!(buf.staged_bytes(), 0);
+        assert_eq!(buf.take_freed(), per_block * 2);
+        assert_eq!(buf.take_freed(), 0);
+        buf.push(blocks[2].clone()).unwrap();
+        buf.push(blocks[3].clone()).unwrap();
+        assert_eq!(buf.max_staged(), per_block * 2);
+    }
+
+    #[test]
+    fn receiver_drains_blocks_into_a_dataset_across_threads() {
+        let d = shard(500, 6, 3, 11);
+        let blocks = RowBlock::carve(0, &d, 50);
+        let buf = BlockBuffer::new(1, u64::MAX);
+        let recv = buf.receiver(0);
+        let producer = {
+            let buf = Arc::clone(&buf);
+            let blocks = blocks.clone();
+            std::thread::spawn(move || {
+                for b in blocks {
+                    buf.push(b).unwrap();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                buf.mark_complete(0);
+            })
+        };
+        let mut got = Dataset::new(6, 3);
+        while got.len() < 500 {
+            if !recv.wait_for_block(Duration::from_secs(5)) && recv.is_complete() {
+                recv.drain_into(&mut got);
+                break;
+            }
+            recv.drain_into(&mut got);
+        }
+        producer.join().unwrap();
+        recv.drain_into(&mut got);
+        assert_eq!(got.labels(), d.labels());
+        assert_eq!(got.features_flat(), d.features_flat());
+        assert!(recv.is_complete());
+    }
+
+    #[test]
+    fn stop_wakes_waiters() {
+        let buf = BlockBuffer::new(2, 1 << 20);
+        let waiter = {
+            let buf = Arc::clone(&buf);
+            std::thread::spawn(move || buf.wait_for_block(1, Duration::from_secs(30)))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        buf.stop();
+        assert!(!waiter.join().unwrap(), "stop must wake the waiter");
+    }
+}

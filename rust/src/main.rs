@@ -5,7 +5,8 @@
 
 use dasgd::cli::{self, Args};
 use dasgd::coordinator::{AsyncCluster, AsyncConfig, Objective, PjrtArtifacts, StepSize};
-use dasgd::data::{ascii_art, render_glyph, GlyphStyle, NotMnistGen};
+use dasgd::data::stream::DEFAULT_BLOCK_ROWS;
+use dasgd::data::{ascii_art, load_libsvm, render_glyph, GlyphStyle, LibsvmOptions, NotMnistGen};
 use dasgd::experiments::{self, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
 use dasgd::metrics::Table;
 use dasgd::net::{run_launch, run_worker, LaunchConfig, WorkerConfig, WorkerPlanSource};
@@ -41,7 +42,8 @@ Ablations / extensions:
 System:
   train       one Alg. 2 run (--nodes N --degree K --iters I
               --objective logreg|hinge|lasso
-              --backend native|pjrt --dataset synth|notmnist
+              --backend native|pjrt
+              --dataset synth|notmnist|libsvm:PATH
               --csv PATH to dump the series)
   cluster     live threaded asynchronous cluster (--secs S --kill N
               --kill-after T to crash N nodes at time T
@@ -53,16 +55,20 @@ System:
               --partition T0:T1:CUT --samples M --straggle X
               --plan P --dirichlet-alpha A)
   launch      multi-process deployment on this machine: spawn K worker
-              processes, ship each its workload shards over TCP, monitor
-              them (--workers K --nodes N --degree D --horizon U applied
-              updates --secs S cap --rate HZ --objective ...
+              processes, stream each its workload shards over TCP,
+              monitor them (--workers K --nodes N --degree D --horizon U
+              applied updates --secs S cap --rate HZ --objective ...
               --plan P --dirichlet-alpha A --samples M per node
-              --csv PATH); shards of any size ship — past the 16 MiB
-              frame cap they ride the chunked wire envelope
+              --dataset synth|libsvm:PATH --csv PATH); shards of any
+              size stream as checksummed row blocks
+              (--stream-block-rows R, default 4096) under a per-worker
+              staging budget (--staging-mb M, default 1024) — workers
+              start stepping on their first block
   worker      one deployment worker process (--rank R
               --peers host:port,host:port,... --nodes N --degree D
               --secs S --rate HZ --objective ... --plan P|wire
-              --samples M --param-len L with wire); `launch` spawns these
+              --samples M --param-len L with wire --staging-mb M);
+              `launch` spawns these
   artifacts   verify the AOT artifact set loads + executes
 
 Workload plans (--plan): synth (default, the §V-A per-node world),
@@ -105,6 +111,67 @@ fn unknown_value(flag: &str, got: &str, known: &[&str]) -> anyhow::Error {
         msg.push_str(&format!(" — did you mean {best:?}?"));
     }
     anyhow::Error::msg(msg)
+}
+
+/// The `--dataset` vocabulary (the `libsvm` family takes a `:PATH`
+/// payload; the built-in generators take none).
+const DATASET_NAMES: [&str; 3] = ["synth", "notmnist", "libsvm"];
+
+/// Split `--dataset` into `(family, payload)`, rejecting unknown
+/// families with a suggestion and malformed payloads with the exact
+/// shape the family expects.
+fn parse_dataset(value: &str) -> anyhow::Result<(&str, Option<&str>)> {
+    let (family, payload) = match value.split_once(':') {
+        Some((f, p)) => (f, Some(p)),
+        None => (value, None),
+    };
+    if !DATASET_NAMES.contains(&family) {
+        return Err(unknown_value("dataset", family, &DATASET_NAMES));
+    }
+    match (family, payload) {
+        ("libsvm", None | Some("")) => {
+            anyhow::bail!("--dataset libsvm needs a file: --dataset libsvm:PATH")
+        }
+        ("libsvm", some) => Ok((family, some)),
+        (_, Some(_)) => {
+            anyhow::bail!("--dataset {family} takes no \":PATH\" payload (got {value:?})")
+        }
+        (_, None) => Ok((family, None)),
+    }
+}
+
+/// Load a libsvm file and split it into `n` contiguous per-node shards
+/// plus a held-out test tail, mirroring the synthetic worlds' shape.
+fn libsvm_world(
+    path: &str,
+    n: usize,
+    test_n: usize,
+) -> anyhow::Result<(Vec<dasgd::data::Dataset>, dasgd::data::Dataset)> {
+    let base = load_libsvm(
+        path,
+        LibsvmOptions {
+            cache: true,
+            ..Default::default()
+        },
+    )?;
+    if base.len() < n + test_n {
+        anyhow::bail!(
+            "libsvm dataset {path} has {} rows — need at least {} \
+             ({n} nodes + {test_n} test rows)",
+            base.len(),
+            n + test_n
+        );
+    }
+    let split = base.len() - test_n;
+    let test = base.subset(&(split..base.len()).collect::<Vec<usize>>());
+    let per = split / n;
+    let mut shards = Vec::with_capacity(n);
+    for i in 0..n {
+        let start = i * per;
+        let end = if i + 1 == n { split } else { start + per };
+        shards.push(base.subset(&(start..end).collect::<Vec<usize>>()));
+    }
+    Ok((shards, test))
 }
 
 /// Parse `--objective`, rejecting unknown names with a suggestion.
@@ -263,6 +330,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "dirichlet-alpha",
             "shift-sigma",
             "samples",
+            "dataset",
+            "staging-mb",
+            "stream-block-rows",
             "csv",
         ],
         "worker" => &[
@@ -278,6 +348,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "shift-sigma",
             "samples",
             "param-len",
+            "staging-mb",
         ],
         _ => return None,
     })
@@ -411,10 +482,11 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     };
     let objective = parse_objective(args)?;
     let dataset = args.get_str("dataset", "synth");
-    let (shards, test) = match dataset {
-        "notmnist" => fig6::notmnist_world(n, 400, 512, seed),
-        "synth" => experiments::synth_world(n, 500, 512, seed),
-        other => return Err(unknown_value("dataset", other, &["synth", "notmnist"])),
+    let (shards, test) = match parse_dataset(dataset)? {
+        ("notmnist", _) => fig6::notmnist_world(n, 400, 512, seed),
+        ("synth", _) => experiments::synth_world(n, 500, 512, seed),
+        ("libsvm", Some(path)) => libsvm_world(path, n, 512)?,
+        _ => unreachable!("parse_dataset admits only known families"),
     };
     let cfg = TrainConfig::objective_default(objective, n)
         .with_seed(seed)
@@ -653,6 +725,29 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
     let objective = parse_objective(args)?;
     let plan = parse_plan(args)?;
     let samples = parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?;
+    let staging_mb = args
+        .get_usize("staging-mb", 1024)
+        .map_err(anyhow::Error::msg)?;
+    let stream_block_rows = args
+        .get_usize("stream-block-rows", DEFAULT_BLOCK_ROWS)
+        .map_err(anyhow::Error::msg)?;
+    // The streamed shards come from the plan's own generator unless a
+    // real corpus is named; notMNIST stays a `train`-only world (its
+    // glyph renderer has no per-node partition recipe to stream).
+    let base_data = match parse_dataset(args.get_str("dataset", "synth"))? {
+        ("synth", _) => None,
+        ("libsvm", Some(path)) => Some(load_libsvm(
+            path,
+            LibsvmOptions {
+                cache: true,
+                ..Default::default()
+            },
+        )?),
+        ("notmnist", _) => {
+            anyhow::bail!("--dataset notmnist is not available for launch (use train)")
+        }
+        _ => unreachable!("parse_dataset admits only known families"),
+    };
     let cfg = LaunchConfig {
         workers,
         nodes,
@@ -666,11 +761,14 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         samples_per_node: samples,
         seed,
         binary: None,
+        stream_block_rows,
+        staging_mb,
+        base_data,
     };
     println!(
         "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \
          horizon {horizon} updates, objective {objective}, plan {} \
-         (shards ship over the wire)",
+         (shards stream as {stream_block_rows}-row blocks, {staging_mb} MiB staging)",
         plan.name()
     );
     let rep = run_launch(&cfg)?;
@@ -755,6 +853,9 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         plan,
         samples_per_node: parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?,
         seed,
+        staging_mb: args
+            .get_usize("staging-mb", 1024)
+            .map_err(anyhow::Error::msg)?,
     };
     run_worker(&cfg)?;
     Ok(())

@@ -2,22 +2,26 @@
 //!
 //! A deployment is K *worker* processes (`dasgd worker --rank R
 //! --peers a0,a1,...`), each owning one [`ShardMap`] block of nodes and
-//! driving it with the same [`spawn_shard`] engine the in-process
-//! cluster uses — just over a [`SocketNet`] instead of a local
-//! substrate. Workers rendezvous by address list: every rank binds its
+//! driving it with the same [`spawn_shard_with_feeds`] engine the
+//! in-process cluster uses — just over a [`SocketNet`] instead of a
+//! local substrate. Workers rendezvous by address list: every rank binds its
 //! own entry of `--peers` and dials every lower rank.
 //!
 //! Workloads are [`WorkloadPlan`]s. The *launcher* (`dasgd launch
 //! --workers K [--plan P --dirichlet-alpha A]`) builds the plan once
-//! and **ships each worker its owned assignments over the wire**
-//! (`PlanAssign`/`PlanStart` frames on the control connection): real
-//! non-IID shards and per-node objectives travel to the processes that
-//! train on them — workers spawned with `--plan wire` never regenerate
-//! the global world. Shards of any size ship: a `PlanAssign` whose
-//! shard outgrows the 16 MiB frame cap rides the wire codec's chunk
-//! envelope (`ChunkBegin`/`ChunkData`/`ChunkEnd`), and `PlanStart`
-//! carries a checksum over everything shipped, so a worker that starts
-//! certifies it received the plan bit-for-bit. Only the topology is
+//! and **streams each worker its owned shards over the wire**: the
+//! `PlanAssign`/`PlanStart` frames on the control connection now carry
+//! metadata only (objectives, shapes — empty shards), and the data
+//! itself follows as a stream of fixed-budget [`RowBlock`]s
+//! (`ShardBlock` frames, interleaved round-robin across the rank's
+//! nodes, each block checksummed before a row is staged). A worker
+//! starts stepping as soon as its first block lands — it never holds a
+//! whole shard in transit, because staging is bounded by
+//! `--staging-mb` and the launcher's send window closes until the
+//! worker returns `ShardCredit` for drained bytes (see docs/data.md
+//! for the protocol). A final `ShardComplete` per node carries the
+//! whole-shard checksum fold, so a stream that completes certifies the
+//! reassembled shard bit-identical to the plan's. Only the topology is
 //! re-derived from `(nodes, degree)`, which is deterministic and
 //! cheap. A standalone worker (spanning machines, no launcher) instead
 //! derives its plan locally from `--plan <spec>`: the builders are
@@ -39,6 +43,7 @@
 //! filtering degrades its nodes' projections to `Conflict`/`Isolated`
 //! — survivors never hang.
 
+use std::collections::VecDeque;
 use std::io::{Read as _, Write as _};
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
@@ -47,7 +52,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{spawn_shard, AsyncConfig};
+use crate::coordinator::{spawn_shard_with_feeds, AsyncConfig};
+use crate::data::stream::{fold_payloads, BlockBuffer, RowBlock, StreamProgress, DEFAULT_BLOCK_ROWS};
+use crate::data::Dataset;
 use crate::experiments::make_regular;
 use crate::metrics::Recorder;
 use crate::node_logic::{Counts, Probe};
@@ -81,10 +88,16 @@ struct ControlConn {
 
 impl ControlConn {
     fn new(stream: TcpStream) -> Self {
+        Self::with_limit(stream, wire::MAX_MESSAGE_LEN)
+    }
+
+    /// A connection whose chunk staging is capped at `limit` bytes
+    /// (`--staging-mb`) instead of the codec's absolute 1 GiB.
+    fn with_limit(stream: TcpStream, limit: usize) -> Self {
         Self {
             stream,
             buf: Vec::new(),
-            assembler: wire::ChunkAssembler::new(),
+            assembler: wire::ChunkAssembler::with_limit(limit),
         }
     }
 
@@ -233,6 +246,10 @@ pub struct WorkerConfig {
     /// `--plan wire`, where the launcher decides).
     pub samples_per_node: usize,
     pub seed: u64,
+    /// Staging budget in MiB (`--staging-mb`): bounds both the
+    /// streaming [`BlockBuffer`] (blocks staged but not yet consumed by
+    /// node threads) and every connection's chunk-reassembly staging.
+    pub staging_mb: usize,
 }
 
 /// What a finished worker reports.
@@ -245,16 +262,19 @@ pub struct WorkerSummary {
 
 /// Wait for the launch monitor's control connection and drain its
 /// `PlanAssign` stream up to `PlanStart`. Returns the worker's partial
-/// plan plus the control connection so the serve loop continues on the
-/// very same stream. The `PlanStart` checksum is verified against what
-/// actually arrived — a corrupted shipment refuses to start instead of
-/// training on wrong bits.
+/// plan, the control connection (so the serve loop continues on the
+/// very same stream), and whether the shard data follows as a
+/// `ShardBlock` stream (`PlanStart.streaming`) rather than riding the
+/// assignments themselves. The `PlanStart` checksum is verified
+/// against what actually arrived — a corrupted shipment refuses to
+/// start instead of training on wrong bits.
 fn receive_wire_plan(
     net: &SocketNet,
     nodes: usize,
     param_len: usize,
     deadline: Instant,
-) -> Result<(WorkloadPlan, ControlConn)> {
+    staging_limit: usize,
+) -> Result<(WorkloadPlan, ControlConn, bool)> {
     let conn = loop {
         if let Some(c) = net.take_control() {
             break c;
@@ -266,10 +286,10 @@ fn receive_wire_plan(
     };
     let _ = conn.set_read_timeout(Some(Duration::from_millis(50)));
     let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
-    let mut conn = ControlConn::new(conn);
+    let mut conn = ControlConn::with_limit(conn, staging_limit);
     let mut assigned: Vec<(usize, NodeAssignment)> = Vec::new();
     let mut received_sum = wire::Fnv64::new();
-    let (global_mixed, want_checksum) = loop {
+    let (global_mixed, want_checksum, streaming) = loop {
         let frame_deadline = Instant::now() + Duration::from_millis(250);
         match conn.read_msg(frame_deadline) {
             Ok(Some(msg @ WireMsg::PlanAssign { .. })) => {
@@ -286,6 +306,7 @@ fn receive_wire_plan(
                 assigned: count,
                 mixed,
                 checksum,
+                streaming,
             })) => {
                 if n_total as usize != nodes {
                     bail!("plan is for {n_total} nodes, this deployment has {nodes}");
@@ -296,7 +317,7 @@ fn receive_wire_plan(
                         assigned.len()
                     );
                 }
-                break (mixed, checksum);
+                break (mixed, checksum, streaming);
             }
             Ok(Some(_)) => {} // nothing else is meaningful pre-start
             Ok(None) => {
@@ -325,7 +346,14 @@ fn receive_wire_plan(
             plan.param_len()
         );
     }
-    Ok((plan, conn))
+    Ok((plan, conn, streaming))
+}
+
+/// Per-owned-node reassembly state a streaming worker keeps while its
+/// `ShardBlock` stream is live.
+struct NodeStreamState {
+    progress: StreamProgress,
+    done: bool,
 }
 
 /// Run one worker to completion: bind, rendezvous, obtain the workload
@@ -366,13 +394,23 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         }
     };
 
+    if cfg.staging_mb == 0 {
+        bail!("--staging-mb must be at least 1");
+    }
+    let staging_limit = cfg
+        .staging_mb
+        .saturating_mul(1 << 20)
+        .min(wire::MAX_MESSAGE_LEN);
     let shard_map = ShardMap::new(cfg.nodes, workers);
     let net = SocketNet::bind(
         cfg.rank,
         shard_map,
         param_len,
         &cfg.peers[cfg.rank as usize],
-        SocketConfig::default(),
+        SocketConfig {
+            staging_limit,
+            ..SocketConfig::default()
+        },
     )
     .with_context(|| format!("binding {}", cfg.peers[cfg.rank as usize]))?;
     let owned = net.local_nodes();
@@ -396,18 +434,25 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
 
     let deadline = Instant::now() + Duration::from_secs_f64(cfg.secs.max(0.1));
     let mut controls: Vec<ControlConn> = Vec::new();
+    let mut streaming = false;
     let plan = match local_plan {
         Some(plan) => plan,
         None => {
-            let (plan, conn) = receive_wire_plan(&net, cfg.nodes, param_len, deadline)
-                .with_context(|| format!("rank {} receiving the workload plan", cfg.rank))?;
+            let (plan, conn, is_streaming) =
+                receive_wire_plan(&net, cfg.nodes, param_len, deadline, staging_limit)
+                    .with_context(|| format!("rank {} receiving the workload plan", cfg.rank))?;
             controls.push(conn);
+            streaming = is_streaming;
             plan
         }
     };
-    for id in owned.clone() {
-        if plan.shard(id).is_empty() {
-            bail!("owned node {id} has no data in the plan");
+    // A streamed plan ships metadata-only assignments — its shards fill
+    // in as blocks land, so "empty" is the expected starting state.
+    if !streaming {
+        for id in owned.clone() {
+            if plan.shard(id).is_empty() {
+                bail!("owned node {id} has no data in the plan");
+            }
         }
     }
 
@@ -424,8 +469,35 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         transport: TransportKind::Socket,
         seed: cfg.seed,
     };
+    // Streaming staging buffer, shared with the node threads' sampler
+    // feeds. `None` when the whole shard arrived with the plan.
+    let buffer = streaming.then(|| BlockBuffer::new(cfg.nodes, staging_limit as u64));
     let transport: Arc<dyn Transport> = Arc::new(net.clone());
-    let run = spawn_shard(&graph, &plan, &acfg, transport, owned.clone(), None);
+    let run = spawn_shard_with_feeds(
+        &graph,
+        &plan,
+        &acfg,
+        transport,
+        owned.clone(),
+        None,
+        buffer.as_ref(),
+    );
+
+    // Streaming reassembly state (validated per block before staging;
+    // trivially "done" when the plan was not streamed).
+    let (plan_dim, plan_classes) = {
+        let s = plan.shard(owned.start);
+        (s.dim(), s.classes())
+    };
+    let mut streams: Vec<NodeStreamState> = owned
+        .clone()
+        .map(|_| NodeStreamState {
+            progress: StreamProgress::default(),
+            done: !streaming,
+        })
+        .collect();
+    let mut updates_at_stream_complete: u64 = if streaming { u64::MAX } else { 0 };
+    let mut stream_failure: Option<String> = None;
 
     // Serve the control plane until Shutdown or the wall-clock cap.
     let mut shutdown_by_monitor = false;
@@ -433,7 +505,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         while let Some(conn) = net.take_control() {
             let _ = conn.set_read_timeout(Some(Duration::from_millis(25)));
             let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
-            controls.push(ControlConn::new(conn));
+            controls.push(ControlConn::with_limit(conn, staging_limit));
         }
         if controls.is_empty() {
             std::thread::sleep(Duration::from_millis(25));
@@ -457,9 +529,104 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                             .into_iter()
                             .map(|(id, w)| (id as u32, w))
                             .collect(),
+                        staging_bytes: buffer.as_ref().map(|b| b.max_staged()).unwrap_or(0),
+                        stream_done: streams.iter().all(|s| s.done),
+                        updates_at_stream_complete,
                     };
                     if conn.write_msg(&reply).is_err() {
                         dropped.push(ci);
+                    }
+                }
+                Ok(Some(WireMsg::ShardBlock {
+                    node,
+                    seq,
+                    encoding,
+                    rows,
+                    dim,
+                    classes,
+                    labels,
+                    features,
+                    checksum,
+                })) => {
+                    let staged = (|| -> std::result::Result<(), String> {
+                        let Some(buffer) = buffer.as_ref() else {
+                            return Err("ShardBlock on a non-streamed plan".into());
+                        };
+                        let node = node as usize;
+                        if !owned.contains(&node) {
+                            return Err(format!("block for node {node}, not owned by this rank"));
+                        }
+                        if rows as usize != labels.len() {
+                            return Err(format!(
+                                "block announces {rows} rows but carries {} labels",
+                                labels.len()
+                            ));
+                        }
+                        let block = RowBlock {
+                            node,
+                            seq,
+                            encoding,
+                            dim: dim as usize,
+                            classes: classes as usize,
+                            labels,
+                            features,
+                            checksum,
+                        };
+                        block.validate(plan_dim, plan_classes)?;
+                        let state = &mut streams[node - owned.start];
+                        if state.done {
+                            return Err(format!("block after ShardComplete for node {node}"));
+                        }
+                        state.progress.fold(&block)?;
+                        buffer.push(block)
+                    })();
+                    if let Err(e) = staged {
+                        stream_failure = Some(e);
+                        break 'serve;
+                    }
+                }
+                Ok(Some(WireMsg::ShardComplete {
+                    node,
+                    block_count,
+                    total_rows,
+                    checksum,
+                })) => {
+                    let completed = (|| -> std::result::Result<(), String> {
+                        let Some(buffer) = buffer.as_ref() else {
+                            return Err("ShardComplete on a non-streamed plan".into());
+                        };
+                        let node = node as usize;
+                        if !owned.contains(&node) {
+                            return Err(format!(
+                                "stream end for node {node}, not owned by this rank"
+                            ));
+                        }
+                        let state = &mut streams[node - owned.start];
+                        if state.done {
+                            return Err(format!("duplicate ShardComplete for node {node}"));
+                        }
+                        state.progress.verify_complete(block_count, total_rows, checksum)?;
+                        state.done = true;
+                        buffer.mark_complete(node);
+                        Ok(())
+                    })();
+                    match completed {
+                        Ok(()) => {
+                            if updates_at_stream_complete == u64::MAX
+                                && streams.iter().all(|s| s.done)
+                            {
+                                // The applied-update count the instant
+                                // the last owned stream validated —
+                                // race-free evidence for the monitor
+                                // that stepping started before the data
+                                // finished arriving.
+                                updates_at_stream_complete = run.counts().updates();
+                            }
+                        }
+                        Err(e) => {
+                            stream_failure = Some(e);
+                            break 'serve;
+                        }
                     }
                 }
                 Ok(Some(WireMsg::Shutdown)) => {
@@ -470,14 +637,35 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                 Ok(None) => {}    // nothing complete yet
                 Err(_) => dropped.push(ci),
             }
+            // Return backpressure credit for whatever the node threads
+            // drained since the last pass. Credit goes to the plan
+            // connection (controls[0]) — the stream's only sender.
+            if ci == 0 {
+                if let Some(buffer) = buffer.as_ref() {
+                    let freed = buffer.take_freed();
+                    if freed > 0
+                        && conn.write_msg(&WireMsg::ShardCredit { bytes: freed }).is_err()
+                    {
+                        dropped.push(ci);
+                    }
+                }
+            }
         }
+        dropped.sort_unstable();
+        dropped.dedup();
         for ci in dropped.into_iter().rev() {
             controls.remove(ci);
         }
     }
 
+    if let Some(buffer) = buffer.as_ref() {
+        buffer.stop();
+    }
     let counts = run.stop_and_join();
     net.shutdown();
+    if let Some(e) = stream_failure {
+        bail!("rank {}: shard stream refused — {e}", cfg.rank);
+    }
     println!(
         "dasgd-worker rank={} done: {} updates ({} grad, {} proj), {} messages, {} conflicts",
         cfg.rank,
@@ -518,6 +706,17 @@ pub struct LaunchConfig {
     /// skewed plan) pushes single shards past the wire frame cap.
     pub samples_per_node: usize,
     pub seed: u64,
+    /// Rows per streamed [`RowBlock`] (`--stream-block-rows`).
+    pub stream_block_rows: usize,
+    /// Per-worker staging budget in MiB (`--staging-mb`): the
+    /// launcher's credit window per rank, and each worker's
+    /// [`BlockBuffer`] / chunk-staging bound.
+    pub staging_mb: usize,
+    /// A real base corpus (`--dataset libsvm:<path>`) partitioned by
+    /// `plan` instead of generating the synthetic world; the last
+    /// `TEST_SAMPLES` rows are held out as the monitor's evaluation
+    /// set.
+    pub base_data: Option<Dataset>,
     /// The worker binary. `None` = this executable (the CLI case);
     /// tests point it at the built `dasgd` binary.
     pub binary: Option<std::path::PathBuf>,
@@ -537,6 +736,9 @@ impl LaunchConfig {
             plan: PlanSpec::Synth,
             samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
+            stream_block_rows: DEFAULT_BLOCK_ROWS,
+            staging_mb: 1024,
+            base_data: None,
             binary: None,
         }
     }
@@ -554,6 +756,39 @@ pub struct LaunchReport {
     /// means the wall-clock cap expired first (a stalled deployment —
     /// the CLI exits nonzero on it so CI smoke runs can fail).
     pub reached_horizon: bool,
+    /// Highest staging high-water mark any worker reported over the
+    /// run — by construction within the `--staging-mb` budget (a
+    /// worker refuses an overrun as a flow-control violation).
+    pub max_staging_bytes: u64,
+    /// Some worker applied its first update strictly before its last
+    /// owned shard stream completed — direct evidence that streaming
+    /// overlapped compute with data arrival.
+    pub stepped_before_stream_complete: bool,
+}
+
+/// One queued item of a rank's outbound shard stream.
+enum StreamItem {
+    Block(RowBlock),
+    Complete {
+        node: u32,
+        block_count: u32,
+        total_rows: u64,
+        checksum: u64,
+    },
+}
+
+fn block_msg(b: RowBlock) -> WireMsg {
+    WireMsg::ShardBlock {
+        node: b.node as u32,
+        seq: b.seq,
+        encoding: b.encoding,
+        rows: b.labels.len() as u32,
+        dim: b.dim as u32,
+        classes: b.classes as u32,
+        checksum: b.checksum,
+        labels: b.labels,
+        features: b.features,
+    }
 }
 
 /// Reserve a free loopback port by binding port 0 and noting the
@@ -581,17 +816,99 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     if cfg.workers > cfg.nodes {
         bail!("more workers ({}) than nodes ({})", cfg.workers, cfg.nodes);
     }
+    if cfg.stream_block_rows == 0 {
+        bail!("--stream-block-rows must be at least 1");
+    }
+    if cfg.staging_mb == 0 {
+        bail!("--staging-mb must be at least 1");
+    }
     // The whole deployment's workload, built exactly once. Workers get
     // their assignments over the wire — never regenerated from seed.
-    let (plan, test) = cfg.plan.build(
-        cfg.objective,
-        cfg.nodes,
-        cfg.samples_per_node,
-        TEST_SAMPLES,
-        cfg.seed,
-    );
+    // A real base corpus (libsvm) is partitioned by the same plan
+    // recipes as the synthetic pool, with its tail held out for the
+    // monitor's probe.
+    let (plan, test) = match &cfg.base_data {
+        Some(base) => {
+            if base.len() <= TEST_SAMPLES {
+                bail!(
+                    "base dataset has {} rows — need more than {TEST_SAMPLES} \
+                     (the held-out evaluation set)",
+                    base.len()
+                );
+            }
+            let split = base.len() - TEST_SAMPLES;
+            let train_idx: Vec<usize> = (0..split).collect();
+            let test_idx: Vec<usize> = (split..base.len()).collect();
+            (
+                cfg.plan.build_over(
+                    &base.subset(&train_idx),
+                    cfg.objective,
+                    cfg.nodes,
+                    cfg.seed,
+                ),
+                base.subset(&test_idx),
+            )
+        }
+        None => cfg.plan.build(
+            cfg.objective,
+            cfg.nodes,
+            cfg.samples_per_node,
+            TEST_SAMPLES,
+            cfg.seed,
+        ),
+    };
     let param_len = plan.param_len();
     let shard_map = ShardMap::new(cfg.nodes, cfg.workers);
+    // Carve every rank's outbound shard stream up front: per-node block
+    // lists interleaved round-robin across the rank's nodes, each
+    // node's `ShardComplete` (count, rows, whole-shard checksum fold)
+    // queued right after its last block. Carving first also lets a
+    // block that could never fit the staging budget fail before any
+    // process spawns.
+    let budget = ((cfg.staging_mb as u64) << 20).min(wire::MAX_MESSAGE_LEN as u64);
+    let mut queues: Vec<VecDeque<StreamItem>> = Vec::with_capacity(cfg.workers);
+    for rank in 0..cfg.workers {
+        let mut per_node: Vec<(VecDeque<RowBlock>, Option<StreamItem>)> = Vec::new();
+        for id in shard_map.range(rank as u32) {
+            let blocks = RowBlock::carve(id, plan.shard(id), cfg.stream_block_rows);
+            if let Some(big) = blocks.iter().find(|b| b.payload_bytes() > budget) {
+                bail!(
+                    "a {}-row block of node {id}'s shard is {} bytes — larger than the \
+                     {budget}-byte staging budget; lower --stream-block-rows or raise \
+                     --staging-mb",
+                    big.rows(),
+                    big.payload_bytes()
+                );
+            }
+            let complete = StreamItem::Complete {
+                node: id as u32,
+                block_count: blocks.len() as u32,
+                total_rows: plan.shard(id).len() as u64,
+                checksum: fold_payloads(&blocks),
+            };
+            per_node.push((blocks.into_iter().collect(), Some(complete)));
+        }
+        let mut q = VecDeque::new();
+        loop {
+            let mut any = false;
+            for (blocks, complete) in per_node.iter_mut() {
+                if let Some(b) = blocks.pop_front() {
+                    any = true;
+                    q.push_back(StreamItem::Block(b));
+                }
+                if blocks.is_empty() {
+                    if let Some(c) = complete.take() {
+                        any = true;
+                        q.push_back(c);
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        queues.push(q);
+    }
     let peers: Vec<String> = (0..cfg.workers)
         .map(|_| reserve_port().map(|p| format!("127.0.0.1:{p}")))
         .collect::<Result<_>>()?;
@@ -625,6 +942,8 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 "wire",
                 "--param-len",
                 &param_len.to_string(),
+                "--staging-mb",
+                &cfg.staging_mb.to_string(),
                 "--seed",
                 &cfg.seed.to_string(),
             ])
@@ -667,24 +986,34 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         conns.push(conn);
     }
 
-    // Ship each rank its owned block of the plan — chunked by the wire
-    // layer wherever a shard outgrows a frame. The write timeout is
-    // generous here: whole shard blocks cross the socket, and a worker
-    // still inside peer rendezvous drains them a few seconds later.
-    // PlanStart carries the fold of every shipped assignment's
-    // checksum; the worker refuses to start unless its own fold over
-    // what arrived matches (bit-for-bit delivery, certified).
+    // Ship each rank its plan *metadata*: one empty-shard `PlanAssign`
+    // per owned node (objective + shape, no rows) and a streaming
+    // `PlanStart`. The worker binds its engine on PlanStart and starts
+    // stepping as blocks land. PlanStart still carries the fold of
+    // every shipped assignment's checksum; the worker refuses to start
+    // unless its own fold over what arrived matches (bit-for-bit
+    // metadata delivery, certified — each block and stream then
+    // carries its own checksum on top).
     for (rank, conn_slot) in conns.iter_mut().enumerate() {
         let conn = conn_slot.as_mut().expect("all connected above");
         conn.set_write_timeout(Duration::from_secs(60));
         let block = shard_map.range(rank as u32);
         let mut shipped_sum = wire::Fnv64::new();
-        // Keep the concrete WireError: an encode-side refusal (a shard
-        // past the 1 GiB logical-message cap) must read as what it is,
-        // not as a dropped connection.
+        // Keep the concrete WireError: an encode-side refusal must
+        // read as what it is, not as a dropped connection.
         let mut shipped: Result<(), wire::WireError> = Ok(());
         for id in block.clone() {
-            let msg = plan_assign_msg(id, plan.node(id));
+            let shard = plan.shard(id);
+            let (obj_code, lam) = objective_code(plan.objective(id));
+            let msg = WireMsg::PlanAssign {
+                node: id as u32,
+                obj_code,
+                lam,
+                dim: shard.dim() as u32,
+                classes: shard.classes() as u32,
+                labels: Vec::new(),
+                features: Vec::new(),
+            };
             // message_checksum re-encodes the body write_msg encodes
             // again (and the worker re-encodes once to verify). That
             // extra pass is deliberate: both ends hash one canonical
@@ -708,13 +1037,115 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 assigned: block.len() as u32,
                 mixed: plan.is_mixed(),
                 checksum: shipped_sum.finish(),
+                streaming: true,
             });
         }
-        conn.set_write_timeout(Duration::from_secs(1));
         if let Err(e) = shipped {
             kill_all(&mut children);
             bail!("shipping the plan to worker {rank} failed: {e}");
         }
+    }
+
+    // Pump the block streams, credit-gated per rank. Each window opens
+    // at the worker's whole staging budget, narrows by every block's
+    // payload, and reopens as `ShardCredit` frames return — so a
+    // worker's staged-but-unconsumed payload provably never exceeds
+    // `--staging-mb`, no matter how large its shard is. Ranks are
+    // round-robined so every worker streams (and steps) concurrently;
+    // a rank that dies mid-stream is dropped here and struck out by
+    // the monitor loop below, exactly like a mid-run death.
+    let mut credit: Vec<u64> = vec![budget; cfg.workers];
+    let pump_deadline = Instant::now() + Duration::from_secs_f64(cfg.secs_cap.max(1.0));
+    while queues.iter().any(|q| !q.is_empty()) {
+        let mut progressed = false;
+        for rank in 0..cfg.workers {
+            if queues[rank].is_empty() {
+                continue;
+            }
+            if conns[rank].is_none() {
+                queues[rank].clear();
+                continue;
+            }
+            let mut conn_ok = true;
+            {
+                let conn = conns[rank].as_mut().expect("checked above");
+                // Only touch the socket when the window is too narrow
+                // for the next block — credit frames arrive in bursts
+                // and each read may block for the socket timeout.
+                let need_credit = match queues[rank].front() {
+                    Some(StreamItem::Block(b)) => b.payload_bytes() > credit[rank],
+                    _ => false,
+                };
+                if need_credit {
+                    loop {
+                        match conn.read_msg(Instant::now() + Duration::from_millis(5)) {
+                            Ok(Some(WireMsg::ShardCredit { bytes })) => {
+                                credit[rank] = credit[rank].saturating_add(bytes);
+                            }
+                            Ok(Some(_)) => {} // stale frames are meaningless here
+                            Ok(None) => break,
+                            Err(_) => {
+                                conn_ok = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                while conn_ok {
+                    let cost = match queues[rank].front() {
+                        Some(StreamItem::Block(b)) => b.payload_bytes(),
+                        Some(StreamItem::Complete { .. }) => 0,
+                        None => break,
+                    };
+                    if cost > credit[rank] {
+                        break;
+                    }
+                    let msg = match queues[rank].pop_front().expect("front checked") {
+                        StreamItem::Block(b) => {
+                            credit[rank] -= cost;
+                            block_msg(b)
+                        }
+                        StreamItem::Complete {
+                            node,
+                            block_count,
+                            total_rows,
+                            checksum,
+                        } => WireMsg::ShardComplete {
+                            node,
+                            block_count,
+                            total_rows,
+                            checksum,
+                        },
+                    };
+                    if conn.write_msg(&msg).is_err() {
+                        conn_ok = false;
+                        break;
+                    }
+                    progressed = true;
+                }
+            }
+            if !conn_ok {
+                conns[rank] = None;
+                queues[rank].clear();
+            }
+        }
+        if conns.iter().flatten().count() == 0 {
+            kill_all(&mut children);
+            bail!("every worker died while its shard was still streaming");
+        }
+        if !progressed {
+            if Instant::now() >= pump_deadline {
+                kill_all(&mut children);
+                bail!(
+                    "shard streaming stalled: no worker returned credit before the \
+                     wall-clock cap"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    for conn in conns.iter_mut().flatten() {
+        conn.set_write_timeout(Duration::from_secs(1));
     }
 
     // The monitor's evaluation set came from the plan build; mixed
@@ -732,6 +1163,8 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     // the aggregate monotonic when a worker misses a round (or dies —
     // its applied updates still happened).
     let mut last_known = vec![[0u64; 4]; cfg.workers];
+    let mut max_staging_bytes = 0u64;
+    let mut stepped_before_stream_complete = false;
     let (counts, reached_horizon) = loop {
         let now = sw.elapsed_secs();
         // Collect every live worker's shard: one logical SnapshotReply
@@ -753,6 +1186,9 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                         Ok(Some(WireMsg::SnapshotReply {
                             counts,
                             params: shard,
+                            staging_bytes,
+                            stream_done,
+                            updates_at_stream_complete,
                             ..
                         })) => {
                             // A reply must cover exactly the rank's
@@ -762,7 +1198,13 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                             if shard.len() == expected
                                 && shard.iter().all(|(id, _)| block.contains(&(*id as usize)))
                             {
-                                reply = Some((counts, shard));
+                                reply = Some((
+                                    counts,
+                                    shard,
+                                    staging_bytes,
+                                    stream_done,
+                                    updates_at_stream_complete,
+                                ));
                                 break true;
                             }
                         }
@@ -771,9 +1213,13 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     }
                 }
             };
-            if let (true, Some((counts, shard))) = (ok, reply) {
+            if let (true, Some((counts, shard, staging, done, upd_at_complete))) = (ok, reply) {
                 strikes[rank] = 0;
                 last_known[rank] = counts;
+                max_staging_bytes = max_staging_bytes.max(staging);
+                if done && upd_at_complete != u64::MAX && upd_at_complete > 0 {
+                    stepped_before_stream_complete = true;
+                }
                 params.extend(shard);
             } else {
                 strikes[rank] += 1;
@@ -834,6 +1280,8 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         live_workers: conns.iter().flatten().count(),
         elapsed_secs: sw.elapsed_secs(),
         reached_horizon,
+        max_staging_bytes,
+        stepped_before_stream_complete,
     })
 }
 
@@ -863,6 +1311,7 @@ mod tests {
             plan: WorkerPlanSource::Local(PlanSpec::Synth),
             samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
+            staging_mb: 1024,
         };
         assert!(run_worker(&base).is_err(), "empty peers must fail");
         let mut bad_rank = base.clone();

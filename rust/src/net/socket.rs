@@ -97,6 +97,11 @@ pub struct SocketConfig {
     pub liveness: Duration,
     /// Redial cadence for a dead link (dialer side only).
     pub reconnect: Duration,
+    /// Per-peer-connection chunk-staging cap in bytes (`--staging-mb`):
+    /// a chunked logical message announcing more than this is refused
+    /// before any payload is buffered. Defaults to the codec's absolute
+    /// 1 GiB cap, so nothing changes unless the flag tightens it.
+    pub staging_limit: usize,
 }
 
 impl Default for SocketConfig {
@@ -107,6 +112,7 @@ impl Default for SocketConfig {
             heartbeat: Duration::from_millis(200),
             liveness: Duration::from_millis(1000),
             reconnect: Duration::from_millis(200),
+            staging_limit: wire::MAX_MESSAGE_LEN,
         }
     }
 }
@@ -494,7 +500,7 @@ fn dial_loop(inner: Arc<Inner>, rank: u32) {
 /// the chunk stream is violated (the link is then marked dead;
 /// reconnect is the dialer's job).
 fn reader_loop(inner: Arc<Inner>, rank: u32, mut stream: TcpStream) {
-    let mut asm = wire::ChunkAssembler::new();
+    let mut asm = wire::ChunkAssembler::with_limit(inner.cfg.staging_limit);
     loop {
         if inner.stop.load(Ordering::SeqCst) {
             return;
@@ -606,6 +612,9 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
         | WireMsg::Shutdown
         | WireMsg::PlanAssign { .. }
         | WireMsg::PlanStart { .. }
+        | WireMsg::ShardBlock { .. }
+        | WireMsg::ShardComplete { .. }
+        | WireMsg::ShardCredit { .. }
         | WireMsg::ChunkBegin { .. }
         | WireMsg::ChunkData { .. }
         | WireMsg::ChunkEnd { .. } => {}

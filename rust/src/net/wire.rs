@@ -12,9 +12,12 @@
 //! plane (`Hello` / `Heartbeat` / `SnapshotRequest` / `SnapshotReply` /
 //! `Shutdown`), the workload-plan shipping frames (`PlanAssign` /
 //! `PlanStart` — real data shards travel to workers, see
-//! docs/heterogeneity.md), and the chunk envelope (`ChunkBegin` /
-//! `ChunkData` / `ChunkEnd`). All integers are little-endian; `f32`
-//! vectors are raw LE bit patterns (NaN-safe round trips).
+//! docs/heterogeneity.md), the streaming data plane (`ShardBlock` /
+//! `ShardComplete` / `ShardCredit` — row blocks of a shard ship
+//! incrementally under backpressure credits, see docs/data.md), and the
+//! chunk envelope (`ChunkBegin` / `ChunkData` / `ChunkEnd`). All
+//! integers are little-endian; `f32` vectors are raw LE bit patterns
+//! (NaN-safe round trips).
 //!
 //! # Logical messages vs frames
 //!
@@ -51,7 +54,12 @@ use std::io::{Read, Write};
 /// v3 added the chunk envelope ([`ChunkBegin`](WireMsg::ChunkBegin) /
 /// [`ChunkData`](WireMsg::ChunkData) / [`ChunkEnd`](WireMsg::ChunkEnd))
 /// and the plan-integrity checksum on `PlanStart`.
-pub const WIRE_VERSION: u8 = 3;
+/// v4 added the streaming data plane
+/// ([`ShardBlock`](WireMsg::ShardBlock) /
+/// [`ShardComplete`](WireMsg::ShardComplete) /
+/// [`ShardCredit`](WireMsg::ShardCredit)), the `streaming` flag on
+/// `PlanStart`, and the stream-status fields on `SnapshotReply`.
+pub const WIRE_VERSION: u8 = 4;
 
 /// Upper bound on one frame's payload (version + tag + body). Small
 /// enough that a garbage length prefix cannot balloon memory; logical
@@ -118,6 +126,20 @@ pub enum WireMsg {
         rank: u32,
         counts: [u64; 4],
         params: Vec<(u32, Vec<f32>)>,
+        /// High-water mark of bytes staged in the worker's streaming
+        /// [`BlockBuffer`](crate::data::stream::BlockBuffer) — the peak,
+        /// not the instantaneous level, so the monitor's max over all
+        /// replies is the run's true staging peak (0 when the plan was
+        /// not streamed).
+        staging_bytes: u64,
+        /// Every owned node's shard stream has completed (trivially true
+        /// for non-streamed plans).
+        stream_done: bool,
+        /// The worker's applied-update count at the moment its last
+        /// owned [`ShardComplete`](WireMsg::ShardComplete) validated —
+        /// lets the monitor assert race-free that stepping started
+        /// before the data finished arriving (`u64::MAX` until then).
+        updates_at_stream_complete: u64,
     },
     /// Monitor → worker: stop node threads and exit cleanly.
     Shutdown,
@@ -150,7 +172,46 @@ pub enum WireMsg {
         assigned: u32,
         mixed: bool,
         checksum: u64,
+        /// When true the shipped `PlanAssign` frames carried metadata
+        /// only (empty shards): the data itself follows as
+        /// [`ShardBlock`](WireMsg::ShardBlock) streams and workers may
+        /// start stepping as soon as their first block lands.
+        streaming: bool,
     },
+    /// Monitor → worker: one row block of node `node`'s shard, shipped
+    /// in `seq` order (0-based, in-order per node; blocks of different
+    /// nodes may interleave). Self-describing: `encoding` (currently
+    /// only [`crate::data::stream::ENCODING_DENSE_F32`]), `rows`
+    /// labeled rows of `dim` features each, and a per-block `checksum`
+    /// ([`fnv1a64`] over the labels' LE bytes followed by the features'
+    /// LE bytes) validated before any row is staged.
+    ShardBlock {
+        node: u32,
+        seq: u32,
+        encoding: u8,
+        rows: u32,
+        dim: u32,
+        classes: u32,
+        labels: Vec<u32>,
+        features: Vec<f32>,
+        checksum: u64,
+    },
+    /// Monitor → worker: node `node`'s stream is complete —
+    /// `block_count` blocks totalling `total_rows` rows shipped, and
+    /// `checksum` is the [`Fnv64`] fold over every block's payload
+    /// bytes in `seq` order. The worker refuses the stream on any
+    /// mismatch, so a completed stream certifies the reassembled shard
+    /// bit-identical to the plan's.
+    ShardComplete {
+        node: u32,
+        block_count: u32,
+        total_rows: u64,
+        checksum: u64,
+    },
+    /// Worker → monitor: backpressure credit — `bytes` of staged block
+    /// payload were consumed by node threads, so the sender's flow
+    /// window reopens by that much.
+    ShardCredit { bytes: u64 },
     /// Chunk envelope: the next `chunk_count` [`ChunkData`] frames
     /// carry `total_bytes` bytes of one encoded logical message body.
     ChunkBegin { total_bytes: u64, chunk_count: u32 },
@@ -179,6 +240,9 @@ impl WireMsg {
             WireMsg::ChunkBegin { .. } => 12,
             WireMsg::ChunkData { .. } => 13,
             WireMsg::ChunkEnd { .. } => 14,
+            WireMsg::ShardBlock { .. } => 15,
+            WireMsg::ShardComplete { .. } => 16,
+            WireMsg::ShardCredit { .. } => 17,
         }
     }
 
@@ -214,6 +278,9 @@ pub enum WireError {
     /// message, counts/bytes that disagree with the announcement, or a
     /// checksum mismatch.
     Chunk { reason: &'static str },
+    /// A chunked message announced more bytes than this connection's
+    /// configured staging budget allows.
+    Staging { len: usize, limit: usize },
 }
 
 impl std::fmt::Display for WireError {
@@ -225,7 +292,8 @@ impl std::fmt::Display for WireError {
                 write!(
                     f,
                     "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
-                     upgrade the older end (pre-v3 peers cannot speak the chunked protocol)"
+                     upgrade the older end (pre-v4 peers cannot speak the streaming \
+                     data plane)"
                 )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
@@ -240,6 +308,14 @@ impl std::fmt::Display for WireError {
                 write!(f, "{extra} trailing bytes after the last field")
             }
             WireError::Chunk { reason } => write!(f, "chunk stream violation: {reason}"),
+            WireError::Staging { len, limit } => {
+                write!(
+                    f,
+                    "a {len}-byte logical message exceeds this connection's {limit}-byte \
+                     chunk-staging budget — raise --staging-mb (or stream the payload in \
+                     smaller blocks)"
+                )
+            }
         }
     }
 }
@@ -381,6 +457,9 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             rank,
             counts,
             params,
+            staging_bytes,
+            stream_done,
+            updates_at_stream_complete,
         } => {
             put_u32(&mut body, *rank);
             for &c in counts {
@@ -391,6 +470,9 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
                 put_u32(&mut body, *node);
                 put_f32s(&mut body, w)?;
             }
+            put_u64(&mut body, *staging_bytes);
+            body.push(u8::from(*stream_done));
+            put_u64(&mut body, *updates_at_stream_complete);
         }
         WireMsg::PlanAssign {
             node,
@@ -414,12 +496,47 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             assigned,
             mixed,
             checksum,
+            streaming,
         } => {
             put_u32(&mut body, *nodes);
             put_u32(&mut body, *assigned);
             body.push(u8::from(*mixed));
             put_u64(&mut body, *checksum);
+            body.push(u8::from(*streaming));
         }
+        WireMsg::ShardBlock {
+            node,
+            seq,
+            encoding,
+            rows,
+            dim,
+            classes,
+            labels,
+            features,
+            checksum,
+        } => {
+            put_u32(&mut body, *node);
+            put_u32(&mut body, *seq);
+            body.push(*encoding);
+            put_u32(&mut body, *rows);
+            put_u32(&mut body, *dim);
+            put_u32(&mut body, *classes);
+            put_u32s(&mut body, labels)?;
+            put_f32s(&mut body, features)?;
+            put_u64(&mut body, *checksum);
+        }
+        WireMsg::ShardComplete {
+            node,
+            block_count,
+            total_rows,
+            checksum,
+        } => {
+            put_u32(&mut body, *node);
+            put_u32(&mut body, *block_count);
+            put_u64(&mut body, *total_rows);
+            put_u64(&mut body, *checksum);
+        }
+        WireMsg::ShardCredit { bytes } => put_u64(&mut body, *bytes),
         WireMsg::ChunkBegin {
             total_bytes,
             chunk_count,
@@ -660,6 +777,9 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
                 rank,
                 counts,
                 params,
+                staging_bytes: c.u64()?,
+                stream_done: c.u8()? != 0,
+                updates_at_stream_complete: c.u64()?,
             }
         }
         9 => WireMsg::Shutdown,
@@ -677,6 +797,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             assigned: c.u32()?,
             mixed: c.u8()? != 0,
             checksum: c.u64()?,
+            streaming: c.u8()? != 0,
         },
         12 => WireMsg::ChunkBegin {
             total_bytes: c.u64()?,
@@ -686,6 +807,24 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             bytes: c.bytes()?.to_vec(),
         },
         14 => WireMsg::ChunkEnd { checksum: c.u64()? },
+        15 => WireMsg::ShardBlock {
+            node: c.u32()?,
+            seq: c.u32()?,
+            encoding: c.u8()?,
+            rows: c.u32()?,
+            dim: c.u32()?,
+            classes: c.u32()?,
+            labels: c.u32s()?,
+            features: c.f32s()?,
+            checksum: c.u64()?,
+        },
+        16 => WireMsg::ShardComplete {
+            node: c.u32()?,
+            block_count: c.u32()?,
+            total_rows: c.u64()?,
+            checksum: c.u64()?,
+        },
+        17 => WireMsg::ShardCredit { bytes: c.u64()? },
         got => return Err(WireError::UnknownTag { got }),
     };
     c.done()?;
@@ -733,17 +872,36 @@ struct Staging {
 /// frame correctly), which is exactly what every SocketNet read path
 /// does with a wire error.
 ///
-/// Memory is bounded: at most [`MAX_MESSAGE_LEN`] staged bytes per
-/// assembler, allocated only as real bytes arrive (a hostile
-/// `ChunkBegin` announcing a huge total reserves nothing).
-#[derive(Default)]
+/// Memory is bounded: at most `limit` staged bytes per assembler
+/// ([`MAX_MESSAGE_LEN`] by default, [`ChunkAssembler::with_limit`] to
+/// tighten — the `--staging-mb` flag does), allocated only as real
+/// bytes arrive (a hostile `ChunkBegin` announcing a huge total
+/// reserves nothing).
 pub struct ChunkAssembler {
     staging: Option<Staging>,
+    limit: usize,
+}
+
+impl Default for ChunkAssembler {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ChunkAssembler {
     pub fn new() -> Self {
-        Self { staging: None }
+        Self::with_limit(MAX_MESSAGE_LEN)
+    }
+
+    /// An assembler whose staging budget is `limit` bytes (capped at
+    /// [`MAX_MESSAGE_LEN`]) instead of the hard-coded 1 GiB: a
+    /// `ChunkBegin` announcing more refuses with
+    /// [`WireError::Staging`], whose message names `--staging-mb`.
+    pub fn with_limit(limit: usize) -> Self {
+        Self {
+            staging: None,
+            limit: limit.min(MAX_MESSAGE_LEN),
+        }
     }
 
     /// Is a chunked message currently mid-reassembly? (A stream that
@@ -770,6 +928,12 @@ impl ChunkAssembler {
                     .ok_or_else(|| WireError::Oversize {
                         len: total_bytes.min(usize::MAX as u64) as usize,
                     })?;
+                if total > self.limit {
+                    return Err(WireError::Staging {
+                        len: total,
+                        limit: self.limit,
+                    });
+                }
                 if chunk_count == 0 || chunk_count as usize != total.div_ceil(CHUNK_PAYLOAD) {
                     return Err(chunk_err("chunk count disagrees with the announced total"));
                 }
@@ -933,6 +1097,17 @@ mod tests {
             rank: 1,
             counts: [10, 20, 30, 40],
             params: vec![(4, vec![1.5, 2.5]), (5, vec![])],
+            staging_bytes: 4096,
+            stream_done: true,
+            updates_at_stream_complete: 17,
+        });
+        roundtrip(WireMsg::SnapshotReply {
+            rank: 0,
+            counts: [0; 4],
+            params: vec![],
+            staging_bytes: 0,
+            stream_done: false,
+            updates_at_stream_complete: u64::MAX,
         });
         roundtrip(WireMsg::Shutdown);
         roundtrip(WireMsg::PlanAssign {
@@ -958,13 +1133,44 @@ mod tests {
             assigned: 4,
             mixed: true,
             checksum: 0xDEAD_BEEF_u64,
+            streaming: true,
         });
         roundtrip(WireMsg::PlanStart {
             nodes: 2,
             assigned: 1,
             mixed: false,
             checksum: 0,
+            streaming: false,
         });
+        roundtrip(WireMsg::ShardBlock {
+            node: 3,
+            seq: 2,
+            encoding: 0,
+            rows: 3,
+            dim: 2,
+            classes: 4,
+            labels: vec![0, 3, 1],
+            features: vec![0.5, -1.0, 2.0, 0.0, 3.5, f32::MIN],
+            checksum: 0x1234_5678_9ABC_DEF0,
+        });
+        roundtrip(WireMsg::ShardBlock {
+            node: 0,
+            seq: 0,
+            encoding: 0,
+            rows: 0,
+            dim: 50,
+            classes: 10,
+            labels: vec![],
+            features: vec![],
+            checksum: 0,
+        });
+        roundtrip(WireMsg::ShardComplete {
+            node: 7,
+            block_count: 12,
+            total_rows: 48_000,
+            checksum: u64::MAX,
+        });
+        roundtrip(WireMsg::ShardCredit { bytes: 1 << 20 });
         roundtrip(WireMsg::ChunkBegin {
             total_bytes: 123_456_789,
             chunk_count: 30,
@@ -1225,6 +1431,20 @@ mod tests {
             Err(WireError::Oversize { .. })
         ));
 
+        // A tightened staging budget refuses within the cap too, and
+        // the error names the flag that raises it.
+        let mut asm = ChunkAssembler::with_limit(1 << 20);
+        match asm.accept(WireMsg::ChunkBegin {
+            total_bytes: (1 << 20) + 1,
+            chunk_count: 1,
+        }) {
+            Err(e @ WireError::Staging { .. }) => {
+                assert!(e.to_string().contains("--staging-mb"), "{e}");
+            }
+            other => panic!("expected a staging error, got {other:?}"),
+        }
+        assert!(!asm.in_progress());
+
         // An envelope whose inner message is itself a chunk frame.
         let end_frame = encode(&WireMsg::ChunkEnd { checksum: 0 }).unwrap();
         let inner = end_frame[4..].to_vec();
@@ -1269,6 +1489,9 @@ mod tests {
             rank: 0,
             counts: [1, 2, 3, 4],
             params: (0..12u32).map(|i| (i, vec![i as f32; 400_000])).collect(),
+            staging_bytes: 0,
+            stream_done: true,
+            updates_at_stream_complete: 500,
         };
         for msg in [small, big] {
             let mut buf = Vec::new();

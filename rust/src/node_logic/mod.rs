@@ -36,6 +36,7 @@
 //! * **gradient steps** are purely local and cost nothing.
 
 use crate::coordinator::backend::EvalBatch;
+use crate::data::stream::ShardReceiver;
 use crate::data::Dataset;
 use crate::metrics::Record;
 use crate::objective::Objective;
@@ -109,6 +110,10 @@ pub struct NodeLogic {
     /// The node's private randomness (firing clock, action draw,
     /// sample selection).
     pub rng: Xoshiro256pp,
+    /// Streaming-plan feed: rows drain from here into `data` as their
+    /// blocks land ([`NodeLogic::has_data`]). `None` for fully-shipped
+    /// shards — the historical path, bit-for-bit unchanged.
+    feed: Option<ShardReceiver>,
 }
 
 impl NodeLogic {
@@ -133,7 +138,67 @@ impl NodeLogic {
             classes,
             scale: 1.0 / n_nodes as f32,
             rng,
+            feed: None,
         }
+    }
+
+    /// A node whose shard arrives incrementally as a block stream: it
+    /// starts with no local rows and steps as soon as the first block
+    /// lands (see [`NodeLogic::has_data`]). `dim`/`classes` come from
+    /// the plan metadata so the parameter vector binds before any data
+    /// exists.
+    #[allow(clippy::too_many_arguments)]
+    pub fn streaming(
+        id: usize,
+        objective: Objective,
+        p_grad: f64,
+        feed: ShardReceiver,
+        dim: usize,
+        classes: usize,
+        n_nodes: usize,
+        rng: Xoshiro256pp,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&p_grad));
+        assert!(dim > 0 && classes > 0, "node {id} has a degenerate shape");
+        Self {
+            id,
+            objective,
+            p_grad,
+            data: Dataset::new(dim, classes),
+            dim,
+            classes,
+            scale: 1.0 / n_nodes as f32,
+            rng,
+            feed: Some(feed),
+        }
+    }
+
+    /// Ensure local rows exist to sample from, draining any staged
+    /// stream blocks first (bounded wait while the first block is still
+    /// in flight). Consumes no RNG, so fixed-plan runs are bit-for-bit
+    /// unaffected. A `false` return means the node cannot take a
+    /// gradient step *yet* — callers skip the step and redraw, exactly
+    /// like a busy neighborhood.
+    pub fn has_data(&mut self) -> bool {
+        let mut retire = false;
+        if let Some(feed) = &self.feed {
+            feed.drain_into(&mut self.data);
+            if self.data.is_empty() {
+                feed.wait_for_block(std::time::Duration::from_millis(50));
+                feed.drain_into(&mut self.data);
+            }
+            if feed.is_complete() {
+                // Final drain below the completion mark is exhaustive:
+                // every block was pushed before the stream completed.
+                feed.drain_into(&mut self.data);
+                retire = true;
+            }
+        }
+        if retire {
+            // Steady-state sampling pays no lock after the stream ends.
+            self.feed = None;
+        }
+        !self.data.is_empty()
     }
 
     pub fn objective(&self) -> Objective {
@@ -432,6 +497,42 @@ mod tests {
         let loss = logic.native_grad_step(&mut w, 1.0);
         assert!(loss > 0.0);
         assert!(w.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn streaming_node_steps_as_blocks_land() {
+        use crate::data::stream::{BlockBuffer, RowBlock};
+        let data = shard(5);
+        let blocks = RowBlock::carve(0, &data, 16);
+        let buf = BlockBuffer::new(1, u64::MAX);
+        let mut logic = NodeLogic::streaming(
+            0,
+            Objective::LogReg,
+            0.5,
+            buf.receiver(0),
+            data.dim(),
+            data.classes(),
+            4,
+            Xoshiro256pp::seeded(2),
+        );
+        assert!(!logic.has_data(), "no block has landed yet");
+        // The first block lands → the node can step immediately, long
+        // before the stream completes.
+        buf.push(blocks[0].clone()).unwrap();
+        assert!(logic.has_data());
+        let mut w = vec![0.0f32; logic.param_len()];
+        let loss = logic.native_grad_step(&mut w, 1.0);
+        assert!(loss > 0.0);
+        assert!(w.iter().any(|&v| v != 0.0));
+        // The rest of the stream drains into the same shard.
+        for b in &blocks[1..] {
+            buf.push(b.clone()).unwrap();
+        }
+        buf.mark_complete(0);
+        assert!(logic.has_data());
+        assert_eq!(logic.data().len(), data.len());
+        assert_eq!(logic.data().labels(), data.labels());
+        assert_eq!(logic.data().features_flat(), data.features_flat());
     }
 
     #[test]

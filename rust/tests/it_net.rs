@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dasgd::coordinator::{consensus, spawn_shard, AsyncCluster, AsyncConfig};
+use dasgd::data::stream::{RowBlock, DEFAULT_BLOCK_ROWS};
 use dasgd::experiments::{make_regular, synth_world};
 use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
 use dasgd::net::{
@@ -254,6 +255,79 @@ fn launch_ships_quantity_skewed_shards_past_the_frame_cap() {
     assert_eq!(rep.live_workers, 2, "both workers must stay live");
     assert!(rep.reached_horizon, "giant-shard deployment stalled");
     assert!(rep.counts.updates() >= 300);
+    let last = rep.recorder.last().expect("monitor recorded snapshots");
+    assert!(last.consensus.is_finite());
+    assert!(last.test_err.is_finite());
+}
+
+#[test]
+fn streaming_keeps_staging_bounded_and_steps_before_the_shard_completes() {
+    // The streaming data-plane acceptance run: a worker whose total
+    // shard bytes provably exceed its --staging-mb budget must still
+    // reach the horizon, with its BlockBuffer high-water mark bounded
+    // by the budget and its first update applied before the last
+    // ShardComplete landed. Reaching the horizon also certifies
+    // bit-identity: every block is checksummed, every stream's fold is
+    // checked against the plan-side ShardComplete digest, and a worker
+    // that sees any mismatch refuses the stream and dies.
+    const SAMPLES: usize = 8_000;
+    const STAGING_MB: usize = 4;
+    let budget = (STAGING_MB as u64) << 20;
+    let spec = PlanSpec::Synth;
+    let (plan, _) = spec.build(Objective::LogReg, NODES, SAMPLES, 16, SEED);
+    // Worker 0 owns nodes 0..NODES/2; sum its streamed payload exactly
+    // the way the launcher carves it.
+    let owned = 0..NODES / 2;
+    let worker_bytes: u64 = owned
+        .clone()
+        .map(|i| {
+            RowBlock::carve(i, plan.shard(i), DEFAULT_BLOCK_ROWS)
+                .iter()
+                .map(|b| b.payload_bytes())
+                .sum::<u64>()
+        })
+        .sum();
+    assert!(
+        worker_bytes > budget,
+        "worker 0's shard ({worker_bytes} B) must exceed the {budget} B \
+         staging budget for this test to bite"
+    );
+    // Every individual block still fits the budget, so the pump can
+    // always make progress.
+    for i in owned {
+        for b in RowBlock::carve(i, plan.shard(i), DEFAULT_BLOCK_ROWS) {
+            assert!(b.payload_bytes() <= budget, "block larger than the budget");
+        }
+    }
+
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        plan: spec,
+        samples_per_node: SAMPLES,
+        staging_mb: STAGING_MB,
+        horizon_updates: 400,
+        secs_cap: 60.0,
+        seed: SEED,
+        ..LaunchConfig::quick(2, NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("streaming launch failed");
+    assert_eq!(rep.live_workers, 2, "both workers must stay live");
+    assert!(rep.reached_horizon, "streaming deployment stalled");
+    assert!(rep.counts.updates() >= 400);
+    assert!(
+        rep.max_staging_bytes > 0,
+        "monitor never observed a staging high-water mark"
+    );
+    assert!(
+        rep.max_staging_bytes <= budget,
+        "staging peaked at {} B — past the {budget} B budget",
+        rep.max_staging_bytes
+    );
+    assert!(
+        rep.stepped_before_stream_complete,
+        "no worker applied an update before its shard streams completed — \
+         the data plane is not actually incremental"
+    );
     let last = rep.recorder.last().expect("monitor recorded snapshots");
     assert!(last.consensus.is_finite());
     assert!(last.test_err.is_finite());

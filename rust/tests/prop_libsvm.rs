@@ -1,0 +1,332 @@
+//! Property tests for the streaming data plane's ingest side: the
+//! libsvm parser is *total* (malformed, truncated, NaN-laden, or
+//! duplicate-index text errors with a line number, never a panic),
+//! well-formed text round-trips bit-for-bit through the dense
+//! [`Dataset`], every partitioner covers a parsed corpus exactly once,
+//! and a `ShardBlock` stream survives fault injection — interleaving
+//! across nodes is legal, while drops, duplicates, reorders, and
+//! corruption are refused totally.
+
+use dasgd::data::parse_libsvm;
+use dasgd::data::stream::{
+    fold_payloads, payload_checksum, shard_checksum, RowBlock, StreamProgress,
+};
+use dasgd::data::Dataset;
+use dasgd::objective::Objective;
+use dasgd::util::proptest::{check, Gen};
+use dasgd::workload::PlanSpec;
+
+/// One well-formed libsvm line: an integral label plus strictly
+/// ascending sparse pairs. Values go through `{}` formatting, which for
+/// f32 is shortest-round-trip — the parse must recover the exact bits.
+fn arb_line(g: &mut Gen, dim: usize, out_rows: &mut Vec<(i64, Vec<(usize, f32)>)>) -> String {
+    let label = g.usize_in(0, 6) as i64 - 3;
+    let mut pairs: Vec<(usize, f32)> = Vec::new();
+    let mut idx = 0usize;
+    loop {
+        idx += g.usize_in(1, 3);
+        if idx > dim || g.usize_in(0, 3) == 0 {
+            break;
+        }
+        pairs.push((idx, g.f32_vec(1, -100.0, 100.0)[0]));
+    }
+    let mut line = format!("{label}");
+    for (i, v) in &pairs {
+        line.push_str(&format!(" {i}:{v}"));
+    }
+    out_rows.push((label, pairs));
+    line
+}
+
+#[test]
+fn well_formed_text_round_trips_exactly() {
+    check("libsvm-roundtrip", 150, 0x11B5, |g| {
+        let dim = g.usize_in(2, 12);
+        let n = g.usize_in(1, g.size * 8 + 1);
+        let mut rows = Vec::new();
+        let mut text = String::from("# generated corpus\n");
+        for _ in 0..n {
+            text.push_str(&arb_line(g, dim, &mut rows));
+            text.push('\n');
+            if g.usize_in(0, 4) == 0 {
+                text.push('\n'); // blank lines are skipped
+            }
+        }
+        let d = parse_libsvm(&text, Some(dim)).map_err(|e| format!("valid text refused: {e}"))?;
+        if d.len() != rows.len() {
+            return Err(format!("{} rows in, {} out", rows.len(), d.len()));
+        }
+        if d.dim() != dim {
+            return Err(format!("dim {} ≠ expected {dim}", d.dim()));
+        }
+        // Labels remap by sorted distinct value.
+        let mut distinct: Vec<i64> = rows.iter().map(|(l, _)| *l).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        for (i, (raw, pairs)) in rows.iter().enumerate() {
+            let want = distinct.binary_search(raw).unwrap();
+            if d.labels()[i] != want {
+                return Err(format!("row {i}: label {} ≠ {want}", d.labels()[i]));
+            }
+            let mut dense = vec![0.0f32; dim];
+            for &(idx, v) in pairs {
+                dense[idx - 1] = v;
+            }
+            let got = d.sample(i).features;
+            let want_bits: Vec<u32> = dense.iter().map(|v| v.to_bits()).collect();
+            let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            if want_bits != got_bits {
+                return Err(format!("row {i}: feature bits changed crossing the text"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_text_errors_never_panics() {
+    check("libsvm-total", 300, 0xDEAF, |g| {
+        // Start from valid text, then bend it: truncate at an arbitrary
+        // byte, flip a byte, or splice in a hostile token. Any Result
+        // is acceptable; a panic is not.
+        let dim = g.usize_in(2, 8);
+        let mut rows = Vec::new();
+        let mut text = String::new();
+        for _ in 0..g.usize_in(1, 10) {
+            text.push_str(&arb_line(g, dim, &mut rows));
+            text.push('\n');
+        }
+        match g.usize_in(0, 3) {
+            0 => {
+                let mut cut = g.usize_in(0, text.len());
+                while !text.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                let _ = parse_libsvm(&text[..cut], None);
+            }
+            1 => {
+                let mut bytes = text.into_bytes();
+                let at = g.usize_in(0, bytes.len() - 1);
+                bytes[at] = g.usize_in(0, 255) as u8;
+                let bent = String::from_utf8_lossy(&bytes).into_owned();
+                let _ = parse_libsvm(&bent, None);
+            }
+            _ => {
+                let intruder = *g.choose(&[
+                    "nan 1:1",
+                    "1 1:nan",
+                    "1 1:inf",
+                    "1 0:3",
+                    "1 2:1 2:1",
+                    "1 5:1 3:1",
+                    "1 :",
+                    "1 a:b",
+                    "1e99 1:1",
+                    "1 1:1e999",
+                    "\u{0}",
+                ]);
+                text.push_str(intruder);
+                text.push('\n');
+                if parse_libsvm(&text, None).is_ok()
+                    && matches!(intruder, "nan 1:1" | "1 1:nan" | "1 0:3" | "1 2:1 2:1")
+                {
+                    return Err(format!("hostile line {intruder:?} accepted"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partitioners_cover_a_parsed_corpus_exactly_once() {
+    check("libsvm-partition-cover", 60, 0xC0FE, |g| {
+        // Row i carries the unique marker i+1 at feature 1, so shard
+        // membership is readable off the partitioned rows. Every
+        // marker must appear exactly once across all node shards.
+        let nodes = g.usize_in(2, 6);
+        let n = g.usize_in(nodes.max(4), 60);
+        let mut text = String::new();
+        for i in 0..n {
+            text.push_str(&format!("{} 1:{}\n", i % 3, i + 1));
+        }
+        let base = parse_libsvm(&text, Some(2)).map_err(|e| e.to_string())?;
+        let spec = *g.choose(&[
+            PlanSpec::Synth,
+            PlanSpec::Dirichlet { alpha: 0.3 },
+            PlanSpec::Quantity { alpha: 0.4 },
+            PlanSpec::Mixed { alpha: 0.5 },
+        ]);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let plan = spec.build_over(&base, Objective::LogReg, nodes, seed);
+        let mut seen: Vec<usize> = (0..nodes)
+            .flat_map(|i| {
+                let s = plan.shard(i);
+                (0..s.len())
+                    .map(|r| s.sample(r).features[0] as usize)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        seen.sort_unstable();
+        let want: Vec<usize> = (1..=n).collect();
+        if seen != want {
+            return Err(format!(
+                "{spec:?} over {n} rows / {nodes} nodes lost or duplicated rows \
+                 ({} recovered)",
+                seen.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// A small random dense dataset to carve into blocks.
+fn arb_dataset(g: &mut Gen) -> Dataset {
+    let dim = g.usize_in(1, 6);
+    let classes = g.usize_in(2, 5);
+    let rows = g.usize_in(1, g.size * 10 + 2);
+    let mut d = Dataset::with_capacity(dim, classes, rows);
+    for _ in 0..rows {
+        let row = g.f32_vec(dim, -10.0, 10.0);
+        let label = g.usize_in(0, classes - 1);
+        d.push(&row, label);
+    }
+    d
+}
+
+#[test]
+fn clean_block_streams_reassemble_and_certify() {
+    check("stream-clean", 120, 0xB10C, |g| {
+        let data = arb_dataset(g);
+        let block_rows = g.usize_in(1, data.len() + 2);
+        let blocks = RowBlock::carve(7, &data, block_rows);
+        // Per-block self-checks pass, and the whole-shard fold equals
+        // the shard's own checksum — the bit-identity certificate.
+        let mut progress = StreamProgress::default();
+        for b in &blocks {
+            b.validate(data.dim(), data.classes())
+                .map_err(|e| format!("carved block refused: {e}"))?;
+            progress.fold(b).map_err(|e| format!("in-order fold refused: {e}"))?;
+        }
+        progress
+            .verify_complete(blocks.len() as u32, data.len() as u64, fold_payloads(&blocks))
+            .map_err(|e| format!("clean completion refused: {e}"))?;
+        if progress.checksum() != shard_checksum(&data) {
+            return Err("stream fold ≠ shard checksum".into());
+        }
+        // Reassembly appends back to an identical dataset.
+        let mut rebuilt = Dataset::with_capacity(data.dim(), data.classes(), data.len());
+        for b in &blocks {
+            b.append_to(&mut rebuilt);
+        }
+        if rebuilt.labels() != data.labels() {
+            return Err("labels changed crossing the block carve".into());
+        }
+        let want: Vec<u32> = data.features_flat().iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u32> = rebuilt.features_flat().iter().map(|v| v.to_bits()).collect();
+        if want != got {
+            return Err("feature bits changed crossing the block carve".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn interleaved_node_streams_are_legal_but_faults_are_refused() {
+    check("stream-faults", 150, 0xFA57, |g| {
+        let data_a = arb_dataset(g);
+        let mut data_b = Dataset::with_capacity(data_a.dim(), data_a.classes(), 3);
+        for _ in 0..g.usize_in(1, 5) {
+            let row = g.f32_vec(data_a.dim(), -1.0, 1.0);
+            data_b.push(&row, g.usize_in(0, data_a.classes() - 1));
+        }
+        let rows_per = g.usize_in(1, 4);
+        let a = RowBlock::carve(0, &data_a, rows_per);
+        let b = RowBlock::carve(1, &data_b, rows_per);
+        // Interleave the two nodes' streams arbitrarily — per-node
+        // trackers must both complete (this is the wire's real shape:
+        // the launcher round-robins blocks across a rank's nodes).
+        let mut track = [StreamProgress::default(), StreamProgress::default()];
+        let (mut ia, mut ib) = (0, 0);
+        while ia < a.len() || ib < b.len() {
+            let take_a = ib >= b.len() || (ia < a.len() && g.bool());
+            let blk = if take_a { &a[ia] } else { &b[ib] };
+            track[blk.node].fold(blk).map_err(|e| format!("interleave refused: {e}"))?;
+            if take_a {
+                ia += 1;
+            } else {
+                ib += 1;
+            }
+        }
+        track[0]
+            .verify_complete(a.len() as u32, data_a.len() as u64, fold_payloads(&a))
+            .map_err(|e| format!("node 0 completion: {e}"))?;
+        track[1]
+            .verify_complete(b.len() as u32, data_b.len() as u64, fold_payloads(&b))
+            .map_err(|e| format!("node 1 completion: {e}"))?;
+
+        // Faults on node 0's stream: each must error, never panic.
+        if a.len() >= 2 {
+            // Dropped block → the gap is caught at the next fold.
+            let mut t = StreamProgress::default();
+            t.fold(&a[0]).map_err(|e| e.to_string())?;
+            if a.len() > 2 {
+                if t.fold(&a[2]).is_ok() {
+                    return Err("dropped block not caught".into());
+                }
+            } else if t
+                .verify_complete(a.len() as u32, data_a.len() as u64, fold_payloads(&a))
+                .is_ok()
+            {
+                return Err("short stream completion not caught".into());
+            }
+            // Duplicate → seq repeats.
+            let mut t = StreamProgress::default();
+            t.fold(&a[0]).map_err(|e| e.to_string())?;
+            if t.fold(&a[0]).is_ok() {
+                return Err("duplicate block not caught".into());
+            }
+            // Reorder → later seq first.
+            let mut t = StreamProgress::default();
+            if t.fold(&a[1]).is_ok() {
+                return Err("reordered block not caught".into());
+            }
+        }
+        // Corruption: flip one feature bit (or a label) — the per-block
+        // checksum catches it before any fold.
+        let mut bent = a[g.usize_in(0, a.len() - 1)].clone();
+        if bent.labels.is_empty() {
+            return Err("carve produced an empty block".into());
+        }
+        if g.bool() && !bent.features.is_empty() {
+            let at = g.usize_in(0, bent.features.len() - 1);
+            bent.features[at] = f32::from_bits(bent.features[at].to_bits() ^ 1);
+        } else {
+            let at = g.usize_in(0, bent.labels.len() - 1);
+            bent.labels[at] ^= 1;
+        }
+        if bent.validate(data_a.dim(), data_a.classes()).is_ok() {
+            return Err("corrupted block passed validation".into());
+        }
+        // Tampered totals: a wrong announced checksum is refused.
+        let mut t = StreamProgress::default();
+        for blk in &a {
+            t.fold(blk).map_err(|e| e.to_string())?;
+        }
+        if t.verify_complete(a.len() as u32, data_a.len() as u64, fold_payloads(&a) ^ 1)
+            .is_ok()
+        {
+            return Err("tampered shard checksum not caught".into());
+        }
+        // And the per-block checksum really is position-sensitive: two
+        // different payloads hash differently here (FNV-1a collision on
+        // these tiny inputs would be astonishing).
+        if a.len() >= 2 && payload_checksum(&a[0].labels, &a[0].features)
+            == payload_checksum(&a[1].labels, &a[1].features)
+            && (a[0].labels != a[1].labels || a[0].features != a[1].features)
+        {
+            return Err("distinct payloads collided".into());
+        }
+        Ok(())
+    });
+}

@@ -17,7 +17,7 @@ use dasgd::workload::{PlanSpec, WorkloadPlan};
 /// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
 fn arb_msg(g: &mut Gen) -> WireMsg {
     let w_len = g.usize_in(0, g.size * 64);
-    match g.usize_in(0, 14) {
+    match g.usize_in(0, 17) {
         0 => WireMsg::Hello {
             rank: g.usize_in(0, 1 << 20) as u32,
         },
@@ -69,6 +69,13 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
                         (i as u32, g.f32_vec(len, -100.0, 100.0))
                     })
                     .collect(),
+                staging_bytes: g.usize_in(0, 1 << 30) as u64,
+                stream_done: g.bool(),
+                updates_at_stream_complete: if g.bool() {
+                    u64::MAX
+                } else {
+                    g.usize_in(0, 1 << 30) as u64
+                },
             }
         }
         9 => WireMsg::Shutdown,
@@ -90,6 +97,7 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             assigned: g.usize_in(0, 100_000) as u32,
             mixed: g.bool(),
             checksum: g.usize_in(0, usize::MAX / 2) as u64,
+            streaming: g.bool(),
         },
         12 => WireMsg::ChunkBegin {
             total_bytes: g.usize_in(0, 1 << 28) as u64,
@@ -98,8 +106,32 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
         13 => WireMsg::ChunkData {
             bytes: (0..g.usize_in(0, 256)).map(|_| g.usize_in(0, 255) as u8).collect(),
         },
-        _ => WireMsg::ChunkEnd {
+        14 => WireMsg::ChunkEnd {
             checksum: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        15 => {
+            let dim = g.usize_in(1, 8);
+            let rows = g.usize_in(0, g.size * 8);
+            WireMsg::ShardBlock {
+                node: g.usize_in(0, 10_000) as u32,
+                seq: g.usize_in(0, 1 << 20) as u32,
+                encoding: g.usize_in(0, 255) as u8,
+                rows: rows as u32,
+                dim: dim as u32,
+                classes: g.usize_in(1, 12) as u32,
+                labels: (0..rows).map(|_| g.usize_in(0, 11) as u32).collect(),
+                features: g.f32_vec(rows * dim, -100.0, 100.0),
+                checksum: g.usize_in(0, usize::MAX / 2) as u64,
+            }
+        }
+        16 => WireMsg::ShardComplete {
+            node: g.usize_in(0, 10_000) as u32,
+            block_count: g.usize_in(0, 1 << 20) as u32,
+            total_rows: g.usize_in(0, 1 << 30) as u64,
+            checksum: g.usize_in(0, usize::MAX / 2) as u64,
+        },
+        _ => WireMsg::ShardCredit {
+            bytes: g.usize_in(0, 1 << 30) as u64,
         },
     }
 }
