@@ -232,6 +232,52 @@ fn bench_stream(h: &mut Harness) -> Vec<(String, f64)> {
     out
 }
 
+/// Scheduler saturation: how many nodes one process can drive. Runs a
+/// 512-node ring on [`SharedMem`] for a fixed wall window twice — the
+/// thread-per-node baseline, then the work-stealing executor pool —
+/// and reports *seconds per applied update* for each (lower is better,
+/// like every other row). The printed ratio is the scheduler's
+/// nodes-per-worker win: the pool runs due tasks back-to-back on a few
+/// cores instead of context-switching 512 parked threads.
+fn bench_saturation() -> Vec<(String, f64)> {
+    use dasgd::coordinator::{spawn_shard, AsyncConfig, EngineKind, Objective};
+    use dasgd::data::{Dataset, SyntheticGen};
+    use dasgd::workload::WorkloadPlan;
+
+    const NODES: usize = 512;
+    const WINDOW_SECS: f64 = 1.5;
+    let gen = SyntheticGen::new(NODES, 10, 4, 2.0, 0.5, 0.3, 11);
+    let mut rng = Xoshiro256pp::seeded(11);
+    let shards: Vec<Dataset> = (0..NODES)
+        .map(|i| gen.node_dataset(i, 20, &mut rng))
+        .collect();
+    let plan = WorkloadPlan::homogeneous(Objective::LogReg, shards);
+    let graph = dasgd::experiments::make_regular(NODES, 4);
+    let mut run_engine = |engine: EngineKind| -> f64 {
+        let cfg = AsyncConfig {
+            rate_hz: 1000.0,
+            engine,
+            ..AsyncConfig::quick(NODES)
+        };
+        let transport: Arc<dyn Transport> = Arc::new(SharedMem::new(NODES, plan.param_len()));
+        let run = spawn_shard(&graph, &plan, &cfg, transport, 0..NODES, None);
+        std::thread::sleep(Duration::from_secs_f64(WINDOW_SECS));
+        let counts = run.stop_and_join();
+        (counts.updates() as f64 / WINDOW_SECS).max(1e-9)
+    };
+    let tpn = run_engine(EngineKind::ThreadPerNode);
+    let pool = run_engine(EngineKind::Executors(0));
+    println!(
+        "  nodes_per_worker_saturation (512 nodes, 1 process): pool {pool:.0} vs \
+         thread-per-node {tpn:.0} updates/s — ×{:.1}",
+        pool / tpn
+    );
+    vec![
+        ("nodes_per_worker_saturation".to_string(), 1.0 / pool),
+        ("nodes_per_worker_tpn_baseline".to_string(), 1.0 / tpn),
+    ]
+}
+
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
@@ -239,7 +285,10 @@ fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
          codec-only on a 500-dim ApplyAverage frame; wire_chunk_* are the chunk \
          envelope on a 20 MiB PlanAssign; shard_stream_throughput is the block \
          pipeline (carve+fold+stage+drain) over a 20k-row shard and \
-         stream_first_step_latency is one staged block reaching a node\",\n",
+         stream_first_step_latency is one staged block reaching a node; \
+         nodes_per_worker_saturation is seconds per applied update with 512 \
+         nodes on the executor pool in one process (nodes_per_worker_tpn_baseline \
+         is the same window on thread-per-node)\",\n",
     );
     body.push_str(&format!("  \"param_len\": {param_len},\n  \"mean_secs\": {{\n"));
     for (i, (name, mean)) in rows.iter().enumerate() {
@@ -335,6 +384,8 @@ fn main() {
     transport_rows.extend(bench_wire(&mut h, 500));
     let mut h = Harness::new("streaming shard data plane");
     transport_rows.extend(bench_stream(&mut h));
+    println!("\nscheduler saturation (512 nodes per process)");
+    transport_rows.extend(bench_saturation());
     write_transport_baseline(&transport_rows, 500);
 
     // ---- coordinator machinery ---------------------------------------------

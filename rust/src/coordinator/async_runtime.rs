@@ -1,10 +1,21 @@
-//! Thread-per-node asynchronous runtime — the system the paper argues
-//! for, with no global clock and no barriers.
+//! Asynchronous runtime — the system the paper argues for, with no
+//! global clock and no barriers.
 //!
-//! Every node runs on its own OS thread driving one
-//! [`NodeLogic`](crate::node_logic::NodeLogic) (private RNG, exponential
-//! inter-event clock — the continuous-time limit of §IV-A's geometric
-//! countdown; per-node rates model heterogeneous hardware) over a
+//! Nodes are *tasks*, not threads. The default engine is a
+//! work-stealing executor pool ([`EngineKind::Executors`]): a fixed set
+//! of executor threads (one per CPU core unless `--executors N` says
+//! otherwise) owns per-executor timer heaps of scheduled
+//! [`NodeLogic`](crate::node_logic::NodeLogic) firings — a node's
+//! exponential inter-event clock (the continuous-time limit of §IV-A's
+//! geometric countdown; per-node rates model heterogeneous hardware)
+//! becomes a scheduled wakeup instead of a parked OS thread, so one
+//! worker drives thousands of nodes. An executor with nothing due
+//! steals the most urgent due task from a backed-up peer. The
+//! historical thread-per-node engine ([`EngineKind::ThreadPerNode`])
+//! is kept as the baseline the scheduler is benchmarked and
+//! trace-checked against.
+//!
+//! Either engine drives the same per-firing body ([`fire_node`]) over a
 //! pluggable [`Transport`]:
 //!
 //! * [`TransportKind::SharedMem`] — sorted try-lock mutexes, the
@@ -25,12 +36,19 @@
 //! projection, nothing for aborts.
 //!
 //! Gradient/projection math runs rust-native by default or through the
-//! channel-based [`ExecutorHandle`](crate::runtime::ExecutorHandle) (one
-//! PJRT engine per executor thread) when an executor is supplied.
+//! channel-based [`ExecutorHandle`](crate::runtime::ExecutorHandle)
+//! (one PJRT engine per executor thread) when an executor is supplied.
+//! Under the pool engine a backlogged node — one whose wakeup fired
+//! [`STEP_BATCH`] or more periods late — collapses its owed gradient
+//! firings into a single compiled batch-8 step (`step_b8`, the
+//! linear-scaling rule), so falling behind costs one PJRT dispatch
+//! instead of eight.
 
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -50,8 +68,32 @@ use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
 use crate::workload::WorkloadPlan;
 
-use super::backend::PjrtArtifacts;
+use super::backend::{PjrtArtifacts, STEP_BATCH};
 use super::config::StepSize;
+
+/// Which node-driving engine executes a shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// One OS thread per node — the historical engine. Kept as the
+    /// baseline the executor pool is benchmarked and trace-checked
+    /// against; saturates at a few hundred nodes per process.
+    ThreadPerNode,
+    /// Work-stealing executor pool driving node tasks off per-executor
+    /// timer heaps. `0` = one executor per available CPU core
+    /// (`--executors N` overrides).
+    Executors(usize),
+}
+
+impl EngineKind {
+    /// Number of executor threads to run for `tasks` node tasks.
+    fn pool_size(want: usize, tasks: usize) -> usize {
+        let auto = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        let n = if want == 0 { auto } else { want };
+        n.min(tasks).max(1)
+    }
+}
 
 /// Configuration of an asynchronous run.
 #[derive(Clone, Debug)]
@@ -78,8 +120,19 @@ pub struct AsyncConfig {
     /// their neighbors' gossip; the survivors keep converging.
     pub kill_after_secs: Option<f64>,
     pub kill_nodes: usize,
-    /// Which communication substrate the node threads run on.
+    /// Which communication substrate the node tasks run on.
     pub transport: TransportKind,
+    /// Which engine drives the node tasks (`--executors N`).
+    pub engine: EngineKind,
+    /// Deterministic replay: fire exactly this many events in global
+    /// virtual-time order — `(next_fire, node_id)`, where every wakeup
+    /// derives from the node's own `(seed, id)` RNG — then stop. Both
+    /// engines honor it (the pool runs one executor in virtual time;
+    /// thread-per-node serializes through a sequencer gate), so a
+    /// fixed seed yields bit-identical trajectories across engines.
+    /// Meant for `SharedMem` (cross-engine equivalence tests); wall
+    /// clocks and `duration_secs` are ignored while set.
+    pub deterministic_events: Option<u64>,
     pub seed: u64,
 }
 
@@ -96,6 +149,8 @@ impl AsyncConfig {
             kill_after_secs: None,
             kill_nodes: 0,
             transport: TransportKind::SharedMem,
+            engine: EngineKind::Executors(0),
+            deterministic_events: None,
             seed: 0,
         }
     }
@@ -128,7 +183,7 @@ struct Shared {
     proj_steps: AtomicU64,
     conflicts: AtomicU64,
     messages: AtomicU64,
-    /// Applied-update counter across this process's node threads (for
+    /// Applied-update counter across this process's node tasks (for
     /// stepsize decay; in a multi-process deployment each worker decays
     /// on its local counter).
     k: AtomicU64,
@@ -157,11 +212,13 @@ impl Shared {
     }
 }
 
-/// A running set of node threads driving one *shard* of the system —
-/// every node for the in-process engines, one worker's block for the
-/// multi-process [`SocketNet`](crate::net::SocketNet) deployment.
-/// Obtained from [`spawn_shard`]; stop with [`ShardRun::stop`] +
-/// [`ShardRun::join`].
+/// A running engine driving one *shard* of the system — every node for
+/// the in-process engines, one worker's block for the multi-process
+/// [`SocketNet`](crate::net::SocketNet) deployment. Obtained from
+/// [`spawn_shard`]; stop with [`ShardRun::stop`] + [`ShardRun::join`].
+/// The handles are executor threads under the pool engine, one thread
+/// per node under [`EngineKind::ThreadPerNode`] — callers cannot tell
+/// the difference.
 pub struct ShardRun {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -188,21 +245,21 @@ impl ShardRun {
         self.shared.alive[id].load(Ordering::Relaxed)
     }
 
-    /// Ask every node thread to stop after its current iteration.
+    /// Ask the engine to stop after the current firings.
     pub fn stop(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
     }
 
-    /// Wait for the node threads ([`ShardRun::stop`] first, or this
+    /// Wait for the engine threads ([`ShardRun::stop`] first, or this
     /// blocks until something else stops them).
     pub fn join(self) {
         for h in self.handles {
-            h.join().expect("node thread panicked");
+            h.join().expect("engine thread panicked");
         }
     }
 
-    /// Stop, wait for every node thread, and return the final counters
-    /// (read *after* the join, so no late increment is missed).
+    /// Stop, wait for the engine, and return the final counters (read
+    /// *after* the join, so no late increment is missed).
     pub fn stop_and_join(self) -> Counts {
         self.stop();
         let shared = Arc::clone(&self.shared);
@@ -212,18 +269,48 @@ impl ShardRun {
 }
 
 /// The RNG stream node `i` consumes. Derived from the run seed and the
-/// node id alone — independent of spawn order — so every worker of a
-/// sharded deployment reproduces exactly the per-node streams a
-/// single-process run with the same seed would use.
+/// node id alone — independent of spawn order, sharding, *and engine* —
+/// so every worker of a sharded deployment reproduces exactly the
+/// per-node streams a single-process run with the same seed would use.
 fn node_rng(seed: u64, i: usize) -> Xoshiro256pp {
     Xoshiro256pp::seeded(seed).split(i as u64)
 }
 
-/// Spawn one thread per node in `owned`, each driving a [`NodeLogic`]
-/// built from its [`WorkloadPlan`] assignment (objective + shard) over
-/// `transport`. The engine-construction primitive behind
-/// [`AsyncCluster::run`] (owned = all nodes) and the multi-process
-/// worker (`dasgd worker`; owned = the worker's shard block).
+/// Everything a firing needs besides the node's own task state. Shared
+/// by both engines so their per-event behavior cannot drift apart.
+struct FireCtx {
+    shared: Arc<Shared>,
+    transport: Arc<dyn Transport>,
+    graph: Graph,
+    cfg: AsyncConfig,
+    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
+    dim: usize,
+    classes: usize,
+}
+
+/// One schedulable node: its logic, its heterogeneous firing rate, and
+/// its stepsize schedule (per-family for mixed plans).
+struct Task {
+    logic: NodeLogic,
+    rate_hz: f64,
+    stepsize: StepSize,
+}
+
+impl Task {
+    /// Next inter-fire delay: the node's own Exp(rate) draw, capped at
+    /// 50 ms so stop flags and transport polls are serviced at least
+    /// 20×/s (the cap the thread-per-node engine has always applied).
+    fn delay(&mut self) -> f64 {
+        self.logic.wait_secs(self.rate_hz).min(0.05)
+    }
+}
+
+/// Spawn the configured engine over one node task per id in `owned`,
+/// each driving a [`NodeLogic`] built from its [`WorkloadPlan`]
+/// assignment (objective + shard) over `transport`. The
+/// engine-construction primitive behind [`AsyncCluster::run`] (owned =
+/// all nodes) and the multi-process worker (`dasgd worker`; owned = the
+/// worker's shard block).
 ///
 /// Homogeneous plans use `cfg.stepsize` everywhere; mixed plans give
 /// each node its own family's default schedule (one hinge-stable step
@@ -261,7 +348,16 @@ pub fn spawn_shard_with_feeds(
     let (dim, classes) = (plan.dim(), plan.classes());
     let mixed = plan.is_mixed();
     let shared = Arc::new(Shared::new(n));
-    let mut handles = Vec::with_capacity(owned.len());
+    let ctx = Arc::new(FireCtx {
+        shared: Arc::clone(&shared),
+        transport,
+        graph: graph.clone(),
+        cfg: cfg.clone(),
+        executor,
+        dim,
+        classes,
+    });
+    let mut tasks = Vec::with_capacity(owned.len());
     for i in owned {
         let mut rng = node_rng(cfg.seed, i);
         let rate = cfg.rate_hz * (rng.next_gauss() * cfg.speed_spread).exp();
@@ -284,18 +380,463 @@ pub fn spawn_shard_with_feeds(
         } else {
             cfg.stepsize
         };
-        let shared = Arc::clone(&shared);
-        let transport = Arc::clone(&transport);
-        let graph = graph.clone();
-        let cfg = cfg.clone();
-        let executor = executor.as_ref().map(|(h, a)| (h.clone(), a.clone()));
-        handles.push(std::thread::spawn(move || {
-            node_loop(
-                logic, rate, stepsize, shared, transport, graph, cfg, executor, dim, classes,
-            );
-        }));
+        tasks.push(Task {
+            logic,
+            rate_hz: rate,
+            stepsize,
+        });
     }
+    let handles = match cfg.engine {
+        EngineKind::ThreadPerNode => spawn_thread_per_node(tasks, ctx),
+        EngineKind::Executors(want) => spawn_executor_pool(tasks, ctx, want),
+    };
     ShardRun { shared, handles }
+}
+
+// ---------------------------------------------------------------------------
+// The per-firing body, shared by both engines.
+// ---------------------------------------------------------------------------
+
+/// One firing of one node: poll the transport, gate on liveness and
+/// capture, draw the action, and perform it (counting in the canonical
+/// convention). Returns `false` when the node is done for good
+/// (crashed) and must not be rescheduled.
+///
+/// `owed` is how many firings this wakeup stands for — always 1 except
+/// when the pool engine is running behind (see [`STEP_BATCH`]); a
+/// backlogged PJRT gradient collapses into one compiled batch step at
+/// `owed·lr` (the linear-scaling rule: a mean-gradient step over
+/// `owed` samples at `owed·lr` matches `owed` sequential steps at `lr`
+/// to first order).
+fn fire_node(ctx: &FireCtx, logic: &mut NodeLogic, stepsize: StepSize, owed: u64) -> bool {
+    let id = logic.id;
+    let objective = logic.objective();
+    let scale = logic.grad_scale();
+    let hold = Duration::from_secs_f64(ctx.cfg.gossip_hold_secs.max(0.0));
+    ctx.transport.poll(id);
+    if ctx.shared.stop.load(Ordering::Relaxed) {
+        return true;
+    }
+    if !ctx.shared.alive[id].load(Ordering::Relaxed) {
+        return false; // crashed (fault injection)
+    }
+    if ctx.transport.busy(id) {
+        return true; // captured by a neighbor's in-flight projection
+    }
+    let k = ctx.shared.k.load(Ordering::Relaxed);
+    let lr = stepsize.at(k);
+    match logic.draw_action() {
+        Action::Grad => {
+            // A streaming shard whose first block is still in flight
+            // cannot step yet: skip and redraw (the node can still join
+            // neighbors' projections meanwhile).
+            if !logic.has_data() {
+                return true;
+            }
+            // Local gradient step: only our own variable (Eq. 6).
+            match &ctx.executor {
+                None => ctx.transport.update_own(id, &mut |w| {
+                    logic.native_grad_step(w, lr);
+                }),
+                Some((h, arts)) => {
+                    let batch = arts
+                        .step_b8
+                        .as_deref()
+                        .filter(|_| owed >= STEP_BATCH as u64);
+                    if let Some(artifact) = batch {
+                        // Backlog collapse: one batch-8 mean-gradient
+                        // step at 8·lr in place of the 8 owed firings.
+                        let idxs: Vec<usize> =
+                            (0..STEP_BATCH).map(|_| logic.draw_index()).collect();
+                        let labels: Vec<usize> = idxs
+                            .iter()
+                            .map(|&i| logic.data().sample(i).label)
+                            .collect();
+                        let staged =
+                            objective.step_inputs_batch(&labels, ctx.classes, lr, scale);
+                        ctx.transport.update_own(id, &mut |w| {
+                            let mut x = Vec::with_capacity(STEP_BATCH * ctx.dim);
+                            for &i in &idxs {
+                                x.extend_from_slice(logic.data().sample(i).features);
+                            }
+                            if let Ok(outs) =
+                                h.execute_f32(artifact, &staged.buffers(w.as_slice(), &x))
+                            {
+                                *w = outs.into_iter().next().unwrap();
+                            }
+                        });
+                        ctx.shared
+                            .grad_steps
+                            .fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
+                        ctx.shared.k.fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
+                        return true;
+                    }
+                    let idx = logic.draw_index();
+                    let label = logic.data().sample(idx).label;
+                    let staged = objective.step_inputs(label, ctx.classes, lr, scale);
+                    ctx.transport.update_own(id, &mut |w| {
+                        let x = logic.data().sample(idx).features;
+                        if let Ok(outs) =
+                            h.execute_f32(&arts.step_b1, &staged.buffers(w.as_slice(), x))
+                        {
+                            *w = outs.into_iter().next().unwrap();
+                        }
+                    });
+                }
+            }
+            ctx.shared.grad_steps.fetch_add(1, Ordering::Relaxed);
+            ctx.shared.k.fetch_add(1, Ordering::Relaxed);
+        }
+        Action::Project => {
+            // Projection: §IV-C lock-up over the closed neighborhood —
+            // restricted to live members (a crashed neighbor is simply
+            // unreachable; the average is over whoever answers).
+            // Liveness has two layers: fault-injected kills in this
+            // process, and — for the multi-process SocketNet — whole
+            // peer workers whose link is down.
+            let hood: Vec<usize> = ctx
+                .graph
+                .closed_neighborhood(id)
+                .into_iter()
+                .filter(|&j| {
+                    ctx.shared.alive[j].load(Ordering::Relaxed) && ctx.transport.reachable(j)
+                })
+                .collect();
+            if hood.len() < 2 {
+                return true; // nobody reachable to average with
+            }
+            let gossip = ctx
+                .executor
+                .as_ref()
+                .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts)));
+            let outcome = ctx.transport.try_project(id, &hood, hold, &mut |rows| {
+                // Compiled Eq. (7) when the artifact's padding fits,
+                // native averaging otherwise (identical semantics).
+                let staged = gossip.and_then(|(h, artifact, arts)| {
+                    let k = objective.param_len(ctx.dim, ctx.classes);
+                    arts.stage_gossip(rows, k)
+                        .and_then(|(p, wts)| h.execute_f32(artifact, &[&p, &wts]).ok())
+                });
+                match staged {
+                    Some(outs) => outs.into_iter().next().unwrap(),
+                    None => neighborhood_average(rows),
+                }
+            });
+            match outcome {
+                ProjectionOutcome::Applied { participants } => {
+                    ctx.shared
+                        .messages
+                        .fetch_add(projection_messages(participants), Ordering::Relaxed);
+                    ctx.shared.proj_steps.fetch_add(1, Ordering::Relaxed);
+                    ctx.shared.k.fetch_add(1, Ordering::Relaxed);
+                }
+                ProjectionOutcome::Conflict => {
+                    // A member is mid-update: back off and redraw.
+                    ctx.shared.conflicts.fetch_add(1, Ordering::Relaxed);
+                }
+                ProjectionOutcome::Isolated => {}
+            }
+        }
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Engine 1: thread-per-node (baseline).
+// ---------------------------------------------------------------------------
+
+/// Serialization gate for deterministic thread-per-node runs: node
+/// threads register their next virtual fire time and block until theirs
+/// is the global minimum `(time, id)` *and* no other body is running —
+/// so firings execute one at a time in exactly the order the
+/// single-executor pool would schedule them.
+struct Sequencer {
+    state: Mutex<SeqState>,
+    cv: Condvar,
+}
+
+struct SeqState {
+    /// Pending `(fire_time_bits, node_id)` entries (f64 bit patterns
+    /// order like the non-negative floats they encode).
+    pending: BTreeSet<(u64, usize)>,
+    running: bool,
+    fired: u64,
+    budget: u64,
+}
+
+impl Sequencer {
+    fn new(budget: u64) -> Self {
+        Self {
+            state: Mutex::new(SeqState {
+                pending: BTreeSet::new(),
+                running: false,
+                fired: 0,
+                budget,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register `(at, id)` and block until it is this thread's turn.
+    /// Returns false (entry withdrawn) once the event budget is spent
+    /// or the run is stopping — the caller exits.
+    fn next_turn(&self, at: f64, id: usize, stop: &AtomicBool) -> bool {
+        let key = (at.to_bits(), id);
+        let mut s = self.state.lock().unwrap();
+        s.pending.insert(key);
+        self.cv.notify_all();
+        loop {
+            if s.fired >= s.budget || stop.load(Ordering::Relaxed) {
+                s.pending.remove(&key);
+                stop.store(true, Ordering::SeqCst);
+                self.cv.notify_all();
+                return false;
+            }
+            if !s.running && s.pending.first() == Some(&key) {
+                s.pending.remove(&key);
+                s.running = true;
+                s.fired += 1;
+                return true;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// The body finished: hand the turn to the next minimum.
+    fn done(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.running = false;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+fn spawn_thread_per_node(
+    tasks: Vec<Task>,
+    ctx: Arc<FireCtx>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let seq = ctx
+        .cfg
+        .deterministic_events
+        .map(|budget| Arc::new(Sequencer::new(budget)));
+    tasks
+        .into_iter()
+        .map(|task| {
+            let ctx = Arc::clone(&ctx);
+            let seq = seq.clone();
+            std::thread::spawn(move || node_loop(task, ctx, seq))
+        })
+        .collect()
+}
+
+/// One node's thread: fire on the exponential clock, act through the
+/// transport. With a [`Sequencer`] (deterministic runs) the clock is
+/// virtual and firings serialize in global `(time, id)` order; without
+/// one the thread sleeps its capped delay for real.
+fn node_loop(mut task: Task, ctx: Arc<FireCtx>, seq: Option<Arc<Sequencer>>) {
+    let id = task.logic.id;
+    let mut vt = 0.0f64;
+    while !ctx.shared.stop.load(Ordering::Relaxed) {
+        let delay = task.delay();
+        match &seq {
+            None => std::thread::sleep(Duration::from_secs_f64(delay)),
+            Some(s) => {
+                vt += delay;
+                if !s.next_turn(vt, id, &ctx.shared.stop) {
+                    return;
+                }
+            }
+        }
+        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, 1);
+        if let Some(s) = &seq {
+            s.done();
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine 2: the work-stealing executor pool (default).
+// ---------------------------------------------------------------------------
+
+/// A scheduled firing: min-ordered by `(at, id)` — the id tiebreak is
+/// what makes single-executor order deterministic.
+struct TimerEntry {
+    /// Seconds since run start (wall-clock target, or accumulated
+    /// virtual time under `deterministic_events`).
+    at: f64,
+    id: usize,
+    task: Task,
+}
+
+impl TimerEntry {
+    fn key(&self) -> (u64, usize) {
+        // Non-negative f64 bit patterns order like the floats.
+        (self.at.to_bits(), self.id)
+    }
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Per-executor timer heaps. An entry's due-ness is its position
+/// against the shared run clock; the due prefix of each heap *is* that
+/// executor's ready queue, and stealing pops the most urgent due entry
+/// from a backed-up peer.
+struct Pool {
+    slots: Vec<Mutex<BinaryHeap<Reverse<TimerEntry>>>>,
+    start: Instant,
+}
+
+impl Pool {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn push(&self, slot: usize, entry: TimerEntry) {
+        self.slots[slot].lock().unwrap().push(Reverse(entry));
+    }
+
+    /// Pop `slot`'s earliest entry if it is due at `now`.
+    fn pop_due(&self, slot: usize, now: f64) -> Option<TimerEntry> {
+        let mut heap = self.slots[slot].lock().unwrap();
+        if heap.peek().map(|Reverse(e)| e.at <= now).unwrap_or(false) {
+            heap.pop().map(|Reverse(e)| e)
+        } else {
+            None
+        }
+    }
+
+    /// When `slot`'s next entry fires, if any.
+    fn next_at(&self, slot: usize) -> Option<f64> {
+        self.slots[slot].lock().unwrap().peek().map(|Reverse(e)| e.at)
+    }
+}
+
+fn spawn_executor_pool(
+    mut tasks: Vec<Task>,
+    ctx: Arc<FireCtx>,
+    want: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    if tasks.is_empty() {
+        return Vec::new();
+    }
+    if let Some(budget) = ctx.cfg.deterministic_events {
+        // Deterministic replay runs one executor in virtual time —
+        // global (next_fire, id) order with no wall clock at all.
+        let mut heap = BinaryHeap::new();
+        for mut task in tasks {
+            let at = task.delay();
+            let id = task.logic.id;
+            heap.push(Reverse(TimerEntry { at, id, task }));
+        }
+        return vec![std::thread::spawn(move || {
+            deterministic_executor(heap, ctx, budget)
+        })];
+    }
+    let n_exec = EngineKind::pool_size(want, tasks.len());
+    let pool = Arc::new(Pool {
+        slots: (0..n_exec).map(|_| Mutex::new(BinaryHeap::new())).collect(),
+        start: Instant::now(),
+    });
+    // Round-robin the initial wakeups over the executors; stealing
+    // rebalances from there.
+    for (i, mut task) in tasks.drain(..).enumerate() {
+        let at = task.delay();
+        let id = task.logic.id;
+        pool.push(i % n_exec, TimerEntry { at, id, task });
+    }
+    (0..n_exec)
+        .map(|ex| {
+            let pool = Arc::clone(&pool);
+            let ctx = Arc::clone(&ctx);
+            std::thread::spawn(move || executor_loop(ex, pool, ctx))
+        })
+        .collect()
+}
+
+/// One executor thread: run due tasks from its own timer heap, steal
+/// the most urgent due task from a peer when it has none, sleep until
+/// its next wakeup otherwise.
+fn executor_loop(ex: usize, pool: Arc<Pool>, ctx: Arc<FireCtx>) {
+    let n_slots = pool.slots.len();
+    while !ctx.shared.stop.load(Ordering::Relaxed) {
+        let now = pool.now();
+        let mut entry = pool.pop_due(ex, now);
+        if entry.is_none() {
+            // Nothing due here: steal from a backed-up peer.
+            for off in 1..n_slots {
+                entry = pool.pop_due((ex + off) % n_slots, now);
+                if entry.is_some() {
+                    break;
+                }
+            }
+        }
+        let Some(TimerEntry { at, id, mut task }) = entry else {
+            // Idle: sleep until our next wakeup (bounded so stop flags
+            // and steal opportunities are noticed promptly).
+            let until = pool.next_at(ex).unwrap_or(now + 0.005);
+            let dur = (until - now).clamp(0.0001, 0.005);
+            std::thread::sleep(Duration::from_secs_f64(dur));
+            continue;
+        };
+        // How late is this wakeup, in units of the node's mean capped
+        // period? A task ≥ STEP_BATCH periods behind owes that many
+        // firings — fire_node collapses them into one batched gradient
+        // step on the PJRT path.
+        let period = (1.0 / task.rate_hz.max(1e-9)).min(0.05);
+        let owed = if now - at >= period * STEP_BATCH as f64 {
+            STEP_BATCH as u64
+        } else {
+            1
+        };
+        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, owed);
+        if !keep {
+            continue; // crashed — drop the task
+        }
+        let delay = task.delay();
+        let next = pool.now() + delay;
+        pool.push(ex, TimerEntry { at: next, id, task });
+    }
+}
+
+/// The single-executor virtual-time engine behind
+/// `deterministic_events`: pop the global minimum `(at, id)`, fire,
+/// reschedule at `at + delay` — no sleeping, no wall clock.
+fn deterministic_executor(
+    mut heap: BinaryHeap<Reverse<TimerEntry>>,
+    ctx: Arc<FireCtx>,
+    budget: u64,
+) {
+    let mut fired = 0u64;
+    while fired < budget && !ctx.shared.stop.load(Ordering::Relaxed) {
+        let Some(Reverse(TimerEntry { at, id, mut task })) = heap.pop() else {
+            break; // every node crashed
+        };
+        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, 1);
+        fired += 1;
+        if keep {
+            let next = at + task.delay();
+            heap.push(Reverse(TimerEntry { at: next, id, task }));
+        }
+    }
+    ctx.shared.stop.store(true, Ordering::SeqCst);
 }
 
 /// A networked system ready to run asynchronously.
@@ -437,123 +978,6 @@ impl AsyncCluster {
     }
 }
 
-/// One node's thread: fire on the exponential clock, act through the
-/// transport, count in the canonical convention. `stepsize` is this
-/// node's schedule (per-family for mixed plans, `cfg.stepsize`
-/// otherwise).
-#[allow(clippy::too_many_arguments)]
-fn node_loop(
-    mut logic: NodeLogic,
-    rate_hz: f64,
-    stepsize: StepSize,
-    shared: Arc<Shared>,
-    transport: Arc<dyn Transport>,
-    graph: Graph,
-    cfg: AsyncConfig,
-    executor: Option<(ExecutorHandle, PjrtArtifacts)>,
-    dim: usize,
-    classes: usize,
-) {
-    let id = logic.id;
-    let objective = logic.objective();
-    let scale = logic.grad_scale();
-    let hold = Duration::from_secs_f64(cfg.gossip_hold_secs.max(0.0));
-    while !shared.stop.load(Ordering::Relaxed) {
-        // Continuous-time §IV-A clock: wait Exp(rate).
-        let wait = logic.wait_secs(rate_hz);
-        std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
-        transport.poll(id);
-        if shared.stop.load(Ordering::Relaxed) {
-            return;
-        }
-        if !shared.alive[id].load(Ordering::Relaxed) {
-            return; // crashed (fault injection)
-        }
-        if transport.busy(id) {
-            continue; // captured by a neighbor's in-flight projection
-        }
-        let k = shared.k.load(Ordering::Relaxed);
-        let lr = stepsize.at(k);
-        match logic.draw_action() {
-            Action::Grad => {
-                // A streaming shard whose first block is still in
-                // flight cannot step yet: skip and redraw (the node can
-                // still join neighbors' projections meanwhile).
-                if !logic.has_data() {
-                    continue;
-                }
-                // Local gradient step: only our own variable (Eq. 6).
-                match &executor {
-                    None => transport.update_own(id, &mut |w| {
-                        logic.native_grad_step(w, lr);
-                    }),
-                    Some((h, arts)) => {
-                        let idx = logic.draw_index();
-                        let label = logic.data().sample(idx).label;
-                        let staged = objective.step_inputs(label, classes, lr, scale);
-                        transport.update_own(id, &mut |w| {
-                            let x = logic.data().sample(idx).features;
-                            if let Ok(outs) =
-                                h.execute_f32(&arts.step_b1, &staged.buffers(w.as_slice(), x))
-                            {
-                                *w = outs.into_iter().next().unwrap();
-                            }
-                        });
-                    }
-                }
-                shared.grad_steps.fetch_add(1, Ordering::Relaxed);
-                shared.k.fetch_add(1, Ordering::Relaxed);
-            }
-            Action::Project => {
-                // Projection: §IV-C lock-up over the closed neighborhood
-                // — restricted to live members (a crashed neighbor is
-                // simply unreachable; the average is over whoever
-                // answers). Liveness has two layers: fault-injected
-                // kills in this process, and — for the multi-process
-                // SocketNet — whole peer workers whose link is down.
-                let hood: Vec<usize> = graph
-                    .closed_neighborhood(id)
-                    .into_iter()
-                    .filter(|&j| shared.alive[j].load(Ordering::Relaxed) && transport.reachable(j))
-                    .collect();
-                if hood.len() < 2 {
-                    continue; // nobody reachable to average with
-                }
-                let gossip = executor
-                    .as_ref()
-                    .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts)));
-                let outcome = transport.try_project(id, &hood, hold, &mut |rows| {
-                    // Compiled Eq. (7) when the artifact's padding fits,
-                    // native averaging otherwise (identical semantics).
-                    let staged = gossip.and_then(|(h, artifact, arts)| {
-                        let k = objective.param_len(dim, classes);
-                        arts.stage_gossip(rows, k)
-                            .and_then(|(p, wts)| h.execute_f32(artifact, &[&p, &wts]).ok())
-                    });
-                    match staged {
-                        Some(outs) => outs.into_iter().next().unwrap(),
-                        None => neighborhood_average(rows),
-                    }
-                });
-                match outcome {
-                    ProjectionOutcome::Applied { participants } => {
-                        shared
-                            .messages
-                            .fetch_add(projection_messages(participants), Ordering::Relaxed);
-                        shared.proj_steps.fetch_add(1, Ordering::Relaxed);
-                        shared.k.fetch_add(1, Ordering::Relaxed);
-                    }
-                    ProjectionOutcome::Conflict => {
-                        // A member is mid-update: back off and redraw.
-                        shared.conflicts.fetch_add(1, Ordering::Relaxed);
-                    }
-                    ProjectionOutcome::Isolated => {}
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -582,6 +1006,96 @@ mod tests {
         let last = rep.recorder.last().unwrap();
         assert!(last.test_err < 0.7, "err={}", last.test_err);
         assert!(rep.updates_per_sec > 100.0);
+    }
+
+    #[test]
+    fn thread_per_node_engine_still_runs() {
+        // The baseline engine stays alive (benches and the trace test
+        // below compare against it).
+        let (c, test) = cluster(6, 2, 1);
+        let cfg = AsyncConfig {
+            duration_secs: 1.0,
+            rate_hz: 400.0,
+            engine: EngineKind::ThreadPerNode,
+            ..AsyncConfig::quick(6)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 150, "updates={}", rep.updates);
+        assert!(rep.grad_steps > 0 && rep.proj_steps > 0);
+    }
+
+    #[test]
+    fn explicit_executor_count_is_honored() {
+        // --executors 2 with 8 nodes: 2 executor threads drive 8 tasks.
+        let (c, test) = cluster(8, 2, 7);
+        let cfg = AsyncConfig {
+            duration_secs: 1.0,
+            rate_hz: 400.0,
+            engine: EngineKind::Executors(2),
+            ..AsyncConfig::quick(8)
+        };
+        let rep = c.run(&cfg, &test).unwrap();
+        assert!(rep.updates > 150, "updates={}", rep.updates);
+        assert!(rep.proj_steps > 0);
+    }
+
+    /// Run a fixed ring deterministically on the given engine and
+    /// return (params, counts) after exactly `budget` events.
+    fn deterministic_trace(engine: EngineKind, budget: u64) -> (Vec<Vec<f32>>, Counts) {
+        let n = 8;
+        let gen = SyntheticGen::new(n, 10, 4, 2.0, 0.5, 0.3, 42);
+        let mut rng = Xoshiro256pp::seeded(42);
+        let shards: Vec<Dataset> = (0..n).map(|i| gen.node_dataset(i, 40, &mut rng)).collect();
+        let plan = WorkloadPlan::homogeneous(Objective::LogReg, shards);
+        let graph = regular_circulant(n, 2);
+        let cfg = AsyncConfig {
+            engine,
+            deterministic_events: Some(budget),
+            seed: 42,
+            ..AsyncConfig::quick(n)
+        };
+        let transport: Arc<dyn Transport> = Arc::new(SharedMem::new(n, plan.param_len()));
+        let run = spawn_shard(&graph, &plan, &cfg, Arc::clone(&transport), 0..n, None);
+        // The engine stops itself once the budget is spent.
+        let shared = Arc::clone(&run.shared);
+        run.join();
+        (transport.snapshot(), shared.counts())
+    }
+
+    #[test]
+    fn single_executor_reproduces_the_thread_per_node_trace() {
+        // The cross-engine equivalence pin: on a fixed ring with a
+        // fixed seed, the executor pool (one executor, virtual time)
+        // fires the same events in the same order as the serialized
+        // thread-per-node engine — the consensus trajectory is
+        // bit-identical at every probed horizon, because every wakeup
+        // derives from the same per-(seed, node id) RNG stream.
+        for budget in [150u64, 400] {
+            let (p_pool, c_pool) = deterministic_trace(EngineKind::Executors(1), budget);
+            let (p_tpn, c_tpn) = deterministic_trace(EngineKind::ThreadPerNode, budget);
+            assert_eq!(c_pool, c_tpn, "counters diverged at budget {budget}");
+            assert!(
+                c_pool.updates() > 0,
+                "trace fired no updates at budget {budget}"
+            );
+            for (id, (a, b)) in p_pool.iter().zip(&p_tpn).enumerate() {
+                let a_bits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let b_bits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    a_bits, b_bits,
+                    "node {id} params diverged at budget {budget}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_replay_is_reproducible() {
+        // Same engine, same seed, twice: identical down to the bits.
+        let (p1, c1) = deterministic_trace(EngineKind::Executors(1), 300);
+        let (p2, c2) = deterministic_trace(EngineKind::Executors(1), 300);
+        assert_eq!(c1, c2);
+        assert_eq!(p1, p2);
     }
 
     #[test]
@@ -637,7 +1151,7 @@ mod tests {
 
     #[test]
     fn async_cluster_runs_hinge_objective() {
-        // Same thread-per-node runtime, (dim)-shaped SVM parameters.
+        // Same runtime, (dim)-shaped SVM parameters.
         let (c, test) = cluster(6, 2, 13);
         let c = c.with_objective(Objective::hinge());
         let cfg = AsyncConfig {

@@ -217,6 +217,11 @@ impl StepBackend for NativeBackend {
 pub struct PjrtArtifacts {
     pub objective: Objective,
     pub step_b1: String,
+    /// Batch-8 step artifact: one mean-gradient step over 8 feature
+    /// rows. The executor scheduler uses it to collapse a backlogged
+    /// node's owed gradient firings into a single compiled call
+    /// (`None` degrades to repeated `step_b1`).
+    pub step_b8: Option<String>,
     pub eval: Option<String>,
     pub gossip: Option<String>,
     /// Max rows of the gossip artifact's stacked-parameter input.
@@ -224,6 +229,10 @@ pub struct PjrtArtifacts {
     /// Fixed row count of the eval artifact.
     pub eval_rows: Option<usize>,
 }
+
+/// Rows per batched step call — the batch size the `_b8` artifacts are
+/// compiled for (`python/compile/aot.py`).
+pub const STEP_BATCH: usize = 8;
 
 impl PjrtArtifacts {
     /// Artifact set for `obj` in shape family `family` (`"synth"` = 50
@@ -233,6 +242,7 @@ impl PjrtArtifacts {
         Self {
             eval_rows: eval.as_ref().map(|_| 256),
             step_b1: obj.pjrt_step_artifact(family),
+            step_b8: Some(obj.pjrt_step_artifact_b8(family)),
             gossip: obj.pjrt_gossip_artifact(family),
             gossip_m: 16,
             eval,
@@ -253,6 +263,7 @@ impl PjrtArtifacts {
     /// Artifact names that must exist in the engine manifest.
     pub fn required(&self) -> Vec<&str> {
         let mut names = vec![self.step_b1.as_str()];
+        names.extend(self.step_b8.as_deref());
         names.extend(self.eval.as_deref());
         names.extend(self.gossip.as_deref());
         names

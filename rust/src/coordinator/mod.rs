@@ -7,10 +7,11 @@
 //! * [`selector`] — §IV-A node selection (central + distributed geometric).
 //! * [`node`] — per-node state (β_i, local shard, private RNG).
 //! * [`trainer`] — sequential-event Alg. 2 (the figures' reference).
-//! * [`async_runtime`] — thread-per-node truly asynchronous runtime:
-//!   one [`NodeLogic`](crate::node_logic::NodeLogic) per thread over a
-//!   pluggable [`Transport`](crate::transport::Transport) (shared
-//!   memory or message passing).
+//! * [`async_runtime`] — truly asynchronous runtime: a work-stealing
+//!   executor pool (or the baseline thread-per-node engine) drives
+//!   [`NodeLogic`](crate::node_logic::NodeLogic) tasks over a pluggable
+//!   [`Transport`](crate::transport::Transport) (shared memory or
+//!   message passing).
 //! * [`consensus`] — d^k / DF(β) metrics.
 
 pub mod async_runtime;
@@ -22,9 +23,10 @@ pub mod selector;
 pub mod trainer;
 
 pub use async_runtime::{
-    spawn_shard, spawn_shard_with_feeds, AsyncCluster, AsyncConfig, AsyncReport, ShardRun,
+    spawn_shard, spawn_shard_with_feeds, AsyncCluster, AsyncConfig, AsyncReport, EngineKind,
+    ShardRun,
 };
-pub use backend::{EvalBatch, NativeBackend, PjrtArtifacts, PjrtBackend, StepBackend};
+pub use backend::{EvalBatch, NativeBackend, PjrtArtifacts, PjrtBackend, StepBackend, STEP_BATCH};
 pub use config::{Backend, ConflictPolicy, SelectionMode, StepSize, TrainConfig};
 pub use crate::objective::Objective;
 pub use node::NodeState;

@@ -4,7 +4,7 @@
 //! experiment modules.
 
 use dasgd::cli::{self, Args};
-use dasgd::coordinator::{AsyncCluster, AsyncConfig, Objective, PjrtArtifacts, StepSize};
+use dasgd::coordinator::{AsyncCluster, AsyncConfig, EngineKind, Objective, PjrtArtifacts, StepSize};
 use dasgd::data::stream::DEFAULT_BLOCK_ROWS;
 use dasgd::data::{ascii_art, load_libsvm, render_glyph, GlyphStyle, LibsvmOptions, NotMnistGen};
 use dasgd::experiments::{self, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
@@ -45,10 +45,12 @@ System:
               --backend native|pjrt
               --dataset synth|notmnist|libsvm:PATH
               --csv PATH to dump the series)
-  cluster     live threaded asynchronous cluster (--secs S --kill N
-              --kill-after T to crash N nodes at time T
-              --backend native|pjrt --rate HZ --spread X
-              --transport shared|channel|socket --plan P --dirichlet-alpha A)
+  cluster     live asynchronous cluster on the work-stealing executor
+              pool (--secs S --kill N --kill-after T to crash N nodes
+              at time T --backend native|pjrt --rate HZ --spread X
+              --executors E pool threads, 0 = one per core; E=1 with
+              a fixed seed is deterministic --transport
+              shared|channel|socket --plan P --dirichlet-alpha A)
   sim         delay/drop-aware virtual-time simulation, 10k+ nodes
               (--nodes N --degree K --horizon S --latency-ms L
               --jitter-ms J --drop-prob P --objective logreg|hinge|lasso
@@ -63,11 +65,15 @@ System:
               size stream as checksummed row blocks
               (--stream-block-rows R, default 4096) under a per-worker
               staging budget (--staging-mb M, default 1024) — workers
-              start stepping on their first block
+              start stepping on their first block; --executors E pool
+              threads per worker (0 = one per core) and --flush-bytes B
+              / --flush-micros U tune per-peer frame coalescing
+              (B=0 turns batching off)
   worker      one deployment worker process (--rank R
               --peers host:port,host:port,... --nodes N --degree D
               --secs S --rate HZ --objective ... --plan P|wire
-              --samples M --param-len L with wire --staging-mb M);
+              --samples M --param-len L with wire --staging-mb M
+              --executors E --flush-bytes B --flush-micros U);
               `launch` spawns these
   artifacts   verify the AOT artifact set loads + executes
 
@@ -296,6 +302,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "kill-after",
             "backend",
             "transport",
+            "executors",
             "plan",
             "dirichlet-alpha",
             "shift-sigma",
@@ -333,6 +340,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "dataset",
             "staging-mb",
             "stream-block-rows",
+            "executors",
+            "flush-bytes",
+            "flush-micros",
             "csv",
         ],
         "worker" => &[
@@ -349,6 +359,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "samples",
             "param-len",
             "staging-mb",
+            "executors",
+            "flush-bytes",
+            "flush-micros",
         ],
         _ => return None,
     })
@@ -549,6 +562,7 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
             &TransportKind::NAMES,
         ));
     };
+    let executors = args.get_usize("executors", 0).map_err(anyhow::Error::msg)?;
     let plan_spec = parse_plan(args)?;
     let (plan, test) = plan_spec.build(Objective::LogReg, n, 300, 512, seed);
     let mut cluster = AsyncCluster::from_plan(experiments::make_regular(n, degree), plan);
@@ -571,11 +585,18 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
         kill_after_secs: args.get("kill-after").map(|v| v.parse().unwrap_or(0.0)),
         kill_nodes: args.get_usize("kill", 0).map_err(anyhow::Error::msg)?,
         transport,
+        engine: EngineKind::Executors(executors),
+        deterministic_events: None,
         seed,
     };
     println!(
-        "async cluster: {n} node threads, degree {degree}, {secs}s @ {rate}/s/node \
+        "async cluster: {n} node tasks on {} executors, degree {degree}, {secs}s @ {rate}/s/node \
          (spread {spread}, transport {}, plan {})",
+        if executors == 0 {
+            "auto".to_string()
+        } else {
+            executors.to_string()
+        },
         transport.name(),
         plan_spec.name()
     );
@@ -731,6 +752,13 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
     let stream_block_rows = args
         .get_usize("stream-block-rows", DEFAULT_BLOCK_ROWS)
         .map_err(anyhow::Error::msg)?;
+    let executors = args.get_usize("executors", 0).map_err(anyhow::Error::msg)?;
+    let flush_bytes = args
+        .get_usize("flush-bytes", 16 * 1024)
+        .map_err(anyhow::Error::msg)?;
+    let flush_micros = args
+        .get_u64("flush-micros", 500)
+        .map_err(anyhow::Error::msg)?;
     // The streamed shards come from the plan's own generator unless a
     // real corpus is named; notMNIST stays a `train`-only world (its
     // glyph renderer has no per-node partition recipe to stream).
@@ -763,6 +791,9 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         binary: None,
         stream_block_rows,
         staging_mb,
+        executors,
+        flush_bytes,
+        flush_micros,
         base_data,
     };
     println!(
@@ -855,6 +886,13 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         seed,
         staging_mb: args
             .get_usize("staging-mb", 1024)
+            .map_err(anyhow::Error::msg)?,
+        executors: args.get_usize("executors", 0).map_err(anyhow::Error::msg)?,
+        flush_bytes: args
+            .get_usize("flush-bytes", 16 * 1024)
+            .map_err(anyhow::Error::msg)?,
+        flush_micros: args
+            .get_u64("flush-micros", 500)
             .map_err(anyhow::Error::msg)?,
     };
     run_worker(&cfg)?;

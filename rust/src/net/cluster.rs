@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{spawn_shard_with_feeds, AsyncConfig};
+use crate::coordinator::{spawn_shard_with_feeds, AsyncConfig, EngineKind};
 use crate::data::stream::{fold_payloads, BlockBuffer, RowBlock, StreamProgress, DEFAULT_BLOCK_ROWS};
 use crate::data::Dataset;
 use crate::experiments::make_regular;
@@ -248,8 +248,16 @@ pub struct WorkerConfig {
     pub seed: u64,
     /// Staging budget in MiB (`--staging-mb`): bounds both the
     /// streaming [`BlockBuffer`] (blocks staged but not yet consumed by
-    /// node threads) and every connection's chunk-reassembly staging.
+    /// node tasks) and every connection's chunk-reassembly staging.
     pub staging_mb: usize,
+    /// Executor threads driving this rank's node tasks
+    /// (`--executors N`; 0 = one per CPU core).
+    pub executors: usize,
+    /// Per-peer coalescing byte threshold (`--flush-bytes`; 0 turns
+    /// batching off — every frame ships alone, the pre-v5 wire shape).
+    pub flush_bytes: usize,
+    /// Staleness bound on a coalescing buffer (`--flush-micros`).
+    pub flush_micros: u64,
 }
 
 /// What a finished worker reports.
@@ -409,6 +417,8 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         &cfg.peers[cfg.rank as usize],
         SocketConfig {
             staging_limit,
+            flush_bytes: cfg.flush_bytes,
+            flush_micros: cfg.flush_micros,
             ..SocketConfig::default()
         },
     )
@@ -467,6 +477,8 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         kill_after_secs: None,
         kill_nodes: 0,
         transport: TransportKind::Socket,
+        engine: EngineKind::Executors(cfg.executors),
+        deterministic_events: None,
         seed: cfg.seed,
     };
     // Streaming staging buffer, shared with the node threads' sampler
@@ -712,6 +724,14 @@ pub struct LaunchConfig {
     /// launcher's credit window per rank, and each worker's
     /// [`BlockBuffer`] / chunk-staging bound.
     pub staging_mb: usize,
+    /// Executor threads per worker (`--executors N`; 0 = one per core).
+    pub executors: usize,
+    /// Per-peer coalescing byte threshold forwarded to every worker
+    /// (`--flush-bytes`; 0 disables batching).
+    pub flush_bytes: usize,
+    /// Coalescing staleness bound forwarded to every worker
+    /// (`--flush-micros`).
+    pub flush_micros: u64,
     /// A real base corpus (`--dataset libsvm:<path>`) partitioned by
     /// `plan` instead of generating the synthetic world; the last
     /// `TEST_SAMPLES` rows are held out as the monitor's evaluation
@@ -738,6 +758,9 @@ impl LaunchConfig {
             seed: 0,
             stream_block_rows: DEFAULT_BLOCK_ROWS,
             staging_mb: 1024,
+            executors: 0,
+            flush_bytes: 16 * 1024,
+            flush_micros: 500,
             base_data: None,
             binary: None,
         }
@@ -944,6 +967,12 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 &param_len.to_string(),
                 "--staging-mb",
                 &cfg.staging_mb.to_string(),
+                "--executors",
+                &cfg.executors.to_string(),
+                "--flush-bytes",
+                &cfg.flush_bytes.to_string(),
+                "--flush-micros",
+                &cfg.flush_micros.to_string(),
                 "--seed",
                 &cfg.seed.to_string(),
             ])
@@ -1312,6 +1341,9 @@ mod tests {
             samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
             staging_mb: 1024,
+            executors: 0,
+            flush_bytes: 16 * 1024,
+            flush_micros: 500,
         };
         assert!(run_worker(&base).is_err(), "empty peers must fail");
         let mut bad_rank = base.clone();

@@ -102,6 +102,17 @@ pub struct SocketConfig {
     /// before any payload is buffered. Defaults to the codec's absolute
     /// 1 GiB cap, so nothing changes unless the flag tightens it.
     pub staging_limit: usize,
+    /// Send-coalescer threshold (`--flush-bytes`): same-destination
+    /// frames accumulate in a per-peer [`wire::BatchBuilder`] and flush
+    /// as one batched wire write once this many payload bytes are
+    /// pending. `0` disables coalescing entirely — every message is its
+    /// own wire write, the pre-v5 behavior.
+    pub flush_bytes: usize,
+    /// Send-coalescer staleness bound (`--flush-micros`): a pending
+    /// batch older than this is flushed by the background sweeper even
+    /// if under the byte threshold, so a quiet peer never waits long
+    /// for a half-full buffer.
+    pub flush_micros: u64,
 }
 
 impl Default for SocketConfig {
@@ -113,6 +124,8 @@ impl Default for SocketConfig {
             liveness: Duration::from_millis(1000),
             reconnect: Duration::from_millis(200),
             staging_limit: wire::MAX_MESSAGE_LEN,
+            flush_bytes: 16 * 1024,
+            flush_micros: 500,
         }
     }
 }
@@ -142,6 +155,30 @@ struct Round {
     busy: bool,
 }
 
+/// Per-peer send coalescer state: the pending batch, one reusable
+/// frame buffer for everything this link writes, and the age of the
+/// oldest pending message (what the sweeper checks). All buffers keep
+/// their capacity across flushes — the steady-state send path
+/// allocates nothing.
+struct SendBuf {
+    batch: wire::BatchBuilder,
+    /// Scratch for encoded frames (batched flushes and unbatched
+    /// single-frame sends alike).
+    frame: Vec<u8>,
+    /// When the oldest currently-pending message was enqueued.
+    oldest: Option<Instant>,
+}
+
+impl SendBuf {
+    fn new() -> Self {
+        Self {
+            batch: wire::BatchBuilder::new(),
+            frame: Vec::new(),
+            oldest: None,
+        }
+    }
+}
+
 /// One peer rank's connection state.
 struct Link {
     /// Dial address (set by [`SocketNet::connect_peers`]; the accept
@@ -149,6 +186,10 @@ struct Link {
     addr: Mutex<Option<String>>,
     /// Write half of the live connection. `None` while down.
     writer: Mutex<Option<TcpStream>>,
+    /// Outbound coalescer. Lock order: `sendbuf` before `writer`,
+    /// always — every wire write flows through one of the helpers
+    /// below, which uphold it.
+    sendbuf: Mutex<SendBuf>,
     alive: AtomicBool,
     last_seen: Mutex<Instant>,
 }
@@ -158,6 +199,7 @@ impl Link {
         Self {
             addr: Mutex::new(None),
             writer: Mutex::new(None),
+            sendbuf: Mutex::new(SendBuf::new()),
             alive: AtomicBool::new(false),
             last_seen: Mutex::new(Instant::now()),
         }
@@ -274,6 +316,12 @@ impl SocketNet {
             let inner = Arc::clone(&inner);
             move || heartbeat_loop(inner)
         });
+        if cfg.flush_bytes > 0 {
+            spawn_tracked(&inner, {
+                let inner = Arc::clone(&inner);
+                move || flusher_loop(inner)
+            });
+        }
         Ok(Self { inner })
     }
 
@@ -557,6 +605,14 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
         }
     };
     match msg {
+        // A coalesced flush: unpack and dispatch each entry in order.
+        // The decoder rejects nested batches, so this recurses at most
+        // one level.
+        WireMsg::Batch { msgs } => {
+            for m in msgs {
+                dispatch(inner, m);
+            }
+        }
         WireMsg::CollectRequest { from, to, token } => push(
             from,
             to,
@@ -647,22 +703,122 @@ fn heartbeat_loop(inner: Arc<Inner>) {
     }
 }
 
-/// Write one logical message to a peer rank (chunked past the frame
-/// cap); a failed write kills the link (the message is lost — the
-/// protocol's deadlines absorb loss as Conflict).
+/// Write one logical message to a peer rank. With coalescing enabled
+/// (`flush_bytes > 0`) small protocol frames accumulate in the link's
+/// per-peer [`SendBuf`] and go out as one batched wire write — flushed
+/// here when the byte threshold fills, or by [`flusher_loop`] when the
+/// buffer goes stale. A failed write kills the link (pending messages
+/// are lost — the protocol's deadlines absorb loss as Conflict).
 fn send_wire(inner: &Inner, rank: u32, msg: &WireMsg) {
     let Some(link) = &inner.links[rank as usize] else {
         return;
     };
+    if inner.cfg.flush_bytes == 0 || !msg.is_batchable() {
+        send_direct(link, msg);
+        return;
+    }
+    let mut buf = link.sendbuf.lock().unwrap();
+    match buf.batch.push(msg) {
+        Ok(()) => {}
+        Err(wire::WireError::Oversize { .. }) => {
+            // The pending batch is at the frame cap — flush it, then
+            // retry. A second refusal means the message alone cannot
+            // fit one frame: hand it to the chunked direct path.
+            flush_locked(link, &mut buf);
+            if buf.batch.push(msg).is_err() {
+                drop(buf);
+                send_direct(link, msg);
+                return;
+            }
+        }
+        Err(_) => return,
+    }
+    if buf.oldest.is_none() {
+        buf.oldest = Some(Instant::now());
+    }
+    if buf.batch.payload_bytes() >= inner.cfg.flush_bytes {
+        flush_locked(link, &mut buf);
+    }
+}
+
+/// Write `msg` immediately, bypassing the coalescer — the disabled-
+/// batching path, non-batchable frames, and anything past the frame
+/// cap (which goes out under the chunk envelope). Pending batched
+/// messages flush first so the peer never sees this frame reordered
+/// ahead of ones enqueued before it.
+fn send_direct(link: &Link, msg: &WireMsg) {
+    let mut buf = link.sendbuf.lock().unwrap();
+    flush_locked(link, &mut buf);
+    match wire::encode_into(msg, &mut buf.frame) {
+        Ok(()) => {
+            let frame = std::mem::take(&mut buf.frame);
+            write_bytes(link, &frame);
+            buf.frame = frame;
+        }
+        Err(wire::WireError::Oversize { .. }) => {
+            // Larger than one frame: the chunk envelope streams it
+            // without materializing the sequence.
+            let mut writer = link.writer.lock().unwrap();
+            let Some(stream) = writer.as_mut() else {
+                return;
+            };
+            if wire::write_message(stream, msg).is_err() {
+                if let Some(s) = writer.take() {
+                    let _ = s.shutdown(Shutdown::Both);
+                }
+                link.alive.store(false, Ordering::SeqCst);
+            }
+        }
+        Err(_) => {}
+    }
+}
+
+/// Flush the link's pending batch as one wire write. Caller holds the
+/// `sendbuf` lock.
+fn flush_locked(link: &Link, buf: &mut SendBuf) {
+    buf.oldest = None;
+    if buf.batch.is_empty() {
+        return;
+    }
+    // frame_into cannot fail on a non-empty builder; a defensive error
+    // still clears the batch so the buffer never wedges.
+    let mut frame = std::mem::take(&mut buf.frame);
+    if buf.batch.frame_into(&mut frame).is_ok() {
+        write_bytes(link, &frame);
+    }
+    buf.frame = frame;
+}
+
+/// Write pre-encoded frame bytes to the link, killing it on failure.
+fn write_bytes(link: &Link, bytes: &[u8]) {
     let mut writer = link.writer.lock().unwrap();
     let Some(stream) = writer.as_mut() else {
         return;
     };
-    if wire::write_message(stream, msg).is_err() {
+    if std::io::Write::write_all(stream, bytes).is_err() {
         if let Some(s) = writer.take() {
             let _ = s.shutdown(Shutdown::Both);
         }
         link.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Background sweeper: flush any per-peer batch whose oldest pending
+/// message has waited `flush_micros`, so coalescing trades at most a
+/// bounded sliver of latency for its write amplification win.
+fn flusher_loop(inner: Arc<Inner>) {
+    let stale = Duration::from_micros(inner.cfg.flush_micros.max(1));
+    // Sweep at twice the staleness bound (floor 50µs keeps this thread
+    // from busy-spinning under an aggressive flag).
+    let sweep = (stale / 2).max(Duration::from_micros(50));
+    while !inner.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(sweep);
+        for link in inner.links.iter().flatten() {
+            let mut buf = link.sendbuf.lock().unwrap();
+            if buf.oldest.map(|t| t.elapsed() >= stale).unwrap_or(false) {
+                flush_locked(link, &mut buf);
+            }
+        }
     }
 }
 
@@ -936,9 +1092,13 @@ mod tests {
 
     /// Two ranks over loopback TCP, nodes 0..4 split 2+2.
     fn pair(param_len: usize) -> (SocketNet, SocketNet) {
+        pair_with(param_len, fast_cfg())
+    }
+
+    fn pair_with(param_len: usize, cfg: SocketConfig) -> (SocketNet, SocketNet) {
         let shard = ShardMap::new(4, 2);
-        let a = SocketNet::bind(0, shard, param_len, "127.0.0.1:0", fast_cfg()).unwrap();
-        let b = SocketNet::bind(1, shard, param_len, "127.0.0.1:0", fast_cfg()).unwrap();
+        let a = SocketNet::bind(0, shard, param_len, "127.0.0.1:0", cfg).unwrap();
+        let b = SocketNet::bind(1, shard, param_len, "127.0.0.1:0", cfg).unwrap();
         let peers = vec![a.local_addr().to_string(), b.local_addr().to_string()];
         a.connect_peers(&peers);
         b.connect_peers(&peers);
@@ -1006,6 +1166,50 @@ mod tests {
         }
         a.shutdown();
         b.shutdown();
+    }
+
+    /// The same cross-shard round as above, once with coalescing
+    /// disabled (`--flush-bytes 0`, every frame its own write) and once
+    /// with a sweeper-dependent policy (threshold too large to fill, so
+    /// every flush is the staleness sweeper's) — the protocol outcome
+    /// is identical either way.
+    #[test]
+    fn projection_outcome_is_policy_independent() {
+        let unbatched = SocketConfig {
+            flush_bytes: 0,
+            ..fast_cfg()
+        };
+        let sweeper_only = SocketConfig {
+            flush_bytes: 1 << 20,
+            flush_micros: 200,
+            ..fast_cfg()
+        };
+        for cfg in [unbatched, sweeper_only] {
+            let (a, b) = pair_with(2, cfg);
+            a.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
+            b.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
+            let stop = Arc::new(AtomicBool::new(false));
+            let pumps = vec![pump(&a, vec![0], stop.clone()), pump(&b, vec![2, 3], stop.clone())];
+            let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
+                neighborhood_average(rows)
+            });
+            assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                let w2 = b.local_params()[0].1.clone();
+                if w2 == vec![1.0, 2.0] {
+                    break;
+                }
+                assert!(Instant::now() < deadline, "Apply never landed: {w2:?}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            stop.store(true, Ordering::Relaxed);
+            for p in pumps {
+                p.join().unwrap();
+            }
+            a.shutdown();
+            b.shutdown();
+        }
     }
 
     #[test]

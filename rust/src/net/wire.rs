@@ -14,10 +14,12 @@
 //! `PlanStart` — real data shards travel to workers, see
 //! docs/heterogeneity.md), the streaming data plane (`ShardBlock` /
 //! `ShardComplete` / `ShardCredit` — row blocks of a shard ship
-//! incrementally under backpressure credits, see docs/data.md), and the
-//! chunk envelope (`ChunkBegin` / `ChunkData` / `ChunkEnd`). All
-//! integers are little-endian; `f32` vectors are raw LE bit patterns
-//! (NaN-safe round trips).
+//! incrementally under backpressure credits, see docs/data.md), the
+//! chunk envelope (`ChunkBegin` / `ChunkData` / `ChunkEnd`), and the
+//! batch envelope (`Batch` — several small logical messages coalesced
+//! into one frame, see docs/deployment.md). All integers are
+//! little-endian; `f32` vectors are raw LE bit patterns (NaN-safe round
+//! trips).
 //!
 //! # Logical messages vs frames
 //!
@@ -59,7 +61,9 @@ use std::io::{Read, Write};
 /// [`ShardComplete`](WireMsg::ShardComplete) /
 /// [`ShardCredit`](WireMsg::ShardCredit)), the `streaming` flag on
 /// `PlanStart`, and the stream-status fields on `SnapshotReply`.
-pub const WIRE_VERSION: u8 = 4;
+/// v5 added the [`Batch`](WireMsg::Batch) envelope — the per-peer send
+/// coalescer ships many small protocol frames as one wire write.
+pub const WIRE_VERSION: u8 = 5;
 
 /// Upper bound on one frame's payload (version + tag + body). Small
 /// enough that a garbage length prefix cannot balloon memory; logical
@@ -220,6 +224,13 @@ pub enum WireMsg {
     /// End of the chunked message; `checksum` is [`fnv1a64`] over the
     /// reassembled body.
     ChunkEnd { checksum: u64 },
+    /// Batch envelope: several complete logical messages coalesced into
+    /// one frame (the per-peer send coalescer's unit of work — many
+    /// small projection-protocol frames become one wire write). Each
+    /// entry is itself a full encoded body (version + tag + fields), so
+    /// decoding is total per entry; chunk frames and nested batches are
+    /// refused on both sides. Empty batches are malformed.
+    Batch { msgs: Vec<WireMsg> },
 }
 
 impl WireMsg {
@@ -243,7 +254,18 @@ impl WireMsg {
             WireMsg::ShardBlock { .. } => 15,
             WireMsg::ShardComplete { .. } => 16,
             WireMsg::ShardCredit { .. } => 17,
+            WireMsg::Batch { .. } => 18,
         }
+    }
+
+    /// May this message ride inside a [`Batch`](WireMsg::Batch)?
+    /// Chunk frames would desync the per-peer assembler and nested
+    /// batches would allow unbounded recursion — both are refused.
+    /// May this message ride inside a [`Batch`](WireMsg::Batch)
+    /// envelope? Chunk frames carry their own framing state and batches
+    /// do not nest — everything else is a plain logical message.
+    pub fn is_batchable(&self) -> bool {
+        !self.is_chunk_frame() && !matches!(self, WireMsg::Batch { .. })
     }
 
     fn is_chunk_frame(&self) -> bool {
@@ -278,6 +300,10 @@ pub enum WireError {
     /// message, counts/bytes that disagree with the announcement, or a
     /// checksum mismatch.
     Chunk { reason: &'static str },
+    /// The batch envelope was violated: an empty batch, a chunk frame
+    /// or nested batch among the entries, or an entry whose announced
+    /// length disagrees with the bytes present.
+    Batch { reason: &'static str },
     /// A chunked message announced more bytes than this connection's
     /// configured staging budget allows.
     Staging { len: usize, limit: usize },
@@ -292,8 +318,8 @@ impl std::fmt::Display for WireError {
                 write!(
                     f,
                     "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
-                     upgrade the older end (pre-v4 peers cannot speak the streaming \
-                     data plane)"
+                     upgrade the older end (pre-v5 peers cannot speak the batched \
+                     hot path)"
                 )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
@@ -308,6 +334,7 @@ impl std::fmt::Display for WireError {
                 write!(f, "{extra} trailing bytes after the last field")
             }
             WireError::Chunk { reason } => write!(f, "chunk stream violation: {reason}"),
+            WireError::Batch { reason } => write!(f, "batch envelope violation: {reason}"),
             WireError::Staging { len, limit } => {
                 write!(
                     f,
@@ -337,6 +364,10 @@ impl From<std::io::Error> for WireError {
 
 fn chunk_err(reason: &'static str) -> WireError {
     WireError::Chunk { reason }
+}
+
+fn batch_err(reason: &'static str) -> WireError {
+    WireError::Batch { reason }
 }
 
 /// FNV-1a 64-bit over a byte slice — the chunk/plan integrity checksum.
@@ -430,27 +461,37 @@ fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) -> Result<(), WireError> {
 /// [`encode_message`] chunks past it.
 fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
     let mut body = Vec::with_capacity(32);
+    encode_body_append(msg, &mut body)?;
+    Ok(body)
+}
+
+/// [`encode_body`], appended to a caller-owned buffer (nothing is
+/// cleared). This is the hot-path primitive — the per-peer send
+/// coalescer re-encodes thousands of small frames per second through
+/// one reused buffer, allocation-free at steady state. On error the
+/// buffer may hold a partial body; callers truncate back to their mark.
+fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError> {
     body.push(WIRE_VERSION);
     body.push(msg.tag());
     match msg {
-        WireMsg::Hello { rank } => put_u32(&mut body, *rank),
+        WireMsg::Hello { rank } => put_u32(body, *rank),
         WireMsg::Heartbeat { rank, seq } => {
-            put_u32(&mut body, *rank);
-            put_u64(&mut body, *seq);
+            put_u32(body, *rank);
+            put_u64(body, *seq);
         }
         WireMsg::CollectRequest { from, to, token }
         | WireMsg::Busy { from, to, token }
         | WireMsg::Abort { from, to, token } => {
-            put_u32(&mut body, *from);
-            put_u32(&mut body, *to);
-            put_u64(&mut body, *token);
+            put_u32(body, *from);
+            put_u32(body, *to);
+            put_u64(body, *token);
         }
         WireMsg::CollectReply { from, to, token, w }
         | WireMsg::ApplyAverage { from, to, token, w } => {
-            put_u32(&mut body, *from);
-            put_u32(&mut body, *to);
-            put_u64(&mut body, *token);
-            put_f32s(&mut body, w)?;
+            put_u32(body, *from);
+            put_u32(body, *to);
+            put_u64(body, *token);
+            put_f32s(body, w)?;
         }
         WireMsg::SnapshotRequest | WireMsg::Shutdown => {}
         WireMsg::SnapshotReply {
@@ -461,18 +502,18 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             stream_done,
             updates_at_stream_complete,
         } => {
-            put_u32(&mut body, *rank);
+            put_u32(body, *rank);
             for &c in counts {
-                put_u64(&mut body, c);
+                put_u64(body, c);
             }
-            put_len(&mut body, params.len())?;
+            put_len(body, params.len())?;
             for (node, w) in params {
-                put_u32(&mut body, *node);
-                put_f32s(&mut body, w)?;
+                put_u32(body, *node);
+                put_f32s(body, w)?;
             }
-            put_u64(&mut body, *staging_bytes);
+            put_u64(body, *staging_bytes);
             body.push(u8::from(*stream_done));
-            put_u64(&mut body, *updates_at_stream_complete);
+            put_u64(body, *updates_at_stream_complete);
         }
         WireMsg::PlanAssign {
             node,
@@ -483,13 +524,13 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             labels,
             features,
         } => {
-            put_u32(&mut body, *node);
+            put_u32(body, *node);
             body.push(*obj_code);
-            put_f32(&mut body, *lam);
-            put_u32(&mut body, *dim);
-            put_u32(&mut body, *classes);
-            put_u32s(&mut body, labels)?;
-            put_f32s(&mut body, features)?;
+            put_f32(body, *lam);
+            put_u32(body, *dim);
+            put_u32(body, *classes);
+            put_u32s(body, labels)?;
+            put_f32s(body, features)?;
         }
         WireMsg::PlanStart {
             nodes,
@@ -498,10 +539,10 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             checksum,
             streaming,
         } => {
-            put_u32(&mut body, *nodes);
-            put_u32(&mut body, *assigned);
+            put_u32(body, *nodes);
+            put_u32(body, *assigned);
             body.push(u8::from(*mixed));
-            put_u64(&mut body, *checksum);
+            put_u64(body, *checksum);
             body.push(u8::from(*streaming));
         }
         WireMsg::ShardBlock {
@@ -515,15 +556,15 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             features,
             checksum,
         } => {
-            put_u32(&mut body, *node);
-            put_u32(&mut body, *seq);
+            put_u32(body, *node);
+            put_u32(body, *seq);
             body.push(*encoding);
-            put_u32(&mut body, *rows);
-            put_u32(&mut body, *dim);
-            put_u32(&mut body, *classes);
-            put_u32s(&mut body, labels)?;
-            put_f32s(&mut body, features)?;
-            put_u64(&mut body, *checksum);
+            put_u32(body, *rows);
+            put_u32(body, *dim);
+            put_u32(body, *classes);
+            put_u32s(body, labels)?;
+            put_f32s(body, features)?;
+            put_u64(body, *checksum);
         }
         WireMsg::ShardComplete {
             node,
@@ -531,23 +572,39 @@ fn encode_body(msg: &WireMsg) -> Result<Vec<u8>, WireError> {
             total_rows,
             checksum,
         } => {
-            put_u32(&mut body, *node);
-            put_u32(&mut body, *block_count);
-            put_u64(&mut body, *total_rows);
-            put_u64(&mut body, *checksum);
+            put_u32(body, *node);
+            put_u32(body, *block_count);
+            put_u64(body, *total_rows);
+            put_u64(body, *checksum);
         }
-        WireMsg::ShardCredit { bytes } => put_u64(&mut body, *bytes),
+        WireMsg::ShardCredit { bytes } => put_u64(body, *bytes),
         WireMsg::ChunkBegin {
             total_bytes,
             chunk_count,
         } => {
-            put_u64(&mut body, *total_bytes);
-            put_u32(&mut body, *chunk_count);
+            put_u64(body, *total_bytes);
+            put_u32(body, *chunk_count);
         }
-        WireMsg::ChunkData { bytes } => put_bytes(&mut body, bytes)?,
-        WireMsg::ChunkEnd { checksum } => put_u64(&mut body, *checksum),
+        WireMsg::ChunkData { bytes } => put_bytes(body, bytes)?,
+        WireMsg::ChunkEnd { checksum } => put_u64(body, *checksum),
+        WireMsg::Batch { msgs } => {
+            if msgs.is_empty() {
+                return Err(batch_err("a batch must carry at least one message"));
+            }
+            put_len(body, msgs.len())?;
+            for m in msgs {
+                if !m.is_batchable() {
+                    return Err(batch_err(
+                        "batch entries must be plain logical messages (no chunk \
+                         frames, no nested batches)",
+                    ));
+                }
+                let inner = encode_body(m)?;
+                put_bytes(body, &inner)?;
+            }
+        }
     }
-    Ok(body)
+    Ok(())
 }
 
 /// Wrap an encoded body in its length prefix.
@@ -621,6 +678,124 @@ pub fn encode_message(msg: &WireMsg) -> Result<Vec<Vec<u8>>, WireError> {
 /// unit the `PlanStart` plan checksum folds over.
 pub fn message_checksum(msg: &WireMsg) -> Result<u64, WireError> {
     Ok(fnv1a64(&encode_body(msg)?))
+}
+
+/// Serialize one message as a complete single frame into a caller-owned
+/// buffer: `out` is cleared and refilled, keeping its capacity (the
+/// allocation-free sibling of [`encode`]). Same totality: a body past
+/// [`MAX_FRAME_LEN`] returns [`WireError::Oversize`].
+pub fn encode_into(msg: &WireMsg, out: &mut Vec<u8>) -> Result<(), WireError> {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]); // length prefix, patched below
+    encode_body_append(msg, out)?;
+    let len = out.len() - 4;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversize { len });
+    }
+    out[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    Ok(())
+}
+
+/// Builder for the per-peer send coalescer: accumulates small logical
+/// messages and emits them as one frame — the message itself when only
+/// one is pending (zero envelope overhead), a [`Batch`](WireMsg::Batch)
+/// frame otherwise. All buffers are reused across
+/// [`BatchBuilder::frame_into`] cycles, so a steady-state sender
+/// allocates nothing.
+pub struct BatchBuilder {
+    /// Concatenated `[len: u32][body]` entries — exactly the Batch body
+    /// layout after its count field.
+    payload: Vec<u8>,
+    count: u32,
+}
+
+impl Default for BatchBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchBuilder {
+    pub fn new() -> Self {
+        Self {
+            payload: Vec::new(),
+            count: 0,
+        }
+    }
+
+    /// Number of messages pending.
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Bytes the pending messages would occupy on the wire (payload
+    /// only; the envelope adds a fixed few bytes).
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Append one message to the pending batch. Refuses chunk frames
+    /// and nested batches ([`WireError::Batch`]) and anything that
+    /// would push the eventual frame past [`MAX_FRAME_LEN`]
+    /// ([`WireError::Oversize`] — flush first, then retry). On any
+    /// error the builder is unchanged.
+    pub fn push(&mut self, msg: &WireMsg) -> Result<(), WireError> {
+        if !msg.is_batchable() {
+            return Err(batch_err(
+                "batch entries must be plain logical messages (no chunk \
+                 frames, no nested batches)",
+            ));
+        }
+        let mark = self.payload.len();
+        self.payload.extend_from_slice(&[0u8; 4]); // entry length, patched below
+        if let Err(e) = encode_body_append(msg, &mut self.payload) {
+            self.payload.truncate(mark);
+            return Err(e);
+        }
+        let entry = self.payload.len() - mark - 4;
+        // version + tag + count of the Batch envelope = 6 bytes.
+        if 6 + self.payload.len() > MAX_FRAME_LEN {
+            self.payload.truncate(mark);
+            return Err(WireError::Oversize {
+                len: 6 + mark + 4 + entry,
+            });
+        }
+        self.payload[mark..mark + 4].copy_from_slice(&(entry as u32).to_le_bytes());
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Emit everything pending as one complete frame into `out`
+    /// (cleared first, capacity kept) and reset the builder for reuse.
+    /// One pending message emits as its plain single frame — a batched
+    /// stream therefore decodes to exactly the same message sequence as
+    /// an unbatched one. An empty builder refuses.
+    pub fn frame_into(&mut self, out: &mut Vec<u8>) -> Result<(), WireError> {
+        if self.count == 0 {
+            return Err(batch_err("a batch must carry at least one message"));
+        }
+        out.clear();
+        if self.count == 1 {
+            // The single entry is already a complete encoded body with
+            // its own length prefix — reuse it as the frame directly.
+            out.extend_from_slice(&self.payload);
+        } else {
+            let len = 2 + 4 + self.payload.len();
+            debug_assert!(len <= MAX_FRAME_LEN, "push() enforces the frame cap");
+            out.extend_from_slice(&(len as u32).to_le_bytes());
+            out.push(WIRE_VERSION);
+            out.push(18); // WireMsg::Batch
+            out.extend_from_slice(&self.count.to_le_bytes());
+            out.extend_from_slice(&self.payload);
+        }
+        self.payload.clear();
+        self.count = 0;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -825,6 +1000,30 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             checksum: c.u64()?,
         },
         17 => WireMsg::ShardCredit { bytes: c.u64()? },
+        18 => {
+            let count = c.u32()? as usize;
+            if count == 0 {
+                return Err(batch_err("a batch must carry at least one message"));
+            }
+            // Each entry needs at least a length prefix plus a
+            // version + tag pair: reject counts the body cannot hold
+            // before allocating.
+            if count.checked_mul(6).map(|b| b > c.remaining()).unwrap_or(true) {
+                return Err(WireError::Oversize { len: count });
+            }
+            let mut msgs = Vec::with_capacity(count);
+            for _ in 0..count {
+                let inner = decode_body(c.bytes()?)?;
+                if !inner.is_batchable() {
+                    return Err(batch_err(
+                        "batch entries must be plain logical messages (no chunk \
+                         frames, no nested batches)",
+                    ));
+                }
+                msgs.push(inner);
+            }
+            WireMsg::Batch { msgs }
+        }
         got => return Err(WireError::UnknownTag { got }),
     };
     c.done()?;
@@ -1179,6 +1378,29 @@ mod tests {
             bytes: vec![7, 8, 9, 0xFF],
         });
         roundtrip(WireMsg::ChunkEnd { checksum: u64::MAX });
+        roundtrip(WireMsg::Batch {
+            msgs: vec![WireMsg::Hello { rank: 1 }],
+        });
+        roundtrip(WireMsg::Batch {
+            msgs: vec![
+                WireMsg::CollectRequest {
+                    from: 0,
+                    to: 1,
+                    token: 2,
+                },
+                WireMsg::Busy {
+                    from: 1,
+                    to: 0,
+                    token: 2,
+                },
+                WireMsg::ApplyAverage {
+                    from: 0,
+                    to: 1,
+                    token: 2,
+                    w: vec![0.5; 32],
+                },
+            ],
+        });
     }
 
     #[test]
@@ -1501,6 +1723,285 @@ mod tests {
             assert_eq!(read_message(&mut cursor, &mut asm).unwrap(), msg);
             assert_eq!(cursor.position() as usize, buf.len());
         }
+    }
+
+    #[test]
+    fn batch_round_trips_and_preserves_order() {
+        let msgs = vec![
+            WireMsg::CollectRequest {
+                from: 0,
+                to: 1,
+                token: 7,
+            },
+            WireMsg::Busy {
+                from: 1,
+                to: 0,
+                token: 7,
+            },
+            WireMsg::ApplyAverage {
+                from: 0,
+                to: 1,
+                token: 7,
+                w: vec![1.0, -2.5, f32::NAN],
+            },
+            WireMsg::Heartbeat { rank: 2, seq: 9 },
+        ];
+        let batch = WireMsg::Batch { msgs: msgs.clone() };
+        let frame = encode(&batch).unwrap();
+        let (back, used) = decode(&frame).unwrap().unwrap();
+        assert_eq!(used, frame.len());
+        let WireMsg::Batch { msgs: got } = back else {
+            panic!("wrong variant");
+        };
+        // Bit-exact per entry (NaN payload included).
+        assert_eq!(got.len(), msgs.len());
+        for (a, b) in got.iter().zip(&msgs) {
+            assert_eq!(encode(a).unwrap(), encode(b).unwrap());
+        }
+        // The assembler passes a batch through like any non-chunk frame.
+        let mut asm = ChunkAssembler::new();
+        let passed = asm.accept(WireMsg::Batch { msgs: msgs.clone() }).unwrap();
+        assert_eq!(passed, Some(WireMsg::Batch { msgs }));
+    }
+
+    #[test]
+    fn batch_envelope_violations_error_not_panic() {
+        // Empty batches refuse on encode...
+        assert!(matches!(
+            encode(&WireMsg::Batch { msgs: vec![] }),
+            Err(WireError::Batch { .. })
+        ));
+        // ...and on decode (hand-built zero count).
+        let mut body = vec![WIRE_VERSION, 18];
+        body.extend_from_slice(&0u32.to_le_bytes());
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Batch { .. })));
+
+        // Nested batches and chunk frames refuse on encode.
+        for bad in [
+            WireMsg::Batch {
+                msgs: vec![WireMsg::Shutdown],
+            },
+            WireMsg::ChunkEnd { checksum: 0 },
+        ] {
+            assert!(matches!(
+                encode(&WireMsg::Batch { msgs: vec![bad] }),
+                Err(WireError::Batch { .. })
+            ));
+        }
+
+        // ...and on decode: hand-build a batch whose single entry is a
+        // chunk frame, then one whose entry is itself a batch.
+        for inner in [
+            encode(&WireMsg::ChunkEnd { checksum: 0 }).unwrap(),
+            encode(&WireMsg::Batch {
+                msgs: vec![WireMsg::Shutdown],
+            })
+            .unwrap(),
+        ] {
+            let entry = &inner[4..]; // strip the frame length prefix
+            let mut body = vec![WIRE_VERSION, 18];
+            body.extend_from_slice(&1u32.to_le_bytes());
+            body.extend_from_slice(&(entry.len() as u32).to_le_bytes());
+            body.extend_from_slice(entry);
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            frame.extend_from_slice(&body);
+            assert!(matches!(decode(&frame), Err(WireError::Batch { .. })));
+        }
+
+        // A mixed-version entry errors with the version diagnostic.
+        let entry = {
+            let f = encode(&WireMsg::Shutdown).unwrap();
+            let mut e = f[4..].to_vec();
+            e[0] = 4; // pre-batch peer
+            e
+        };
+        let mut body = vec![WIRE_VERSION, 18];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(entry.len() as u32).to_le_bytes());
+        body.extend_from_slice(&entry);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Version { got: 4 })));
+
+        // A lying count refuses before allocating.
+        let mut body = vec![WIRE_VERSION, 18];
+        body.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Oversize { .. })));
+
+        // An entry truncated mid-body surfaces the inner decode error.
+        let good = encode(&WireMsg::Heartbeat { rank: 1, seq: 2 }).unwrap();
+        let entry = &good[4..];
+        let mut body = vec![WIRE_VERSION, 18];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(entry.len() as u32).to_le_bytes());
+        body.extend_from_slice(&entry[..entry.len() - 3]); // short payload
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_capacity() {
+        let msg = WireMsg::CollectReply {
+            from: 3,
+            to: 4,
+            token: 5,
+            w: vec![0.5; 64],
+        };
+        let mut buf = Vec::new();
+        encode_into(&msg, &mut buf).unwrap();
+        assert_eq!(buf, encode(&msg).unwrap());
+        let cap = buf.capacity();
+        // Re-encoding a smaller message keeps the allocation.
+        encode_into(&WireMsg::Shutdown, &mut buf).unwrap();
+        assert_eq!(buf, encode(&WireMsg::Shutdown).unwrap());
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn batch_builder_single_message_emits_the_plain_frame() {
+        let msg = WireMsg::Abort {
+            from: 1,
+            to: 2,
+            token: 3,
+        };
+        let mut b = BatchBuilder::new();
+        b.push(&msg).unwrap();
+        assert_eq!(b.len(), 1);
+        let mut out = Vec::new();
+        b.frame_into(&mut out).unwrap();
+        // One pending message: zero envelope overhead, byte-identical
+        // to the unbatched wire.
+        assert_eq!(out, encode(&msg).unwrap());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batch_builder_stream_decodes_to_the_unbatched_sequence() {
+        let msgs = vec![
+            WireMsg::CollectRequest {
+                from: 0,
+                to: 1,
+                token: 1,
+            },
+            WireMsg::CollectReply {
+                from: 1,
+                to: 0,
+                token: 1,
+                w: vec![2.0; 8],
+            },
+            WireMsg::ApplyAverage {
+                from: 0,
+                to: 1,
+                token: 1,
+                w: vec![1.5; 8],
+            },
+            WireMsg::Heartbeat { rank: 0, seq: 1 },
+            WireMsg::Abort {
+                from: 2,
+                to: 3,
+                token: 9,
+            },
+        ];
+        // Unbatched: five frames.
+        let unbatched: Vec<WireMsg> = msgs
+            .iter()
+            .map(|m| {
+                let f = encode(m).unwrap();
+                decode(&f).unwrap().unwrap().0
+            })
+            .collect();
+        // Batched: 2 + 3 across two flushes, then flattened on read.
+        let mut b = BatchBuilder::new();
+        let mut stream = Vec::new();
+        let mut out = Vec::new();
+        for (i, m) in msgs.iter().enumerate() {
+            b.push(m).unwrap();
+            if i == 1 || i == msgs.len() - 1 {
+                b.frame_into(&mut out).unwrap();
+                stream.extend_from_slice(&out);
+            }
+        }
+        let mut flat = Vec::new();
+        let mut rest = &stream[..];
+        while !rest.is_empty() {
+            let (m, used) = decode(rest).unwrap().unwrap();
+            match m {
+                WireMsg::Batch { msgs } => flat.extend(msgs),
+                other => flat.push(other),
+            }
+            rest = &rest[used..];
+        }
+        assert_eq!(flat, unbatched);
+        // The builder is reusable after its flushes and its buffers
+        // survive with capacity intact.
+        assert!(b.is_empty());
+        assert_eq!(b.payload_bytes(), 0);
+        b.push(&WireMsg::Shutdown).unwrap();
+        b.frame_into(&mut out).unwrap();
+        assert_eq!(out, encode(&WireMsg::Shutdown).unwrap());
+    }
+
+    #[test]
+    fn batch_builder_refuses_unbatchable_and_empty_flush() {
+        let mut b = BatchBuilder::new();
+        assert!(matches!(
+            b.push(&WireMsg::ChunkEnd { checksum: 0 }),
+            Err(WireError::Batch { .. })
+        ));
+        assert!(matches!(
+            b.push(&WireMsg::Batch {
+                msgs: vec![WireMsg::Shutdown]
+            }),
+            Err(WireError::Batch { .. })
+        ));
+        // Rejected pushes leave nothing pending.
+        assert!(b.is_empty());
+        let mut out = Vec::new();
+        assert!(matches!(
+            b.frame_into(&mut out),
+            Err(WireError::Batch { .. })
+        ));
+        // A good message after the refusals still works.
+        b.push(&WireMsg::SnapshotRequest).unwrap();
+        b.frame_into(&mut out).unwrap();
+        assert_eq!(out, encode(&WireMsg::SnapshotRequest).unwrap());
+    }
+
+    #[test]
+    fn batch_builder_enforces_the_frame_cap() {
+        // Each entry is ~4 MiB; the fifth would push the frame past
+        // 16 MiB and must refuse, leaving the first four intact.
+        let big = WireMsg::CollectReply {
+            from: 0,
+            to: 1,
+            token: 0,
+            w: vec![1.0; (1 << 20) - 64],
+        };
+        let mut b = BatchBuilder::new();
+        for _ in 0..4 {
+            b.push(&big).unwrap();
+        }
+        assert!(matches!(b.push(&big), Err(WireError::Oversize { .. })));
+        assert_eq!(b.len(), 4);
+        let mut out = Vec::new();
+        b.frame_into(&mut out).unwrap();
+        assert!(out.len() <= 4 + MAX_FRAME_LEN);
+        let (m, used) = decode(&out).unwrap().unwrap();
+        assert_eq!(used, out.len());
+        let WireMsg::Batch { msgs } = m else {
+            panic!("wrong variant");
+        };
+        assert_eq!(msgs.len(), 4);
     }
 
     #[test]

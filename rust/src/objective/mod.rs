@@ -160,6 +160,32 @@ impl Objective {
         }
     }
 
+    /// Batch-N sibling of [`Objective::step_inputs`]: stack the step
+    /// targets of `labels` and scale the learning rate by the batch
+    /// size. The batched artifacts take one mean-gradient step, so
+    /// `B·lr` over a `B`-row minibatch matches `B` sequential steps at
+    /// `lr` to first order in `lr` (the linear-scaling rule) — this is
+    /// what the executor scheduler uses to collapse a backlogged node's
+    /// owed gradient firings into one compiled call.
+    pub fn step_inputs_batch(
+        &self,
+        labels: &[usize],
+        classes: usize,
+        lr: f32,
+        scale: f32,
+    ) -> StepInputs {
+        let mut y = Vec::with_capacity(labels.len() * classes);
+        for &label in labels {
+            y.extend(self.step_target(label, classes));
+        }
+        StepInputs {
+            y,
+            lr: [lr * labels.len() as f32],
+            scale: [scale],
+            lam: self.lam().map(|l| [l]),
+        }
+    }
+
     /// One SGD/subgradient step on a flat row-major microbatch:
     /// `w ← w − lr·scale·∇f` in-place; returns the minibatch mean loss
     /// (regularized for hinge/lasso). Mirrors the Pallas step kernels
@@ -297,6 +323,17 @@ impl Objective {
             Objective::LogReg => format!("logreg_step_{family}_b1"),
             Objective::Hinge { .. } => "hinge_step_b1".to_string(),
             Objective::Lasso { .. } => "lasso_step_b1".to_string(),
+        }
+    }
+
+    /// Name of the batch-8 PJRT step artifact — the batched sibling of
+    /// [`Objective::pjrt_step_artifact`] (same shape family, 8 feature
+    /// rows per call; see `python/compile/aot.py`).
+    pub fn pjrt_step_artifact_b8(&self, family: &str) -> String {
+        match self {
+            Objective::LogReg => format!("logreg_step_{family}_b8"),
+            Objective::Hinge { .. } => "hinge_step_b8".to_string(),
+            Objective::Lasso { .. } => "lasso_step_b8".to_string(),
         }
     }
 

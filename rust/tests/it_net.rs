@@ -10,6 +10,7 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -20,8 +21,9 @@ use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
 use dasgd::net::{
     assignment_from_msg, plan_assign_msg, LaunchConfig, ShardMap, SocketConfig, SocketNet,
 };
+use dasgd::node_logic::neighborhood_average;
 use dasgd::objective::Objective;
-use dasgd::transport::{Transport, TransportKind};
+use dasgd::transport::{ProjectionOutcome, Transport, TransportKind};
 use dasgd::workload::{PlanSpec, WorkloadPlan};
 
 /// Consensus tolerance shared by every engine comparison on the fixed
@@ -118,6 +120,162 @@ fn socket_pair_matches_channel_consensus_tolerance_in_process() {
     );
     assert!(d_channel < TOL, "channel consensus {d_channel} ≥ {TOL}");
     assert!(cohort.iter().all(|w| w.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn batched_and_unbatched_socket_runs_apply_identical_updates() {
+    // The coalescing acceptance check: the same scripted horizon —
+    // deterministic local steps plus sequential cross-shard projection
+    // rounds on the fixed ring — must apply exactly the same updates
+    // whether frames leave one per message (`flush_bytes: 0`) or
+    // coalesced into WIRE_VERSION 5 `Batch` envelopes (the default
+    // policy). Applied-update counts AND final parameter bits have to
+    // agree; the test mirrors the whole trajectory in-process so every
+    // remote apply is also checked bit-for-bit as it lands.
+    const PARAM_LEN: usize = 6;
+    const GRAD_PASSES: u32 = 3;
+    const PROJ_ROUNDS: usize = 2;
+
+    let run = |cfg: SocketConfig| -> (u64, Vec<Vec<u32>>) {
+        let map = ShardMap::new(NODES, 2);
+        let a = SocketNet::bind(0, map, PARAM_LEN, "127.0.0.1:0", cfg).unwrap();
+        let b = SocketNet::bind(1, map, PARAM_LEN, "127.0.0.1:0", cfg).unwrap();
+        let peers = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+        a.connect_peers(&peers);
+        b.connect_peers(&peers);
+        assert!(a.wait_connected(Duration::from_secs(5)));
+        assert!(b.wait_connected(Duration::from_secs(5)));
+        let owner = |i: usize| if i < NODES / 2 { &a } else { &b };
+
+        // In-process mirror of every node's parameters — the oracle the
+        // live deployment must track bit-for-bit.
+        let mut world: Vec<Vec<f32>> = vec![vec![0.0; PARAM_LEN]; NODES];
+        let mut applied = 0u64;
+
+        // Deterministic "grad" phase: local steps only, no wire.
+        for pass in 0..GRAD_PASSES {
+            for i in 0..NODES {
+                let bump = |w: &mut [f32]| {
+                    for (j, v) in w.iter_mut().enumerate() {
+                        *v += (i as f32 + 1.0) * 0.25
+                            + pass as f32 * 0.125
+                            + j as f32 * 0.0625;
+                    }
+                };
+                owner(i).update_own(i, &mut |w| bump(w));
+                bump(&mut world[i]);
+                applied += 1;
+            }
+        }
+
+        // Serve cross-shard rounds: pump poll() for every node except
+        // the one currently initiating (in the real engine a node never
+        // polls concurrently with its own round).
+        let stop = Arc::new(AtomicBool::new(false));
+        let cur = Arc::new(AtomicUsize::new(usize::MAX));
+        let pumps: Vec<_> = [
+            (a.clone(), 0..NODES / 2),
+            (b.clone(), NODES / 2..NODES),
+        ]
+        .into_iter()
+        .map(|(net, ids)| {
+            let stop = stop.clone();
+            let cur = cur.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for j in ids.clone() {
+                        if j != cur.load(Ordering::Relaxed) {
+                            net.poll(j);
+                        }
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            })
+        })
+        .collect();
+
+        // Block until a node's live params match the mirror exactly.
+        let wait_bits = |i: usize, want: &[f32]| {
+            let want: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                let got = owner(i)
+                    .local_params()
+                    .into_iter()
+                    .find(|(id, _)| *id == i)
+                    .expect("own node listed")
+                    .1;
+                if got.iter().map(|v| v.to_bits()).collect::<Vec<u32>>() == want {
+                    return;
+                }
+                assert!(
+                    Instant::now() < deadline,
+                    "node {i} never reached the mirrored value (want {want:?}, got {got:?})"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+
+        // Sequential ring projections — every round must apply, and the
+        // averaged value must land bit-identically on every hood member
+        // before the next round reads it.
+        for _ in 0..PROJ_ROUNDS {
+            for i in 0..NODES {
+                let mut hood = [(i + NODES - 1) % NODES, i, (i + 1) % NODES];
+                hood.sort_unstable(); // try_project takes the sorted closed neighborhood
+                cur.store(i, Ordering::Relaxed);
+                let out = owner(i).try_project(i, &hood, Duration::ZERO, &mut |rows| {
+                    neighborhood_average(rows)
+                });
+                cur.store(usize::MAX, Ordering::Relaxed);
+                assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+                applied += 1;
+                let rows: Vec<&[f32]> = hood.iter().map(|&j| world[j].as_slice()).collect();
+                let avg = neighborhood_average(&rows);
+                for &j in &hood {
+                    world[j] = avg.clone();
+                }
+                for &j in &hood {
+                    wait_bits(j, &world[j]);
+                }
+            }
+        }
+
+        stop.store(true, Ordering::Relaxed);
+        for p in pumps {
+            p.join().unwrap();
+        }
+        // Return the LIVE parameters (already proven equal to the
+        // mirror above) so the cross-policy comparison below is over
+        // what the deployment actually holds.
+        let mut live: Vec<(usize, Vec<f32>)> = a.local_params();
+        live.extend(b.local_params());
+        live.sort_by_key(|(id, _)| *id);
+        assert_eq!(live.len(), NODES);
+        let bits = live
+            .into_iter()
+            .map(|(_, w)| w.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        a.shutdown();
+        b.shutdown();
+        (applied, bits)
+    };
+
+    let unbatched = run(SocketConfig {
+        flush_bytes: 0,
+        ..SocketConfig::default()
+    });
+    let batched = run(SocketConfig::default());
+    let expected = (GRAD_PASSES as u64) * NODES as u64 + (PROJ_ROUNDS * NODES) as u64;
+    assert_eq!(unbatched.0, expected, "unbatched run dropped updates");
+    assert_eq!(
+        unbatched.0, batched.0,
+        "applied-update counts diverged across flush policies"
+    );
+    assert_eq!(
+        unbatched.1, batched.1,
+        "final parameter bits diverged across flush policies"
+    );
 }
 
 #[test]

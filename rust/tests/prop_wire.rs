@@ -389,6 +389,141 @@ fn chunk_streams_with_injected_faults_error_never_panic() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Batch envelopes (WIRE_VERSION 5 coalescing)
+// ---------------------------------------------------------------------------
+
+/// An arbitrary *batchable* message: anything but chunk frames and
+/// nested batches (the envelope rejects those by contract).
+fn arb_batchable(g: &mut Gen) -> WireMsg {
+    loop {
+        let m = arb_msg(g);
+        if m.is_batchable() {
+            return m;
+        }
+    }
+}
+
+#[test]
+fn batches_of_arbitrary_interleavings_round_trip_bit_for_bit() {
+    check("wire-batch-roundtrip", 200, 0xBA7C4, |g| {
+        let msgs: Vec<WireMsg> = (0..g.usize_in(1, 8)).map(|_| arb_batchable(g)).collect();
+        let batch = WireMsg::Batch { msgs: msgs.clone() };
+        let frame = encode(&batch).map_err(|e| format!("batch encode: {e}"))?;
+        let (back, used) = decode(&frame)
+            .map_err(|e| format!("batch decode: {e}"))?
+            .ok_or("own batch reported incomplete")?;
+        if used != frame.len() {
+            return Err(format!("consumed {used} of {} bytes", frame.len()));
+        }
+        let WireMsg::Batch { msgs: got } = back else {
+            return Err("batch decoded as a non-batch".into());
+        };
+        if got.len() != msgs.len() {
+            return Err(format!("{} entries in, {} out", msgs.len(), got.len()));
+        }
+        // Entry equality down to the encoded bits, not just PartialEq.
+        for (i, (a, b)) in msgs.iter().zip(&got).enumerate() {
+            let ea = encode(a).map_err(|e| format!("re-encode in: {e}"))?;
+            let eb = encode(b).map_err(|e| format!("re-encode out: {e}"))?;
+            if ea != eb {
+                return Err(format!("entry {i} changed bits through the envelope"));
+            }
+        }
+        // A batch passes a chunk assembler untouched (it is a plain
+        // logical frame, not part of any envelope).
+        let mut asm = ChunkAssembler::new();
+        match asm.accept(WireMsg::Batch { msgs: got }) {
+            Ok(Some(WireMsg::Batch { .. })) => Ok(()),
+            other => Err(format!("assembler bent the batch: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn batch_truncation_corruption_and_mixed_versions_error_never_panic() {
+    check("wire-batch-faults", 200, 0xBADBA7, |g| {
+        let msgs: Vec<WireMsg> = (0..g.usize_in(1, 5)).map(|_| arb_batchable(g)).collect();
+        let frame = encode(&WireMsg::Batch { msgs }).map_err(|e| format!("encode: {e}"))?;
+        // Truncation: any proper prefix asks for more or errors cleanly.
+        let cut = g.usize_in(0, frame.len() - 1);
+        match decode(&frame[..cut]) {
+            Ok(Some(_)) => {
+                return Err(format!(
+                    "a {cut}-byte prefix of a {}-byte batch decoded as complete",
+                    frame.len()
+                ))
+            }
+            Ok(None) | Err(_) => {}
+        }
+        // Corruption: one flipped bit anywhere must never panic (any
+        // Result is acceptable; most flips land in payload bytes).
+        let mut bent = frame.clone();
+        let at = g.usize_in(0, bent.len() - 1);
+        bent[at] ^= 1 << g.usize_in(0, 7);
+        let _ = decode(&bent);
+        // Mixed versions: an entry stamped with an older wire version
+        // must be refused — batches are a v5-only construct and every
+        // entry body carries its own version byte. The first entry's
+        // version byte sits right after [len][ver][tag][count][entry len].
+        let mut mixed = frame.clone();
+        mixed[14] = wire::WIRE_VERSION - 1;
+        match decode(&mixed) {
+            Err(WireError::Version { .. }) => Ok(()),
+            other => Err(format!("pre-v5 entry not refused: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn batched_streams_decode_to_the_unbatched_sequence() {
+    // The coalescer's core contract: however frames get grouped into
+    // flushes, the receiver sees exactly the sequence an unbatched
+    // sender would have produced, bit for bit.
+    check("wire-batch-stream", 150, 0x5EC0, |g| {
+        let msgs: Vec<WireMsg> = (0..g.usize_in(1, 10)).map(|_| arb_batchable(g)).collect();
+        // Random flush points via a reused BatchBuilder (singleton
+        // flushes emit the plain frame — the wire shape of an
+        // unbatched send).
+        let mut builder = wire::BatchBuilder::new();
+        let mut stream = Vec::new();
+        let mut frame = Vec::new();
+        for (i, m) in msgs.iter().enumerate() {
+            builder.push(m).map_err(|e| format!("push: {e}"))?;
+            if g.bool() || i + 1 == msgs.len() {
+                builder
+                    .frame_into(&mut frame)
+                    .map_err(|e| format!("flush: {e}"))?;
+                stream.extend_from_slice(&frame);
+            }
+        }
+        // Decode the whole stream, flattening batches.
+        let mut flat = Vec::new();
+        let mut rest = stream.as_slice();
+        while !rest.is_empty() {
+            let (m, used) = decode(rest)
+                .map_err(|e| format!("stream decode: {e}"))?
+                .ok_or("stream ended mid-frame")?;
+            rest = &rest[used..];
+            match m {
+                WireMsg::Batch { msgs } => flat.extend(msgs),
+                other => flat.push(other),
+            }
+        }
+        if flat.len() != msgs.len() {
+            return Err(format!("{} messages in, {} out", msgs.len(), flat.len()));
+        }
+        for (i, (a, b)) in msgs.iter().zip(&flat).enumerate() {
+            let ea = encode(a).map_err(|e| format!("re-encode in: {e}"))?;
+            let eb = encode(b).map_err(|e| format!("re-encode out: {e}"))?;
+            if ea != eb {
+                return Err(format!("message {i} changed bits through batching"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn write_message_over_a_stream_is_what_read_message_reads() {
     // The blocking-stream pair used by the control plane, across the
