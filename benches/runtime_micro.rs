@@ -278,6 +278,29 @@ fn bench_saturation() -> Vec<(String, f64)> {
     ]
 }
 
+/// Observability overhead: the cost of one fully-instrumented record
+/// (counter + histogram observe + disabled trace probe — what every
+/// fire adds), and the disabled trace probe alone (what non-firing hot
+/// paths pay). Both must stay in the nanoseconds for the ≤5% budget the
+/// CI gate enforces on `socket_loopback`.
+fn bench_obs(h: &mut Harness) -> Vec<(String, f64)> {
+    use dasgd::obs::{self, Counter, Hist};
+    let mut rows = Vec::new();
+    let mut v = 0u64;
+    let r = h.case("metrics hot path (counter + histogram + trace off)", || {
+        v = v.wrapping_add(17);
+        obs::add(Counter::Steals, 1);
+        obs::observe(Hist::StalenessTicks, v & 0xFFFF);
+        obs::trace("bench", "noop", 0, v);
+    });
+    rows.push(("metrics_hot_path".to_string(), r.mean_secs));
+    let r = h.case("trace probe, tracing disabled", || {
+        obs::trace("bench", "noop", 0, std::hint::black_box(7));
+    });
+    rows.push(("trace_disabled_overhead".to_string(), r.mean_secs));
+    rows
+}
+
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
@@ -286,6 +309,8 @@ fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
          envelope on a 20 MiB PlanAssign; shard_stream_throughput is the block \
          pipeline (carve+fold+stage+drain) over a 20k-row shard and \
          stream_first_step_latency is one staged block reaching a node; \
+         metrics_hot_path is one instrumented record (counter + histogram + \
+         disabled trace probe) and trace_disabled_overhead the probe alone; \
          nodes_per_worker_saturation is seconds per applied update with 512 \
          nodes on the executor pool in one process (nodes_per_worker_tpn_baseline \
          is the same window on thread-per-node)\",\n",
@@ -384,6 +409,8 @@ fn main() {
     transport_rows.extend(bench_wire(&mut h, 500));
     let mut h = Harness::new("streaming shard data plane");
     transport_rows.extend(bench_stream(&mut h));
+    let mut h = Harness::new("observability overhead");
+    transport_rows.extend(bench_obs(&mut h));
     println!("\nscheduler saturation (512 nodes per process)");
     transport_rows.extend(bench_saturation());
     write_transport_baseline(&transport_rows, 500);

@@ -294,6 +294,10 @@ struct Task {
     logic: NodeLogic,
     rate_hz: f64,
     stepsize: StepSize,
+    /// The shared applied-update count (`Shared::k`) observed the last
+    /// time this node applied an update — the baseline for the
+    /// gradient-staleness histogram (`obs::Hist::StalenessTicks`).
+    last_k: u64,
 }
 
 impl Task {
@@ -384,6 +388,7 @@ pub fn spawn_shard_with_feeds(
             logic,
             rate_hz: rate,
             stepsize,
+            last_k: 0,
         });
     }
     let handles = match cfg.engine {
@@ -408,11 +413,16 @@ pub fn spawn_shard_with_feeds(
 /// `owed·lr` (the linear-scaling rule: a mean-gradient step over
 /// `owed` samples at `owed·lr` matches `owed` sequential steps at `lr`
 /// to first order).
-fn fire_node(ctx: &FireCtx, logic: &mut NodeLogic, stepsize: StepSize, owed: u64) -> bool {
+fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
+    let stepsize = task.stepsize;
+    let logic = &mut task.logic;
     let id = logic.id;
     let objective = logic.objective();
     let scale = logic.grad_scale();
     let hold = Duration::from_secs_f64(ctx.cfg.gossip_hold_secs.max(0.0));
+    // Observability only: timestamps and counters never feed back into
+    // scheduling or RNG state, so deterministic replays stay bit-exact.
+    let fired_at = Instant::now();
     ctx.transport.poll(id);
     if ctx.shared.stop.load(Ordering::Relaxed) {
         return true;
@@ -469,6 +479,17 @@ fn fire_node(ctx: &FireCtx, logic: &mut NodeLogic, stepsize: StepSize, owed: u64
                             .grad_steps
                             .fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
                         ctx.shared.k.fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
+                        crate::obs::add(crate::obs::Counter::B8Collapses, 1);
+                        crate::obs::observe(
+                            crate::obs::Hist::StalenessTicks,
+                            k.saturating_sub(task.last_k),
+                        );
+                        crate::obs::observe(
+                            crate::obs::Hist::FireToApplyUs,
+                            fired_at.elapsed().as_micros() as u64,
+                        );
+                        task.last_k = k;
+                        crate::obs::trace("node", "grad_b8", id as u64, owed);
                         return true;
                     }
                     let idx = logic.draw_index();
@@ -486,6 +507,16 @@ fn fire_node(ctx: &FireCtx, logic: &mut NodeLogic, stepsize: StepSize, owed: u64
             }
             ctx.shared.grad_steps.fetch_add(1, Ordering::Relaxed);
             ctx.shared.k.fetch_add(1, Ordering::Relaxed);
+            crate::obs::observe(
+                crate::obs::Hist::StalenessTicks,
+                k.saturating_sub(task.last_k),
+            );
+            crate::obs::observe(
+                crate::obs::Hist::FireToApplyUs,
+                fired_at.elapsed().as_micros() as u64,
+            );
+            task.last_k = k;
+            crate::obs::trace("node", "grad", id as u64, owed);
         }
         Action::Project => {
             // Projection: §IV-C lock-up over the closed neighborhood —
@@ -529,10 +560,22 @@ fn fire_node(ctx: &FireCtx, logic: &mut NodeLogic, stepsize: StepSize, owed: u64
                         .fetch_add(projection_messages(participants), Ordering::Relaxed);
                     ctx.shared.proj_steps.fetch_add(1, Ordering::Relaxed);
                     ctx.shared.k.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::observe(
+                        crate::obs::Hist::StalenessTicks,
+                        k.saturating_sub(task.last_k),
+                    );
+                    crate::obs::observe(
+                        crate::obs::Hist::FireToApplyUs,
+                        fired_at.elapsed().as_micros() as u64,
+                    );
+                    task.last_k = k;
+                    crate::obs::trace("node", "apply", id as u64, participants as u64);
                 }
                 ProjectionOutcome::Conflict => {
                     // A member is mid-update: back off and redraw.
                     ctx.shared.conflicts.fetch_add(1, Ordering::Relaxed);
+                    crate::obs::add(crate::obs::Counter::Conflicts, 1);
+                    crate::obs::trace("node", "conflict", id as u64, 0);
                 }
                 ProjectionOutcome::Isolated => {}
             }
@@ -647,7 +690,7 @@ fn node_loop(mut task: Task, ctx: Arc<FireCtx>, seq: Option<Arc<Sequencer>>) {
                 }
             }
         }
-        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, 1);
+        let keep = fire_node(&ctx, &mut task, 1);
         if let Some(s) = &seq {
             s.done();
         }
@@ -784,6 +827,7 @@ fn executor_loop(ex: usize, pool: Arc<Pool>, ctx: Arc<FireCtx>) {
             for off in 1..n_slots {
                 entry = pool.pop_due((ex + off) % n_slots, now);
                 if entry.is_some() {
+                    crate::obs::add(crate::obs::Counter::Steals, 1);
                     break;
                 }
             }
@@ -806,7 +850,15 @@ fn executor_loop(ex: usize, pool: Arc<Pool>, ctx: Arc<FireCtx>) {
         } else {
             1
         };
-        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, owed);
+        // How far past its deadline did this wakeup pop? (Timer-heap
+        // lag; clamps at zero — an early poll never goes negative.)
+        if now > at {
+            crate::obs::observe(
+                crate::obs::Hist::TimerLagUs,
+                ((now - at) * 1e6) as u64,
+            );
+        }
+        let keep = fire_node(&ctx, &mut task, owed);
         if !keep {
             continue; // crashed — drop the task
         }
@@ -829,7 +881,7 @@ fn deterministic_executor(
         let Some(Reverse(TimerEntry { at, id, mut task })) = heap.pop() else {
             break; // every node crashed
         };
-        let keep = fire_node(&ctx, &mut task.logic, task.stepsize, 1);
+        let keep = fire_node(&ctx, &mut task, 1);
         fired += 1;
         if keep {
             let next = at + task.delay();

@@ -235,6 +235,9 @@ impl<B: StepBackend> Trainer<B> {
             proj_steps: self.counters.proj_steps,
             messages: self.counters.messages,
             conflicts: self.counters.conflicts,
+            staleness_p50: 0.0,
+            staleness_p99: 0.0,
+            staging_bytes: 0,
         });
         Ok(())
     }

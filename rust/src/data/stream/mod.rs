@@ -312,6 +312,7 @@ impl BlockBuffer {
         }
         inner.staged += bytes;
         inner.max_staged = inner.max_staged.max(inner.staged);
+        crate::obs::gauge_max(crate::obs::Gauge::StagingHighWater, inner.staged);
         let node = block.node;
         inner.queues[node].push_back(block);
         drop(inner);

@@ -33,6 +33,7 @@ pub mod model;
 pub mod net;
 pub mod node_logic;
 pub mod objective;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod transport;

@@ -89,6 +89,17 @@ Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
   --seed N    RNG seed (default 0)
 
+Observability (train / cluster / sim / launch / worker):
+  --metrics-jsonl PATH  append one {\"kind\":\"metrics\",...} JSON line per
+              evaluation round (launch: the cluster-wide aggregate)
+  --trace-jsonl PATH    arm the structured tracer; the event ring dumps
+              to PATH on exit, on panic, or when the run ends
+  --log-level L         error|warn|info|debug (default info); launch
+              forwards it to every worker
+  --metrics-addr H:P    (launch, worker) serve Prometheus text on H:P —
+              launch serves the aggregate, a worker its own registry
+See docs/observability.md for the metric catalog and schemas.
+
 Unknown flags and unknown flag values are rejected with a did-you-mean
 suggestion.
 ";
@@ -253,6 +264,41 @@ fn parse_samples(args: &Args, default: usize) -> anyhow::Result<usize> {
     Ok(samples)
 }
 
+/// Parse and apply the observability flags shared by every run verb:
+/// `--log-level` sets the process log level, `--trace-jsonl` arms the
+/// structured tracer (the ring dumps on exit or panic). Returns the
+/// `--metrics-jsonl` path for the verb to append its snapshot lines to.
+fn apply_obs_flags(args: &Args) -> anyhow::Result<Option<std::path::PathBuf>> {
+    if let Some(name) = args.get("log-level") {
+        let Some(lvl) = dasgd::obs::Level::parse(name) else {
+            return Err(unknown_value("log-level", name, &dasgd::obs::Level::NAMES));
+        };
+        dasgd::obs::set_log_level(lvl);
+    }
+    if let Some(path) = args.get("trace-jsonl") {
+        dasgd::obs::trace_to(std::path::Path::new(path));
+    }
+    Ok(args.get("metrics-jsonl").map(std::path::PathBuf::from))
+}
+
+/// End-of-run observability flush: append the process-local registry as
+/// one JSONL line (when `--metrics-jsonl` was given) and dump the trace
+/// ring (a no-op unless `--trace-jsonl` armed it).
+fn finish_obs(
+    metrics_jsonl: Option<&std::path::Path>,
+    scope: &str,
+    t_secs: f64,
+    k: u64,
+) -> anyhow::Result<()> {
+    if let Some(path) = metrics_jsonl {
+        dasgd::obs::append_jsonl(path, &dasgd::obs::snapshot().jsonl(scope, t_secs, k))
+            .map_err(|e| anyhow::anyhow!("writing --metrics-jsonl {}: {e}", path.display()))?;
+        println!("wrote metrics line to {}", path.display());
+    }
+    dasgd::obs::trace_dump();
+    Ok(())
+}
+
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -291,6 +337,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "dataset",
             "objective",
             "csv",
+            "metrics-jsonl",
+            "trace-jsonl",
+            "log-level",
         ],
         "cluster" => &[
             "nodes",
@@ -306,6 +355,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "plan",
             "dirichlet-alpha",
             "shift-sigma",
+            "metrics-jsonl",
+            "trace-jsonl",
+            "log-level",
         ],
         "sim" => &[
             "nodes",
@@ -323,6 +375,9 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "dirichlet-alpha",
             "shift-sigma",
             "csv",
+            "metrics-jsonl",
+            "trace-jsonl",
+            "log-level",
         ],
         "launch" => &[
             "workers",
@@ -344,6 +399,10 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "flush-bytes",
             "flush-micros",
             "csv",
+            "metrics-jsonl",
+            "trace-jsonl",
+            "log-level",
+            "metrics-addr",
         ],
         "worker" => &[
             "rank",
@@ -362,6 +421,10 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "executors",
             "flush-bytes",
             "flush-micros",
+            "metrics-jsonl",
+            "trace-jsonl",
+            "log-level",
+            "metrics-addr",
         ],
         _ => return None,
     })
@@ -483,6 +546,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     use dasgd::coordinator::{Backend, TrainConfig};
+    let metrics_jsonl = apply_obs_flags(args)?;
     let n = args.get_usize("nodes", 30).map_err(anyhow::Error::msg)?;
     let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
     let iters = args
@@ -541,10 +605,17 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         rec.write_csv(csv)?;
         println!("wrote {csv}");
     }
-    Ok(())
+    let last = rec.records.last();
+    finish_obs(
+        metrics_jsonl.as_deref(),
+        "train",
+        last.map(|r| r.time_secs).unwrap_or(0.0),
+        last.map(|r| r.k).unwrap_or(0),
+    )
 }
 
 fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let metrics_jsonl = apply_obs_flags(args)?;
     let n = args.get_usize("nodes", 12).map_err(anyhow::Error::msg)?;
     let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
     let secs = args.get_f64("secs", 3.0).map_err(anyhow::Error::msg)?;
@@ -621,13 +692,20 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
         rep.messages,
         rep.conflicts
     );
-    Ok(())
+    let last = rep.recorder.records.last();
+    finish_obs(
+        metrics_jsonl.as_deref(),
+        "cluster",
+        last.map(|r| r.time_secs).unwrap_or(0.0),
+        rep.updates,
+    )
 }
 
 /// The delay/drop-aware virtual-time simulation: Alg. 2 over a `SimNet`
 /// with per-edge latency, drop probability, and optional partitions —
 /// cheap at 10,000+ nodes (incremental parameters + O(dim) snapshots).
 fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
+    let metrics_jsonl = apply_obs_flags(args)?;
     let n = args.get_usize("nodes", 64).map_err(anyhow::Error::msg)?;
     let degree = args.get_usize("degree", 3).map_err(anyhow::Error::msg)?;
     let horizon = args
@@ -727,13 +805,20 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         rep.recorder.write_csv(csv)?;
         println!("wrote {csv}");
     }
-    Ok(())
+    let last = rep.recorder.records.last();
+    finish_obs(
+        metrics_jsonl.as_deref(),
+        "sim",
+        last.map(|r| r.time_secs).unwrap_or(0.0),
+        rep.updates,
+    )
 }
 
 /// Multi-process deployment on this machine: spawn K workers from this
 /// binary, monitor their shards to the update horizon, print the same
 /// table the in-process cluster prints.
 fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let metrics_jsonl = apply_obs_flags(args)?;
     let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
     let nodes = args.get_usize("nodes", 8).map_err(anyhow::Error::msg)?;
     let degree = args.get_usize("degree", 2).map_err(anyhow::Error::msg)?;
@@ -795,6 +880,9 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         flush_bytes,
         flush_micros,
         base_data,
+        metrics_jsonl: metrics_jsonl.clone(),
+        metrics_addr: args.get("metrics-addr").map(String::from),
+        log_level: args.get("log-level").map(String::from),
     };
     println!(
         "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \
@@ -837,13 +925,26 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
             rep.counts.updates()
         );
     }
-    Ok(())
+    // The monitor loop already appended the per-round aggregate lines;
+    // here only the trace ring is left to flush.
+    finish_obs(None, "launch", rep.elapsed_secs, rep.counts.updates())
 }
 
 /// One deployment worker process (normally spawned by `launch`; run it
 /// by hand with an explicit `--peers` list to span machines).
 fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
+    let metrics_jsonl = apply_obs_flags(args)?;
     let rank = args.get_u64("rank", 0).map_err(anyhow::Error::msg)? as u32;
+    // A worker serves its *own* registry (the launch monitor serves the
+    // cluster-wide aggregate).
+    if let Some(addr) = args.get("metrics-addr") {
+        match dasgd::obs::serve_metrics(addr, || dasgd::obs::snapshot().prometheus_text()) {
+            Ok(bound) => {
+                dasgd::log!(Info, "worker", "serving metrics on http://{bound}/metrics")
+            }
+            Err(e) => dasgd::log!(Warn, "worker", "--metrics-addr {addr} failed to bind: {e}"),
+        }
+    }
     let Some(peers_raw) = args.get("peers") else {
         anyhow::bail!("worker needs --peers host:port,host:port,... (one per rank)");
     };
@@ -895,6 +996,11 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
             .get_u64("flush-micros", 500)
             .map_err(anyhow::Error::msg)?,
     };
-    run_worker(&cfg)?;
-    Ok(())
+    let summary = run_worker(&cfg)?;
+    finish_obs(
+        metrics_jsonl.as_deref(),
+        "worker",
+        0.0,
+        summary.counts.updates(),
+    )
 }

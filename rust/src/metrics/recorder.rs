@@ -26,6 +26,13 @@ pub struct Record {
     pub proj_steps: u64,
     pub messages: u64,
     pub conflicts: u64,
+    /// Gradient-staleness quantiles in applied-update ticks, from the
+    /// cluster-wide [`crate::obs`] aggregation (0 for engines that do
+    /// not report them — the columns are append-only).
+    pub staleness_p50: f64,
+    pub staleness_p99: f64,
+    /// Streaming staging high-water in bytes at snapshot time.
+    pub staging_bytes: u64,
 }
 
 /// A named series of [`Record`]s.
@@ -79,6 +86,9 @@ impl Recorder {
                 "proj_steps",
                 "messages",
                 "conflicts",
+                "staleness_p50",
+                "staleness_p99",
+                "staging_bytes",
             ],
         )?;
         for r in &self.records {
@@ -92,6 +102,9 @@ impl Recorder {
                 r.proj_steps as f64,
                 r.messages as f64,
                 r.conflicts as f64,
+                r.staleness_p50,
+                r.staleness_p99,
+                r.staging_bytes as f64,
             ])?;
         }
         w.flush()

@@ -435,8 +435,10 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     let _ = std::io::stdout().flush();
     net.connect_peers(&cfg.peers);
     if !net.wait_connected(Duration::from_secs(10)) {
-        eprintln!(
-            "dasgd-worker rank={}: not all peers reachable after 10s; \
+        crate::log!(
+            Warn,
+            "cluster",
+            "rank={}: not all peers reachable after 10s; \
              continuing degraded (their nodes are filtered from neighborhoods)",
             cfg.rank
         );
@@ -544,6 +546,20 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                         staging_bytes: buffer.as_ref().map(|b| b.max_staged()).unwrap_or(0),
                         stream_done: streams.iter().all(|s| s.done),
                         updates_at_stream_complete,
+                    };
+                    if conn.write_msg(&reply).is_err() {
+                        dropped.push(ci);
+                    }
+                }
+                Ok(Some(WireMsg::MetricsRequest)) => {
+                    // The process-wide observability registry, flattened
+                    // for monitor-side aggregation (layout-tolerant on
+                    // the decode side — see obs::MetricsSnapshot).
+                    let (counters, hist_data) = crate::obs::snapshot().to_wire();
+                    let reply = WireMsg::MetricsReply {
+                        rank: cfg.rank,
+                        counters,
+                        hist_data,
                     };
                     if conn.write_msg(&reply).is_err() {
                         dropped.push(ci);
@@ -740,6 +756,14 @@ pub struct LaunchConfig {
     /// The worker binary. `None` = this executable (the CLI case);
     /// tests point it at the built `dasgd` binary.
     pub binary: Option<std::path::PathBuf>,
+    /// Append one aggregated cluster-wide metrics line per monitor
+    /// round to this JSONL file (`--metrics-jsonl`).
+    pub metrics_jsonl: Option<std::path::PathBuf>,
+    /// Serve the aggregate as Prometheus text on this `host:port`
+    /// (`--metrics-addr`).
+    pub metrics_addr: Option<String>,
+    /// Log level forwarded to every worker (`--log-level`).
+    pub log_level: Option<String>,
 }
 
 impl LaunchConfig {
@@ -763,6 +787,9 @@ impl LaunchConfig {
             flush_micros: 500,
             base_data: None,
             binary: None,
+            metrics_jsonl: None,
+            metrics_addr: None,
+            log_level: None,
         }
     }
 }
@@ -944,8 +971,8 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let worker_secs = cfg.secs_cap + 10.0;
     let mut children: Vec<Child> = Vec::with_capacity(cfg.workers);
     for rank in 0..cfg.workers {
-        let child = Command::new(&binary)
-            .args([
+        let mut cmd = Command::new(&binary);
+        cmd.args([
                 "worker",
                 "--rank",
                 &rank.to_string(),
@@ -975,10 +1002,11 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 &cfg.flush_micros.to_string(),
                 "--seed",
                 &cfg.seed.to_string(),
-            ])
-            .stdout(Stdio::null())
-            .stderr(Stdio::inherit())
-            .spawn();
+            ]);
+        if let Some(lvl) = &cfg.log_level {
+            cmd.args(["--log-level", lvl]);
+        }
+        let child = cmd.stdout(Stdio::null()).stderr(Stdio::inherit()).spawn();
         match child {
             Ok(c) => children.push(c),
             Err(e) => {
@@ -1106,6 +1134,9 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     _ => false,
                 };
                 if need_credit {
+                    // The stream is blocked on the worker draining its
+                    // staging — a backpressure stall, counted.
+                    crate::obs::add(crate::obs::Counter::CreditStalls, 1);
                     loop {
                         match conn.read_msg(Instant::now() + Duration::from_millis(5)) {
                             Ok(Some(WireMsg::ShardCredit { bytes })) => {
@@ -1194,6 +1225,21 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     let mut last_known = vec![[0u64; 4]; cfg.workers];
     let mut max_staging_bytes = 0u64;
     let mut stepped_before_stream_complete = false;
+    // Cluster-wide observability: the Prometheus endpoint serves this
+    // shared text, refreshed each round from the aggregated replies.
+    let prom = Arc::new(std::sync::Mutex::new(String::new()));
+    if let Some(addr) = &cfg.metrics_addr {
+        let text = Arc::clone(&prom);
+        match crate::obs::serve_metrics(addr, move || text.lock().unwrap().clone()) {
+            Ok(bound) => {
+                crate::log!(Info, "monitor", "serving metrics on http://{bound}/metrics")
+            }
+            Err(e) => crate::log!(Warn, "monitor", "--metrics-addr {addr} failed to bind: {e}"),
+        }
+    }
+    // (messages, steals, time) at the last stderr summary line — the
+    // window the per-second rates are computed over.
+    let mut top_mark: (u64, u64, f64) = (0, 0, 0.0);
     let (counts, reached_horizon) = loop {
         let now = sw.elapsed_secs();
         // Collect every live worker's shard: one logical SnapshotReply
@@ -1269,10 +1315,71 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
             total.messages += m;
             total.conflicts += c;
         }
+        // One MetricsRequest per live worker, merged (with the monitor
+        // process's own counters) into the cluster-wide aggregate. A
+        // rank missing one round is fine — counters are cumulative.
+        let mut agg = crate::obs::snapshot();
+        for conn in conns.iter_mut().flatten() {
+            if conn.write_msg(&WireMsg::MetricsRequest).is_err() {
+                continue;
+            }
+            let deadline = Instant::now() + Duration::from_millis(500);
+            loop {
+                match conn.read_msg(deadline) {
+                    Ok(Some(WireMsg::MetricsReply {
+                        counters,
+                        hist_data,
+                        ..
+                    })) => {
+                        agg.merge_from(&crate::obs::MetricsSnapshot::from_wire(
+                            &counters, &hist_data,
+                        ));
+                        break;
+                    }
+                    Ok(Some(_)) => {}
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+        let staleness = agg.hists[crate::obs::Hist::StalenessTicks as usize];
+        let staging = agg.gauges[crate::obs::Gauge::StagingHighWater as usize]
+            .max(max_staging_bytes);
         params.sort_by_key(|(id, _)| *id);
         let cohort: Vec<Vec<f32>> = params.into_iter().map(|(_, w)| w).collect();
         if !cohort.is_empty() {
-            rec.push(probe.snapshot(total.updates(), now, &cohort, &total));
+            let mut record = probe.snapshot(total.updates(), now, &cohort, &total);
+            record.staleness_p50 = staleness.quantile(0.5);
+            record.staleness_p99 = staleness.quantile(0.99);
+            record.staging_bytes = staging;
+            rec.push(record);
+        }
+        if let Some(path) = &cfg.metrics_jsonl {
+            if let Err(e) =
+                crate::obs::append_jsonl(path, &agg.jsonl("cluster", now, total.updates()))
+            {
+                crate::log_rl!(Warn, "monitor", "writing --metrics-jsonl {}: {e}", path.display());
+            }
+        }
+        if cfg.metrics_addr.is_some() {
+            *prom.lock().unwrap() = agg.prometheus_text();
+        }
+        if now - top_mark.2 >= 2.0 {
+            let dt = (now - top_mark.2).max(1e-9);
+            let steals = agg.counters[crate::obs::Counter::Steals as usize];
+            crate::log!(
+                Info,
+                "monitor",
+                "k={} consensus={:.3} staleness p50/p99={:.0}/{:.0} msgs/s={:.0} \
+                 steals/s={:.0} staging={:.1}MiB",
+                total.updates(),
+                rec.last().map(|r| r.consensus).unwrap_or(f64::NAN),
+                staleness.quantile(0.5),
+                staleness.quantile(0.99),
+                total.messages.saturating_sub(top_mark.0) as f64 / dt,
+                steals.saturating_sub(top_mark.1) as f64 / dt,
+                staging as f64 / (1024.0 * 1024.0)
+            );
+            top_mark = (total.messages, steals, now);
         }
         if total.updates() >= cfg.horizon_updates {
             break (total, true);

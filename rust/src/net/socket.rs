@@ -487,7 +487,12 @@ fn handshake_inbound(inner: &Arc<Inner>, stream: TcpStream) {
         // A peer from an older/newer build: refuse with a message a
         // human can act on, instead of silently dropping garbage.
         Err(e @ wire::WireError::Version { .. }) => {
-            eprintln!("dasgd-worker rank={}: rejected inbound connection — {e}", inner.rank);
+            crate::log_rl!(
+                Warn,
+                "socket",
+                "rank={}: rejected inbound connection — {e}",
+                inner.rank
+            );
             let _ = stream.shutdown(Shutdown::Both);
         }
         _ => {
@@ -518,6 +523,8 @@ fn dial_loop(inner: Arc<Inner>, rank: u32) {
             std::thread::sleep(inner.cfg.reconnect);
             continue;
         };
+        crate::obs::add(crate::obs::Counter::Reconnects, 1);
+        crate::obs::trace("socket", "reconnect", rank as u64, 0);
         match TcpStream::connect_timeout(&target, Duration::from_secs(2)) {
             Ok(stream) => {
                 tune(&stream);
@@ -564,8 +571,21 @@ fn reader_loop(inner: Arc<Inner>, rank: u32, mut stream: TcpStream) {
             }
             Err(e) => {
                 if matches!(e, wire::WireError::Version { .. }) {
-                    eprintln!("dasgd-worker rank={}: peer link {rank} dropped — {e}", inner.rank);
+                    crate::log!(
+                        Warn,
+                        "socket",
+                        "rank={}: peer link {rank} dropped — {e}",
+                        inner.rank
+                    );
+                } else if !inner.stop.load(Ordering::SeqCst) {
+                    crate::log_rl!(
+                        Debug,
+                        "socket",
+                        "rank={}: peer link {rank} read failed — {e}",
+                        inner.rank
+                    );
                 }
+                crate::obs::trace("socket", "link_drop", rank as u64, 0);
                 if let Some(link) = &inner.links[rank as usize] {
                     // Only kill the link if this socket is still the
                     // installed one (a reconnect may have replaced it).
@@ -689,6 +709,14 @@ fn heartbeat_loop(inner: Arc<Inner>) {
             }
             if link.last_seen.lock().unwrap().elapsed() > inner.cfg.liveness {
                 link.mark_dead();
+                crate::log!(
+                    Warn,
+                    "socket",
+                    "rank={}: peer link {r} silent past the {}ms liveness window — marked dead",
+                    inner.rank,
+                    inner.cfg.liveness.as_millis()
+                );
+                crate::obs::trace("socket", "link_dead", r as u64, 0);
                 continue;
             }
             send_wire(
@@ -791,6 +819,8 @@ fn flush_locked(link: &Link, buf: &mut SendBuf) {
 
 /// Write pre-encoded frame bytes to the link, killing it on failure.
 fn write_bytes(link: &Link, bytes: &[u8]) {
+    crate::obs::observe(crate::obs::Hist::FlushBytes, bytes.len() as u64);
+    crate::obs::trace("socket", "flush", 0, bytes.len() as u64);
     let mut writer = link.writer.lock().unwrap();
     let Some(stream) = writer.as_mut() else {
         return;
@@ -994,6 +1024,8 @@ impl Transport for SocketNet {
             slot.w.clone()
         };
         let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
+        let round_start = Instant::now();
+        crate::obs::trace("socket", "collect", id as u64, peers.len() as u64);
         for &j in &peers {
             inner.send(id, j, NodeMsg::Collect { from: id, token });
         }
@@ -1014,7 +1046,14 @@ impl Transport for SocketNet {
             std::thread::sleep(Duration::from_micros(100));
         }
         let complete = round.replies.len() == peers.len() && !round.busy;
-        if !complete {
+        if complete {
+            // Full collect round-trip over the wire: the closest thing a
+            // worker has to a per-projection message-delay sample.
+            crate::obs::observe(
+                crate::obs::Hist::MessageDelayUs,
+                round_start.elapsed().as_micros() as u64,
+            );
+        } else {
             for (from, _) in &round.replies {
                 inner.send(id, *from, NodeMsg::Release { from: id, token });
             }

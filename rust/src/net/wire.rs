@@ -63,7 +63,12 @@ use std::io::{Read, Write};
 /// `PlanStart`, and the stream-status fields on `SnapshotReply`.
 /// v5 added the [`Batch`](WireMsg::Batch) envelope — the per-peer send
 /// coalescer ships many small protocol frames as one wire write.
-pub const WIRE_VERSION: u8 = 5;
+/// v6 added the observability control frames
+/// ([`MetricsRequest`](WireMsg::MetricsRequest) /
+/// [`MetricsReply`](WireMsg::MetricsReply)) — the monitor polls every
+/// worker's [`crate::obs`] registry snapshot and aggregates a
+/// cluster-wide view (see docs/observability.md).
+pub const WIRE_VERSION: u8 = 6;
 
 /// Upper bound on one frame's payload (version + tag + body). Small
 /// enough that a garbage length prefix cannot balloon memory; logical
@@ -231,6 +236,18 @@ pub enum WireMsg {
     /// decoding is total per entry; chunk frames and nested batches are
     /// refused on both sides. Empty batches are malformed.
     Batch { msgs: Vec<WireMsg> },
+    /// Monitor → worker: report your [`crate::obs`] metrics snapshot.
+    MetricsRequest,
+    /// Worker → monitor: the flattened metrics snapshot — `counters`
+    /// is the counter values followed by the gauge values, `hist_data`
+    /// is `(count, sum, 64 buckets)` per histogram (see
+    /// [`crate::obs::MetricsSnapshot::to_wire`]). Layout-tolerant on
+    /// decode so a newer monitor can read an older worker's reply.
+    MetricsReply {
+        rank: u32,
+        counters: Vec<u64>,
+        hist_data: Vec<u64>,
+    },
 }
 
 impl WireMsg {
@@ -255,6 +272,8 @@ impl WireMsg {
             WireMsg::ShardComplete { .. } => 16,
             WireMsg::ShardCredit { .. } => 17,
             WireMsg::Batch { .. } => 18,
+            WireMsg::MetricsRequest => 19,
+            WireMsg::MetricsReply { .. } => 20,
         }
     }
 
@@ -318,8 +337,8 @@ impl std::fmt::Display for WireError {
                 write!(
                     f,
                     "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
-                     upgrade the older end (pre-v5 peers cannot speak the batched \
-                     hot path)"
+                     upgrade the older end (pre-v6 peers cannot speak the batched \
+                     hot path or the metrics frames)"
                 )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
@@ -443,6 +462,14 @@ fn put_f32s(buf: &mut Vec<u8>, w: &[f32]) -> Result<(), WireError> {
 }
 
 fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) -> Result<(), WireError> {
+    put_len(buf, v.len())?;
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    Ok(())
+}
+
+fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) -> Result<(), WireError> {
     put_len(buf, v.len())?;
     for &x in v {
         buf.extend_from_slice(&x.to_le_bytes());
@@ -602,6 +629,16 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
                 let inner = encode_body(m)?;
                 put_bytes(body, &inner)?;
             }
+        }
+        WireMsg::MetricsRequest => {}
+        WireMsg::MetricsReply {
+            rank,
+            counters,
+            hist_data,
+        } => {
+            put_u32(body, *rank);
+            put_u64s(body, counters)?;
+            put_u64s(body, hist_data)?;
         }
     }
     Ok(())
@@ -852,6 +889,20 @@ impl<'a> Cursor<'a> {
         self.take(count)
     }
 
+    /// A length-prefixed u64 vector, count-validated before allocation
+    /// (same discipline as [`Cursor::f32s`]).
+    fn u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let count = self.u32()? as usize;
+        if count.checked_mul(8).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(WireError::Oversize { len: count });
+        }
+        let bytes = self.take(count * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     /// A length-prefixed u32 vector, count-validated before allocation
     /// (same discipline as [`Cursor::f32s`]).
     fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
@@ -1024,6 +1075,12 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             }
             WireMsg::Batch { msgs }
         }
+        19 => WireMsg::MetricsRequest,
+        20 => WireMsg::MetricsReply {
+            rank: c.u32()?,
+            counters: c.u64s()?,
+            hist_data: c.u64s()?,
+        },
         got => return Err(WireError::UnknownTag { got }),
     };
     c.done()?;
@@ -1154,6 +1211,7 @@ impl ChunkAssembler {
                 }
                 st.bytes.extend_from_slice(&bytes);
                 st.seen += 1;
+                crate::obs::gauge_max(crate::obs::Gauge::ChunkHighWater, st.bytes.len() as u64);
                 Ok(None)
             }
             WireMsg::ChunkEnd { checksum } => {
@@ -1378,6 +1436,17 @@ mod tests {
             bytes: vec![7, 8, 9, 0xFF],
         });
         roundtrip(WireMsg::ChunkEnd { checksum: u64::MAX });
+        roundtrip(WireMsg::MetricsRequest);
+        roundtrip(WireMsg::MetricsReply {
+            rank: 1,
+            counters: vec![3, 0, 7, 12, 1, 1 << 30, 0],
+            hist_data: vec![0xABCD; 2 * 66],
+        });
+        roundtrip(WireMsg::MetricsReply {
+            rank: 0,
+            counters: vec![],
+            hist_data: vec![],
+        });
         roundtrip(WireMsg::Batch {
             msgs: vec![WireMsg::Hello { rank: 1 }],
         });

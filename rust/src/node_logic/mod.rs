@@ -357,6 +357,9 @@ impl Probe {
             proj_steps: c.proj_steps,
             messages: c.messages,
             conflicts: c.conflicts,
+            staleness_p50: 0.0,
+            staleness_p99: 0.0,
+            staging_bytes: 0,
         }
     }
 }

@@ -1,0 +1,841 @@
+//! Process-wide observability: lock-free metrics, a bounded structured
+//! tracer, and leveled logging.
+//!
+//! Three cooperating pieces, all allocation-free on the hot path:
+//!
+//! - A static [`MetricsRegistry`] of atomic counters, gauges, and
+//!   log2-bucketed [`Histogram`]s. Recording is a handful of relaxed
+//!   `fetch_add`s; snapshots are mergeable across processes so the
+//!   `dasgd launch` monitor can aggregate a cluster-wide view from
+//!   per-worker `MetricsReply` frames.
+//! - A bounded ring-buffer tracer ([`trace`]) for structured
+//!   fire/collect/apply/flush/reconnect events, dumped as JSONL on
+//!   exit, on panic, or on demand. A single relaxed atomic load when
+//!   disabled.
+//! - A leveled, component-tagged [`log!`]/[`log_rl!`] macro pair
+//!   replacing ad-hoc `eprintln!` diagnostics (`--log-level`).
+//!
+//! None of this consumes node RNG or alters scheduling decisions: the
+//! deterministic-engine bit-identity tests stay valid with
+//! instrumentation compiled in.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Metric identifiers
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Node tasks stolen by an idle executor from a peer's run queue.
+    Steals = 0,
+    /// Backlogged firings collapsed into one compiled `b8` step.
+    B8Collapses = 1,
+    /// Streaming sends parked because the peer's credit window was empty.
+    CreditStalls = 2,
+    /// Projection attempts that lost the lock race (§IV-C lock-up).
+    Conflicts = 3,
+    /// Socket dial-loop reconnect attempts after a dropped peer link.
+    Reconnects = 4,
+}
+
+/// High-water marks (merged by `max`, not sum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak bytes staged in the streaming data plane's block buffer.
+    StagingHighWater = 0,
+    /// Peak bytes staged in the wire chunk reassembler.
+    ChunkHighWater = 1,
+}
+
+/// Log2-bucketed histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Microseconds from a node's firing-clock tick to its update applying.
+    FireToApplyUs = 0,
+    /// Microseconds a projection round spent waiting on peer replies.
+    MessageDelayUs = 1,
+    /// Gradient staleness: applied-update ticks since this node last fired.
+    StalenessTicks = 2,
+    /// Microseconds an executor timer-heap entry popped past its deadline.
+    TimerLagUs = 3,
+    /// Bytes per coalesced socket flush.
+    FlushBytes = 4,
+}
+
+pub const N_COUNTERS: usize = 5;
+pub const N_GAUGES: usize = 2;
+pub const N_HISTS: usize = 5;
+/// u64 words per histogram on the wire: count, sum, then 64 buckets.
+pub const HIST_BUCKETS: usize = 64;
+pub const HIST_WIRE_LEN: usize = 2 + HIST_BUCKETS;
+
+pub const COUNTER_NAMES: [&str; N_COUNTERS] =
+    ["steals", "b8_collapses", "credit_stalls", "conflicts", "reconnects"];
+pub const GAUGE_NAMES: [&str; N_GAUGES] = ["staging_high_water_bytes", "chunk_high_water_bytes"];
+pub const HIST_NAMES: [&str; N_HISTS] =
+    ["fire_to_apply_us", "message_delay_us", "staleness_ticks", "timer_lag_us", "flush_bytes"];
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Bucket index for a value: bucket 0 holds exactly 0, bucket `i >= 1`
+/// covers `[2^(i-1), 2^i - 1]`. 64 buckets span the full u64 range.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Upper edge of a bucket, used as the quantile estimate and the
+/// Prometheus `le` label: `2^i - 1` for bucket `i >= 1`, 0 for bucket 0.
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (((1u128 << i) - 1) as u64).min(u64::MAX)
+    }
+}
+
+/// A lock-free log2 histogram: recording is three relaxed `fetch_add`s.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+// Interior-mutable const is exactly what we want here: it is only used
+// to initialise distinct array elements, never shared.
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+impl Histogram {
+    pub const fn new() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: [ATOMIC_ZERO; HIST_BUCKETS],
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// An owned, mergeable histogram snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl HistSnapshot {
+    pub const ZERO: HistSnapshot = HistSnapshot { count: 0, sum: 0, buckets: [0; HIST_BUCKETS] };
+
+    /// Pointwise sum; saturating so corrupt peers cannot panic the monitor.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+        for (dst, src) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *dst = dst.saturating_add(*src);
+        }
+    }
+
+    /// Quantile estimate: upper edge of the bucket holding the q-th
+    /// sample (`q` in [0, 1]). Returns 0.0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= target {
+                return bucket_upper(i) as f64;
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1) as f64
+    }
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot::ZERO
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// The process-wide registry. All recording goes through the module
+/// functions ([`add`], [`observe`], [`gauge_max`]); snapshots through
+/// [`snapshot`].
+pub struct MetricsRegistry {
+    counters: [AtomicU64; N_COUNTERS],
+    gauges: [AtomicU64; N_GAUGES],
+    hists: [Histogram; N_HISTS],
+}
+
+// Same element-initialisation idiom as the histogram buckets.
+#[allow(clippy::declare_interior_mutable_const)]
+const HIST_ZERO: Histogram = Histogram::new();
+
+static METRICS: MetricsRegistry = MetricsRegistry {
+    counters: [ATOMIC_ZERO; N_COUNTERS],
+    gauges: [ATOMIC_ZERO; N_GAUGES],
+    hists: [HIST_ZERO; N_HISTS],
+};
+
+/// Increment a counter.
+#[inline]
+pub fn add(c: Counter, n: u64) {
+    METRICS.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+}
+
+/// Record a histogram sample.
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    METRICS.hists[h as usize].record(v);
+}
+
+/// Raise a high-water gauge to at least `v`.
+#[inline]
+pub fn gauge_max(g: Gauge, v: u64) {
+    METRICS.gauges[g as usize].fetch_max(v, Ordering::Relaxed);
+}
+
+/// Snapshot the whole registry.
+pub fn snapshot() -> MetricsSnapshot {
+    let mut s = MetricsSnapshot::ZERO;
+    for (dst, src) in s.counters.iter_mut().zip(METRICS.counters.iter()) {
+        *dst = src.load(Ordering::Relaxed);
+    }
+    for (dst, src) in s.gauges.iter_mut().zip(METRICS.gauges.iter()) {
+        *dst = src.load(Ordering::Relaxed);
+    }
+    for (dst, src) in s.hists.iter_mut().zip(METRICS.hists.iter()) {
+        *dst = src.snapshot();
+    }
+    s
+}
+
+/// An owned snapshot of every metric, mergeable across processes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub counters: [u64; N_COUNTERS],
+    pub gauges: [u64; N_GAUGES],
+    pub hists: [HistSnapshot; N_HISTS],
+}
+
+impl MetricsSnapshot {
+    pub const ZERO: MetricsSnapshot = MetricsSnapshot {
+        counters: [0; N_COUNTERS],
+        gauges: [0; N_GAUGES],
+        hists: [HistSnapshot::ZERO; N_HISTS],
+    };
+
+    /// Fold another process's snapshot into this one: counters and
+    /// histograms sum, gauges take the max.
+    pub fn merge_from(&mut self, other: &MetricsSnapshot) {
+        for (dst, src) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *dst = dst.saturating_add(*src);
+        }
+        for (dst, src) in self.gauges.iter_mut().zip(other.gauges.iter()) {
+            *dst = (*dst).max(*src);
+        }
+        for (dst, src) in self.hists.iter_mut().zip(other.hists.iter()) {
+            dst.merge(src);
+        }
+    }
+
+    /// Flatten for the `MetricsReply` wire frame: counters-then-gauges
+    /// in one vec, histograms as `N_HISTS x HIST_WIRE_LEN` u64 words.
+    pub fn to_wire(&self) -> (Vec<u64>, Vec<u64>) {
+        let mut counters = Vec::with_capacity(N_COUNTERS + N_GAUGES);
+        counters.extend_from_slice(&self.counters);
+        counters.extend_from_slice(&self.gauges);
+        let mut hist_data = Vec::with_capacity(N_HISTS * HIST_WIRE_LEN);
+        for h in &self.hists {
+            hist_data.push(h.count);
+            hist_data.push(h.sum);
+            hist_data.extend_from_slice(&h.buckets);
+        }
+        (counters, hist_data)
+    }
+
+    /// Inverse of [`to_wire`](Self::to_wire), tolerant of peers built
+    /// with fewer (missing => 0) or more (extra ignored) metrics.
+    pub fn from_wire(counters: &[u64], hist_data: &[u64]) -> Self {
+        let mut s = MetricsSnapshot::ZERO;
+        for (dst, src) in s.counters.iter_mut().zip(counters.iter()) {
+            *dst = *src;
+        }
+        for (dst, src) in s.gauges.iter_mut().zip(counters.iter().skip(N_COUNTERS)) {
+            *dst = *src;
+        }
+        let n = (hist_data.len() / HIST_WIRE_LEN).min(N_HISTS);
+        for (i, h) in s.hists.iter_mut().enumerate().take(n) {
+            let base = i * HIST_WIRE_LEN;
+            h.count = hist_data[base];
+            h.sum = hist_data[base + 1];
+            for (dst, src) in h.buckets.iter_mut().zip(&hist_data[base + 2..base + HIST_WIRE_LEN]) {
+                *dst = *src;
+            }
+        }
+        s
+    }
+
+    /// Prometheus text exposition (format 0.0.4): counters as
+    /// `dasgd_<name>_total`, gauges as `dasgd_<name>`, histograms as
+    /// cumulative `dasgd_<name>_bucket{le="..."}` series.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        for (name, v) in COUNTER_NAMES.iter().zip(self.counters.iter()) {
+            out.push_str(&format!("# TYPE dasgd_{name}_total counter\n"));
+            out.push_str(&format!("dasgd_{name}_total {v}\n"));
+        }
+        for (name, v) in GAUGE_NAMES.iter().zip(self.gauges.iter()) {
+            out.push_str(&format!("# TYPE dasgd_{name} gauge\n"));
+            out.push_str(&format!("dasgd_{name} {v}\n"));
+        }
+        for (name, h) in HIST_NAMES.iter().zip(self.hists.iter()) {
+            out.push_str(&format!("# TYPE dasgd_{name} histogram\n"));
+            let top = h
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .unwrap_or(0)
+                .max(1);
+            let mut cum = 0u64;
+            for i in 0..=top {
+                cum = cum.saturating_add(h.buckets[i]);
+                out.push_str(&format!(
+                    "dasgd_{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!("dasgd_{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("dasgd_{name}_sum {}\n", h.sum));
+            out.push_str(&format!("dasgd_{name}_count {}\n", h.count));
+        }
+        out
+    }
+
+    /// One metrics JSONL line (hand-built; the repo has no JSON dep).
+    /// Buckets are emitted sparse as `[index, count]` pairs.
+    pub fn jsonl(&self, scope: &str, t_secs: f64, k: u64) -> String {
+        let mut out = String::with_capacity(1024);
+        out.push_str(&format!(
+            "{{\"kind\":\"metrics\",\"scope\":\"{scope}\",\"t_secs\":{t_secs:.3},\"k\":{k}"
+        ));
+        out.push_str(",\"counters\":{");
+        for (i, (name, v)) in COUNTER_NAMES.iter().zip(self.counters.iter()).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (name, v)) in GAUGE_NAMES.iter().zip(self.gauges.iter()).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{name}\":{v}"));
+        }
+        out.push_str("},\"hists\":{");
+        for (i, (name, h)) in HIST_NAMES.iter().zip(self.hists.iter()).enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{name}\":{{\"count\":{},\"sum\":{},\"p50\":{:.1},\"p99\":{:.1},\"buckets\":[",
+                h.count,
+                h.sum,
+                h.quantile(0.50),
+                h.quantile(0.99)
+            ));
+            let mut first = true;
+            for (bi, &c) in h.buckets.iter().enumerate() {
+                if c > 0 {
+                    if !first {
+                        out.push(',');
+                    }
+                    first = false;
+                    out.push_str(&format!("[{bi},{c}]"));
+                }
+            }
+            out.push_str("]}");
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        MetricsSnapshot::ZERO
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured tracer
+// ---------------------------------------------------------------------------
+
+/// One structured trace event. Components and event names are static
+/// so pushing an event never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t_us: u64,
+    pub component: &'static str,
+    pub event: &'static str,
+    pub node: u64,
+    pub detail: u64,
+}
+
+/// Fixed-capacity ring: once full, the oldest event is overwritten so
+/// the newest `cap` events are always retained.
+pub struct TraceRing {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    next: usize,
+    seq: u64,
+}
+
+impl TraceRing {
+    pub const fn new(cap: usize) -> Self {
+        TraceRing { cap, buf: Vec::new(), next: 0, seq: 0 }
+    }
+
+    pub fn push(&mut self, mut e: TraceEvent) {
+        e.seq = self.seq;
+        self.seq += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+            self.next = self.buf.len() % self.cap;
+        } else {
+            self.buf[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Events oldest-to-newest.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+const TRACE_CAP: usize = 1 << 16;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_RING: Mutex<TraceRing> = Mutex::new(TraceRing::new(TRACE_CAP));
+static TRACE_PATH: Mutex<Option<std::path::PathBuf>> = Mutex::new(None);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static PANIC_HOOK: Once = Once::new();
+
+/// Microseconds since tracing was enabled.
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Record a structured event. A single relaxed load when disabled.
+#[inline]
+pub fn trace(component: &'static str, event: &'static str, node: u64, detail: u64) {
+    if !TRACE_ON.load(Ordering::Relaxed) {
+        return;
+    }
+    let e = TraceEvent { seq: 0, t_us: now_us(), component, event, node, detail };
+    if let Ok(mut ring) = TRACE_RING.lock() {
+        ring.push(e);
+    }
+}
+
+/// Enable tracing and arrange for a JSONL dump to `path` on exit or
+/// panic. The panic hook chains to the previous one.
+pub fn trace_to(path: &std::path::Path) {
+    *TRACE_PATH.lock().unwrap_or_else(|e| e.into_inner()) = Some(path.to_path_buf());
+    EPOCH.get_or_init(Instant::now);
+    TRACE_ON.store(true, Ordering::Relaxed);
+    PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            trace_dump();
+            prev(info);
+        }));
+    });
+}
+
+/// Whether tracing is currently enabled.
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Dump the ring as JSONL to the path configured by [`trace_to`].
+/// Poison-safe: a panic mid-push must not lose the dump.
+pub fn trace_dump() {
+    let path = match TRACE_PATH.lock().unwrap_or_else(|e| e.into_inner()).clone() {
+        Some(p) => p,
+        None => return,
+    };
+    if let Ok(mut f) = std::fs::File::create(&path) {
+        let ring = TRACE_RING.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = trace_write(&ring, &mut f);
+    }
+}
+
+/// Write a ring's events as JSONL.
+pub fn trace_write(ring: &TraceRing, w: &mut dyn Write) -> std::io::Result<()> {
+    for e in ring.events() {
+        writeln!(
+            w,
+            "{{\"kind\":\"trace\",\"seq\":{},\"t_us\":{},\"component\":\"{}\",\"event\":\"{}\",\"node\":{},\"detail\":{}}}",
+            e.seq, e.t_us, e.component, e.event, e.node, e.detail
+        )?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Leveled logging
+// ---------------------------------------------------------------------------
+
+/// Diagnostic verbosity, ordered: a message logs when its level is at
+/// or below the configured one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub const NAMES: [&'static str; 4] = ["error", "warn", "info", "debug"];
+
+    pub fn name(self) -> &'static str {
+        Level::NAMES[self as usize]
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_log_level(l: Level) {
+    LOG_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn log_level() -> Level {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+#[inline]
+pub fn log_enabled(l: Level) -> bool {
+    (l as u8) <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Component-tagged leveled log line to stderr:
+/// `obs::log!(Warn, "socket", "peer {} dropped", rank)`.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $comp:expr, $($arg:tt)*) => {{
+        let __lvl = $crate::obs::Level::$lvl;
+        if $crate::obs::log_enabled(__lvl) {
+            eprintln!("dasgd[{}] {}: {}", $comp, __lvl.name(), format_args!($($arg)*));
+        }
+    }};
+}
+
+/// Rate-limited variant for per-message paths: logs the 1st, 2nd, 4th,
+/// 8th, ... occurrence at this callsite, tagging the repeat count.
+#[macro_export]
+macro_rules! log_rl {
+    ($lvl:ident, $comp:expr, $($arg:tt)*) => {{
+        let __lvl = $crate::obs::Level::$lvl;
+        if $crate::obs::log_enabled(__lvl) {
+            static __HITS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let __n = __HITS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            if __n == 0 || __n.is_power_of_two() {
+                eprintln!(
+                    "dasgd[{}] {}: {} (seen {}x)",
+                    $comp,
+                    __lvl.name(),
+                    format_args!($($arg)*),
+                    __n + 1
+                );
+            }
+        }
+    }};
+}
+
+// Allow `obs::log!` / `obs::log_rl!` paths in addition to the crate root.
+pub use crate::{log, log_rl};
+
+// ---------------------------------------------------------------------------
+// Stdlib HTTP metrics endpoint + JSONL appender
+// ---------------------------------------------------------------------------
+
+/// Serve `body()` as a Prometheus text page on `addr` from a detached
+/// thread. Minimal stdlib HTTP/1.0 responder — enough for a scraper or
+/// `curl`, deliberately not a web server. Returns the bound address
+/// (useful with port 0).
+pub fn serve_metrics<F>(addr: &str, body: F) -> std::io::Result<std::net::SocketAddr>
+where
+    F: Fn() -> String + Send + 'static,
+{
+    let listener = std::net::TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new().name("dasgd-metrics".into()).spawn(move || {
+        for conn in listener.incoming() {
+            let mut stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            // Read and discard the request head; we answer every path.
+            let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+            let mut buf = [0u8; 1024];
+            let _ = std::io::Read::read(&mut stream, &mut buf);
+            let page = body();
+            let head = format!(
+                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                page.len()
+            );
+            let _ = stream.write_all(head.as_bytes());
+            let _ = stream.write_all(page.as_bytes());
+        }
+    })?;
+    Ok(bound)
+}
+
+/// Append one line to a JSONL file, creating it if needed.
+pub fn append_jsonl(path: &std::path::Path, line: &str) -> std::io::Result<()> {
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{line}")
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        // Every bucket's upper edge lands in its own bucket.
+        for i in 1..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper(i)), i, "upper edge of bucket {i}");
+            assert_eq!(bucket_index(bucket_upper(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_snapshots() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 5, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1011);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 5);
+        assert_eq!(s.buckets[bucket_index(5)], 2);
+    }
+
+    #[test]
+    fn quantiles_walk_buckets() {
+        let mut s = HistSnapshot::ZERO;
+        // 90 samples in bucket 3 ([4,7]), 10 in bucket 10 ([512,1023]).
+        s.buckets[3] = 90;
+        s.buckets[10] = 10;
+        s.count = 100;
+        assert_eq!(s.quantile(0.5), bucket_upper(3) as f64);
+        assert_eq!(s.quantile(0.99), bucket_upper(10) as f64);
+        assert_eq!(HistSnapshot::ZERO.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn snapshot_wire_roundtrip() {
+        let mut s = MetricsSnapshot::ZERO;
+        s.counters[Counter::Steals as usize] = 7;
+        s.gauges[Gauge::StagingHighWater as usize] = 1 << 20;
+        s.hists[Hist::StalenessTicks as usize].count = 3;
+        s.hists[Hist::StalenessTicks as usize].sum = 12;
+        s.hists[Hist::StalenessTicks as usize].buckets[2] = 3;
+        let (counters, hist_data) = s.to_wire();
+        assert_eq!(counters.len(), N_COUNTERS + N_GAUGES);
+        assert_eq!(hist_data.len(), N_HISTS * HIST_WIRE_LEN);
+        assert_eq!(MetricsSnapshot::from_wire(&counters, &hist_data), s);
+        // Tolerant decode: short inputs zero-fill, long inputs ignore extra.
+        assert_eq!(MetricsSnapshot::from_wire(&[], &[]), MetricsSnapshot::ZERO);
+        let mut long = counters.clone();
+        long.push(999);
+        assert_eq!(MetricsSnapshot::from_wire(&long, &hist_data), s);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_gauges() {
+        let mut a = MetricsSnapshot::ZERO;
+        let mut b = MetricsSnapshot::ZERO;
+        a.counters[0] = 2;
+        b.counters[0] = 3;
+        a.gauges[0] = 10;
+        b.gauges[0] = 7;
+        a.hists[0].count = 1;
+        a.hists[0].buckets[1] = 1;
+        b.hists[0].count = 2;
+        b.hists[0].buckets[4] = 2;
+        a.merge_from(&b);
+        assert_eq!(a.counters[0], 5);
+        assert_eq!(a.gauges[0], 10);
+        assert_eq!(a.hists[0].count, 3);
+        assert_eq!(a.hists[0].buckets.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let mut s = MetricsSnapshot::ZERO;
+        s.hists[Hist::StalenessTicks as usize].count = 4;
+        s.hists[Hist::StalenessTicks as usize].sum = 20;
+        s.hists[Hist::StalenessTicks as usize].buckets[3] = 4;
+        let text = s.prometheus_text();
+        assert!(text.contains("dasgd_steals_total 0"));
+        assert!(text.contains("# TYPE dasgd_staleness_ticks histogram"));
+        assert!(text.contains("dasgd_staleness_ticks_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("dasgd_staleness_ticks_count 4"));
+        // Cumulative buckets: the le="7" bucket holds all 4 samples.
+        assert!(text.contains("dasgd_staleness_ticks_bucket{le=\"7\"} 4"));
+    }
+
+    #[test]
+    fn jsonl_line_parses_with_repo_json() {
+        let mut s = MetricsSnapshot::ZERO;
+        s.counters[Counter::Conflicts as usize] = 9;
+        s.hists[Hist::FlushBytes as usize].count = 1;
+        s.hists[Hist::FlushBytes as usize].sum = 128;
+        s.hists[Hist::FlushBytes as usize].buckets[bucket_index(128)] = 1;
+        let line = s.jsonl("worker:0", 1.5, 42);
+        let j = crate::util::json::parse(&line).expect("jsonl line must parse");
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("metrics"));
+        assert_eq!(j.get("k").and_then(|v| v.as_f64()), Some(42.0));
+        let hists = j.get("hists").expect("hists object");
+        let fb = hists.get("flush_bytes").expect("flush_bytes hist");
+        assert_eq!(fb.get("count").and_then(|v| v.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn trace_ring_wraps_keeping_newest() {
+        let mut ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.push(TraceEvent {
+                seq: 0,
+                t_us: i,
+                component: "t",
+                event: "e",
+                node: i,
+                detail: 0,
+            });
+        }
+        let evs = ring.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.node).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        // Sequence numbers stay monotonic oldest-to-newest.
+        assert!(evs.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+    }
+
+    #[test]
+    fn trace_write_emits_parseable_jsonl() {
+        let mut ring = TraceRing::new(8);
+        ring.push(TraceEvent {
+            seq: 0,
+            t_us: 5,
+            component: "socket",
+            event: "flush",
+            node: 2,
+            detail: 512,
+        });
+        let mut buf = Vec::new();
+        trace_write(&ring, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let j = crate::util::json::parse(text.trim()).expect("trace line must parse");
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("trace"));
+        assert_eq!(j.get("component").and_then(|v| v.as_str()), Some("socket"));
+        assert_eq!(j.get("detail").and_then(|v| v.as_f64()), Some(512.0));
+    }
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Debug);
+    }
+}

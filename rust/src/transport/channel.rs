@@ -253,6 +253,7 @@ impl Transport for ChannelNet {
             slot.w.clone()
         };
         let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
+        let round_start = Instant::now();
         for &j in &peers {
             self.send(j, Msg::Collect { from: id, token });
         }
@@ -273,7 +274,12 @@ impl Transport for ChannelNet {
             std::thread::sleep(Duration::from_micros(100));
         }
         let complete = round.replies.len() == peers.len() && !round.busy;
-        if !complete {
+        if complete {
+            crate::obs::observe(
+                crate::obs::Hist::MessageDelayUs,
+                round_start.elapsed().as_micros() as u64,
+            );
+        } else {
             // Abort: free everyone who granted us their variable.
             for (from, _) in &round.replies {
                 self.send(*from, Msg::Release { from: id, token });

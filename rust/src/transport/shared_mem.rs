@@ -59,6 +59,7 @@ impl Transport for SharedMem {
                 Err(_) => {
                     // A member is mid-update: release and back off.
                     drop(guards);
+                    crate::obs::trace("shared_mem", "busy", id as u64, j as u64);
                     return ProjectionOutcome::Conflict;
                 }
             }

@@ -273,6 +273,12 @@ impl Transport for SimNet {
         // Collect + broadcast, each gated on the slowest participating
         // leg (the initiator waits for every reply before averaging).
         inner.last_comm = 2.0 * worst_leg;
+        // Virtual round-trip as the delay sample — the sim has no wall
+        // clock, so charge what the driver will charge.
+        crate::obs::observe(
+            crate::obs::Hist::MessageDelayUs,
+            (inner.last_comm * 1e6) as u64,
+        );
         inner.messages += crate::node_logic::projection_messages(participants.len());
         ProjectionOutcome::Applied {
             participants: participants.len(),

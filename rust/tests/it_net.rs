@@ -491,6 +491,72 @@ fn streaming_keeps_staging_bounded_and_steps_before_the_shard_completes() {
     assert!(last.test_err.is_finite());
 }
 
+#[test]
+fn launch_with_metrics_jsonl_exports_cluster_staleness() {
+    // The observability acceptance path: a 2-worker launch with
+    // --metrics-jsonl must leave behind schema-valid JSONL whose final
+    // line aggregates nonzero staleness samples pulled from the worker
+    // processes over MetricsRequest/MetricsReply control frames.
+    let path = std::env::temp_dir().join(format!("dasgd_it_metrics_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        horizon_updates: 1500,
+        secs_cap: 25.0,
+        seed: SEED,
+        metrics_jsonl: Some(path.clone()),
+        log_level: Some("warn".into()),
+        ..LaunchConfig::quick(2, NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("instrumented launch failed");
+    assert_eq!(rep.live_workers, 2, "both workers must stay live");
+    assert!(rep.reached_horizon, "instrumented run stalled before the horizon");
+
+    let text = std::fs::read_to_string(&path).expect("metrics JSONL written");
+    let _ = std::fs::remove_file(&path);
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(!lines.is_empty(), "monitor appended no metrics lines");
+    let mut last_k = 0u64;
+    let mut last = None;
+    for line in &lines {
+        let j = dasgd::util::json::parse(line).expect("metrics line must parse as JSON");
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("metrics"));
+        assert_eq!(j.get("scope").and_then(|v| v.as_str()), Some("cluster"));
+        assert!(j.get("t_secs").and_then(|v| v.as_f64()).is_some());
+        let k = j.get("k").and_then(|v| v.as_f64()).expect("k present") as u64;
+        assert!(k >= last_k, "applied-update count went backwards in the export");
+        last_k = k;
+        for section in ["counters", "gauges", "hists"] {
+            assert!(j.get(section).is_some(), "line missing {section:?}");
+        }
+        last = Some(j);
+    }
+    let last = last.unwrap();
+    let staleness = last
+        .get("hists")
+        .and_then(|h| h.get("staleness_ticks"))
+        .expect("staleness_ticks histogram exported");
+    let count = staleness
+        .get("count")
+        .and_then(|v| v.as_f64())
+        .expect("histogram count");
+    assert!(
+        count > 0.0,
+        "cluster-wide staleness histogram is empty — worker metrics never \
+         crossed the control plane"
+    );
+    assert!(staleness.get("p50").and_then(|v| v.as_f64()).is_some());
+    assert!(staleness.get("p99").and_then(|v| v.as_f64()).is_some());
+    // The aggregated staleness also landed in the monitor's CSV record.
+    let rec = rep.recorder.last().expect("monitor recorded snapshots");
+    assert!(
+        rec.staleness_p99 >= rec.staleness_p50 && rec.staleness_p50 >= 0.0,
+        "record quantiles inconsistent: p50 {} p99 {}",
+        rec.staleness_p50,
+        rec.staleness_p99
+    );
+}
+
 /// Snapshot one worker over a monitor control connection.
 fn snapshot(conn: &mut TcpStream) -> Option<(u64, Vec<(u32, Vec<f32>)>)> {
     wire::write_frame(conn, &WireMsg::SnapshotRequest).ok()?;

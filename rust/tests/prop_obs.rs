@@ -1,0 +1,174 @@
+//! Property tests for the observability layer: histogram snapshots
+//! merge like a commutative monoid with nothing lost or invented, the
+//! log2 bucketing is total and monotone, and the trace ring always
+//! retains exactly the newest events in order.
+
+use dasgd::obs::{bucket_index, HistSnapshot, MetricsSnapshot, TraceEvent, TraceRing, HIST_BUCKETS};
+use dasgd::util::proptest::{check, Gen};
+
+/// A histogram snapshot with a random (possibly empty) set of samples.
+/// `sum`/`count`/`buckets` are kept mutually consistent the same way
+/// `Histogram::record` keeps them, so conservation laws are checkable.
+fn arb_hist(g: &mut Gen) -> HistSnapshot {
+    let mut h = HistSnapshot::ZERO;
+    for _ in 0..g.usize_in(0, 64) {
+        let v = g.usize_in(0, 1 << 40) as u64;
+        h.buckets[bucket_index(v)] += 1;
+        h.count += 1;
+        h.sum += v;
+    }
+    h
+}
+
+#[test]
+fn hist_merge_is_commutative_and_associative_and_conserves_mass() {
+    check("obs-hist-merge", 300, 0x0B51, |g| {
+        let a = arb_hist(g);
+        let b = arb_hist(g);
+        let c = arb_hist(g);
+
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        if ab != ba {
+            return Err("merge is not commutative".into());
+        }
+
+        let mut ab_c = ab;
+        ab_c.merge(&c);
+        let mut bc = b;
+        bc.merge(&c);
+        let mut a_bc = a;
+        a_bc.merge(&bc);
+        if ab_c != a_bc {
+            return Err("merge is not associative".into());
+        }
+
+        // Conservation: total count and sum add exactly, and the count
+        // equals the bucket mass (no sample leaves its bucket).
+        if ab_c.count != a.count + b.count + c.count {
+            return Err(format!(
+                "count not conserved: {} != {}",
+                ab_c.count,
+                a.count + b.count + c.count
+            ));
+        }
+        if ab_c.sum != a.sum + b.sum + c.sum {
+            return Err("sum not conserved".into());
+        }
+        let mass: u64 = ab_c.buckets.iter().sum();
+        if mass != ab_c.count {
+            return Err(format!("bucket mass {} != count {}", mass, ab_c.count));
+        }
+        // Merging the empty snapshot is the identity.
+        let mut a_zero = a;
+        a_zero.merge(&HistSnapshot::ZERO);
+        if a_zero != a {
+            return Err("ZERO is not a merge identity".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_merge_matches_componentwise_laws() {
+    check("obs-snapshot-merge", 200, 0x0B52, |g| {
+        let mut a = MetricsSnapshot::ZERO;
+        let mut b = MetricsSnapshot::ZERO;
+        for s in [&mut a, &mut b] {
+            for ctr in s.counters.iter_mut() {
+                *ctr = g.usize_in(0, 1 << 30) as u64;
+            }
+            for gv in s.gauges.iter_mut() {
+                *gv = g.usize_in(0, 1 << 30) as u64;
+            }
+            for h in s.hists.iter_mut() {
+                *h = arb_hist(g);
+            }
+        }
+        let mut ab = a;
+        ab.merge_from(&b);
+        let mut ba = b;
+        ba.merge_from(&a);
+        if ab != ba {
+            return Err("snapshot merge is not commutative".into());
+        }
+        for ((&m, &x), &y) in ab.counters.iter().zip(a.counters.iter()).zip(b.counters.iter()) {
+            if m != x + y {
+                return Err("counters must sum across processes".into());
+            }
+        }
+        for ((&m, &x), &y) in ab.gauges.iter().zip(a.gauges.iter()).zip(b.gauges.iter()) {
+            if m != x.max(y) {
+                return Err("gauges must take the cluster max".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bucket_index_is_total_and_monotone() {
+    check("obs-bucket-index", 300, 0x0B53, |g| {
+        let v = g.usize_in(0, usize::MAX / 2) as u64;
+        let i = bucket_index(v);
+        if i >= HIST_BUCKETS {
+            return Err(format!("bucket_index({v}) = {i} out of range"));
+        }
+        // Monotone: a larger value never lands in a smaller bucket.
+        let w = v.saturating_add(g.usize_in(0, 1 << 20) as u64);
+        if bucket_index(w) < i {
+            return Err(format!("bucket_index not monotone at {v} -> {w}"));
+        }
+        // The quantile of a single-sample histogram brackets the sample.
+        let mut h = HistSnapshot::ZERO;
+        h.buckets[i] += 1;
+        h.count = 1;
+        h.sum = v;
+        let q = h.quantile(0.5);
+        if q < v as f64 {
+            return Err(format!("quantile {q} below its only sample {v}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trace_ring_wraparound_keeps_the_newest_events_in_order() {
+    check("obs-trace-ring", 300, 0x0B54, |g| {
+        let cap = g.usize_in(1, 64);
+        let pushed = g.usize_in(0, 4 * cap);
+        let mut ring = TraceRing::new(cap);
+        for i in 0..pushed {
+            ring.push(TraceEvent {
+                seq: 0, // assigned by the ring
+                t_us: i as u64,
+                component: "test",
+                event: "tick",
+                node: (i % 7) as u64,
+                detail: i as u64,
+            });
+        }
+        let events = ring.events();
+        let want = pushed.min(cap);
+        if events.len() != want {
+            return Err(format!("kept {} events, want {}", events.len(), want));
+        }
+        if ring.len() != want || ring.is_empty() != (want == 0) {
+            return Err("len/is_empty disagree with events()".into());
+        }
+        // The retained window is exactly the newest `want` pushes, in
+        // push order, with the sequence the ring assigned.
+        for (j, e) in events.iter().enumerate() {
+            let orig = pushed - want + j;
+            if e.seq != orig as u64 || e.detail != orig as u64 {
+                return Err(format!(
+                    "slot {j}: seq {} detail {} — oldest events displaced the newest",
+                    e.seq, e.detail
+                ));
+            }
+        }
+        Ok(())
+    });
+}

@@ -17,7 +17,7 @@ use dasgd::workload::{PlanSpec, WorkloadPlan};
 /// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
 fn arb_msg(g: &mut Gen) -> WireMsg {
     let w_len = g.usize_in(0, g.size * 64);
-    match g.usize_in(0, 17) {
+    match g.usize_in(0, 19) {
         0 => WireMsg::Hello {
             rank: g.usize_in(0, 1 << 20) as u32,
         },
@@ -130,8 +130,18 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             total_rows: g.usize_in(0, 1 << 30) as u64,
             checksum: g.usize_in(0, usize::MAX / 2) as u64,
         },
-        _ => WireMsg::ShardCredit {
+        17 => WireMsg::ShardCredit {
             bytes: g.usize_in(0, 1 << 30) as u64,
+        },
+        18 => WireMsg::MetricsRequest,
+        _ => WireMsg::MetricsReply {
+            rank: g.usize_in(0, 64) as u32,
+            counters: (0..g.usize_in(0, 16))
+                .map(|_| g.usize_in(0, 1 << 30) as u64)
+                .collect(),
+            hist_data: (0..g.usize_in(0, 5 * 66))
+                .map(|_| g.usize_in(0, 1 << 30) as u64)
+                .collect(),
         },
     }
 }
@@ -199,6 +209,56 @@ fn garbage_and_bit_flips_error_never_panic() {
         // an Io error, not a hang or panic).
         let mut cursor = std::io::Cursor::new(&garbage);
         let _ = read_frame(&mut cursor);
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_snapshot_wire_layout_is_roundtrip_and_length_tolerant() {
+    use dasgd::obs::{Gauge, Hist, HistSnapshot, MetricsSnapshot};
+    check("wire-metrics-snapshot", 150, 0x0B5E6, |g| {
+        // A populated snapshot survives to_wire → MetricsReply frame →
+        // decode → from_wire exactly.
+        let mut snap = MetricsSnapshot::ZERO;
+        for c in snap.counters.iter_mut() {
+            *c = g.usize_in(0, 1 << 30) as u64;
+        }
+        snap.gauges[Gauge::StagingHighWater as usize] = g.usize_in(0, 1 << 30) as u64;
+        let mut h = HistSnapshot::ZERO;
+        for _ in 0..g.usize_in(1, 32) {
+            let b = g.usize_in(0, 63);
+            h.buckets[b] += 1;
+            h.count += 1;
+            h.sum += b as u64;
+        }
+        snap.hists[Hist::StalenessTicks as usize] = h;
+        let (counters, hist_data) = snap.to_wire();
+        let msg = WireMsg::MetricsReply {
+            rank: 7,
+            counters,
+            hist_data,
+        };
+        let frame = encode(&msg).map_err(|e| format!("encode: {e}"))?;
+        let (back, _) = decode(&frame)
+            .map_err(|e| format!("decode: {e}"))?
+            .ok_or("incomplete")?;
+        let WireMsg::MetricsReply {
+            counters, hist_data, ..
+        } = back
+        else {
+            return Err("decoded as a different variant".into());
+        };
+        if MetricsSnapshot::from_wire(&counters, &hist_data) != snap {
+            return Err("snapshot changed through the wire layout".into());
+        }
+        // Arbitrary-length vectors (a newer/older peer's layout) decode
+        // without panicking: missing words read as zero, extras are
+        // ignored.
+        let short: Vec<u64> = counters.iter().copied().take(g.usize_in(0, 6)).collect();
+        let bent: Vec<u64> = (0..g.usize_in(0, 500))
+            .map(|_| g.usize_in(0, 1 << 30) as u64)
+            .collect();
+        let _ = MetricsSnapshot::from_wire(&short, &bent);
         Ok(())
     });
 }

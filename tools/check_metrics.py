@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Validate dasgd observability JSONL exports (stdlib only).
+
+Checks every line of a --metrics-jsonl or --trace-jsonl file against
+the schemas documented in docs/observability.md and exits nonzero with
+a pointed message on the first violation. Used by the CI loopback
+smoke and the nightly launch legs.
+
+Usage:
+    python3 tools/check_metrics.py metrics.jsonl [--require-staleness]
+    python3 tools/check_metrics.py trace.jsonl --kind trace
+"""
+
+import argparse
+import json
+import sys
+
+COUNTERS = ["steals", "b8_collapses", "credit_stalls", "conflicts", "reconnects"]
+GAUGES = ["staging_high_water_bytes", "chunk_high_water_bytes"]
+HISTS = [
+    "fire_to_apply_us",
+    "message_delay_us",
+    "staleness_ticks",
+    "timer_lag_us",
+    "flush_bytes",
+]
+HIST_BUCKETS = 64
+TRACE_KEYS = ["kind", "seq", "t_us", "component", "event", "node", "detail"]
+
+
+def fail(path, lineno, msg):
+    sys.exit(f"{path}:{lineno}: {msg}")
+
+
+def check_uint(path, lineno, name, v):
+    if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+        fail(path, lineno, f"{name} must be a non-negative integer, got {v!r}")
+
+
+def check_hist(path, lineno, name, h):
+    if not isinstance(h, dict):
+        fail(path, lineno, f"hist {name} must be an object")
+    for key in ("count", "sum"):
+        check_uint(path, lineno, f"hists.{name}.{key}", h.get(key))
+    for key in ("p50", "p99"):
+        if not isinstance(h.get(key), (int, float)):
+            fail(path, lineno, f"hists.{name}.{key} must be a number")
+    buckets = h.get("buckets")
+    if not isinstance(buckets, list):
+        fail(path, lineno, f"hists.{name}.buckets must be a list")
+    mass = 0
+    for pair in buckets:
+        if (
+            not isinstance(pair, list)
+            or len(pair) != 2
+            or not all(isinstance(x, int) and x >= 0 for x in pair)
+        ):
+            fail(path, lineno, f"hists.{name}.buckets entries must be [index, count]")
+        index, count = pair
+        if index >= HIST_BUCKETS:
+            fail(path, lineno, f"hists.{name} bucket index {index} >= {HIST_BUCKETS}")
+        if count == 0:
+            fail(path, lineno, f"hists.{name} sparse buckets must omit zero counts")
+        mass += count
+    if mass != h["count"]:
+        fail(path, lineno, f"hists.{name} bucket mass {mass} != count {h['count']}")
+
+
+def check_metrics_line(path, lineno, obj):
+    if obj.get("kind") != "metrics":
+        fail(path, lineno, f"kind must be 'metrics', got {obj.get('kind')!r}")
+    if not isinstance(obj.get("scope"), str) or not obj["scope"]:
+        fail(path, lineno, "scope must be a non-empty string")
+    if not isinstance(obj.get("t_secs"), (int, float)) or obj["t_secs"] < 0:
+        fail(path, lineno, "t_secs must be a non-negative number")
+    check_uint(path, lineno, "k", obj.get("k"))
+    for section, names in (("counters", COUNTERS), ("gauges", GAUGES)):
+        block = obj.get(section)
+        if not isinstance(block, dict):
+            fail(path, lineno, f"{section} must be an object")
+        if sorted(block) != sorted(names):
+            fail(path, lineno, f"{section} keys {sorted(block)} != catalog {sorted(names)}")
+        for name, v in block.items():
+            check_uint(path, lineno, f"{section}.{name}", v)
+    hists = obj.get("hists")
+    if not isinstance(hists, dict):
+        fail(path, lineno, "hists must be an object")
+    if sorted(hists) != sorted(HISTS):
+        fail(path, lineno, f"hists keys {sorted(hists)} != catalog {sorted(HISTS)}")
+    for name, h in hists.items():
+        check_hist(path, lineno, name, h)
+
+
+def check_trace_line(path, lineno, obj, prev_seq):
+    if obj.get("kind") != "trace":
+        fail(path, lineno, f"kind must be 'trace', got {obj.get('kind')!r}")
+    if sorted(obj) != sorted(TRACE_KEYS):
+        fail(path, lineno, f"trace keys {sorted(obj)} != {sorted(TRACE_KEYS)}")
+    for key in ("seq", "t_us", "node", "detail"):
+        check_uint(path, lineno, key, obj[key])
+    for key in ("component", "event"):
+        if not isinstance(obj[key], str) or not obj[key]:
+            fail(path, lineno, f"{key} must be a non-empty string")
+    if prev_seq is not None and obj["seq"] <= prev_seq:
+        fail(path, lineno, f"seq {obj['seq']} not after previous {prev_seq}")
+    return obj["seq"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="JSONL file to validate")
+    ap.add_argument(
+        "--kind",
+        choices=["metrics", "trace"],
+        default="metrics",
+        help="which schema to check (default: metrics)",
+    )
+    ap.add_argument(
+        "--require-staleness",
+        action="store_true",
+        help="fail unless the final metrics line has staleness_ticks count > 0",
+    )
+    args = ap.parse_args()
+    if args.require_staleness and args.kind != "metrics":
+        ap.error("--require-staleness only applies to --kind metrics")
+
+    lines = 0
+    prev_seq = None
+    last = None
+    try:
+        with open(args.path, encoding="utf-8") as f:
+            for lineno, raw in enumerate(f, start=1):
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    obj = json.loads(raw)
+                except json.JSONDecodeError as e:
+                    fail(args.path, lineno, f"invalid JSON: {e}")
+                if args.kind == "metrics":
+                    check_metrics_line(args.path, lineno, obj)
+                else:
+                    prev_seq = check_trace_line(args.path, lineno, obj, prev_seq)
+                lines += 1
+                last = obj
+    except OSError as e:
+        sys.exit(f"{args.path}: {e}")
+
+    if lines == 0:
+        sys.exit(f"{args.path}: no JSONL lines found")
+    if args.require_staleness:
+        count = last["hists"]["staleness_ticks"]["count"]
+        if count == 0:
+            sys.exit(f"{args.path}: final line has an empty staleness_ticks histogram")
+    print(f"{args.path}: {lines} {args.kind} line(s) OK")
+
+
+if __name__ == "__main__":
+    main()
