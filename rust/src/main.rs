@@ -93,7 +93,9 @@ Observability (train / cluster / sim / launch / worker):
   --metrics-jsonl PATH  append one {\"kind\":\"metrics\",...} JSON line per
               evaluation round (launch: the cluster-wide aggregate)
   --trace-jsonl PATH    arm the structured tracer; the event ring dumps
-              to PATH on exit, on panic, or when the run ends
+              to PATH on exit, on panic, or when the run ends (launch
+              also arms every worker: rank N dumps to PATH's sibling
+              <stem>.rankN.<ext>, the monitor to PATH itself)
   --log-level L         error|warn|info|debug (default info); launch
               forwards it to every worker
   --metrics-addr H:P    (launch, worker) serve Prometheus text on H:P —
@@ -883,6 +885,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         metrics_jsonl: metrics_jsonl.clone(),
         metrics_addr: args.get("metrics-addr").map(String::from),
         log_level: args.get("log-level").map(String::from),
+        trace_jsonl: args.get("trace-jsonl").map(std::path::PathBuf::from),
     };
     println!(
         "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \

@@ -764,6 +764,12 @@ pub struct LaunchConfig {
     pub metrics_addr: Option<String>,
     /// Log level forwarded to every worker (`--log-level`).
     pub log_level: Option<String>,
+    /// Arm every worker's tracer too (`--trace-jsonl`): rank N dumps
+    /// its ring to the sibling path `<stem>.rankN[.ext]`. The
+    /// launcher's own ring (monitor round/evict events) is armed by
+    /// the CLI and dumps to the path itself — the processes must not
+    /// share one file, since each dump truncates it.
+    pub trace_jsonl: Option<std::path::PathBuf>,
 }
 
 impl LaunchConfig {
@@ -790,6 +796,7 @@ impl LaunchConfig {
             metrics_jsonl: None,
             metrics_addr: None,
             log_level: None,
+            trace_jsonl: None,
         }
     }
 }
@@ -847,6 +854,17 @@ fn block_msg(b: RowBlock) -> WireMsg {
 fn reserve_port() -> Result<u16> {
     let l = TcpListener::bind("127.0.0.1:0").context("reserving a loopback port")?;
     Ok(l.local_addr()?.port())
+}
+
+/// Rank-qualified sibling of the launcher's `--trace-jsonl` path:
+/// `trace.jsonl` becomes `trace.rank3.jsonl`.
+fn per_rank_trace_path(path: &std::path::Path, rank: usize) -> std::path::PathBuf {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let name = match path.extension().and_then(|s| s.to_str()) {
+        Some(ext) => format!("{stem}.rank{rank}.{ext}"),
+        None => format!("{stem}.rank{rank}"),
+    };
+    path.with_file_name(name)
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -1005,6 +1023,12 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
             ]);
         if let Some(lvl) = &cfg.log_level {
             cmd.args(["--log-level", lvl]);
+        }
+        // Trace events fire inside the workers (node/socket/stream
+        // callsites), so each rank gets its own armed tracer — the
+        // launcher's ring only ever sees monitor events.
+        if let Some(path) = &cfg.trace_jsonl {
+            cmd.arg("--trace-jsonl").arg(per_rank_trace_path(path, rank));
         }
         let child = cmd.stdout(Stdio::null()).stderr(Stdio::inherit()).spawn();
         match child {
@@ -1207,6 +1231,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     for conn in conns.iter_mut().flatten() {
         conn.set_write_timeout(Duration::from_secs(1));
     }
+    crate::obs::trace("monitor", "stream_done", 0, 0);
 
     // The monitor's evaluation set came from the plan build; mixed
     // cohorts evaluate under the weighted per-family convention.
@@ -1240,6 +1265,15 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     // (messages, steals, time) at the last stderr summary line — the
     // window the per-second rates are computed over.
     let mut top_mark: (u64, u64, f64) = (0, 0, 0.0);
+    // Each worker's MetricsReply read carries a 500ms deadline, so a
+    // slow or dead peer stalls the round by up to that per rank. With
+    // a metrics sink configured (JSONL or the endpoint) freshness is
+    // the point and the poll runs every round; without one, the only
+    // consumers are the 2s stderr summary and the CSV quantile
+    // columns, so the poll drops to that cadence and the columns carry
+    // the last aggregate between polls (counters are cumulative).
+    let poll_every_round = cfg.metrics_jsonl.is_some() || cfg.metrics_addr.is_some();
+    let mut agg = crate::obs::MetricsSnapshot::ZERO;
     let (counts, reached_horizon) = loop {
         let now = sw.elapsed_secs();
         // Collect every live worker's shard: one logical SnapshotReply
@@ -1300,6 +1334,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 strikes[rank] += 1;
                 if strikes[rank] >= MAX_STRIKES {
                     // Dead worker: out of the cohort; survivors carry on.
+                    crate::obs::trace("monitor", "evict", rank as u64, strikes[rank] as u64);
                     *conn_slot = None;
                 }
             }
@@ -1318,29 +1353,34 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         // One MetricsRequest per live worker, merged (with the monitor
         // process's own counters) into the cluster-wide aggregate. A
         // rank missing one round is fine — counters are cumulative.
-        let mut agg = crate::obs::snapshot();
-        for conn in conns.iter_mut().flatten() {
-            if conn.write_msg(&WireMsg::MetricsRequest).is_err() {
-                continue;
-            }
-            let deadline = Instant::now() + Duration::from_millis(500);
-            loop {
-                match conn.read_msg(deadline) {
-                    Ok(Some(WireMsg::MetricsReply {
-                        counters,
-                        hist_data,
-                        ..
-                    })) => {
-                        agg.merge_from(&crate::obs::MetricsSnapshot::from_wire(
-                            &counters, &hist_data,
-                        ));
-                        break;
+        let summary_due = now - top_mark.2 >= 2.0;
+        if poll_every_round || summary_due {
+            let mut fresh = crate::obs::snapshot();
+            for conn in conns.iter_mut().flatten() {
+                if conn.write_msg(&WireMsg::MetricsRequest).is_err() {
+                    continue;
+                }
+                let deadline = Instant::now() + Duration::from_millis(500);
+                loop {
+                    match conn.read_msg(deadline) {
+                        Ok(Some(WireMsg::MetricsReply {
+                            counters,
+                            hist_data,
+                            ..
+                        })) => {
+                            fresh.merge_from(&crate::obs::MetricsSnapshot::from_wire(
+                                &counters, &hist_data,
+                            ));
+                            break;
+                        }
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => break,
                     }
-                    Ok(Some(_)) => {}
-                    Ok(None) | Err(_) => break,
                 }
             }
+            agg = fresh;
         }
+        crate::obs::trace("monitor", "round", 0, total.updates());
         let staleness = agg.hists[crate::obs::Hist::StalenessTicks as usize];
         let staging = agg.gauges[crate::obs::Gauge::StagingHighWater as usize]
             .max(max_staging_bytes);
@@ -1363,7 +1403,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         if cfg.metrics_addr.is_some() {
             *prom.lock().unwrap() = agg.prometheus_text();
         }
-        if now - top_mark.2 >= 2.0 {
+        if summary_due {
             let dt = (now - top_mark.2).max(1e-9);
             let steals = agg.counters[crate::obs::Counter::Steals as usize];
             crate::log!(
@@ -1391,6 +1431,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     };
 
     // End the run: broadcast Shutdown, then reap.
+    crate::obs::trace("monitor", "shutdown", 0, counts.updates());
     for conn in conns.iter_mut().flatten() {
         let _ = conn.write_msg(&WireMsg::Shutdown);
     }
@@ -1424,6 +1465,14 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_rank_trace_paths_stay_siblings() {
+        let p = per_rank_trace_path(std::path::Path::new("out/trace.jsonl"), 3);
+        assert_eq!(p, std::path::Path::new("out/trace.rank3.jsonl"));
+        let p = per_rank_trace_path(std::path::Path::new("trace"), 0);
+        assert_eq!(p, std::path::Path::new("trace.rank0"));
+    }
 
     #[test]
     fn launch_config_rejects_bad_shapes() {

@@ -191,6 +191,10 @@ struct Link {
     /// below, which uphold it.
     sendbuf: Mutex<SendBuf>,
     alive: AtomicBool,
+    /// Set once any connection has been installed — distinguishes a
+    /// true reconnect after a dropped link from the dial retries every
+    /// worker burns while its peers are still coming up.
+    ever_connected: AtomicBool,
     last_seen: Mutex<Instant>,
 }
 
@@ -201,6 +205,7 @@ impl Link {
             writer: Mutex::new(None),
             sendbuf: Mutex::new(SendBuf::new()),
             alive: AtomicBool::new(false),
+            ever_connected: AtomicBool::new(false),
             last_seen: Mutex::new(Instant::now()),
         }
     }
@@ -219,6 +224,7 @@ impl Link {
             let _ = old.shutdown(Shutdown::Both);
         }
         self.alive.store(true, Ordering::SeqCst);
+        self.ever_connected.store(true, Ordering::SeqCst);
     }
 
     fn touch(&self) {
@@ -523,8 +529,13 @@ fn dial_loop(inner: Arc<Inner>, rank: u32) {
             std::thread::sleep(inner.cfg.reconnect);
             continue;
         };
-        crate::obs::add(crate::obs::Counter::Reconnects, 1);
-        crate::obs::trace("socket", "reconnect", rank as u64, 0);
+        // Only a re-dial after an established link dropped counts as a
+        // reconnect; cold dials while a peer is still binding its
+        // listener are normal cluster startup, not churn.
+        if link.ever_connected.load(Ordering::SeqCst) {
+            crate::obs::add(crate::obs::Counter::Reconnects, 1);
+            crate::obs::trace("socket", "reconnect", rank as u64, 0);
+        }
         match TcpStream::connect_timeout(&target, Duration::from_secs(2)) {
             Ok(stream) => {
                 tune(&stream);

@@ -498,19 +498,46 @@ fn launch_with_metrics_jsonl_exports_cluster_staleness() {
     // line aggregates nonzero staleness samples pulled from the worker
     // processes over MetricsRequest/MetricsReply control frames.
     let path = std::env::temp_dir().join(format!("dasgd_it_metrics_{}.jsonl", std::process::id()));
+    let trace = std::env::temp_dir().join(format!("dasgd_it_trace_{}.jsonl", std::process::id()));
+    let rank_traces: Vec<std::path::PathBuf> = (0..2)
+        .map(|r| {
+            std::env::temp_dir()
+                .join(format!("dasgd_it_trace_{}.rank{r}.jsonl", std::process::id()))
+        })
+        .collect();
     let _ = std::fs::remove_file(&path);
+    for p in &rank_traces {
+        let _ = std::fs::remove_file(p);
+    }
     let cfg = LaunchConfig {
         binary: Some(dasgd_bin()),
         horizon_updates: 1500,
         secs_cap: 25.0,
         seed: SEED,
         metrics_jsonl: Some(path.clone()),
+        trace_jsonl: Some(trace.clone()),
         log_level: Some("warn".into()),
         ..LaunchConfig::quick(2, NODES)
     };
     let rep = dasgd::net::run_launch(&cfg).expect("instrumented launch failed");
     assert_eq!(rep.live_workers, 2, "both workers must stay live");
     assert!(rep.reached_horizon, "instrumented run stalled before the horizon");
+
+    // --trace-jsonl is forwarded per rank: each worker process dumps
+    // its own armed ring on exit. (This test process never armed a
+    // tracer, so only the forwarded files exist — arming the global
+    // tracer here would leak into sibling tests.)
+    for (r, p) in rank_traces.iter().enumerate() {
+        let text = std::fs::read_to_string(p)
+            .unwrap_or_else(|e| panic!("rank {r} trace file {}: {e}", p.display()));
+        let _ = std::fs::remove_file(p);
+        let first = text
+            .lines()
+            .find(|l| !l.trim().is_empty())
+            .unwrap_or_else(|| panic!("rank {r} trace dump is empty — no events fired"));
+        let j = dasgd::util::json::parse(first).expect("trace line must parse as JSON");
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("trace"));
+    }
 
     let text = std::fs::read_to_string(&path).expect("metrics JSONL written");
     let _ = std::fs::remove_file(&path);

@@ -32,6 +32,27 @@ def fail(path, lineno, msg):
     sys.exit(f"{path}:{lineno}: {msg}")
 
 
+_warned_extra = set()
+
+
+def check_catalog(path, lineno, section, block, names):
+    """The wire format and JSONL schema are append-only: a file from a
+    build with *more* metrics than this checker knows is valid (extras
+    are noted once, not failed); one missing a catalog metric is not.
+    """
+    missing = sorted(set(names) - set(block))
+    if missing:
+        fail(path, lineno, f"{section} missing catalog keys {missing}")
+    for key in sorted(set(block) - set(names)):
+        if (section, key) not in _warned_extra:
+            _warned_extra.add((section, key))
+            print(
+                f"{path}:{lineno}: note: {section} key {key!r} is not in this "
+                "checker's catalog (tolerated: the format is append-only)",
+                file=sys.stderr,
+            )
+
+
 def check_uint(path, lineno, name, v):
     if not isinstance(v, int) or isinstance(v, bool) or v < 0:
         fail(path, lineno, f"{name} must be a non-negative integer, got {v!r}")
@@ -78,17 +99,17 @@ def check_metrics_line(path, lineno, obj):
         block = obj.get(section)
         if not isinstance(block, dict):
             fail(path, lineno, f"{section} must be an object")
-        if sorted(block) != sorted(names):
-            fail(path, lineno, f"{section} keys {sorted(block)} != catalog {sorted(names)}")
+        check_catalog(path, lineno, section, block, names)
         for name, v in block.items():
             check_uint(path, lineno, f"{section}.{name}", v)
     hists = obj.get("hists")
     if not isinstance(hists, dict):
         fail(path, lineno, "hists must be an object")
-    if sorted(hists) != sorted(HISTS):
-        fail(path, lineno, f"hists keys {sorted(hists)} != catalog {sorted(HISTS)}")
-    for name, h in hists.items():
-        check_hist(path, lineno, name, h)
+    check_catalog(path, lineno, "hists", hists, HISTS)
+    # Only catalog histograms are shape-checked — an extra hist from a
+    # newer build may legitimately extend the schema.
+    for name in HISTS:
+        check_hist(path, lineno, name, hists[name])
 
 
 def check_trace_line(path, lineno, obj, prev_seq):
