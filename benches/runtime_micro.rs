@@ -301,6 +301,28 @@ fn bench_obs(h: &mut Harness) -> Vec<(String, f64)> {
     rows
 }
 
+/// Membership repair latency at deployment scale: one worker-sized
+/// block of nodes (250 of 1000) vacated and re-admitted on a 4-regular
+/// graph — the monitor-side cost of one churn event (eviction + join,
+/// `rust/src/membership/`). 1000 active nodes is far past the exact-σ₂
+/// scorer's cutoff, so this measures the BFS expansion-proxy path the
+/// large runs actually take. The row is seconds per full cycle.
+fn bench_membership(h: &mut Harness) -> Vec<(String, f64)> {
+    use dasgd::membership::Membership;
+
+    const NODES: usize = 1000;
+    const DEGREE: usize = 4;
+    let mut m = Membership::new(dasgd::experiments::make_regular(NODES, DEGREE), DEGREE);
+    // The block a 4-worker launch would vacate when rank 1 dies.
+    let block: Vec<usize> = (250..500).collect();
+    let r = h.case("membership repair (1k nodes, vacate + re-admit 250)", || {
+        std::hint::black_box(m.deactivate(&block).len());
+        std::hint::black_box(m.activate(&block).len());
+    });
+    assert!(m.is_active_connected());
+    vec![("membership_repair".to_string(), r.mean_secs)]
+}
+
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
@@ -311,6 +333,8 @@ fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
          stream_first_step_latency is one staged block reaching a node; \
          metrics_hot_path is one instrumented record (counter + histogram + \
          disabled trace probe) and trace_disabled_overhead the probe alone; \
+         membership_repair is one 1000-node churn cycle (vacate + re-admit a \
+         250-node worker block, topology repaired both ways); \
          nodes_per_worker_saturation is seconds per applied update with 512 \
          nodes on the executor pool in one process (nodes_per_worker_tpn_baseline \
          is the same window on thread-per-node)\",\n",
@@ -411,6 +435,8 @@ fn main() {
     transport_rows.extend(bench_stream(&mut h));
     let mut h = Harness::new("observability overhead");
     transport_rows.extend(bench_obs(&mut h));
+    let mut h = Harness::new("membership repair (churn events)");
+    transport_rows.extend(bench_membership(&mut h));
     println!("\nscheduler saturation (512 nodes per process)");
     transport_rows.extend(bench_saturation());
     write_transport_baseline(&transport_rows, 500);

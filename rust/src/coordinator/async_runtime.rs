@@ -55,6 +55,7 @@ use anyhow::{bail, Result};
 use crate::data::stream::BlockBuffer;
 use crate::data::Dataset;
 use crate::graph::Graph;
+use crate::membership::TopologyView;
 use crate::metrics::Recorder;
 use crate::node_logic::{
     neighborhood_average, projection_messages, Action, Counts, NodeLogic, Probe,
@@ -221,6 +222,7 @@ impl Shared {
 /// the difference.
 pub struct ShardRun {
     shared: Arc<Shared>,
+    topology: Arc<TopologyView>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -228,6 +230,15 @@ impl ShardRun {
     /// Cumulative counters in the canonical convention.
     pub fn counts(&self) -> Counts {
         self.shared.counts()
+    }
+
+    /// The live topology the node tasks sample their neighborhoods
+    /// from. Membership repair applies
+    /// [`TopologyPatch`](crate::net::WireMsg::TopologyPatch) frames
+    /// here; each collect round reads one consistent neighborhood, so
+    /// a patch can land mid-run without tearing an in-flight round.
+    pub fn topology(&self) -> &Arc<TopologyView> {
+        &self.topology
     }
 
     /// Applied updates so far (this shard's stepsize clock).
@@ -281,7 +292,9 @@ fn node_rng(seed: u64, i: usize) -> Xoshiro256pp {
 struct FireCtx {
     shared: Arc<Shared>,
     transport: Arc<dyn Transport>,
-    graph: Graph,
+    /// The (patchable) communication topology — launch graph at
+    /// version 0, rewritten by membership repair patches mid-run.
+    topology: Arc<TopologyView>,
     cfg: AsyncConfig,
     executor: Option<(ExecutorHandle, PjrtArtifacts)>,
     dim: usize,
@@ -352,10 +365,11 @@ pub fn spawn_shard_with_feeds(
     let (dim, classes) = (plan.dim(), plan.classes());
     let mixed = plan.is_mixed();
     let shared = Arc::new(Shared::new(n));
+    let topology = Arc::new(TopologyView::new(graph.clone()));
     let ctx = Arc::new(FireCtx {
         shared: Arc::clone(&shared),
         transport,
-        graph: graph.clone(),
+        topology: Arc::clone(&topology),
         cfg: cfg.clone(),
         executor,
         dim,
@@ -395,7 +409,11 @@ pub fn spawn_shard_with_feeds(
         EngineKind::ThreadPerNode => spawn_thread_per_node(tasks, ctx),
         EngineKind::Executors(want) => spawn_executor_pool(tasks, ctx, want),
     };
-    ShardRun { shared, handles }
+    ShardRun {
+        shared,
+        topology,
+        handles,
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -526,7 +544,7 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
             // process, and — for the multi-process SocketNet — whole
             // peer workers whose link is down.
             let hood: Vec<usize> = ctx
-                .graph
+                .topology
                 .closed_neighborhood(id)
                 .into_iter()
                 .filter(|&j| {

@@ -28,6 +28,7 @@ pub mod data;
 pub mod experiments;
 pub mod graph;
 pub mod linalg;
+pub mod membership;
 pub mod metrics;
 pub mod model;
 pub mod net;

@@ -9,7 +9,9 @@ use dasgd::data::stream::DEFAULT_BLOCK_ROWS;
 use dasgd::data::{ascii_art, load_libsvm, render_glyph, GlyphStyle, LibsvmOptions, NotMnistGen};
 use dasgd::experiments::{self, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
 use dasgd::metrics::Table;
-use dasgd::net::{run_launch, run_worker, LaunchConfig, WorkerConfig, WorkerPlanSource};
+use dasgd::net::{
+    run_join_worker, run_launch, run_worker, LaunchConfig, WorkerConfig, WorkerPlanSource,
+};
 use dasgd::runtime::{Engine, ExecutorService};
 use dasgd::sim::{simnet_run_plan, SimConfig, SpeedModel};
 use dasgd::transport::{LatencyModel, PartitionWindow, SimNetConfig, TransportKind};
@@ -68,13 +70,24 @@ System:
               start stepping on their first block; --executors E pool
               threads per worker (0 = one per core) and --flush-bytes B
               / --flush-micros U tune per-peer frame coalescing
-              (B=0 turns batching off)
+              (B=0 turns batching off); membership churn: --join-addr
+              H:P listens for mid-run `worker --join` replacements
+              (the monitor prints `dasgd-launch join-addr=...`),
+              --chaos-kill R@F SIGKILLs rank R once the update count
+              passes fraction F of the horizon, --chaos-join F spawns
+              a --join replacement past fraction F (implies a
+              loopback join listener)
   worker      one deployment worker process (--rank R
               --peers host:port,host:port,... --nodes N --degree D
               --secs S --rate HZ --objective ... --plan P|wire
               --samples M --param-len L with wire --staging-mb M
               --executors E --flush-bytes B --flush-micros U);
-              `launch` spawns these
+              `launch` spawns these. --join H:P instead of
+              --rank/--peers dials a running monitor's join listener
+              and adopts a vacant rank (plan, peers, and shards arrive
+              over the wire); --leave-after S departs gracefully after
+              S seconds (LeaveNotice — the monitor repairs the
+              topology). See docs/membership.md
   artifacts   verify the AOT artifact set loads + executes
 
 Workload plans (--plan): synth (default, the §V-A per-node world),
@@ -405,10 +418,15 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "trace-jsonl",
             "log-level",
             "metrics-addr",
+            "join-addr",
+            "chaos-kill",
+            "chaos-join",
         ],
         "worker" => &[
             "rank",
             "peers",
+            "join",
+            "leave-after",
             "nodes",
             "degree",
             "secs",
@@ -863,6 +881,42 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         }
         _ => unreachable!("parse_dataset admits only known families"),
     };
+    // Deterministic churn injection (the CI smoke and the acceptance
+    // test): both knobs are fractions of the update horizon.
+    let chaos_kill = match args.get("chaos-kill") {
+        Some(spec) => {
+            let (r, f) = spec.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("--chaos-kill wants RANK@FRAC (e.g. 2@0.3), got {spec:?}")
+            })?;
+            let rank: u32 = r.trim().parse().map_err(|_| {
+                anyhow::anyhow!("--chaos-kill rank {r:?} is not an unsigned integer")
+            })?;
+            let frac: f64 = f
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--chaos-kill fraction {f:?} is not a number"))?;
+            if !(0.0..=1.0).contains(&frac) {
+                anyhow::bail!("--chaos-kill fraction must be in [0, 1], got {frac}");
+            }
+            if rank as usize >= workers {
+                anyhow::bail!("--chaos-kill rank {rank} is out of range ({workers} workers)");
+            }
+            Some((rank, frac))
+        }
+        None => None,
+    };
+    let chaos_join = match args.get("chaos-join") {
+        Some(_) => {
+            let frac = args
+                .get_f64("chaos-join", 0.0)
+                .map_err(anyhow::Error::msg)?;
+            if !(0.0..=1.0).contains(&frac) {
+                anyhow::bail!("--chaos-join fraction must be in [0, 1], got {frac}");
+            }
+            Some(frac)
+        }
+        None => None,
+    };
     let cfg = LaunchConfig {
         workers,
         nodes,
@@ -886,6 +940,9 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         metrics_addr: args.get("metrics-addr").map(String::from),
         log_level: args.get("log-level").map(String::from),
         trace_jsonl: args.get("trace-jsonl").map(std::path::PathBuf::from),
+        join_addr: args.get("join-addr").map(String::from),
+        chaos_kill,
+        chaos_join,
     };
     println!(
         "launch: {workers} worker processes over {nodes} nodes (degree {degree}), \
@@ -948,6 +1005,32 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
             Err(e) => dasgd::log!(Warn, "worker", "--metrics-addr {addr} failed to bind: {e}"),
         }
     }
+    let leave_after = match args.get("leave-after") {
+        Some(_) => {
+            let secs = args
+                .get_f64("leave-after", 0.0)
+                .map_err(anyhow::Error::msg)?;
+            if secs <= 0.0 {
+                anyhow::bail!("--leave-after wants a positive number of seconds, got {secs}");
+            }
+            Some(secs)
+        }
+        None => None,
+    };
+    // `--join ADDR` replaces the whole static bootstrap: rank, peers,
+    // plan, and shards all arrive from the monitor's join listener.
+    if let Some(join_addr) = args.get("join") {
+        if args.get("peers").is_some() || args.get("rank").is_some() {
+            anyhow::bail!("--join gets its rank and peer list from the monitor; drop --rank/--peers");
+        }
+        let summary = run_join_worker(join_addr, leave_after)?;
+        return finish_obs(
+            metrics_jsonl.as_deref(),
+            "worker",
+            0.0,
+            summary.counts.updates(),
+        );
+    }
     let Some(peers_raw) = args.get("peers") else {
         anyhow::bail!("worker needs --peers host:port,host:port,... (one per rank)");
     };
@@ -998,6 +1081,7 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         flush_micros: args
             .get_u64("flush-micros", 500)
             .map_err(anyhow::Error::msg)?,
+        leave_after,
     };
     let summary = run_worker(&cfg)?;
     finish_obs(

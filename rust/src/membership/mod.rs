@@ -1,0 +1,180 @@
+//! Elastic membership: workers join and leave a running deployment.
+//!
+//! Three pieces make churn survivable (docs/membership.md):
+//!
+//! 1. **Protocol** — the WIRE_VERSION 7 frames
+//!    ([`JoinRequest`](crate::net::WireMsg::JoinRequest) →
+//!    [`JoinGrant`](crate::net::WireMsg::JoinGrant) →
+//!    [`JoinReady`](crate::net::WireMsg::JoinReady), plus
+//!    [`LeaveNotice`](crate::net::WireMsg::LeaveNotice) /
+//!    [`PeerUpdate`](crate::net::WireMsg::PeerUpdate)) drive admission
+//!    and departure on the existing control plane
+//!    (`net::cluster::run_launch` is the controller, `dasgd worker
+//!    --join ADDR` the joiner).
+//! 2. **Topology repair** — [`Membership`] recomputes the affected
+//!    neighborhoods on every change, preserving connectivity and
+//!    degree and greedily steering toward spectral gap
+//!    ([`crate::graph::spectral::sigma2`]; the paper's regular-graph
+//!    bound `η ≥ (1 − σ₂²)(k+1)/N` is the objective). The result
+//!    ships as a [`TopologyPatch`](crate::net::WireMsg::TopologyPatch)
+//!    to affected workers only.
+//! 3. **Atomic view swap** — workers hold their topology behind a
+//!    [`TopologyView`]: a patch replaces whole neighbor lists under a
+//!    write lock, while each collect round samples its neighborhood
+//!    once under a read lock — an in-flight `CollectRequest` never
+//!    sees a torn view.
+//!
+//! State handoff (a departing worker's shards re-streaming to the
+//! replacement, parameters carried in
+//! [`HandoffBegin`](crate::net::WireMsg::HandoffBegin)) lives in
+//! `net::cluster` — it is a data-plane concern, not a graph one.
+
+mod repair;
+
+pub use repair::Membership;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::graph::Graph;
+
+/// A shared, versioned view of the communication topology.
+///
+/// Node threads read neighborhoods from it on every firing; the serve
+/// loop applies [`TopologyPatch`](crate::net::WireMsg::TopologyPatch)
+/// frames to it between collect rounds. Versions are monotonic: a
+/// stale or replayed patch is ignored, so out-of-order delivery cannot
+/// regress the view.
+#[derive(Debug)]
+pub struct TopologyView {
+    graph: RwLock<Graph>,
+    version: AtomicU64,
+}
+
+impl TopologyView {
+    /// Wrap the launch-time graph as patch version 0.
+    pub fn new(graph: Graph) -> Self {
+        Self {
+            graph: RwLock::new(graph),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// The version of the last applied patch (0 = launch topology).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Number of nodes (fixed for the run — membership vacates nodes,
+    /// it never renumbers them).
+    pub fn len(&self) -> usize {
+        self.graph.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The closed neighborhood {u} ∪ N(u) under the current view —
+    /// one consistent sample per call (the collect round that uses it
+    /// keeps it even if a patch lands mid-round).
+    pub fn closed_neighborhood(&self, u: usize) -> Vec<usize> {
+        self.graph.read().unwrap().closed_neighborhood(u)
+    }
+
+    /// A full snapshot of the current graph (clone; test/diagnostic
+    /// use — the hot path wants [`Self::closed_neighborhood`]).
+    pub fn snapshot(&self) -> Graph {
+        self.graph.read().unwrap().clone()
+    }
+
+    /// Apply one topology patch: each entry replaces that node's
+    /// *complete* neighbor list (an empty list detaches the node).
+    /// Returns `false` without touching the view when the patch is
+    /// stale (`version` not newer than the current one) or malformed
+    /// (out-of-range ids, self-loops) — a worker never lets a bad
+    /// frame corrupt its topology.
+    pub fn apply(&self, version: u64, entries: &[(u32, Vec<u32>)]) -> bool {
+        let mut g = self.graph.write().unwrap();
+        if version <= self.version.load(Ordering::Acquire) {
+            return false;
+        }
+        let n = g.len();
+        let ok = entries.iter().all(|(node, hood)| {
+            (*node as usize) < n
+                && hood
+                    .iter()
+                    .all(|&nb| (nb as usize) < n && nb != *node)
+        });
+        if !ok {
+            return false;
+        }
+        // Two passes keep edge symmetry intact: first detach every
+        // patched node, then re-add each one's full new list (add_edge
+        // is idempotent, so the shared edges of two patched nodes are
+        // inserted once).
+        for (node, _) in entries {
+            let node = *node as usize;
+            for nb in g.neighbors(node).to_vec() {
+                g.remove_edge(node, nb);
+            }
+        }
+        for (node, hood) in entries {
+            for &nb in hood {
+                g.add_edge(*node as usize, nb as usize);
+            }
+        }
+        self.version.store(version, Ordering::Release);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ring;
+
+    #[test]
+    fn view_applies_patches_in_version_order() {
+        let view = TopologyView::new(ring(6));
+        assert_eq!(view.version(), 0);
+        assert_eq!(view.closed_neighborhood(0), vec![0, 1, 5]);
+
+        // Detach node 0, rewire 1–5 directly.
+        let patch = vec![(0u32, vec![]), (1u32, vec![2, 5]), (5u32, vec![1, 4])];
+        assert!(view.apply(1, &patch));
+        assert_eq!(view.version(), 1);
+        assert_eq!(view.closed_neighborhood(0), vec![0]);
+        assert_eq!(view.closed_neighborhood(1), vec![1, 2, 5]);
+
+        // A stale replay is ignored.
+        assert!(!view.apply(1, &[(0u32, vec![1])]));
+        assert_eq!(view.closed_neighborhood(0), vec![0]);
+
+        // A malformed patch is rejected without touching the view.
+        assert!(!view.apply(2, &[(0u32, vec![99])]));
+        assert!(!view.apply(2, &[(3u32, vec![3])]));
+        assert_eq!(view.version(), 1);
+
+        // A newer well-formed patch lands.
+        assert!(view.apply(2, &[(0u32, vec![1]), (1u32, vec![0, 2, 5])]));
+        assert_eq!(view.closed_neighborhood(0), vec![0, 1]);
+        assert_eq!(view.version(), 2);
+    }
+
+    #[test]
+    fn patched_edges_stay_symmetric() {
+        let view = TopologyView::new(ring(5));
+        // Patch two adjacent nodes whose lists mention each other:
+        // the shared edge must appear exactly once in each list.
+        assert!(view.apply(1, &[(0u32, vec![2]), (2u32, vec![0, 1, 3])]));
+        let g = view.snapshot();
+        for u in 0..g.len() {
+            for &v in g.neighbors(u) {
+                assert!(g.has_edge(v, u), "asymmetric edge {u}-{v}");
+            }
+        }
+        assert!(g.has_edge(0, 2));
+        assert!(!g.has_edge(0, 1));
+    }
+}

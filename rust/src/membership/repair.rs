@@ -1,0 +1,555 @@
+//! Degree-preserving, spectrally-steered topology repair.
+//!
+//! The paper's convergence constant for a k-regular graph is
+//! `η ≥ (1 − σ₂²)(k+1)/N` (Lemma 1): connectivity makes consensus
+//! *possible*, degree sets the `(k+1)` factor, and a small σ₂ makes
+//! the contraction *fast*. The repair policy honors them in that
+//! order — every membership change yields a connected active graph
+//! with degrees within ±1 of the launch degree, and wherever several
+//! rewirings satisfy those constraints the policy greedily steers
+//! toward spectral gap: on small graphs it evaluates
+//! [`sigma2`](crate::graph::spectral::sigma2) for each candidate and
+//! keeps the minimum; on large graphs (where the O(n²)-per-iteration
+//! power method is too slow for a repair that blocks patch shipment)
+//! it uses an expansion proxy — connect the farthest-apart endpoints,
+//! which is what shrinking σ₂ asks for in a regular graph.
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+
+use crate::graph::{spectral, Graph};
+
+/// Above this many active nodes, candidate steering switches from
+/// exact σ₂ evaluation to the BFS-distance expansion proxy.
+const SPECTRAL_N_MAX: usize = 96;
+
+/// Power-iteration depth for candidate σ₂ scoring — enough to rank
+/// candidates, far less than a publication-grade estimate.
+const SPECTRAL_ITERS: usize = 40;
+
+/// The monitor-side membership controller: which nodes are active,
+/// the current communication graph over them, and the repair policy
+/// that rewires it on every change.
+///
+/// [`Membership::deactivate`] and [`Membership::activate`] return the
+/// patch to ship — the *complete* new neighbor list of every node the
+/// repair touched (and nothing else, so unaffected workers receive
+/// nothing). Guarantees, for any removal/add sequence that keeps at
+/// least `degree + 2` nodes active:
+///
+/// - the active subgraph stays connected (no node is ever orphaned),
+/// - every active degree stays within ±1 of the launch degree,
+/// - inactive nodes hold no edges.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    graph: Graph,
+    active: Vec<bool>,
+    /// The launch-time regular degree — the repair target.
+    degree: usize,
+    version: u64,
+    touched: BTreeSet<usize>,
+}
+
+impl Membership {
+    /// Wrap the launch topology (all nodes active, patch version 0 —
+    /// matching a fresh [`TopologyView`](super::TopologyView)).
+    pub fn new(graph: Graph, degree: usize) -> Self {
+        let n = graph.len();
+        Self {
+            graph,
+            active: vec![true; n],
+            degree,
+            version: 0,
+            touched: BTreeSet::new(),
+        }
+    }
+
+    /// Version of the last emitted patch (0 = launch topology).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn is_active(&self, u: usize) -> bool {
+        self.active[u]
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Is the active subgraph connected? (Trivially true with ≤ 1
+    /// active node.)
+    pub fn is_active_connected(&self) -> bool {
+        self.components().len() <= 1
+    }
+
+    /// Remove `nodes` from the deployment and repair around the hole.
+    /// Returns the topology patch (full new neighbor lists of every
+    /// touched node; the removed nodes appear with empty lists).
+    pub fn deactivate(&mut self, nodes: &[usize]) -> Vec<(u32, Vec<u32>)> {
+        self.touched.clear();
+        for &v in nodes {
+            if v >= self.active.len() || !self.active[v] {
+                continue;
+            }
+            self.active[v] = false;
+            self.touched.insert(v);
+            let ex = self.graph.neighbors(v).to_vec();
+            for &nb in &ex {
+                self.graph.remove_edge(v, nb);
+                self.touched.insert(nb);
+            }
+            // Local repair first: pair up the ex-neighbors that each
+            // lost an edge, restoring their degree in place.
+            self.pair_up(&ex);
+        }
+        self.bridge();
+        self.top_up();
+        self.finish()
+    }
+
+    /// Re-admit `nodes` and weave them into the topology at the launch
+    /// degree. Returns the topology patch.
+    pub fn activate(&mut self, nodes: &[usize]) -> Vec<(u32, Vec<u32>)> {
+        self.touched.clear();
+        for &v in nodes {
+            if v >= self.active.len() || self.active[v] {
+                continue;
+            }
+            self.active[v] = true;
+            self.touched.insert(v);
+            // Defensive: an inactive node must hold no edges, but a
+            // stale one would poison the weave below.
+            for nb in self.graph.neighbors(v).to_vec() {
+                self.graph.remove_edge(v, nb);
+                self.touched.insert(nb);
+            }
+            self.weave_in(v);
+        }
+        self.bridge();
+        self.top_up();
+        self.finish()
+    }
+
+    fn finish(&mut self) -> Vec<(u32, Vec<u32>)> {
+        self.version += 1;
+        let touched = std::mem::take(&mut self.touched);
+        touched
+            .into_iter()
+            .map(|u| {
+                let hood = self.graph.neighbors(u).iter().map(|&v| v as u32).collect();
+                (u as u32, hood)
+            })
+            .collect()
+    }
+
+    /// Greedily add edges between ex-neighbors of a removed node:
+    /// every pair that is active, non-adjacent, and below the target
+    /// degree heals two deficits with one edge — the removal's local,
+    /// degree-preserving repair.
+    fn pair_up(&mut self, ex: &[usize]) {
+        loop {
+            let mut cands = Vec::new();
+            for i in 0..ex.len() {
+                for j in i + 1..ex.len() {
+                    let (u, w) = (ex[i], ex[j]);
+                    if u != w
+                        && self.active[u]
+                        && self.active[w]
+                        && self.graph.degree(u) < self.degree
+                        && self.graph.degree(w) < self.degree
+                        && !self.graph.has_edge(u, w)
+                    {
+                        cands.push((u, w));
+                    }
+                }
+            }
+            let Some((u, w)) = self.pick_pair(&cands) else {
+                break;
+            };
+            self.graph.add_edge(u, w);
+            self.touched.insert(u);
+            self.touched.insert(w);
+        }
+    }
+
+    /// Insert `v` (currently edgeless) at the launch degree without
+    /// disturbing anyone else's: each *edge subdivision* removes an
+    /// active edge (a, b) disjoint from v's neighborhood and adds
+    /// (a, v), (b, v) — a and b keep their degree, v gains two, and
+    /// the replaced path a–v–b preserves connectivity. ⌊degree/2⌋
+    /// subdivisions reach the target (odd remainders and thin graphs
+    /// are topped up afterwards).
+    fn weave_in(&mut self, v: usize) {
+        for _ in 0..self.degree / 2 {
+            let cands = self.subdividable_edges(v);
+            let Some((a, b)) = self.pick_split(v, &cands) else {
+                break;
+            };
+            self.graph.remove_edge(a, b);
+            self.graph.add_edge(a, v);
+            self.graph.add_edge(b, v);
+            self.touched.insert(a);
+            self.touched.insert(b);
+        }
+    }
+
+    /// Active edges (a, b) whose endpoints are both outside
+    /// {v} ∪ N(v) — eligible for subdivision toward v.
+    fn subdividable_edges(&self, v: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for a in 0..self.graph.len() {
+            if !self.active[a] || a == v || self.graph.has_edge(a, v) {
+                continue;
+            }
+            for &b in self.graph.neighbors(a) {
+                if b > a && self.active[b] && b != v && !self.graph.has_edge(b, v) {
+                    out.push((a, b));
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge the active components until one remains. Two components
+    /// that both hold an internal edge merge by a degree-preserving
+    /// 2-swap (remove (a,a′) and (b,b′), add the cross edges (a,b)
+    /// and (a′,b′) — cross-component, so never already present); an
+    /// edgeless component (an orphan) gets a direct edge to the other
+    /// side's minimum-degree node.
+    fn bridge(&mut self) {
+        loop {
+            let comps = self.components();
+            if comps.len() <= 1 {
+                return;
+            }
+            let (ca, cb) = (&comps[0], &comps[1]);
+            match (self.internal_edge(ca), self.internal_edge(cb)) {
+                (Some((a, a2)), Some((b, b2))) => {
+                    self.graph.remove_edge(a, a2);
+                    self.graph.remove_edge(b, b2);
+                    self.graph.add_edge(a, b);
+                    self.graph.add_edge(a2, b2);
+                    for u in [a, a2, b, b2] {
+                        self.touched.insert(u);
+                    }
+                }
+                _ => {
+                    let u = *ca.iter().min_by_key(|&&x| self.graph.degree(x)).unwrap();
+                    let w = *cb.iter().min_by_key(|&&x| self.graph.degree(x)).unwrap();
+                    self.graph.add_edge(u, w);
+                    self.touched.insert(u);
+                    self.touched.insert(w);
+                }
+            }
+        }
+    }
+
+    /// Raise every active node still two or more below the target:
+    /// prefer a direct edge to a below-target partner (both ends stay
+    /// ≤ degree); when the neighborhood is saturated, subdivide a
+    /// disjoint edge instead (+2 toward the target, nobody else
+    /// moves). Total deficit strictly decreases per round, so the
+    /// loop terminates; nodes at exactly degree−1 are left alone —
+    /// within the ±1 guarantee by definition.
+    fn top_up(&mut self) {
+        loop {
+            let Some(u) = (0..self.graph.len())
+                .filter(|&u| self.active[u] && self.graph.degree(u) + 2 <= self.degree)
+                .min_by_key(|&u| self.graph.degree(u))
+            else {
+                return;
+            };
+            let cands: Vec<(usize, usize)> = (0..self.graph.len())
+                .filter(|&w| {
+                    w != u
+                        && self.active[w]
+                        && self.graph.degree(w) < self.degree
+                        && !self.graph.has_edge(u, w)
+                })
+                .map(|w| (u, w))
+                .collect();
+            if let Some((u, w)) = self.pick_pair(&cands) {
+                self.graph.add_edge(u, w);
+                self.touched.insert(u);
+                self.touched.insert(w);
+                continue;
+            }
+            let splits = self.subdividable_edges(u);
+            if let Some((a, b)) = self.pick_split(u, &splits) {
+                self.graph.remove_edge(a, b);
+                self.graph.add_edge(a, u);
+                self.graph.add_edge(b, u);
+                self.touched.insert(a);
+                self.touched.insert(b);
+                self.touched.insert(u);
+                continue;
+            }
+            // Too small or too saturated to do better — every larger
+            // deployment the guarantees are stated for never lands
+            // here.
+            return;
+        }
+    }
+
+    /// Choose the edge to add among `cands`, steering toward spectral
+    /// gap: exact σ₂ scoring on small graphs, farthest-endpoints
+    /// expansion proxy on large ones (one BFS per distinct source,
+    /// unreachable = infinitely far — bridging beats everything).
+    fn pick_pair(&self, cands: &[(usize, usize)]) -> Option<(usize, usize)> {
+        match cands.len() {
+            0 => return None,
+            1 => return Some(cands[0]),
+            _ => {}
+        }
+        if self.active_count() <= SPECTRAL_N_MAX {
+            let scored: Vec<(f64, (usize, usize))> = cands
+                .iter()
+                .map(|&(u, w)| (self.sigma2_after(|g| g.add_edge(u, w)), (u, w)))
+                .collect();
+            return scored
+                .into_iter()
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(_, c)| c);
+        }
+        let mut dist: HashMap<usize, Vec<Option<usize>>> = HashMap::new();
+        cands.iter().copied().max_by_key(|&(u, w)| {
+            let d = dist
+                .entry(u)
+                .or_insert_with(|| self.graph.bfs_distances(u));
+            d[w].unwrap_or(usize::MAX)
+        })
+    }
+
+    /// Choose the edge to subdivide toward `v`: σ₂ scoring on small
+    /// graphs, farthest-from-`v` endpoints on large ones (spreading
+    /// v's links apart is the expander move).
+    fn pick_split(&self, v: usize, cands: &[(usize, usize)]) -> Option<(usize, usize)> {
+        match cands.len() {
+            0 => return None,
+            1 => return Some(cands[0]),
+            _ => {}
+        }
+        if self.active_count() <= SPECTRAL_N_MAX {
+            let scored: Vec<(f64, (usize, usize))> = cands
+                .iter()
+                .map(|&(a, b)| {
+                    let s = self.sigma2_after(|g| {
+                        g.remove_edge(a, b);
+                        g.add_edge(a, v);
+                        g.add_edge(b, v);
+                    });
+                    (s, (a, b))
+                })
+                .collect();
+            return scored
+                .into_iter()
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(_, c)| c);
+        }
+        let dist = self.graph.bfs_distances(v);
+        cands
+            .iter()
+            .copied()
+            .max_by_key(|&(a, b)| dist[a].unwrap_or(usize::MAX).min(dist[b].unwrap_or(usize::MAX)))
+    }
+
+    /// σ₂ of the active subgraph after applying `change` to a scratch
+    /// copy (inactive isolates would pin σ₂ at 1 and drown the
+    /// signal, so the scratch graph is compacted to active nodes).
+    fn sigma2_after(&self, change: impl Fn(&mut Graph)) -> f64 {
+        let mut g = self.graph.clone();
+        change(&mut g);
+        let mut pos = vec![usize::MAX; g.len()];
+        let mut m = 0;
+        for u in 0..g.len() {
+            if self.active[u] {
+                pos[u] = m;
+                m += 1;
+            }
+        }
+        let mut compact = Graph::empty(m);
+        for u in 0..g.len() {
+            if !self.active[u] {
+                continue;
+            }
+            for &w in g.neighbors(u) {
+                if w > u && self.active[w] {
+                    compact.add_edge(pos[u], pos[w]);
+                }
+            }
+        }
+        spectral::sigma2(&compact, SPECTRAL_ITERS)
+    }
+
+    /// Connected components of the active subgraph (inactive nodes
+    /// hold no edges, so plain BFS over the graph restricted to
+    /// active sources is exact). [`Graph::is_connected`] is not
+    /// usable here — it counts *all* n nodes, vacated ones included.
+    fn components(&self) -> Vec<Vec<usize>> {
+        let mut seen = vec![false; self.graph.len()];
+        let mut comps = Vec::new();
+        for s in 0..self.graph.len() {
+            if !self.active[s] || seen[s] {
+                continue;
+            }
+            seen[s] = true;
+            let mut comp = vec![s];
+            let mut queue = VecDeque::from([s]);
+            while let Some(u) = queue.pop_front() {
+                for &w in self.graph.neighbors(u) {
+                    if !seen[w] {
+                        seen[w] = true;
+                        comp.push(w);
+                        queue.push_back(w);
+                    }
+                }
+            }
+            comps.push(comp);
+        }
+        comps
+    }
+
+    /// Any edge with both endpoints inside `comp` (every neighbor of a
+    /// component member is in the component by definition).
+    fn internal_edge(&self, comp: &[usize]) -> Option<(usize, usize)> {
+        comp.iter()
+            .find(|&&u| self.graph.degree(u) > 0)
+            .map(|&u| (u, self.graph.neighbors(u)[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{regular_circulant, ring};
+
+    fn assert_repaired(m: &Membership, d0: usize) {
+        assert!(m.is_active_connected(), "active subgraph disconnected");
+        for u in 0..m.graph().len() {
+            if m.is_active(u) {
+                let d = m.graph().degree(u);
+                assert!(
+                    d + 1 >= d0 && d <= d0 + 1,
+                    "node {u}: degree {d} outside {d0}±1"
+                );
+                assert!(d > 0, "node {u} orphaned");
+            } else {
+                assert_eq!(m.graph().degree(u), 0, "inactive node {u} holds edges");
+            }
+        }
+        // Symmetric, loop-free adjacency.
+        for u in 0..m.graph().len() {
+            for &v in m.graph().neighbors(u) {
+                assert_ne!(u, v);
+                assert!(m.graph().has_edge(v, u));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_survives_removal_and_readmission() {
+        let mut m = Membership::new(ring(8), 2);
+        let patch = m.deactivate(&[3]);
+        assert_eq!(m.version(), 1);
+        assert_eq!(m.active_count(), 7);
+        assert_repaired(&m, 2);
+        // The removed node appears in the patch with an empty list,
+        // and its ex-neighbors were rewired to each other.
+        assert!(patch.iter().any(|(n, h)| *n == 3 && h.is_empty()));
+        assert!(m.graph().has_edge(2, 4));
+
+        let patch = m.activate(&[3]);
+        assert_eq!(m.version(), 2);
+        assert_eq!(m.active_count(), 8);
+        assert_repaired(&m, 2);
+        assert!(patch.iter().any(|(n, h)| *n == 3 && h.len() == 2));
+    }
+
+    #[test]
+    fn circulant_survives_a_block_removal() {
+        // A whole worker block leaving at once (the eviction path).
+        let mut m = Membership::new(regular_circulant(16, 4), 4);
+        m.deactivate(&[4, 5, 6, 7]);
+        assert_eq!(m.active_count(), 12);
+        assert_repaired(&m, 4);
+        m.activate(&[4, 5, 6, 7]);
+        assert_eq!(m.active_count(), 16);
+        assert_repaired(&m, 4);
+    }
+
+    #[test]
+    fn patch_covers_exactly_the_touched_nodes() {
+        let mut m = Membership::new(regular_circulant(16, 4), 4);
+        let before = m.graph().clone();
+        let patch = m.deactivate(&[0]);
+        let patched: BTreeSet<usize> = patch.iter().map(|(n, _)| *n as usize).collect();
+        for u in 0..16 {
+            let now: Vec<usize> = m.graph().neighbors(u).to_vec();
+            if patched.contains(&u) {
+                let shipped: Vec<usize> = patch
+                    .iter()
+                    .find(|(n, _)| *n as usize == u)
+                    .unwrap()
+                    .1
+                    .iter()
+                    .map(|&v| v as usize)
+                    .collect();
+                assert_eq!(shipped, now, "patch for {u} disagrees with the graph");
+            } else {
+                assert_eq!(before.neighbors(u), &now[..], "untouched node {u} changed");
+            }
+        }
+    }
+
+    #[test]
+    fn repair_is_idempotent_on_noops() {
+        let mut m = Membership::new(ring(6), 2);
+        m.deactivate(&[2]);
+        let v = m.version();
+        // Deactivating an already-inactive node and activating an
+        // already-active one still bump the version (an empty patch
+        // ships fine) but change no edges.
+        let before = m.graph().clone();
+        let patch = m.deactivate(&[2]);
+        assert!(patch.is_empty());
+        assert_eq!(m.version(), v + 1);
+        for u in 0..6 {
+            assert_eq!(before.neighbors(u), m.graph().neighbors(u));
+        }
+    }
+
+    #[test]
+    fn losing_every_neighbor_never_orphans_a_node() {
+        // Remove both ring neighbors of node 0 in one call: the local
+        // pair-up plus bridging must leave node 0 attached.
+        let mut m = Membership::new(ring(8), 2);
+        m.deactivate(&[1, 7]);
+        assert_repaired(&m, 2);
+        assert!(m.graph().degree(0) >= 1, "node 0 left orphaned");
+    }
+
+    #[test]
+    fn churn_sequence_holds_the_guarantees() {
+        let mut m = Membership::new(regular_circulant(24, 4), 4);
+        let seq: &[(&[usize], bool)] = &[
+            (&[0, 1], false),
+            (&[10], false),
+            (&[0], true),
+            (&[17, 18, 19], false),
+            (&[1, 10, 17], true),
+            (&[5], false),
+        ];
+        for &(nodes, add) in seq {
+            if add {
+                m.activate(nodes);
+            } else {
+                m.deactivate(nodes);
+            }
+            assert_repaired(&m, 4);
+        }
+    }
+}

@@ -46,16 +46,18 @@
 use std::collections::VecDeque;
 use std::io::{Read as _, Write as _};
 use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{spawn_shard_with_feeds, AsyncConfig, EngineKind};
+use crate::coordinator::{spawn_shard_with_feeds, AsyncConfig, EngineKind, ShardRun};
 use crate::data::stream::{fold_payloads, BlockBuffer, RowBlock, StreamProgress, DEFAULT_BLOCK_ROWS};
 use crate::data::Dataset;
 use crate::experiments::make_regular;
+use crate::membership::Membership;
 use crate::metrics::Recorder;
 use crate::node_logic::{Counts, Probe};
 use crate::objective::Objective;
@@ -103,6 +105,14 @@ impl ControlConn {
 
     fn set_write_timeout(&self, dur: Duration) {
         let _ = self.stream.set_write_timeout(Some(dur));
+    }
+
+    /// Re-cap the chunk-reassembly staging (a joiner learns its
+    /// `--staging-mb` from the `JoinGrant`, after the connection
+    /// already exists). Only sound between logical messages — the
+    /// join handshake guarantees that.
+    fn set_staging_limit(&mut self, limit: usize) {
+        self.assembler = wire::ChunkAssembler::with_limit(limit);
     }
 
     /// Read one logical message. Returns `Ok(None)` when nothing
@@ -258,6 +268,10 @@ pub struct WorkerConfig {
     pub flush_bytes: usize,
     /// Staleness bound on a coalescing buffer (`--flush-micros`).
     pub flush_micros: u64,
+    /// Depart gracefully after this many seconds (`--leave-after`):
+    /// send the monitor a `LeaveNotice` and exit, exercising the same
+    /// vacate-repair-handoff path a heartbeat eviction takes.
+    pub leave_after: Option<f64>,
 }
 
 /// What a finished worker reports.
@@ -295,6 +309,20 @@ fn receive_wire_plan(
     let _ = conn.set_read_timeout(Some(Duration::from_millis(50)));
     let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
     let mut conn = ControlConn::with_limit(conn, staging_limit);
+    let (plan, streaming) = receive_plan_on(&mut conn, nodes, param_len, deadline)?;
+    Ok((plan, conn, streaming))
+}
+
+/// Drain one control connection's `PlanAssign` stream up to
+/// `PlanStart` — the body of [`receive_wire_plan`], split out so a
+/// joiner (which already holds its monitor connection from the
+/// `JoinRequest` handshake) can receive its plan on the same stream.
+fn receive_plan_on(
+    conn: &mut ControlConn,
+    nodes: usize,
+    param_len: usize,
+    deadline: Instant,
+) -> Result<(WorkloadPlan, bool)> {
     let mut assigned: Vec<(usize, NodeAssignment)> = Vec::new();
     let mut received_sum = wire::Fnv64::new();
     let (global_mixed, want_checksum, streaming) = loop {
@@ -354,7 +382,7 @@ fn receive_wire_plan(
             plan.param_len()
         );
     }
-    Ok((plan, conn, streaming))
+    Ok((plan, streaming))
 }
 
 /// Per-owned-node reassembly state a streaming worker keeps while its
@@ -362,6 +390,9 @@ fn receive_wire_plan(
 struct NodeStreamState {
     progress: StreamProgress,
     done: bool,
+    /// The certified whole-shard checksum fold, recorded when
+    /// `ShardComplete` verified — what a later `HandoffEnd` must match.
+    checksum: u64,
 }
 
 /// Run one worker to completion: bind, rendezvous, obtain the workload
@@ -497,25 +528,118 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         buffer.as_ref(),
     );
 
-    // Streaming reassembly state (validated per block before staging;
-    // trivially "done" when the plan was not streamed).
     let (plan_dim, plan_classes) = {
         let s = plan.shard(owned.start);
         (s.dim(), s.classes())
     };
+    let outcome = serve_control(ServeArgs {
+        rank: cfg.rank,
+        net: &net,
+        run: &run,
+        buffer: buffer.as_ref(),
+        controls,
+        owned: owned.clone(),
+        streaming,
+        plan_dim,
+        plan_classes,
+        param_len,
+        staging_limit,
+        deadline,
+        leave_after: cfg.leave_after.map(Duration::from_secs_f64),
+    });
+
+    if let Some(buffer) = buffer.as_ref() {
+        buffer.stop();
+    }
+    let counts = run.stop_and_join();
+    net.shutdown();
+    if let Some(e) = outcome.stream_failure {
+        bail!("rank {}: shard stream refused — {e}", cfg.rank);
+    }
+    println!(
+        "dasgd-worker rank={} done: {} updates ({} grad, {} proj), {} messages, {} conflicts",
+        cfg.rank,
+        counts.updates(),
+        counts.grad_steps,
+        counts.proj_steps,
+        counts.messages,
+        counts.conflicts
+    );
+    Ok(WorkerSummary {
+        counts,
+        shutdown_by_monitor: outcome.shutdown_by_monitor,
+    })
+}
+
+/// Everything the control-plane serve loop needs — one bundle so the
+/// launch path ([`run_worker`]) and the join path ([`run_join_worker`])
+/// share the identical protocol implementation.
+struct ServeArgs<'a> {
+    rank: u32,
+    net: &'a SocketNet,
+    run: &'a ShardRun,
+    buffer: Option<&'a Arc<BlockBuffer>>,
+    controls: Vec<ControlConn>,
+    owned: Range<usize>,
+    streaming: bool,
+    plan_dim: usize,
+    plan_classes: usize,
+    param_len: usize,
+    staging_limit: usize,
+    deadline: Instant,
+    leave_after: Option<Duration>,
+}
+
+/// What the serve loop reports back to its caller.
+struct ServeOutcome {
+    shutdown_by_monitor: bool,
+    stream_failure: Option<String>,
+}
+
+/// Serve the control plane until `Shutdown`, the wall-clock cap, or a
+/// scheduled graceful leave.
+fn serve_control(args: ServeArgs<'_>) -> ServeOutcome {
+    let ServeArgs {
+        rank,
+        net,
+        run,
+        buffer,
+        mut controls,
+        owned,
+        streaming,
+        plan_dim,
+        plan_classes,
+        param_len,
+        staging_limit,
+        deadline,
+        leave_after,
+    } = args;
     let mut streams: Vec<NodeStreamState> = owned
         .clone()
         .map(|_| NodeStreamState {
             progress: StreamProgress::default(),
             done: !streaming,
+            checksum: 0,
         })
         .collect();
     let mut updates_at_stream_complete: u64 = if streaming { u64::MAX } else { 0 };
     let mut stream_failure: Option<String> = None;
+    let leave_at = leave_after.map(|d| Instant::now() + d);
 
-    // Serve the control plane until Shutdown or the wall-clock cap.
     let mut shutdown_by_monitor = false;
     'serve: while Instant::now() < deadline {
+        if let Some(t) = leave_at {
+            if Instant::now() >= t {
+                // Graceful departure: tell the monitor once, then exit.
+                // The monitor vacates this rank and repairs the
+                // topology exactly as for a heartbeat eviction.
+                if let Some(conn) = controls.first_mut() {
+                    let _ = conn.write_msg(&WireMsg::LeaveNotice { rank });
+                }
+                crate::obs::trace("worker", "leave", rank as u64, 0);
+                break 'serve;
+            }
+        }
         while let Some(conn) = net.take_control() {
             let _ = conn.set_read_timeout(Some(Duration::from_millis(25)));
             let _ = conn.set_write_timeout(Some(Duration::from_secs(1)));
@@ -536,7 +660,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                     // transparently through its own ControlConn).
                     let c = run.counts();
                     let reply = WireMsg::SnapshotReply {
-                        rank: cfg.rank,
+                        rank,
                         counts: [c.grad_steps, c.proj_steps, c.messages, c.conflicts],
                         params: net
                             .local_params()
@@ -557,7 +681,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                     // the decode side — see obs::MetricsSnapshot).
                     let (counters, hist_data) = crate::obs::snapshot().to_wire();
                     let reply = WireMsg::MetricsReply {
-                        rank: cfg.rank,
+                        rank,
                         counters,
                         hist_data,
                     };
@@ -635,6 +759,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                         }
                         state.progress.verify_complete(block_count, total_rows, checksum)?;
                         state.done = true;
+                        state.checksum = checksum;
                         buffer.mark_complete(node);
                         Ok(())
                     })();
@@ -655,6 +780,68 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                             stream_failure = Some(e);
                             break 'serve;
                         }
+                    }
+                }
+                Ok(Some(WireMsg::TopologyPatch { version, entries })) => {
+                    // Atomic neighbor-set swap: node threads sample
+                    // their neighborhood per collect round, so the new
+                    // view takes effect between rounds, never inside
+                    // one. Stale/malformed patches are refused by the
+                    // view itself.
+                    if run.topology().apply(version, &entries) {
+                        crate::obs::trace("worker", "topology_patch", version, entries.len() as u64);
+                    }
+                }
+                Ok(Some(WireMsg::PeerUpdate { rank: peer, addr })) => {
+                    if peer != rank {
+                        net.update_peer_addr(peer, &addr);
+                        crate::obs::trace("worker", "peer_update", peer as u64, 0);
+                    }
+                }
+                Ok(Some(WireMsg::HandoffBegin { node, w })) => {
+                    // Adopt a vacated node's live parameters; its data
+                    // shard follows as the usual checksummed block
+                    // stream on this connection.
+                    let adopted = (|| -> std::result::Result<(), String> {
+                        let node = node as usize;
+                        if !owned.contains(&node) {
+                            return Err(format!(
+                                "handoff for node {node}, not owned by this rank"
+                            ));
+                        }
+                        if w.len() != param_len {
+                            return Err(format!(
+                                "handoff params for node {node} have length {}, engine \
+                                 expects {param_len}",
+                                w.len()
+                            ));
+                        }
+                        net.update_own(node, &mut |p| p.clone_from(&w));
+                        crate::obs::trace("worker", "handoff_begin", node as u64, 0);
+                        Ok(())
+                    })();
+                    if let Err(e) = adopted {
+                        stream_failure = Some(e);
+                        break 'serve;
+                    }
+                }
+                Ok(Some(WireMsg::HandoffEnd { node, checksum })) => {
+                    // The handoff certifies only if the re-streamed
+                    // shard completed and its verified fold equals the
+                    // monitor's — i.e. the adopted shard is
+                    // bit-identical to the one the departed worker had.
+                    let certified = owned.contains(&(node as usize)) && {
+                        let state = &streams[node as usize - owned.start];
+                        state.done && state.checksum == checksum
+                    };
+                    if certified {
+                        crate::obs::trace("worker", "handoff_end", node as u64, checksum);
+                    } else {
+                        stream_failure = Some(format!(
+                            "handoff for node {node} did not certify (stream incomplete \
+                             or checksum mismatch)"
+                        ));
+                        break 'serve;
                     }
                 }
                 Ok(Some(WireMsg::Shutdown)) => {
@@ -686,17 +873,159 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
         }
     }
 
+    ServeOutcome {
+        shutdown_by_monitor,
+        stream_failure,
+    }
+}
+
+/// Run a worker that joins a *running* deployment (`dasgd worker
+/// --join ADDR`): dial the monitor's join listener, hand-shake
+/// `JoinRequest` → `JoinGrant` → `JoinReady`, reconstruct the vacated
+/// rank's configuration from the grant, receive the plan metadata and
+/// the credit-gated handoff stream on the same connection, and then
+/// serve the identical control protocol a launch-spawned worker does.
+pub fn run_join_worker(join_addr: &str, leave_after: Option<f64>) -> Result<WorkerSummary> {
+    let stream = TcpStream::connect(join_addr)
+        .with_context(|| format!("dialing the join listener at {join_addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut conn = ControlConn::new(stream);
+    conn.write_msg(&WireMsg::JoinRequest)
+        .map_err(|e| anyhow!("sending JoinRequest: {e}"))?;
+    let grant_deadline = Instant::now() + Duration::from_secs(10);
+    let grant = loop {
+        match conn.read_msg(grant_deadline) {
+            Ok(Some(msg @ WireMsg::JoinGrant { .. })) => break msg,
+            Ok(Some(_)) => {}
+            Ok(None) => bail!("the monitor never granted the join (no vacancy?)"),
+            Err(e) => return Err(anyhow!("join handshake failed: {e}")),
+        }
+    };
+    let WireMsg::JoinGrant {
+        rank,
+        nodes,
+        degree,
+        param_len,
+        seed,
+        secs,
+        rate_hz,
+        obj_code,
+        lam,
+        staging_mb,
+        executors,
+        flush_bytes,
+        flush_micros,
+        mut peers,
+    } = grant
+    else {
+        unreachable!("matched above");
+    };
+    let (nodes, degree, param_len) = (nodes as usize, degree as usize, param_len as usize);
+    let workers = peers.len();
+    if (rank as usize) >= workers || workers > nodes || param_len == 0 || staging_mb == 0 {
+        bail!("malformed JoinGrant: rank {rank} of {workers} peers, {nodes} nodes");
+    }
+    let Some(objective) = objective_from_code(obj_code, lam) else {
+        bail!("JoinGrant carries unknown objective code {obj_code}");
+    };
+    let staging_limit = (staging_mb as usize)
+        .saturating_mul(1 << 20)
+        .min(wire::MAX_MESSAGE_LEN);
+    conn.set_staging_limit(staging_limit);
+
+    let net = SocketNet::bind(
+        rank,
+        ShardMap::new(nodes, workers),
+        param_len,
+        "127.0.0.1:0",
+        SocketConfig {
+            staging_limit,
+            flush_bytes: flush_bytes as usize,
+            flush_micros,
+            ..SocketConfig::default()
+        },
+    )
+    .context("binding the joining worker's listener")?;
+    let owned = net.local_nodes();
+    peers[rank as usize] = net.local_addr().to_string();
+    println!(
+        "dasgd-worker rank={rank} joined via {join_addr}, listening on {} (nodes {}..{} of {nodes})",
+        net.local_addr(),
+        owned.start,
+        owned.end,
+    );
+    let _ = std::io::stdout().flush();
+    net.connect_peers(&peers);
+    conn.write_msg(&WireMsg::JoinReady {
+        rank,
+        addr: net.local_addr().to_string(),
+    })
+    .map_err(|e| anyhow!("sending JoinReady: {e}"))?;
+    crate::obs::trace("worker", "join", rank as u64, 0);
+
+    let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.1));
+    let (plan, streaming) = receive_plan_on(&mut conn, nodes, param_len, deadline)
+        .with_context(|| format!("joined rank {rank} receiving the workload plan"))?;
+
+    let graph = make_regular(nodes, degree);
+    let acfg = AsyncConfig {
+        p_grad: 0.5,
+        stepsize: objective.default_stepsize(nodes),
+        rate_hz,
+        speed_spread: 0.0,
+        duration_secs: secs,
+        eval_every_secs: secs,
+        gossip_hold_secs: 0.0,
+        kill_after_secs: None,
+        kill_nodes: 0,
+        transport: TransportKind::Socket,
+        engine: EngineKind::Executors(executors as usize),
+        deterministic_events: None,
+        seed,
+    };
+    let buffer = streaming.then(|| BlockBuffer::new(nodes, staging_limit as u64));
+    let transport: Arc<dyn Transport> = Arc::new(net.clone());
+    let run = spawn_shard_with_feeds(
+        &graph,
+        &plan,
+        &acfg,
+        transport,
+        owned.clone(),
+        None,
+        buffer.as_ref(),
+    );
+    let (plan_dim, plan_classes) = {
+        let s = plan.shard(owned.start);
+        (s.dim(), s.classes())
+    };
+    let outcome = serve_control(ServeArgs {
+        rank,
+        net: &net,
+        run: &run,
+        buffer: buffer.as_ref(),
+        controls: vec![conn],
+        owned: owned.clone(),
+        streaming,
+        plan_dim,
+        plan_classes,
+        param_len,
+        staging_limit,
+        deadline,
+        leave_after: leave_after.map(Duration::from_secs_f64),
+    });
+
     if let Some(buffer) = buffer.as_ref() {
         buffer.stop();
     }
     let counts = run.stop_and_join();
     net.shutdown();
-    if let Some(e) = stream_failure {
-        bail!("rank {}: shard stream refused — {e}", cfg.rank);
+    if let Some(e) = outcome.stream_failure {
+        bail!("joined rank {rank}: shard stream refused — {e}");
     }
     println!(
-        "dasgd-worker rank={} done: {} updates ({} grad, {} proj), {} messages, {} conflicts",
-        cfg.rank,
+        "dasgd-worker rank={rank} done: {} updates ({} grad, {} proj), {} messages, {} conflicts",
         counts.updates(),
         counts.grad_steps,
         counts.proj_steps,
@@ -705,7 +1034,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
     );
     Ok(WorkerSummary {
         counts,
-        shutdown_by_monitor,
+        shutdown_by_monitor: outcome.shutdown_by_monitor,
     })
 }
 
@@ -770,6 +1099,19 @@ pub struct LaunchConfig {
     /// the CLI and dumps to the path itself — the processes must not
     /// share one file, since each dump truncates it.
     pub trace_jsonl: Option<std::path::PathBuf>,
+    /// Bind a membership join listener on this `host:port`
+    /// (`--join-addr`; port 0 for OS-assigned) and admit `dasgd worker
+    /// --join` processes into vacant ranks mid-run. The bound address
+    /// is printed as `dasgd-launch join-addr=...`. Chaos joins imply a
+    /// default listener on `127.0.0.1:0`.
+    pub join_addr: Option<String>,
+    /// Deterministic churn injection (`--chaos-kill RANK@FRAC`):
+    /// SIGKILL worker `RANK` once the aggregate update count passes
+    /// `FRAC` of the horizon — the CI churn smoke's mid-run crash.
+    pub chaos_kill: Option<(u32, f64)>,
+    /// Spawn a `worker --join` replacement once the aggregate update
+    /// count passes this fraction of the horizon (`--chaos-join FRAC`).
+    pub chaos_join: Option<f64>,
 }
 
 impl LaunchConfig {
@@ -797,6 +1139,9 @@ impl LaunchConfig {
             metrics_addr: None,
             log_level: None,
             trace_jsonl: None,
+            join_addr: None,
+            chaos_kill: None,
+            chaos_join: None,
         }
     }
 }
@@ -821,6 +1166,17 @@ pub struct LaunchReport {
     /// owned shard stream completed — direct evidence that streaming
     /// overlapped compute with data arrival.
     pub stepped_before_stream_complete: bool,
+    /// Workers admitted mid-run through the join listener.
+    pub joins: u64,
+    /// Workers vacated mid-run (heartbeat strikes or `LeaveNotice`).
+    pub evictions: u64,
+    /// Topology repair patches computed and broadcast.
+    pub repairs: u64,
+    /// Every `(node, checksum)` handoff shipped to a joiner — the fold
+    /// equals the launch-time carve fold when the adopted shard is
+    /// bit-identical, and each vacated node appears exactly once per
+    /// admission.
+    pub handoffs: Vec<(u32, u64)>,
 }
 
 /// One queued item of a rank's outbound shard stream.
@@ -872,6 +1228,204 @@ fn kill_all(children: &mut [Child]) {
         let _ = c.kill();
         let _ = c.wait();
     }
+}
+
+/// Admit one joining worker into a vacant rank: handshake, peer-table
+/// update, plan metadata, topology patches (repair to the incumbents,
+/// the full current view to the joiner), and the credit-gated,
+/// checksummed handoff of every vacated node's parameters and data
+/// shard. Returns the admitted rank; on error the caller just drops
+/// the connection (the deployment is unchanged — membership is only
+/// mutated after the joiner is bound and ready).
+#[allow(clippy::too_many_arguments)]
+fn admit_join(
+    stream: TcpStream,
+    cfg: &LaunchConfig,
+    plan: &WorkloadPlan,
+    shard_map: &ShardMap,
+    membership: &mut Membership,
+    peers: &mut [String],
+    vacant: &mut [bool],
+    conns: &mut [Option<ControlConn>],
+    last_params: &[Vec<f32>],
+    budget: u64,
+    handoffs: &mut Vec<(u32, u64)>,
+) -> Result<usize> {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    let mut conn = ControlConn::new(stream);
+    let hello_deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        match conn.read_msg(hello_deadline) {
+            Ok(Some(WireMsg::JoinRequest)) => break,
+            Ok(Some(_)) => {}
+            Ok(None) => bail!("join connection sent no JoinRequest"),
+            Err(e) => bail!("join handshake read failed: {e}"),
+        }
+    }
+    let Some(rank) = vacant.iter().position(|&v| v) else {
+        bail!("join requested but every rank is occupied");
+    };
+    let (obj_code, lam) = objective_code(cfg.objective);
+    conn.write_msg(&WireMsg::JoinGrant {
+        rank: rank as u32,
+        nodes: cfg.nodes as u32,
+        degree: cfg.degree as u32,
+        param_len: plan.param_len() as u32,
+        seed: cfg.seed,
+        secs: cfg.secs_cap + 10.0,
+        rate_hz: cfg.rate_hz,
+        obj_code,
+        lam,
+        staging_mb: cfg.staging_mb as u32,
+        executors: cfg.executors as u32,
+        flush_bytes: cfg.flush_bytes as u32,
+        flush_micros: cfg.flush_micros,
+        peers: peers.to_vec(),
+    })
+    .map_err(|e| anyhow!("sending JoinGrant: {e}"))?;
+    let ready_deadline = Instant::now() + Duration::from_secs(10);
+    let addr = loop {
+        match conn.read_msg(ready_deadline) {
+            Ok(Some(WireMsg::JoinReady { rank: r, addr })) => {
+                if r as usize != rank {
+                    bail!("joiner bound as rank {r}, grant was for {rank}");
+                }
+                break addr;
+            }
+            Ok(Some(_)) => {}
+            Ok(None) => bail!("joiner never sent JoinReady"),
+            Err(e) => bail!("join handshake read failed: {e}"),
+        }
+    };
+    peers[rank] = addr.clone();
+    // Incumbents redial the replacement on their next dial-loop pass.
+    for conn in conns.iter_mut().flatten() {
+        let _ = conn.write_msg(&WireMsg::PeerUpdate {
+            rank: rank as u32,
+            addr: addr.clone(),
+        });
+    }
+
+    // Plan metadata for the adopted block, checksum-certified exactly
+    // like the launch-time shipment.
+    let block = shard_map.range(rank as u32);
+    let mut shipped_sum = wire::Fnv64::new();
+    for id in block.clone() {
+        let shard = plan.shard(id);
+        let (obj_code, lam) = objective_code(plan.objective(id));
+        let msg = WireMsg::PlanAssign {
+            node: id as u32,
+            obj_code,
+            lam,
+            dim: shard.dim() as u32,
+            classes: shard.classes() as u32,
+            labels: Vec::new(),
+            features: Vec::new(),
+        };
+        let sum = wire::message_checksum(&msg)
+            .map_err(|e| anyhow!("encoding node {id}'s assignment: {e}"))?;
+        shipped_sum.update(&sum.to_le_bytes());
+        conn.write_msg(&msg)
+            .map_err(|e| anyhow!("shipping the plan to the joiner: {e}"))?;
+    }
+    conn.write_msg(&WireMsg::PlanStart {
+        nodes: cfg.nodes as u32,
+        assigned: block.len() as u32,
+        mixed: plan.is_mixed(),
+        checksum: shipped_sum.finish(),
+        streaming: true,
+    })
+    .map_err(|e| anyhow!("shipping the plan to the joiner: {e}"))?;
+
+    // Per-node handoff: live parameters, then the data shard re-carved
+    // and re-streamed under the same credit window as the launch-time
+    // stream, closed by the certifying fold.
+    let mut credit = budget;
+    let pump_deadline = Instant::now() + Duration::from_secs(60);
+    for id in block.clone() {
+        let w = if last_params[id].len() == plan.param_len() {
+            last_params[id].clone()
+        } else {
+            vec![0.0; plan.param_len()]
+        };
+        conn.write_msg(&WireMsg::HandoffBegin { node: id as u32, w })
+            .map_err(|e| anyhow!("handoff of node {id} failed: {e}"))?;
+        let blocks = RowBlock::carve(id, plan.shard(id), cfg.stream_block_rows);
+        let (block_count, total_rows) = (blocks.len() as u32, plan.shard(id).len() as u64);
+        let fold = fold_payloads(&blocks);
+        for b in blocks {
+            let cost = b.payload_bytes();
+            while cost > credit {
+                if Instant::now() >= pump_deadline {
+                    bail!("handoff of node {id} stalled: the joiner returned no credit");
+                }
+                match conn.read_msg(Instant::now() + Duration::from_millis(5)) {
+                    Ok(Some(WireMsg::ShardCredit { bytes })) => {
+                        credit = credit.saturating_add(bytes);
+                    }
+                    Ok(Some(_)) | Ok(None) => {}
+                    Err(e) => bail!("handoff of node {id} failed: {e}"),
+                }
+            }
+            credit -= cost;
+            conn.write_msg(&block_msg(b))
+                .map_err(|e| anyhow!("handoff of node {id} failed: {e}"))?;
+        }
+        conn.write_msg(&WireMsg::ShardComplete {
+            node: id as u32,
+            block_count,
+            total_rows,
+            checksum: fold,
+        })
+        .map_err(|e| anyhow!("handoff of node {id} failed: {e}"))?;
+        conn.write_msg(&WireMsg::HandoffEnd {
+            node: id as u32,
+            checksum: fold,
+        })
+        .map_err(|e| anyhow!("handoff of node {id} failed: {e}"))?;
+        handoffs.push((id as u32, fold));
+        crate::obs::trace("monitor", "handoff", id as u64, fold);
+    }
+
+    // Only now — with the joiner bound, fed, and certified — mutate
+    // membership: re-activate the block's nodes and repair the
+    // topology around them. An admission that failed earlier left the
+    // deployment exactly as it was. Incumbents get the
+    // touched-neighborhood patch; the joiner (whose view is still the
+    // launch graph) gets the full current adjacency at the same
+    // version — both converge on one topology.
+    let patch = membership.activate(&block.clone().collect::<Vec<_>>());
+    let version = membership.version();
+    if !patch.is_empty() {
+        crate::obs::add(crate::obs::Counter::Repairs, 1);
+        for c in conns.iter_mut().flatten() {
+            let _ = c.write_msg(&WireMsg::TopologyPatch {
+                version,
+                entries: patch.clone(),
+            });
+        }
+    }
+    let full: Vec<(u32, Vec<u32>)> = (0..cfg.nodes)
+        .map(|u| {
+            (
+                u as u32,
+                membership.graph().neighbors(u).iter().map(|&v| v as u32).collect(),
+            )
+        })
+        .collect();
+    let _ = conn.write_msg(&WireMsg::TopologyPatch {
+        version,
+        entries: full,
+    });
+
+    conn.set_write_timeout(Duration::from_secs(1));
+    vacant[rank] = false;
+    conns[rank] = Some(conn);
+    crate::obs::add(crate::obs::Counter::Joins, 1);
+    crate::obs::trace("monitor", "join", rank as u64, version);
+    Ok(rank)
 }
 
 /// Spawn `cfg.workers` local worker processes, ship each its slice of
@@ -977,7 +1531,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         }
         queues.push(q);
     }
-    let peers: Vec<String> = (0..cfg.workers)
+    let mut peers: Vec<String> = (0..cfg.workers)
         .map(|_| reserve_port().map(|p| format!("127.0.0.1:{p}")))
         .collect::<Result<_>>()?;
     let binary = match &cfg.binary {
@@ -1233,6 +1787,46 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
     }
     crate::obs::trace("monitor", "stream_done", 0, 0);
 
+    // Membership control: the monitor's authoritative topology and
+    // active-rank set, plus the join listener when churn is enabled
+    // (`--join-addr`, or implicitly by `--chaos-join`).
+    let mut membership = Membership::new(make_regular(cfg.nodes, cfg.degree), cfg.degree);
+    let join_listener = {
+        let addr = cfg
+            .join_addr
+            .clone()
+            .or_else(|| cfg.chaos_join.map(|_| "127.0.0.1:0".to_string()));
+        match addr {
+            Some(addr) => match TcpListener::bind(&addr) {
+                Ok(l) => {
+                    let _ = l.set_nonblocking(true);
+                    if let Ok(bound) = l.local_addr() {
+                        println!("dasgd-launch join-addr={bound}");
+                        let _ = std::io::stdout().flush();
+                    }
+                    Some(l)
+                }
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(anyhow!("binding the join listener on {addr}: {e}"));
+                }
+            },
+            None => None,
+        }
+    };
+    let join_target = join_listener.as_ref().and_then(|l| l.local_addr().ok());
+    let mut vacant = vec![false; cfg.workers];
+    let mut leaving = vec![false; cfg.workers];
+    // Counters of ranks that left the cohort, folded in so the
+    // aggregate stays monotonic when a replacement restarts from zero.
+    let mut retired = [0u64; 4];
+    // Every node's last-snapshotted parameters — the `HandoffBegin`
+    // payload a joiner adopts.
+    let mut last_params: Vec<Vec<f32>> = vec![Vec::new(); cfg.nodes];
+    let mut handoffs: Vec<(u32, u64)> = Vec::new();
+    let (mut joins, mut evictions, mut repairs) = (0u64, 0u64, 0u64);
+    let (mut chaos_killed, mut chaos_joined) = (false, false);
+
     // The monitor's evaluation set came from the plan build; mixed
     // cohorts evaluate under the weighted per-family convention.
     let probe = Probe::mixed(&plan.objectives(), &test);
@@ -1279,12 +1873,18 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         // Collect every live worker's shard: one logical SnapshotReply
         // per rank (the wire layer reassembles chunked replies).
         let mut params: Vec<(u32, Vec<f32>)> = Vec::with_capacity(cfg.nodes);
+        let mut evicted_now: Vec<usize> = Vec::new();
         for (rank, conn_slot) in conns.iter_mut().enumerate() {
             let Some(conn) = conn_slot else { continue };
             // Discard stale replies completed after a previous round
             // timed out, so they don't answer this round's request (a
-            // partially-read logical message stays staged and resumes).
-            while let Ok(Some(_)) = conn.read_msg(Instant::now()) {}
+            // partially-read logical message stays staged and resumes) —
+            // but a LeaveNotice in the backlog still counts.
+            while let Ok(Some(msg)) = conn.read_msg(Instant::now()) {
+                if matches!(msg, WireMsg::LeaveNotice { .. }) {
+                    leaving[rank] = true;
+                }
+            }
             let block = shard_map.range(rank as u32);
             let expected = block.len();
             let mut reply = None;
@@ -1317,6 +1917,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                                 break true;
                             }
                         }
+                        Ok(Some(WireMsg::LeaveNotice { .. })) => leaving[rank] = true,
                         Ok(Some(_)) => {}
                         Ok(None) | Err(_) => break false,
                     }
@@ -1329,6 +1930,9 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 if done && upd_at_complete != u64::MAX && upd_at_complete > 0 {
                     stepped_before_stream_complete = true;
                 }
+                for (id, w) in &shard {
+                    last_params[*id as usize] = w.clone();
+                }
                 params.extend(shard);
             } else {
                 strikes[rank] += 1;
@@ -1336,6 +1940,77 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                     // Dead worker: out of the cohort; survivors carry on.
                     crate::obs::trace("monitor", "evict", rank as u64, strikes[rank] as u64);
                     *conn_slot = None;
+                    evicted_now.push(rank);
+                }
+            }
+        }
+        // A graceful leaver vacates through the same path as a strike
+        // eviction: its rank goes vacant and its node block is repaired
+        // out of the topology.
+        for rank in 0..cfg.workers {
+            if leaving[rank] && conns[rank].is_some() {
+                conns[rank] = None;
+                evicted_now.push(rank);
+            }
+            leaving[rank] = false;
+        }
+        for rank in evicted_now {
+            if vacant[rank] {
+                continue;
+            }
+            vacant[rank] = true;
+            // Fold the departed rank's last-known counters into the
+            // retired accumulator: a replacement restarts its counters
+            // at zero, and the aggregate must stay monotonic across
+            // that reset.
+            for (d, s) in retired.iter_mut().zip(last_known[rank].iter()) {
+                *d += *s;
+            }
+            last_known[rank] = [0; 4];
+            evictions += 1;
+            crate::obs::add(crate::obs::Counter::Evictions, 1);
+            let block: Vec<usize> = shard_map.range(rank as u32).collect();
+            let patch = membership.deactivate(&block);
+            if !patch.is_empty() {
+                repairs += 1;
+                crate::obs::add(crate::obs::Counter::Repairs, 1);
+                let version = membership.version();
+                for conn in conns.iter_mut().flatten() {
+                    let _ = conn.write_msg(&WireMsg::TopologyPatch {
+                        version,
+                        entries: patch.clone(),
+                    });
+                }
+                crate::obs::trace("monitor", "repair", rank as u64, version);
+            }
+        }
+        // Admit joiners into vacant ranks. Admission is synchronous —
+        // plan metadata plus the full credit-gated shard handoff — so
+        // it happens between snapshot rounds, never mid-collection.
+        if let Some(listener) = &join_listener {
+            while let Ok((stream, _)) = listener.accept() {
+                match admit_join(
+                    stream,
+                    cfg,
+                    &plan,
+                    &shard_map,
+                    &mut membership,
+                    &mut peers,
+                    &mut vacant,
+                    &mut conns,
+                    &last_params,
+                    budget,
+                    &mut handoffs,
+                ) {
+                    Ok(rank) => {
+                        joins += 1;
+                        repairs += 1;
+                        strikes[rank] = 0;
+                        crate::log!(Info, "monitor", "worker joined as rank {rank}");
+                    }
+                    Err(e) => {
+                        crate::log!(Warn, "monitor", "join admission failed: {e}");
+                    }
                 }
             }
         }
@@ -1350,13 +2025,62 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
             total.messages += m;
             total.conflicts += c;
         }
+        total.grad_steps += retired[0];
+        total.proj_steps += retired[1];
+        total.messages += retired[2];
+        total.conflicts += retired[3];
+        // Deterministic churn injection for the CI smoke and the
+        // acceptance test: SIGKILL one rank and/or spawn a `--join`
+        // replacement once the aggregate passes a horizon fraction.
+        if let Some((rank, frac)) = cfg.chaos_kill {
+            if !chaos_killed && total.updates() as f64 >= frac * cfg.horizon_updates as f64 {
+                chaos_killed = true;
+                if let Some(c) = children.get_mut(rank as usize) {
+                    let _ = c.kill();
+                }
+                crate::log!(
+                    Info,
+                    "monitor",
+                    "chaos: killed worker {rank} at k={}",
+                    total.updates()
+                );
+                crate::obs::trace("monitor", "chaos_kill", rank as u64, total.updates());
+            }
+        }
+        if let (Some(frac), Some(target)) = (cfg.chaos_join, join_target) {
+            if !chaos_joined
+                && total.updates() as f64 >= frac * cfg.horizon_updates as f64
+                && vacant.iter().any(|&v| v)
+            {
+                chaos_joined = true;
+                let mut cmd = Command::new(&binary);
+                cmd.args(["worker", "--join", &target.to_string()]);
+                if let Some(lvl) = &cfg.log_level {
+                    cmd.args(["--log-level", lvl]);
+                }
+                match cmd.stdout(Stdio::null()).stderr(Stdio::inherit()).spawn() {
+                    Ok(c) => {
+                        children.push(c);
+                        crate::log!(
+                            Info,
+                            "monitor",
+                            "chaos: spawned a --join replacement at k={}",
+                            total.updates()
+                        );
+                        crate::obs::trace("monitor", "chaos_join", 0, total.updates());
+                    }
+                    Err(e) => crate::log!(Warn, "monitor", "chaos join spawn failed: {e}"),
+                }
+            }
+        }
         // One MetricsRequest per live worker, merged (with the monitor
         // process's own counters) into the cluster-wide aggregate. A
         // rank missing one round is fine — counters are cumulative.
         let summary_due = now - top_mark.2 >= 2.0;
         if poll_every_round || summary_due {
             let mut fresh = crate::obs::snapshot();
-            for conn in conns.iter_mut().flatten() {
+            for (rank, conn_slot) in conns.iter_mut().enumerate() {
+                let Some(conn) = conn_slot else { continue };
                 if conn.write_msg(&WireMsg::MetricsRequest).is_err() {
                     continue;
                 }
@@ -1373,6 +2097,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                             ));
                             break;
                         }
+                        Ok(Some(WireMsg::LeaveNotice { .. })) => leaving[rank] = true,
                         Ok(Some(_)) => {}
                         Ok(None) | Err(_) => break,
                     }
@@ -1459,6 +2184,10 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
         reached_horizon,
         max_staging_bytes,
         stepped_before_stream_complete,
+        joins,
+        evictions,
+        repairs,
+        handoffs,
     })
 }
 
@@ -1500,6 +2229,7 @@ mod tests {
             executors: 0,
             flush_bytes: 16 * 1024,
             flush_micros: 500,
+            leave_after: None,
         };
         assert!(run_worker(&base).is_err(), "empty peers must fail");
         let mut bad_rank = base.clone();

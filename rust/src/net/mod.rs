@@ -28,17 +28,23 @@
 //!   per-node objectives, never regenerated from the seed), and plays
 //!   monitor, aggregating worker snapshots into the same
 //!   `Probe`/`Recorder` metrics path (and CSV output) every in-process
-//!   engine uses.
+//!   engine uses. The monitor is also the membership controller:
+//!   `--join-addr` admits mid-run `dasgd worker --join` replacements
+//!   (rank grant, plan metadata, and a credit-gated shard handoff over
+//!   the wire), heartbeat evictions and `LeaveNotice` departures vacate
+//!   ranks, and every change ships `TopologyPatch` repairs computed by
+//!   [`crate::membership`].
 //!
-//! See docs/deployment.md for the quickstart and failure semantics.
+//! See docs/deployment.md for the quickstart and failure semantics,
+//! and docs/membership.md for the churn protocol.
 
 pub mod cluster;
 pub mod socket;
 pub mod wire;
 
 pub use cluster::{
-    assignment_from_msg, plan_assign_msg, run_launch, run_worker, LaunchConfig, LaunchReport,
-    WorkerConfig, WorkerPlanSource, WorkerSummary, SAMPLES_PER_NODE,
+    assignment_from_msg, plan_assign_msg, run_join_worker, run_launch, run_worker, LaunchConfig,
+    LaunchReport, WorkerConfig, WorkerPlanSource, WorkerSummary, SAMPLES_PER_NODE,
 };
 pub use socket::{ShardMap, SocketConfig, SocketNet};
 pub use wire::{WireError, WireMsg, MONITOR_RANK, WIRE_VERSION};

@@ -365,6 +365,24 @@ impl SocketNet {
         }
     }
 
+    /// Replace one peer rank's dial address (membership churn: a
+    /// replacement worker took over `rank` at a new address). The
+    /// current link is torn down so the dialer thread — which re-reads
+    /// the address every pass — reconnects to the new worker; on the
+    /// accept side the stale socket just dies and the replacement's
+    /// inbound dial installs the fresh one.
+    pub fn update_peer_addr(&self, rank: u32, addr: &str) {
+        if let Some(link) = self
+            .inner
+            .links
+            .get(rank as usize)
+            .and_then(|l| l.as_ref())
+        {
+            *link.addr.lock().unwrap() = Some(addr.to_string());
+            link.mark_dead();
+        }
+    }
+
     /// Wait until every peer link is up, or `deadline` passes. Returns
     /// whether the deployment is fully connected.
     pub fn wait_connected(&self, deadline: Duration) -> bool {
@@ -688,10 +706,10 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
             }
         }
         // Heartbeats already touched the link. Control frames
-        // (snapshots, plan shipping, shutdown) are not valid on peer
-        // links, and chunk frames never reach dispatch — the reader's
-        // assembler consumed them (and a chunked *inner* chunk frame is
-        // an assembler error).
+        // (snapshots, plan shipping, shutdown, membership) are not
+        // valid on peer links, and chunk frames never reach dispatch —
+        // the reader's assembler consumed them (and a chunked *inner*
+        // chunk frame is an assembler error).
         WireMsg::Heartbeat { .. }
         | WireMsg::Hello { .. }
         | WireMsg::SnapshotRequest
@@ -704,7 +722,17 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
         | WireMsg::ShardCredit { .. }
         | WireMsg::ChunkBegin { .. }
         | WireMsg::ChunkData { .. }
-        | WireMsg::ChunkEnd { .. } => {}
+        | WireMsg::ChunkEnd { .. }
+        | WireMsg::MetricsRequest
+        | WireMsg::MetricsReply { .. }
+        | WireMsg::JoinRequest { .. }
+        | WireMsg::JoinGrant { .. }
+        | WireMsg::JoinReady { .. }
+        | WireMsg::PeerUpdate { .. }
+        | WireMsg::LeaveNotice { .. }
+        | WireMsg::TopologyPatch { .. }
+        | WireMsg::HandoffBegin { .. }
+        | WireMsg::HandoffEnd { .. } => {}
     }
 }
 

@@ -15,9 +15,13 @@
 //! docs/heterogeneity.md), the streaming data plane (`ShardBlock` /
 //! `ShardComplete` / `ShardCredit` — row blocks of a shard ship
 //! incrementally under backpressure credits, see docs/data.md), the
-//! chunk envelope (`ChunkBegin` / `ChunkData` / `ChunkEnd`), and the
+//! chunk envelope (`ChunkBegin` / `ChunkData` / `ChunkEnd`), the
 //! batch envelope (`Batch` — several small logical messages coalesced
-//! into one frame, see docs/deployment.md). All integers are
+//! into one frame, see docs/deployment.md), and the elastic-membership
+//! protocol (`JoinRequest` / `JoinGrant` / `JoinReady` / `PeerUpdate` /
+//! `LeaveNotice` / `TopologyPatch` / `HandoffBegin` / `HandoffEnd` —
+//! workers join and leave mid-run, see docs/membership.md). All
+//! integers are
 //! little-endian; `f32` vectors are raw LE bit patterns (NaN-safe round
 //! trips).
 //!
@@ -68,7 +72,16 @@ use std::io::{Read, Write};
 /// [`MetricsReply`](WireMsg::MetricsReply)) — the monitor polls every
 /// worker's [`crate::obs`] registry snapshot and aggregates a
 /// cluster-wide view (see docs/observability.md).
-pub const WIRE_VERSION: u8 = 6;
+/// v7 added the elastic-membership frames
+/// ([`JoinRequest`](WireMsg::JoinRequest) /
+/// [`JoinGrant`](WireMsg::JoinGrant) / [`JoinReady`](WireMsg::JoinReady) /
+/// [`PeerUpdate`](WireMsg::PeerUpdate) / [`LeaveNotice`](WireMsg::LeaveNotice) /
+/// [`TopologyPatch`](WireMsg::TopologyPatch) /
+/// [`HandoffBegin`](WireMsg::HandoffBegin) /
+/// [`HandoffEnd`](WireMsg::HandoffEnd)) — workers join and leave a
+/// running deployment, with topology repair and checksummed state
+/// handoff (see docs/membership.md).
+pub const WIRE_VERSION: u8 = 7;
 
 /// Upper bound on one frame's payload (version + tag + body). Small
 /// enough that a garbage length prefix cannot balloon memory; logical
@@ -248,6 +261,67 @@ pub enum WireMsg {
         counters: Vec<u64>,
         hist_data: Vec<u64>,
     },
+    /// Joiner → monitor: a fresh `dasgd worker --join ADDR` process
+    /// asks to be admitted into a vacant rank (one whose original
+    /// worker was heartbeat-evicted or left gracefully).
+    JoinRequest,
+    /// Monitor → joiner: admission granted. Carries everything the
+    /// joiner needs to reconstruct the vacant rank's worker
+    /// configuration — deployment shape, run parameters, the §II
+    /// objective as a `(code, λ)` pair, transport tuning, and the
+    /// current peer address table (the joiner's own slot holds the
+    /// address it must replace). The granted rank's node assignments
+    /// and live state follow as plan frames and the handoff stream on
+    /// the same connection.
+    JoinGrant {
+        rank: u32,
+        nodes: u32,
+        degree: u32,
+        param_len: u32,
+        seed: u64,
+        secs: f64,
+        rate_hz: f64,
+        obj_code: u8,
+        lam: f32,
+        staging_mb: u32,
+        executors: u32,
+        flush_bytes: u32,
+        flush_micros: u64,
+        peers: Vec<String>,
+    },
+    /// Joiner → monitor: bound and listening on `addr` as rank `rank`;
+    /// the monitor may now broadcast the [`PeerUpdate`](WireMsg::PeerUpdate)
+    /// and begin the handoff.
+    JoinReady { rank: u32, addr: String },
+    /// Monitor → worker: rank `rank` is now reachable at `addr` (a
+    /// replacement joined). Dial loops pick the new address up on
+    /// their next pass.
+    PeerUpdate { rank: u32, addr: String },
+    /// Worker → monitor: graceful departure — treat me exactly like a
+    /// heartbeat eviction (vacate my rank, repair the topology, hand
+    /// my shards to my replacement when one joins).
+    LeaveNotice { rank: u32 },
+    /// Monitor → worker: atomic neighbor-set replacement. Each entry
+    /// is one node's *complete* new sorted neighbor list (an empty
+    /// list deactivates the node). `version` is monotonic — stale
+    /// patches are ignored, so reordered deliveries cannot regress the
+    /// topology. Workers swap the view between collect rounds: an
+    /// in-flight round keeps the neighborhood it sampled.
+    TopologyPatch {
+        version: u64,
+        entries: Vec<(u32, Vec<u32>)>,
+    },
+    /// Monitor → joiner: opens node `node`'s state handoff — `w` is
+    /// the node's last-known parameter vector, so the adopted node
+    /// resumes from live state instead of re-initializing. The node's
+    /// data shard follows as the usual credit-gated
+    /// [`ShardBlock`](WireMsg::ShardBlock) stream.
+    HandoffBegin { node: u32, w: Vec<f32> },
+    /// Monitor → joiner: node `node`'s handoff is complete. `checksum`
+    /// is the [`Fnv64`] fold over the re-streamed blocks' payloads —
+    /// equal to the original launch-time fold, certifying the adopted
+    /// shard bit-identical (no row lost or duplicated).
+    HandoffEnd { node: u32, checksum: u64 },
 }
 
 impl WireMsg {
@@ -274,6 +348,14 @@ impl WireMsg {
             WireMsg::Batch { .. } => 18,
             WireMsg::MetricsRequest => 19,
             WireMsg::MetricsReply { .. } => 20,
+            WireMsg::JoinRequest => 21,
+            WireMsg::JoinGrant { .. } => 22,
+            WireMsg::JoinReady { .. } => 23,
+            WireMsg::PeerUpdate { .. } => 24,
+            WireMsg::LeaveNotice { .. } => 25,
+            WireMsg::TopologyPatch { .. } => 26,
+            WireMsg::HandoffBegin { .. } => 27,
+            WireMsg::HandoffEnd { .. } => 28,
         }
     }
 
@@ -326,6 +408,8 @@ pub enum WireError {
     /// A chunked message announced more bytes than this connection's
     /// configured staging budget allows.
     Staging { len: usize, limit: usize },
+    /// A string field was not valid UTF-8.
+    Utf8,
 }
 
 impl std::fmt::Display for WireError {
@@ -337,8 +421,8 @@ impl std::fmt::Display for WireError {
                 write!(
                     f,
                     "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
-                     upgrade the older end (pre-v6 peers cannot speak the batched \
-                     hot path or the metrics frames)"
+                     upgrade the older end (pre-v7 peers cannot speak the metrics \
+                     frames or the elastic-membership protocol)"
                 )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
@@ -362,6 +446,7 @@ impl std::fmt::Display for WireError {
                      smaller blocks)"
                 )
             }
+            WireError::Utf8 => write!(f, "string field is not valid UTF-8"),
         }
     }
 }
@@ -445,6 +530,10 @@ fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
 /// Element-count prefix, total: a count past `u32` refuses instead of
 /// silently truncating (the old `as u32` cast).
 fn put_len(buf: &mut Vec<u8>, len: usize) -> Result<(), WireError> {
@@ -480,6 +569,19 @@ fn put_u64s(buf: &mut Vec<u8>, v: &[u64]) -> Result<(), WireError> {
 fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) -> Result<(), WireError> {
     put_len(buf, b.len())?;
     buf.extend_from_slice(b);
+    Ok(())
+}
+
+/// A string is its UTF-8 bytes, length-prefixed like any byte run.
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<(), WireError> {
+    put_bytes(buf, s.as_bytes())
+}
+
+fn put_strs(buf: &mut Vec<u8>, v: &[String]) -> Result<(), WireError> {
+    put_len(buf, v.len())?;
+    for s in v {
+        put_str(buf, s)?;
+    }
     Ok(())
 }
 
@@ -639,6 +741,59 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             put_u32(body, *rank);
             put_u64s(body, counters)?;
             put_u64s(body, hist_data)?;
+        }
+        WireMsg::JoinRequest => {}
+        WireMsg::JoinGrant {
+            rank,
+            nodes,
+            degree,
+            param_len,
+            seed,
+            secs,
+            rate_hz,
+            obj_code,
+            lam,
+            staging_mb,
+            executors,
+            flush_bytes,
+            flush_micros,
+            peers,
+        } => {
+            put_u32(body, *rank);
+            put_u32(body, *nodes);
+            put_u32(body, *degree);
+            put_u32(body, *param_len);
+            put_u64(body, *seed);
+            put_f64(body, *secs);
+            put_f64(body, *rate_hz);
+            body.push(*obj_code);
+            put_f32(body, *lam);
+            put_u32(body, *staging_mb);
+            put_u32(body, *executors);
+            put_u32(body, *flush_bytes);
+            put_u64(body, *flush_micros);
+            put_strs(body, peers)?;
+        }
+        WireMsg::JoinReady { rank, addr } | WireMsg::PeerUpdate { rank, addr } => {
+            put_u32(body, *rank);
+            put_str(body, addr)?;
+        }
+        WireMsg::LeaveNotice { rank } => put_u32(body, *rank),
+        WireMsg::TopologyPatch { version, entries } => {
+            put_u64(body, *version);
+            put_len(body, entries.len())?;
+            for (node, hood) in entries {
+                put_u32(body, *node);
+                put_u32s(body, hood)?;
+            }
+        }
+        WireMsg::HandoffBegin { node, w } => {
+            put_u32(body, *node);
+            put_f32s(body, w)?;
+        }
+        WireMsg::HandoffEnd { node, checksum } => {
+            put_u32(body, *node);
+            put_u64(body, *checksum);
         }
     }
     Ok(())
@@ -879,6 +1034,20 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A length-prefixed UTF-8 string; invalid bytes refuse with
+    /// [`WireError::Utf8`] rather than lossy-replacing (an address
+    /// that decodes differently than it encoded is worse than none).
+    fn str(&mut self) -> Result<String, WireError> {
+        let bytes = self.bytes()?;
+        std::str::from_utf8(bytes)
+            .map(str::to_owned)
+            .map_err(|_| WireError::Utf8)
+    }
+
     /// A length-prefixed raw byte run, count-validated against the
     /// bytes actually remaining before any allocation.
     fn bytes(&mut self) -> Result<&'a [u8], WireError> {
@@ -1080,6 +1249,81 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             rank: c.u32()?,
             counters: c.u64s()?,
             hist_data: c.u64s()?,
+        },
+        21 => WireMsg::JoinRequest,
+        22 => {
+            let rank = c.u32()?;
+            let nodes = c.u32()?;
+            let degree = c.u32()?;
+            let param_len = c.u32()?;
+            let seed = c.u64()?;
+            let secs = c.f64()?;
+            let rate_hz = c.f64()?;
+            let obj_code = c.u8()?;
+            let lam = c.f32()?;
+            let staging_mb = c.u32()?;
+            let executors = c.u32()?;
+            let flush_bytes = c.u32()?;
+            let flush_micros = c.u64()?;
+            let n = c.u32()? as usize;
+            // Each peer entry needs at least its (possibly zero)
+            // length prefix: 4 bytes. Reject counts the body cannot
+            // hold before allocating.
+            if n.checked_mul(4).map(|b| b > c.remaining()).unwrap_or(true) {
+                return Err(WireError::Oversize { len: n });
+            }
+            let mut peers = Vec::with_capacity(n);
+            for _ in 0..n {
+                peers.push(c.str()?);
+            }
+            WireMsg::JoinGrant {
+                rank,
+                nodes,
+                degree,
+                param_len,
+                seed,
+                secs,
+                rate_hz,
+                obj_code,
+                lam,
+                staging_mb,
+                executors,
+                flush_bytes,
+                flush_micros,
+                peers,
+            }
+        }
+        23 => WireMsg::JoinReady {
+            rank: c.u32()?,
+            addr: c.str()?,
+        },
+        24 => WireMsg::PeerUpdate {
+            rank: c.u32()?,
+            addr: c.str()?,
+        },
+        25 => WireMsg::LeaveNotice { rank: c.u32()? },
+        26 => {
+            let version = c.u64()?;
+            let n = c.u32()? as usize;
+            // Each entry needs at least a node id + an (empty)
+            // neighbor count: 8 bytes.
+            if n.checked_mul(8).map(|b| b > c.remaining()).unwrap_or(true) {
+                return Err(WireError::Oversize { len: n });
+            }
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.u32()?;
+                entries.push((node, c.u32s()?));
+            }
+            WireMsg::TopologyPatch { version, entries }
+        }
+        27 => WireMsg::HandoffBegin {
+            node: c.u32()?,
+            w: c.f32s()?,
+        },
+        28 => WireMsg::HandoffEnd {
+            node: c.u32()?,
+            checksum: c.u64()?,
         },
         got => return Err(WireError::UnknownTag { got }),
     };
@@ -1447,6 +1691,69 @@ mod tests {
             counters: vec![],
             hist_data: vec![],
         });
+        roundtrip(WireMsg::JoinRequest);
+        roundtrip(WireMsg::JoinGrant {
+            rank: 2,
+            nodes: 64,
+            degree: 4,
+            param_len: 51,
+            seed: 0xFEED,
+            secs: 12.5,
+            rate_hz: 300.0,
+            obj_code: 1,
+            lam: 1e-4,
+            staging_mb: 1024,
+            executors: 0,
+            flush_bytes: 16 * 1024,
+            flush_micros: 500,
+            peers: vec![
+                "127.0.0.1:9000".into(),
+                "127.0.0.1:9001".into(),
+                String::new(),
+            ],
+        });
+        roundtrip(WireMsg::JoinGrant {
+            rank: 0,
+            nodes: 0,
+            degree: 0,
+            param_len: 0,
+            seed: 0,
+            secs: 0.0,
+            rate_hz: 0.0,
+            obj_code: 0,
+            lam: 0.0,
+            staging_mb: 0,
+            executors: 0,
+            flush_bytes: 0,
+            flush_micros: 0,
+            peers: vec![],
+        });
+        roundtrip(WireMsg::JoinReady {
+            rank: 1,
+            addr: "127.0.0.1:41234".into(),
+        });
+        roundtrip(WireMsg::PeerUpdate {
+            rank: 2,
+            addr: "[::1]:7".into(),
+        });
+        roundtrip(WireMsg::LeaveNotice { rank: 0 });
+        roundtrip(WireMsg::TopologyPatch {
+            version: 3,
+            entries: vec![(0, vec![1, 2, 5]), (7, vec![]), (2, vec![0])],
+        });
+        roundtrip(WireMsg::TopologyPatch {
+            version: u64::MAX,
+            entries: vec![],
+        });
+        roundtrip(WireMsg::HandoffBegin {
+            node: 12,
+            w: vec![0.5, -1.5, f32::MIN],
+        });
+        roundtrip(WireMsg::HandoffBegin { node: 0, w: vec![] });
+        roundtrip(WireMsg::HandoffEnd {
+            node: 12,
+            checksum: u64::MAX,
+        });
         roundtrip(WireMsg::Batch {
             msgs: vec![WireMsg::Hello { rank: 1 }],
         });
@@ -1557,6 +1864,52 @@ mod tests {
         body.extend_from_slice(&1u32.to_le_bytes());
         body.extend_from_slice(&2u64.to_le_bytes());
         body.extend_from_slice(&(1_000_000u32).to_le_bytes()); // count, no data
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        assert!(matches!(decode(&frame), Err(WireError::Oversize { .. })));
+    }
+
+    #[test]
+    fn membership_string_fields_are_strict_utf8() {
+        // Corrupt the address bytes of a JoinReady frame: decode must
+        // refuse with the UTF-8 error, never lossy-replace or panic.
+        let msg = WireMsg::JoinReady {
+            rank: 1,
+            addr: "abcd".into(),
+        };
+        let mut frame = encode(&msg).unwrap();
+        let n = frame.len();
+        frame[n - 1] = 0xFF; // invalid UTF-8 continuation byte
+        assert!(matches!(decode(&frame), Err(WireError::Utf8)));
+
+        // A lying peer count in JoinGrant refuses before allocating.
+        let good = encode(&WireMsg::JoinGrant {
+            rank: 0,
+            nodes: 1,
+            degree: 0,
+            param_len: 1,
+            seed: 0,
+            secs: 1.0,
+            rate_hz: 1.0,
+            obj_code: 0,
+            lam: 0.0,
+            staging_mb: 1,
+            executors: 0,
+            flush_bytes: 0,
+            flush_micros: 0,
+            peers: vec![],
+        })
+        .unwrap();
+        let mut lying = good.clone();
+        let n = lying.len();
+        lying[n - 4..].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(decode(&lying), Err(WireError::Oversize { .. })));
+
+        // And a lying TopologyPatch entry count likewise.
+        let mut body = vec![WIRE_VERSION, 26];
+        body.extend_from_slice(&1u64.to_le_bytes()); // version
+        body.extend_from_slice(&(u32::MAX).to_le_bytes()); // entries, no data
         let mut frame = Vec::new();
         frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
         frame.extend_from_slice(&body);

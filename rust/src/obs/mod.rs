@@ -41,6 +41,14 @@ pub enum Counter {
     Conflicts = 3,
     /// Socket dial-loop reconnect attempts after a dropped peer link.
     Reconnects = 4,
+    /// Workers admitted into a running deployment (`--join`).
+    Joins = 5,
+    /// Workers removed from a running deployment (heartbeat strikes or
+    /// a graceful `LeaveNotice`).
+    Evictions = 6,
+    /// Topology repair patches computed and shipped after a membership
+    /// change.
+    Repairs = 7,
 }
 
 /// High-water marks (merged by `max`, not sum).
@@ -67,15 +75,23 @@ pub enum Hist {
     FlushBytes = 4,
 }
 
-pub const N_COUNTERS: usize = 5;
+pub const N_COUNTERS: usize = 8;
 pub const N_GAUGES: usize = 2;
 pub const N_HISTS: usize = 5;
 /// u64 words per histogram on the wire: count, sum, then 64 buckets.
 pub const HIST_BUCKETS: usize = 64;
 pub const HIST_WIRE_LEN: usize = 2 + HIST_BUCKETS;
 
-pub const COUNTER_NAMES: [&str; N_COUNTERS] =
-    ["steals", "b8_collapses", "credit_stalls", "conflicts", "reconnects"];
+pub const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "steals",
+    "b8_collapses",
+    "credit_stalls",
+    "conflicts",
+    "reconnects",
+    "joins",
+    "evictions",
+    "repairs",
+];
 pub const GAUGE_NAMES: [&str; N_GAUGES] = ["staging_high_water_bytes", "chunk_high_water_bytes"];
 pub const HIST_NAMES: [&str; N_HISTS] =
     ["fire_to_apply_us", "message_delay_us", "staleness_ticks", "timer_lag_us", "flush_bytes"];

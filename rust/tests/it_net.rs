@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dasgd::coordinator::{consensus, spawn_shard, AsyncCluster, AsyncConfig};
-use dasgd::data::stream::{RowBlock, DEFAULT_BLOCK_ROWS};
+use dasgd::data::stream::{fold_payloads, RowBlock, DEFAULT_BLOCK_ROWS};
 use dasgd::experiments::{make_regular, synth_world};
 use dasgd::net::wire::{self, WireMsg, MONITOR_RANK};
 use dasgd::net::{
@@ -582,6 +582,66 @@ fn launch_with_metrics_jsonl_exports_cluster_staleness() {
         rec.staleness_p50,
         rec.staleness_p99
     );
+}
+
+#[test]
+fn churn_2_1_2_hands_off_every_shard_exactly_once() {
+    // The membership acceptance run: a 2-worker deployment loses rank 1
+    // to a SIGKILL 10% into the horizon and admits a `--join`
+    // replacement once the rank is vacated. The run must still reach
+    // its horizon with two live workers, and every node of the killed
+    // rank must have been handed off exactly once, checksum-certified:
+    // the monitor records the fold-of-checksums it streamed per node,
+    // the joiner verifies the same fold block-by-block and dies on any
+    // mismatch, and the carve is deterministic in (plan, block rows) —
+    // so equality against a local re-carve proves the replacement holds
+    // a bit-identical copy of the shard.
+    const HORIZON: u64 = 25_000;
+    let cfg = LaunchConfig {
+        binary: Some(dasgd_bin()),
+        horizon_updates: HORIZON,
+        secs_cap: 90.0,
+        seed: SEED,
+        chaos_kill: Some((1, 0.1)),
+        chaos_join: Some(0.2),
+        log_level: Some("warn".into()),
+        ..LaunchConfig::quick(2, NODES)
+    };
+    let rep = dasgd::net::run_launch(&cfg).expect("churn launch failed");
+    assert!(rep.reached_horizon, "churned deployment stalled before the horizon");
+    assert_eq!(
+        rep.live_workers, 2,
+        "the replacement must be live at shutdown (joins={}, evictions={})",
+        rep.joins, rep.evictions
+    );
+    assert!(rep.evictions >= 1, "the killed rank was never evicted");
+    assert!(rep.joins >= 1, "the replacement was never admitted");
+    assert!(rep.repairs >= 1, "no topology repair was shipped");
+
+    // Rank 1 of a 2-worker, 8-node map owns nodes 4..8; each must have
+    // been handed off exactly once, none of rank 0's ever.
+    let (plan, _) = PlanSpec::Synth.build(Objective::LogReg, NODES, 300, 512, SEED);
+    for node in 0..NODES as u32 {
+        let times = rep.handoffs.iter().filter(|(n, _)| *n == node).count();
+        if node < NODES as u32 / 2 {
+            assert_eq!(times, 0, "rank 0's node {node} was handed off");
+        } else {
+            assert_eq!(times, 1, "node {node} handed off {times} times, want exactly 1");
+            let (_, fold) = rep.handoffs.iter().find(|(n, _)| *n == node).unwrap();
+            let want = fold_payloads(&RowBlock::carve(
+                node as usize,
+                plan.shard(node as usize),
+                DEFAULT_BLOCK_ROWS,
+            ));
+            assert_eq!(
+                *fold, want,
+                "node {node}: handed-off shard checksum fold diverged from the plan"
+            );
+        }
+    }
+    let last = rep.recorder.last().expect("monitor recorded snapshots");
+    assert!(last.consensus.is_finite());
+    assert!(rep.counts.updates() >= HORIZON);
 }
 
 /// Snapshot one worker over a monitor control connection.

@@ -1,0 +1,161 @@
+//! Property tests for membership repair and the worker-side topology
+//! view: any removal/add sequence on an arbitrary regular launch graph
+//! keeps the active subgraph connected with degrees within ±1 of the
+//! launch degree and never orphans a node, patches describe exactly
+//! the graph the monitor holds, and a worker replaying the patch
+//! stream converges to that same graph.
+
+use dasgd::experiments::make_regular;
+use dasgd::membership::{Membership, TopologyView};
+use dasgd::util::proptest::{check, Gen};
+
+/// One churn op against a [`Membership`], driven by the generator:
+/// deactivate a random batch of active nodes (never below the
+/// `degree + 2` floor the guarantees are stated for) or re-admit a
+/// random batch of inactive ones.
+fn churn_step(
+    g: &mut Gen,
+    m: &mut Membership,
+    d0: usize,
+) -> (Vec<usize>, bool, Vec<(u32, Vec<u32>)>) {
+    let n = m.graph().len();
+    let inactive: Vec<usize> = (0..n).filter(|&u| !m.is_active(u)).collect();
+    let add = !inactive.is_empty() && g.bool();
+    if add {
+        let count = g.usize_in(1, inactive.len());
+        let mut nodes = Vec::new();
+        for _ in 0..count {
+            let pick = *g.choose(&inactive);
+            if !nodes.contains(&pick) {
+                nodes.push(pick);
+            }
+        }
+        let patch = m.activate(&nodes);
+        (nodes, true, patch)
+    } else {
+        let active: Vec<usize> = (0..n).filter(|&u| m.is_active(u)).collect();
+        // Keep at least d0 + 2 nodes active — the floor the repair
+        // guarantees are stated for (see membership::repair).
+        let room = active.len().saturating_sub(d0 + 2);
+        let mut nodes = Vec::new();
+        if room > 0 {
+            for _ in 0..g.usize_in(1, room.min(4)) {
+                let pick = *g.choose(&active);
+                if !nodes.contains(&pick) {
+                    nodes.push(pick);
+                }
+            }
+        }
+        // room == 0: too small to remove anyone — the empty deactivate
+        // still exercises the patch path (and must be a graph no-op).
+        let patch = m.deactivate(&nodes);
+        (nodes, false, patch)
+    }
+}
+
+/// The repair guarantees, checked wholesale.
+fn check_invariants(m: &Membership, d0: usize) -> Result<(), String> {
+    if !m.is_active_connected() {
+        return Err("active subgraph disconnected".into());
+    }
+    let g = m.graph();
+    for u in 0..g.len() {
+        let d = g.degree(u);
+        if m.is_active(u) {
+            if m.active_count() > 1 && d == 0 {
+                return Err(format!("active node {u} orphaned"));
+            }
+            if d + 1 < d0 || d > d0 + 1 {
+                return Err(format!("node {u}: degree {d} outside {d0}±1"));
+            }
+        } else if d != 0 {
+            return Err(format!("inactive node {u} still holds {d} edges"));
+        }
+        for &v in g.neighbors(u) {
+            if v == u {
+                return Err(format!("self-loop at {u}"));
+            }
+            if !g.has_edge(v, u) {
+                return Err(format!("asymmetric edge {u}-{v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn arbitrary_churn_preserves_connectivity_and_degree() {
+    check("membership-churn", 60, 0x3E7A, |g| {
+        let degree = *g.choose(&[2usize, 3, 4, 6]);
+        let n = g.usize_in(degree + 6, 40);
+        let mut m = Membership::new(make_regular(n, degree), degree);
+        check_invariants(&m, degree)?;
+        for _ in 0..g.usize_in(1, 6) {
+            let (_, _, patch) = churn_step(g, &mut m, degree);
+            check_invariants(&m, degree)?;
+            // The patch is exactly the monitor's graph at the touched
+            // nodes: full sorted neighbor lists, empty for vacated
+            // nodes.
+            for (node, hood) in &patch {
+                let now: Vec<u32> = m
+                    .graph()
+                    .neighbors(*node as usize)
+                    .iter()
+                    .map(|&v| v as u32)
+                    .collect();
+                if hood != &now {
+                    return Err(format!(
+                        "patch for node {node} says {hood:?}, graph has {now:?}"
+                    ));
+                }
+                if !m.is_active(*node as usize) && !hood.is_empty() {
+                    return Err(format!("vacated node {node} shipped edges {hood:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn patch_stream_replays_to_the_monitor_graph() {
+    check("membership-view-convergence", 40, 0x3E7B, |g| {
+        let degree = *g.choose(&[2usize, 4]);
+        let n = g.usize_in(degree + 6, 32);
+        let launch = make_regular(n, degree);
+        let mut m = Membership::new(launch.clone(), degree);
+        let view = TopologyView::new(launch);
+        let mut history: Vec<(u64, Vec<(u32, Vec<u32>)>)> = Vec::new();
+        for _ in 0..g.usize_in(1, 6) {
+            let (_, _, patch) = churn_step(g, &mut m, degree);
+            let version = m.version();
+            if !view.apply(version, &patch) {
+                return Err(format!("view rejected fresh patch v{version}"));
+            }
+            // A replayed (stale) patch must be ignored without
+            // touching the view.
+            if let Some((v0, p0)) = history.last() {
+                if view.apply(*v0, p0) {
+                    return Err(format!("view accepted stale patch v{v0}"));
+                }
+            }
+            history.push((version, patch));
+        }
+        // The worker's replayed view is the monitor's graph, edge for
+        // edge — on every node, touched or not.
+        let got = view.snapshot();
+        for u in 0..n {
+            if got.neighbors(u) != m.graph().neighbors(u) {
+                return Err(format!(
+                    "node {u}: view has {:?}, monitor has {:?}",
+                    got.neighbors(u),
+                    m.graph().neighbors(u)
+                ));
+            }
+        }
+        if view.version() != m.version() {
+            return Err("view version diverged from the monitor".into());
+        }
+        Ok(())
+    });
+}

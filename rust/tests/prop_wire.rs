@@ -17,7 +17,7 @@ use dasgd::workload::{PlanSpec, WorkloadPlan};
 /// NaN bit-pattern survival is pinned by the unit tests in `wire.rs`).
 fn arb_msg(g: &mut Gen) -> WireMsg {
     let w_len = g.usize_in(0, g.size * 64);
-    match g.usize_in(0, 19) {
+    match g.usize_in(0, 27) {
         0 => WireMsg::Hello {
             rank: g.usize_in(0, 1 << 20) as u32,
         },
@@ -134,7 +134,7 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             bytes: g.usize_in(0, 1 << 30) as u64,
         },
         18 => WireMsg::MetricsRequest,
-        _ => WireMsg::MetricsReply {
+        19 => WireMsg::MetricsReply {
             rank: g.usize_in(0, 64) as u32,
             counters: (0..g.usize_in(0, 16))
                 .map(|_| g.usize_in(0, 1 << 30) as u64)
@@ -142,6 +142,56 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             hist_data: (0..g.usize_in(0, 5 * 66))
                 .map(|_| g.usize_in(0, 1 << 30) as u64)
                 .collect(),
+        },
+        20 => WireMsg::JoinRequest,
+        21 => WireMsg::JoinGrant {
+            rank: g.usize_in(0, 64) as u32,
+            nodes: g.usize_in(1, 100_000) as u32,
+            degree: g.usize_in(1, 32) as u32,
+            param_len: g.usize_in(1, 1 << 20) as u32,
+            seed: g.usize_in(0, usize::MAX / 2) as u64,
+            secs: g.f64_in(0.0, 1e4),
+            rate_hz: g.f64_in(0.0, 1e4),
+            obj_code: g.usize_in(0, 3) as u8,
+            lam: g.f32_vec(1, 0.0, 1.0)[0],
+            staging_mb: g.usize_in(1, 4096) as u32,
+            executors: g.usize_in(0, 64) as u32,
+            flush_bytes: g.usize_in(0, 1 << 20) as u32,
+            flush_micros: g.usize_in(0, 1 << 20) as u64,
+            peers: (0..g.usize_in(0, 8))
+                .map(|i| format!("127.0.0.1:{}", 1024 + i))
+                .collect(),
+        },
+        22 => WireMsg::JoinReady {
+            rank: g.usize_in(0, 64) as u32,
+            addr: format!("127.0.0.1:{}", g.usize_in(1024, 65535)),
+        },
+        23 => WireMsg::PeerUpdate {
+            rank: g.usize_in(0, 64) as u32,
+            addr: format!("127.0.0.1:{}", g.usize_in(1024, 65535)),
+        },
+        24 => WireMsg::LeaveNotice {
+            rank: g.usize_in(0, 64) as u32,
+        },
+        25 => WireMsg::TopologyPatch {
+            version: g.usize_in(0, usize::MAX / 2) as u64,
+            entries: (0..g.usize_in(0, 16))
+                .map(|_| {
+                    let node = g.usize_in(0, 10_000) as u32;
+                    let hood = (0..g.usize_in(0, 8))
+                        .map(|_| g.usize_in(0, 10_000) as u32)
+                        .collect();
+                    (node, hood)
+                })
+                .collect(),
+        },
+        26 => WireMsg::HandoffBegin {
+            node: g.usize_in(0, 10_000) as u32,
+            w: g.f32_vec(w_len, -1e6, 1e6),
+        },
+        _ => WireMsg::HandoffEnd {
+            node: g.usize_in(0, 10_000) as u32,
+            checksum: g.usize_in(0, usize::MAX / 2) as u64,
         },
     }
 }

@@ -15,7 +15,16 @@ import argparse
 import json
 import sys
 
-COUNTERS = ["steals", "b8_collapses", "credit_stalls", "conflicts", "reconnects"]
+COUNTERS = [
+    "steals",
+    "b8_collapses",
+    "credit_stalls",
+    "conflicts",
+    "reconnects",
+    "joins",
+    "evictions",
+    "repairs",
+]
 GAUGES = ["staging_high_water_bytes", "chunk_high_water_bytes"]
 HISTS = [
     "fire_to_apply_us",
@@ -141,9 +150,17 @@ def main():
         action="store_true",
         help="fail unless the final metrics line has staleness_ticks count > 0",
     )
+    ap.add_argument(
+        "--require-counter",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="fail unless the final metrics line has counters[NAME] > 0 "
+        "(repeatable; used by the churn smoke for evictions/joins)",
+    )
     args = ap.parse_args()
-    if args.require_staleness and args.kind != "metrics":
-        ap.error("--require-staleness only applies to --kind metrics")
+    if (args.require_staleness or args.require_counter) and args.kind != "metrics":
+        ap.error("--require-staleness/--require-counter only apply to --kind metrics")
 
     lines = 0
     prev_seq = None
@@ -173,6 +190,12 @@ def main():
         count = last["hists"]["staleness_ticks"]["count"]
         if count == 0:
             sys.exit(f"{args.path}: final line has an empty staleness_ticks histogram")
+    for name in args.require_counter:
+        value = last["counters"].get(name)
+        if value is None:
+            sys.exit(f"{args.path}: final line has no counter {name!r}")
+        if value == 0:
+            sys.exit(f"{args.path}: final line has counters[{name!r}] == 0")
     print(f"{args.path}: {lines} {args.kind} line(s) OK")
 
 

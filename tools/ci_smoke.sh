@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# Loopback deployment smoke legs for CI (.github/workflows/ci.yml).
+#
+# Each leg drives `dasgd launch` — real worker processes plus the
+# monitor over loopback TCP — and relies on launch's own exit code:
+# it exits nonzero whenever the wall-clock cap beats the update
+# horizon (LaunchReport.reached_horizon), so a stalled deployment
+# fails the leg without any timeout heuristics.
+#
+# Usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn
+set -euo pipefail
+
+leg="${1:?usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn}"
+
+run() { cargo run --release -- "$@"; }
+
+case "$leg" in
+  basic)
+    # Two real worker processes + the monitor over loopback TCP: the
+    # deployment path must reach its update horizon and shut down
+    # cleanly on a stock runner. Shards ship over the wire.
+    run launch --workers 2 --nodes 8 --horizon 2000
+    ;;
+
+  heterogeneous)
+    # Label-skew Dirichlet split + mixed hinge/lasso objectives:
+    # workers receive their (distinct, non-IID) shards from the
+    # monitor and must still reach the horizon.
+    run launch --workers 2 --nodes 8 --horizon 2000 \
+      --plan mixed --dirichlet-alpha 0.1
+    ;;
+
+  observability)
+    # An instrumented launch must serve a live Prometheus endpoint
+    # mid-run and leave behind schema-valid metrics/trace JSONL with
+    # nonzero cluster-wide staleness mass (docs/observability.md).
+    # The long horizon keeps the deployment alive while we scrape.
+    # The endpoint answers with an empty page until the monitor's
+    # first aggregation round completes, so retry until the scraped
+    # body actually carries the staleness metric — a bare 200 is
+    # not "up" yet. Trace events fire inside the workers; launch
+    # forwards --trace-jsonl as per-rank trace.rankN.jsonl files
+    # while the monitor's own round events land in trace.jsonl.
+    run launch --workers 2 --nodes 8 --horizon 20000 \
+      --metrics-jsonl metrics.jsonl --trace-jsonl trace.jsonl \
+      --log-level debug --metrics-addr 127.0.0.1:9900 &
+    LAUNCH_PID=$!
+    for i in $(seq 1 60); do
+      if curl -sf http://127.0.0.1:9900/metrics -o scrape.txt \
+         && grep -q 'dasgd_staleness_ticks' scrape.txt; then
+        break
+      fi
+      sleep 1
+    done
+    grep -q 'dasgd_staleness_ticks' scrape.txt
+    grep -q 'dasgd_steals_total' scrape.txt
+    wait "$LAUNCH_PID"
+    python3 tools/check_metrics.py metrics.jsonl --require-staleness
+    python3 tools/check_metrics.py trace.jsonl --kind trace
+    python3 tools/check_metrics.py trace.rank0.jsonl --kind trace
+    python3 tools/check_metrics.py trace.rank1.jsonl --kind trace
+    ;;
+
+  churn)
+    # Membership smoke: three workers; the monitor SIGKILLs rank 2
+    # once the aggregate passes 30% of the horizon and admits a
+    # `worker --join` replacement past 60% (the rank must first have
+    # been vacated by the heartbeat eviction — the same path a real
+    # crash takes). Reaching the horizon certifies the handoff: every
+    # re-streamed shard is checksum-verified block by block and the
+    # joiner refuses the stream on any mismatch. The metrics export
+    # must carry the eviction, the join, and the topology repairs.
+    run launch --workers 3 --nodes 9 --degree 2 --horizon 60000 \
+      --secs 240 --chaos-kill 2@0.3 --chaos-join 0.6 \
+      --metrics-jsonl metrics-churn.jsonl --log-level info
+    python3 tools/check_metrics.py metrics-churn.jsonl \
+      --require-counter evictions --require-counter joins \
+      --require-counter repairs
+    ;;
+
+  *)
+    echo "unknown smoke leg: $leg" >&2
+    exit 2
+    ;;
+esac

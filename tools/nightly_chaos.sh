@@ -1,0 +1,104 @@
+#!/usr/bin/env bash
+# Nightly chaos leg (.github/workflows/nightly.yml): a 1000-node,
+# 4-worker deployment under scheduled external churn.
+#
+# The monitor opens a join listener (--join-addr) and prints its bound
+# address; this script then SIGKILLs one incumbent worker every
+# KILL_EVERY seconds and spawns a `dasgd worker --join` replacement
+# REJOIN_AFTER seconds later — from the outside, the way an operator
+# (or an orchestrator) would, exercising the public join path rather
+# than the in-monitor --chaos-* hooks the CI smoke uses.
+#
+# Failure modes, all fatal:
+#   - stall: `launch` exits nonzero when the wall-clock cap beats the
+#     update horizon;
+#   - missing churn: the metrics export must show nonzero evictions,
+#     joins, and repairs;
+#   - divergence: the final consensus residual in the CSV must be
+#     under TOL.
+set -euo pipefail
+
+KILL_EVERY="${KILL_EVERY:-15}"
+REJOIN_AFTER="${REJOIN_AFTER:-8}"
+TOL="${TOL:-25.0}"
+BIN="${BIN:-target/release/dasgd}"
+
+cargo build --release
+
+"$BIN" launch --workers 4 --nodes 1000 --degree 4 --samples 50 \
+  --rate 50 --horizon 2000000 --secs 300 \
+  --join-addr 127.0.0.1:0 \
+  --metrics-jsonl metrics-chaos.jsonl --csv chaos.csv --log-level info \
+  > launch.out 2> launch.err &
+LAUNCH_PID=$!
+
+# The monitor prints its join listener address once the deployment is
+# streaming; replacements dial it.
+ADDR=""
+for _ in $(seq 1 120); do
+  ADDR=$(sed -n 's/^dasgd-launch join-addr=//p' launch.out | head -n 1)
+  [ -n "$ADDR" ] && break
+  if ! kill -0 "$LAUNCH_PID" 2>/dev/null; then
+    echo "launch died before printing its join address" >&2
+    cat launch.out launch.err >&2
+    exit 1
+  fi
+  sleep 1
+done
+if [ -z "$ADDR" ]; then
+  echo "no join-addr line after 120s" >&2
+  cat launch.out launch.err >&2
+  exit 1
+fi
+echo "chaos: monitor join listener at $ADDR"
+
+# Kill/rejoin cycles while the run lives. Incumbents carry a
+# `worker --rank N` command line; once one is gone its replacement
+# runs as `worker --join`, so later cycles fall through to killing a
+# joined replacement — both shapes must survive the same path.
+RANK=1
+while kill -0 "$LAUNCH_PID" 2>/dev/null; do
+  sleep "$KILL_EVERY" &
+  wait $! || true
+  kill -0 "$LAUNCH_PID" 2>/dev/null || break
+  if pkill -KILL -f "worker --rank $RANK"; then
+    echo "chaos: SIGKILLed incumbent worker rank $RANK"
+  elif pkill -KILL --oldest -f "worker --join"; then
+    echo "chaos: SIGKILLed a joined replacement worker"
+  else
+    echo "chaos: no worker matched rank $RANK (already churned)"
+  fi
+  RANK=$((RANK % 3 + 1))
+  sleep "$REJOIN_AFTER"
+  kill -0 "$LAUNCH_PID" 2>/dev/null || break
+  "$BIN" worker --join "$ADDR" --log-level warn > /dev/null 2>&1 &
+  echo "chaos: spawned a --join replacement"
+done
+
+# Nonzero exactly when the deployment stalled before the horizon.
+if ! wait "$LAUNCH_PID"; then
+  echo "chaos run stalled before the horizon" >&2
+  tail -n 40 launch.err >&2
+  exit 1
+fi
+
+python3 tools/check_metrics.py metrics-chaos.jsonl \
+  --require-counter evictions --require-counter joins \
+  --require-counter repairs
+
+# The run converged despite the churn: final consensus residual under
+# tolerance.
+TOL="$TOL" python3 - <<'EOF'
+import csv
+import os
+import sys
+
+rows = list(csv.DictReader(open("chaos.csv")))
+if not rows:
+    sys.exit("chaos.csv has no records")
+final = float(rows[-1]["consensus"])
+tol = float(os.environ["TOL"])
+print(f"final consensus residual {final:.3f} (tolerance {tol})")
+if not final < tol:
+    sys.exit(f"consensus residual {final:.3f} above tolerance {tol}")
+EOF
