@@ -25,8 +25,8 @@ use dasgd::util::rng::Xoshiro256pp;
 /// One projection round (collect + average + broadcast) over the closed
 /// neighborhood {4, 5, 6} of the middle node of a ring-10, on `t`.
 fn projection_round(t: &dyn Transport) -> ProjectionOutcome {
-    t.try_project(5, &[4, 5, 6], Duration::ZERO, &mut |rows| {
-        neighborhood_average(rows)
+    t.try_project(5, &[4, 5, 6], Duration::ZERO, &mut |rows, _aux| {
+        (neighborhood_average(rows), Vec::new())
     })
 }
 
@@ -135,6 +135,7 @@ fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
         to: 4,
         token: 99,
         w: (0..param_len).map(|i| i as f32 * 0.25).collect(),
+        aux: Vec::new(),
     };
     let mut rows = Vec::new();
     let r = h.case("wire encode (ApplyAverage, 500 dims)", || {
@@ -159,6 +160,7 @@ fn bench_wire(h: &mut Harness, param_len: usize) -> Vec<(String, f64)> {
         classes: 10,
         labels: (0..rows_n as u32).map(|i| i % 10).collect(),
         features: (0..rows_n * 50).map(|i| i as f32 * 0.125).collect(),
+        strategy: 0,
     };
     let r = h.case("wire chunk encode (20 MiB PlanAssign)", || {
         std::hint::black_box(wire::encode_message(&big).unwrap());
@@ -323,6 +325,64 @@ fn bench_membership(h: &mut Harness) -> Vec<(String, f64)> {
     vec![("membership_repair".to_string(), r.mean_secs)]
 }
 
+/// Strategy dispatch overhead: one Eq. (6) gradient event routed the
+/// way every engine now runs it — an action draw plus `local_step`
+/// through the `Box<dyn Strategy>` vtable, aux blob threaded — against
+/// the same event calling `NodeLogic::native_grad_step` directly (the
+/// pre-zoo welded path). Both sides consume identical RNG streams on
+/// identical shards, so the difference is exactly the dispatch tax the
+/// algorithm-zoo factoring adds per fire. The CI gate holds
+/// `strategy_dispatch_overhead` to a 5% budget against the committed
+/// baseline, the same tight leash as the socket hot path.
+fn bench_strategy(h: &mut Harness) -> Vec<(String, f64)> {
+    use dasgd::coordinator::Objective;
+    use dasgd::data::{Dataset, SyntheticGen};
+    use dasgd::node_logic::{NodeLogic, Strategy, StrategyKind};
+
+    let gen = SyntheticGen::new(2, 10, 4, 2.0, 0.5, 0.3, 23);
+    let mut rng = Xoshiro256pp::seeded(23);
+    let shard: Dataset = gen.node_dataset(0, 40, &mut rng);
+    let mk_logic = || {
+        NodeLogic::new(
+            0,
+            Objective::LogReg,
+            0.5,
+            shard.clone(),
+            2,
+            Xoshiro256pp::seeded(23).split(0),
+        )
+    };
+
+    let mut rows = Vec::new();
+    let lr = 0.01f32;
+
+    let mut logic = mk_logic();
+    let mut strat = StrategyKind::Dasgd.build(lr);
+    let mut w = vec![0.0f32; logic.param_len()];
+    let mut aux = Vec::new();
+    let r = h.case("grad event via Box<dyn Strategy> (dasgd, 50x10)", || {
+        let _ = strat.draw_action(&mut logic);
+        std::hint::black_box(strat.local_step(&mut logic, &mut w, &mut aux, lr, 0));
+    });
+    rows.push(("strategy_dispatch_overhead".to_string(), r.mean_secs));
+    let trait_mean = r.mean_secs;
+
+    let mut logic = mk_logic();
+    let mut w = vec![0.0f32; logic.param_len()];
+    let r = h.case("grad event direct (native_grad_step, 50x10)", || {
+        let _ = logic.draw_action();
+        std::hint::black_box(logic.native_grad_step(&mut w, lr));
+    });
+    rows.push(("strategy_direct_baseline".to_string(), r.mean_secs));
+    println!(
+        "  strategy dispatch tax: trait {trait_mean:.3e}s vs direct {:.3e}s — ×{:.3} \
+         (hot-path budget 1.05x)",
+        r.mean_secs,
+        trait_mean / r.mean_secs
+    );
+    rows
+}
+
 fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
     let mut body = String::from("{\n  \"bench\": \"transport_projection_round\",\n");
     body.push_str(
@@ -335,6 +395,10 @@ fn write_transport_baseline(rows: &[(String, f64)], param_len: usize) {
          disabled trace probe) and trace_disabled_overhead the probe alone; \
          membership_repair is one 1000-node churn cycle (vacate + re-admit a \
          250-node worker block, topology repaired both ways); \
+         strategy_dispatch_overhead is one gradient event through the \
+         Box<dyn Strategy> layer on the baseline strategy and \
+         strategy_direct_baseline the same event calling native_grad_step \
+         directly (the dispatch tax, budgeted at 5%); \
          nodes_per_worker_saturation is seconds per applied update with 512 \
          nodes on the executor pool in one process (nodes_per_worker_tpn_baseline \
          is the same window on thread-per-node)\",\n",
@@ -437,6 +501,8 @@ fn main() {
     transport_rows.extend(bench_obs(&mut h));
     let mut h = Harness::new("membership repair (churn events)");
     transport_rows.extend(bench_membership(&mut h));
+    let mut h = Harness::new("strategy layer (algorithm zoo dispatch)");
+    transport_rows.extend(bench_strategy(&mut h));
     println!("\nscheduler saturation (512 nodes per process)");
     transport_rows.extend(bench_saturation());
     write_transport_baseline(&transport_rows, 500);

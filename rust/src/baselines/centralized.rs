@@ -5,7 +5,7 @@
 use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::metrics::Recorder;
-use crate::node_logic::{self, Counts, Probe};
+use crate::node_logic::{self, Counts, Probe, Strategy};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -85,6 +85,9 @@ impl CentralizedSgd {
         eval_every: u64,
     ) -> Recorder {
         assert!(!pool.is_empty());
+        // Classic references always run the canonical Eq. (6) rule —
+        // the baseline strategy is their single entry point to it.
+        let mut strategy = node_logic::StrategyKind::Dasgd.build(0.0);
         let mut rec = Recorder::new("centralized");
         let sw = Stopwatch::new();
         let probe = Probe::new(self.objective, test);
@@ -101,7 +104,7 @@ impl CentralizedSgd {
         for _ in 0..iters {
             let lr = self.stepsize.at(self.k);
             let mut w = std::mem::take(&mut self.w);
-            node_logic::sgd_step(
+            strategy.step_sample(
                 self.objective,
                 &mut w,
                 pool,

@@ -7,7 +7,7 @@
 
 use crate::coordinator::{consensus, StepSize};
 use crate::data::Dataset;
-use crate::node_logic::{self, Probe};
+use crate::node_logic::{self, Probe, Strategy};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::workload::WorkloadPlan;
@@ -55,12 +55,15 @@ pub fn local_only_errors_plan(
     let mut root = Xoshiro256pp::seeded(seed);
     let mut params = Vec::with_capacity(plan.len());
     let mut per_node_err = 0.0f64;
+    // Classic references run the canonical Eq. (6) rule through the
+    // baseline strategy (the single entry point to it).
+    let mut strategy = node_logic::StrategyKind::Dasgd.build(0.0);
     for i in 0..plan.len() {
         let obj = plan.objective(i);
         let mut rng = root.split(i as u64);
         let mut w = vec![0.0f32; plan.param_len()];
         for k in 0..iters_per_node {
-            node_logic::sgd_step(
+            strategy.step_sample(
                 obj,
                 &mut w,
                 plan.shard(i),

@@ -12,7 +12,7 @@
 use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::metrics::Recorder;
-use crate::node_logic::{self, Counts, Probe};
+use crate::node_logic::{self, Counts, Probe, Strategy};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -79,6 +79,9 @@ pub fn server_worker_plan(
     let keep = ((n as f64) * (1.0 - cfg.drop_frac)).ceil().max(1.0) as usize;
     let probe = Probe::mixed(&plan.objectives(), test);
 
+    // Every worker's step is the canonical Eq. (6) rule, entered
+    // through the baseline strategy.
+    let mut strategy = node_logic::StrategyKind::Dasgd.build(0.0);
     let mut rec = Recorder::new("server_worker");
     let sw = Stopwatch::new();
     let mut virtual_time = 0.0f64;
@@ -111,7 +114,7 @@ pub fn server_worker_plan(
         let mut delta = vec![0.0f32; global.len()];
         for &(_, i) in survivors {
             let mut local = global.clone();
-            node_logic::sgd_step(
+            strategy.step_sample(
                 plan.objective(i),
                 &mut local,
                 plan.shard(i),

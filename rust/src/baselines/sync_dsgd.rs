@@ -10,7 +10,7 @@ use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::Recorder;
-use crate::node_logic::{self, Counts, Probe};
+use crate::node_logic::{self, Counts, Probe, Strategy};
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::Stopwatch;
@@ -65,6 +65,9 @@ pub fn sync_dsgd_plan(
     let mut params: Vec<Vec<f32>> = vec![vec![0.0; plan.param_len()]; n];
     let probe = Probe::mixed(&plan.objectives(), test);
 
+    // Both phases run the paper-baseline rules (Eq. (6) step, matrix-A
+    // average), entered through the baseline strategy.
+    let mut strategy = node_logic::StrategyKind::Dasgd.build(0.0);
     let mut rec = Recorder::new("sync_dsgd");
     let sw = Stopwatch::new();
     let mut counts = Counts::default();
@@ -77,7 +80,7 @@ pub fn sync_dsgd_plan(
         // engine runs).
         for i in 0..n {
             let mut w = std::mem::take(&mut params[i]);
-            node_logic::sgd_step(
+            strategy.step_sample(
                 plan.objective(i),
                 &mut w,
                 plan.shard(i),
@@ -95,7 +98,8 @@ pub fn sync_dsgd_plan(
         for i in 0..n {
             let hood = g.closed_neighborhood(i);
             let rows: Vec<&[f32]> = hood.iter().map(|&j| params[j].as_slice()).collect();
-            next.push(node_logic::neighborhood_average(&rows));
+            let aux_rows: Vec<&[u8]> = vec![&[]; rows.len()];
+            next.push(strategy.mix(&rows, &aux_rows).0);
             counts.messages += g.degree(i) as u64; // receive one vector per neighbor
         }
         params = next;

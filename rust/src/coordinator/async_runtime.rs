@@ -57,9 +57,7 @@ use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::membership::TopologyView;
 use crate::metrics::Recorder;
-use crate::node_logic::{
-    neighborhood_average, projection_messages, Action, Counts, NodeLogic, Probe,
-};
+use crate::node_logic::{projection_messages, Action, Counts, NodeLogic, Probe, Strategy};
 use crate::objective::Objective;
 use crate::runtime::ExecutorHandle;
 use crate::transport::{
@@ -301,15 +299,18 @@ struct FireCtx {
     classes: usize,
 }
 
-/// One schedulable node: its logic, its heterogeneous firing rate, and
-/// its stepsize schedule (per-family for mixed plans).
+/// One schedulable node: its logic, its heterogeneous firing rate, its
+/// stepsize schedule (per-family for mixed plans), and its update
+/// [`Strategy`] (per-node, from the plan — see docs/algorithms.md).
 struct Task {
     logic: NodeLogic,
     rate_hz: f64,
     stepsize: StepSize,
+    strategy: Box<dyn Strategy>,
     /// The shared applied-update count (`Shared::k`) observed the last
     /// time this node applied an update — the baseline for the
-    /// gradient-staleness histogram (`obs::Hist::StalenessTicks`).
+    /// gradient-staleness histogram (`obs::Hist::StalenessTicks`) and
+    /// the staleness signal delay-aware strategies consume.
     last_k: u64,
 }
 
@@ -398,10 +399,12 @@ pub fn spawn_shard_with_feeds(
         } else {
             cfg.stepsize
         };
+        let strategy = a.strategy.build(stepsize.at(0));
         tasks.push(Task {
             logic,
             rate_hz: rate,
             stepsize,
+            strategy,
             last_k: 0,
         });
     }
@@ -433,7 +436,12 @@ pub fn spawn_shard_with_feeds(
 /// to first order).
 fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
     let stepsize = task.stepsize;
-    let logic = &mut task.logic;
+    let Task {
+        logic,
+        strategy,
+        last_k,
+        ..
+    } = task;
     let id = logic.id;
     let objective = logic.objective();
     let scale = logic.grad_scale();
@@ -453,7 +461,11 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
     }
     let k = ctx.shared.k.load(Ordering::Relaxed);
     let lr = stepsize.at(k);
-    match logic.draw_action() {
+    // Staleness in applied-update ticks since this node's own last
+    // applied update — computed before the action draw so the obs
+    // histogram and the delay-aware strategies read one signal.
+    let staleness = k.saturating_sub(*last_k);
+    match strategy.draw_action(logic) {
         Action::Grad => {
             // A streaming shard whose first block is still in flight
             // cannot step yet: skip and redraw (the node can still join
@@ -461,10 +473,13 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
             if !logic.has_data() {
                 return true;
             }
-            // Local gradient step: only our own variable (Eq. 6).
-            match &ctx.executor {
-                None => ctx.transport.update_own(id, &mut |w| {
-                    logic.native_grad_step(w, lr);
+            // Local step on our own variable: Eq. (6) for the baseline,
+            // the strategy's rule otherwise. Compiled PJRT steps encode
+            // exactly the baseline's math, so every other strategy runs
+            // the native path even when an executor is attached.
+            match ctx.executor.as_ref().filter(|_| strategy.pjrt_compatible()) {
+                None => ctx.transport.update_own_with_aux(id, &mut |w, aux| {
+                    strategy.local_step(logic, w, aux, lr, staleness);
                 }),
                 Some((h, arts)) => {
                     let batch = arts
@@ -498,15 +513,12 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
                             .fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
                         ctx.shared.k.fetch_add(STEP_BATCH as u64, Ordering::Relaxed);
                         crate::obs::add(crate::obs::Counter::B8Collapses, 1);
-                        crate::obs::observe(
-                            crate::obs::Hist::StalenessTicks,
-                            k.saturating_sub(task.last_k),
-                        );
+                        crate::obs::observe(crate::obs::Hist::StalenessTicks, staleness);
                         crate::obs::observe(
                             crate::obs::Hist::FireToApplyUs,
                             fired_at.elapsed().as_micros() as u64,
                         );
-                        task.last_k = k;
+                        *last_k = k;
                         crate::obs::trace("node", "grad_b8", id as u64, owed);
                         return true;
                     }
@@ -525,15 +537,12 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
             }
             ctx.shared.grad_steps.fetch_add(1, Ordering::Relaxed);
             ctx.shared.k.fetch_add(1, Ordering::Relaxed);
-            crate::obs::observe(
-                crate::obs::Hist::StalenessTicks,
-                k.saturating_sub(task.last_k),
-            );
+            crate::obs::observe(crate::obs::Hist::StalenessTicks, staleness);
             crate::obs::observe(
                 crate::obs::Hist::FireToApplyUs,
                 fired_at.elapsed().as_micros() as u64,
             );
-            task.last_k = k;
+            *last_k = k;
             crate::obs::trace("node", "grad", id as u64, owed);
         }
         Action::Project => {
@@ -558,17 +567,20 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
                 .executor
                 .as_ref()
                 .and_then(|(h, arts)| arts.gossip.as_ref().map(|g| (h, g, arts)));
-            let outcome = ctx.transport.try_project(id, &hood, hold, &mut |rows| {
-                // Compiled Eq. (7) when the artifact's padding fits,
-                // native averaging otherwise (identical semantics).
-                let staged = gossip.and_then(|(h, artifact, arts)| {
-                    let k = objective.param_len(ctx.dim, ctx.classes);
-                    arts.stage_gossip(rows, k)
-                        .and_then(|(p, wts)| h.execute_f32(artifact, &[&p, &wts]).ok())
-                });
+            let outcome = ctx.transport.try_project(id, &hood, hold, &mut |rows, aux_rows| {
+                // Compiled Eq. (7) when the artifact's padding fits and
+                // the strategy's mix *is* the plain neighborhood average;
+                // the strategy's native mix rule otherwise.
+                let staged = gossip
+                    .filter(|_| strategy.pjrt_compatible())
+                    .and_then(|(h, artifact, arts)| {
+                        let k = objective.param_len(ctx.dim, ctx.classes);
+                        arts.stage_gossip(rows, k)
+                            .and_then(|(p, wts)| h.execute_f32(artifact, &[&p, &wts]).ok())
+                    });
                 match staged {
-                    Some(outs) => outs.into_iter().next().unwrap(),
-                    None => neighborhood_average(rows),
+                    Some(outs) => (outs.into_iter().next().unwrap(), Vec::new()),
+                    None => strategy.mix(rows, aux_rows),
                 }
             });
             match outcome {
@@ -578,15 +590,12 @@ fn fire_node(ctx: &FireCtx, task: &mut Task, owed: u64) -> bool {
                         .fetch_add(projection_messages(participants), Ordering::Relaxed);
                     ctx.shared.proj_steps.fetch_add(1, Ordering::Relaxed);
                     ctx.shared.k.fetch_add(1, Ordering::Relaxed);
-                    crate::obs::observe(
-                        crate::obs::Hist::StalenessTicks,
-                        k.saturating_sub(task.last_k),
-                    );
+                    crate::obs::observe(crate::obs::Hist::StalenessTicks, staleness);
                     crate::obs::observe(
                         crate::obs::Hist::FireToApplyUs,
                         fired_at.elapsed().as_micros() as u64,
                     );
-                    task.last_k = k;
+                    *last_k = k;
                     crate::obs::trace("node", "apply", id as u64, participants as u64);
                 }
                 ProjectionOutcome::Conflict => {

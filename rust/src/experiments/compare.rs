@@ -1,0 +1,232 @@
+//! Head-to-head strategy comparison: every requested update strategy
+//! runs the *same* event-driven SimNet schedule — identical seed,
+//! shards, topology, speeds, latency/drop/partition model, stepsize and
+//! evaluation cadence — so the consensus and accuracy curves differ
+//! only by the update rule. The dump is one CSV holding every
+//! strategy's full time series, tagged by a trailing `strategy` column
+//! appended to the canonical run schema (append-only, so the shared
+//! columns line up with every other run CSV).
+//!
+//! With the baseline included (`dasgd`), its curve is bit-identical to
+//! a plain `dasgd sim` run of the same schedule: the strategy layer
+//! adds no RNG draws and the baseline's math is byte-for-byte Eq.
+//! (6)/(7).
+
+use std::path::Path;
+
+use crate::experiments::make_regular;
+use crate::metrics::{run_schema, Recorder, Table};
+use crate::node_logic::StrategyKind;
+use crate::objective::Objective;
+use crate::sim::{simnet_run_plan, SimConfig, SpeedModel};
+use crate::transport::SimNetConfig;
+use crate::workload::WorkloadPlan;
+
+/// One fixed schedule shared by every strategy in the comparison.
+#[derive(Clone, Debug)]
+pub struct CompareConfig {
+    /// The strategies to race (deduplicated order is the caller's).
+    pub strategies: Vec<StrategyKind>,
+    pub n: usize,
+    pub degree: usize,
+    /// The §II loss family every node optimizes.
+    pub objective: Objective,
+    pub p_grad: f64,
+    /// Virtual seconds to simulate.
+    pub horizon: f64,
+    pub eval_every: f64,
+    /// The network model (latency / drops / partitions).
+    pub net: SimNetConfig,
+    pub seed: u64,
+    pub samples_per_node: usize,
+    pub test_n: usize,
+}
+
+impl CompareConfig {
+    /// All four strategies on a small lossy schedule (CI-sized).
+    pub fn quick(seed: u64) -> Self {
+        Self {
+            strategies: StrategyKind::ALL.to_vec(),
+            n: 12,
+            degree: 4,
+            objective: Objective::LogReg,
+            p_grad: 0.5,
+            horizon: 40.0,
+            eval_every: 10.0,
+            net: SimNetConfig::ideal(0.002),
+            seed,
+            samples_per_node: 40,
+            test_n: 256,
+        }
+    }
+}
+
+/// One strategy's full curve plus its headline numbers.
+#[derive(Debug)]
+pub struct CompareCurve {
+    pub strategy: StrategyKind,
+    pub recorder: Recorder,
+    pub updates: u64,
+    pub grad_steps: u64,
+    pub proj_steps: u64,
+    /// Final d^k consensus distance.
+    pub consensus: f64,
+    /// Final prediction error at β̄.
+    pub test_err: f64,
+}
+
+/// Run every strategy over the shared schedule.
+pub fn run(cfg: &CompareConfig) -> crate::Result<Vec<CompareCurve>> {
+    anyhow::ensure!(!cfg.strategies.is_empty(), "no strategies to compare");
+    let g = make_regular(cfg.n, cfg.degree);
+    let speeds = SpeedModel::homogeneous(cfg.n, 1.0);
+    // One world for everyone: the plan is rebuilt per strategy but the
+    // shards, test set, and every seed below are identical.
+    let gen = crate::data::SyntheticGen::paper_default(cfg.n, cfg.seed);
+    let mut rng = crate::util::rng::Xoshiro256pp::seeded(cfg.seed ^ 0xDA7A);
+    let shards: Vec<crate::data::Dataset> = (0..cfg.n)
+        .map(|i| gen.node_dataset(i, cfg.samples_per_node, &mut rng))
+        .collect();
+    let test = gen.global_test_set(cfg.test_n, &mut rng);
+    let sim = SimConfig {
+        p_grad: cfg.p_grad,
+        stepsize: cfg.objective.default_stepsize(cfg.n),
+        objective: cfg.objective,
+        horizon: cfg.horizon,
+        eval_every: cfg.eval_every,
+        net: cfg.net.clone(),
+        seed: cfg.seed,
+    };
+    let mut curves = Vec::with_capacity(cfg.strategies.len());
+    for &kind in &cfg.strategies {
+        let plan = WorkloadPlan::homogeneous(cfg.objective, shards.clone())
+            .with_uniform_strategy(kind);
+        let rep = simnet_run_plan(&g, &plan, &test, &speeds, &sim);
+        let last = *rep.recorder.last().expect("simulation recorded snapshots");
+        curves.push(CompareCurve {
+            strategy: kind,
+            recorder: rep.recorder,
+            updates: rep.updates,
+            grad_steps: rep.grad_steps,
+            proj_steps: rep.proj_steps,
+            consensus: last.consensus,
+            test_err: last.test_err,
+        });
+    }
+    Ok(curves)
+}
+
+/// Dump every curve into one CSV: the canonical run schema plus a
+/// trailing `strategy` tag (append-only, never reordered).
+pub fn write_csv(curves: &[CompareCurve], path: impl AsRef<Path>) -> std::io::Result<()> {
+    let schema = run_schema().with("strategy");
+    let mut w = schema.create(path)?;
+    for c in curves {
+        for r in &c.recorder.records {
+            let mut vals: Vec<String> = r.values().iter().map(|v| format!("{v}")).collect();
+            vals.push(c.strategy.name().to_string());
+            w.row_str(&vals)?;
+        }
+    }
+    w.flush()
+}
+
+/// Render the headline numbers as a table.
+pub fn table(curves: &[CompareCurve]) -> Table {
+    let mut t = Table::new(&["strategy", "updates", "grad", "proj", "d^k", "test err"]);
+    for c in curves {
+        t.row(&[
+            c.strategy.name().to_string(),
+            format!("{}", c.updates),
+            format!("{}", c.grad_steps),
+            format!("{}", c.proj_steps),
+            format!("{:.3}", c.consensus),
+            format!("{:.3}", c.test_err),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_strategies_race_on_one_schedule() {
+        let cfg = CompareConfig::quick(7);
+        let curves = run(&cfg).unwrap();
+        assert_eq!(curves.len(), StrategyKind::ALL.len());
+        for c in &curves {
+            assert!(c.updates > 0, "{}: no updates", c.strategy);
+            assert!(
+                c.consensus.is_finite() && c.test_err.is_finite(),
+                "{}: non-finite outcome",
+                c.strategy
+            );
+        }
+        let _ = table(&curves).render();
+    }
+
+    #[test]
+    fn dasgd_curve_matches_a_plain_sim_of_the_same_schedule() {
+        // The baseline raced through the strategy layer must be
+        // bit-identical to the pre-refactor single-run path.
+        let cfg = CompareConfig {
+            strategies: vec![StrategyKind::Dasgd],
+            ..CompareConfig::quick(11)
+        };
+        let curves = run(&cfg).unwrap();
+        let g = make_regular(cfg.n, cfg.degree);
+        let speeds = SpeedModel::homogeneous(cfg.n, 1.0);
+        let gen = crate::data::SyntheticGen::paper_default(cfg.n, cfg.seed);
+        let mut rng = crate::util::rng::Xoshiro256pp::seeded(cfg.seed ^ 0xDA7A);
+        let shards: Vec<crate::data::Dataset> = (0..cfg.n)
+            .map(|i| gen.node_dataset(i, cfg.samples_per_node, &mut rng))
+            .collect();
+        let test = gen.global_test_set(cfg.test_n, &mut rng);
+        let sim = SimConfig {
+            p_grad: cfg.p_grad,
+            stepsize: cfg.objective.default_stepsize(cfg.n),
+            objective: cfg.objective,
+            horizon: cfg.horizon,
+            eval_every: cfg.eval_every,
+            net: cfg.net.clone(),
+            seed: cfg.seed,
+        };
+        let rep = crate::sim::simnet_run(&g, &shards, &test, &speeds, &sim);
+        assert_eq!(curves[0].updates, rep.updates);
+        assert_eq!(
+            curves[0].recorder.records.len(),
+            rep.recorder.records.len()
+        );
+        for (a, b) in curves[0].recorder.records.iter().zip(&rep.recorder.records) {
+            assert_eq!(a, b, "baseline curve diverged through the strategy layer");
+        }
+    }
+
+    #[test]
+    fn csv_has_one_block_per_strategy_with_the_trailing_tag() {
+        let cfg = CompareConfig {
+            strategies: vec![StrategyKind::Dasgd, StrategyKind::Rfast],
+            horizon: 10.0,
+            eval_every: 5.0,
+            ..CompareConfig::quick(3)
+        };
+        let curves = run(&cfg).unwrap();
+        let path = std::env::temp_dir().join("dasgd_compare_test.csv");
+        write_csv(&curves, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        let header = lines.next().unwrap();
+        assert!(
+            header.ends_with(",strategy"),
+            "strategy must be the appended last column: {header}"
+        );
+        let rows: Vec<&str> = lines.collect();
+        assert!(rows.iter().any(|l| l.ends_with(",dasgd")));
+        assert!(rows.iter().any(|l| l.ends_with(",rfast")));
+        let expect: usize = curves.iter().map(|c| c.recorder.records.len()).sum();
+        assert_eq!(rows.len(), expect);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -89,6 +89,30 @@ pub fn table(rows: &[HetRow]) -> Table {
     t
 }
 
+/// Dump the sweep as CSV. The column order is an append-only
+/// [`Schema`](crate::util::csv::Schema) — extensions go at the end,
+/// exactly like the run time-series and the compare dump.
+pub fn write_csv(rows: &[HetRow], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    let schema = crate::util::csv::Schema::new(&[
+        "plan",
+        "updates",
+        "proj_steps",
+        "consensus",
+        "test_err",
+    ]);
+    let mut w = schema.create(path)?;
+    for r in rows {
+        w.row_str(&[
+            r.label.clone(),
+            format!("{}", r.updates),
+            format!("{}", r.proj_steps),
+            format!("{}", r.consensus),
+            format!("{}", r.test_err),
+        ])?;
+    }
+    w.flush()
+}
+
 /// Shape notes: rising skew should not stall the run, and the near-IID
 /// point should be at least as easy as the pathological one.
 pub fn check_shape(rows: &[HetRow]) -> Vec<String> {

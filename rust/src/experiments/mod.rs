@@ -5,6 +5,7 @@
 //! (scale = 1.0 reproduces the paper's budgets).
 
 pub mod ablations;
+pub mod compare;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;

@@ -7,8 +7,9 @@ use dasgd::cli::{self, Args};
 use dasgd::coordinator::{AsyncCluster, AsyncConfig, EngineKind, Objective, PjrtArtifacts, StepSize};
 use dasgd::data::stream::DEFAULT_BLOCK_ROWS;
 use dasgd::data::{ascii_art, load_libsvm, render_glyph, GlyphStyle, LibsvmOptions, NotMnistGen};
-use dasgd::experiments::{self, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
+use dasgd::experiments::{self, compare, fig2, fig3, fig4, fig6, heterogeneity, lemma1, straggler};
 use dasgd::metrics::Table;
+use dasgd::node_logic::StrategyKind;
 use dasgd::net::{
     run_join_worker, run_launch, run_worker, LaunchConfig, WorkerConfig, WorkerPlanSource,
 };
@@ -40,6 +41,13 @@ Ablations / extensions:
   straggler   async vs sync DSGD vs server-worker in virtual time
   heterogeneity  consensus/error vs per-node skew: Dirichlet label-skew
               sweep, quantity skew, feature shift, mixed hinge+lasso
+  compare     strategy zoo head-to-head: every --strategies entry runs
+              the *same* SimNet seed/latency/drop/partition schedule;
+              one CSV holds every consensus+accuracy curve, tagged by a
+              trailing strategy column (--strategies a,b,... --nodes N
+              --degree K --horizon S --latency-ms L --jitter-ms J
+              --drop-prob P --partition T0:T1:CUT --samples M
+              --objective ... --csv PATH)
 
 System:
   train       one Alg. 2 run (--nodes N --degree K --iters I
@@ -97,6 +105,13 @@ alternating hinge/lasso objectives). --dirichlet-alpha A is the
 Dirichlet skew knob (default 0.5, must be > 0); feature-shift's offset
 scale has its own flag, --shift-sigma S (when omitted, α doubles as σ —
 the legacy fallback). See docs/heterogeneity.md.
+
+Update strategies (--strategy, on cluster / sim / launch / worker):
+dasgd (the paper's Alg. 2 baseline, default), dcasgd (Taylor delay
+compensation), delay-agnostic (staleness-keyed fixed stepsize), rfast
+(gossiped gradient tracking). launch ships each node's strategy to its
+worker inside PlanAssign; train runs the figure trainer and accepts
+only dasgd. See docs/algorithms.md for the math and the trait contract.
 
 Common flags:
   --scale S   fraction of the paper's iteration budget (default 1.0)
@@ -210,6 +225,50 @@ fn libsvm_world(
 fn parse_objective(args: &Args) -> anyhow::Result<Objective> {
     let name = args.get_str("objective", "logreg");
     Objective::parse(name).ok_or_else(|| unknown_value("objective", name, &Objective::NAMES))
+}
+
+/// Parse `--strategy`, rejecting unknown names with a suggestion.
+fn parse_strategy(args: &Args) -> anyhow::Result<StrategyKind> {
+    let name = args.get_str("strategy", StrategyKind::Dasgd.name());
+    StrategyKind::parse(name).ok_or_else(|| unknown_value("strategy", name, &StrategyKind::NAMES))
+}
+
+/// Parse the `--strategies` list for `compare` (comma-separated,
+/// deduplicated in the order given, same did-you-mean as `--strategy`).
+fn parse_strategies(args: &Args) -> anyhow::Result<Vec<StrategyKind>> {
+    let list = args.get_str("strategies", "dasgd,dcasgd,delay-agnostic,rfast");
+    let mut strategies = Vec::new();
+    for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let Some(kind) = StrategyKind::parse(name) else {
+            return Err(unknown_value("strategies entry", name, &StrategyKind::NAMES));
+        };
+        if !strategies.contains(&kind) {
+            strategies.push(kind);
+        }
+    }
+    if strategies.is_empty() {
+        anyhow::bail!("--strategies names at least one strategy (got {list:?})");
+    }
+    Ok(strategies)
+}
+
+/// Parse `--partition T0:T1:CUT` — sever edges across {<CUT} | {>=CUT}
+/// for virtual time [T0, T1). Shared by `sim` and `compare`.
+fn parse_partitions(args: &Args) -> anyhow::Result<Vec<PartitionWindow>> {
+    match args.get("partition") {
+        None => Ok(Vec::new()),
+        Some(spec) => {
+            let parts: Vec<&str> = spec.split(':').collect();
+            let [t0, t1, cut] = parts.as_slice() else {
+                anyhow::bail!("--partition wants T0:T1:CUT, got {spec:?}");
+            };
+            Ok(vec![PartitionWindow {
+                start_secs: t0.parse().map_err(|e| anyhow::anyhow!("T0 {t0:?}: {e}"))?,
+                end_secs: t1.parse().map_err(|e| anyhow::anyhow!("T1 {t1:?}: {e}"))?,
+                boundary: cut.parse().map_err(|e| anyhow::anyhow!("CUT {cut:?}: {e}"))?,
+            }])
+        }
+    }
 }
 
 /// Validate the skew knobs against the chosen plan name: α must be a
@@ -344,6 +403,20 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
     Some(match cmd {
         "fig2" | "fig3" | "fig4" | "fig6" | "lemma1" | "glyphs" | "losses" | "comm"
         | "conflicts" | "topology" | "straggler" | "heterogeneity" | "artifacts" => &[],
+        "compare" => &[
+            "strategies",
+            "nodes",
+            "degree",
+            "horizon",
+            "eval-every",
+            "latency-ms",
+            "jitter-ms",
+            "drop-prob",
+            "partition",
+            "objective",
+            "samples",
+            "csv",
+        ],
         "train" => &[
             "nodes",
             "degree",
@@ -351,6 +424,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "backend",
             "dataset",
             "objective",
+            "strategy",
             "csv",
             "metrics-jsonl",
             "trace-jsonl",
@@ -367,6 +441,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "backend",
             "transport",
             "executors",
+            "strategy",
             "plan",
             "dirichlet-alpha",
             "shift-sigma",
@@ -384,6 +459,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "drop-prob",
             "partition",
             "objective",
+            "strategy",
             "samples",
             "straggle",
             "plan",
@@ -403,6 +479,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "eval-every",
             "rate",
             "objective",
+            "strategy",
             "plan",
             "dirichlet-alpha",
             "shift-sigma",
@@ -432,6 +509,7 @@ fn extra_flags(cmd: &str) -> Option<&'static [&'static str]> {
             "secs",
             "rate",
             "objective",
+            "strategy",
             "plan",
             "dirichlet-alpha",
             "shift-sigma",
@@ -532,6 +610,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             heterogeneity::table(&rows).print();
             print_notes(&heterogeneity::check_shape(&rows));
         }
+        Some("compare") => cmd_compare(args, scale, seed)?,
         Some("train") => cmd_train(args, scale, seed)?,
         Some("cluster") => cmd_cluster(args, seed)?,
         Some("sim") => cmd_sim(args, scale, seed)?,
@@ -564,6 +643,72 @@ fn run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Head-to-head strategy comparison: every `--strategies` entry runs
+/// the same SimNet schedule (identical seed/latency/drop/partition),
+/// so the curves differ only by update rule; one CSV holds them all.
+fn cmd_compare(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
+    let strategies = parse_strategies(args)?;
+    let n = args.get_usize("nodes", 12).map_err(anyhow::Error::msg)?;
+    let degree = args.get_usize("degree", 4).map_err(anyhow::Error::msg)?;
+    let horizon = args
+        .get_f64("horizon", 40.0 * scale.max(0.05))
+        .map_err(anyhow::Error::msg)?;
+    let eval_every = args
+        .get_f64("eval-every", horizon / 8.0)
+        .map_err(anyhow::Error::msg)?;
+    if !(horizon.is_finite() && horizon > 0.0 && eval_every.is_finite() && eval_every > 0.0) {
+        anyhow::bail!("--horizon and --eval-every must be > 0 (got {horizon}, {eval_every})");
+    }
+    let latency_ms = args.get_f64("latency-ms", 2.0).map_err(anyhow::Error::msg)?;
+    let jitter_ms = args.get_f64("jitter-ms", 0.0).map_err(anyhow::Error::msg)?;
+    let drop_prob = args.get_f64("drop-prob", 0.0).map_err(anyhow::Error::msg)?;
+    if !(0.0..=1.0).contains(&drop_prob) {
+        anyhow::bail!("--drop-prob must be in [0, 1], got {drop_prob}");
+    }
+    let samples = parse_samples(args, 40)?;
+    let objective = parse_objective(args)?;
+    let partitions = parse_partitions(args)?;
+    let cfg = compare::CompareConfig {
+        strategies,
+        n,
+        degree,
+        objective,
+        p_grad: 0.5,
+        horizon,
+        eval_every,
+        net: SimNetConfig {
+            latency: LatencyModel {
+                min_secs: latency_ms / 2000.0, // edges span [L/2, L] ms
+                max_secs: latency_ms / 1000.0,
+                jitter_secs: jitter_ms / 1000.0,
+            },
+            drop_prob,
+            partitions,
+            seed,
+        },
+        seed,
+        samples_per_node: samples,
+        test_n: 512,
+    };
+    println!(
+        "compare: {} on one schedule — {n} nodes, degree {degree}, horizon {horizon}s, \
+         latency ≤{latency_ms}ms, drop {:.1}%, objective {objective}",
+        cfg.strategies
+            .iter()
+            .map(|s| s.name())
+            .collect::<Vec<_>>()
+            .join(" vs "),
+        drop_prob * 100.0,
+    );
+    let curves = compare::run(&cfg)?;
+    compare::table(&curves).print();
+    if let Some(csv) = args.get("csv") {
+        compare::write_csv(&curves, csv)?;
+        println!("wrote {csv} (one block per strategy, trailing strategy column)");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     use dasgd::coordinator::{Backend, TrainConfig};
     let metrics_jsonl = apply_obs_flags(args)?;
@@ -578,6 +723,16 @@ fn cmd_train(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         other => return Err(unknown_value("backend", other, &["native", "pjrt"])),
     };
     let objective = parse_objective(args)?;
+    // The figure trainer is the paper baseline; the strategy zoo lives
+    // in the asynchronous engines. Validate (with did-you-mean) rather
+    // than silently ignore.
+    let strategy = parse_strategy(args)?;
+    if strategy != StrategyKind::Dasgd {
+        anyhow::bail!(
+            "train runs the figure trainer, which is the paper baseline only — \
+             use `cluster`, `sim`, `launch`, or `compare` for --strategy {strategy}"
+        );
+    }
     let dataset = args.get_str("dataset", "synth");
     let (shards, test) = match parse_dataset(dataset)? {
         ("notmnist", _) => fig6::notmnist_world(n, 400, 512, seed),
@@ -654,8 +809,10 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
         ));
     };
     let executors = args.get_usize("executors", 0).map_err(anyhow::Error::msg)?;
+    let strategy = parse_strategy(args)?;
     let plan_spec = parse_plan(args)?;
     let (plan, test) = plan_spec.build(Objective::LogReg, n, 300, 512, seed);
+    let plan = plan.with_uniform_strategy(strategy);
     let mut cluster = AsyncCluster::from_plan(experiments::make_regular(n, degree), plan);
     let _service: Option<ExecutorService>;
     if backend_name == "pjrt" {
@@ -691,6 +848,9 @@ fn cmd_cluster(args: &Args, seed: u64) -> anyhow::Result<()> {
         transport.name(),
         plan_spec.name()
     );
+    if strategy != StrategyKind::Dasgd {
+        println!("  update strategy: {strategy}");
+    }
     let rep = cluster.run(&cfg, &test)?;
     let mut t = Table::new(&["t (s)", "k", "d^k", "test err", "conflicts"]);
     for r in &rep.recorder.records {
@@ -748,25 +908,12 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
     let samples = parse_samples(args, 60)?;
     let straggle = args.get_f64("straggle", 1.0).map_err(anyhow::Error::msg)?;
     let objective = parse_objective(args)?;
-    // --partition T0:T1:CUT — sever edges across {<CUT} | {>=CUT} for
-    // virtual time [T0, T1).
-    let partitions = match args.get("partition") {
-        None => Vec::new(),
-        Some(spec) => {
-            let parts: Vec<&str> = spec.split(':').collect();
-            let [t0, t1, cut] = parts.as_slice() else {
-                anyhow::bail!("--partition wants T0:T1:CUT, got {spec:?}");
-            };
-            vec![PartitionWindow {
-                start_secs: t0.parse().map_err(|e| anyhow::anyhow!("T0 {t0:?}: {e}"))?,
-                end_secs: t1.parse().map_err(|e| anyhow::anyhow!("T1 {t1:?}: {e}"))?,
-                boundary: cut.parse().map_err(|e| anyhow::anyhow!("CUT {cut:?}: {e}"))?,
-            }]
-        }
-    };
+    let strategy = parse_strategy(args)?;
+    let partitions = parse_partitions(args)?;
 
     let plan_spec = parse_plan(args)?;
     let (plan, test) = plan_spec.build(objective, n, samples, 512, seed);
+    let plan = plan.with_uniform_strategy(strategy);
     let g = experiments::make_regular(n, degree);
     let speeds = if straggle > 1.0 {
         SpeedModel::with_stragglers(n, 1.0, (n / 10).max(1), straggle)
@@ -797,6 +944,9 @@ fn cmd_sim(args: &Args, scale: f64, seed: u64) -> anyhow::Result<()> {
         drop_prob * 100.0,
         plan_spec.name()
     );
+    if strategy != StrategyKind::Dasgd {
+        println!("  update strategy: {strategy}");
+    }
     let wall = std::time::Instant::now();
     let rep = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
     let wall = wall.elapsed().as_secs_f64();
@@ -849,6 +999,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let rate = args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?;
     let objective = parse_objective(args)?;
+    let strategy = parse_strategy(args)?;
     let plan = parse_plan(args)?;
     let samples = parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?;
     let staging_mb = args
@@ -926,6 +1077,7 @@ fn cmd_launch(args: &Args, seed: u64) -> anyhow::Result<()> {
         eval_every_secs: eval_every,
         rate_hz: rate,
         objective,
+        strategy,
         plan,
         samples_per_node: samples,
         seed,
@@ -1068,6 +1220,7 @@ fn cmd_worker(args: &Args, seed: u64) -> anyhow::Result<()> {
         secs: args.get_f64("secs", 30.0).map_err(anyhow::Error::msg)?,
         rate_hz: args.get_f64("rate", 300.0).map_err(anyhow::Error::msg)?,
         objective: parse_objective(args)?,
+        strategy: parse_strategy(args)?,
         plan,
         samples_per_node: parse_samples(args, dasgd::net::SAMPLES_PER_NODE)?,
         seed,

@@ -3,5 +3,5 @@
 mod recorder;
 mod table;
 
-pub use recorder::{Record, Recorder};
+pub use recorder::{run_schema, Record, Recorder};
 pub use table::Table;

@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use crate::util::csv::CsvWriter;
+use crate::util::csv::Schema;
 
 /// One evaluation snapshot of a training run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -33,6 +33,49 @@ pub struct Record {
     pub staleness_p99: f64,
     /// Streaming staging high-water in bytes at snapshot time.
     pub staging_bytes: u64,
+}
+
+impl Record {
+    /// Column names of [`Record::values`], in order — the append-only
+    /// base of every run CSV (extensions like the compare dump's
+    /// trailing `strategy` column go through [`run_schema`]`.with(..)`).
+    pub const COLUMNS: [&'static str; 12] = [
+        "k",
+        "time_secs",
+        "consensus",
+        "test_loss",
+        "test_err",
+        "grad_steps",
+        "proj_steps",
+        "messages",
+        "conflicts",
+        "staleness_p50",
+        "staleness_p99",
+        "staging_bytes",
+    ];
+
+    /// The row values matching [`Record::COLUMNS`] position for position.
+    pub fn values(&self) -> [f64; 12] {
+        [
+            self.k as f64,
+            self.time_secs,
+            self.consensus,
+            self.test_loss,
+            self.test_err,
+            self.grad_steps as f64,
+            self.proj_steps as f64,
+            self.messages as f64,
+            self.conflicts as f64,
+            self.staleness_p50,
+            self.staleness_p99,
+            self.staging_bytes as f64,
+        ]
+    }
+}
+
+/// The canonical run time-series schema ([`Record::COLUMNS`]).
+pub fn run_schema() -> Schema {
+    Schema::new(&Record::COLUMNS)
 }
 
 /// A named series of [`Record`]s.
@@ -72,40 +115,11 @@ impl Recorder {
             .map(|r| r.k)
     }
 
-    /// Dump as CSV.
+    /// Dump as CSV (the canonical [`run_schema`]).
     pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        let mut w = CsvWriter::create(
-            path,
-            &[
-                "k",
-                "time_secs",
-                "consensus",
-                "test_loss",
-                "test_err",
-                "grad_steps",
-                "proj_steps",
-                "messages",
-                "conflicts",
-                "staleness_p50",
-                "staleness_p99",
-                "staging_bytes",
-            ],
-        )?;
+        let mut w = run_schema().create(path)?;
         for r in &self.records {
-            w.row(&[
-                r.k as f64,
-                r.time_secs,
-                r.consensus,
-                r.test_loss,
-                r.test_err,
-                r.grad_steps as f64,
-                r.proj_steps as f64,
-                r.messages as f64,
-                r.conflicts as f64,
-                r.staleness_p50,
-                r.staleness_p99,
-                r.staging_bytes as f64,
-            ])?;
+            w.row(&r.values())?;
         }
         w.flush()
     }

@@ -59,7 +59,7 @@ use crate::data::Dataset;
 use crate::experiments::make_regular;
 use crate::membership::Membership;
 use crate::metrics::Recorder;
-use crate::node_logic::{Counts, Probe};
+use crate::node_logic::{Counts, Probe, StrategyKind};
 use crate::objective::Objective;
 use crate::transport::{Transport, TransportKind};
 use crate::util::Stopwatch;
@@ -172,6 +172,7 @@ pub fn plan_assign_msg(id: usize, a: &NodeAssignment) -> WireMsg {
         classes: a.shard.classes() as u32,
         labels: a.shard.labels().iter().map(|&l| l as u32).collect(),
         features: a.shard.features_flat().to_vec(),
+        strategy: a.strategy.code(),
     }
 }
 
@@ -187,6 +188,7 @@ pub fn assignment_from_msg(msg: &WireMsg) -> Result<(usize, NodeAssignment)> {
         classes,
         labels,
         features,
+        strategy,
     } = msg
     else {
         bail!("not a PlanAssign frame");
@@ -197,6 +199,9 @@ pub fn assignment_from_msg(msg: &WireMsg) -> Result<(usize, NodeAssignment)> {
     }
     let Some(objective) = objective_from_code(*obj_code, *lam) else {
         bail!("unknown objective code {obj_code}");
+    };
+    let Some(strategy) = StrategyKind::from_code(*strategy) else {
+        bail!("unknown strategy code {strategy}");
     };
     if features.len() != labels.len() * dim {
         bail!(
@@ -213,7 +218,14 @@ pub fn assignment_from_msg(msg: &WireMsg) -> Result<(usize, NodeAssignment)> {
         }
         shard.push(&features[i * dim..(i + 1) * dim], label);
     }
-    Ok((*node as usize, NodeAssignment { objective, shard }))
+    Ok((
+        *node as usize,
+        NodeAssignment {
+            objective,
+            shard,
+            strategy,
+        },
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -251,6 +263,9 @@ pub struct WorkerConfig {
     /// base); per-node objectives of a shipped or mixed plan supersede
     /// it.
     pub objective: Objective,
+    /// The uniform update strategy for local plan specs (`--strategy`);
+    /// per-node strategies of a shipped plan supersede it.
+    pub strategy: StrategyKind,
     pub plan: WorkerPlanSource,
     /// Samples per node for locally-derived plans (ignored for
     /// `--plan wire`, where the launcher decides).
@@ -422,6 +437,7 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
                 TEST_SAMPLES,
                 cfg.seed,
             );
+            let plan = plan.with_uniform_strategy(cfg.strategy);
             let param_len = plan.param_len();
             (Some(plan), param_len)
         }
@@ -917,6 +933,7 @@ pub fn run_join_worker(join_addr: &str, leave_after: Option<f64>) -> Result<Work
         executors,
         flush_bytes,
         flush_micros,
+        strategy,
         mut peers,
     } = grant
     else {
@@ -929,6 +946,11 @@ pub fn run_join_worker(join_addr: &str, leave_after: Option<f64>) -> Result<Work
     }
     let Some(objective) = objective_from_code(obj_code, lam) else {
         bail!("JoinGrant carries unknown objective code {obj_code}");
+    };
+    // The deployment's uniform strategy; the per-node assignments that
+    // follow on this connection carry the authoritative values.
+    let Some(strategy) = StrategyKind::from_code(strategy) else {
+        bail!("JoinGrant carries unknown strategy code {strategy}");
     };
     let staging_limit = (staging_mb as usize)
         .saturating_mul(1 << 20)
@@ -963,7 +985,7 @@ pub fn run_join_worker(join_addr: &str, leave_after: Option<f64>) -> Result<Work
         addr: net.local_addr().to_string(),
     })
     .map_err(|e| anyhow!("sending JoinReady: {e}"))?;
-    crate::obs::trace("worker", "join", rank as u64, 0);
+    crate::obs::trace("worker", "join", rank as u64, strategy.code() as u64);
 
     let deadline = Instant::now() + Duration::from_secs_f64(secs.max(0.1));
     let (plan, streaming) = receive_plan_on(&mut conn, nodes, param_len, deadline)
@@ -1056,6 +1078,9 @@ pub struct LaunchConfig {
     pub rate_hz: f64,
     /// The uniform loss family (superseded per node by `mixed` plans).
     pub objective: Objective,
+    /// The uniform update strategy (`--strategy`), shipped per node
+    /// inside `PlanAssign` and forwarded to workers on their CLI.
+    pub strategy: StrategyKind,
     /// The workload recipe; the launcher builds it once and ships each
     /// worker its owned shards over the wire.
     pub plan: PlanSpec,
@@ -1125,6 +1150,7 @@ impl LaunchConfig {
             eval_every_secs: 0.25,
             rate_hz: 300.0,
             objective: Objective::LogReg,
+            strategy: StrategyKind::Dasgd,
             plan: PlanSpec::Synth,
             samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
@@ -1282,6 +1308,7 @@ fn admit_join(
         executors: cfg.executors as u32,
         flush_bytes: cfg.flush_bytes as u32,
         flush_micros: cfg.flush_micros,
+        strategy: cfg.strategy.code(),
         peers: peers.to_vec(),
     })
     .map_err(|e| anyhow!("sending JoinGrant: {e}"))?;
@@ -1323,6 +1350,7 @@ fn admit_join(
             classes: shard.classes() as u32,
             labels: Vec::new(),
             features: Vec::new(),
+            strategy: plan.strategy(id).code(),
         };
         let sum = wire::message_checksum(&msg)
             .map_err(|e| anyhow!("encoding node {id}'s assignment: {e}"))?;
@@ -1479,6 +1507,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
             cfg.seed,
         ),
     };
+    let plan = plan.with_uniform_strategy(cfg.strategy);
     let param_len = plan.param_len();
     let shard_map = ShardMap::new(cfg.nodes, cfg.workers);
     // Carve every rank's outbound shard stream up front: per-node block
@@ -1560,6 +1589,8 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 &format!("{}", cfg.rate_hz),
                 "--objective",
                 cfg.objective.name(),
+                "--strategy",
+                cfg.strategy.name(),
                 "--plan",
                 "wire",
                 "--param-len",
@@ -1648,6 +1679,7 @@ pub fn run_launch(cfg: &LaunchConfig) -> Result<LaunchReport> {
                 classes: shard.classes() as u32,
                 labels: Vec::new(),
                 features: Vec::new(),
+                strategy: plan.strategy(id).code(),
             };
             // message_checksum re-encodes the body write_msg encodes
             // again (and the worker re-encodes once to verify). That
@@ -2222,6 +2254,7 @@ mod tests {
             secs: 0.1,
             rate_hz: 100.0,
             objective: Objective::LogReg,
+            strategy: StrategyKind::Dasgd,
             plan: WorkerPlanSource::Local(PlanSpec::Synth),
             samples_per_node: SAMPLES_PER_NODE,
             seed: 0,
@@ -2251,6 +2284,10 @@ mod tests {
     fn plan_assignments_round_trip_the_wire_codec() {
         let (plan, _) =
             PlanSpec::Mixed { alpha: 0.3 }.build(Objective::LogReg, 4, 40, 16, 77);
+        // Exercise per-node strategies, not just the baseline.
+        let plan = plan
+            .with_node_strategy(1, StrategyKind::Dcasgd)
+            .with_node_strategy(3, StrategyKind::Rfast);
         for id in 0..plan.len() {
             let msg = plan_assign_msg(id, plan.node(id));
             let frame = wire::encode(&msg).unwrap();
@@ -2258,6 +2295,7 @@ mod tests {
             let (rid, a) = assignment_from_msg(&back).unwrap();
             assert_eq!(rid, id);
             assert_eq!(a.objective.name(), plan.objective(id).name());
+            assert_eq!(a.strategy, plan.strategy(id));
             assert_eq!(a.shard.labels(), plan.shard(id).labels());
             assert_eq!(a.shard.features_flat(), plan.shard(id).features_flat());
         }
@@ -2274,6 +2312,7 @@ mod tests {
             classes: 2,
             labels: vec![0, 1],
             features: vec![0.0; 3],
+            strategy: 0,
         };
         assert!(assignment_from_msg(&msg).is_err());
         // Label out of range.
@@ -2285,6 +2324,7 @@ mod tests {
             classes: 2,
             labels: vec![5],
             features: vec![0.0],
+            strategy: 0,
         };
         assert!(assignment_from_msg(&msg).is_err());
         // Unknown objective code.
@@ -2296,6 +2336,19 @@ mod tests {
             classes: 2,
             labels: vec![0],
             features: vec![0.0],
+            strategy: 0,
+        };
+        assert!(assignment_from_msg(&msg).is_err());
+        // Unknown strategy code (this build doesn't speak it).
+        let msg = WireMsg::PlanAssign {
+            node: 0,
+            obj_code: 1,
+            lam: 0.0,
+            dim: 1,
+            classes: 2,
+            labels: vec![0],
+            features: vec![0.0],
+            strategy: 9,
         };
         assert!(assignment_from_msg(&msg).is_err());
         // Not a plan frame at all.

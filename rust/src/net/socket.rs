@@ -132,17 +132,27 @@ impl Default for SocketConfig {
 
 /// Mailbox messages — the ChannelNet protocol vocabulary. Identical
 /// semantics whether a leg traveled in-process or over a wire frame.
+/// `Params`/`Apply` carry the member's strategy aux blob beside `w`
+/// (wire v8) — empty for the baseline.
 enum NodeMsg {
     Collect { from: usize, token: u64 },
-    Params { from: usize, token: u64, w: Vec<f32> },
+    Params { from: usize, token: u64, w: Vec<f32>, aux: Vec<u8> },
     Busy { token: u64 },
-    Apply { from: usize, token: u64, w: Vec<f32> },
+    Apply { from: usize, token: u64, w: Vec<f32>, aux: Vec<u8> },
     Release { from: usize, token: u64 },
 }
+
+/// Largest aux blob accepted off the wire, as a multiple of the
+/// parameter vector's byte size: in-tree strategies publish at most one
+/// f32 vector (`4·param_len` bytes), so ×4 is generous headroom — an
+/// inbound blob past it is corruption, not a strategy.
+const MAX_AUX_FACTOR: usize = 4;
 
 /// One owned node's parameter slot (same state machine as ChannelNet).
 struct Slot {
     w: Vec<f32>,
+    /// The node's published strategy aux blob (travels with `w`).
+    aux: Vec<u8>,
     locked_by: Option<(usize, u64)>,
     locked_at: Option<Instant>,
     initiating: bool,
@@ -151,7 +161,7 @@ struct Slot {
 /// Reply state of an in-flight collect round.
 struct Round {
     token: u64,
-    replies: Vec<(usize, Vec<f32>)>,
+    replies: Vec<(usize, Vec<f32>, Vec<u8>)>,
     busy: bool,
 }
 
@@ -297,6 +307,7 @@ impl SocketNet {
                 .map(|_| {
                     Mutex::new(Slot {
                         w: vec![0.0f32; param_len],
+                        aux: Vec::new(),
                         locked_by: None,
                         locked_at: None,
                         initiating: false,
@@ -670,8 +681,8 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
                 token,
             },
         ),
-        WireMsg::CollectReply { from, to, token, w } => {
-            if w.len() == inner.param_len {
+        WireMsg::CollectReply { from, to, token, w, aux } => {
+            if w.len() == inner.param_len && aux.len() <= MAX_AUX_FACTOR * 4 * inner.param_len {
                 push(
                     from,
                     to,
@@ -679,6 +690,7 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
                         from: from as usize,
                         token,
                         w,
+                        aux,
                     },
                 );
             }
@@ -692,8 +704,8 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
                 token,
             },
         ),
-        WireMsg::ApplyAverage { from, to, token, w } => {
-            if w.len() == inner.param_len {
+        WireMsg::ApplyAverage { from, to, token, w, aux } => {
+            if w.len() == inner.param_len && aux.len() <= MAX_AUX_FACTOR * 4 * inner.param_len {
                 push(
                     from,
                     to,
@@ -701,6 +713,7 @@ fn dispatch(inner: &Inner, msg: WireMsg) {
                         from: from as usize,
                         token,
                         w,
+                        aux,
                     },
                 );
             }
@@ -918,18 +931,20 @@ impl Inner {
         let (f, t) = (from as u32, to as u32);
         let frame = match msg {
             NodeMsg::Collect { token, .. } => WireMsg::CollectRequest { from: f, to: t, token },
-            NodeMsg::Params { token, w, .. } => WireMsg::CollectReply {
+            NodeMsg::Params { token, w, aux, .. } => WireMsg::CollectReply {
                 from: f,
                 to: t,
                 token,
                 w,
+                aux,
             },
             NodeMsg::Busy { token } => WireMsg::Busy { from: f, to: t, token },
-            NodeMsg::Apply { token, w, .. } => WireMsg::ApplyAverage {
+            NodeMsg::Apply { token, w, aux, .. } => WireMsg::ApplyAverage {
                 from: f,
                 to: t,
                 token,
                 w,
+                aux,
             },
             NodeMsg::Release { token, .. } => WireMsg::Abort { from: f, to: t, token },
         };
@@ -965,16 +980,18 @@ impl Inner {
                     } else {
                         slot.locked_by = Some((from, token));
                         slot.locked_at = Some(Instant::now());
-                        Some(slot.w.clone())
+                        Some((slot.w.clone(), slot.aux.clone()))
                     }
                 };
                 match reply {
-                    Some(w) => self.send(id, from, NodeMsg::Params { from: id, token, w }),
+                    Some((w, aux)) => {
+                        self.send(id, from, NodeMsg::Params { from: id, token, w, aux })
+                    }
                     None => self.send(id, from, NodeMsg::Busy { token }),
                 }
             }
-            NodeMsg::Params { from, token, w } => match round {
-                Some(r) if r.token == token => r.replies.push((from, w)),
+            NodeMsg::Params { from, token, w, aux } => match round {
+                Some(r) if r.token == token => r.replies.push((from, w, aux)),
                 // Stale reply: the member is captured by our dead
                 // round's token — free it.
                 _ => self.send(id, from, NodeMsg::Release { from: id, token }),
@@ -986,10 +1003,11 @@ impl Inner {
                     }
                 }
             }
-            NodeMsg::Apply { from, token, w } => {
+            NodeMsg::Apply { from, token, w, aux } => {
                 let mut slot = self.slot(id).lock().unwrap();
                 if slot.locked_by == Some((from, token)) {
                     slot.w = w;
+                    slot.aux = aux;
                     slot.locked_by = None;
                     slot.locked_at = None;
                 }
@@ -1021,6 +1039,12 @@ impl Transport for SocketNet {
         f(&mut slot.w);
     }
 
+    fn update_own_with_aux(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>, &mut Vec<u8>)) {
+        let mut slot = self.inner.slot(id).lock().unwrap();
+        let Slot { w, aux, .. } = &mut *slot;
+        f(w, aux);
+    }
+
     fn busy(&self, id: usize) -> bool {
         self.inner.expire_stale_capture(id);
         self.inner.slot(id).lock().unwrap().locked_by.is_some()
@@ -1045,7 +1069,7 @@ impl Transport for SocketNet {
         id: usize,
         hood: &[usize],
         hold: Duration,
-        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+        mix: &mut dyn FnMut(&[&[f32]], &[&[u8]]) -> (Vec<f32>, Vec<u8>),
     ) -> ProjectionOutcome {
         let inner = &*self.inner;
         debug_assert!(hood.contains(&id));
@@ -1054,13 +1078,13 @@ impl Transport for SocketNet {
             return ProjectionOutcome::Isolated;
         }
         let token = inner.next_token.fetch_add(1, Ordering::Relaxed);
-        let own = {
+        let (own, own_aux) = {
             let mut slot = inner.slot(id).lock().unwrap();
             if slot.locked_by.is_some() {
                 return ProjectionOutcome::Conflict;
             }
             slot.initiating = true;
-            slot.w.clone()
+            (slot.w.clone(), slot.aux.clone())
         };
         let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
         let round_start = Instant::now();
@@ -1093,7 +1117,7 @@ impl Transport for SocketNet {
                 round_start.elapsed().as_micros() as u64,
             );
         } else {
-            for (from, _) in &round.replies {
+            for (from, _, _) in &round.replies {
                 inner.send(id, *from, NodeMsg::Release { from: id, token });
             }
             inner.slot(id).lock().unwrap().initiating = false;
@@ -1102,22 +1126,36 @@ impl Transport for SocketNet {
         if hold > Duration::ZERO {
             std::thread::sleep(hold);
         }
+        // Mix in hood order (self row in place of `id`), params and aux
+        // blobs aligned.
+        let reply_for = |j: usize| {
+            round
+                .replies
+                .iter()
+                .find(|(from, _, _)| *from == j)
+                .expect("complete round has every peer's reply")
+        };
         let rows: Vec<&[f32]> = hood
             .iter()
             .map(|&j| {
                 if j == id {
                     own.as_slice()
                 } else {
-                    round
-                        .replies
-                        .iter()
-                        .find(|(from, _)| *from == j)
-                        .map(|(_, w)| w.as_slice())
-                        .expect("complete round has every peer's reply")
+                    reply_for(j).1.as_slice()
                 }
             })
             .collect();
-        let mean = avg(&rows);
+        let aux_rows: Vec<&[u8]> = hood
+            .iter()
+            .map(|&j| {
+                if j == id {
+                    own_aux.as_slice()
+                } else {
+                    reply_for(j).2.as_slice()
+                }
+            })
+            .collect();
+        let (mean, mean_aux) = mix(&rows, &aux_rows);
         for &j in &peers {
             inner.send(
                 id,
@@ -1126,11 +1164,13 @@ impl Transport for SocketNet {
                     from: id,
                     token,
                     w: mean.clone(),
+                    aux: mean_aux.clone(),
                 },
             );
         }
         let mut slot = inner.slot(id).lock().unwrap();
         slot.w = mean;
+        slot.aux = mean_aux;
         slot.initiating = false;
         ProjectionOutcome::Applied {
             participants: hood.len(),
@@ -1222,8 +1262,8 @@ mod tests {
         b.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
         let stop = Arc::new(AtomicBool::new(false));
         let pumps = vec![pump(&a, vec![0], stop.clone()), pump(&b, vec![2, 3], stop.clone())];
-        let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
+        let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows, _aux| {
+            (neighborhood_average(rows), Vec::new())
         });
         assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
         // Wait for the Apply to land on rank 1's node 2.
@@ -1238,6 +1278,45 @@ mod tests {
         }
         assert_eq!(a.local_params()[0].1, vec![1.0, 2.0]);
         assert_eq!(a.local_params()[1].1, vec![1.0, 2.0]);
+        stop.store(true, Ordering::Relaxed);
+        for p in pumps {
+            p.join().unwrap();
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn aux_blobs_cross_the_wire_with_params() {
+        let (a, b) = pair(1);
+        // Node 2 (rank 1) publishes an aux blob; node 0 (rank 0)
+        // projects over {0, 2}: the blob must cross the wire in the
+        // CollectReply and the mixed blob must land back via the Apply.
+        b.update_own_with_aux(2, &mut |w, aux| {
+            w[0] = 4.0;
+            aux.extend_from_slice(&[1, 2, 3]);
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps = vec![pump(&b, vec![2, 3], stop.clone())];
+        let out = a.try_project(0, &[0, 2], Duration::ZERO, &mut |rows, aux_rows| {
+            assert_eq!(aux_rows, &[&[][..], &[1u8, 2, 3][..]]);
+            (neighborhood_average(rows), vec![7, 7])
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 2 });
+        // Wait for the Apply (with aux) to land on rank 1's node 2.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let mut landed = false;
+            b.update_own_with_aux(2, &mut |w, aux| {
+                landed = w[0] == 2.0 && aux == &vec![7, 7];
+            });
+            if landed {
+                break;
+            }
+            assert!(Instant::now() < deadline, "aux Apply never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        a.update_own_with_aux(0, &mut |_w, aux| assert_eq!(aux, &vec![7, 7]));
         stop.store(true, Ordering::Relaxed);
         for p in pumps {
             p.join().unwrap();
@@ -1268,8 +1347,8 @@ mod tests {
             b.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
             let stop = Arc::new(AtomicBool::new(false));
             let pumps = vec![pump(&a, vec![0], stop.clone()), pump(&b, vec![2, 3], stop.clone())];
-            let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
-                neighborhood_average(rows)
+            let out = a.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows, _aux| {
+                (neighborhood_average(rows), Vec::new())
             });
             assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
             let deadline = Instant::now() + Duration::from_secs(2);
@@ -1298,8 +1377,8 @@ mod tests {
         b.shutdown();
         // A round over the dead peer's node must abort, not hang.
         let t0 = Instant::now();
-        let out = a.try_project(1, &[1, 2], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
+        let out = a.try_project(1, &[1, 2], Duration::ZERO, &mut |rows, _aux| {
+            (neighborhood_average(rows), Vec::new())
         });
         assert_eq!(out, ProjectionOutcome::Conflict);
         assert!(

@@ -81,7 +81,14 @@ use std::io::{Read, Write};
 /// [`HandoffEnd`](WireMsg::HandoffEnd)) — workers join and leave a
 /// running deployment, with topology repair and checksummed state
 /// handoff (see docs/membership.md).
-pub const WIRE_VERSION: u8 = 7;
+/// v8 added the strategy plumbing (see docs/algorithms.md): an opaque
+/// per-node aux blob on [`CollectReply`](WireMsg::CollectReply) and
+/// [`ApplyAverage`](WireMsg::ApplyAverage) (gradient-tracking strategies
+/// gossip their tracker beside `w`; empty for the baseline — zero extra
+/// bytes) and a strategy code on [`PlanAssign`](WireMsg::PlanAssign)
+/// and [`JoinGrant`](WireMsg::JoinGrant) so every worker drives the
+/// node update rule the launcher planned.
+pub const WIRE_VERSION: u8 = 8;
 
 /// Upper bound on one frame's payload (version + tag + body). Small
 /// enough that a garbage length prefix cannot balloon memory; logical
@@ -116,12 +123,15 @@ pub enum WireMsg {
     /// `token` (ChannelNet `Collect` over the wire).
     CollectRequest { from: u32, to: u32, token: u64 },
     /// Member `from` grants the round and ships its parameter vector
-    /// (ChannelNet `Params`).
+    /// plus its opaque strategy aux blob (ChannelNet `Params`). The
+    /// blob is whatever the node's strategy published — a gossiped
+    /// gradient tracker, or empty for the baseline.
     CollectReply {
         from: u32,
         to: u32,
         token: u64,
         w: Vec<f32>,
+        aux: Vec<u8>,
     },
     /// Member `from` refuses: it is captured or itself initiating — the
     /// §IV-C lock-up expressed as a message.
@@ -130,12 +140,14 @@ pub enum WireMsg {
     /// capture and keeps its value (ChannelNet `Release`).
     Abort { from: u32, to: u32, token: u64 },
     /// Initiator `from` completes round `token`: member `to` adopts the
-    /// neighborhood average `w` and unlocks (ChannelNet `Apply`).
+    /// mixed parameters `w` and strategy aux blob `aux` and unlocks
+    /// (ChannelNet `Apply`).
     ApplyAverage {
         from: u32,
         to: u32,
         token: u64,
         w: Vec<f32>,
+        aux: Vec<u8>,
     },
     /// Monitor → worker: report your shard.
     SnapshotRequest,
@@ -169,8 +181,10 @@ pub enum WireMsg {
     /// objective (as a `(code, λ)` pair, see
     /// [`crate::workload::objective_code`]) plus its *actual* data
     /// shard, so workers never regenerate the global world from the
-    /// seed. `features` is row-major `labels.len() × dim`. Ships
-    /// chunked whenever the shard outgrows [`MAX_FRAME_LEN`].
+    /// seed. `features` is row-major `labels.len() × dim`. `strategy`
+    /// is the node's update-rule code (see
+    /// [`crate::node_logic::StrategyKind::code`]). Ships chunked
+    /// whenever the shard outgrows [`MAX_FRAME_LEN`].
     PlanAssign {
         node: u32,
         obj_code: u8,
@@ -179,6 +193,7 @@ pub enum WireMsg {
         classes: u32,
         labels: Vec<u32>,
         features: Vec<f32>,
+        strategy: u8,
     },
     /// Monitor → worker: the plan is fully shipped (`assigned` frames
     /// for a `nodes`-node deployment); start driving the shard.
@@ -287,6 +302,10 @@ pub enum WireMsg {
         executors: u32,
         flush_bytes: u32,
         flush_micros: u64,
+        /// The deployment's update-rule code (see
+        /// [`crate::node_logic::StrategyKind::code`]) — encoded before
+        /// `peers` so the peer table stays the body's final field.
+        strategy: u8,
         peers: Vec<String>,
     },
     /// Joiner → monitor: bound and listening on `addr` as rank `rank`;
@@ -421,8 +440,8 @@ impl std::fmt::Display for WireError {
                 write!(
                     f,
                     "peer speaks wire version {got}, this build speaks {WIRE_VERSION} — \
-                     upgrade the older end (pre-v7 peers cannot speak the metrics \
-                     frames or the elastic-membership protocol)"
+                     upgrade the older end (pre-v8 peers cannot speak the strategy \
+                     aux blobs or the elastic-membership protocol)"
                 )
             }
             WireError::UnknownTag { got } => write!(f, "unknown frame tag {got}"),
@@ -615,12 +634,13 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             put_u32(body, *to);
             put_u64(body, *token);
         }
-        WireMsg::CollectReply { from, to, token, w }
-        | WireMsg::ApplyAverage { from, to, token, w } => {
+        WireMsg::CollectReply { from, to, token, w, aux }
+        | WireMsg::ApplyAverage { from, to, token, w, aux } => {
             put_u32(body, *from);
             put_u32(body, *to);
             put_u64(body, *token);
             put_f32s(body, w)?;
+            put_bytes(body, aux)?;
         }
         WireMsg::SnapshotRequest | WireMsg::Shutdown => {}
         WireMsg::SnapshotReply {
@@ -652,6 +672,7 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             classes,
             labels,
             features,
+            strategy,
         } => {
             put_u32(body, *node);
             body.push(*obj_code);
@@ -660,6 +681,7 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             put_u32(body, *classes);
             put_u32s(body, labels)?;
             put_f32s(body, features)?;
+            body.push(*strategy);
         }
         WireMsg::PlanStart {
             nodes,
@@ -757,6 +779,7 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             executors,
             flush_bytes,
             flush_micros,
+            strategy,
             peers,
         } => {
             put_u32(body, *rank);
@@ -772,6 +795,7 @@ fn encode_body_append(msg: &WireMsg, body: &mut Vec<u8>) -> Result<(), WireError
             put_u32(body, *executors);
             put_u32(body, *flush_bytes);
             put_u64(body, *flush_micros);
+            body.push(*strategy);
             put_strs(body, peers)?;
         }
         WireMsg::JoinReady { rank, addr } | WireMsg::PeerUpdate { rank, addr } => {
@@ -1133,6 +1157,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             to: c.u32()?,
             token: c.u64()?,
             w: c.f32s()?,
+            aux: c.bytes()?.to_vec(),
         },
         4 => WireMsg::Busy {
             from: c.u32()?,
@@ -1149,6 +1174,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             to: c.u32()?,
             token: c.u64()?,
             w: c.f32s()?,
+            aux: c.bytes()?.to_vec(),
         },
         7 => WireMsg::SnapshotRequest,
         8 => {
@@ -1186,6 +1212,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             classes: c.u32()?,
             labels: c.u32s()?,
             features: c.f32s()?,
+            strategy: c.u8()?,
         },
         11 => WireMsg::PlanStart {
             nodes: c.u32()?,
@@ -1265,6 +1292,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
             let executors = c.u32()?;
             let flush_bytes = c.u32()?;
             let flush_micros = c.u64()?;
+            let strategy = c.u8()?;
             let n = c.u32()? as usize;
             // Each peer entry needs at least its (possibly zero)
             // length prefix: 4 bytes. Reject counts the body cannot
@@ -1290,6 +1318,7 @@ pub fn decode_body(body: &[u8]) -> Result<WireMsg, WireError> {
                 executors,
                 flush_bytes,
                 flush_micros,
+                strategy,
                 peers,
             }
         }
@@ -1570,12 +1599,14 @@ mod tests {
             to: 7,
             token: 99,
             w: vec![1.0, -2.5, 0.0],
+            aux: vec![0xDE, 0xAD, 0x00],
         });
         roundtrip(WireMsg::CollectReply {
             from: 0,
             to: 1,
             token: 0,
             w: vec![],
+            aux: vec![],
         });
         roundtrip(WireMsg::Busy {
             from: 2,
@@ -1592,6 +1623,7 @@ mod tests {
             to: 2,
             token: 3,
             w: vec![0.25; 200],
+            aux: vec![0x7F; 800],
         });
         roundtrip(WireMsg::SnapshotRequest);
         roundtrip(WireMsg::SnapshotReply {
@@ -1619,6 +1651,7 @@ mod tests {
             classes: 4,
             labels: vec![0, 3, 1],
             features: vec![0.5; 9],
+            strategy: 3,
         });
         roundtrip(WireMsg::PlanAssign {
             node: 0,
@@ -1628,6 +1661,7 @@ mod tests {
             classes: 10,
             labels: vec![],
             features: vec![],
+            strategy: 0,
         });
         roundtrip(WireMsg::PlanStart {
             nodes: 8,
@@ -1706,6 +1740,7 @@ mod tests {
             executors: 0,
             flush_bytes: 16 * 1024,
             flush_micros: 500,
+            strategy: 2,
             peers: vec![
                 "127.0.0.1:9000".into(),
                 "127.0.0.1:9001".into(),
@@ -1726,6 +1761,7 @@ mod tests {
             executors: 0,
             flush_bytes: 0,
             flush_micros: 0,
+            strategy: 0,
             peers: vec![],
         });
         roundtrip(WireMsg::JoinReady {
@@ -1774,6 +1810,7 @@ mod tests {
                     to: 1,
                     token: 2,
                     w: vec![0.5; 32],
+                    aux: vec![1, 2, 3, 4],
                 },
             ],
         });
@@ -1803,6 +1840,7 @@ mod tests {
             to: 1,
             token: 2,
             w: w.clone(),
+            aux: vec![],
         })
         .unwrap();
         let (back, _) = decode(&frame).unwrap().unwrap();
@@ -1898,6 +1936,7 @@ mod tests {
             executors: 0,
             flush_bytes: 0,
             flush_micros: 0,
+            strategy: 0,
             peers: vec![],
         })
         .unwrap();
@@ -1938,6 +1977,7 @@ mod tests {
             classes: 10,
             labels: vec![0; 100_000],
             features: vec![0.5; 100_000 * 50],
+            strategy: 1,
         };
         assert!(matches!(encode(&msg), Err(WireError::Oversize { .. })));
         let frames = encode_message(&msg).unwrap();
@@ -2128,6 +2168,7 @@ mod tests {
             to: 2,
             token: 3,
             w: vec![0.5; 16],
+            aux: vec![9; 5],
         };
         let big = WireMsg::SnapshotReply {
             rank: 0,
@@ -2165,6 +2206,7 @@ mod tests {
                 to: 1,
                 token: 7,
                 w: vec![1.0, -2.5, f32::NAN],
+                aux: vec![0xAB, 0xCD],
             },
             WireMsg::Heartbeat { rank: 2, seq: 9 },
         ];
@@ -2278,6 +2320,7 @@ mod tests {
             to: 4,
             token: 5,
             w: vec![0.5; 64],
+            aux: vec![1, 2, 3],
         };
         let mut buf = Vec::new();
         encode_into(&msg, &mut buf).unwrap();
@@ -2320,12 +2363,14 @@ mod tests {
                 to: 0,
                 token: 1,
                 w: vec![2.0; 8],
+                aux: vec![4; 12],
             },
             WireMsg::ApplyAverage {
                 from: 0,
                 to: 1,
                 token: 1,
                 w: vec![1.5; 8],
+                aux: vec![],
             },
             WireMsg::Heartbeat { rank: 0, seq: 1 },
             WireMsg::Abort {
@@ -2408,6 +2453,7 @@ mod tests {
             to: 1,
             token: 0,
             w: vec![1.0; (1 << 20) - 64],
+            aux: vec![],
         };
         let mut b = BatchBuilder::new();
         for _ in 0..4 {

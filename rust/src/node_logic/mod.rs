@@ -10,9 +10,13 @@
 //! * [`NodeLogic`] — the per-node state machine: exponential firing
 //!   clock, the grad-vs-projection draw, sample selection, and the
 //!   Eq. (6) gradient step, all on the node's private RNG stream.
+//! * [`strategy`] — the pluggable update-policy trait and the
+//!   algorithm zoo (`dasgd`/`dcasgd`/`delay-agnostic`/`rfast`).
+//!   Engines and baselines reach the update math exclusively through
+//!   a [`strategy::Strategy`]; the raw helpers below are the
+//!   strategies' (and tests') building blocks.
 //! * [`sgd_step`] / [`neighborhood_average`] — the raw Eq. (6)/(7)
-//!   update math for callers that manage their own per-node RNGs
-//!   (the synchronous baselines).
+//!   update math the baseline strategy is built from.
 //! * [`Probe`] / [`Counts`] — the shared evaluate-and-snapshot path
 //!   every engine records through.
 //! * [`ConsensusTracker`] — incremental O(dim) mean + consensus
@@ -41,6 +45,10 @@ use crate::data::Dataset;
 use crate::metrics::Record;
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
+
+pub mod strategy;
+
+pub use strategy::{Strategy, StrategyKind};
 
 /// Point-to-point messages charged for one applied Eq. (7) projection
 /// over `participants` closed-neighborhood members (collect +

@@ -1,0 +1,40 @@
+//! The paper baseline: Alg. 2's Eq. (6)/(7) update rule, verbatim.
+
+use super::{Strategy, StrategyKind};
+use crate::node_logic::{neighborhood_average, NodeLogic};
+
+/// Eq. (6) local gradient steps and Eq. (7) closed-neighborhood
+/// averaging — exactly the math the engines ran before the strategy
+/// trait existed. Stateless, publishes no aux bytes, and consumes the
+/// node RNG in the identical call order, so deterministic runs are
+/// bit-for-bit the pre-refactor trace (pinned by
+/// `tests/it_strategy.rs`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Dasgd;
+
+impl Strategy for Dasgd {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Dasgd
+    }
+
+    fn local_step(
+        &mut self,
+        logic: &mut NodeLogic,
+        w: &mut Vec<f32>,
+        _aux: &mut Vec<u8>,
+        lr: f32,
+        _staleness: u64,
+    ) -> f32 {
+        logic.native_grad_step(w, lr)
+    }
+
+    fn mix(&mut self, rows: &[&[f32]], _aux_rows: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        (neighborhood_average(rows), Vec::new())
+    }
+
+    fn pjrt_compatible(&self) -> bool {
+        // The compiled step/gossip artifacts *are* this strategy's
+        // math — the engines may collapse events into them freely.
+        true
+    }
+}

@@ -1,0 +1,90 @@
+//! DCASGD — asynchronous SGD with Taylor-expansion delay compensation
+//! (Zheng et al., ICML 2017; the SNIPPETS.md reference implementation).
+//!
+//! The compensated update approximates the gradient at the *current*
+//! parameters from a gradient computed at stale ones via a first-order
+//! Taylor term with a diagonal Hessian surrogate `g ⊙ g`:
+//!
+//! ```text
+//! mse ← β·mse + (1−β)·g²            (bias-corrected, β = 0.95)
+//! λ_t  = λ₀ / √(mse/(1−β^t) + ε)
+//! w   ← w − lr·(g + λ_t·g⊙g⊙(w − w_bak))
+//! ```
+//!
+//! **Adaptation to this runtime:** the parameter-server formulation
+//! compensates `w_now − w_at_gradient_time`. Our nodes step in place,
+//! so the gradient is never stale against the node's *own* writes —
+//! the staleness comes from neighbors' Eq. (7) mixes landing between
+//! this node's events. `w_bak` is therefore the node's parameters
+//! right after its previous local step: the drift `w − w_bak` is
+//! exactly what the neighborhood moved under this node's feet, which
+//! is the delay DCASGD's correction targets. No aux bytes are
+//! published — the compensation state is node-private.
+
+use super::{Strategy, StrategyKind};
+use crate::node_logic::{neighborhood_average, NodeLogic};
+
+const BETA: f32 = 0.95;
+const LAM0: f32 = 2.0;
+const EPS: f32 = 1e-7;
+
+#[derive(Clone, Debug, Default)]
+pub struct Dcasgd {
+    /// EMA of g² (the diagonal Hessian surrogate), lazily sized.
+    mse: Vec<f32>,
+    /// This node's parameters right after its previous local step.
+    w_bak: Vec<f32>,
+    /// Step counter for the EMA bias correction.
+    t: u32,
+}
+
+impl Dcasgd {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Strategy for Dcasgd {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Dcasgd
+    }
+
+    fn local_step(
+        &mut self,
+        logic: &mut NodeLogic,
+        w: &mut Vec<f32>,
+        _aux: &mut Vec<u8>,
+        lr: f32,
+        _staleness: u64,
+    ) -> f32 {
+        // Recover the scaled subgradient by probing the canonical step:
+        // probe = w − lr·g, so g = (w − probe)/lr. One sample-index
+        // draw, same as the baseline — the RNG contract holds.
+        let mut probe = w.clone();
+        let loss = logic.native_grad_step(&mut probe, lr);
+        if lr == 0.0 {
+            return loss;
+        }
+        if self.mse.len() != w.len() {
+            self.mse = vec![0.0; w.len()];
+            self.w_bak = w.clone();
+        }
+        self.t = self.t.saturating_add(1);
+        let bias = 1.0 - BETA.powi(self.t as i32);
+        for j in 0..w.len() {
+            let g = (w[j] - probe[j]) / lr;
+            self.mse[j] = BETA * self.mse[j] + (1.0 - BETA) * g * g;
+            let lam = LAM0 / (self.mse[j] / bias + EPS).sqrt();
+            let drift = w[j] - self.w_bak[j];
+            w[j] -= lr * (g + lam * g * g * drift);
+        }
+        self.w_bak.clone_from(w);
+        loss
+    }
+
+    fn mix(&mut self, rows: &[&[f32]], _aux_rows: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        // Delay compensation changes the local rule only; consensus
+        // still moves by the Eq. (7) average.
+        (neighborhood_average(rows), Vec::new())
+    }
+}

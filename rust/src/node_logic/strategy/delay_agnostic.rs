@@ -1,0 +1,88 @@
+//! Delay-agnostic stepsizes (arXiv 2303.18034).
+//!
+//! The paper's insight: asynchronous gradient methods converge with a
+//! *fixed* stepsize chosen against the delays actually experienced —
+//! no global delay bound, no per-iteration decay. We realize that as:
+//!
+//! ```text
+//! s̄  ← (1−ρ)·s̄ + ρ·staleness        (ρ = 0.1)
+//! w  ← w − base_lr/(1 + s̄) · scale·∇f
+//! ```
+//!
+//! **Adaptation to this runtime:** the engine's decaying schedule is
+//! ignored entirely — the stepsize is the fixed `base_lr` (the
+//! schedule's k=0 value) discounted by a running estimate of this
+//! node's observed staleness-in-ticks, the same signal the obs layer
+//! histograms. Fast nodes in a slow neighborhood self-throttle; a
+//! delay-free run converges at the full fixed step. No aux bytes are
+//! published.
+
+use super::{Strategy, StrategyKind};
+use crate::node_logic::{neighborhood_average, NodeLogic};
+
+/// EMA weight on the newest staleness observation.
+const RHO: f64 = 0.1;
+
+#[derive(Clone, Debug)]
+pub struct DelayAgnostic {
+    base_lr: f32,
+    /// Running mean of observed staleness ticks.
+    s_bar: f64,
+}
+
+impl DelayAgnostic {
+    pub fn new(base_lr: f32) -> Self {
+        Self {
+            base_lr,
+            s_bar: 0.0,
+        }
+    }
+
+    /// The staleness-discounted fixed stepsize this node runs at.
+    pub fn effective_lr(&self) -> f32 {
+        (self.base_lr as f64 / (1.0 + self.s_bar)) as f32
+    }
+}
+
+impl Strategy for DelayAgnostic {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::DelayAgnostic
+    }
+
+    fn local_step(
+        &mut self,
+        logic: &mut NodeLogic,
+        w: &mut Vec<f32>,
+        _aux: &mut Vec<u8>,
+        _schedule_lr: f32,
+        staleness: u64,
+    ) -> f32 {
+        self.s_bar = (1.0 - RHO) * self.s_bar + RHO * staleness as f64;
+        logic.native_grad_step(w, self.effective_lr())
+    }
+
+    fn mix(&mut self, rows: &[&[f32]], _aux_rows: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        (neighborhood_average(rows), Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stale_nodes_self_throttle() {
+        let mut a = DelayAgnostic::new(0.5);
+        let mut b = DelayAgnostic::new(0.5);
+        assert_eq!(a.effective_lr(), 0.5);
+        for _ in 0..100 {
+            a.s_bar = (1.0 - RHO) * a.s_bar + RHO * 0.0;
+            b.s_bar = (1.0 - RHO) * b.s_bar + RHO * 9.0;
+        }
+        assert!(a.effective_lr() > 0.49, "delay-free keeps the full step");
+        assert!(
+            b.effective_lr() < 0.06,
+            "staleness 9 discounts toward base/(1+9)"
+        );
+    }
+}

@@ -1,0 +1,396 @@
+//! Pluggable per-node update policies — the algorithm zoo.
+//!
+//! Alg. 2's update rule used to be welded into [`NodeLogic`] and its
+//! engines: every firing event was "draw grad-vs-project, take the
+//! Eq. (6) step or the Eq. (7) neighborhood average". That answers
+//! "how fast does *this* algorithm converge" but never "is it the
+//! right algorithm for this topology/delay regime". This module
+//! factors the policy out into a [`Strategy`] trait so the same
+//! engines, transports, heterogeneity plans, and fault schedules run
+//! head-to-head comparisons (`dasgd compare`) between:
+//!
+//! * [`dasgd`] — the paper baseline, bit-for-bit identical to the
+//!   pre-trait engines in deterministic mode;
+//! * [`dcasgd`] — Taylor-expansion delay compensation
+//!   (Zheng et al., "Asynchronous SGD with delay compensation");
+//! * [`delay_agnostic`] — staleness-keyed fixed stepsizes
+//!   (arXiv 2303.18034);
+//! * [`rfast`] — gradient tracking with the tracker gossiped as an
+//!   auxiliary blob (R-FAST, arXiv 2307.11617).
+//!
+//! A strategy owns four decisions:
+//!
+//! 1. the **action draw** (grad vs. mix) — one RNG draw on the node's
+//!    private stream, in the same call order for every strategy so
+//!    deterministic schedules stay comparable across strategies;
+//! 2. the **local step rule** — what happens to the node's own
+//!    variable on a gradient event, fed the engine's stepsize and the
+//!    staleness-in-ticks signal the obs layer already computes;
+//! 3. the **mix rule** over neighborhood captures — what replaces the
+//!    closed neighborhood's variables on a projection event;
+//! 4. an opaque per-node **aux blob** that rides the collect/apply
+//!    wire messages (wire v8) next to the parameter vector. The
+//!    baseline publishes an empty blob, so its byte stream carries no
+//!    extra payload.
+//!
+//! The trait-default [`Strategy::step_sample`] wraps the raw
+//! [`sgd_step`](super::sgd_step) math, and the dasgd mix rule is the
+//! only caller of [`neighborhood_average`](super::neighborhood_average)
+//! — engines and baselines reach both exclusively through a strategy,
+//! so no update math leaks outside this module.
+//!
+//! # Adding a strategy
+//!
+//! See docs/algorithms.md for the full contract; in short: add a
+//! [`StrategyKind`] variant (name + wire code), implement [`Strategy`]
+//! in a sibling file, and the CLI, wire plumbing, per-node plans, and
+//! `dasgd compare` pick it up through [`StrategyKind::build`].
+
+use crate::data::Dataset;
+use crate::node_logic::{Action, NodeLogic};
+use crate::objective::Objective;
+use crate::util::rng::Xoshiro256pp;
+
+mod dasgd;
+mod dcasgd;
+mod delay_agnostic;
+mod rfast;
+
+pub use dasgd::Dasgd;
+pub use dcasgd::Dcasgd;
+pub use delay_agnostic::DelayAgnostic;
+pub use rfast::Rfast;
+
+/// The per-node update policy: everything a node's firing event does
+/// to its own variable (and its neighborhood's) beyond deciding *when*
+/// to fire. One instance per node — strategies carry mutable per-node
+/// state (moment estimates, trackers) across events.
+///
+/// Implementations must preserve the engines' RNG call-order contract:
+/// [`Strategy::draw_action`] consumes exactly one draw and
+/// [`Strategy::local_step`] exactly one sample-index draw on the
+/// node's stream, so seeded runs stay reproducible and different
+/// strategies see the same event schedule.
+pub trait Strategy: Send {
+    /// Which zoo member this is (name, wire code).
+    fn kind(&self) -> StrategyKind;
+
+    /// Alg. 2 line 3: gradient step w.p. `p_grad`, else mix. One RNG
+    /// draw; the default is the draw every current strategy uses.
+    fn draw_action(&mut self, logic: &mut NodeLogic) -> Action {
+        logic.draw_action()
+    }
+
+    /// The local step rule: advance the node's own variable `w` (and
+    /// its published aux blob) by one gradient event. `lr` is the
+    /// engine's schedule at the shared iteration counter; `staleness`
+    /// is the applied-update ticks since this node's last applied
+    /// update (the signal the obs histograms record). Returns the
+    /// sample loss.
+    fn local_step(
+        &mut self,
+        logic: &mut NodeLogic,
+        w: &mut Vec<f32>,
+        aux: &mut Vec<u8>,
+        lr: f32,
+        staleness: u64,
+    ) -> f32;
+
+    /// Raw Eq. (6) entry point for callers that manage their own
+    /// per-node RNGs and have no [`NodeLogic`] (the synchronous
+    /// baselines). The default is the canonical sample-then-step
+    /// math; delay-aware strategies have nothing to compensate in a
+    /// synchronous round, so they inherit it.
+    #[allow(clippy::too_many_arguments)]
+    fn step_sample(
+        &mut self,
+        objective: Objective,
+        w: &mut Vec<f32>,
+        data: &Dataset,
+        rng: &mut Xoshiro256pp,
+        dim: usize,
+        classes: usize,
+        lr: f32,
+        scale: f32,
+    ) -> f32 {
+        super::sgd_step(objective, w, data, rng, dim, classes, lr, scale)
+    }
+
+    /// The mix rule: fold the closed neighborhood's captured parameter
+    /// rows (and their aux blobs, same order) into the `(w, aux)` that
+    /// replaces every participant. Must preserve the consensus fixed
+    /// point: uniform rows in ⇒ that same row out (pinned by
+    /// `prop_strategy.rs`).
+    fn mix(&mut self, rows: &[&[f32]], aux_rows: &[&[u8]]) -> (Vec<f32>, Vec<u8>);
+
+    /// Whether the compiled PJRT step/gossip artifacts compute this
+    /// strategy's math. Only the paper baseline qualifies; everything
+    /// else runs the native path even when an accelerator is attached.
+    fn pjrt_compatible(&self) -> bool {
+        false
+    }
+}
+
+/// The strategy registry: CLI names, wire codes, and construction.
+/// `Copy` + a stable `u8` code so per-node strategies ride
+/// `PlanAssign`/`JoinGrant` frames exactly like objectives do.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// The paper's Alg. 2 baseline (Eq. (6)/(7)).
+    #[default]
+    Dasgd,
+    /// Taylor delay compensation (SNIPPETS: DCASGD).
+    Dcasgd,
+    /// Staleness-keyed fixed stepsize (arXiv 2303.18034).
+    DelayAgnostic,
+    /// Gradient tracking with a gossiped tracker (arXiv 2307.11617).
+    Rfast,
+}
+
+impl StrategyKind {
+    /// Every CLI-accepted name, for `--strategy` did-you-mean hints.
+    pub const NAMES: [&'static str; 4] = ["dasgd", "dcasgd", "delay-agnostic", "rfast"];
+
+    /// All kinds, in wire-code order (the `compare` default lineup).
+    pub const ALL: [StrategyKind; 4] = [
+        StrategyKind::Dasgd,
+        StrategyKind::Dcasgd,
+        StrategyKind::DelayAgnostic,
+        StrategyKind::Rfast,
+    ];
+
+    /// Parse a CLI name (`dasgd`, `dcasgd`, `delay-agnostic`, `rfast`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dasgd" => Some(StrategyKind::Dasgd),
+            "dcasgd" => Some(StrategyKind::Dcasgd),
+            "delay-agnostic" | "delay_agnostic" => Some(StrategyKind::DelayAgnostic),
+            "rfast" | "r-fast" => Some(StrategyKind::Rfast),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Dasgd => "dasgd",
+            StrategyKind::Dcasgd => "dcasgd",
+            StrategyKind::DelayAgnostic => "delay-agnostic",
+            StrategyKind::Rfast => "rfast",
+        }
+    }
+
+    /// Stable wire code (PlanAssign/JoinGrant, v8).
+    pub fn code(&self) -> u8 {
+        match self {
+            StrategyKind::Dasgd => 0,
+            StrategyKind::Dcasgd => 1,
+            StrategyKind::DelayAgnostic => 2,
+            StrategyKind::Rfast => 3,
+        }
+    }
+
+    /// Inverse of [`StrategyKind::code`]; `None` for codes from a
+    /// newer peer's zoo.
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(StrategyKind::Dasgd),
+            1 => Some(StrategyKind::Dcasgd),
+            2 => Some(StrategyKind::DelayAgnostic),
+            3 => Some(StrategyKind::Rfast),
+            _ => None,
+        }
+    }
+
+    /// Construct one node's strategy instance. `base_lr` seeds the
+    /// strategies that replace the engine schedule with their own
+    /// (delay-agnostic); the others ignore it.
+    pub fn build(&self, base_lr: f32) -> Box<dyn Strategy> {
+        match self {
+            StrategyKind::Dasgd => Box::new(Dasgd),
+            StrategyKind::Dcasgd => Box::new(Dcasgd::new()),
+            StrategyKind::DelayAgnostic => Box::new(DelayAgnostic::new(base_lr)),
+            StrategyKind::Rfast => Box::new(Rfast::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Decode an aux blob as little-endian f32s of the expected length;
+/// anything else (empty baseline blobs, a foreign strategy's layout,
+/// truncation) reads as "absent". Shared by the strategies that gossip
+/// a vector in the blob.
+pub(crate) fn aux_f32s(aux: &[u8], len: usize) -> Option<Vec<f32>> {
+    if aux.len() != len * 4 {
+        return None;
+    }
+    Some(
+        aux.chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect(),
+    )
+}
+
+/// Encode a vector into the aux blob layout [`aux_f32s`] reads.
+pub(crate) fn encode_aux_f32s(v: &[f32], aux: &mut Vec<u8>) {
+    aux.clear();
+    aux.reserve(v.len() * 4);
+    for x in v {
+        aux.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticGen;
+
+    fn shard(seed: u64) -> Dataset {
+        let gen = SyntheticGen::new(4, 10, 4, 2.0, 0.5, 0.3, seed);
+        let mut rng = Xoshiro256pp::seeded(seed);
+        gen.node_dataset(0, 40, &mut rng)
+    }
+
+    fn logic(seed: u64) -> NodeLogic {
+        NodeLogic::new(
+            0,
+            Objective::LogReg,
+            0.5,
+            shard(seed),
+            8,
+            Xoshiro256pp::seeded(seed),
+        )
+    }
+
+    #[test]
+    fn registry_round_trips_names_and_codes() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(kind.name()), Some(kind));
+            assert_eq!(StrategyKind::from_code(kind.code()), Some(kind));
+            assert_eq!(kind.build(0.1).kind(), kind);
+        }
+        assert_eq!(StrategyKind::parse("adamw"), None);
+        assert_eq!(StrategyKind::from_code(200), None);
+        assert_eq!(StrategyKind::default(), StrategyKind::Dasgd);
+        // Aliases.
+        assert_eq!(StrategyKind::parse("r-fast"), Some(StrategyKind::Rfast));
+        assert_eq!(
+            StrategyKind::parse("delay_agnostic"),
+            Some(StrategyKind::DelayAgnostic)
+        );
+    }
+
+    #[test]
+    fn dasgd_local_step_is_the_native_grad_step_bit_for_bit() {
+        // The equivalence contract underneath the engine-level pin in
+        // tests/it_strategy.rs: same RNG stream, same parameter bits,
+        // and no aux bytes published.
+        let mut a = logic(7);
+        let mut b = logic(7);
+        let mut strat = StrategyKind::Dasgd.build(0.0);
+        let mut w1 = vec![0.0f32; a.param_len()];
+        let mut w2 = w1.clone();
+        let mut aux = Vec::new();
+        for _ in 0..50 {
+            let l1 = strat.local_step(&mut a, &mut w1, &mut aux, 0.3, 2);
+            let l2 = b.native_grad_step(&mut w2, 0.3);
+            assert_eq!(l1.to_bits(), l2.to_bits());
+        }
+        let bits = |w: &[f32]| w.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&w1), bits(&w2));
+        assert!(aux.is_empty(), "the baseline publishes no aux bytes");
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+    }
+
+    #[test]
+    fn every_strategy_consumes_one_draw_per_local_step() {
+        // The comparability contract: identical RNG consumption means
+        // every strategy sees the same action/sample schedule.
+        for kind in StrategyKind::ALL {
+            let mut l = logic(13);
+            let mut reference = logic(13);
+            let mut strat = kind.build(0.2);
+            let mut w = vec![0.0f32; l.param_len()];
+            let mut wr = w.clone();
+            let mut aux = Vec::new();
+            for s in 0..20 {
+                assert_eq!(strat.draw_action(&mut l), reference.draw_action());
+                strat.local_step(&mut l, &mut w, &mut aux, 0.2, s);
+                reference.native_grad_step(&mut wr, 0.2);
+            }
+            assert_eq!(
+                l.rng.next_u64(),
+                reference.rng.next_u64(),
+                "{kind} bent the RNG stream"
+            );
+        }
+    }
+
+    #[test]
+    fn every_strategy_moves_weights_and_stays_finite() {
+        for kind in StrategyKind::ALL {
+            let mut l = logic(21);
+            let mut strat = kind.build(0.2);
+            let mut w = vec![0.0f32; l.param_len()];
+            let mut aux = Vec::new();
+            for s in 0..200 {
+                strat.local_step(&mut l, &mut w, &mut aux, 0.2, s % 7);
+            }
+            assert!(w.iter().any(|&v| v != 0.0), "{kind} never moved");
+            assert!(w.iter().all(|v| v.is_finite()), "{kind} diverged");
+        }
+    }
+
+    #[test]
+    fn mix_averages_params_for_every_strategy() {
+        let rows: Vec<Vec<f32>> = vec![vec![1.0, -2.0], vec![3.0, 0.0], vec![-1.0, 5.0]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let aux_rows: Vec<&[u8]> = vec![&[], &[], &[]];
+        let want = crate::node_logic::neighborhood_average(&refs);
+        for kind in StrategyKind::ALL {
+            let mut strat = kind.build(0.1);
+            let (got, _) = strat.mix(&refs, &aux_rows);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6, "{kind} mix is not the average");
+            }
+        }
+    }
+
+    #[test]
+    fn aux_codec_round_trips_and_rejects_wrong_lengths() {
+        let v = vec![1.5f32, -0.25, f32::MIN_POSITIVE];
+        let mut aux = Vec::new();
+        encode_aux_f32s(&v, &mut aux);
+        assert_eq!(aux.len(), 12);
+        assert_eq!(aux_f32s(&aux, 3).as_deref(), Some(v.as_slice()));
+        assert_eq!(aux_f32s(&aux, 2), None);
+        assert_eq!(aux_f32s(&[], 3), None);
+        assert_eq!(aux_f32s(&aux[..11], 3), None);
+        // Empty-for-empty is the baseline's fixed point.
+        assert_eq!(aux_f32s(&[], 0).as_deref(), Some(&[][..]));
+    }
+
+    #[test]
+    fn rfast_tracker_rides_the_aux_blob() {
+        let mut l = logic(31);
+        let mut strat = StrategyKind::Rfast.build(0.2);
+        let mut w = vec![0.0f32; l.param_len()];
+        let mut aux = Vec::new();
+        strat.local_step(&mut l, &mut w, &mut aux, 0.2, 0);
+        assert_eq!(aux.len(), w.len() * 4, "tracker published as f32 bytes");
+        let y = aux_f32s(&aux, w.len()).unwrap();
+        assert!(y.iter().any(|&v| v != 0.0), "tracker initialized from g");
+    }
+
+    #[test]
+    fn only_the_baseline_claims_pjrt_artifacts() {
+        for kind in StrategyKind::ALL {
+            let compat = kind.build(0.1).pjrt_compatible();
+            assert_eq!(compat, kind == StrategyKind::Dasgd, "{kind}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! R-FAST — robust asynchronous gradient tracking (arXiv 2307.11617).
+//!
+//! Gradient tracking replaces the raw local gradient with a tracker
+//! `y` that asymptotically follows the *global* average gradient:
+//!
+//! ```text
+//! y ← y + g_new − g_prev         (local update, one fresh sample)
+//! w ← w − lr·y
+//! mix: (w, y) ← neighborhood averages of (w, y)
+//! ```
+//!
+//! **Adaptation to this runtime:** R-FAST's spanning-tree weight
+//! matrices reduce to the uniform closed-neighborhood average our
+//! Eq. (7) projection already implements, applied to both the
+//! parameters and the tracker. The tracker is the strategy's aux blob
+//! — `param_len` little-endian f32s riding the collect/apply wire
+//! frames (v8) — so it gossips wherever `w` does, across every
+//! transport, with the robustness to drops/partitions coming from the
+//! same capture/abort machinery the parameters use. `g_prev` stays
+//! node-private.
+
+use super::{aux_f32s, encode_aux_f32s, Strategy, StrategyKind};
+use crate::node_logic::{neighborhood_average, NodeLogic};
+
+#[derive(Clone, Debug, Default)]
+pub struct Rfast {
+    /// The gradient at this node's previous local step.
+    g_prev: Vec<f32>,
+}
+
+impl Rfast {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Strategy for Rfast {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Rfast
+    }
+
+    fn local_step(
+        &mut self,
+        logic: &mut NodeLogic,
+        w: &mut Vec<f32>,
+        aux: &mut Vec<u8>,
+        lr: f32,
+        _staleness: u64,
+    ) -> f32 {
+        // Fresh scaled subgradient at the current parameters, recovered
+        // by probing the canonical step (one sample draw — the RNG
+        // contract the comparability tests pin).
+        let mut probe = w.clone();
+        let loss = logic.native_grad_step(&mut probe, lr);
+        if lr == 0.0 {
+            return loss;
+        }
+        let g: Vec<f32> = w
+            .iter()
+            .zip(&probe)
+            .map(|(&wj, &pj)| (wj - pj) / lr)
+            .collect();
+        // The tracker lives in the aux blob so it travels with w; a
+        // missing/foreign blob (first event, or a mix with baseline
+        // peers) re-initializes it from the fresh gradient.
+        let mut y = aux_f32s(aux, w.len()).unwrap_or_else(|| g.clone());
+        if self.g_prev.len() == w.len() {
+            for j in 0..w.len() {
+                y[j] += g[j] - self.g_prev[j];
+            }
+        }
+        for j in 0..w.len() {
+            w[j] -= lr * y[j];
+        }
+        self.g_prev = g;
+        encode_aux_f32s(&y, aux);
+        loss
+    }
+
+    fn mix(&mut self, rows: &[&[f32]], aux_rows: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        let mean_w = neighborhood_average(rows);
+        // Average the trackers alongside the parameters. Blobs from
+        // baseline-strategy peers (or nodes yet to take a step) are
+        // absent; they contribute the zero tracker. All-absent in ⇒
+        // empty blob out, so pure-baseline neighborhoods stay
+        // byte-identical.
+        let len = mean_w.len();
+        let decoded: Vec<Option<Vec<f32>>> =
+            aux_rows.iter().map(|a| aux_f32s(a, len)).collect();
+        if decoded.iter().all(|d| d.is_none()) {
+            return (mean_w, Vec::new());
+        }
+        let mut mean_y = vec![0.0f32; len];
+        let scale = 1.0 / aux_rows.len() as f32;
+        for d in decoded.iter().flatten() {
+            for j in 0..len {
+                mean_y[j] += scale * d[j];
+            }
+        }
+        let mut aux = Vec::new();
+        encode_aux_f32s(&mean_y, &mut aux);
+        (mean_w, aux)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_averages_trackers_and_preserves_absent_as_zero() {
+        let rows: Vec<Vec<f32>> = vec![vec![1.0, 3.0], vec![3.0, 1.0]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut t1 = Vec::new();
+        encode_aux_f32s(&[2.0, -4.0], &mut t1);
+        let mut s = Rfast::new();
+        // One tracker present, one absent (counts as zeros).
+        let (w, aux) = s.mix(&refs, &[&t1, &[]]);
+        assert_eq!(w, vec![2.0, 2.0]);
+        assert_eq!(aux_f32s(&aux, 2).unwrap(), vec![1.0, -2.0]);
+        // All absent stays empty — baseline neighborhoods unchanged.
+        let (_, aux) = s.mix(&refs, &[&[], &[]]);
+        assert!(aux.is_empty());
+    }
+}

@@ -28,7 +28,7 @@ use crate::coordinator::StepSize;
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::metrics::Recorder;
-use crate::node_logic::{neighborhood_average, Action, Counts, NodeLogic, Probe};
+use crate::node_logic::{Action, Counts, NodeLogic, Probe, Strategy};
 use crate::objective::Objective;
 use crate::transport::{ProjectionOutcome, SimNet, SimNetConfig, Transport};
 use crate::util::rng::Xoshiro256pp;
@@ -125,6 +125,12 @@ pub fn simnet_run_plan(
             }
         })
         .collect();
+    // Per-node update strategies from the plan (delay-aware ones read
+    // the same staleness-in-ticks signal the wall-clock engines feed).
+    let mut strategies: Vec<Box<dyn Strategy>> = (0..n)
+        .map(|i| plan.strategy(i).build(steps[i].at(0)))
+        .collect();
+    let mut last_k: Vec<u64> = vec![0; n];
     let hoods: Vec<Vec<usize>> = (0..n).map(|i| g.closed_neighborhood(i)).collect();
     let net = SimNet::new(n, param_len, cfg.net.clone());
     let probe = Probe::mixed(&plan.objectives(), test);
@@ -164,22 +170,26 @@ pub fn simnet_run_plan(
         net.set_now(t);
         let lr = steps[i].at(k);
         let logic = &mut logics[i];
+        let strategy = &mut strategies[i];
+        let staleness = k.saturating_sub(last_k[i]);
         let mut op_time = speeds.sample(i, &mut logic.rng);
-        match logic.draw_action() {
+        match strategy.draw_action(logic) {
             Action::Grad => {
-                net.update_own(i, &mut |w| {
-                    logic.native_grad_step(w, lr);
+                net.update_own_with_aux(i, &mut |w, aux| {
+                    strategy.local_step(logic, w, aux, lr, staleness);
                 });
                 counts.grad_steps += 1;
+                last_k[i] = k;
                 k += 1;
             }
             Action::Project => {
-                match net.try_project(i, &hoods[i], Duration::ZERO, &mut |rows| {
-                    neighborhood_average(rows)
+                match net.try_project(i, &hoods[i], Duration::ZERO, &mut |rows, aux_rows| {
+                    strategy.mix(rows, aux_rows)
                 }) {
                     ProjectionOutcome::Applied { .. } => {
                         op_time += net.take_last_comm();
                         counts.proj_steps += 1;
+                        last_k[i] = k;
                         k += 1;
                     }
                     ProjectionOutcome::Isolated => {

@@ -6,9 +6,9 @@
 //! ```text
 //! initiator                 each closed-neighborhood member
 //! ---------                 --------------------------------
-//! Collect{token}  ───────▶  free?  ──yes──▶ lock to token, Params{w}
+//! Collect{token}  ───────▶  free?  ──yes──▶ lock to token, Params{w, aux}
 //!                                 ──no───▶ Busy{token}
-//! (all Params)    ───────▶  Apply{token, avg}   (unlock, adopt avg)
+//! (all Params)    ───────▶  Apply{token, mix}   (unlock, adopt mix)
 //! (any Busy/timeout) ────▶  Release{token}      (unlock, keep w)
 //! ```
 //!
@@ -18,6 +18,10 @@
 //! wait is deadline-bounded and initiators keep serving their own
 //! mailbox while waiting, so no two rounds can block each other:
 //! the protocol is abort-based, like the sorted try-lock it mirrors.
+//!
+//! `Params`/`Apply` carry the member's published strategy aux blob
+//! beside `w` (wire v8 semantics) — empty for the baseline, so its
+//! rounds move no extra bytes.
 //!
 //! [`SocketNet`](crate::net::SocketNet) carries this exact member /
 //! initiator state machine across processes (`rust/src/net/socket.rs`,
@@ -42,15 +46,35 @@ use std::time::{Duration, Instant};
 use super::{ProjectionOutcome, Transport};
 
 enum Msg {
-    Collect { from: usize, token: u64 },
-    Params { from: usize, token: u64, w: Vec<f32> },
-    Busy { token: u64 },
-    Apply { from: usize, token: u64, w: Vec<f32> },
-    Release { from: usize, token: u64 },
+    Collect {
+        from: usize,
+        token: u64,
+    },
+    Params {
+        from: usize,
+        token: u64,
+        w: Vec<f32>,
+        aux: Vec<u8>,
+    },
+    Busy {
+        token: u64,
+    },
+    Apply {
+        from: usize,
+        token: u64,
+        w: Vec<f32>,
+        aux: Vec<u8>,
+    },
+    Release {
+        from: usize,
+        token: u64,
+    },
 }
 
 struct Slot {
     w: Vec<f32>,
+    /// The node's published strategy aux blob (travels with `w`).
+    aux: Vec<u8>,
     /// `Some((initiator, token))` while captured by an in-flight round.
     locked_by: Option<(usize, u64)>,
     /// When the capture was granted — captures expire after a lease so
@@ -63,7 +87,7 @@ struct Slot {
 /// Reply state of an in-flight collect round.
 struct Round {
     token: u64,
-    replies: Vec<(usize, Vec<f32>)>,
+    replies: Vec<(usize, Vec<f32>, Vec<u8>)>,
     busy: bool,
 }
 
@@ -106,6 +130,7 @@ impl ChannelNet {
                 .map(|_| {
                     Mutex::new(Slot {
                         w: vec![0.0f32; param_len],
+                        aux: Vec::new(),
                         locked_by: None,
                         locked_at: None,
                         initiating: false,
@@ -164,16 +189,24 @@ impl ChannelNet {
                     } else {
                         slot.locked_by = Some((from, token));
                         slot.locked_at = Some(Instant::now());
-                        Some(slot.w.clone())
+                        Some((slot.w.clone(), slot.aux.clone()))
                     }
                 };
                 match reply {
-                    Some(w) => self.send(from, Msg::Params { from: id, token, w }),
+                    Some((w, aux)) => self.send(
+                        from,
+                        Msg::Params {
+                            from: id,
+                            token,
+                            w,
+                            aux,
+                        },
+                    ),
                     None => self.send(from, Msg::Busy { token }),
                 }
             }
-            Msg::Params { from, token, w } => match round {
-                Some(r) if r.token == token => r.replies.push((from, w)),
+            Msg::Params { from, token, w, aux } => match round {
+                Some(r) if r.token == token => r.replies.push((from, w, aux)),
                 // Stale reply (we already gave up on that round): the
                 // sender is still captured by our dead token — free it.
                 _ => self.send(from, Msg::Release { from: id, token }),
@@ -185,10 +218,11 @@ impl ChannelNet {
                     }
                 }
             }
-            Msg::Apply { from, token, w } => {
+            Msg::Apply { from, token, w, aux } => {
                 let mut slot = self.slots[id].lock().unwrap();
                 if slot.locked_by == Some((from, token)) {
                     slot.w = w;
+                    slot.aux = aux;
                     slot.locked_by = None;
                     slot.locked_at = None;
                 }
@@ -220,6 +254,12 @@ impl Transport for ChannelNet {
         f(&mut slot.w);
     }
 
+    fn update_own_with_aux(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>, &mut Vec<u8>)) {
+        let mut slot = self.slots[id].lock().unwrap();
+        let Slot { w, aux, .. } = &mut *slot;
+        f(w, aux);
+    }
+
     fn busy(&self, id: usize) -> bool {
         self.expire_stale_capture(id);
         self.slots[id].lock().unwrap().locked_by.is_some()
@@ -235,7 +275,7 @@ impl Transport for ChannelNet {
         id: usize,
         hood: &[usize],
         hold: Duration,
-        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+        mix: &mut dyn FnMut(&[&[f32]], &[&[u8]]) -> (Vec<f32>, Vec<u8>),
     ) -> ProjectionOutcome {
         debug_assert!(hood.contains(&id));
         if hood.len() < 2 {
@@ -244,13 +284,13 @@ impl Transport for ChannelNet {
         let token = self.next_token.fetch_add(1, Ordering::Relaxed);
         // Mark ourselves initiating (refusing inbound Collects) and take
         // our own row. If we are already captured, this round loses.
-        let own = {
+        let (own, own_aux) = {
             let mut slot = self.slots[id].lock().unwrap();
             if slot.locked_by.is_some() {
                 return ProjectionOutcome::Conflict;
             }
             slot.initiating = true;
-            slot.w.clone()
+            (slot.w.clone(), slot.aux.clone())
         };
         let peers: Vec<usize> = hood.iter().copied().filter(|&j| j != id).collect();
         let round_start = Instant::now();
@@ -281,7 +321,7 @@ impl Transport for ChannelNet {
             );
         } else {
             // Abort: free everyone who granted us their variable.
-            for (from, _) in &round.replies {
+            for (from, _, _) in &round.replies {
                 self.send(*from, Msg::Release { from: id, token });
             }
             self.slots[id].lock().unwrap().initiating = false;
@@ -291,23 +331,36 @@ impl Transport for ChannelNet {
         if hold > Duration::ZERO {
             std::thread::sleep(hold);
         }
-        // Average in hood order (self row in place of `id`).
+        // Mix in hood order (self row in place of `id`), params and aux
+        // blobs aligned.
+        let reply_for = |j: usize| {
+            round
+                .replies
+                .iter()
+                .find(|(from, _, _)| *from == j)
+                .expect("complete round has every peer's reply")
+        };
         let rows: Vec<&[f32]> = hood
             .iter()
             .map(|&j| {
                 if j == id {
                     own.as_slice()
                 } else {
-                    round
-                        .replies
-                        .iter()
-                        .find(|(from, _)| *from == j)
-                        .map(|(_, w)| w.as_slice())
-                        .expect("complete round has every peer's reply")
+                    reply_for(j).1.as_slice()
                 }
             })
             .collect();
-        let mean = avg(&rows);
+        let aux_rows: Vec<&[u8]> = hood
+            .iter()
+            .map(|&j| {
+                if j == id {
+                    own_aux.as_slice()
+                } else {
+                    reply_for(j).2.as_slice()
+                }
+            })
+            .collect();
+        let (mean, mean_aux) = mix(&rows, &aux_rows);
         for &j in &peers {
             self.send(
                 j,
@@ -315,11 +368,13 @@ impl Transport for ChannelNet {
                     from: id,
                     token,
                     w: mean.clone(),
+                    aux: mean_aux.clone(),
                 },
             );
         }
         let mut slot = self.slots[id].lock().unwrap();
         slot.w = mean;
+        slot.aux = mean_aux;
         slot.initiating = false;
         ProjectionOutcome::Applied {
             participants: hood.len(),
@@ -340,6 +395,11 @@ mod tests {
     use crate::node_logic::neighborhood_average;
     use std::sync::atomic::AtomicBool;
     use std::sync::Arc;
+
+    /// The baseline mix: average the rows, publish no aux bytes.
+    fn avg_mix(rows: &[&[f32]], _aux: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        (neighborhood_average(rows), Vec::new())
+    }
 
     /// Spawn poll pumps for `ids` so a single test thread can drive
     /// projections (peers must answer Collect requests).
@@ -376,9 +436,7 @@ mod tests {
         net.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
         net.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
         let out = with_pumps(&net, &[0, 2], || {
-            net.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
-                neighborhood_average(rows)
-            })
+            net.try_project(1, &[0, 1, 2], Duration::ZERO, &mut avg_mix)
         });
         assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
         // Peers adopt the average once they poll their Apply.
@@ -391,12 +449,28 @@ mod tests {
     }
 
     #[test]
+    fn aux_blobs_ride_the_collect_apply_round() {
+        let net = Arc::new(ChannelNet::with_default_timeout(2, 1));
+        net.update_own_with_aux(1, &mut |_w, aux| aux.extend_from_slice(&[5, 6]));
+        let out = with_pumps(&net, &[1], || {
+            net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows, aux_rows| {
+                // Hood order: node 0 (initiator, empty blob), node 1.
+                assert_eq!(aux_rows, &[&[][..], &[5u8, 6][..]]);
+                (neighborhood_average(rows), vec![8])
+            })
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 2 });
+        net.poll(1);
+        for id in 0..2 {
+            net.update_own_with_aux(id, &mut |_w, aux| assert_eq!(aux, &vec![8]));
+        }
+    }
+
+    #[test]
     fn unresponsive_peer_times_out_as_conflict() {
         // Node 1 never polls: the round must abort, not hang.
         let net = ChannelNet::new(2, 1, Duration::from_millis(5));
-        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
-        });
+        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut avg_mix);
         assert_eq!(out, ProjectionOutcome::Conflict);
         // The initiator is free again afterwards.
         assert!(!net.busy(0));
@@ -411,9 +485,7 @@ mod tests {
         assert!(net.busy(1));
         // A projection over {0, 1} must now abort with Busy.
         let out = with_pumps(&net, &[1], || {
-            net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
-                neighborhood_average(rows)
-            })
+            net.try_project(0, &[0, 1], Duration::ZERO, &mut avg_mix)
         });
         assert_eq!(out, ProjectionOutcome::Conflict);
         // Releasing token 99 frees the member.
@@ -434,7 +506,15 @@ mod tests {
         std::thread::sleep(net.lease + Duration::from_millis(5));
         assert!(!net.busy(1), "lease should expire a dead capture");
         // A late Apply for the expired token is ignored.
-        net.send(1, Msg::Apply { from: 0, token: 42, w: vec![9.0] });
+        net.send(
+            1,
+            Msg::Apply {
+                from: 0,
+                token: 42,
+                w: vec![9.0],
+                aux: Vec::new(),
+            },
+        );
         net.poll(1);
         assert_eq!(net.snapshot()[1], vec![0.0]);
     }
@@ -443,9 +523,7 @@ mod tests {
     fn stale_params_reply_gets_released() {
         let net = ChannelNet::new(2, 1, Duration::from_millis(1));
         // Round times out (peer silent)...
-        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
-        });
+        let out = net.try_project(0, &[0, 1], Duration::ZERO, &mut avg_mix);
         assert_eq!(out, ProjectionOutcome::Conflict);
         // ...then the peer wakes up, grants the stale Collect, and is
         // captured by a dead token.

@@ -64,18 +64,30 @@ pub trait Transport: Send + Sync {
     /// gradient step). Never blocks on other nodes' variables.
     fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>));
 
+    /// Apply `f` to node `id`'s parameter vector *and* its published
+    /// auxiliary strategy blob (wire v8: the opaque per-node state
+    /// that rides the collect/apply frames beside `w`). The default
+    /// feeds `f` a throwaway empty blob — correct for substrates the
+    /// baseline strategy runs on; substrates that carry aux-publishing
+    /// strategies (all four in-tree) store the blob beside `w`.
+    fn update_own_with_aux(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>, &mut Vec<u8>)) {
+        let mut aux = Vec::new();
+        self.update_own(id, &mut |w| f(w, &mut aux));
+    }
+
     /// Attempt an atomic Eq. (7) projection over `hood` (the sorted
     /// closed neighborhood of `id`, liveness-filtered by the caller).
-    /// On success the substrate gathers the members' vectors, passes
-    /// them to `avg`, holds the gathered state for `hold` (a modeled
-    /// network round-trip, wall-clock substrates only), and writes the
-    /// average back to every member.
+    /// On success the substrate gathers the members' vectors and aux
+    /// blobs (same order), passes them to `mix`, holds the gathered
+    /// state for `hold` (a modeled network round-trip, wall-clock
+    /// substrates only), and writes the mixed `(w, aux)` back to every
+    /// member.
     fn try_project(
         &self,
         id: usize,
         hood: &[usize],
         hold: std::time::Duration,
-        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+        mix: &mut dyn FnMut(&[&[f32]], &[&[u8]]) -> (Vec<f32>, Vec<u8>),
     ) -> ProjectionOutcome;
 
     /// True while node `id` is captured by a neighbor's in-flight

@@ -1,4 +1,4 @@
-//! Shared-memory substrate: per-node `Mutex<Vec<f32>>` with the §IV-C
+//! Shared-memory substrate: per-node `Mutex` slots with the §IV-C
 //! lock-up implemented as sorted try-lock acquisition.
 //!
 //! This is the substrate the threaded wall-clock runtime has always
@@ -9,22 +9,41 @@
 //! acquisition deadlock-free (no cycle in the wait-for graph can form
 //! when every initiator acquires in a global total order); the property
 //! suite pins that argument.
+//!
+//! Each slot carries the node's parameter vector and its published
+//! strategy aux blob under one lock, so a projection captures both
+//! atomically (empty blob for the baseline — zero extra bytes move).
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use super::{ProjectionOutcome, Transport};
 
+/// One node's shared state: parameters + published aux blob.
+#[derive(Debug, Default)]
+struct Slot {
+    w: Vec<f32>,
+    aux: Vec<u8>,
+}
+
 /// In-process shared-memory parameter store.
 pub struct SharedMem {
-    params: Vec<Mutex<Vec<f32>>>,
+    params: Vec<Mutex<Slot>>,
 }
 
 impl SharedMem {
-    /// `n` nodes, each starting at the zero vector of `param_len`.
+    /// `n` nodes, each starting at the zero vector of `param_len` with
+    /// an empty aux blob.
     pub fn new(n: usize, param_len: usize) -> Self {
         Self {
-            params: (0..n).map(|_| Mutex::new(vec![0.0f32; param_len])).collect(),
+            params: (0..n)
+                .map(|_| {
+                    Mutex::new(Slot {
+                        w: vec![0.0f32; param_len],
+                        aux: Vec::new(),
+                    })
+                })
+                .collect(),
         }
     }
 }
@@ -36,7 +55,13 @@ impl Transport for SharedMem {
 
     fn update_own(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>)) {
         let mut guard = self.params[id].lock().unwrap();
-        f(&mut guard);
+        f(&mut guard.w);
+    }
+
+    fn update_own_with_aux(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>, &mut Vec<u8>)) {
+        let mut guard = self.params[id].lock().unwrap();
+        let Slot { w, aux } = &mut *guard;
+        f(w, aux);
     }
 
     fn try_project(
@@ -44,7 +69,7 @@ impl Transport for SharedMem {
         id: usize,
         hood: &[usize],
         hold: Duration,
-        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+        mix: &mut dyn FnMut(&[&[f32]], &[&[u8]]) -> (Vec<f32>, Vec<u8>),
     ) -> ProjectionOutcome {
         debug_assert!(hood.contains(&id));
         debug_assert!(hood.windows(2).all(|w| w[0] < w[1]), "hood must be sorted");
@@ -64,15 +89,17 @@ impl Transport for SharedMem {
                 }
             }
         }
-        // Collect + average + broadcast (Eq. 7). A real deployment holds
+        // Collect + mix + broadcast (Eq. 7). A real deployment holds
         // the locks across the network round-trip.
         if hold > Duration::ZERO {
             std::thread::sleep(hold);
         }
-        let rows: Vec<&[f32]> = guards.iter().map(|g| g.as_slice()).collect();
-        let mean = avg(&rows);
+        let rows: Vec<&[f32]> = guards.iter().map(|g| g.w.as_slice()).collect();
+        let aux_rows: Vec<&[u8]> = guards.iter().map(|g| g.aux.as_slice()).collect();
+        let (mean, aux) = mix(&rows, &aux_rows);
         for g in guards.iter_mut() {
-            g.copy_from_slice(&mean);
+            g.w.copy_from_slice(&mean);
+            g.aux.clone_from(&aux);
         }
         ProjectionOutcome::Applied {
             participants: hood.len(),
@@ -80,7 +107,7 @@ impl Transport for SharedMem {
     }
 
     fn snapshot(&self) -> Vec<Vec<f32>> {
-        self.params.iter().map(|m| m.lock().unwrap().clone()).collect()
+        self.params.iter().map(|m| m.lock().unwrap().w.clone()).collect()
     }
 }
 
@@ -89,14 +116,17 @@ mod tests {
     use super::*;
     use crate::node_logic::neighborhood_average;
 
+    /// The baseline mix: average the rows, publish no aux bytes.
+    fn avg_mix(rows: &[&[f32]], _aux: &[&[u8]]) -> (Vec<f32>, Vec<u8>) {
+        (neighborhood_average(rows), Vec::new())
+    }
+
     #[test]
     fn update_and_project_roundtrip() {
         let t = SharedMem::new(3, 2);
         t.update_own(0, &mut |w| w.copy_from_slice(&[3.0, 0.0]));
         t.update_own(2, &mut |w| w.copy_from_slice(&[0.0, 6.0]));
-        let out = t.try_project(1, &[0, 1, 2], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
-        });
+        let out = t.try_project(1, &[0, 1, 2], Duration::ZERO, &mut avg_mix);
         assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
         let snap = t.snapshot();
         for w in &snap {
@@ -109,18 +139,36 @@ mod tests {
         let t = SharedMem::new(2, 1);
         // Hold node 1's lock from "another update".
         let _held = t.params[1].lock().unwrap();
-        let out = t.try_project(0, &[0, 1], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
-        });
+        let out = t.try_project(0, &[0, 1], Duration::ZERO, &mut avg_mix);
         assert_eq!(out, ProjectionOutcome::Conflict);
     }
 
     #[test]
     fn singleton_hood_is_isolated() {
         let t = SharedMem::new(2, 1);
-        let out = t.try_project(0, &[0], Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
-        });
+        let out = t.try_project(0, &[0], Duration::ZERO, &mut avg_mix);
         assert_eq!(out, ProjectionOutcome::Isolated);
+    }
+
+    #[test]
+    fn aux_blobs_capture_and_broadcast_with_params() {
+        let t = SharedMem::new(2, 1);
+        t.update_own_with_aux(0, &mut |w, aux| {
+            w[0] = 2.0;
+            aux.extend_from_slice(&[7, 7]);
+        });
+        // The mixer sees both members' blobs in hood order and its
+        // output blob lands on every participant.
+        let out = t.try_project(0, &[0, 1], Duration::ZERO, &mut |rows, aux_rows| {
+            assert_eq!(aux_rows, &[&[7u8, 7][..], &[][..]]);
+            (neighborhood_average(rows), vec![9])
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 2 });
+        for id in 0..2 {
+            t.update_own_with_aux(id, &mut |w, aux| {
+                assert_eq!(w[0], 1.0);
+                assert_eq!(aux, &vec![9]);
+            });
+        }
     }
 }

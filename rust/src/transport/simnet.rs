@@ -126,6 +126,9 @@ struct Inner {
     param_len: usize,
     /// Lazily materialized parameters: empty vec = still at zero init.
     params: Vec<Vec<f32>>,
+    /// Per-node published strategy aux blobs (empty = absent — the
+    /// baseline publishes nothing, so this stays all-empty for it).
+    aux: Vec<Vec<u8>>,
     /// Shared read-only zeros row standing in for unmaterialized
     /// parameters (allocated once, not per projection).
     zeros: Vec<f32>,
@@ -153,6 +156,7 @@ impl SimNet {
                 n,
                 param_len,
                 params: vec![Vec::new(); n],
+                aux: vec![Vec::new(); n],
                 zeros: vec![0.0f32; param_len],
                 tracker: ConsensusTracker::new(n, param_len),
                 cfg,
@@ -209,12 +213,28 @@ impl Transport for SimNet {
         inner.params[id] = w;
     }
 
+    fn update_own_with_aux(&self, id: usize, f: &mut dyn FnMut(&mut Vec<f32>, &mut Vec<u8>)) {
+        let mut inner = self.inner.lock().unwrap();
+        let param_len = inner.param_len;
+        let mut w = std::mem::take(&mut inner.params[id]);
+        let mut aux = std::mem::take(&mut inner.aux[id]);
+        if w.is_empty() {
+            w = vec![0.0f32; param_len];
+        } else {
+            inner.tracker.sub(&w);
+        }
+        f(&mut w, &mut aux);
+        inner.tracker.add(&w);
+        inner.params[id] = w;
+        inner.aux[id] = aux;
+    }
+
     fn try_project(
         &self,
         id: usize,
         hood: &[usize],
         _hold: Duration,
-        avg: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+        mix: &mut dyn FnMut(&[&[f32]], &[&[u8]]) -> (Vec<f32>, Vec<u8>),
     ) -> ProjectionOutcome {
         let mut inner = self.inner.lock().unwrap();
         let now = inner.now;
@@ -248,7 +268,8 @@ impl Transport for SimNet {
             inner.last_comm = 0.0;
             return ProjectionOutcome::Isolated;
         }
-        // Gather (implicit zeros for untouched nodes), average, apply.
+        // Gather (implicit zeros for untouched nodes, empty aux blobs
+        // for nodes that published none), mix, apply.
         let rows: Vec<&[f32]> = participants
             .iter()
             .map(|&j| {
@@ -260,8 +281,10 @@ impl Transport for SimNet {
                 }
             })
             .collect();
-        let mean = avg(&rows);
+        let aux_rows: Vec<&[u8]> = participants.iter().map(|&j| inner.aux[j].as_slice()).collect();
+        let (mean, mean_aux) = mix(&rows, &aux_rows);
         drop(rows);
+        drop(aux_rows);
         for &j in &participants {
             if !inner.params[j].is_empty() {
                 let old = std::mem::take(&mut inner.params[j]);
@@ -269,6 +292,7 @@ impl Transport for SimNet {
             }
             inner.tracker.add(&mean);
             inner.params[j] = mean.clone();
+            inner.aux[j].clone_from(&mean_aux);
         }
         // Collect + broadcast, each gated on the slowest participating
         // leg (the initiator waits for every reply before averaging).
@@ -307,8 +331,8 @@ mod tests {
     use crate::node_logic::neighborhood_average;
 
     fn project(net: &SimNet, id: usize, hood: &[usize]) -> ProjectionOutcome {
-        net.try_project(id, hood, Duration::ZERO, &mut |rows| {
-            neighborhood_average(rows)
+        net.try_project(id, hood, Duration::ZERO, &mut |rows, _aux| {
+            (neighborhood_average(rows), Vec::new())
         })
     }
 
@@ -393,6 +417,27 @@ mod tests {
         // Every leg drops: the initiator is alone.
         assert_eq!(project(&net, 0, &[0, 1, 2]), ProjectionOutcome::Isolated);
         assert_eq!(net.net_stats().1, 2);
+    }
+
+    #[test]
+    fn aux_blobs_gather_and_broadcast_with_params() {
+        let net = SimNet::new(3, 1, SimNetConfig::ideal(0.0));
+        net.update_own_with_aux(2, &mut |w, aux| {
+            w[0] = 3.0;
+            aux.push(4);
+        });
+        let out = net.try_project(0, &[0, 1, 2], Duration::ZERO, &mut |rows, aux_rows| {
+            // Participant order: 0 and 1 unpublished (empty), 2's blob.
+            assert_eq!(aux_rows, &[&[][..], &[][..], &[4u8][..]]);
+            (neighborhood_average(rows), vec![6])
+        });
+        assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });
+        for id in 0..3 {
+            net.update_own_with_aux(id, &mut |w, aux| {
+                assert_eq!(w[0], 1.0);
+                assert_eq!(aux, &vec![6]);
+            });
+        }
     }
 
     #[test]

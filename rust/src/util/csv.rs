@@ -43,6 +43,54 @@ impl CsvWriter {
     }
 }
 
+/// Append-only CSV schema: a fixed base column order plus extensions
+/// that may only be appended at the end, never inserted or reordered —
+/// so every writer that shares a base (the run time-series, the
+/// strategy-comparison dump, the heterogeneity sweep) agrees on every
+/// shared column's position and new columns can't silently shift old
+/// ones. Duplicate names panic at construction: a repeated column
+/// means two writers disagree about what it holds.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    cols: Vec<&'static str>,
+}
+
+impl Schema {
+    pub fn new(base: &[&'static str]) -> Self {
+        let s = Self {
+            cols: base.to_vec(),
+        };
+        s.assert_unique();
+        s
+    }
+
+    /// Append one column at the end (the only legal extension).
+    #[must_use]
+    pub fn with(mut self, col: &'static str) -> Self {
+        self.cols.push(col);
+        self.assert_unique();
+        self
+    }
+
+    pub fn columns(&self) -> &[&'static str] {
+        &self.cols
+    }
+
+    /// Open a [`CsvWriter`] with this schema's header.
+    pub fn create<P: AsRef<Path>>(&self, path: P) -> std::io::Result<CsvWriter> {
+        CsvWriter::create(path, &self.cols)
+    }
+
+    fn assert_unique(&self) {
+        for (i, c) in self.cols.iter().enumerate() {
+            assert!(
+                !self.cols[..i].contains(c),
+                "duplicate CSV column {c:?} — schemas are append-only and every name appears once"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +116,17 @@ mod tests {
         let dir = std::env::temp_dir().join("dasgd_csv_test2");
         let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
         let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn schema_appends_only_at_the_end() {
+        let s = Schema::new(&["k", "d"]).with("extra");
+        assert_eq!(s.columns(), &["k", "d", "extra"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "append-only")]
+    fn schema_rejects_duplicate_columns() {
+        let _ = Schema::new(&["k", "d"]).with("k");
     }
 }

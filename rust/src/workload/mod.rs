@@ -56,15 +56,30 @@
 //! them regenerate the world. See docs/heterogeneity.md.
 
 use crate::data::Dataset;
+use crate::node_logic::StrategyKind;
 use crate::objective::Objective;
 use crate::util::rng::Xoshiro256pp;
 
-/// One node's workload: the loss family it optimizes and the local
-/// data shard it draws gradients from.
+/// One node's workload: the loss family it optimizes, the local data
+/// shard it draws gradients from, and the update [`StrategyKind`] it
+/// runs (see docs/algorithms.md — strategies may differ per node).
 #[derive(Clone, Debug)]
 pub struct NodeAssignment {
     pub objective: Objective,
     pub shard: Dataset,
+    pub strategy: StrategyKind,
+}
+
+impl NodeAssignment {
+    /// An assignment running the paper-baseline [`StrategyKind::Dasgd`]
+    /// update rule (every legacy entry point).
+    pub fn new(objective: Objective, shard: Dataset) -> Self {
+        Self {
+            objective,
+            shard,
+            strategy: StrategyKind::Dasgd,
+        }
+    }
 }
 
 /// The full system workload: one [`NodeAssignment`] per node, validated
@@ -138,7 +153,7 @@ impl WorkloadPlan {
         Self::new(
             shards
                 .into_iter()
-                .map(|shard| NodeAssignment { objective, shard })
+                .map(|shard| NodeAssignment::new(objective, shard))
                 .collect(),
         )
     }
@@ -184,12 +199,7 @@ impl WorkloadPlan {
         }
         let nodes = slots
             .into_iter()
-            .map(|s| {
-                s.unwrap_or_else(|| NodeAssignment {
-                    objective: fill,
-                    shard: Dataset::new(dim, classes),
-                })
-            })
+            .map(|s| s.unwrap_or_else(|| NodeAssignment::new(fill, Dataset::new(dim, classes))))
             .collect();
         let mut plan = Self::with_shape(nodes, dim, classes);
         plan.mixed = plan.mixed || global_mixed;
@@ -225,6 +235,19 @@ impl WorkloadPlan {
         self.nodes[i].objective
     }
 
+    /// The update strategy node `i` runs (paper-baseline `dasgd`
+    /// unless the plan says otherwise).
+    pub fn strategy(&self, i: usize) -> StrategyKind {
+        self.nodes[i].strategy
+    }
+
+    /// Do nodes disagree on update strategy?
+    pub fn mixed_strategies(&self) -> bool {
+        self.nodes
+            .iter()
+            .any(|a| a.strategy != self.nodes[0].strategy)
+    }
+
     pub fn shard(&self, i: usize) -> &Dataset {
         &self.nodes[i].shard
     }
@@ -249,7 +272,8 @@ impl WorkloadPlan {
     }
 
     /// The same plan with every node switched to `objective`
-    /// (re-validated — the parameter length may change).
+    /// (re-validated — the parameter length may change; per-node
+    /// strategies are preserved).
     pub fn with_uniform_objective(self, objective: Objective) -> Self {
         let (dim, classes) = (self.dim, self.classes);
         Self::with_shape(
@@ -258,11 +282,29 @@ impl WorkloadPlan {
                 .map(|a| NodeAssignment {
                     objective,
                     shard: a.shard,
+                    strategy: a.strategy,
                 })
                 .collect(),
             dim,
             classes,
         )
+    }
+
+    /// The same plan with every node switched to `strategy`. No
+    /// re-validation — the strategy does not touch the parameter
+    /// space, only the update rule.
+    pub fn with_uniform_strategy(mut self, strategy: StrategyKind) -> Self {
+        for a in &mut self.nodes {
+            a.strategy = strategy;
+        }
+        self
+    }
+
+    /// The same plan with node `i` switched to `strategy` (mixed-
+    /// strategy deployments: chaos drills, A/B cohorts).
+    pub fn with_node_strategy(mut self, i: usize, strategy: StrategyKind) -> Self {
+        self.nodes[i].strategy = strategy;
+        self
     }
 }
 
@@ -567,10 +609,7 @@ impl PlanSpec {
                 if let PlanSpec::FeatureShift { sigma } = *self {
                     shard = feature_shift(&shard, sigma as f32, &mut rng);
                 }
-                NodeAssignment {
-                    objective: self.node_objective(objective, i),
-                    shard,
-                }
+                NodeAssignment::new(self.node_objective(objective, i), shard)
             })
             .collect();
         WorkloadPlan::new(assignments)
@@ -747,6 +786,22 @@ mod tests {
     }
 
     #[test]
+    fn plans_carry_per_node_strategies() {
+        let (plan, _) = PlanSpec::Synth.build(Objective::LogReg, 4, 25, 16, 9);
+        assert!((0..4).all(|i| plan.strategy(i) == StrategyKind::Dasgd));
+        assert!(!plan.mixed_strategies());
+        let plan = plan
+            .with_uniform_strategy(StrategyKind::Rfast)
+            .with_node_strategy(2, StrategyKind::Dcasgd);
+        assert_eq!(plan.strategy(0), StrategyKind::Rfast);
+        assert_eq!(plan.strategy(2), StrategyKind::Dcasgd);
+        assert!(plan.mixed_strategies());
+        // Switching the objective preserves strategies.
+        let plan = plan.with_uniform_objective(Objective::hinge());
+        assert_eq!(plan.strategy(2), StrategyKind::Dcasgd);
+    }
+
+    #[test]
     fn synth_spec_matches_legacy_world() {
         let (plan, _) = PlanSpec::Synth.build(Objective::LogReg, 4, 25, 16, 9);
         let (shards, _) = crate::experiments::synth_world(4, 25, 16, 9);
@@ -762,14 +817,8 @@ mod tests {
     fn logreg_cannot_mix_with_dim_shaped_families() {
         let d = base(10, 4, 1);
         WorkloadPlan::new(vec![
-            NodeAssignment {
-                objective: Objective::LogReg,
-                shard: d.subset(&[0, 1, 2]),
-            },
-            NodeAssignment {
-                objective: Objective::hinge(),
-                shard: d.subset(&[3, 4, 5]),
-            },
+            NodeAssignment::new(Objective::LogReg, d.subset(&[0, 1, 2])),
+            NodeAssignment::new(Objective::hinge(), d.subset(&[3, 4, 5])),
         ]);
     }
 
@@ -777,20 +826,8 @@ mod tests {
     fn partial_plans_fill_placeholders() {
         let d = base(12, 4, 2);
         let assigned = vec![
-            (
-                1,
-                NodeAssignment {
-                    objective: Objective::hinge(),
-                    shard: d.subset(&[0, 1]),
-                },
-            ),
-            (
-                2,
-                NodeAssignment {
-                    objective: Objective::lasso(),
-                    shard: d.subset(&[2, 3]),
-                },
-            ),
+            (1, NodeAssignment::new(Objective::hinge(), d.subset(&[0, 1]))),
+            (2, NodeAssignment::new(Objective::lasso(), d.subset(&[2, 3]))),
         ];
         let plan = WorkloadPlan::from_partial(4, 4, 4, assigned, true).unwrap();
         assert_eq!(plan.len(), 4);
@@ -801,20 +838,8 @@ mod tests {
         // Errors, not panics, on bad input.
         assert!(WorkloadPlan::from_partial(4, 4, 4, vec![], false).is_err());
         let dup = vec![
-            (
-                0,
-                NodeAssignment {
-                    objective: Objective::hinge(),
-                    shard: d.subset(&[0]),
-                },
-            ),
-            (
-                0,
-                NodeAssignment {
-                    objective: Objective::hinge(),
-                    shard: d.subset(&[1]),
-                },
-            ),
+            (0, NodeAssignment::new(Objective::hinge(), d.subset(&[0]))),
+            (0, NodeAssignment::new(Objective::hinge(), d.subset(&[1]))),
         ];
         assert!(WorkloadPlan::from_partial(4, 4, 4, dup, false).is_err());
     }
@@ -830,13 +855,7 @@ mod tests {
                 4,
                 4,
                 4,
-                vec![(
-                    2,
-                    NodeAssignment {
-                        objective: Objective::lasso(),
-                        shard: d.subset(&[0, 1]),
-                    },
-                )],
+                vec![(2, NodeAssignment::new(Objective::lasso(), d.subset(&[0, 1])))],
                 mixed,
             )
             .unwrap()

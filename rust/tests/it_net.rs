@@ -224,8 +224,8 @@ fn batched_and_unbatched_socket_runs_apply_identical_updates() {
                 let mut hood = [(i + NODES - 1) % NODES, i, (i + 1) % NODES];
                 hood.sort_unstable(); // try_project takes the sorted closed neighborhood
                 cur.store(i, Ordering::Relaxed);
-                let out = owner(i).try_project(i, &hood, Duration::ZERO, &mut |rows| {
-                    neighborhood_average(rows)
+                let out = owner(i).try_project(i, &hood, Duration::ZERO, &mut |rows, _aux| {
+                    (neighborhood_average(rows), Vec::new())
                 });
                 cur.store(usize::MAX, Ordering::Relaxed);
                 assert_eq!(out, ProjectionOutcome::Applied { participants: 3 });

@@ -1,0 +1,324 @@
+//! Integration: the strategy layer's equivalence pins.
+//!
+//! The refactor contract for the algorithm zoo (docs/algorithms.md) is
+//! that routing the paper baseline through the [`Strategy`] trait is a
+//! pure factoring: in deterministic mode the engines reproduce the
+//! pre-refactor trace *bit for bit* — same RNG streams, same event
+//! schedule, same counters, same parameter bytes. These tests pin that
+//! from outside the crate, against hand-written Eq. (6)/(7) loops that
+//! never touch the trait:
+//!
+//! * the event-driven SimNet driver vs. an inline reimplementation of
+//!   its pre-refactor loop (`NodeLogic::draw_action` +
+//!   `native_grad_step` + `neighborhood_average`, no strategies);
+//! * both deterministic wall-clock engines (single-executor virtual
+//!   time and the sequenced thread-per-node baseline) against each
+//!   other on an explicit dasgd plan;
+//! * every zoo member on the same deterministic schedule: identical
+//!   action/sample draws mean identical Counts, and only the update
+//!   math may differ.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dasgd::coordinator::{spawn_shard, AsyncConfig, EngineKind, ShardRun, StepSize};
+use dasgd::data::{Dataset, SyntheticGen};
+use dasgd::graph::{regular_circulant, Graph};
+use dasgd::metrics::{Record, Recorder};
+use dasgd::node_logic::{
+    neighborhood_average, Action, Counts, NodeLogic, Probe, StrategyKind,
+};
+use dasgd::objective::Objective;
+use dasgd::sim::{simnet_run_plan, ShardedEventQueue, SimConfig, SpeedModel};
+use dasgd::transport::{
+    LatencyModel, ProjectionOutcome, SharedMem, SimNet, SimNetConfig, Transport,
+};
+use dasgd::util::rng::Xoshiro256pp;
+use dasgd::workload::WorkloadPlan;
+
+const SEED: u64 = 42;
+const NODES: usize = 8;
+
+fn world() -> (Graph, Vec<Dataset>, Dataset) {
+    let gen = SyntheticGen::new(NODES, 10, 4, 2.0, 0.5, 0.3, SEED);
+    let mut rng = Xoshiro256pp::seeded(SEED);
+    let shards = (0..NODES)
+        .map(|i| gen.node_dataset(i, 40, &mut rng))
+        .collect();
+    let test = gen.global_test_set(200, &mut rng);
+    (regular_circulant(NODES, 2), shards, test)
+}
+
+fn sim_cfg(net: SimNetConfig) -> SimConfig {
+    SimConfig {
+        p_grad: 0.5,
+        stepsize: StepSize::paper_default(NODES),
+        objective: Objective::LogReg,
+        horizon: 30.0,
+        eval_every: 7.5,
+        net,
+        seed: SEED,
+    }
+}
+
+fn bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|w| w.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// The pre-refactor SimNet driver loop, reimplemented inline with the
+/// raw Eq. (6)/(7) helpers and **no strategy objects**: one
+/// `NodeLogic` per node, `draw_action` → `native_grad_step` or a plain
+/// `neighborhood_average` mix, with the exact RNG call order the
+/// driver has always used (compute draw before the action draw).
+fn pre_refactor_simnet(
+    g: &Graph,
+    shards: &[Dataset],
+    test: &Dataset,
+    speeds: &SpeedModel,
+    cfg: &SimConfig,
+) -> (Recorder, u64, Counts, Vec<Vec<f32>>) {
+    let n = g.len();
+    let param_len = cfg
+        .objective
+        .param_len(shards[0].dim(), shards[0].classes());
+    let mut root = Xoshiro256pp::seeded(cfg.seed);
+    let mut logics: Vec<NodeLogic> = (0..n)
+        .map(|i| {
+            NodeLogic::new(
+                i,
+                cfg.objective,
+                cfg.p_grad,
+                shards[i].clone(),
+                n,
+                root.split(i as u64),
+            )
+        })
+        .collect();
+    let hoods: Vec<Vec<usize>> = (0..n).map(|i| g.closed_neighborhood(i)).collect();
+    let net = SimNet::new(n, param_len, cfg.net.clone());
+    let probe = Probe::new(cfg.objective, test);
+
+    let mut queue = ShardedEventQueue::for_nodes(n);
+    for (i, logic) in logics.iter_mut().enumerate() {
+        let dt = speeds.sample(i, &mut logic.rng);
+        queue.push(dt, i);
+    }
+
+    let mut rec = Recorder::new("simnet");
+    let mut k = 0u64;
+    let mut counts = Counts::default();
+    let mut next_eval = 0.0f64;
+    let snap = |t: f64, k: u64, counts: &Counts, net: &SimNet, rec: &mut Recorder| {
+        let mut c = *counts;
+        c.messages = net.net_stats().0;
+        rec.push(probe.snapshot(k, t, &net.snapshot(), &c));
+    };
+
+    while let Some((t, i)) = queue.pop() {
+        if t > cfg.horizon {
+            break;
+        }
+        while t >= next_eval {
+            snap(next_eval, k, &counts, &net, &mut rec);
+            next_eval += cfg.eval_every;
+        }
+        net.set_now(t);
+        let lr = cfg.stepsize.at(k);
+        let logic = &mut logics[i];
+        let mut op_time = speeds.sample(i, &mut logic.rng);
+        match logic.draw_action() {
+            Action::Grad => {
+                net.update_own_with_aux(i, &mut |w, _aux| {
+                    logic.native_grad_step(w, lr);
+                });
+                counts.grad_steps += 1;
+                k += 1;
+            }
+            Action::Project => {
+                match net.try_project(i, &hoods[i], Duration::ZERO, &mut |rows, _aux| {
+                    (neighborhood_average(rows), Vec::new())
+                }) {
+                    ProjectionOutcome::Applied { .. } => {
+                        op_time += net.take_last_comm();
+                        counts.proj_steps += 1;
+                        k += 1;
+                    }
+                    ProjectionOutcome::Isolated => {}
+                    ProjectionOutcome::Conflict => unreachable!("SimNet is conflict-free"),
+                }
+            }
+        }
+        queue.push(t + op_time, i);
+    }
+    snap(cfg.horizon, k, &counts, &net, &mut rec);
+    (rec, k, counts, net.snapshot())
+}
+
+fn assert_records_identical(ours: &[Record], theirs: &[Record], tag: &str) {
+    assert_eq!(ours.len(), theirs.len(), "{tag}: snapshot count diverged");
+    for (i, (a, b)) in ours.iter().zip(theirs).enumerate() {
+        assert_eq!(a, b, "{tag}: record {i} diverged");
+    }
+}
+
+#[test]
+fn dasgd_reproduces_the_pre_refactor_simnet_trace() {
+    let (g, shards, test) = world();
+    let speeds = SpeedModel::homogeneous(NODES, 1.0);
+    let lossy = SimNetConfig {
+        latency: LatencyModel {
+            min_secs: 0.005,
+            max_secs: 0.02,
+            jitter_secs: 0.005,
+        },
+        drop_prob: 0.05,
+        partitions: vec![],
+        seed: SEED,
+    };
+    for (tag, net) in [
+        ("ideal", SimNetConfig::ideal(0.002)),
+        ("lossy", lossy),
+    ] {
+        let cfg = sim_cfg(net);
+        let (rec, k, counts, params) =
+            pre_refactor_simnet(&g, &shards, &test, &speeds, &cfg);
+        // The refactored path: the same plan routed through the
+        // baseline strategy (the plan default).
+        let plan = WorkloadPlan::homogeneous(cfg.objective, shards.clone());
+        let rep = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
+        assert_eq!(rep.updates, k, "{tag}: update counter diverged");
+        assert_eq!(rep.grad_steps, counts.grad_steps, "{tag}");
+        assert_eq!(rep.proj_steps, counts.proj_steps, "{tag}");
+        assert!(rep.updates > 100, "{tag}: trace too short to mean much");
+        assert_records_identical(&rec.records, &rep.recorder.records, tag);
+        assert_eq!(
+            bits(&params),
+            bits(&rep.final_params),
+            "{tag}: parameter bytes diverged through the strategy layer"
+        );
+    }
+}
+
+/// Run a fixed dasgd ring deterministically on the given engine and
+/// return (params, counts) after exactly `budget` firings.
+fn deterministic_trace(
+    kind: StrategyKind,
+    engine: EngineKind,
+    budget: u64,
+) -> (Vec<Vec<f32>>, Counts) {
+    let gen = SyntheticGen::new(NODES, 10, 4, 2.0, 0.5, 0.3, SEED);
+    let mut rng = Xoshiro256pp::seeded(SEED);
+    let shards: Vec<Dataset> = (0..NODES)
+        .map(|i| gen.node_dataset(i, 40, &mut rng))
+        .collect();
+    let plan =
+        WorkloadPlan::homogeneous(Objective::LogReg, shards).with_uniform_strategy(kind);
+    let graph = regular_circulant(NODES, 2);
+    let cfg = AsyncConfig {
+        engine,
+        deterministic_events: Some(budget),
+        seed: SEED,
+        ..AsyncConfig::quick(NODES)
+    };
+    let transport: Arc<dyn Transport> = Arc::new(SharedMem::new(NODES, plan.param_len()));
+    let run = spawn_shard(&graph, &plan, &cfg, Arc::clone(&transport), 0..NODES, None);
+    let counts = wait_for_budget(run, budget);
+    (transport.snapshot(), counts)
+}
+
+/// The deterministic engines stop themselves once `budget` firings have
+/// executed, and on an all-alive SharedMem ring every firing lands in
+/// exactly one counter — so the counter sum reaching the budget means
+/// the engine is done. (Stopping earlier would truncate the trace and
+/// break the bit-for-bit comparison, hence the wait.)
+fn wait_for_budget(run: ShardRun, budget: u64) -> Counts {
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        let c = run.counts();
+        if c.grad_steps + c.proj_steps + c.conflicts >= budget {
+            return run.stop_and_join();
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "deterministic engine stalled at {c:?} of {budget} events"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn the_dasgd_pin_holds_in_both_deterministic_engines() {
+    // An explicit dasgd plan through the executor pool and the
+    // sequenced thread-per-node engine: identical counters and
+    // parameter bits at every probed budget.
+    for budget in [120u64, 350] {
+        let (p_pool, c_pool) =
+            deterministic_trace(StrategyKind::Dasgd, EngineKind::Executors(1), budget);
+        let (p_tpn, c_tpn) =
+            deterministic_trace(StrategyKind::Dasgd, EngineKind::ThreadPerNode, budget);
+        assert_eq!(c_pool, c_tpn, "counters diverged at budget {budget}");
+        assert!(c_pool.updates() > 0, "no updates at budget {budget}");
+        assert_eq!(
+            bits(&p_pool),
+            bits(&p_tpn),
+            "params diverged across engines at budget {budget}"
+        );
+    }
+}
+
+#[test]
+fn every_strategy_keeps_the_deterministic_event_schedule() {
+    // The comparability contract behind `dasgd compare`: strategies
+    // consume identical RNG draws, so on a fixed seed every zoo member
+    // fires the same events with the same grad/project split — only
+    // the update math may differ.
+    let budget = 250u64;
+    let (p_base, c_base) =
+        deterministic_trace(StrategyKind::Dasgd, EngineKind::Executors(1), budget);
+    for kind in StrategyKind::ALL {
+        let (p, c) = deterministic_trace(kind, EngineKind::Executors(1), budget);
+        assert_eq!(c, c_base, "{kind}: event schedule diverged");
+        for (id, w) in p.iter().enumerate() {
+            assert!(
+                w.iter().all(|v| v.is_finite()),
+                "{kind}: node {id} diverged to non-finite params"
+            );
+        }
+        if kind == StrategyKind::Rfast {
+            // Gradient tracking genuinely changes the trajectory.
+            assert_ne!(bits(&p), bits(&p_base), "rfast must not be a no-op");
+        }
+    }
+}
+
+#[test]
+fn strategies_share_one_simnet_schedule() {
+    // Same contract under the virtual-time driver: one world, four
+    // strategies, identical event/update counts.
+    let (g, shards, test) = world();
+    let speeds = SpeedModel::homogeneous(NODES, 1.0);
+    let cfg = sim_cfg(SimNetConfig::ideal(0.002));
+    let base = simnet_run_plan(
+        &g,
+        &WorkloadPlan::homogeneous(cfg.objective, shards.clone()),
+        &test,
+        &speeds,
+        &cfg,
+    );
+    for kind in StrategyKind::ALL {
+        let plan = WorkloadPlan::homogeneous(cfg.objective, shards.clone())
+            .with_uniform_strategy(kind);
+        let rep = simnet_run_plan(&g, &plan, &test, &speeds, &cfg);
+        assert_eq!(rep.updates, base.updates, "{kind}");
+        assert_eq!(rep.grad_steps, base.grad_steps, "{kind}");
+        assert_eq!(rep.proj_steps, base.proj_steps, "{kind}");
+        let last = rep.recorder.last().expect("snapshots recorded");
+        assert!(
+            last.consensus.is_finite() && last.test_err.is_finite(),
+            "{kind}: non-finite outcome"
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Property tests: the mix-rule laws every zoo member must satisfy
+//! (docs/algorithms.md). The load-bearing one is the consensus fixed
+//! point — once the neighborhood agrees, no strategy's mix may move it
+//! — because Alg. 2's convergence argument (and the `dasgd compare`
+//! comparability claim) rests on projections contracting *toward*
+//! consensus, never through it.
+
+use dasgd::node_logic::{Strategy, StrategyKind};
+use dasgd::util::proptest::{check, Gen};
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 * b.abs().max(1.0)
+}
+
+fn encode_f32s(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn decode_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+fn arb_uniform_neighborhood(g: &mut Gen) -> (usize, Vec<f32>, Vec<Vec<f32>>) {
+    let dim = g.usize_in(1, 48);
+    let m = g.usize_in(1, 8);
+    let v = g.f32_vec(dim, -1e3, 1e3);
+    (dim, v.clone(), vec![v; m])
+}
+
+#[test]
+fn every_strategy_mix_preserves_the_uniform_fixed_point() {
+    check("strategy-uniform-fixed-point", 300, 0x57AB, |g| {
+        let (dim, v, rows_store) = arb_uniform_neighborhood(g);
+        let rows: Vec<&[f32]> = rows_store.iter().map(|r| r.as_slice()).collect();
+        // Uniform aux state too: either every member empty (a baseline
+        // neighborhood) or every member carrying the same tracker blob.
+        let tracker: Option<Vec<f32>> = if g.bool() {
+            Some(g.f32_vec(dim, -10.0, 10.0))
+        } else {
+            None
+        };
+        let aux_store: Vec<Vec<u8>> = match &tracker {
+            Some(t) => vec![encode_f32s(t); rows.len()],
+            None => vec![Vec::new(); rows.len()],
+        };
+        let aux_rows: Vec<&[u8]> = aux_store.iter().map(|a| a.as_slice()).collect();
+        for kind in StrategyKind::ALL {
+            let mut strat = kind.build(0.1);
+            let (w, aux) = strat.mix(&rows, &aux_rows);
+            if w.len() != dim {
+                return Err(format!("{kind}: mix changed the dimension to {}", w.len()));
+            }
+            for (j, (&a, &b)) in w.iter().zip(&v).enumerate() {
+                if !close(a, b) {
+                    return Err(format!(
+                        "{kind}: mix moved uniform params at coord {j}: {a} vs {b}"
+                    ));
+                }
+            }
+            if tracker.is_none() && !aux.is_empty() {
+                return Err(format!(
+                    "{kind}: an all-empty aux neighborhood must mix to an empty blob, got {} bytes",
+                    aux.len()
+                ));
+            }
+            if let (Some(t), StrategyKind::Rfast) = (&tracker, kind) {
+                // The gossiped tracker has the same fixed point.
+                let y = decode_f32s(&aux);
+                if y.len() != dim {
+                    return Err(format!("rfast: tracker blob came back {} long", y.len()));
+                }
+                for (j, (&a, &b)) in y.iter().zip(t).enumerate() {
+                    if !close(a, b) {
+                        return Err(format!(
+                            "rfast: mix moved a uniform tracker at coord {j}: {a} vs {b}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_strategy_mix_stays_inside_the_neighborhood_hull() {
+    // The contraction direction: each output coordinate lies within the
+    // participants' min/max for that coordinate (the projection may
+    // never extrapolate past the neighborhood).
+    check("strategy-mix-hull", 300, 0x401D, |g| {
+        let dim = g.usize_in(1, 32);
+        let m = g.usize_in(1, 6);
+        let rows_store: Vec<Vec<f32>> =
+            (0..m).map(|_| g.f32_vec(dim, -1e3, 1e3)).collect();
+        let rows: Vec<&[f32]> = rows_store.iter().map(|r| r.as_slice()).collect();
+        let aux_store: Vec<Vec<u8>> = vec![Vec::new(); m];
+        let aux_rows: Vec<&[u8]> = aux_store.iter().map(|a| a.as_slice()).collect();
+        for kind in StrategyKind::ALL {
+            let mut strat = kind.build(0.1);
+            let (w, _) = strat.mix(&rows, &aux_rows);
+            for j in 0..dim {
+                let lo = rows_store.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+                let hi = rows_store
+                    .iter()
+                    .map(|r| r[j])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let slack = 1e-4 * hi.abs().max(lo.abs()).max(1.0);
+                if w[j] < lo - slack || w[j] > hi + slack {
+                    return Err(format!(
+                        "{kind}: coord {j} mixed to {} outside [{lo}, {hi}]",
+                        w[j]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -35,6 +35,9 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             to: g.usize_in(0, 10_000) as u32,
             token: g.usize_in(0, usize::MAX / 2) as u64,
             w: g.f32_vec(w_len, -1e6, 1e6),
+            aux: (0..g.usize_in(0, 128))
+                .map(|_| g.usize_in(0, 255) as u8)
+                .collect(),
         },
         4 => WireMsg::Busy {
             from: g.usize_in(0, 10_000) as u32,
@@ -51,6 +54,9 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             to: g.usize_in(0, 10_000) as u32,
             token: g.usize_in(0, usize::MAX / 2) as u64,
             w: g.f32_vec(w_len, -1e6, 1e6),
+            aux: (0..g.usize_in(0, 128))
+                .map(|_| g.usize_in(0, 255) as u8)
+                .collect(),
         },
         7 => WireMsg::SnapshotRequest,
         8 => {
@@ -90,6 +96,9 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
                 classes: g.usize_in(1, 12) as u32,
                 labels: (0..rows).map(|_| g.usize_in(0, 11) as u32).collect(),
                 features: g.f32_vec(rows * dim, -100.0, 100.0),
+                // Any byte round-trips; validation is the decoder
+                // helper's job, not the codec's.
+                strategy: g.usize_in(0, 255) as u8,
             }
         }
         11 => WireMsg::PlanStart {
@@ -158,6 +167,7 @@ fn arb_msg(g: &mut Gen) -> WireMsg {
             executors: g.usize_in(0, 64) as u32,
             flush_bytes: g.usize_in(0, 1 << 20) as u32,
             flush_micros: g.usize_in(0, 1 << 20) as u64,
+            strategy: g.usize_in(0, 255) as u8,
             peers: (0..g.usize_in(0, 8))
                 .map(|i| format!("127.0.0.1:{}", 1024 + i))
                 .collect(),
@@ -260,6 +270,36 @@ fn garbage_and_bit_flips_error_never_panic() {
         let mut cursor = std::io::Cursor::new(&garbage);
         let _ = read_frame(&mut cursor);
         Ok(())
+    });
+}
+
+#[test]
+fn oversized_aux_blobs_are_refused_before_allocation() {
+    // A hostile peer can claim any aux length it likes; the decoder
+    // must reject counts past the frame end *before* reserving memory
+    // for them, not trust the field and allocate.
+    check("wire-aux-oversize", 300, 0xA0B, |g| {
+        let w_len = g.usize_in(0, 64);
+        let aux_len = g.usize_in(0, 64);
+        let msg = WireMsg::CollectReply {
+            from: g.usize_in(0, 10_000) as u32,
+            to: g.usize_in(0, 10_000) as u32,
+            token: g.usize_in(0, usize::MAX / 2) as u64,
+            w: g.f32_vec(w_len, -1e6, 1e6),
+            aux: (0..aux_len).map(|_| g.usize_in(0, 255) as u8).collect(),
+        };
+        let frame = encode(&msg).map_err(|e| format!("encode failed: {e}"))?;
+        // The aux count is the last u32 before the aux payload.
+        let at = frame.len() - aux_len - 4;
+        let mut bent = frame.clone();
+        bent[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode(&bent) {
+            Err(WireError::Oversize { .. }) => Ok(()),
+            other => Err(format!(
+                "a {}-byte frame claiming 4 GiB of aux must refuse with Oversize, got {other:?}",
+                bent.len()
+            )),
+        }
     });
 }
 
@@ -413,6 +453,7 @@ fn shard_past_the_frame_cap_round_trips_bit_for_bit() {
         classes: 10,
         labels,
         features,
+        strategy: 0,
     };
     // Single-frame encoding refuses (this is where the pre-chunking
     // launcher crashed)…
@@ -647,6 +688,7 @@ fn write_message_over_a_stream_is_what_read_message_reads() {
         classes: 10,
         labels: vec![1; 100_000],
         features: vec![1.5; 100_000 * 50],
+        strategy: 2,
     };
     let mut buf = Vec::new();
     wire::write_message(&mut buf, &small).unwrap();

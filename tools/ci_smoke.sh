@@ -7,10 +7,10 @@
 # horizon (LaunchReport.reached_horizon), so a stalled deployment
 # fails the leg without any timeout heuristics.
 #
-# Usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn
+# Usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn|compare
 set -euo pipefail
 
-leg="${1:?usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn}"
+leg="${1:?usage: tools/ci_smoke.sh basic|heterogeneous|observability|churn|compare}"
 
 run() { cargo run --release -- "$@"; }
 
@@ -76,6 +76,40 @@ case "$leg" in
     python3 tools/check_metrics.py metrics-churn.jsonl \
       --require-counter evictions --require-counter joins \
       --require-counter repairs
+    ;;
+
+  compare)
+    # Algorithm-zoo smoke: all four update strategies race the same
+    # small SimNet schedule (docs/algorithms.md) and dump one CSV.
+    # The leg checks the dump has exactly one block per strategy on
+    # the shared append-only run schema and that every strategy's
+    # final consensus residual stays under a generous tolerance —
+    # a zoo member that diverges or stalls fails CI here.
+    run compare --strategies dasgd,dcasgd,delay-agnostic,rfast \
+      --nodes 10 --degree 4 --horizon 30 --eval-every 10 \
+      --csv compare.csv
+    python3 - <<'EOF'
+import collections
+import csv
+import sys
+
+rows = list(csv.DictReader(open("compare.csv")))
+if not rows:
+    sys.exit("compare.csv has no records")
+blocks = collections.defaultdict(list)
+for r in rows:
+    blocks[r["strategy"]].append(r)
+want = {"dasgd", "dcasgd", "delay-agnostic", "rfast"}
+if set(blocks) != want:
+    sys.exit(f"strategy blocks {sorted(blocks)} != {sorted(want)}")
+for name, rs in sorted(blocks.items()):
+    if len(rs) < 2:
+        sys.exit(f"{name}: only {len(rs)} snapshots")
+    final = float(rs[-1]["consensus"])
+    if not final < 25.0:
+        sys.exit(f"{name}: final consensus residual {final} above tolerance 25.0")
+    print(f"{name}: {len(rs)} snapshots, final consensus {final:.3f}")
+EOF
     ;;
 
   *)

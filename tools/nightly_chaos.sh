@@ -22,11 +22,20 @@ KILL_EVERY="${KILL_EVERY:-15}"
 REJOIN_AFTER="${REJOIN_AFTER:-8}"
 TOL="${TOL:-25.0}"
 BIN="${BIN:-target/release/dasgd}"
+# The update strategy the deployment runs (docs/algorithms.md). The
+# strategy-zoo churn variant sets STRATEGY=rfast: gradient trackers
+# gossip as v8 aux blobs across every collect/apply frame, joiners
+# inherit the strategy code from their JoinGrant, and mid-churn
+# neighborhoods mix tracker-carrying members with fresh ones whose
+# blobs are still empty — the cross-strategy blob interop under the
+# same kill/rejoin schedule as the baseline leg.
+STRATEGY="${STRATEGY:-dasgd}"
 
 cargo build --release
 
 "$BIN" launch --workers 4 --nodes 1000 --degree 4 --samples 50 \
   --rate 50 --horizon 2000000 --secs 300 \
+  --strategy "$STRATEGY" \
   --join-addr 127.0.0.1:0 \
   --metrics-jsonl metrics-chaos.jsonl --csv chaos.csv --log-level info \
   > launch.out 2> launch.err &
